@@ -1,0 +1,54 @@
+//! Design-space exploration demo (paper §V-D / Fig 12).
+//!
+//!     cargo run --release --example dse_planner -- --cores 8 --ratio 1.0
+//!
+//! 1. Measures the replay buffer's per-op costs live on this machine.
+//! 2. Builds f_a(x) / f_l(x) throughput curves with the multicore DES.
+//! 3. Solves Eq. 5 by exhaustive search and prints the chosen core split.
+
+use pal_rl::dse::{explore, render_curves, CostProfile};
+use pal_rl::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let a = Args::parse(std::env::args().skip(1))?;
+    let cores: usize = a.parse_or("cores", 8)?;
+    let ratio: f64 = a.parse_or("ratio", 1.0)?;
+    let algo = a.str_or("algo", "dqn");
+    let env = a.str_or("env", "CartPole-v1");
+
+    println!("measuring buffer op costs on this machine ...");
+    let rep = CostProfile::representative(&algo, &env);
+    let measured = CostProfile::measure(rep.costs.act_ns, rep.costs.env_ns, rep.costs.learn_ns);
+    println!(
+        "  insert lock {} ns | insert copy {} ns | sample(64) lock {} ns | update(64) {} ns",
+        measured.costs.insert_lock_ns,
+        measured.costs.insert_copy_ns,
+        measured.costs.sample_lock_ns,
+        measured.costs.update_lock_ns
+    );
+
+    println!("\nthroughput profiles for {algo}@{env} (DES projection):");
+    println!("{}", render_curves(&measured, cores));
+
+    let plan = explore(&measured, cores, ratio);
+    println!(
+        "Eq.5 solution for M={cores}, update_interval={ratio}: \
+         {} actors + {} learners",
+        plan.actors, plan.learners
+    );
+    println!(
+        "  collection {:.0} steps/s  vs  consumption {:.0} batches/s \
+         (ratio mismatch {:.1}%)",
+        plan.collect_throughput,
+        plan.consume_throughput,
+        plan.mismatch * 100.0
+    );
+
+    // Joint simulation sanity check of the chosen split.
+    let joint = measured.joint(plan.actors, plan.learners, cores);
+    println!(
+        "  joint simulation: collect {:.0}/s, consume {:.0}/s",
+        joint.collect_per_sec, joint.consume_per_sec
+    );
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Quickstart: train DQN on CartPole-v1 with 1 actor + 1 learner.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Demonstrates the minimal public API: build a `TrainConfig`, call
+//! `train`, read the report.
+
+use pal_rl::coordinator::{train, TrainConfig};
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = TrainConfig::new("dqn", "CartPole-v1");
+    cfg.total_env_steps = 15_000;
+    cfg.warmup_steps = 500;
+    cfg.exploration.eps_decay_steps = 6_000;
+    cfg.lr = 1e-3;
+    cfg.stop_at_reward = Some(200.0);
+    cfg.log_every_secs = 5.0;
+    cfg.seed = 42;
+
+    println!("training dqn on CartPole-v1 (stop at mean return 200)...");
+    let report = train(&cfg)?;
+
+    println!(
+        "\nfinished: {} env steps / {} learn steps / {} episodes in {:.1}s",
+        report.env_steps, report.learn_steps, report.episodes, report.elapsed_secs
+    );
+    println!(
+        "throughput: {:.0} env steps/s, {:.0} learn steps/s",
+        report.env_steps_per_sec, report.learn_steps_per_sec
+    );
+    println!("final mean return (last 128 episodes): {:.1}", report.final_mean_return);
+    if report.reached_target {
+        println!("target reached — CartPole balanced.");
+    }
+    // ASCII reward curve.
+    let curve = &report.curve;
+    if !curve.is_empty() {
+        println!("\nreward curve (each row = 1/20th of training):");
+        let chunk = (curve.len() / 20).max(1);
+        for w in curve.chunks(chunk) {
+            let mean: f32 =
+                w.iter().map(|p| p.episode_return).sum::<f32>() / w.len() as f32;
+            let bars = (mean / 10.0).clamp(0.0, 50.0) as usize;
+            println!("{:>8} steps | {:6.1} {}", w[0].env_steps, mean, "#".repeat(bars));
+        }
+    }
+    Ok(())
+}

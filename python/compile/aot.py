@@ -1,0 +1,178 @@
+"""AOT driver: lower every (algo, env) graph to HLO TEXT + manifest.
+
+HLO *text* (never ``.serialize()``): jax >= 0.5 emits HloModuleProtos with
+64-bit instruction ids which the rust side's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/gen_hlo.py.
+
+Outputs (default ``../artifacts``):
+
+    <id>.<graph>.hlo.txt      one file per lowered graph
+    <id>.params.bin           initial parameters, raw little-endian f32
+    manifest.json             everything the rust runtime needs: shapes,
+                              param table w/ flat offsets, graph signatures
+
+Run ``python -m compile.aot --help`` from ``python/``.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import numpy as np
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .envs import ENVS
+from .model import ALGOS, AlgoBuild, build
+
+# The default artifact set: every algorithm on the benchmarks the paper
+# trains (discrete algos on discrete envs, continuous on continuous).
+DEFAULT_CONFIGS = [
+    ("dqn", "CartPole-v1"),
+    ("ddqn", "CartPole-v1"),
+    ("dqn", "MountainCar-v0"),
+    ("dqn", "Acrobot-v1"),
+    ("dqn", "RandomMDP-v0"),
+    ("ddpg", "Pendulum-v1"),
+    ("td3", "Pendulum-v1"),
+    ("sac", "Pendulum-v1"),
+    ("ddpg", "LunarLanderLite-v0"),
+    ("td3", "LunarLanderLite-v0"),
+    ("sac", "LunarLanderLite-v0"),
+    ("sac", "MountainCarContinuous-v0"),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_build(b: AlgoBuild, out_dir: str, cfg_id: str) -> dict:
+    """Lower all graphs of one AlgoBuild; return its manifest entry."""
+    graphs = {}
+    for gname, spec in b.graphs.items():
+        lowered = jax.jit(spec.fn).lower(*spec.example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{cfg_id}.{gname}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        graphs[gname] = {
+            "file": fname,
+            "inputs": [
+                {"name": nm, "shape": list(a.shape)}
+                for nm, a in zip(spec.input_names, spec.example_args)
+            ],
+            "outputs": spec.output_names,
+            "grad_slice": list(spec.grad_slice) if spec.grad_slice else None,
+        }
+
+    # Initial parameters: one flat f32 blob + offsets table.
+    flat = np.concatenate([p.reshape(-1) for p in b.init_params]).astype("<f4")
+    pfile = f"{cfg_id}.params.bin"
+    flat.tofile(os.path.join(out_dir, pfile))
+
+    params = []
+    off = 0
+    for name, p in zip(b.param_names, b.init_params):
+        params.append({"name": name, "shape": list(p.shape), "offset": off,
+                       "size": int(p.size)})
+        off += int(p.size)
+
+    env = b.env
+    return {
+        "id": cfg_id,
+        "algo": b.algo,
+        "env": env.name,
+        "obs_dim": env.obs_dim,
+        "flat_act_dim": env.flat_act_dim,
+        "n_actions": env.n_actions,
+        "act_dim": env.act_dim,
+        "act_high": env.act_high,
+        "discrete": env.discrete,
+        "hidden": b.hidden,
+        "batch_size": b.batch_size,
+        "gamma": b.gamma,
+        "params_file": pfile,
+        "total_param_size": off,
+        "params": params,
+        "graphs": graphs,
+        "extra": b.extra,
+    }
+
+
+def input_fingerprint() -> str:
+    """Hash of the compile-path sources, for Makefile staleness checks."""
+    h = hashlib.sha256()
+    base = os.path.dirname(__file__)
+    for root, _, files in os.walk(base):
+        for fn in sorted(files):
+            if fn.endswith(".py"):
+                with open(os.path.join(root, fn), "rb") as f:
+                    h.update(f.read())
+    return h.hexdigest()[:16]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--hidden", type=int, nargs="*", default=[64, 64])
+    ap.add_argument("--batch-size", type=int, default=64)
+    ap.add_argument("--gamma", type=float, default=0.99)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--only",
+        nargs="*",
+        default=None,
+        metavar="ALGO@ENV",
+        help="subset of configs, e.g. dqn@CartPole-v1 sac@Pendulum-v1",
+    )
+    args = ap.parse_args(argv)
+
+    configs = DEFAULT_CONFIGS
+    if args.only:
+        configs = []
+        for spec in args.only:
+            algo, env = spec.split("@", 1)
+            if algo not in ALGOS:
+                sys.exit(f"unknown algo {algo!r} (have {ALGOS})")
+            if env not in ENVS:
+                sys.exit(f"unknown env {env!r} (have {sorted(ENVS)})")
+            configs.append((algo, env))
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    entries = []
+    for algo, env_name in configs:
+        cfg_id = f"{algo}_{env_name}"
+        print(f"[aot] lowering {cfg_id} ...", flush=True)
+        b = build(
+            algo,
+            ENVS[env_name],
+            hidden=tuple(args.hidden),
+            batch_size=args.batch_size,
+            gamma=args.gamma,
+            seed=args.seed,
+        )
+        entries.append(lower_build(b, args.out_dir, cfg_id))
+
+    manifest = {
+        "version": 1,
+        "fingerprint": input_fingerprint(),
+        "hidden": args.hidden,
+        "batch_size": args.batch_size,
+        "artifacts": entries,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {len(entries)} configs to {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

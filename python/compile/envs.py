@@ -1,0 +1,35 @@
+"""Environment specs mirrored from `rust/src/env/` (single source of truth
+for shapes at AOT time; rust/tests/manifest_check.rs cross-checks them)."""
+
+from dataclasses import dataclass
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class EnvSpec:
+    name: str
+    obs_dim: int
+    n_actions: Optional[int] = None  # discrete envs
+    act_dim: Optional[int] = None    # continuous envs
+    act_high: float = 1.0
+
+    @property
+    def discrete(self) -> bool:
+        return self.n_actions is not None
+
+    @property
+    def flat_act_dim(self) -> int:
+        return 1 if self.discrete else self.act_dim
+
+
+ENVS = {
+    "CartPole-v1": EnvSpec("CartPole-v1", obs_dim=4, n_actions=2),
+    "MountainCar-v0": EnvSpec("MountainCar-v0", obs_dim=2, n_actions=3),
+    "Acrobot-v1": EnvSpec("Acrobot-v1", obs_dim=6, n_actions=3),
+    "RandomMDP-v0": EnvSpec("RandomMDP-v0", obs_dim=16, n_actions=4),
+    "Pendulum-v1": EnvSpec("Pendulum-v1", obs_dim=3, act_dim=1, act_high=2.0),
+    "MountainCarContinuous-v0": EnvSpec(
+        "MountainCarContinuous-v0", obs_dim=2, act_dim=1, act_high=1.0
+    ),
+    "LunarLanderLite-v0": EnvSpec("LunarLanderLite-v0", obs_dim=8, act_dim=2, act_high=1.0),
+}

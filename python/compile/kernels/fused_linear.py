@@ -1,0 +1,119 @@
+"""L1 Pallas kernel: fused linear layer  y = act(x @ W + b).
+
+The MLP forward/backward is the compute hot-spot of every learner graph
+(paper §V-B: learners run SGD on the collected data). On the paper's GPU
+this is a cuBLAS GEMM + separate bias/activation kernels; the TPU-shaped
+re-think (DESIGN.md §Hardware-Adaptation) fuses bias and activation into
+the GEMM epilogue so activations never round-trip to HBM, and expresses
+the HBM->VMEM schedule with BlockSpec tiles sized for VMEM residency
+(everything here fits VMEM whole at our model sizes: B,dims <= 1024 f32
+=> < 8 MiB, well under the ~16 MiB/core budget; the MXU sees (B, IN) x
+(IN, OUT) contractions directly).
+
+`pallas_call` has no automatic VJP, so the backward pass is ALSO a Pallas
+kernel, wired up with `jax.custom_vjp`:
+
+    gz = g * act'(y)            (elementwise, fused)
+    dx = gz @ W^T               (MXU)
+    dW = x^T @ gz               (MXU)
+    db = sum_B gz               (VPU reduction)
+
+Activation derivative is recomputed from `y` (relu': y>0; tanh': 1-y^2),
+so the residual saved between fwd and bwd is just (x, W, y).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; on a real TPU these lower unchanged with interpret=False.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# CPU PJRT can only run interpret-mode Pallas; flip for real TPU builds.
+INTERPRET = True
+
+ACTIVATIONS = ("none", "relu", "tanh")
+
+
+def _apply_act(z, activation):
+    if activation == "relu":
+        return jnp.maximum(z, 0.0)
+    if activation == "tanh":
+        return jnp.tanh(z)
+    return z
+
+
+def _act_grad_from_y(y, activation):
+    """act'(z) recomputed from y = act(z)."""
+    if activation == "relu":
+        return (y > 0.0).astype(y.dtype)
+    if activation == "tanh":
+        return 1.0 - y * y
+    return jnp.ones_like(y)
+
+
+def _fwd_kernel(x_ref, w_ref, b_ref, y_ref, *, activation):
+    """y = act(x @ W + b). Whole-array block: one MXU contraction."""
+    z = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    z = z + b_ref[...][None, :]
+    y_ref[...] = _apply_act(z, activation)
+
+
+def _bwd_kernel(x_ref, w_ref, y_ref, g_ref, dx_ref, dw_ref, db_ref, *, activation):
+    """Fused backward: gz = g * act'(y); dx, dW, db in one kernel."""
+    gz = g_ref[...] * _act_grad_from_y(y_ref[...], activation)
+    dx_ref[...] = jnp.dot(gz, w_ref[...].T, preferred_element_type=jnp.float32)
+    dw_ref[...] = jnp.dot(x_ref[...].T, gz, preferred_element_type=jnp.float32)
+    db_ref[...] = jnp.sum(gz, axis=0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fused_linear(x, w, b, activation="none"):
+    """act(x @ W + b) as a Pallas kernel with a Pallas backward.
+
+    Args:
+      x: (B, IN) f32.
+      w: (IN, OUT) f32.
+      b: (OUT,) f32.
+      activation: one of "none" | "relu" | "tanh" (static).
+    Returns:
+      (B, OUT) f32.
+    """
+    if activation not in ACTIVATIONS:
+        raise ValueError(f"unknown activation {activation!r}")
+    batch, _ = x.shape
+    out = w.shape[1]
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, activation=activation),
+        out_shape=jax.ShapeDtypeStruct((batch, out), x.dtype),
+        interpret=INTERPRET,
+    )(x, w, b)
+
+
+def _fused_linear_fwd(x, w, b, activation):
+    y = fused_linear(x, w, b, activation)
+    return y, (x, w, y)
+
+
+def _fused_linear_bwd(activation, res, g):
+    x, w, y = res
+    dx, dw, db = pl.pallas_call(
+        functools.partial(_bwd_kernel, activation=activation),
+        out_shape=(
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct(w.shape, w.dtype),
+            jax.ShapeDtypeStruct((w.shape[1],), w.dtype),
+        ),
+        interpret=INTERPRET,
+    )(x, w, y, g)
+    return dx, dw, db
+
+
+fused_linear.defvjp(_fused_linear_fwd, _fused_linear_bwd)
+
+
+def vmem_bytes(batch: int, in_dim: int, out_dim: int) -> int:
+    """Estimated VMEM residency of the fused fwd kernel (f32)."""
+    return 4 * (batch * in_dim + in_dim * out_dim + out_dim + batch * out_dim)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for the Pallas kernels (the build-time correctness
+signal: pytest checks kernel == ref for values AND gradients)."""
+
+import jax.numpy as jnp
+
+
+def fused_linear_ref(x, w, b, activation="none"):
+    z = x @ w + b[None, :]
+    if activation == "relu":
+        return jnp.maximum(z, 0.0)
+    if activation == "tanh":
+        return jnp.tanh(z)
+    if activation == "none":
+        return z
+    raise ValueError(activation)
+
+
+def td_loss_ref(pred, target, weight, mode="huber", delta=1.0):
+    td = pred - target
+    td_abs = jnp.abs(td)
+    if mode == "huber":
+        quad = jnp.minimum(td_abs, delta)
+        loss = 0.5 * quad * quad + delta * (td_abs - quad)
+    elif mode == "mse":
+        loss = td * td
+    else:
+        raise ValueError(mode)
+    return weight * loss, td_abs
+
+
+def mlp_ref(params, x, hidden_act="relu", out_act="none"):
+    """params: [(w, b), ...]; reference MLP for model-level tests."""
+    h = x
+    for i, (w, b) in enumerate(params):
+        act = out_act if i == len(params) - 1 else hidden_act
+        h = fused_linear_ref(h, w, b, act)
+    return h

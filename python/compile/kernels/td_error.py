@@ -1,0 +1,93 @@
+"""L1 Pallas kernel: fused weighted TD loss.
+
+Computes, in one pass over the batch (one HBM read per operand instead of
+three separate elementwise kernels):
+
+    td       = pred - target
+    td_abs   = |td|                      (the replay-buffer priority feed)
+    loss_vec = w * huber_delta(td)       (or w * td^2 in "mse" mode)
+
+This is the learner-side half of the paper's Algorithm 1 lines 15-18: the
+importance weights multiply the TD objective, and |TD| flows back into
+`update_priority`. Backward is analytic and fused the same way:
+
+    d loss_vec / d pred = w * clamp(td, -delta, delta)    (huber)
+                          w * 2 * td                      (mse)
+
+so the VJP is a single elementwise Pallas kernel as well.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fused_linear import INTERPRET
+
+MODES = ("huber", "mse")
+
+
+def _fwd_kernel(pred_ref, target_ref, w_ref, loss_ref, tdabs_ref, *, mode, delta):
+    td = pred_ref[...] - target_ref[...]
+    tdabs_ref[...] = jnp.abs(td)
+    if mode == "huber":
+        a = jnp.abs(td)
+        quad = jnp.minimum(a, delta)
+        loss = 0.5 * quad * quad + delta * (a - quad)
+    else:
+        loss = td * td
+    loss_ref[...] = w_ref[...] * loss
+
+
+def _bwd_kernel(pred_ref, target_ref, w_ref, g_ref, dpred_ref, *, mode, delta):
+    td = pred_ref[...] - target_ref[...]
+    if mode == "huber":
+        grad = jnp.clip(td, -delta, delta)
+    else:
+        grad = 2.0 * td
+    dpred_ref[...] = g_ref[...] * w_ref[...] * grad
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def td_loss(pred, target, weight, mode="huber", delta=1.0):
+    """Weighted TD loss vector and |TD| priorities.
+
+    Args:
+      pred: (B,) f32 — Q(s, a) under the online network.
+      target: (B,) f32 — bootstrapped target (stop-gradient side).
+      weight: (B,) f32 — importance weights is(i).
+      mode: "huber" | "mse" (static).
+      delta: huber threshold (static).
+    Returns:
+      (loss_vec, td_abs): each (B,) f32. Gradients flow to `pred` only.
+    """
+    if mode not in MODES:
+        raise ValueError(f"unknown mode {mode!r}")
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, mode=mode, delta=delta),
+        out_shape=(
+            jax.ShapeDtypeStruct(pred.shape, pred.dtype),
+            jax.ShapeDtypeStruct(pred.shape, pred.dtype),
+        ),
+        interpret=INTERPRET,
+    )(pred, target, weight)
+
+
+def _td_loss_fwd(pred, target, weight, mode, delta):
+    out = td_loss(pred, target, weight, mode, delta)
+    return out, (pred, target, weight)
+
+
+def _td_loss_bwd(mode, delta, res, g):
+    pred, target, weight = res
+    g_loss, _g_tdabs = g  # |TD| output is a priority feed, not a loss term
+    dpred = pl.pallas_call(
+        functools.partial(_bwd_kernel, mode=mode, delta=delta),
+        out_shape=jax.ShapeDtypeStruct(pred.shape, pred.dtype),
+        interpret=INTERPRET,
+    )(pred, target, weight, g_loss)
+    return dpred, None, None
+
+
+td_loss.defvjp(_td_loss_fwd, _td_loss_bwd)

@@ -1,0 +1,531 @@
+"""L2: JAX compute graphs for every supported algorithm.
+
+Each algorithm contributes:
+
+* ``act``          — policy forward for one observation (B=1), the graph
+                     actors execute every environment step;
+* ``learn`` / ``learn_critic`` + ``learn_actor``
+                   — loss + gradients + |TD| priorities for one sampled
+                     batch, the graph learners execute. Gradients are
+                     returned per-parameter, aligned with a slice of the
+                     parameter list (the rust parameter server aggregates
+                     them and applies Adam — paper §V-B).
+
+Parameters are a FLAT list of arrays (w0, b0, w1, b1, ...) so the lowered
+HLO signature is position-based and the rust side needs no pytrees. Every
+graph takes the full online (and, where needed, target) parameter list;
+learn graphs report which slice their gradient outputs correspond to via
+``grad_slice`` in the build metadata.
+
+The MLP hot-spot runs through the L1 Pallas kernels
+(`kernels.fused_linear`, `kernels.td_error`); everything else is jnp glue
+that XLA fuses around them.
+"""
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .envs import EnvSpec
+from .kernels.fused_linear import fused_linear
+from .kernels.td_error import td_loss
+
+Params = List[jnp.ndarray]
+
+ALGOS = ("dqn", "ddqn", "ddpg", "td3", "sac")
+SAC_LOG_STD_MIN, SAC_LOG_STD_MAX = -20.0, 2.0
+
+
+# --------------------------------------------------------------------------
+# MLP built on the Pallas fused_linear kernel.
+# --------------------------------------------------------------------------
+
+def mlp_init(rng: np.random.Generator, dims: List[int]) -> List[np.ndarray]:
+    """He/fan-in init; returns flat [w0, b0, w1, b1, ...] f32 arrays."""
+    out: List[np.ndarray] = []
+    for i in range(len(dims) - 1):
+        fan_in = dims[i]
+        bound = 1.0 / math.sqrt(fan_in)
+        out.append(rng.uniform(-bound, bound, (dims[i], dims[i + 1])).astype(np.float32))
+        out.append(rng.uniform(-bound, bound, (dims[i + 1],)).astype(np.float32))
+    return out
+
+
+def mlp_apply(params: Params, x, hidden_act="relu", out_act="none"):
+    n_layers = len(params) // 2
+    h = x
+    for i in range(n_layers):
+        act = out_act if i == n_layers - 1 else hidden_act
+        h = fused_linear(h, params[2 * i], params[2 * i + 1], act)
+    return h
+
+
+# --------------------------------------------------------------------------
+# Build-spec plumbing.
+# --------------------------------------------------------------------------
+
+@dataclass
+class GraphSpec:
+    """One lowerable graph: fn(*example_args) with named inputs/outputs."""
+    fn: Callable
+    example_args: List[np.ndarray]
+    input_names: List[str]
+    output_names: List[str]
+    # Half-open slice of the full param list that `grads` outputs cover.
+    grad_slice: Optional[Tuple[int, int]] = None
+
+
+@dataclass
+class AlgoBuild:
+    algo: str
+    env: EnvSpec
+    hidden: List[int]
+    batch_size: int
+    gamma: float
+    init_params: List[np.ndarray]
+    param_names: List[str]
+    graphs: Dict[str, GraphSpec] = field(default_factory=dict)
+    extra: Dict[str, float] = field(default_factory=dict)
+
+
+def _zeros(*shape):
+    return np.zeros(shape, np.float32)
+
+
+def _param_examples(params: List[np.ndarray]) -> List[np.ndarray]:
+    return [np.zeros_like(p) for p in params]
+
+
+def _batch_examples(env: EnvSpec, batch: int) -> List[np.ndarray]:
+    return [
+        _zeros(batch, env.obs_dim),          # obs
+        _zeros(batch, env.flat_act_dim),     # action
+        _zeros(batch, env.obs_dim),          # next_obs
+        _zeros(batch),                       # reward
+        _zeros(batch),                       # done
+        _zeros(batch),                       # is_weights
+    ]
+
+
+BATCH_NAMES = ["obs", "action", "next_obs", "reward", "done", "is_weights"]
+
+
+def _names(prefix: str, n_arrays: int) -> List[str]:
+    out = []
+    for i in range(n_arrays // 2):
+        out += [f"{prefix}/w{i}", f"{prefix}/b{i}"]
+    return out
+
+
+# --------------------------------------------------------------------------
+# DQN / DDQN.
+# --------------------------------------------------------------------------
+
+def build_dqn(env: EnvSpec, hidden, batch_size, gamma, double=False, seed=0) -> AlgoBuild:
+    assert env.discrete, "DQN needs a discrete action space"
+    rng = np.random.default_rng(seed)
+    dims = [env.obs_dim, *hidden, env.n_actions]
+    params0 = mlp_init(rng, dims)
+    n = len(params0)
+
+    def q_net(params, obs):
+        return mlp_apply(params, obs)
+
+    def act(*args):
+        params, obs = list(args[:n]), args[n]
+        q = q_net(params, obs)
+        return (jnp.argmax(q, axis=-1).astype(jnp.float32),)
+
+    def learn(*args):
+        params = list(args[:n])
+        tparams = list(args[n : 2 * n])
+        obs, action, next_obs, reward, done, isw = args[2 * n : 2 * n + 6]
+
+        def loss_fn(params):
+            q = q_net(params, obs)
+            a_idx = action[:, 0].astype(jnp.int32)
+            qa = jnp.take_along_axis(q, a_idx[:, None], axis=1)[:, 0]
+            if double:
+                next_online = q_net(params, next_obs)
+                next_a = jnp.argmax(next_online, axis=-1)
+                next_q_all = q_net(tparams, next_obs)
+                next_q = jnp.take_along_axis(next_q_all, next_a[:, None], axis=1)[:, 0]
+            else:
+                next_q = jnp.max(q_net(tparams, next_obs), axis=-1)
+            target = reward + gamma * (1.0 - done) * next_q
+            loss_vec, td_abs = td_loss(qa, jax.lax.stop_gradient(target), isw, "huber", 1.0)
+            return jnp.mean(loss_vec), td_abs
+
+        (loss, td_abs), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        return (*grads, td_abs, loss)
+
+    name = "ddqn" if double else "dqn"
+    b = AlgoBuild(
+        algo=name,
+        env=env,
+        hidden=list(hidden),
+        batch_size=batch_size,
+        gamma=gamma,
+        init_params=params0,
+        param_names=_names("q", n),
+    )
+    pex = _param_examples(params0)
+    b.graphs["act"] = GraphSpec(
+        act,
+        pex + [_zeros(1, env.obs_dim)],
+        [f"p:{nm}" for nm in b.param_names] + ["obs"],
+        ["action"],
+    )
+    b.graphs["learn"] = GraphSpec(
+        learn,
+        pex + pex + _batch_examples(env, batch_size),
+        [f"p:{nm}" for nm in b.param_names]
+        + [f"t:{nm}" for nm in b.param_names]
+        + BATCH_NAMES,
+        [f"g:{nm}" for nm in b.param_names] + ["td_abs", "loss"],
+        grad_slice=(0, n),
+    )
+    return b
+
+
+# --------------------------------------------------------------------------
+# Continuous-control nets shared by DDPG / TD3 / SAC.
+# --------------------------------------------------------------------------
+
+def _actor_apply(params, obs, act_high):
+    """Deterministic tanh actor (DDPG/TD3)."""
+    return act_high * mlp_apply(params, obs, out_act="tanh")
+
+
+def _critic_apply(params, obs, action):
+    x = jnp.concatenate([obs, action], axis=-1)
+    return mlp_apply(params, x)[:, 0]
+
+
+# --------------------------------------------------------------------------
+# DDPG.
+# --------------------------------------------------------------------------
+
+def build_ddpg(env: EnvSpec, hidden, batch_size, gamma, seed=0) -> AlgoBuild:
+    assert not env.discrete, "DDPG needs a continuous action space"
+    rng = np.random.default_rng(seed)
+    actor0 = mlp_init(rng, [env.obs_dim, *hidden, env.act_dim])
+    critic0 = mlp_init(rng, [env.obs_dim + env.act_dim, *hidden, 1])
+    na, nc = len(actor0), len(critic0)
+    n = na + nc
+    params0 = actor0 + critic0
+    high = env.act_high
+
+    def split(params):
+        return params[:na], params[na:]
+
+    def act(*args):
+        actor, obs = list(args[:na]), args[na]
+        return (_actor_apply(actor, obs, high),)
+
+    def learn(*args):
+        params = list(args[:n])
+        tparams = list(args[n : 2 * n])
+        obs, action, next_obs, reward, done, isw = args[2 * n : 2 * n + 6]
+        t_actor, t_critic = split(tparams)
+
+        next_a = _actor_apply(t_actor, next_obs, high)
+        next_q = _critic_apply(t_critic, next_obs, next_a)
+        target = reward + gamma * (1.0 - done) * next_q
+
+        def critic_loss(critic):
+            q = _critic_apply(critic, obs, action)
+            loss_vec, td_abs = td_loss(q, jax.lax.stop_gradient(target), isw, "mse", 1.0)
+            return jnp.mean(loss_vec), td_abs
+
+        def actor_loss(actor, critic):
+            a = _actor_apply(actor, obs, high)
+            return -jnp.mean(_critic_apply(critic, obs, a))
+
+        actor_p, critic_p = split(params)
+        (c_loss, td_abs), c_grads = jax.value_and_grad(critic_loss, has_aux=True)(critic_p)
+        a_loss, a_grads = jax.value_and_grad(actor_loss)(actor_p, critic_p)
+        return (*a_grads, *c_grads, td_abs, c_loss + a_loss)
+
+    b = AlgoBuild(
+        algo="ddpg",
+        env=env,
+        hidden=list(hidden),
+        batch_size=batch_size,
+        gamma=gamma,
+        init_params=params0,
+        param_names=_names("actor", na) + _names("critic", nc),
+    )
+    pex = _param_examples(params0)
+    b.graphs["act"] = GraphSpec(
+        act,
+        pex[:na] + [_zeros(1, env.obs_dim)],
+        [f"p:{nm}" for nm in b.param_names[:na]] + ["obs"],
+        ["action"],
+    )
+    b.graphs["learn"] = GraphSpec(
+        learn,
+        pex + pex + _batch_examples(env, batch_size),
+        [f"p:{nm}" for nm in b.param_names]
+        + [f"t:{nm}" for nm in b.param_names]
+        + BATCH_NAMES,
+        [f"g:{nm}" for nm in b.param_names] + ["td_abs", "loss"],
+        grad_slice=(0, n),
+    )
+    return b
+
+
+# --------------------------------------------------------------------------
+# TD3: twin critics, target policy smoothing, delayed actor updates
+# (the delay schedule lives in the rust learner).
+# --------------------------------------------------------------------------
+
+def build_td3(
+    env: EnvSpec,
+    hidden,
+    batch_size,
+    gamma,
+    seed=0,
+    policy_noise=0.2,
+    noise_clip=0.5,
+) -> AlgoBuild:
+    assert not env.discrete
+    rng = np.random.default_rng(seed)
+    actor0 = mlp_init(rng, [env.obs_dim, *hidden, env.act_dim])
+    c1_0 = mlp_init(rng, [env.obs_dim + env.act_dim, *hidden, 1])
+    c2_0 = mlp_init(rng, [env.obs_dim + env.act_dim, *hidden, 1])
+    na, nc = len(actor0), len(c1_0)
+    n = na + 2 * nc
+    params0 = actor0 + c1_0 + c2_0
+    high = env.act_high
+
+    # Graph signatures are PRECISE (only arrays the computation actually
+    # uses): jax prunes unused arguments at lowering time, so passing the
+    # full parameter list would desynchronize the HLO signature from the
+    # manifest.
+
+    def act(*args):
+        actor, obs = list(args[:na]), args[na]
+        return (_actor_apply(actor, obs, high),)
+
+    def learn_critic(*args):
+        critics = list(args[: 2 * nc])
+        t_actor = list(args[2 * nc : 2 * nc + na])
+        t_c1 = list(args[2 * nc + na : 2 * nc + na + nc])
+        t_c2 = list(args[2 * nc + na + nc : 2 * nc + na + 2 * nc])
+        k = 2 * nc + na + 2 * nc
+        obs, action, next_obs, reward, done, isw = args[k : k + 6]
+        noise = args[k + 6]
+
+        # Target policy smoothing (TD3 eq. 15).
+        eps = jnp.clip(noise * policy_noise, -noise_clip, noise_clip) * high
+        next_a = jnp.clip(_actor_apply(t_actor, next_obs, high) + eps, -high, high)
+        next_q = jnp.minimum(
+            _critic_apply(t_c1, next_obs, next_a), _critic_apply(t_c2, next_obs, next_a)
+        )
+        target = jax.lax.stop_gradient(reward + gamma * (1.0 - done) * next_q)
+
+        def loss_fn(critics):
+            c1, c2 = critics[:nc], critics[nc:]
+            q1 = _critic_apply(c1, obs, action)
+            q2 = _critic_apply(c2, obs, action)
+            l1, td_abs = td_loss(q1, target, isw, "mse", 1.0)
+            l2, _ = td_loss(q2, target, isw, "mse", 1.0)
+            return jnp.mean(l1) + jnp.mean(l2), td_abs
+
+        (loss, td_abs), grads = jax.value_and_grad(loss_fn, has_aux=True)(critics)
+        return (*grads, td_abs, loss)
+
+    def learn_actor(*args):
+        actor_p = list(args[:na])
+        c1 = list(args[na : na + nc])
+        obs = args[na + nc]
+
+        def loss_fn(actor):
+            a = _actor_apply(actor, obs, high)
+            return -jnp.mean(_critic_apply(c1, obs, a))
+
+        loss, grads = jax.value_and_grad(loss_fn)(actor_p)
+        zeros_td = jnp.zeros(obs.shape[0], jnp.float32)
+        return (*grads, zeros_td, loss)
+
+    b = AlgoBuild(
+        algo="td3",
+        env=env,
+        hidden=list(hidden),
+        batch_size=batch_size,
+        gamma=gamma,
+        init_params=params0,
+        param_names=_names("actor", na) + _names("critic1", nc) + _names("critic2", nc),
+        extra={"policy_noise": policy_noise, "noise_clip": noise_clip},
+    )
+    pex = _param_examples(params0)
+    p_names = b.param_names
+    b.graphs["act"] = GraphSpec(
+        act,
+        pex[:na] + [_zeros(1, env.obs_dim)],
+        [f"p:{nm}" for nm in p_names[:na]] + ["obs"],
+        ["action"],
+    )
+    b.graphs["learn_critic"] = GraphSpec(
+        learn_critic,
+        pex[na:] + pex + _batch_examples(env, batch_size)
+        + [_zeros(batch_size, env.act_dim)],
+        [f"p:{nm}" for nm in p_names[na:]]
+        + [f"t:{nm}" for nm in p_names]
+        + BATCH_NAMES
+        + ["noise"],
+        [f"g:{nm}" for nm in p_names[na:]] + ["td_abs", "loss"],
+        grad_slice=(na, n),
+    )
+    b.graphs["learn_actor"] = GraphSpec(
+        learn_actor,
+        pex[: na + nc] + [_zeros(batch_size, env.obs_dim)],
+        [f"p:{nm}" for nm in p_names[: na + nc]] + ["obs"],
+        [f"g:{nm}" for nm in p_names[:na]] + ["td_abs", "loss"],
+        grad_slice=(0, na),
+    )
+    return b
+
+
+# --------------------------------------------------------------------------
+# SAC (fixed temperature): stochastic tanh-Gaussian actor, twin critics.
+# --------------------------------------------------------------------------
+
+def _sac_actor_sample(actor, obs, noise, act_high):
+    """Reparameterized tanh-Gaussian sample + log-prob."""
+    out = mlp_apply(actor, obs)
+    mean, log_std = jnp.split(out, 2, axis=-1)
+    log_std = jnp.clip(log_std, SAC_LOG_STD_MIN, SAC_LOG_STD_MAX)
+    std = jnp.exp(log_std)
+    pre = mean + std * noise
+    a = jnp.tanh(pre)
+    # log N(pre; mean, std) with tanh change-of-variables.
+    logp = (
+        -0.5 * (((pre - mean) / std) ** 2 + 2.0 * log_std + jnp.log(2.0 * jnp.pi))
+    ).sum(-1)
+    logp -= (2.0 * (jnp.log(2.0) - pre - jax.nn.softplus(-2.0 * pre))).sum(-1)
+    return act_high * a, logp
+
+
+def build_sac(env: EnvSpec, hidden, batch_size, gamma, seed=0, alpha=0.2) -> AlgoBuild:
+    assert not env.discrete
+    rng = np.random.default_rng(seed)
+    actor0 = mlp_init(rng, [env.obs_dim, *hidden, 2 * env.act_dim])
+    c1_0 = mlp_init(rng, [env.obs_dim + env.act_dim, *hidden, 1])
+    c2_0 = mlp_init(rng, [env.obs_dim + env.act_dim, *hidden, 1])
+    na, nc = len(actor0), len(c1_0)
+    n = na + 2 * nc
+    params0 = actor0 + c1_0 + c2_0
+    high = env.act_high
+
+    # Precise signatures (see TD3 note): only arrays actually used.
+
+    def act(*args):
+        actor, obs, noise = list(args[:na]), args[na], args[na + 1]
+        a, _ = _sac_actor_sample(actor, obs, noise, high)
+        return (a,)
+
+    def learn_critic(*args):
+        actor_p = list(args[:na])
+        critics = list(args[na:n])
+        t_c1 = list(args[n : n + nc])
+        t_c2 = list(args[n + nc : n + 2 * nc])
+        k = n + 2 * nc
+        obs, action, next_obs, reward, done, isw = args[k : k + 6]
+        noise = args[k + 6]
+
+        next_a, next_logp = _sac_actor_sample(actor_p, next_obs, noise, high)
+        next_q = jnp.minimum(
+            _critic_apply(t_c1, next_obs, next_a), _critic_apply(t_c2, next_obs, next_a)
+        )
+        target = jax.lax.stop_gradient(
+            reward + gamma * (1.0 - done) * (next_q - alpha * next_logp)
+        )
+
+        def loss_fn(critics):
+            c1, c2 = critics[:nc], critics[nc:]
+            q1 = _critic_apply(c1, obs, action)
+            q2 = _critic_apply(c2, obs, action)
+            l1, td_abs = td_loss(q1, target, isw, "mse", 1.0)
+            l2, _ = td_loss(q2, target, isw, "mse", 1.0)
+            return jnp.mean(l1) + jnp.mean(l2), td_abs
+
+        (loss, td_abs), grads = jax.value_and_grad(loss_fn, has_aux=True)(critics)
+        return (*grads, td_abs, loss)
+
+    def learn_actor(*args):
+        actor_p = list(args[:na])
+        c1 = list(args[na : na + nc])
+        c2 = list(args[na + nc : n])
+        obs, noise = args[n], args[n + 1]
+
+        def loss_fn(actor):
+            a, logp = _sac_actor_sample(actor, obs, noise, high)
+            q = jnp.minimum(_critic_apply(c1, obs, a), _critic_apply(c2, obs, a))
+            return jnp.mean(alpha * logp - q)
+
+        loss, grads = jax.value_and_grad(loss_fn)(actor_p)
+        zeros_td = jnp.zeros(obs.shape[0], jnp.float32)
+        return (*grads, zeros_td, loss)
+
+    b = AlgoBuild(
+        algo="sac",
+        env=env,
+        hidden=list(hidden),
+        batch_size=batch_size,
+        gamma=gamma,
+        init_params=params0,
+        param_names=_names("actor", na) + _names("critic1", nc) + _names("critic2", nc),
+        extra={"alpha": alpha},
+    )
+    pex = _param_examples(params0)
+    p_names = b.param_names
+    b.graphs["act"] = GraphSpec(
+        act,
+        pex[:na] + [_zeros(1, env.obs_dim), _zeros(1, env.act_dim)],
+        [f"p:{nm}" for nm in p_names[:na]] + ["obs", "noise"],
+        ["action"],
+    )
+    b.graphs["learn_critic"] = GraphSpec(
+        learn_critic,
+        pex + pex[na:] + _batch_examples(env, batch_size)
+        + [_zeros(batch_size, env.act_dim)],
+        [f"p:{nm}" for nm in p_names]
+        + [f"t:{nm}" for nm in p_names[na:]]
+        + BATCH_NAMES
+        + ["noise"],
+        [f"g:{nm}" for nm in p_names[na:]] + ["td_abs", "loss"],
+        grad_slice=(na, n),
+    )
+    b.graphs["learn_actor"] = GraphSpec(
+        learn_actor,
+        pex + [_zeros(batch_size, env.obs_dim), _zeros(batch_size, env.act_dim)],
+        [f"p:{nm}" for nm in p_names] + ["obs", "noise"],
+        [f"g:{nm}" for nm in p_names[:na]] + ["td_abs", "loss"],
+        grad_slice=(0, na),
+    )
+    return b
+
+
+# --------------------------------------------------------------------------
+# Registry.
+# --------------------------------------------------------------------------
+
+def build(algo: str, env: EnvSpec, hidden=(64, 64), batch_size=64, gamma=0.99, seed=0,
+          **kw) -> AlgoBuild:
+    if algo == "dqn":
+        return build_dqn(env, hidden, batch_size, gamma, double=False, seed=seed, **kw)
+    if algo == "ddqn":
+        return build_dqn(env, hidden, batch_size, gamma, double=True, seed=seed, **kw)
+    if algo == "ddpg":
+        return build_ddpg(env, hidden, batch_size, gamma, seed=seed, **kw)
+    if algo == "td3":
+        return build_td3(env, hidden, batch_size, gamma, seed=seed, **kw)
+    if algo == "sac":
+        return build_sac(env, hidden, batch_size, gamma, seed=seed, **kw)
+    raise ValueError(f"unknown algo {algo!r}")

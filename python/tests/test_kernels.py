@@ -1,0 +1,133 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles, values AND grads.
+
+Hypothesis sweeps shapes; fixed-seed numpy draws the values. This is the
+core build-time correctness signal for the kernel layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fused_linear import ACTIVATIONS, fused_linear, vmem_bytes
+from compile.kernels.td_error import MODES, td_loss
+
+DIMS = st.integers(min_value=1, max_value=48)
+
+
+def rnd(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+# ---------------------------------------------------------------- forward
+
+
+@settings(max_examples=30, deadline=None)
+@given(batch=DIMS, in_dim=DIMS, out_dim=DIMS, act=st.sampled_from(ACTIVATIONS),
+       seed=st.integers(0, 2**31 - 1))
+def test_fused_linear_matches_ref(batch, in_dim, out_dim, act, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = rnd(rng, batch, in_dim), rnd(rng, in_dim, out_dim), rnd(rng, out_dim)
+    got = fused_linear(x, w, b, act)
+    want = ref.fused_linear_ref(x, w, b, act)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(batch=DIMS, mode=st.sampled_from(MODES),
+       delta=st.floats(0.1, 5.0), seed=st.integers(0, 2**31 - 1))
+def test_td_loss_matches_ref(batch, mode, delta, seed):
+    rng = np.random.default_rng(seed)
+    pred, target = rnd(rng, batch), rnd(rng, batch)
+    weight = jnp.abs(rnd(rng, batch)) + 0.01
+    got_loss, got_td = td_loss(pred, target, weight, mode, delta)
+    want_loss, want_td = ref.td_loss_ref(pred, target, weight, mode, delta)
+    np.testing.assert_allclose(got_loss, want_loss, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(got_td, want_td, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------- backward
+
+
+@settings(max_examples=15, deadline=None)
+@given(batch=DIMS, in_dim=DIMS, out_dim=DIMS, act=st.sampled_from(ACTIVATIONS),
+       seed=st.integers(0, 2**31 - 1))
+def test_fused_linear_grads_match_ref(batch, in_dim, out_dim, act, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = rnd(rng, batch, in_dim), rnd(rng, in_dim, out_dim), rnd(rng, out_dim)
+
+    def f_kernel(x, w, b):
+        return jnp.sum(jnp.sin(fused_linear(x, w, b, act)))
+
+    def f_ref(x, w, b):
+        return jnp.sum(jnp.sin(ref.fused_linear_ref(x, w, b, act)))
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, bb in zip(gk, gr):
+        np.testing.assert_allclose(a, bb, rtol=2e-4, atol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(batch=DIMS, mode=st.sampled_from(MODES), seed=st.integers(0, 2**31 - 1))
+def test_td_loss_grads_match_ref(batch, mode, seed):
+    rng = np.random.default_rng(seed)
+    pred, target = rnd(rng, batch), rnd(rng, batch)
+    weight = jnp.abs(rnd(rng, batch)) + 0.01
+
+    def f_kernel(p):
+        loss, _ = td_loss(p, target, weight, mode, 1.0)
+        return jnp.mean(loss)
+
+    def f_ref(p):
+        loss, _ = ref.td_loss_ref(p, target, weight, mode, 1.0)
+        return jnp.mean(loss)
+
+    gk = jax.grad(f_kernel)(pred)
+    gr = jax.grad(f_ref)(pred)
+    np.testing.assert_allclose(gk, gr, rtol=1e-5, atol=1e-6)
+
+
+def test_td_loss_target_and_weight_get_no_grad():
+    pred = jnp.ones(4)
+    target = jnp.zeros(4)
+    weight = jnp.ones(4)
+
+    def f(t, w):
+        loss, _ = td_loss(pred, t, w, "mse", 1.0)
+        return jnp.sum(loss)
+
+    gt, gw = jax.grad(f, argnums=(0, 1))(target, weight)
+    # custom_vjp returns None -> zeros for non-diff inputs.
+    np.testing.assert_allclose(gt, np.zeros(4))
+    np.testing.assert_allclose(gw, np.zeros(4))
+
+
+# ------------------------------------------------------------- edge cases
+
+
+def test_unknown_activation_raises():
+    x = jnp.zeros((2, 2))
+    with pytest.raises(ValueError):
+        fused_linear(x, x, jnp.zeros(2), "gelu")
+
+
+def test_unknown_mode_raises():
+    v = jnp.zeros(3)
+    with pytest.raises(ValueError):
+        td_loss(v, v, v, "mae", 1.0)
+
+
+def test_huber_transitions_at_delta():
+    pred = jnp.array([0.5, 2.0])
+    target = jnp.zeros(2)
+    w = jnp.ones(2)
+    loss, _ = td_loss(pred, target, w, "huber", 1.0)
+    np.testing.assert_allclose(loss[0], 0.125, rtol=1e-6)  # quadratic zone
+    np.testing.assert_allclose(loss[1], 1.5, rtol=1e-6)    # linear zone
+
+def test_vmem_estimate_within_budget():
+    # Largest graph config we ship must fit VMEM comfortably.
+    assert vmem_bytes(batch=256, in_dim=256, out_dim=256) < 4 * 2**20

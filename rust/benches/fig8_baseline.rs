@@ -1,0 +1,91 @@
+//! Fig 8 — end-to-end comparison with the baseline framework
+//! (RLlib-substitute: same algorithms, binary sum tree behind one global
+//! lock, synchronized sampling) on DQN / DDPG / SAC at 1–8 cores.
+//!
+//! The paper reports 3.1x–10.8x convergence-time reduction, growing with
+//! core count until the GPU saturates. We reproduce the *shape* two ways:
+//!   * real runs at 1 worker pair on this host (PAL vs baseline buffer,
+//!     same budget — isolates the buffer + sync design), and
+//!   * the multicore DES projection at 1–8 cores, driven by per-op costs
+//!     measured from the real runs.
+
+use pal_rl::coordinator::{train, BufferKind, TrainConfig};
+use pal_rl::dse::CostProfile;
+use pal_rl::util::bench::Table;
+
+fn real_run(algo: &str, env: &str, buffer: BufferKind, steps: usize) -> anyhow::Result<f64> {
+    let mut cfg = TrainConfig::new(algo, env);
+    cfg.total_env_steps = steps;
+    cfg.warmup_steps = 200;
+    cfg.update_interval = if algo == "dqn" { 1.0 } else { 2.0 };
+    cfg.buffer = buffer;
+    cfg.actor_lead = 0; // free-run: throughput measurement
+    cfg.seed = 11;
+    let r = train(&cfg)?;
+    Ok(r.env_steps_per_sec)
+}
+
+fn main() -> anyhow::Result<()> {
+    let have_artifacts = std::path::Path::new("artifacts/manifest.json").exists();
+    println!("Fig 8 — ours vs baseline framework (global-lock buffer)\n");
+
+    // ---- real single-pair runs on this host -------------------------
+    if have_artifacts {
+        let mut t = Table::new(&["algo", "PAL steps/s", "baseline steps/s", "speedup"]);
+        for (algo, env) in [("dqn", "CartPole-v1"), ("ddpg", "Pendulum-v1"),
+                            ("sac", "Pendulum-v1")] {
+            let ours = real_run(algo, env, BufferKind::PalKary, 2_000)?;
+            let base = real_run(algo, env, BufferKind::GlobalLock, 2_000)?;
+            t.row(vec![
+                algo.into(),
+                format!("{ours:.0}"),
+                format!("{base:.0}"),
+                format!("{:.2}x", ours / base),
+            ]);
+        }
+        println!("real runs, 1 actor + 1 learner on this host:");
+        t.print();
+        println!();
+    } else {
+        println!("(artifacts missing — skipping real runs; run `make artifacts`)\n");
+    }
+
+    // ---- DES projection at 1..8 cores --------------------------------
+    // PAL: two-lock buffer, asynchronous actors, best Eq.5 split.
+    // Baseline (RLlib substitute): global-lock buffer + interpreted
+    // framework overheads + synchronized collection (DESIGN.md §4).
+    // Metric: balanced training throughput min(collect, ratio·consume) —
+    // convergence time follows the paced pipeline's slower side.
+    for algo in ["dqn", "ddpg", "sac"] {
+        let env = if algo == "dqn" { "CartPole-v1" } else { "Pendulum-v1" };
+        let mut pal_p = CostProfile::representative(algo, env);
+        pal_p.serialized_accel = true;
+        pal_p.accel_slots = 4; // GTX-1650-class: a few batches in flight
+        let mut base_p = CostProfile::rllib_like(algo, env);
+        base_p.serialized_accel = true;
+        base_p.accel_slots = 4;
+        let ratio = 1.0;
+        let mut t = Table::new(&[
+            "cores", "PAL (a+l)", "PAL steps/s", "RLlib-sub steps/s", "speedup",
+        ]);
+        for cores in [1usize, 2, 4, 6, 8] {
+            let (pa, pl, pal) = pal_p.best_balanced(cores, ratio);
+            let (_, _, base) = base_p.best_balanced(cores, ratio);
+            t.row(vec![
+                cores.to_string(),
+                format!("{pa}+{pl}"),
+                format!("{pal:.0}"),
+                format!("{base:.0}"),
+                format!("{:.2}x", pal / base.max(1e-9)),
+            ]);
+        }
+        println!("DES projection — {algo} ({env}):");
+        t.print();
+        println!();
+    }
+    println!(
+        "paper's shape: speedup grows with cores (3.1x → 10.8x) then\n\
+         saturates when the accelerator becomes the bottleneck."
+    );
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! §Perf probe — not a paper figure. Measures the L3/RT hot paths:
+//! act-graph execution (actor inner loop), learn-graph execution
+//! (learner inner loop), parameter-server sync, and batch assembly.
+//! Used to drive the EXPERIMENTS.md §Perf iteration log.
+
+use pal_rl::agent::{Agent, Exploration};
+use pal_rl::replay::{PrioritizedConfig, PrioritizedReplay, ReplayBuffer, SampleBatch, Transition};
+use pal_rl::runtime::{Manifest, Runtime};
+use pal_rl::util::bench::{bench_fn, header};
+use pal_rl::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("run `make artifacts` first");
+        return Ok(());
+    }
+    let manifest = Manifest::load("artifacts")?;
+    let info = manifest.get("dqn_CartPole-v1")?.clone();
+    let rt = Runtime::cpu()?;
+    let model = rt.load_model(&info)?;
+    let mut agent = Agent::new(model, Exploration::default())?;
+    let params = info.load_initial_params()?;
+    let mut rng = Rng::new(1);
+    let obs = vec![0.1f32; info.obs_dim];
+
+    header("actor hot path (dqn @ CartPole, B=1)");
+    let mut step = 0usize;
+    println!("{}", bench_fn("agent.act (greedy, uncached)", 1500, || {
+        step += 1;
+        agent.act(&params, &obs, usize::MAX, false, &mut rng).unwrap();
+    }));
+    println!("{}", bench_fn("agent.act_cached (device-resident params)", 1500, || {
+        step += 1;
+        agent.act_cached(&params, 1, &obs, usize::MAX, false, &mut rng).unwrap();
+    }));
+
+    header("learner hot path (dqn @ CartPole, B=64)");
+    let buf = PrioritizedReplay::new(PrioritizedConfig {
+        capacity: 10_000,
+        obs_dim: info.obs_dim,
+        act_dim: info.flat_act_dim,
+        fanout: 64,
+        alpha: 0.6,
+        beta: 0.4,
+        lazy_writing: true,
+    });
+    for i in 0..5_000 {
+        buf.insert(&Transition {
+            obs: vec![i as f32 * 0.01; info.obs_dim],
+            action: vec![(i % 2) as f32],
+            next_obs: vec![i as f32 * 0.01 + 0.1; info.obs_dim],
+            reward: 1.0,
+            done: false,
+        });
+    }
+    let mut batch = SampleBatch::with_capacity(64, info.obs_dim, info.flat_act_dim);
+    buf.sample(info.batch_size, &mut rng, &mut batch);
+    let targets = params.clone();
+    println!("{}", bench_fn("agent.learn (grads+|TD|+loss)", 2500, || {
+        agent.learn(&params, &targets, &batch, &mut rng).unwrap();
+    }));
+    println!("{}", bench_fn("buffer.sample batch=64", 400, || {
+        buf.sample(info.batch_size, &mut rng, &mut batch);
+    }));
+
+    header("parameter server");
+    let server = pal_rl::params::ParameterServer::new(
+        params.clone(),
+        pal_rl::params::AdamConfig::default(),
+        pal_rl::params::TargetSync::Polyak { tau: 0.005 },
+        1,
+    );
+    let grads = vec![0.01f32; params.len()];
+    println!("{}", bench_fn("push_gradient (full net, Adam)", 400, || {
+        server.push_gradient(0, grads.len(), &grads);
+    }));
+    let mut snap = Vec::new();
+    let mut v = 0u64;
+    println!("{}", bench_fn("sync_online (stale)", 300, || {
+        v = 0;
+        v = server.sync_online(&mut snap, v);
+    }));
+    Ok(())
+}

@@ -1,0 +1,137 @@
+//! Asynchronous actor (paper §V-A): interacts with its own environment
+//! instance using snapshot weights and inserts transitions into the
+//! shared replay buffer. No synchronization with other actors — acting
+//! never mutates weights.
+
+use crate::agent::Agent;
+use crate::env::Env;
+use crate::metrics::Metrics;
+use crate::params::ParameterServer;
+use crate::replay::{ReplayBuffer, Transition};
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+/// Shared control plane handed to every worker.
+pub struct Control {
+    pub stop: AtomicBool,
+    /// Global environment-step budget (actors stop when exhausted).
+    pub max_env_steps: usize,
+    /// Env-steps per learn-step the coordinator wants (Alg 1
+    /// update_interval). Learners never run ahead of it; actors also
+    /// throttle when collection runs too far ahead (two-sided pacing, the
+    /// ratio objective of Eq. 5).
+    pub update_interval: f64,
+    /// Learners hold off until the buffer has this many transitions.
+    pub warmup_steps: usize,
+    /// Actors may run at most this many env steps ahead of
+    /// `learn_steps * update_interval` once warmup is done (0 = actors
+    /// free-run, paper's fully-async mode).
+    pub actor_lead: usize,
+    /// Global counters for pacing (mirrors of Metrics, kept separate so
+    /// pacing never takes the metrics mutex).
+    pub env_steps: AtomicUsize,
+    pub learn_steps: AtomicUsize,
+}
+
+impl Control {
+    pub fn new(max_env_steps: usize, update_interval: f64, warmup_steps: usize) -> Self {
+        Self {
+            stop: AtomicBool::new(false),
+            max_env_steps,
+            update_interval,
+            warmup_steps,
+            actor_lead: 512,
+            env_steps: AtomicUsize::new(0),
+            learn_steps: AtomicUsize::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn should_stop(&self) -> bool {
+        self.stop.load(Ordering::Relaxed)
+    }
+
+    pub fn request_stop(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+
+    /// True while actors should hold off (collection too far ahead).
+    #[inline]
+    pub fn actors_ahead(&self) -> bool {
+        if self.actor_lead == 0 {
+            return false;
+        }
+        let env = self.env_steps.load(Ordering::Relaxed);
+        if env < self.warmup_steps {
+            return false;
+        }
+        let learn = self.learn_steps.load(Ordering::Relaxed);
+        (env as f64) > learn as f64 * self.update_interval + self.actor_lead as f64
+    }
+}
+
+/// Actor main loop. Runs until the step budget is exhausted or stop is
+/// requested. `agent` and `env` are thread-local (PJRT objects inside).
+#[allow(clippy::too_many_arguments)]
+pub fn run_actor(
+    actor_id: usize,
+    agent: &mut Agent,
+    env: &mut dyn Env,
+    buffer: &dyn ReplayBuffer,
+    server: &ParameterServer,
+    metrics: &Metrics,
+    ctl: &Control,
+    rng: &mut Rng,
+) -> Result<()> {
+    let mut params: Vec<f32> = Vec::new();
+    let mut version = 0u64;
+    let mut obs = env.reset(rng);
+    let mut ep_return = 0.0f32;
+    let _ = actor_id;
+
+    loop {
+        if ctl.should_stop() {
+            break;
+        }
+        // Two-sided ratio pacing: wait while collection is too far ahead
+        // of consumption (learners have their own one-sided gate).
+        if ctl.actors_ahead() {
+            std::thread::sleep(std::time::Duration::from_micros(100));
+            continue;
+        }
+        let step_idx = ctl.env_steps.fetch_add(1, Ordering::Relaxed);
+        if step_idx >= ctl.max_env_steps {
+            // Un-reserve the overshoot and stop.
+            ctl.env_steps.fetch_sub(1, Ordering::Relaxed);
+            break;
+        }
+        // Weight snapshot only when the server moved (cheap version read).
+        version = server.sync_online(&mut params, version);
+
+        // §Perf: device-resident parameters, re-uploaded on version bumps.
+        let action = agent.act_cached(&params, version, &obs, step_idx, true, rng)?;
+        let step = env.step(&action, rng);
+        ep_return += step.reward;
+
+        // Truncation is not a true terminal: bootstrap through it.
+        let done_flag = step.done && !step.truncated;
+        buffer.insert(&Transition {
+            obs: obs.clone(),
+            action,
+            next_obs: step.obs.clone(),
+            reward: step.reward,
+            done: done_flag,
+        });
+        metrics.inc_env_step();
+
+        if step.done || step.truncated {
+            metrics.record_episode(ep_return);
+            ep_return = 0.0;
+            obs = env.reset(rng);
+        } else {
+            obs = step.obs;
+        }
+    }
+    Ok(())
+}

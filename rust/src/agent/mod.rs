@@ -1,0 +1,417 @@
+//! Per-algorithm agent behaviour: wraps a compiled [`Model`] and knows
+//! how to act (exploration included) and how to run learn steps (which
+//! graphs, in what order, with what auxiliary inputs).
+//!
+//! The framework supports DQN, DDQN, DDPG, TD3 and SAC (paper §V-C); all
+//! five share the Algorithm-1 training loop and differ only here.
+
+use crate::replay::SampleBatch;
+use crate::runtime::Model;
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+
+/// Algorithm family, parsed from the manifest's `algo` field.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AlgoKind {
+    Dqn,
+    Ddqn,
+    Ddpg,
+    Td3,
+    Sac,
+}
+
+impl AlgoKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "dqn" => AlgoKind::Dqn,
+            "ddqn" => AlgoKind::Ddqn,
+            "ddpg" => AlgoKind::Ddpg,
+            "td3" => AlgoKind::Td3,
+            "sac" => AlgoKind::Sac,
+            other => bail!("unknown algorithm `{other}`"),
+        })
+    }
+
+    pub fn discrete(self) -> bool {
+        matches!(self, AlgoKind::Dqn | AlgoKind::Ddqn)
+    }
+
+    /// Default target-network sync policy.
+    pub fn default_target_sync(self) -> crate::params::TargetSync {
+        match self {
+            AlgoKind::Dqn | AlgoKind::Ddqn => crate::params::TargetSync::Hard { every: 500 },
+            _ => crate::params::TargetSync::Polyak { tau: 0.005 },
+        }
+    }
+}
+
+/// Exploration hyper-parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct Exploration {
+    /// ε-greedy schedule (discrete algos): linear from start to end.
+    pub eps_start: f32,
+    pub eps_end: f32,
+    pub eps_decay_steps: usize,
+    /// Gaussian action noise std, in units of act_high (DDPG/TD3).
+    pub action_noise: f32,
+}
+
+impl Default for Exploration {
+    fn default() -> Self {
+        Self { eps_start: 1.0, eps_end: 0.05, eps_decay_steps: 10_000, action_noise: 0.1 }
+    }
+}
+
+impl Exploration {
+    pub fn epsilon(&self, step: usize) -> f32 {
+        if step >= self.eps_decay_steps {
+            return self.eps_end;
+        }
+        let t = step as f32 / self.eps_decay_steps as f32;
+        self.eps_start + t * (self.eps_end - self.eps_start)
+    }
+}
+
+/// One learner-side gradient bundle: element range + flattened grads.
+#[derive(Clone, Debug)]
+pub struct GradUpdate {
+    pub lo: usize,
+    pub hi: usize,
+    pub grads: Vec<f32>,
+}
+
+/// Result of one learn step.
+#[derive(Clone, Debug, Default)]
+pub struct LearnOutput {
+    pub updates: Vec<GradUpdate>,
+    pub td_abs: Vec<f32>,
+    pub loss: f32,
+}
+
+/// An agent bound to one compiled model (thread-local; the model holds
+/// PJRT objects and must not cross threads).
+pub struct Agent {
+    pub model: Model,
+    pub kind: AlgoKind,
+    pub explore: Exploration,
+    /// TD3 delayed policy updates: run learn_actor every `policy_delay`
+    /// critic steps.
+    pub policy_delay: usize,
+    critic_steps: usize,
+    // Reusable input scratch to avoid per-call allocation.
+    noise_buf: Vec<f32>,
+    // §Perf: device-resident parameter buffers for the act graph, keyed
+    // by the parameter-server version — re-uploaded only on version
+    // change instead of every env step.
+    act_param_cache: Vec<xla::PjRtBuffer>,
+    act_cache_version: u64,
+}
+
+impl Agent {
+    pub fn new(model: Model, explore: Exploration) -> Result<Self> {
+        let kind = AlgoKind::parse(&model.info.algo)?;
+        let policy_delay = if kind == AlgoKind::Td3 { 2 } else { 1 };
+        Ok(Self {
+            model,
+            kind,
+            explore,
+            policy_delay,
+            critic_steps: 0,
+            noise_buf: Vec::new(),
+            act_param_cache: Vec::new(),
+            act_cache_version: 0,
+        })
+    }
+
+    /// Convert a manifest grad_slice (param-table indices) into flat
+    /// element offsets.
+    fn elem_range(&self, slice: (usize, usize)) -> (usize, usize) {
+        let ps = &self.model.info.params;
+        let lo = ps[slice.0].offset;
+        let last = &ps[slice.1 - 1];
+        (lo, last.offset + last.size)
+    }
+
+    /// Slice of the flat vector for the named parameter.
+    fn param_by_name<'a>(&self, flat: &'a [f32], name: &str) -> Result<&'a [f32]> {
+        let p = self
+            .model
+            .info
+            .params
+            .iter()
+            .find(|p| p.name == name)
+            .ok_or_else(|| anyhow::anyhow!("unknown parameter `{name}`"))?;
+        Ok(&flat[p.offset..p.offset + p.size])
+    }
+
+    /// Select an action for `obs` using the online weights in `params`.
+    ///
+    /// `env_step` drives the ε schedule; `explore=false` gives the greedy
+    /// / deterministic / mean action for evaluation.
+    pub fn act(
+        &mut self,
+        params: &[f32],
+        obs: &[f32],
+        env_step: usize,
+        explore: bool,
+        rng: &mut Rng,
+    ) -> Result<Vec<f32>> {
+        let info = &self.model.info;
+        // ε-greedy short-circuits the network entirely.
+        if self.kind.discrete() && explore {
+            let eps = self.explore.epsilon(env_step);
+            if rng.chance(eps as f64) {
+                let n = info.n_actions.unwrap_or(2);
+                return Ok(vec![rng.below_usize(n) as f32]);
+            }
+        }
+        let graph = self.model.graph("act")?;
+        // SAC's act graph takes a noise input (zeros = mean action).
+        if self.kind == AlgoKind::Sac {
+            let ad = info.act_dim.unwrap_or(1);
+            self.noise_buf.clear();
+            self.noise_buf.resize(ad, 0.0);
+            if explore {
+                let mut tmp = std::mem::take(&mut self.noise_buf);
+                rng.fill_gaussian(&mut tmp);
+                self.noise_buf = tmp;
+            }
+        }
+        // Assemble inputs by the graph's declared (pruned-precise) names.
+        let mut inputs: Vec<&[f32]> = Vec::with_capacity(graph.arity());
+        for (name, _) in &graph.info.inputs {
+            if let Some(pname) = name.strip_prefix("p:") {
+                inputs.push(self.param_by_name(params, pname)?);
+            } else if name == "obs" {
+                inputs.push(obs);
+            } else if name == "noise" {
+                inputs.push(&self.noise_buf);
+            } else {
+                anyhow::bail!("act graph: unexpected input `{name}`");
+            }
+        }
+        let mut out = graph.run(&inputs)?;
+        let mut action = out.swap_remove(0);
+        // Additive Gaussian exploration noise for deterministic policies.
+        if explore && matches!(self.kind, AlgoKind::Ddpg | AlgoKind::Td3) {
+            let high = info.act_high;
+            for a in action.iter_mut() {
+                *a = (*a + rng.gaussian_f32(0.0, self.explore.action_noise * high))
+                    .clamp(-high, high);
+            }
+        }
+        Ok(action)
+    }
+
+    /// §Perf fast path of [`Agent::act`]: parameters live on the device
+    /// and are re-uploaded only when `version` changes. With the PJRT CPU
+    /// client this removes the per-step parameter upload that dominates
+    /// B=1 inference dispatch.
+    #[allow(clippy::too_many_arguments)]
+    pub fn act_cached(
+        &mut self,
+        params: &[f32],
+        version: u64,
+        obs: &[f32],
+        env_step: usize,
+        explore: bool,
+        rng: &mut Rng,
+    ) -> Result<Vec<f32>> {
+        let info = &self.model.info;
+        if self.kind.discrete() && explore {
+            let eps = self.explore.epsilon(env_step);
+            if rng.chance(eps as f64) {
+                let n = info.n_actions.unwrap_or(2);
+                return Ok(vec![rng.below_usize(n) as f32]);
+            }
+        }
+        // Refresh the device-resident parameter buffers on version bumps.
+        if self.act_cache_version != version || self.act_param_cache.is_empty() {
+            let graph = self.model.graph("act")?;
+            let mut bufs = Vec::new();
+            for (i, (name, _)) in graph.info.inputs.iter().enumerate() {
+                if let Some(pname) = name.strip_prefix("p:") {
+                    let slice = self.param_by_name(params, pname)?;
+                    bufs.push(graph.upload(i, slice)?);
+                }
+            }
+            self.act_param_cache = bufs;
+            self.act_cache_version = version;
+        }
+        if self.kind == AlgoKind::Sac {
+            let ad = info.act_dim.unwrap_or(1);
+            self.noise_buf.clear();
+            self.noise_buf.resize(ad, 0.0);
+            if explore {
+                let mut tmp = std::mem::take(&mut self.noise_buf);
+                rng.fill_gaussian(&mut tmp);
+                self.noise_buf = tmp;
+            }
+        }
+        let graph = self.model.graph("act")?;
+        let mut inputs: Vec<crate::runtime::Input> = Vec::with_capacity(graph.arity());
+        let mut pi = 0usize;
+        for (name, _) in &graph.info.inputs {
+            if name.starts_with("p:") {
+                inputs.push(crate::runtime::Input::Device(&self.act_param_cache[pi]));
+                pi += 1;
+            } else if name == "obs" {
+                inputs.push(crate::runtime::Input::Host(obs));
+            } else if name == "noise" {
+                inputs.push(crate::runtime::Input::Host(&self.noise_buf));
+            } else {
+                anyhow::bail!("act graph: unexpected input `{name}`");
+            }
+        }
+        let mut out = graph.run_mixed(&inputs)?;
+        let mut action = out.swap_remove(0);
+        if explore && matches!(self.kind, AlgoKind::Ddpg | AlgoKind::Td3) {
+            let high = info.act_high;
+            for a in action.iter_mut() {
+                *a = (*a + rng.gaussian_f32(0.0, self.explore.action_noise * high))
+                    .clamp(-high, high);
+            }
+        }
+        Ok(action)
+    }
+
+    /// Run one learn step on a sampled batch. Returns gradient bundles
+    /// (element ranges into the flat vector), |TD| for priority feedback,
+    /// and the scalar loss.
+    pub fn learn(
+        &mut self,
+        params: &[f32],
+        target_params: &[f32],
+        batch: &SampleBatch,
+        rng: &mut Rng,
+    ) -> Result<LearnOutput> {
+        match self.kind {
+            AlgoKind::Dqn | AlgoKind::Ddqn | AlgoKind::Ddpg => {
+                self.run_learn_graph("learn", params, Some(target_params), batch, false, rng)
+            }
+            AlgoKind::Td3 | AlgoKind::Sac => {
+                let mut out = self.run_learn_graph(
+                    "learn_critic",
+                    params,
+                    Some(target_params),
+                    batch,
+                    true,
+                    rng,
+                )?;
+                self.critic_steps += 1;
+                let actor_now = self.critic_steps % self.policy_delay == 0;
+                if actor_now {
+                    let actor = self.run_actor_graph(params, batch, rng)?;
+                    out.updates.extend(actor.updates);
+                    out.loss += actor.loss;
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// Generic learn-graph runner: inputs assembled from the graph's
+    /// declared names (`p:`/`t:` parameter references, batch roles, and
+    /// `noise`).
+    fn run_learn_graph(
+        &mut self,
+        gname: &str,
+        params: &[f32],
+        target_params: Option<&[f32]>,
+        batch: &SampleBatch,
+        wants_noise: bool,
+        rng: &mut Rng,
+    ) -> Result<LearnOutput> {
+        let graph = self.model.graph(gname)?;
+        let slice = graph
+            .info
+            .grad_slice
+            .ok_or_else(|| anyhow::anyhow!("graph {gname} lacks grad_slice"))?;
+        let (elem_lo, elem_hi) = self.elem_range(slice);
+
+        if wants_noise {
+            let n = batch.len() * self.model.info.act_dim.unwrap_or(1);
+            self.noise_buf.clear();
+            self.noise_buf.resize(n, 0.0);
+            let mut tmp = std::mem::take(&mut self.noise_buf);
+            rng.fill_gaussian(&mut tmp);
+            self.noise_buf = tmp;
+        }
+        let mut inputs: Vec<&[f32]> = Vec::with_capacity(graph.arity());
+        for (name, _) in &graph.info.inputs {
+            if let Some(pname) = name.strip_prefix("p:") {
+                inputs.push(self.param_by_name(params, pname)?);
+            } else if let Some(pname) = name.strip_prefix("t:") {
+                let t = target_params
+                    .ok_or_else(|| anyhow::anyhow!("{gname} needs target params"))?;
+                inputs.push(self.param_by_name(t, pname)?);
+            } else {
+                inputs.push(match name.as_str() {
+                    "obs" => &batch.obs,
+                    "action" => &batch.action,
+                    "next_obs" => &batch.next_obs,
+                    "reward" => &batch.reward,
+                    "done" => &batch.done,
+                    "is_weights" => &batch.is_weights,
+                    "noise" => &self.noise_buf,
+                    other => anyhow::bail!("{gname}: unexpected input `{other}`"),
+                });
+            }
+        }
+        let outs = graph.run(&inputs)?;
+        Ok(assemble_learn_output(outs, elem_lo, elem_hi))
+    }
+
+    /// TD3/SAC delayed/auxiliary actor step.
+    fn run_actor_graph(
+        &mut self,
+        params: &[f32],
+        batch: &SampleBatch,
+        rng: &mut Rng,
+    ) -> Result<LearnOutput> {
+        let wants_noise = self.kind == AlgoKind::Sac;
+        let mut out =
+            self.run_learn_graph("learn_actor", params, None, batch, wants_noise, rng)?;
+        out.td_abs.clear(); // actor graphs emit placeholder TDs
+        Ok(out)
+    }
+}
+
+/// Flatten [g0, g1, ..., td_abs, loss] into a LearnOutput.
+fn assemble_learn_output(mut outs: Vec<Vec<f32>>, elem_lo: usize, elem_hi: usize) -> LearnOutput {
+    let loss = outs.pop().map(|l| l[0]).unwrap_or(f32::NAN);
+    let td_abs = outs.pop().unwrap_or_default();
+    let mut grads = Vec::with_capacity(elem_hi - elem_lo);
+    for g in outs {
+        grads.extend_from_slice(&g);
+    }
+    debug_assert_eq!(grads.len(), elem_hi - elem_lo);
+    LearnOutput {
+        updates: vec![GradUpdate { lo: elem_lo, hi: elem_hi, grads }],
+        td_abs,
+        loss,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epsilon_schedule_linear() {
+        let e = Exploration { eps_start: 1.0, eps_end: 0.1, eps_decay_steps: 100, action_noise: 0.1 };
+        assert!((e.epsilon(0) - 1.0).abs() < 1e-6);
+        assert!((e.epsilon(50) - 0.55).abs() < 1e-6);
+        assert!((e.epsilon(100) - 0.1).abs() < 1e-6);
+        assert!((e.epsilon(1000) - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn algo_parse() {
+        assert_eq!(AlgoKind::parse("dqn").unwrap(), AlgoKind::Dqn);
+        assert_eq!(AlgoKind::parse("sac").unwrap(), AlgoKind::Sac);
+        assert!(AlgoKind::parse("ppo").is_err());
+        assert!(AlgoKind::Dqn.discrete());
+        assert!(!AlgoKind::Td3.discrete());
+    }
+}

@@ -1,0 +1,184 @@
+//! Acrobot-v1: swing a two-link pendulum's tip above the bar. Dynamics
+//! per Sutton & Barto / gym's `AcrobotEnv` (book parametrization, RK4).
+
+use super::{ActionSpace, Env, EnvSpec, Step};
+use crate::util::rng::Rng;
+use std::f32::consts::PI;
+
+const DT: f32 = 0.2;
+const L1: f32 = 1.0;
+const M1: f32 = 1.0;
+const M2: f32 = 1.0;
+const LC1: f32 = 0.5;
+const LC2: f32 = 0.5;
+const I1: f32 = 1.0;
+const I2: f32 = 1.0;
+const G: f32 = 9.8;
+const MAX_VEL1: f32 = 4.0 * PI;
+const MAX_VEL2: f32 = 9.0 * PI;
+
+pub struct Acrobot {
+    spec: EnvSpec,
+    s: [f32; 4], // theta1, theta2, dtheta1, dtheta2
+    steps: usize,
+}
+
+impl Acrobot {
+    pub fn new() -> Self {
+        Self {
+            spec: EnvSpec {
+                name: "Acrobot-v1",
+                obs_dim: 6,
+                action_space: ActionSpace::Discrete(3),
+                max_episode_steps: 500,
+                solved_reward: -100.0,
+            },
+            s: [0.0; 4],
+            steps: 0,
+        }
+    }
+
+    fn obs(&self) -> Vec<f32> {
+        let [t1, t2, d1, d2] = self.s;
+        vec![t1.cos(), t1.sin(), t2.cos(), t2.sin(), d1, d2]
+    }
+}
+
+impl Default for Acrobot {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn wrap(x: f32, lo: f32, hi: f32) -> f32 {
+    let range = hi - lo;
+    let mut x = x;
+    while x > hi {
+        x -= range;
+    }
+    while x < lo {
+        x += range;
+    }
+    x
+}
+
+/// Equations of motion (gym `_dsdt`), torque on the second joint.
+fn dsdt(s: [f32; 4], torque: f32) -> [f32; 4] {
+    let [theta1, theta2, dtheta1, dtheta2] = s;
+    let d1 = M1 * LC1 * LC1
+        + M2 * (L1 * L1 + LC2 * LC2 + 2.0 * L1 * LC2 * theta2.cos())
+        + I1
+        + I2;
+    let d2 = M2 * (LC2 * LC2 + L1 * LC2 * theta2.cos()) + I2;
+    let phi2 = M2 * LC2 * G * (theta1 + theta2 - PI / 2.0).cos();
+    let phi1 = -M2 * L1 * LC2 * dtheta2 * dtheta2 * theta2.sin()
+        - 2.0 * M2 * L1 * LC2 * dtheta2 * dtheta1 * theta2.sin()
+        + (M1 * LC1 + M2 * L1) * G * (theta1 - PI / 2.0).cos()
+        + phi2;
+    // Book variant (gym default).
+    let ddtheta2 = (torque + d2 / d1 * phi1
+        - M2 * L1 * LC2 * dtheta1 * dtheta1 * theta2.sin()
+        - phi2)
+        / (M2 * LC2 * LC2 + I2 - d2 * d2 / d1);
+    let ddtheta1 = -(d2 * ddtheta2 + phi1) / d1;
+    [dtheta1, dtheta2, ddtheta1, ddtheta2]
+}
+
+/// One RK4 step of the dynamics.
+fn rk4(s: [f32; 4], torque: f32, dt: f32) -> [f32; 4] {
+    let add = |a: [f32; 4], b: [f32; 4], k: f32| {
+        [a[0] + k * b[0], a[1] + k * b[1], a[2] + k * b[2], a[3] + k * b[3]]
+    };
+    let k1 = dsdt(s, torque);
+    let k2 = dsdt(add(s, k1, dt / 2.0), torque);
+    let k3 = dsdt(add(s, k2, dt / 2.0), torque);
+    let k4 = dsdt(add(s, k3, dt), torque);
+    [
+        s[0] + dt / 6.0 * (k1[0] + 2.0 * k2[0] + 2.0 * k3[0] + k4[0]),
+        s[1] + dt / 6.0 * (k1[1] + 2.0 * k2[1] + 2.0 * k3[1] + k4[1]),
+        s[2] + dt / 6.0 * (k1[2] + 2.0 * k2[2] + 2.0 * k3[2] + k4[2]),
+        s[3] + dt / 6.0 * (k1[3] + 2.0 * k2[3] + 2.0 * k3[3] + k4[3]),
+    ]
+}
+
+impl Env for Acrobot {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn reset(&mut self, rng: &mut Rng) -> Vec<f32> {
+        for v in self.s.iter_mut() {
+            *v = rng.range_f32(-0.1, 0.1);
+        }
+        self.steps = 0;
+        self.obs()
+    }
+
+    fn step(&mut self, action: &[f32], _rng: &mut Rng) -> Step {
+        let torque = action[0].round().clamp(0.0, 2.0) - 1.0; // {-1, 0, +1}
+        let mut ns = rk4(self.s, torque, DT);
+        ns[0] = wrap(ns[0], -PI, PI);
+        ns[1] = wrap(ns[1], -PI, PI);
+        ns[2] = ns[2].clamp(-MAX_VEL1, MAX_VEL1);
+        ns[3] = ns[3].clamp(-MAX_VEL2, MAX_VEL2);
+        self.s = ns;
+        self.steps += 1;
+        let done = -self.s[0].cos() - (self.s[1] + self.s[0]).cos() > 1.0;
+        Step {
+            obs: self.obs(),
+            reward: if done { 0.0 } else { -1.0 },
+            done,
+            truncated: !done && self.steps >= self.spec.max_episode_steps,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hangs_near_rest_without_torque() {
+        let mut env = Acrobot::new();
+        let mut rng = Rng::new(0);
+        env.reset(&mut rng);
+        for _ in 0..100 {
+            let s = env.step(&[1.0], &mut rng); // zero torque
+            assert!(!s.done, "must not solve itself at rest");
+        }
+    }
+
+    #[test]
+    fn energy_pumping_solves_eventually() {
+        let mut env = Acrobot::new();
+        let mut rng = Rng::new(1);
+        env.reset(&mut rng);
+        // Torque with the total angular velocity (energy pumping).
+        let mut done = false;
+        for _ in 0..500 {
+            let a = if env.s[2] + env.s[3] >= 0.0 { 2.0 } else { 0.0 };
+            let s = env.step(&[a], &mut rng);
+            if s.done {
+                done = true;
+                break;
+            }
+        }
+        assert!(done, "energy pumping should raise the tip");
+    }
+
+    #[test]
+    fn velocities_bounded() {
+        let mut env = Acrobot::new();
+        let mut rng = Rng::new(2);
+        env.reset(&mut rng);
+        for i in 0..300 {
+            let a = if i % 7 < 4 { 2.0 } else { 0.0 };
+            let s = env.step(&[a], &mut rng);
+            assert!(env.s[2].abs() <= MAX_VEL1 + 1e-4);
+            assert!(env.s[3].abs() <= MAX_VEL2 + 1e-4);
+            if s.done || s.truncated {
+                env.reset(&mut rng);
+            }
+        }
+    }
+}

@@ -1,0 +1,135 @@
+//! CartPole-v1: balance a pole on a cart (Barto, Sutton & Anderson 1983),
+//! dynamics and constants identical to `gym.envs.classic_control.CartPoleEnv`.
+
+use super::{ActionSpace, Env, EnvSpec, Step};
+use crate::util::rng::Rng;
+
+const GRAVITY: f32 = 9.8;
+const MASS_CART: f32 = 1.0;
+const MASS_POLE: f32 = 0.1;
+const TOTAL_MASS: f32 = MASS_CART + MASS_POLE;
+const LENGTH: f32 = 0.5; // half pole length
+const POLE_MASS_LENGTH: f32 = MASS_POLE * LENGTH;
+const FORCE_MAG: f32 = 10.0;
+const TAU: f32 = 0.02; // seconds per step
+const THETA_LIMIT: f32 = 12.0 * std::f32::consts::PI / 180.0;
+const X_LIMIT: f32 = 2.4;
+
+pub struct CartPole {
+    spec: EnvSpec,
+    state: [f32; 4], // x, x_dot, theta, theta_dot
+    steps: usize,
+}
+
+impl CartPole {
+    pub fn new() -> Self {
+        Self {
+            spec: EnvSpec {
+                name: "CartPole-v1",
+                obs_dim: 4,
+                action_space: ActionSpace::Discrete(2),
+                max_episode_steps: 500,
+                solved_reward: 475.0,
+            },
+            state: [0.0; 4],
+            steps: 0,
+        }
+    }
+}
+
+impl Default for CartPole {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Env for CartPole {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn reset(&mut self, rng: &mut Rng) -> Vec<f32> {
+        for v in self.state.iter_mut() {
+            *v = rng.range_f32(-0.05, 0.05);
+        }
+        self.steps = 0;
+        self.state.to_vec()
+    }
+
+    fn step(&mut self, action: &[f32], _rng: &mut Rng) -> Step {
+        let force = if action[0] >= 0.5 { FORCE_MAG } else { -FORCE_MAG };
+        let [x, x_dot, theta, theta_dot] = self.state;
+        let (sin_t, cos_t) = theta.sin_cos();
+        let temp = (force + POLE_MASS_LENGTH * theta_dot * theta_dot * sin_t) / TOTAL_MASS;
+        let theta_acc = (GRAVITY * sin_t - cos_t * temp)
+            / (LENGTH * (4.0 / 3.0 - MASS_POLE * cos_t * cos_t / TOTAL_MASS));
+        let x_acc = temp - POLE_MASS_LENGTH * theta_acc * cos_t / TOTAL_MASS;
+        // Euler integration, gym order.
+        self.state = [
+            x + TAU * x_dot,
+            x_dot + TAU * x_acc,
+            theta + TAU * theta_dot,
+            theta_dot + TAU * theta_acc,
+        ];
+        self.steps += 1;
+        let done = self.state[0].abs() > X_LIMIT || self.state[2].abs() > THETA_LIMIT;
+        let truncated = !done && self.steps >= self.spec.max_episode_steps;
+        Step {
+            obs: self.state.to_vec(),
+            reward: 1.0,
+            done,
+            truncated,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pole_falls_under_constant_push() {
+        let mut env = CartPole::new();
+        let mut rng = Rng::new(0);
+        env.reset(&mut rng);
+        let mut steps = 0;
+        loop {
+            let s = env.step(&[1.0], &mut rng);
+            steps += 1;
+            if s.done {
+                break;
+            }
+            assert!(steps < 200, "constant push should topple the pole");
+        }
+        assert!(steps > 5, "shouldn't topple instantly");
+    }
+
+    #[test]
+    fn alternating_policy_survives_longer_than_constant() {
+        let mut env = CartPole::new();
+        let mut rng = Rng::new(1);
+        // Simple reactive policy: push in the direction the pole leans.
+        env.reset(&mut rng);
+        let mut obs = env.state.to_vec();
+        let mut steps = 0;
+        loop {
+            let a = if obs[2] > 0.0 { 1.0 } else { 0.0 };
+            let s = env.step(&[a], &mut rng);
+            obs = s.obs;
+            steps += 1;
+            if s.done || s.truncated {
+                break;
+            }
+        }
+        assert!(steps > 25, "reactive policy too weak: {steps}");
+    }
+
+    #[test]
+    fn reward_is_one_per_step() {
+        let mut env = CartPole::new();
+        let mut rng = Rng::new(2);
+        env.reset(&mut rng);
+        let s = env.step(&[0.0], &mut rng);
+        assert_eq!(s.reward, 1.0);
+    }
+}

@@ -1,0 +1,193 @@
+//! Environment simulators with OpenAI-gym semantics (paper §II-A).
+//!
+//! The paper evaluates on gym benchmarks (LunarLander-v2 etc.). Python
+//! cannot be on the request path, so the environments are pure-Rust
+//! re-implementations of the classic-control dynamics, plus a 2-D
+//! thruster lander (`lunar_lander`, our LunarLander-v2 substitute) and a
+//! synthetic `RandomMDP` whose per-step cost is tunable — used by the
+//! throughput benches to sweep the actor/learner balance (Fig 12).
+
+pub mod acrobot;
+pub mod cartpole;
+pub mod lunar_lander;
+pub mod mountain_car;
+pub mod pendulum;
+pub mod random_mdp;
+
+pub use acrobot::Acrobot;
+pub use cartpole::CartPole;
+pub use lunar_lander::LunarLanderLite;
+pub use mountain_car::{MountainCar, MountainCarContinuous};
+pub use pendulum::Pendulum;
+pub use random_mdp::RandomMdp;
+
+use crate::util::rng::Rng;
+
+/// Action space of an environment.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ActionSpace {
+    /// `n` discrete actions, encoded as `[index as f32]`.
+    Discrete(usize),
+    /// Box action in `[low, high]^dim`.
+    Continuous { dim: usize, low: f32, high: f32 },
+}
+
+impl ActionSpace {
+    /// Width of the flat action vector stored in the replay buffer.
+    pub fn flat_dim(&self) -> usize {
+        match self {
+            ActionSpace::Discrete(_) => 1,
+            ActionSpace::Continuous { dim, .. } => *dim,
+        }
+    }
+
+    pub fn is_discrete(&self) -> bool {
+        matches!(self, ActionSpace::Discrete(_))
+    }
+}
+
+/// Static description of an environment.
+#[derive(Clone, Debug)]
+pub struct EnvSpec {
+    pub name: &'static str,
+    pub obs_dim: usize,
+    pub action_space: ActionSpace,
+    /// Episode truncation horizon (gym `TimeLimit`).
+    pub max_episode_steps: usize,
+    /// Reward at which the task counts as solved (for convergence tests).
+    pub solved_reward: f32,
+}
+
+/// Result of one `step`.
+#[derive(Clone, Debug)]
+pub struct Step {
+    pub obs: Vec<f32>,
+    pub reward: f32,
+    /// Terminal state reached (environment semantics).
+    pub done: bool,
+    /// Horizon hit (truncation — not a true terminal; the learner must
+    /// still bootstrap).
+    pub truncated: bool,
+}
+
+/// Gym-style environment: `reset` + `step` (paper §II-A API).
+pub trait Env: Send {
+    fn spec(&self) -> &EnvSpec;
+
+    /// Sample an initial state from μ and return the first observation.
+    fn reset(&mut self, rng: &mut Rng) -> Vec<f32>;
+
+    /// Advance one step. `action` is the flat encoding described by
+    /// [`ActionSpec::flat_dim`]. Does NOT auto-reset; the actor loop
+    /// calls `reset` when `done || truncated`.
+    fn step(&mut self, action: &[f32], rng: &mut Rng) -> Step;
+}
+
+/// Instantiate an environment by name.
+///
+/// Names mirror their gym counterparts where one exists.
+pub fn make_env(name: &str) -> Option<Box<dyn Env>> {
+    Some(match name {
+        "CartPole-v1" | "cartpole" => Box::new(CartPole::new()),
+        "Pendulum-v1" | "pendulum" => Box::new(Pendulum::new()),
+        "MountainCar-v0" | "mountain_car" => Box::new(MountainCar::new()),
+        "MountainCarContinuous-v0" | "mountain_car_continuous" => {
+            Box::new(MountainCarContinuous::new())
+        }
+        "Acrobot-v1" | "acrobot" => Box::new(Acrobot::new()),
+        "LunarLanderLite-v0" | "lunar_lander" => Box::new(LunarLanderLite::new()),
+        "RandomMDP-v0" | "random_mdp" => Box::new(RandomMdp::new(16, 4, 0)),
+        _ => return None,
+    })
+}
+
+/// All registered environment names (docs, CLI help, tests).
+pub const ENV_NAMES: &[&str] = &[
+    "CartPole-v1",
+    "Pendulum-v1",
+    "MountainCar-v0",
+    "MountainCarContinuous-v0",
+    "Acrobot-v1",
+    "LunarLanderLite-v0",
+    "RandomMDP-v0",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Generic conformance suite every environment must pass.
+    fn conformance(mut env: Box<dyn Env>) {
+        let name = env.spec().name;
+        let spec = env.spec().clone();
+        let mut rng = Rng::new(42);
+        let obs = env.reset(&mut rng);
+        assert_eq!(obs.len(), spec.obs_dim, "{name}: obs dim");
+        assert!(obs.iter().all(|v| v.is_finite()), "{name}: finite obs");
+
+        let action = match &spec.action_space {
+            ActionSpace::Discrete(_) => vec![0.0],
+            ActionSpace::Continuous { dim, low, high } => vec![(low + high) / 2.0; *dim],
+        };
+        let mut steps = 0usize;
+        let mut episodes = 0usize;
+        let mut total_reward = 0.0f32;
+        let mut obs = obs;
+        while steps < 3 * spec.max_episode_steps && episodes < 5 {
+            let s = env.step(&action, &mut rng);
+            assert_eq!(s.obs.len(), spec.obs_dim, "{name}");
+            assert!(s.obs.iter().all(|v| v.is_finite()), "{name}: finite step obs");
+            assert!(s.reward.is_finite(), "{name}: finite reward");
+            total_reward += s.reward;
+            steps += 1;
+            if s.done || s.truncated {
+                episodes += 1;
+                obs = env.reset(&mut rng);
+            } else {
+                obs = s.obs;
+            }
+        }
+        let _ = (obs, total_reward);
+        assert!(episodes >= 1, "{name}: never terminated in {steps} steps");
+    }
+
+    #[test]
+    fn all_envs_conform() {
+        for name in ENV_NAMES {
+            conformance(make_env(name).unwrap());
+        }
+    }
+
+    #[test]
+    fn unknown_env_is_none() {
+        assert!(make_env("Atari-Breakout").is_none());
+    }
+
+    #[test]
+    fn determinism_given_seed() {
+        for name in ENV_NAMES {
+            let run = |seed: u64| {
+                let mut env = make_env(name).unwrap();
+                let mut rng = Rng::new(seed);
+                let mut trace = Vec::new();
+                let mut obs = env.reset(&mut rng);
+                trace.extend(obs.iter().copied());
+                let act = match &env.spec().action_space {
+                    ActionSpace::Discrete(n) => vec![(n - 1) as f32],
+                    ActionSpace::Continuous { dim, high, .. } => vec![*high; *dim],
+                };
+                for _ in 0..50 {
+                    let s = env.step(&act, &mut rng);
+                    trace.push(s.reward);
+                    if s.done || s.truncated {
+                        obs = env.reset(&mut rng);
+                        trace.extend(obs.iter().copied());
+                    }
+                }
+                trace
+            };
+            assert_eq!(run(7), run(7), "{name} not deterministic");
+            // And different seeds give different traces for stochastic envs.
+        }
+    }
+}

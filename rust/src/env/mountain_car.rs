@@ -1,0 +1,205 @@
+//! MountainCar-v0 (discrete) and MountainCarContinuous-v0, dynamics
+//! identical to the gym classic-control implementations.
+
+use super::{ActionSpace, Env, EnvSpec, Step};
+use crate::util::rng::Rng;
+
+const MIN_POS: f32 = -1.2;
+const MAX_POS: f32 = 0.6;
+const MAX_SPEED: f32 = 0.07;
+const GOAL_POS: f32 = 0.5;
+const FORCE: f32 = 0.001;
+const GRAVITY: f32 = 0.0025;
+
+pub struct MountainCar {
+    spec: EnvSpec,
+    pos: f32,
+    vel: f32,
+    steps: usize,
+}
+
+impl MountainCar {
+    pub fn new() -> Self {
+        Self {
+            spec: EnvSpec {
+                name: "MountainCar-v0",
+                obs_dim: 2,
+                action_space: ActionSpace::Discrete(3),
+                max_episode_steps: 200,
+                solved_reward: -110.0,
+            },
+            pos: 0.0,
+            vel: 0.0,
+            steps: 0,
+        }
+    }
+}
+
+impl Default for MountainCar {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Env for MountainCar {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn reset(&mut self, rng: &mut Rng) -> Vec<f32> {
+        self.pos = rng.range_f32(-0.6, -0.4);
+        self.vel = 0.0;
+        self.steps = 0;
+        vec![self.pos, self.vel]
+    }
+
+    fn step(&mut self, action: &[f32], _rng: &mut Rng) -> Step {
+        let a = action[0].round().clamp(0.0, 2.0) as i32;
+        self.vel += (a - 1) as f32 * FORCE + (3.0 * self.pos).cos() * (-GRAVITY);
+        self.vel = self.vel.clamp(-MAX_SPEED, MAX_SPEED);
+        self.pos = (self.pos + self.vel).clamp(MIN_POS, MAX_POS);
+        if self.pos <= MIN_POS && self.vel < 0.0 {
+            self.vel = 0.0;
+        }
+        self.steps += 1;
+        let done = self.pos >= GOAL_POS;
+        Step {
+            obs: vec![self.pos, self.vel],
+            reward: -1.0,
+            done,
+            truncated: !done && self.steps >= self.spec.max_episode_steps,
+        }
+    }
+}
+
+const C_POWER: f32 = 0.0015;
+
+pub struct MountainCarContinuous {
+    spec: EnvSpec,
+    pos: f32,
+    vel: f32,
+    steps: usize,
+}
+
+impl MountainCarContinuous {
+    pub fn new() -> Self {
+        Self {
+            spec: EnvSpec {
+                name: "MountainCarContinuous-v0",
+                obs_dim: 2,
+                action_space: ActionSpace::Continuous { dim: 1, low: -1.0, high: 1.0 },
+                max_episode_steps: 999,
+                solved_reward: 90.0,
+            },
+            pos: 0.0,
+            vel: 0.0,
+            steps: 0,
+        }
+    }
+}
+
+impl Default for MountainCarContinuous {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Env for MountainCarContinuous {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn reset(&mut self, rng: &mut Rng) -> Vec<f32> {
+        self.pos = rng.range_f32(-0.6, -0.4);
+        self.vel = 0.0;
+        self.steps = 0;
+        vec![self.pos, self.vel]
+    }
+
+    fn step(&mut self, action: &[f32], _rng: &mut Rng) -> Step {
+        let force = action[0].clamp(-1.0, 1.0);
+        self.vel += force * C_POWER - 0.0025 * (3.0 * self.pos).cos();
+        self.vel = self.vel.clamp(-MAX_SPEED, MAX_SPEED);
+        self.pos = (self.pos + self.vel).clamp(MIN_POS, MAX_POS);
+        if self.pos <= MIN_POS && self.vel < 0.0 {
+            self.vel = 0.0;
+        }
+        self.steps += 1;
+        let done = self.pos >= 0.45; // gym's continuous goal
+        let reward = if done { 100.0 } else { -0.1 * force * force };
+        Step {
+            obs: vec![self.pos, self.vel],
+            reward,
+            done,
+            truncated: !done && self.steps >= self.spec.max_episode_steps,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stationary_policy_never_reaches_goal() {
+        let mut env = MountainCar::new();
+        let mut rng = Rng::new(0);
+        env.reset(&mut rng);
+        for _ in 0..200 {
+            let s = env.step(&[1.0], &mut rng); // no-op action
+            assert!(!s.done);
+            if s.truncated {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn bang_bang_policy_reaches_goal() {
+        // Oscillation pumping: push in the direction of velocity.
+        let mut env = MountainCar::new();
+        let mut rng = Rng::new(1);
+        env.reset(&mut rng);
+        let mut done = false;
+        for _ in 0..200 {
+            let a = if env.vel >= 0.0 { 2.0 } else { 0.0 };
+            let s = env.step(&[a], &mut rng);
+            if s.done {
+                done = true;
+                break;
+            }
+        }
+        assert!(done, "bang-bang should solve MountainCar");
+    }
+
+    #[test]
+    fn continuous_goal_pays_bonus() {
+        let mut env = MountainCarContinuous::new();
+        let mut rng = Rng::new(2);
+        env.reset(&mut rng);
+        let mut total = 0.0;
+        let mut done = false;
+        for _ in 0..999 {
+            let a = if env.vel >= 0.0 { 1.0 } else { -1.0 };
+            let s = env.step(&[a], &mut rng);
+            total += s.reward;
+            if s.done {
+                done = true;
+                break;
+            }
+        }
+        assert!(done);
+        assert!(total > 60.0, "total {total}");
+    }
+
+    #[test]
+    fn position_clamped_at_left_wall() {
+        let mut env = MountainCar::new();
+        let mut rng = Rng::new(3);
+        env.reset(&mut rng);
+        for _ in 0..300 {
+            env.step(&[0.0], &mut rng); // push left forever
+            assert!(env.pos >= MIN_POS);
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! Pendulum-v1: swing up and hold an underactuated pendulum. Dynamics and
+//! constants identical to `gym.envs.classic_control.PendulumEnv`.
+
+use super::{ActionSpace, Env, EnvSpec, Step};
+use crate::util::rng::Rng;
+use std::f32::consts::PI;
+
+const MAX_SPEED: f32 = 8.0;
+const MAX_TORQUE: f32 = 2.0;
+const DT: f32 = 0.05;
+const G: f32 = 10.0;
+const M: f32 = 1.0;
+const L: f32 = 1.0;
+
+pub struct Pendulum {
+    spec: EnvSpec,
+    theta: f32,
+    theta_dot: f32,
+    steps: usize,
+}
+
+impl Pendulum {
+    pub fn new() -> Self {
+        Self {
+            spec: EnvSpec {
+                name: "Pendulum-v1",
+                obs_dim: 3,
+                action_space: ActionSpace::Continuous {
+                    dim: 1,
+                    low: -MAX_TORQUE,
+                    high: MAX_TORQUE,
+                },
+                max_episode_steps: 200,
+                // Gym has no "solved" threshold; ≥ -250 avg is good policy.
+                solved_reward: -250.0,
+            },
+            theta: 0.0,
+            theta_dot: 0.0,
+            steps: 0,
+        }
+    }
+
+    fn obs(&self) -> Vec<f32> {
+        vec![self.theta.cos(), self.theta.sin(), self.theta_dot]
+    }
+}
+
+impl Default for Pendulum {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn angle_normalize(x: f32) -> f32 {
+    let two_pi = 2.0 * PI;
+    ((x + PI).rem_euclid(two_pi)) - PI
+}
+
+impl Env for Pendulum {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn reset(&mut self, rng: &mut Rng) -> Vec<f32> {
+        self.theta = rng.range_f32(-PI, PI);
+        self.theta_dot = rng.range_f32(-1.0, 1.0);
+        self.steps = 0;
+        self.obs()
+    }
+
+    fn step(&mut self, action: &[f32], _rng: &mut Rng) -> Step {
+        let u = action[0].clamp(-MAX_TORQUE, MAX_TORQUE);
+        let th = self.theta;
+        let thdot = self.theta_dot;
+        let cost = angle_normalize(th).powi(2) + 0.1 * thdot * thdot + 0.001 * u * u;
+        let new_thdot = (thdot
+            + (3.0 * G / (2.0 * L) * th.sin() + 3.0 / (M * L * L) * u) * DT)
+            .clamp(-MAX_SPEED, MAX_SPEED);
+        self.theta = th + new_thdot * DT;
+        self.theta_dot = new_thdot;
+        self.steps += 1;
+        Step {
+            obs: self.obs(),
+            reward: -cost,
+            done: false, // pendulum never terminates
+            truncated: self.steps >= self.spec.max_episode_steps,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reward_bounded_and_negative() {
+        let mut env = Pendulum::new();
+        let mut rng = Rng::new(3);
+        env.reset(&mut rng);
+        for _ in 0..100 {
+            let s = env.step(&[rng.range_f32(-2.0, 2.0)], &mut rng);
+            assert!(s.reward <= 0.0);
+            assert!(s.reward >= -17.0); // gym's documented bound ≈ -16.27
+            if s.truncated {
+                env.reset(&mut rng);
+            }
+        }
+    }
+
+    #[test]
+    fn upright_no_torque_is_near_zero_cost() {
+        let mut env = Pendulum::new();
+        let mut rng = Rng::new(4);
+        env.reset(&mut rng);
+        env.theta = 0.0;
+        env.theta_dot = 0.0;
+        let s = env.step(&[0.0], &mut rng);
+        assert!(s.reward > -0.01, "{}", s.reward);
+    }
+
+    #[test]
+    fn velocity_clamped() {
+        let mut env = Pendulum::new();
+        let mut rng = Rng::new(5);
+        env.reset(&mut rng);
+        for _ in 0..400 {
+            env.step(&[MAX_TORQUE], &mut rng);
+            assert!(env.theta_dot.abs() <= MAX_SPEED + 1e-5);
+        }
+    }
+
+    #[test]
+    fn obs_is_unit_circle_plus_velocity() {
+        let mut env = Pendulum::new();
+        let mut rng = Rng::new(6);
+        let obs = env.reset(&mut rng);
+        let norm = obs[0] * obs[0] + obs[1] * obs[1];
+        assert!((norm - 1.0).abs() < 1e-5);
+    }
+}

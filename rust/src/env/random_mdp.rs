@@ -1,0 +1,134 @@
+//! RandomMDP-v0 — synthetic tabular-ish MDP with a tunable per-step
+//! compute cost.
+//!
+//! Used by the throughput benches: the paper's framework inputs are "the
+//! throughput of data collection vs cores" (§V-C), which depends on the
+//! simulator's step cost. `RandomMdp` lets the benches sweep that cost
+//! (`busy_work_iters`) to reproduce the Fig 12 profiles for fast and slow
+//! simulators alike.
+
+use super::{ActionSpace, Env, EnvSpec, Step};
+use crate::util::rng::Rng;
+
+pub struct RandomMdp {
+    spec: EnvSpec,
+    n_states: usize,
+    state: usize,
+    steps: usize,
+    /// Extra floating-point work per step (simulator cost knob).
+    busy_work_iters: usize,
+    sink: f32,
+}
+
+impl RandomMdp {
+    /// `n_states` tabular states observed as a one-hot-ish dense vector of
+    /// dimension min(n_states, 16); `n_actions` discrete actions.
+    pub fn new(n_states: usize, n_actions: usize, busy_work_iters: usize) -> Self {
+        assert!(n_states >= 2 && n_actions >= 2);
+        let obs_dim = n_states.min(16);
+        Self {
+            spec: EnvSpec {
+                name: "RandomMDP-v0",
+                obs_dim,
+                action_space: ActionSpace::Discrete(n_actions),
+                max_episode_steps: 128,
+                solved_reward: f32::INFINITY, // no notion of solved
+            },
+            n_states,
+            state: 0,
+            steps: 0,
+            busy_work_iters,
+            sink: 0.0,
+        }
+    }
+
+    fn obs(&self) -> Vec<f32> {
+        let mut o = vec![0.0; self.spec.obs_dim];
+        o[self.state % self.spec.obs_dim] = 1.0;
+        o[(self.state / self.spec.obs_dim) % self.spec.obs_dim] += 0.5;
+        o
+    }
+}
+
+impl Env for RandomMdp {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn reset(&mut self, rng: &mut Rng) -> Vec<f32> {
+        self.state = rng.below_usize(self.n_states);
+        self.steps = 0;
+        self.obs()
+    }
+
+    fn step(&mut self, action: &[f32], rng: &mut Rng) -> Step {
+        // Tunable simulator cost.
+        let mut acc = self.sink;
+        for i in 0..self.busy_work_iters {
+            acc += ((i as f32) * 1.001 + acc).sin();
+        }
+        self.sink = acc * 1e-30;
+
+        let a = action[0] as usize;
+        self.state = (self.state
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(a + 1)
+            ^ rng.below_usize(4))
+            % self.n_states;
+        self.steps += 1;
+        let reward = ((self.state % 7) as f32 - 3.0) / 3.0 + self.sink;
+        let done = self.state == 0;
+        Step {
+            obs: self.obs(),
+            reward,
+            done,
+            truncated: !done && self.steps >= self.spec.max_episode_steps,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn episodes_terminate() {
+        let mut env = RandomMdp::new(16, 4, 0);
+        let mut rng = Rng::new(0);
+        env.reset(&mut rng);
+        let mut endings = 0;
+        for _ in 0..2000 {
+            let s = env.step(&[rng.below_usize(4) as f32], &mut rng);
+            if s.done || s.truncated {
+                endings += 1;
+                env.reset(&mut rng);
+            }
+        }
+        assert!(endings > 5);
+    }
+
+    #[test]
+    fn busy_work_scales_cost() {
+        use std::time::Instant;
+        let mut rng = Rng::new(1);
+        let mut cheap = RandomMdp::new(16, 4, 0);
+        let mut costly = RandomMdp::new(16, 4, 20_000);
+        cheap.reset(&mut rng);
+        costly.reset(&mut rng);
+        let t0 = Instant::now();
+        for _ in 0..200 {
+            if cheap.step(&[0.0], &mut rng).done {
+                cheap.reset(&mut rng);
+            }
+        }
+        let cheap_t = t0.elapsed();
+        let t1 = Instant::now();
+        for _ in 0..200 {
+            if costly.step(&[0.0], &mut rng).done {
+                costly.reset(&mut rng);
+            }
+        }
+        let costly_t = t1.elapsed();
+        assert!(costly_t > cheap_t * 3, "{cheap_t:?} vs {costly_t:?}");
+    }
+}

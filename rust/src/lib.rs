@@ -1,0 +1,31 @@
+//! # Parallel Actors and Learners (PAL)
+//!
+//! Reproduction of "Parallel Actors and Learners: A Framework for
+//! Generating Scalable RL Implementations" (Zhang, Kuppannagari &
+//! Prasanna, 2021) as a three-layer rust + JAX/Pallas system:
+//!
+//! * [`replay`] — the paper's core contribution: a K-ary sum-tree
+//!   prioritized replay buffer with cache-aligned layout, lazy writing
+//!   and two-lock synchronization, plus every baseline it is compared
+//!   against.
+//! * [`coordinator`] — parallel actors + parallel learners + parameter
+//!   server training loop (Fig 7).
+//! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
+//!   graphs (`python/compile/`, built once by `make artifacts`).
+//! * [`env`] — pure-Rust OpenAI-gym-semantics environments.
+//! * [`dse`] — design-space exploration (Eq. 5): choose actor/learner
+//!   core counts from profiled throughput curves.
+//! * [`sim`] — discrete-event multicore simulator used to project
+//!   scalability beyond this machine's core count.
+pub mod actor;
+pub mod agent;
+pub mod coordinator;
+pub mod dse;
+pub mod env;
+pub mod learner;
+pub mod metrics;
+pub mod params;
+pub mod replay;
+pub mod runtime;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,249 @@
+//! `pal` — launcher for the Parallel Actors and Learners framework.
+//!
+//! Subcommands:
+//!   train         run one training session (the paper's Fig 7 pipeline)
+//!   dse           design-space exploration: pick actor/learner core split
+//!   buffer-bench  quick replay-buffer micro-benchmark
+//!   envs          list built-in environments
+//!   info          show manifest contents
+
+use anyhow::{anyhow, bail, Result};
+use pal_rl::coordinator::{train, BufferKind, TrainConfig};
+use pal_rl::dse;
+use pal_rl::env::ENV_NAMES;
+use pal_rl::runtime::Manifest;
+use pal_rl::util::cli::Args;
+
+const TRAIN_FLAGS: &[&str] = &[
+    "algo", "env", "artifacts", "actors", "learners", "steps", "warmup",
+    "update-interval", "buffer", "capacity", "fanout", "alpha", "beta", "lr",
+    "grad-clip", "aggregation", "seed", "stop-at-reward", "log-every",
+    "curve-out", "eps-decay", "action-noise", "save-checkpoint",
+];
+
+fn usage() -> ! {
+    eprintln!(
+        "pal — Parallel Actors and Learners
+
+USAGE:
+  pal train --algo <dqn|ddqn|ddpg|td3|sac> --env <ENV> [options]
+  pal dse   --algo <A> --env <E> [--cores M] [--update-interval R]
+  pal buffer-bench [--capacity N] [--fanout K] [--threads T] [--ops N]
+  pal envs
+  pal info  [--artifacts DIR]
+
+TRAIN OPTIONS:
+  --actors N          parallel actors (default 1)
+  --learners N        parallel learners (default 1)
+  --steps N           total env steps (default 20000)
+  --warmup N          env steps before learning starts (default 1000)
+  --update-interval R env-steps per learn-step ratio (default 1.0)
+  --buffer KIND       pal | baseline | uniform | emulated-python | emulated-binding
+  --capacity N        replay capacity (default 100000)
+  --fanout K          sum-tree fan-out (default 64)
+  --alpha A --beta B  PER exponents (default 0.6 / 0.4)
+  --lr LR             Adam learning rate (default 1e-3)
+  --aggregation K     sub-gradients per optimizer step (default 1)
+  --seed S            PRNG seed
+  --stop-at-reward R  early-stop at mean return R
+  --log-every SECS    progress line interval (default 5)
+  --curve-out FILE    write training curve CSV
+  --eps-decay N       epsilon decay steps (DQN-family)
+  --action-noise S    exploration noise std (DDPG/TD3)
+  --save-checkpoint F write final weights (params::Checkpoint format)
+"
+    );
+    std::process::exit(2)
+}
+
+fn train_config_from(a: &Args) -> Result<TrainConfig> {
+    a.check_known(TRAIN_FLAGS)?;
+    let algo = a.get("algo").ok_or_else(|| anyhow!("--algo required"))?;
+    let env = a.get("env").ok_or_else(|| anyhow!("--env required"))?;
+    let mut cfg = TrainConfig::new(algo, env);
+    cfg.artifact_dir = a.str_or("artifacts", "artifacts").into();
+    cfg.actors = a.parse_or("actors", cfg.actors)?;
+    cfg.learners = a.parse_or("learners", cfg.learners)?;
+    cfg.total_env_steps = a.parse_or("steps", cfg.total_env_steps)?;
+    cfg.warmup_steps = a.parse_or("warmup", cfg.warmup_steps)?;
+    cfg.update_interval = a.parse_or("update-interval", cfg.update_interval)?;
+    cfg.buffer = BufferKind::parse(&a.str_or("buffer", "pal"))?;
+    cfg.buffer_capacity = a.parse_or("capacity", cfg.buffer_capacity)?;
+    cfg.fanout = a.parse_or("fanout", cfg.fanout)?;
+    cfg.alpha = a.parse_or("alpha", cfg.alpha)?;
+    cfg.beta = a.parse_or("beta", cfg.beta)?;
+    cfg.lr = a.parse_or("lr", cfg.lr)?;
+    cfg.grad_clip = a.parse_or("grad-clip", cfg.grad_clip)?;
+    cfg.aggregation = a.parse_or("aggregation", cfg.aggregation)?;
+    cfg.seed = a.parse_or("seed", cfg.seed)?;
+    cfg.exploration.eps_decay_steps = a.parse_or("eps-decay", cfg.exploration.eps_decay_steps)?;
+    cfg.exploration.action_noise = a.parse_or("action-noise", cfg.exploration.action_noise)?;
+    if let Some(r) = a.get("stop-at-reward") {
+        cfg.stop_at_reward = Some(r.parse().map_err(|_| anyhow!("bad --stop-at-reward"))?);
+    }
+    cfg.log_every_secs = a.parse_or("log-every", 5.0)?;
+    Ok(cfg)
+}
+
+fn cmd_train(a: &Args) -> Result<()> {
+    let cfg = train_config_from(a)?;
+    eprintln!(
+        "[pal] training {} on {} — {} actors, {} learners, buffer={:?}",
+        cfg.algo, cfg.env, cfg.actors, cfg.learners, cfg.buffer
+    );
+    let report = train(&cfg)?;
+    println!(
+        "done: {} env steps, {} learn steps, {} episodes in {:.1}s \
+         ({:.0} env/s, {:.0} learn/s), mean return {:.2}{}",
+        report.env_steps,
+        report.learn_steps,
+        report.episodes,
+        report.elapsed_secs,
+        report.env_steps_per_sec,
+        report.learn_steps_per_sec,
+        report.final_mean_return,
+        if report.reached_target { " [target reached]" } else { "" },
+    );
+    if let Some(path) = a.get("save-checkpoint") {
+        pal_rl::params::Checkpoint {
+            online: report.final_weights.clone(),
+            target: report.final_target_weights.clone(),
+            opt_steps: report.opt_steps as u64,
+        }
+        .save(path)?;
+        eprintln!("[pal] checkpoint written to {path}");
+    }
+    if let Some(path) = a.get("curve-out") {
+        let mut csv = String::from("wall_secs,env_steps,learn_steps,episode_return,loss_ema\n");
+        for p in &report.curve {
+            csv.push_str(&format!(
+                "{:.3},{},{},{},{}\n",
+                p.wall_secs, p.env_steps, p.learn_steps, p.episode_return, p.loss_ema
+            ));
+        }
+        std::fs::write(path, csv)?;
+        eprintln!("[pal] curve written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_envs() {
+    println!("built-in environments:");
+    for e in ENV_NAMES {
+        let env = pal_rl::env::make_env(e).unwrap();
+        let spec = env.spec();
+        println!(
+            "  {:28} obs_dim={:2} actions={:?} horizon={}",
+            spec.name, spec.obs_dim, spec.action_space, spec.max_episode_steps
+        );
+    }
+}
+
+fn cmd_info(a: &Args) -> Result<()> {
+    let dir = a.str_or("artifacts", "artifacts");
+    let m = Manifest::load(&dir)?;
+    println!("manifest at {dir}: {} artifacts", m.artifacts.len());
+    for info in m.artifacts.values() {
+        println!(
+            "  {:32} params={:7} graphs=[{}]",
+            info.id,
+            info.total_param_size,
+            info.graphs.keys().cloned().collect::<Vec<_>>().join(", ")
+        );
+    }
+    Ok(())
+}
+
+fn cmd_buffer_bench(a: &Args) -> Result<()> {
+    use pal_rl::replay::*;
+    use pal_rl::util::rng::Rng;
+    use std::sync::Arc;
+    let capacity: usize = a.parse_or("capacity", 100_000)?;
+    let fanout: usize = a.parse_or("fanout", 64)?;
+    let threads: usize = a.parse_or("threads", 4)?;
+    let ops: usize = a.parse_or("ops", 100_000)?;
+    let buf = Arc::new(PrioritizedReplay::new(PrioritizedConfig {
+        capacity,
+        obs_dim: 8,
+        act_dim: 2,
+        fanout,
+        alpha: 0.6,
+        beta: 0.4,
+        lazy_writing: true,
+    }));
+    let t = Transition {
+        obs: vec![0.5; 8],
+        action: vec![0.1; 2],
+        next_obs: vec![0.6; 8],
+        reward: 1.0,
+        done: false,
+    };
+    for _ in 0..capacity.min(10_000) {
+        buf.insert(&t);
+    }
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for tid in 0..threads {
+            let buf = Arc::clone(&buf);
+            let tr = t.clone();
+            s.spawn(move || {
+                let mut rng = Rng::new(tid as u64);
+                let mut out = SampleBatch::default();
+                for i in 0..ops / threads {
+                    match i % 3 {
+                        0 => buf.insert(&tr),
+                        1 => {
+                            buf.sample(32, &mut rng, &mut out);
+                        }
+                        _ => {
+                            let idx: Vec<usize> =
+                                (0..32).map(|_| rng.below_usize(10_000)).collect();
+                            buf.update_priorities(&idx, &vec![0.5; 32]);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let dt = t0.elapsed();
+    println!(
+        "{} ops across {threads} threads in {:.3}s = {:.0} ops/s (capacity={capacity}, K={fanout})",
+        ops,
+        dt.as_secs_f64(),
+        ops as f64 / dt.as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_dse(a: &Args) -> Result<()> {
+    let cores: usize = a.parse_or("cores", 8)?;
+    let ratio: f64 = a.parse_or("update-interval", 1.0)?;
+    let algo = a.str_or("algo", "dqn");
+    let env = a.str_or("env", "CartPole-v1");
+    let profile = dse::CostProfile::representative(&algo, &env);
+    let plan = dse::explore(&profile, cores, ratio);
+    println!("{}", dse::render_curves(&profile, cores));
+    println!(
+        "chosen split for M={cores}, ratio={ratio}: {} actors + {} learners \
+         (collect {:.0}/s vs consume {:.0}/s)",
+        plan.actors, plan.learners, plan.collect_throughput, plan.consume_throughput
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let a = Args::from_env()?;
+    let cmd = a.positional.first().map(String::as_str);
+    match cmd {
+        Some("train") => cmd_train(&a),
+        Some("envs") => {
+            cmd_envs();
+            Ok(())
+        }
+        Some("info") => cmd_info(&a),
+        Some("buffer-bench") => cmd_buffer_bench(&a),
+        Some("dse") => cmd_dse(&a),
+        Some(other) => bail!("unknown subcommand `{other}` (try `pal` for usage)"),
+        None => usage(),
+    }
+}

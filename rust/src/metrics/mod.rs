@@ -1,0 +1,204 @@
+//! Training metrics: lock-free counters shared by actors/learners plus a
+//! CSV curve logger for the examples and EXPERIMENTS.md plots.
+
+use crate::util::stats::Ema;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Shared, internally-synchronized metrics hub.
+pub struct Metrics {
+    start: Instant,
+    pub env_steps: AtomicUsize,
+    pub learn_steps: AtomicUsize,
+    pub episodes: AtomicUsize,
+    pub grad_updates: AtomicUsize,
+    pub param_syncs: AtomicUsize,
+    /// f64 bits of the most recent loss (learner side).
+    last_loss_bits: AtomicU64,
+    inner: Mutex<Inner>,
+}
+
+struct Inner {
+    /// Recent episode returns (bounded window).
+    returns: VecDeque<f32>,
+    return_ema: Ema,
+    loss_ema: Ema,
+    /// (wall_secs, env_steps, learn_steps, episode_return) samples.
+    curve: Vec<CurvePoint>,
+}
+
+/// One logged point on the training curve.
+#[derive(Clone, Copy, Debug)]
+pub struct CurvePoint {
+    pub wall_secs: f64,
+    pub env_steps: usize,
+    pub learn_steps: usize,
+    pub episode_return: f32,
+    pub loss_ema: f64,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self {
+            start: Instant::now(),
+            env_steps: AtomicUsize::new(0),
+            learn_steps: AtomicUsize::new(0),
+            episodes: AtomicUsize::new(0),
+            grad_updates: AtomicUsize::new(0),
+            param_syncs: AtomicUsize::new(0),
+            last_loss_bits: AtomicU64::new(0),
+            inner: Mutex::new(Inner {
+                returns: VecDeque::with_capacity(128),
+                return_ema: Ema::new(0.05),
+                loss_ema: Ema::new(0.01),
+                curve: Vec::new(),
+            }),
+        }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Actor: one environment step taken.
+    #[inline]
+    pub fn inc_env_step(&self) {
+        self.env_steps.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Actor: an episode finished with this return.
+    pub fn record_episode(&self, ret: f32) {
+        self.episodes.fetch_add(1, Ordering::Relaxed);
+        let mut g = self.inner.lock().unwrap();
+        if g.returns.len() == 128 {
+            g.returns.pop_front();
+        }
+        g.returns.push_back(ret);
+        g.return_ema.push(ret as f64);
+        let point = CurvePoint {
+            wall_secs: self.start.elapsed().as_secs_f64(),
+            env_steps: self.env_steps.load(Ordering::Relaxed),
+            learn_steps: self.learn_steps.load(Ordering::Relaxed),
+            episode_return: ret,
+            loss_ema: g.loss_ema.get().unwrap_or(f64::NAN),
+        };
+        g.curve.push(point);
+    }
+
+    /// Learner: one learn step with this loss.
+    pub fn record_learn(&self, loss: f32) {
+        self.learn_steps.fetch_add(1, Ordering::Relaxed);
+        self.last_loss_bits
+            .store((loss as f64).to_bits(), Ordering::Relaxed);
+        let mut g = self.inner.lock().unwrap();
+        g.loss_ema.push(loss as f64);
+    }
+
+    pub fn last_loss(&self) -> f64 {
+        f64::from_bits(self.last_loss_bits.load(Ordering::Relaxed))
+    }
+
+    /// Mean of the recent episode-return window.
+    pub fn mean_return(&self) -> Option<f64> {
+        let g = self.inner.lock().unwrap();
+        if g.returns.is_empty() {
+            return None;
+        }
+        Some(g.returns.iter().map(|&r| r as f64).sum::<f64>() / g.returns.len() as f64)
+    }
+
+    pub fn return_ema(&self) -> Option<f64> {
+        self.inner.lock().unwrap().return_ema.get()
+    }
+
+    pub fn loss_ema(&self) -> Option<f64> {
+        self.inner.lock().unwrap().loss_ema.get()
+    }
+
+    /// Snapshot of the full training curve.
+    pub fn curve(&self) -> Vec<CurvePoint> {
+        self.inner.lock().unwrap().curve.clone()
+    }
+
+    /// Steps/sec since start.
+    pub fn env_throughput(&self) -> f64 {
+        self.env_steps.load(Ordering::Relaxed) as f64 / self.elapsed_secs().max(1e-9)
+    }
+
+    pub fn learn_throughput(&self) -> f64 {
+        self.learn_steps.load(Ordering::Relaxed) as f64 / self.elapsed_secs().max(1e-9)
+    }
+
+    /// Write the curve as CSV (`wall_secs,env_steps,learn_steps,return,loss_ema`).
+    pub fn write_curve_csv(&self, path: &std::path::Path) -> std::io::Result<()> {
+        use std::io::Write;
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "wall_secs,env_steps,learn_steps,episode_return,loss_ema")?;
+        for p in self.curve() {
+            writeln!(
+                f,
+                "{:.3},{},{},{},{}",
+                p.wall_secs, p.env_steps, p.learn_steps, p.episode_return, p.loss_ema
+            )?;
+        }
+        Ok(())
+    }
+
+    /// One-line progress summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "steps={} learn={} episodes={} ret~{:.1} loss~{:.4} {:.0} env/s {:.0} learn/s",
+            self.env_steps.load(Ordering::Relaxed),
+            self.learn_steps.load(Ordering::Relaxed),
+            self.episodes.load(Ordering::Relaxed),
+            self.return_ema().unwrap_or(f64::NAN),
+            self.loss_ema().unwrap_or(f64::NAN),
+            self.env_throughput(),
+            self.learn_throughput(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_window() {
+        let m = Metrics::new();
+        for i in 0..200 {
+            m.inc_env_step();
+            if i % 10 == 0 {
+                m.record_episode(i as f32);
+            }
+        }
+        m.record_learn(0.5);
+        assert_eq!(m.env_steps.load(Ordering::Relaxed), 200);
+        assert_eq!(m.episodes.load(Ordering::Relaxed), 20);
+        assert_eq!(m.learn_steps.load(Ordering::Relaxed), 1);
+        assert!(m.mean_return().unwrap() > 0.0);
+        assert_eq!(m.curve().len(), 20);
+        assert!((m.last_loss() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let m = Metrics::new();
+        m.record_episode(1.5);
+        m.record_episode(2.5);
+        let path = std::env::temp_dir().join("pal_metrics_test.csv");
+        m.write_curve_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.lines().nth(1).unwrap().contains("1.5"));
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,137 @@
+//! Weight checkpointing: save/restore the parameter server's state so
+//! training runs can resume and trained policies can be evaluated later.
+//!
+//! Format (little-endian): magic "PALCKPT1", u64 dim, u64 opt_steps,
+//! online f32[dim], target f32[dim], trailing crc32 of the payload.
+
+use super::ParameterServer;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"PALCKPT1";
+
+/// Serialized training state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub online: Vec<f32>,
+    pub target: Vec<f32>,
+    pub opt_steps: u64,
+}
+
+fn crc32(data: &[u8]) -> u32 {
+    // Small table-free CRC-32 (IEEE), enough for corruption detection.
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+impl Checkpoint {
+    /// Capture the current server state.
+    pub fn from_server(server: &ParameterServer) -> Self {
+        Self {
+            online: server.online_copy(),
+            target: server.target_copy(),
+            opt_steps: server.opt_steps() as u64,
+        }
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut payload = Vec::with_capacity(16 + 8 * self.online.len());
+        payload.extend_from_slice(&(self.online.len() as u64).to_le_bytes());
+        payload.extend_from_slice(&self.opt_steps.to_le_bytes());
+        for v in self.online.iter().chain(&self.target) {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        let crc = crc32(&payload);
+        let mut f = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("creating {}", path.as_ref().display()))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&payload)?;
+        f.write_all(&crc.to_le_bytes())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening {}", path.as_ref().display()))?
+            .read_to_end(&mut bytes)?;
+        if bytes.len() < MAGIC.len() + 16 + 4 || &bytes[..8] != MAGIC {
+            bail!("not a PAL checkpoint: {}", path.as_ref().display());
+        }
+        let payload = &bytes[8..bytes.len() - 4];
+        let stored_crc = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
+        if crc32(payload) != stored_crc {
+            bail!("checkpoint corrupted (crc mismatch): {}", path.as_ref().display());
+        }
+        let dim = u64::from_le_bytes(payload[0..8].try_into().unwrap()) as usize;
+        let opt_steps = u64::from_le_bytes(payload[8..16].try_into().unwrap());
+        let need = 16 + dim * 8;
+        if payload.len() != need {
+            bail!("checkpoint truncated: payload {} bytes, want {need}", payload.len());
+        }
+        let floats: Vec<f32> = payload[16..]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(Self {
+            online: floats[..dim].to_vec(),
+            target: floats[dim..].to_vec(),
+            opt_steps,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::{AdamConfig, TargetSync};
+
+    #[test]
+    fn roundtrip() {
+        let server = ParameterServer::new(
+            vec![1.0, 2.0, -3.5, 0.25],
+            AdamConfig::default(),
+            TargetSync::None,
+            1,
+        );
+        server.push_gradient(0, 4, &[0.1; 4]);
+        let ck = Checkpoint::from_server(&server);
+        let path = std::env::temp_dir().join("pal_ckpt_test.bin");
+        ck.save(&path).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck, loaded);
+        assert_eq!(loaded.opt_steps, 1);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let ck = Checkpoint { online: vec![1.0; 8], target: vec![2.0; 8], opt_steps: 3 };
+        let path = std::env::temp_dir().join("pal_ckpt_corrupt.bin");
+        ck.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage_and_truncation() {
+        let path = std::env::temp_dir().join("pal_ckpt_garbage.bin");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::write(&path, b"PALCKPT1").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,295 @@
+//! Parameter server (paper §V-B, [17]).
+//!
+//! Owns the canonical online and target weights as flat `f32` vectors.
+//! Learners push (sub-)gradients; the server aggregates `aggregation`
+//! of them and applies one Adam step per aggregate. Actors and learners
+//! pull snapshots keyed by a monotonically increasing version so they
+//! only copy when something changed.
+//!
+//! Gradients arrive per *group* (a contiguous slice of the flat vector —
+//! e.g. TD3's critic slice vs actor slice); Adam keeps independent step
+//! counters per group for correct bias correction.
+
+pub mod adam;
+pub mod checkpoint;
+
+pub use adam::{Adam, AdamConfig};
+pub use checkpoint::Checkpoint;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Target-network synchronization policy (per algorithm).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TargetSync {
+    /// Copy online → target every `every` optimizer steps (DQN/DDQN).
+    Hard { every: usize },
+    /// Polyak averaging θ' ← τθ + (1-τ)θ' after every step (DDPG/TD3/SAC).
+    Polyak { tau: f32 },
+    /// No target network.
+    None,
+}
+
+struct Inner {
+    online: Vec<f32>,
+    target: Vec<f32>,
+    adam: Adam,
+    /// Pending gradient accumulation per group: (sum, count).
+    pending: BTreeMap<(usize, usize), (Vec<f32>, usize)>,
+    opt_steps: usize,
+}
+
+/// The parameter server.
+pub struct ParameterServer {
+    inner: Mutex<Inner>,
+    version: AtomicU64,
+    sync: TargetSync,
+    aggregation: usize,
+    dim: usize,
+}
+
+impl ParameterServer {
+    /// `init`: initial flat parameter vector (target starts as a copy).
+    /// `aggregation`: number of sub-gradients averaged per Adam step
+    /// (1 = fully asynchronous).
+    pub fn new(init: Vec<f32>, adam_cfg: AdamConfig, sync: TargetSync, aggregation: usize) -> Self {
+        assert!(aggregation >= 1);
+        let dim = init.len();
+        Self {
+            inner: Mutex::new(Inner {
+                target: init.clone(),
+                adam: Adam::new(dim, adam_cfg),
+                online: init,
+                pending: BTreeMap::new(),
+                opt_steps: 0,
+            }),
+            version: AtomicU64::new(1),
+            sync,
+            aggregation,
+            dim,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Current weight version (bumps on every applied update).
+    #[inline]
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    /// Copy online weights into `buf` if `buf_version` is stale.
+    /// Returns the fresh version (or `buf_version` when unchanged).
+    pub fn sync_online(&self, buf: &mut Vec<f32>, buf_version: u64) -> u64 {
+        let v = self.version();
+        if v == buf_version && buf.len() == self.dim {
+            return v;
+        }
+        let g = self.inner.lock().unwrap();
+        buf.clear();
+        buf.extend_from_slice(&g.online);
+        // Version may have advanced while copying; report what we saw
+        // before the copy (conservative staleness).
+        v
+    }
+
+    /// Copy both online and target weights (learner snapshot).
+    pub fn sync_pair(&self, online: &mut Vec<f32>, target: &mut Vec<f32>, buf_version: u64) -> u64 {
+        let v = self.version();
+        if v == buf_version && online.len() == self.dim {
+            return v;
+        }
+        let g = self.inner.lock().unwrap();
+        online.clear();
+        online.extend_from_slice(&g.online);
+        target.clear();
+        target.extend_from_slice(&g.target);
+        v
+    }
+
+    /// Push one sub-gradient for the flat range `[lo, hi)` (element
+    /// offsets). Applies an Adam step once `aggregation` sub-gradients
+    /// for that group have arrived. Returns true if a step was applied.
+    pub fn push_gradient(&self, lo: usize, hi: usize, grad: &[f32]) -> bool {
+        assert_eq!(grad.len(), hi - lo, "gradient length mismatch");
+        assert!(hi <= self.dim);
+        let mut g = self.inner.lock().unwrap();
+        let agg = self.aggregation;
+        let entry = g
+            .pending
+            .entry((lo, hi))
+            .or_insert_with(|| (vec![0.0; hi - lo], 0));
+        for (s, &x) in entry.0.iter_mut().zip(grad) {
+            *s += x;
+        }
+        entry.1 += 1;
+        if entry.1 < agg {
+            return false;
+        }
+        // Take the aggregate and apply.
+        let (mut sum, count) = g.pending.remove(&(lo, hi)).unwrap();
+        if count > 1 {
+            let inv = 1.0 / count as f32;
+            for s in sum.iter_mut() {
+                *s *= inv;
+            }
+        }
+        {
+            let Inner { online, adam, .. } = &mut *g;
+            adam.step(lo, hi, &sum, &mut online[lo..hi]);
+        }
+        g.opt_steps += 1;
+        match self.sync {
+            TargetSync::Hard { every } => {
+                if g.opt_steps % every.max(1) == 0 {
+                    let Inner { online, target, .. } = &mut *g;
+                    target.copy_from_slice(online);
+                }
+            }
+            TargetSync::Polyak { tau } => {
+                let Inner { online, target, .. } = &mut *g;
+                for (t, &o) in target[lo..hi].iter_mut().zip(&online[lo..hi]) {
+                    *t = tau * o + (1.0 - tau) * *t;
+                }
+            }
+            TargetSync::None => {}
+        }
+        drop(g);
+        self.version.fetch_add(1, Ordering::AcqRel);
+        true
+    }
+
+    /// Force target ← online (used at initialization / warmup end).
+    pub fn hard_sync_target(&self) {
+        let mut g = self.inner.lock().unwrap();
+        let Inner { online, target, .. } = &mut *g;
+        target.copy_from_slice(online);
+        drop(g);
+        self.version.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Optimizer steps applied so far.
+    pub fn opt_steps(&self) -> usize {
+        self.inner.lock().unwrap().opt_steps
+    }
+
+    /// Read-only copy of the online weights (tests / checkpoints).
+    pub fn online_copy(&self) -> Vec<f32> {
+        self.inner.lock().unwrap().online.clone()
+    }
+
+    /// Read-only copy of the target weights.
+    pub fn target_copy(&self) -> Vec<f32> {
+        self.inner.lock().unwrap().target.clone()
+    }
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn server(n: usize, sync: TargetSync, agg: usize) -> ParameterServer {
+        ParameterServer::new(vec![1.0; n], AdamConfig { lr: 0.1, ..Default::default() }, sync, agg)
+    }
+
+    #[test]
+    fn gradient_step_moves_weights_down() {
+        let s = server(4, TargetSync::None, 1);
+        let v0 = s.version();
+        assert!(s.push_gradient(0, 4, &[1.0; 4]));
+        assert!(s.version() > v0);
+        let w = s.online_copy();
+        assert!(w.iter().all(|&x| x < 1.0), "{w:?}");
+    }
+
+    #[test]
+    fn aggregation_waits_for_k() {
+        let s = server(2, TargetSync::None, 3);
+        assert!(!s.push_gradient(0, 2, &[1.0, 1.0]));
+        assert!(!s.push_gradient(0, 2, &[1.0, 1.0]));
+        let before = s.online_copy();
+        assert_eq!(before, vec![1.0, 1.0]);
+        assert!(s.push_gradient(0, 2, &[1.0, 1.0]));
+        assert!(s.online_copy()[0] < 1.0);
+        assert_eq!(s.opt_steps(), 1);
+    }
+
+    #[test]
+    fn slice_updates_leave_rest_untouched() {
+        let s = server(6, TargetSync::None, 1);
+        s.push_gradient(2, 4, &[1.0, 1.0]);
+        let w = s.online_copy();
+        assert_eq!(w[0], 1.0);
+        assert_eq!(w[1], 1.0);
+        assert!(w[2] < 1.0 && w[3] < 1.0);
+        assert_eq!(w[4], 1.0);
+        assert_eq!(w[5], 1.0);
+    }
+
+    #[test]
+    fn hard_target_sync_every_2() {
+        let s = server(2, TargetSync::Hard { every: 2 }, 1);
+        s.push_gradient(0, 2, &[1.0, 1.0]);
+        assert_eq!(s.target_copy(), vec![1.0, 1.0], "no sync after 1 step");
+        s.push_gradient(0, 2, &[1.0, 1.0]);
+        assert_eq!(s.target_copy(), s.online_copy(), "synced after 2 steps");
+    }
+
+    #[test]
+    fn polyak_moves_target_fractionally() {
+        let s = server(2, TargetSync::Polyak { tau: 0.5 }, 1);
+        s.push_gradient(0, 2, &[1.0, 1.0]);
+        let online = s.online_copy();
+        let target = s.target_copy();
+        for (o, t) in online.iter().zip(&target) {
+            let expect = 0.5 * o + 0.5 * 1.0;
+            assert!((t - expect).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn snapshot_versioning_skips_fresh() {
+        let s = server(3, TargetSync::None, 1);
+        let mut buf = Vec::new();
+        let v1 = s.sync_online(&mut buf, 0);
+        assert_eq!(buf, vec![1.0; 3]);
+        // No change -> same version, buffer untouched even if cleared.
+        buf[0] = 99.0;
+        let v2 = s.sync_online(&mut buf, v1);
+        assert_eq!(v2, v1);
+        assert_eq!(buf[0], 99.0, "fresh snapshot must not copy");
+        s.push_gradient(0, 3, &[1.0; 3]);
+        let v3 = s.sync_online(&mut buf, v2);
+        assert!(v3 > v2);
+        assert!(buf[0] < 1.0);
+    }
+
+    #[test]
+    fn concurrent_pushes_consistent() {
+        use std::sync::Arc;
+        let s = Arc::new(server(8, TargetSync::Polyak { tau: 0.01 }, 1));
+        std::thread::scope(|sc| {
+            for t in 0..4 {
+                let s = Arc::clone(&s);
+                sc.spawn(move || {
+                    for _ in 0..100 {
+                        if t % 2 == 0 {
+                            s.push_gradient(0, 4, &[0.01; 4]);
+                        } else {
+                            s.push_gradient(4, 8, &[-0.01; 4]);
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(s.opt_steps(), 400);
+        let w = s.online_copy();
+        assert!(w[..4].iter().all(|&x| x < 1.0));
+        assert!(w[4..].iter().all(|&x| x > 1.0));
+        assert!(w.iter().all(|x| x.is_finite()));
+    }
+}

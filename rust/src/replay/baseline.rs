@@ -1,0 +1,225 @@
+//! Baseline replay buffer: classic binary sum tree behind ONE global lock
+//! (the comparator in paper §VI-D / Fig 9, and the buffer used by our
+//! RLlib-substitute baseline framework in Fig 8).
+//!
+//! Everything — leaf writes, propagation, descent, storage copies — runs
+//! inside the single mutex, which is exactly what makes it scale poorly:
+//! the critical section includes the O(row) memory copy that the paper's
+//! lazy writing moves outside.
+
+use super::storage::{SampleBatch, Transition, TransitionStore};
+use super::ReplayBuffer;
+use crate::util::rng::Rng;
+use std::sync::Mutex;
+
+/// Classic 2N-array binary sum tree (no cache-alignment, no level
+/// padding) — the "textbook" PER implementation.
+pub struct BinarySumTree {
+    /// nodes[1] is the root; leaves at nodes[cap..cap+cap].
+    nodes: Vec<f32>,
+    cap: usize,
+}
+
+impl BinarySumTree {
+    pub fn new(capacity: usize) -> Self {
+        let cap = capacity.next_power_of_two();
+        Self { nodes: vec![0.0; 2 * cap], cap }
+    }
+
+    pub fn total(&self) -> f32 {
+        self.nodes[1]
+    }
+
+    pub fn get(&self, idx: usize) -> f32 {
+        self.nodes[self.cap + idx]
+    }
+
+    pub fn update(&mut self, idx: usize, value: f32) {
+        let mut i = self.cap + idx;
+        let delta = value - self.nodes[i];
+        while i >= 1 {
+            self.nodes[i] += delta;
+            i /= 2;
+        }
+    }
+
+    pub fn prefix_sum_index(&self, mut prefix: f32) -> (usize, f32) {
+        let mut i = 1usize;
+        while i < self.cap {
+            let left = self.nodes[2 * i];
+            if prefix <= left && left > 0.0 {
+                i *= 2;
+            } else {
+                prefix -= left;
+                i = 2 * i + 1;
+            }
+        }
+        // Clamp to a non-zero leaf (fp drift guard), scanning left.
+        let mut leaf = i - self.cap;
+        while leaf > 0 && self.nodes[self.cap + leaf] <= 0.0 {
+            leaf -= 1;
+        }
+        (leaf, self.nodes[self.cap + leaf])
+    }
+}
+
+struct Inner {
+    tree: BinarySumTree,
+    cursor: usize,
+    max_priority: f32,
+}
+
+/// Binary tree + single global lock buffer.
+pub struct GlobalLockReplay {
+    inner: Mutex<Inner>,
+    store: TransitionStore,
+    capacity: usize,
+    alpha: f32,
+    beta: f32,
+}
+
+impl GlobalLockReplay {
+    pub fn new(capacity: usize, obs_dim: usize, act_dim: usize, alpha: f32, beta: f32) -> Self {
+        Self {
+            inner: Mutex::new(Inner {
+                tree: BinarySumTree::new(capacity),
+                cursor: 0,
+                max_priority: 1.0,
+            }),
+            store: TransitionStore::new(capacity, obs_dim, act_dim),
+            capacity,
+            alpha,
+            beta,
+        }
+    }
+
+    fn transform(&self, td: f32) -> f32 {
+        (td.max(0.0) + super::prioritized::PRIORITY_EPS).powf(self.alpha)
+    }
+}
+
+impl ReplayBuffer for GlobalLockReplay {
+    fn name(&self) -> &'static str {
+        "baseline-binary-global-lock"
+    }
+
+    fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn len(&self) -> usize {
+        let g = self.inner.lock().unwrap();
+        g.cursor.min(self.capacity)
+    }
+
+    fn insert(&self, t: &Transition) {
+        // Entire insertion — including the data copy — under the lock.
+        let mut g = self.inner.lock().unwrap();
+        let slot = g.cursor % self.capacity;
+        g.cursor += 1;
+        self.store.write(slot, t);
+        let mp = g.max_priority;
+        g.tree.update(slot, mp);
+    }
+
+    fn sample(&self, batch: usize, rng: &mut Rng, out: &mut SampleBatch) -> bool {
+        out.clear();
+        let g = self.inner.lock().unwrap();
+        let n = g.cursor.min(self.capacity);
+        if n == 0 || batch == 0 {
+            return false;
+        }
+        let total = g.tree.total();
+        if !(total > 0.0) {
+            return false;
+        }
+        let seg = total / batch as f32;
+        for j in 0..batch {
+            let x = (j as f32 + rng.f32()) * seg;
+            let (idx, p) = g.tree.prefix_sum_index(x);
+            out.indices.push(idx);
+            out.priorities.push(p);
+        }
+        let nf = n as f32;
+        let mut wmax = 0.0f32;
+        for &p in &out.priorities {
+            let pr = (p / total).max(f32::MIN_POSITIVE);
+            let w = (nf * pr).powf(-self.beta);
+            out.is_weights.push(w);
+            wmax = wmax.max(w);
+        }
+        for w in &mut out.is_weights {
+            *w /= wmax;
+        }
+        // Row copies also under the lock — the baseline's sin.
+        for i in 0..out.indices.len() {
+            self.store.read_into(out.indices[i], out);
+        }
+        true
+    }
+
+    fn update_priorities(&self, indices: &[usize], td_abs: &[f32]) {
+        let mut g = self.inner.lock().unwrap();
+        for (&idx, &td) in indices.iter().zip(td_abs) {
+            let p = self.transform(td);
+            if p > g.max_priority {
+                g.max_priority = p;
+            }
+            g.tree.update(idx, p);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binary_tree_prefix_sum_oracle() {
+        let mut t = BinarySumTree::new(100);
+        let prios: Vec<f32> = (0..100).map(|i| (i % 7) as f32 + 0.5).collect();
+        for (i, &p) in prios.iter().enumerate() {
+            t.update(i, p);
+        }
+        let total: f32 = prios.iter().sum();
+        assert!((t.total() - total).abs() < 1e-3);
+        for k in 0..200 {
+            let x = (k as f32 / 200.0) * total;
+            let (idx, p) = t.prefix_sum_index(x);
+            assert!(p > 0.0);
+            let mut acc = 0.0;
+            let mut expect = 99;
+            for (i, &q) in prios.iter().enumerate() {
+                acc += q;
+                if acc >= x {
+                    expect = i;
+                    break;
+                }
+            }
+            assert!(
+                (idx as i64 - expect as i64).abs() <= 1,
+                "x={x} idx={idx} expect={expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn buffer_basic_flow() {
+        let b = GlobalLockReplay::new(64, 2, 1, 0.6, 0.4);
+        for i in 0..32 {
+            b.insert(&Transition {
+                obs: vec![i as f32, 0.0],
+                action: vec![0.0],
+                next_obs: vec![i as f32 + 1.0, 0.0],
+                reward: i as f32,
+                done: false,
+            });
+        }
+        assert_eq!(b.len(), 32);
+        let mut rng = Rng::new(1);
+        let mut out = SampleBatch::default();
+        assert!(b.sample(8, &mut rng, &mut out));
+        assert_eq!(out.len(), 8);
+        b.update_priorities(&out.indices.clone(), &vec![0.5; 8]);
+    }
+}

@@ -1,0 +1,151 @@
+//! Replay buffers — the paper's core contribution plus every comparator.
+//!
+//! * [`PrioritizedReplay`] — K-ary sum tree, cache-aligned layout, lazy
+//!   writing, two-lock synchronization (§IV).
+//! * [`GlobalLockReplay`] — binary sum tree + one global lock (Fig 9
+//!   baseline, RLlib-substitute framework buffer).
+//! * [`UniformReplay`] — plain ring buffer, uniform sampling.
+//! * [`NaiveScanReplay`] / [`PyBindBinaryReplay`] — emulations of the
+//!   third-party buffers the paper plugs into (Fig 11).
+//!
+//! All implementations share the [`ReplayBuffer`] trait so the trainer,
+//! the benches and the property tests are generic over them.
+
+pub mod baseline;
+pub mod emulated;
+pub mod prioritized;
+pub mod storage;
+pub mod sumtree;
+pub mod uniform;
+
+pub use baseline::{BinarySumTree, GlobalLockReplay};
+pub use emulated::{NaiveScanReplay, PyBindBinaryReplay, PySumTreeReplay};
+pub use prioritized::{PrioritizedConfig, PrioritizedReplay};
+pub use storage::{SampleBatch, Transition, TransitionStore};
+pub use sumtree::KArySumTree;
+pub use uniform::UniformReplay;
+
+use crate::util::rng::Rng;
+
+/// Common interface of every replay buffer in the crate.
+///
+/// All methods take `&self`: implementations are internally synchronized
+/// so actors and learners can share one buffer behind an `Arc`.
+pub trait ReplayBuffer: Send + Sync {
+    /// Implementation name (used in bench output).
+    fn name(&self) -> &'static str;
+
+    /// Maximum number of transitions held.
+    fn capacity(&self) -> usize;
+
+    /// Current number of (fully inserted) transitions.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Insert one transition, evicting FIFO when full (paper §IV-A1).
+    fn insert(&self, t: &Transition);
+
+    /// Draw `batch` transitions into `out` (cleared first). Returns false
+    /// if the buffer is empty. Prioritized impls fill `priorities` and
+    /// normalized `is_weights`.
+    fn sample(&self, batch: usize, rng: &mut Rng, out: &mut SampleBatch) -> bool;
+
+    /// Feed back new |TD| errors for sampled indices (paper §IV-A4).
+    fn update_priorities(&self, indices: &[usize], td_abs: &[f32]);
+}
+
+#[cfg(test)]
+mod trait_tests {
+    //! Behavioural tests run against EVERY implementation.
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    fn impls(capacity: usize) -> Vec<Arc<dyn ReplayBuffer>> {
+        vec![
+            Arc::new(PrioritizedReplay::new(PrioritizedConfig {
+                capacity,
+                obs_dim: 2,
+                act_dim: 1,
+                fanout: 16,
+                alpha: 0.6,
+                beta: 0.4,
+                lazy_writing: true,
+            })),
+            Arc::new(GlobalLockReplay::new(capacity, 2, 1, 0.6, 0.4)),
+            Arc::new(UniformReplay::new(capacity, 2, 1)),
+            Arc::new(NaiveScanReplay::new(capacity, 2, 1, 0.6, 0.4)),
+            Arc::new(PyBindBinaryReplay::new(capacity, 2, 1, 0.6, 0.4)),
+            Arc::new(PySumTreeReplay::new(capacity, 2, 1, 0.6, 0.4)),
+        ]
+    }
+
+    fn tr(v: f32) -> Transition {
+        Transition {
+            obs: vec![v, -v],
+            action: vec![v],
+            next_obs: vec![v + 1.0, -v],
+            reward: v,
+            done: v as i64 % 5 == 0,
+        }
+    }
+
+    #[test]
+    fn all_impls_basic_contract() {
+        for b in impls(32) {
+            assert!(b.is_empty(), "{}", b.name());
+            let mut rng = Rng::new(1);
+            let mut out = SampleBatch::default();
+            assert!(!b.sample(4, &mut rng, &mut out), "{}", b.name());
+            for i in 0..48 {
+                b.insert(&tr(i as f32));
+            }
+            assert_eq!(b.len(), 32, "{}", b.name());
+            assert!(b.sample(16, &mut rng, &mut out), "{}", b.name());
+            assert_eq!(out.len(), 16, "{}", b.name());
+            assert_eq!(out.obs.len(), 32, "{}", b.name());
+            assert_eq!(out.is_weights.len(), 16, "{}", b.name());
+            // Sampled rows are self-consistent (obs[0] == reward by
+            // construction) — catches torn batch assembly.
+            for j in 0..16 {
+                assert_eq!(out.obs[j * 2], out.reward[j], "{}", b.name());
+            }
+            // Priority feedback must not panic and must keep sampling OK.
+            let idx = out.indices.clone();
+            b.update_priorities(&idx, &vec![0.7; idx.len()]);
+            assert!(b.sample(8, &mut rng, &mut out), "{}", b.name());
+        }
+    }
+
+    #[test]
+    fn all_impls_survive_concurrent_use() {
+        for b in impls(256) {
+            for i in 0..64 {
+                b.insert(&tr(i as f32));
+            }
+            std::thread::scope(|s| {
+                let b1 = Arc::clone(&b);
+                s.spawn(move || {
+                    for i in 0..1000 {
+                        b1.insert(&tr(i as f32));
+                    }
+                });
+                let b2 = Arc::clone(&b);
+                s.spawn(move || {
+                    let mut rng = Rng::new(9);
+                    let mut out = SampleBatch::default();
+                    for _ in 0..200 {
+                        if b2.sample(8, &mut rng, &mut out) {
+                            let idx = out.indices.clone();
+                            b2.update_priorities(&idx, &vec![0.3; idx.len()]);
+                        }
+                    }
+                });
+            });
+            assert_eq!(b.len(), 256, "{}", b.name());
+        }
+    }
+}

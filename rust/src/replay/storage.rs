@@ -1,0 +1,222 @@
+//! Transition storage for replay buffers.
+//!
+//! Structure-of-arrays, fixed row width, f32 everywhere (discrete actions
+//! are stored as their index in f32 — the learn graphs cast back). Cells
+//! are `AtomicU32` f32 bits with `Relaxed` ordering: the paper's *lazy
+//! writing* protocol (§IV-D2) copies transition rows WITHOUT holding the
+//! tree locks, relying on the zero-priority guard to keep half-written
+//! rows out of sampling. A concurrent eviction can still race a reader on
+//! the same slot (the paper accepts this as a benign inconsistency,
+//! §IV-D3); atomics make that defined behaviour at zero cost on x86-64.
+
+use crate::util::aligned::AlignedBox;
+use std::sync::atomic::{AtomicU32, Ordering};
+
+/// One transition as produced by an actor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Transition {
+    pub obs: Vec<f32>,
+    pub action: Vec<f32>,
+    pub next_obs: Vec<f32>,
+    pub reward: f32,
+    pub done: bool,
+}
+
+impl Transition {
+    /// Flat row width for the given dims: obs + action + next_obs + reward + done.
+    pub fn row_width(obs_dim: usize, act_dim: usize) -> usize {
+        2 * obs_dim + act_dim + 2
+    }
+}
+
+/// A batch of transitions in flat SoA form, ready for literal conversion.
+#[derive(Clone, Debug, Default)]
+pub struct SampleBatch {
+    pub indices: Vec<usize>,
+    pub priorities: Vec<f32>,
+    /// Importance weights (empty for uniform buffers).
+    pub is_weights: Vec<f32>,
+    pub obs: Vec<f32>,
+    pub action: Vec<f32>,
+    pub next_obs: Vec<f32>,
+    pub reward: Vec<f32>,
+    pub done: Vec<f32>,
+}
+
+impl SampleBatch {
+    pub fn with_capacity(batch: usize, obs_dim: usize, act_dim: usize) -> Self {
+        Self {
+            indices: Vec::with_capacity(batch),
+            priorities: Vec::with_capacity(batch),
+            is_weights: Vec::with_capacity(batch),
+            obs: Vec::with_capacity(batch * obs_dim),
+            action: Vec::with_capacity(batch * act_dim),
+            next_obs: Vec::with_capacity(batch * obs_dim),
+            reward: Vec::with_capacity(batch),
+            done: Vec::with_capacity(batch),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.indices.clear();
+        self.priorities.clear();
+        self.is_weights.clear();
+        self.obs.clear();
+        self.action.clear();
+        self.next_obs.clear();
+        self.reward.clear();
+        self.done.clear();
+    }
+}
+
+/// SoA storage of `capacity` transitions.
+pub struct TransitionStore {
+    obs_dim: usize,
+    act_dim: usize,
+    capacity: usize,
+    obs: AlignedBox<AtomicU32>,
+    action: AlignedBox<AtomicU32>,
+    next_obs: AlignedBox<AtomicU32>,
+    reward: AlignedBox<AtomicU32>,
+    done: AlignedBox<AtomicU32>,
+}
+
+#[inline(always)]
+fn put(dst: &[AtomicU32], src: &[f32]) {
+    for (d, s) in dst.iter().zip(src) {
+        d.store(s.to_bits(), Ordering::Relaxed);
+    }
+}
+
+#[inline(always)]
+fn get_into(src: &[AtomicU32], dst: &mut Vec<f32>) {
+    for s in src {
+        dst.push(f32::from_bits(s.load(Ordering::Relaxed)));
+    }
+}
+
+impl TransitionStore {
+    pub fn new(capacity: usize, obs_dim: usize, act_dim: usize) -> Self {
+        assert!(capacity > 0 && obs_dim > 0 && act_dim > 0);
+        Self {
+            obs_dim,
+            act_dim,
+            capacity,
+            obs: AlignedBox::zeroed(capacity * obs_dim),
+            action: AlignedBox::zeroed(capacity * act_dim),
+            next_obs: AlignedBox::zeroed(capacity * obs_dim),
+            reward: AlignedBox::zeroed(capacity),
+            done: AlignedBox::zeroed(capacity),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn obs_dim(&self) -> usize {
+        self.obs_dim
+    }
+
+    pub fn act_dim(&self) -> usize {
+        self.act_dim
+    }
+
+    /// Write a full transition row. This is the explicit memory copy the
+    /// paper moves OUTSIDE the lock via lazy writing.
+    pub fn write(&self, idx: usize, t: &Transition) {
+        debug_assert!(idx < self.capacity);
+        debug_assert_eq!(t.obs.len(), self.obs_dim);
+        debug_assert_eq!(t.action.len(), self.act_dim);
+        debug_assert_eq!(t.next_obs.len(), self.obs_dim);
+        let (od, ad) = (self.obs_dim, self.act_dim);
+        put(&self.obs[idx * od..(idx + 1) * od], &t.obs);
+        put(&self.action[idx * ad..(idx + 1) * ad], &t.action);
+        put(&self.next_obs[idx * od..(idx + 1) * od], &t.next_obs);
+        self.reward[idx].store(t.reward.to_bits(), Ordering::Relaxed);
+        self.done[idx].store((t.done as u32 as f32).to_bits(), Ordering::Relaxed);
+    }
+
+    /// Append row `idx` to a batch (flat SoA).
+    pub fn read_into(&self, idx: usize, out: &mut SampleBatch) {
+        debug_assert!(idx < self.capacity);
+        let (od, ad) = (self.obs_dim, self.act_dim);
+        get_into(&self.obs[idx * od..(idx + 1) * od], &mut out.obs);
+        get_into(&self.action[idx * ad..(idx + 1) * ad], &mut out.action);
+        get_into(&self.next_obs[idx * od..(idx + 1) * od], &mut out.next_obs);
+        out.reward
+            .push(f32::from_bits(self.reward[idx].load(Ordering::Relaxed)));
+        out.done
+            .push(f32::from_bits(self.done[idx].load(Ordering::Relaxed)));
+    }
+
+    /// Read a single transition back (tests / tooling).
+    pub fn read(&self, idx: usize) -> Transition {
+        let mut b = SampleBatch::default();
+        self.read_into(idx, &mut b);
+        Transition {
+            obs: b.obs,
+            action: b.action,
+            next_obs: b.next_obs,
+            reward: b.reward[0],
+            done: b.done[0] != 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: f32) -> Transition {
+        Transition {
+            obs: vec![v, v + 1.0],
+            action: vec![v * 10.0],
+            next_obs: vec![v + 2.0, v + 3.0],
+            reward: -v,
+            done: v as usize % 2 == 0,
+        }
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let s = TransitionStore::new(8, 2, 1);
+        for i in 0..8 {
+            s.write(i, &t(i as f32));
+        }
+        for i in 0..8 {
+            assert_eq!(s.read(i), t(i as f32));
+        }
+    }
+
+    #[test]
+    fn overwrite_slot() {
+        let s = TransitionStore::new(4, 2, 1);
+        s.write(2, &t(1.0));
+        s.write(2, &t(9.0));
+        assert_eq!(s.read(2), t(9.0));
+    }
+
+    #[test]
+    fn batch_assembly_flat_layout() {
+        let s = TransitionStore::new(4, 2, 1);
+        for i in 0..4 {
+            s.write(i, &t(i as f32));
+        }
+        let mut b = SampleBatch::with_capacity(2, 2, 1);
+        s.read_into(3, &mut b);
+        s.read_into(1, &mut b);
+        assert_eq!(b.obs, vec![3.0, 4.0, 1.0, 2.0]);
+        assert_eq!(b.action, vec![30.0, 10.0]);
+        assert_eq!(b.reward, vec![-3.0, -1.0]);
+        assert_eq!(b.done, vec![0.0, 0.0]);
+    }
+}

@@ -1,0 +1,455 @@
+//! K-ary sum tree over priorities (paper §IV-C, Figs 3–6).
+//!
+//! The tree is stored *implicitly* in a single cache-line-aligned array:
+//! level ℓ occupies a contiguous run of `K^ℓ` nodes, so every group of K
+//! siblings (all children of one parent) starts on a cache-line boundary
+//! provided `K % C == 0`, where `C = 16` f32 nodes per 64-byte line. The
+//! root is padded to a full group of `K` slots exactly as in Fig 6.
+//!
+//! Values are stored as `AtomicU32` holding f32 bits with `Relaxed`
+//! ordering. On x86-64 these compile to plain loads/stores, so the layout
+//! and speed match the paper's C++ while keeping Rust's data-race rules
+//! intact: the paper *deliberately* allows benign read/write races between
+//! sampling and interior-node updates (§IV-D3, "write after read ...
+//! little impact in practice"), which would be UB with plain `f32`.
+//!
+//! Thread-safety discipline is supplied by the caller
+//! ([`crate::replay::prioritized`] implements the two-lock protocol of
+//! Algorithm 3); all methods here take `&self` and are individually atomic
+//! per node but not across nodes.
+
+use crate::util::aligned::{AlignedBox, CACHE_LINE};
+use std::sync::atomic::{AtomicU32, Ordering};
+
+/// Number of f32 nodes per cache line.
+pub const NODES_PER_LINE: usize = CACHE_LINE / std::mem::size_of::<f32>();
+
+#[inline(always)]
+fn load(a: &AtomicU32) -> f32 {
+    f32::from_bits(a.load(Ordering::Relaxed))
+}
+
+#[inline(always)]
+fn store(a: &AtomicU32, v: f32) {
+    a.store(v.to_bits(), Ordering::Relaxed)
+}
+
+/// K-ary sum tree with the paper's implicit cache-aligned layout.
+pub struct KArySumTree {
+    /// Fan-out K. Power of two, `K % NODES_PER_LINE == 0` unless K == 2
+    /// (the binary configuration used as the Fig 9 baseline).
+    fanout: usize,
+    /// Leaf capacity (number of priorities), padded up to `K^(H-1)`.
+    capacity: usize,
+    /// Requested (un-padded) capacity.
+    logical_capacity: usize,
+    /// Offset of each level in `nodes`; `level_off[0]` is the root.
+    level_off: Vec<usize>,
+    /// Number of levels (root = level 0, leaves = level H-1).
+    height: usize,
+    /// The node array. Level ℓ lives at `level_off[ℓ] ..`.
+    nodes: AlignedBox<AtomicU32>,
+}
+
+impl KArySumTree {
+    /// Build a tree with the given leaf capacity and fan-out.
+    ///
+    /// `fanout` must be ≥ 2. For fan-outs ≥ `NODES_PER_LINE` the layout is
+    /// cache-aligned per the paper; smaller fan-outs are permitted for the
+    /// baseline comparisons.
+    pub fn new(capacity: usize, fanout: usize) -> Self {
+        assert!(capacity > 0, "capacity must be positive");
+        assert!(fanout >= 2, "fanout must be >= 2");
+        // Height so that fanout^(height-1) >= capacity.
+        let mut leaves = 1usize;
+        let mut height = 1usize;
+        while leaves < capacity {
+            leaves = leaves.checked_mul(fanout).expect("tree too large");
+            height += 1;
+        }
+        // Level sizes: 1 (padded to a full group), fanout, fanout^2, ...
+        // Padding the root group keeps every *group* aligned when
+        // fanout % NODES_PER_LINE == 0 (Fig 6).
+        let mut level_off = Vec::with_capacity(height);
+        let mut off = 0usize;
+        let mut width = 1usize;
+        for lvl in 0..height {
+            level_off.push(off);
+            let alloc_width = if lvl == 0 { fanout } else { width };
+            off += alloc_width;
+            width *= fanout;
+        }
+        let nodes = AlignedBox::zeroed(off);
+        Self {
+            fanout,
+            capacity: leaves,
+            logical_capacity: capacity,
+            level_off,
+            height,
+            nodes,
+        }
+    }
+
+    /// Fan-out K.
+    pub fn fanout(&self) -> usize {
+        self.fanout
+    }
+
+    /// Padded leaf capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Leaf capacity as requested by the caller.
+    pub fn logical_capacity(&self) -> usize {
+        self.logical_capacity
+    }
+
+    /// Tree height (number of levels).
+    pub fn height(&self) -> usize {
+        self.height
+    }
+
+    /// Total number of allocated node slots (for space-complexity tests).
+    pub fn node_slots(&self) -> usize {
+        self.nodes.len()
+    }
+
+    #[inline(always)]
+    fn leaf_slot(&self, idx: usize) -> &AtomicU32 {
+        debug_assert!(idx < self.capacity);
+        &self.nodes[self.level_off[self.height - 1] + idx]
+    }
+
+    /// Σ of all priorities: the root value, Θ(1) (paper §IV-C3).
+    #[inline]
+    pub fn total(&self) -> f32 {
+        load(&self.nodes[0])
+    }
+
+    /// Priority of leaf `idx`, Θ(1) via direct indexing (paper §IV-C1).
+    #[inline]
+    pub fn get(&self, idx: usize) -> f32 {
+        load(self.leaf_slot(idx))
+    }
+
+    /// Set leaf `idx` to `value` and return `Δ = value - old` WITHOUT
+    /// propagating. First half of Algorithm 3's split update: the caller
+    /// holds `last_level_lock` (and `global_tree_lock`) around this.
+    #[inline]
+    pub fn set_leaf(&self, idx: usize, value: f32) -> f32 {
+        debug_assert!(value >= 0.0, "priorities are non-negative");
+        let slot = self.leaf_slot(idx);
+        let old = load(slot);
+        store(slot, value);
+        value - old
+    }
+
+    /// Propagate `delta` from leaf `idx`'s parent chain to the root.
+    /// Second half of Algorithm 3's split update: the caller holds only
+    /// `global_tree_lock` around this (leaf lock already released).
+    pub fn propagate(&self, idx: usize, delta: f32) {
+        if delta == 0.0 {
+            return;
+        }
+        let mut i = idx;
+        // Walk levels H-2 .. 0 (all interior levels including the root).
+        for lvl in (0..self.height - 1).rev() {
+            i /= self.fanout;
+            let slot = &self.nodes[self.level_off[lvl] + i];
+            store(slot, load(slot) + delta);
+        }
+    }
+
+    /// Convenience: UPDATEVALUE of Algorithm 2 (set + propagate).
+    /// Θ(log_K N).
+    pub fn update(&self, idx: usize, value: f32) {
+        let delta = self.set_leaf(idx, value);
+        self.propagate(idx, delta);
+    }
+
+    /// GETPREFIXSUMIDX of Algorithm 2: smallest leaf index whose prefix
+    /// sum of priorities is ≥ `prefix`. `prefix` must be in
+    /// `[0, total()]`; values beyond the total clamp to the last non-zero
+    /// leaf. Returns `(leaf_index, leaf_priority)`.
+    ///
+    /// Θ((log_K N)·K) node visits, with K/C cache misses per level thanks
+    /// to the aligned group layout (paper §IV-C5b).
+    pub fn prefix_sum_index(&self, mut prefix: f32) -> (usize, f32) {
+        let mut i = 0usize; // node index within its level
+        for lvl in 1..self.height {
+            let base = self.level_off[lvl] + i * self.fanout;
+            let mut partial = 0.0f32;
+            let mut child = 0usize;
+            // Linear scan of the K children (contiguous, cache-aligned).
+            while child < self.fanout - 1 {
+                let v = load(&self.nodes[base + child]);
+                let sum = partial + v;
+                if sum >= prefix && v > 0.0 {
+                    break;
+                }
+                partial = sum;
+                child += 1;
+            }
+            // Guard against fp drift / all-zero tails: back up to the last
+            // strictly-positive child so we never return a zero-priority
+            // leaf when the tree is non-empty.
+            if load(&self.nodes[base + child]) <= 0.0 {
+                let mut c = child;
+                loop {
+                    if load(&self.nodes[base + c]) > 0.0 {
+                        child = c;
+                        break;
+                    }
+                    if c == 0 {
+                        break;
+                    }
+                    c -= 1;
+                }
+                // If everything left of us is zero, scan right.
+                if load(&self.nodes[base + child]) <= 0.0 {
+                    let mut c = child;
+                    while c < self.fanout - 1 && load(&self.nodes[base + c]) <= 0.0 {
+                        c += 1;
+                    }
+                    child = c;
+                }
+            }
+            prefix -= partial;
+            i = i * self.fanout + child;
+        }
+        (i, self.get(i))
+    }
+
+    /// Recompute every interior node from the leaves. Used to (a) squash
+    /// accumulated floating-point drift on long runs and (b) verify the
+    /// tree invariant in tests. Callers must hold exclusive access (both
+    /// locks in the Alg-3 protocol).
+    pub fn rebuild(&self) {
+        for lvl in (0..self.height - 1).rev() {
+            let width = self.level_width(lvl);
+            for i in 0..width {
+                let base = self.level_off[lvl + 1] + i * self.fanout;
+                let mut s = 0.0f32;
+                for c in 0..self.fanout {
+                    s += load(&self.nodes[base + c]);
+                }
+                store(&self.nodes[self.level_off[lvl] + i], s);
+            }
+        }
+    }
+
+    /// Number of *logical* nodes at a level (1 at the root, K at level 1…).
+    pub fn level_width(&self, lvl: usize) -> usize {
+        let mut w = 1usize;
+        for _ in 0..lvl {
+            w *= self.fanout;
+        }
+        w
+    }
+
+    /// Maximum absolute deviation between each interior node and the sum
+    /// of its children — the tree invariant (0 in a quiescent tree up to
+    /// fp error). Test/diagnostic helper.
+    pub fn invariant_error(&self) -> f32 {
+        let mut worst = 0.0f32;
+        for lvl in 0..self.height - 1 {
+            let width = self.level_width(lvl);
+            for i in 0..width {
+                let base = self.level_off[lvl + 1] + i * self.fanout;
+                let mut s = 0.0f32;
+                for c in 0..self.fanout {
+                    s += load(&self.nodes[base + c]);
+                }
+                let v = load(&self.nodes[self.level_off[lvl] + i]);
+                let scale = v.abs().max(s.abs()).max(1.0);
+                worst = worst.max((v - s).abs() / scale);
+            }
+        }
+        worst
+    }
+
+    /// Check the Fig-6 alignment property: every sibling group starts on a
+    /// cache-line boundary (meaningful when `fanout % NODES_PER_LINE == 0`).
+    pub fn groups_cache_aligned(&self) -> bool {
+        if self.fanout % NODES_PER_LINE != 0 {
+            return false;
+        }
+        let base = self.nodes.as_ptr() as usize;
+        if base % CACHE_LINE != 0 {
+            return false;
+        }
+        // Each level starts at an offset that's a multiple of the fanout,
+        // hence of NODES_PER_LINE, hence 64-byte aligned; groups are K
+        // consecutive nodes so every group inherits the alignment.
+        self.level_off
+            .iter()
+            .all(|&off| (base + off * 4) % CACHE_LINE == 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn single_leaf_roundtrip() {
+        let t = KArySumTree::new(1, 4);
+        t.update(0, 2.5);
+        assert_eq!(t.get(0), 2.5);
+        assert_eq!(t.total(), 2.5);
+        assert_eq!(t.prefix_sum_index(1.0), (0, 2.5));
+    }
+
+    #[test]
+    fn totals_match_leaf_sum_across_fanouts() {
+        for fanout in [2usize, 4, 16, 64, 256] {
+            let n = 1000;
+            let t = KArySumTree::new(n, fanout);
+            let mut rng = Rng::new(5);
+            let mut expect = 0.0f64;
+            for i in 0..n {
+                let p = rng.f32();
+                t.update(i, p);
+                expect += p as f64;
+            }
+            let total = t.total() as f64;
+            assert!(
+                (total - expect).abs() / expect < 1e-4,
+                "fanout {fanout}: {total} vs {expect}"
+            );
+            assert!(t.invariant_error() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn prefix_sum_matches_linear_scan() {
+        for fanout in [2usize, 4, 16, 64] {
+            let n = 257;
+            let t = KArySumTree::new(n, fanout);
+            let mut rng = Rng::new(77);
+            let mut prios = vec![0.0f32; n];
+            for i in 0..n {
+                prios[i] = rng.f32() * 2.0;
+                t.update(i, prios[i]);
+            }
+            let total: f32 = prios.iter().sum();
+            for trial in 0..500 {
+                let x = (trial as f32 / 500.0) * total;
+                let (idx, _) = t.prefix_sum_index(x);
+                // Linear-scan oracle.
+                let mut acc = 0.0f32;
+                let mut expect = n - 1;
+                for (i, &p) in prios.iter().enumerate() {
+                    acc += p;
+                    if acc >= x && p > 0.0 {
+                        expect = i;
+                        break;
+                    }
+                }
+                // Allow off-by-small due to independent fp summation order.
+                let lo = expect.saturating_sub(1);
+                let hi = (expect + 1).min(n - 1);
+                assert!(
+                    (lo..=hi).contains(&idx),
+                    "fanout {fanout} x {x}: got {idx}, oracle {expect}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn never_samples_zero_priority_leaf() {
+        let t = KArySumTree::new(64, 4);
+        // Only odd leaves get priority.
+        for i in (1..64).step_by(2) {
+            t.update(i, 1.0);
+        }
+        let mut rng = Rng::new(3);
+        for _ in 0..2000 {
+            let x = rng.f32() * t.total();
+            let (idx, p) = t.prefix_sum_index(x);
+            assert!(p > 0.0, "sampled zero-priority leaf {idx}");
+            assert_eq!(idx % 2, 1);
+        }
+    }
+
+    #[test]
+    fn sampling_distribution_proportional_to_priority() {
+        let n = 16;
+        let t = KArySumTree::new(n, 16);
+        for i in 0..n {
+            t.update(i, (i + 1) as f32);
+        }
+        let total: f32 = (1..=n as u32).sum::<u32>() as f32;
+        let mut rng = Rng::new(123);
+        let trials = 200_000;
+        let mut counts = vec![0usize; n];
+        for _ in 0..trials {
+            let x = rng.f32() * total;
+            let (idx, _) = t.prefix_sum_index(x);
+            counts[idx] += 1;
+        }
+        for i in 0..n {
+            let expect = (i + 1) as f64 / total as f64;
+            let got = counts[i] as f64 / trials as f64;
+            assert!(
+                (got - expect).abs() < 0.01,
+                "leaf {i}: got {got:.4} expect {expect:.4}"
+            );
+        }
+    }
+
+    #[test]
+    fn space_complexity_shrinks_with_fanout() {
+        // Θ(N + (N-1)/(K-1)) interior nodes: higher K ⇒ fewer slots
+        // (§IV-C5a), modulo padding of the last level.
+        let n = 4096;
+        let s2 = KArySumTree::new(n, 2).node_slots();
+        let s16 = KArySumTree::new(n, 16).node_slots();
+        let s64 = KArySumTree::new(n, 64).node_slots();
+        assert!(s2 > s16 && s16 > s64, "{s2} {s16} {s64}");
+    }
+
+    #[test]
+    fn layout_cache_aligned_for_paper_fanouts() {
+        for fanout in [16usize, 32, 64, 128, 256] {
+            let t = KArySumTree::new(1000, fanout);
+            assert!(t.groups_cache_aligned(), "fanout {fanout}");
+        }
+        // Binary baseline is deliberately unaligned.
+        assert!(!KArySumTree::new(1000, 2).groups_cache_aligned());
+    }
+
+    #[test]
+    fn update_overwrite_and_decrease() {
+        let t = KArySumTree::new(10, 4);
+        t.update(3, 5.0);
+        t.update(3, 1.5);
+        assert_eq!(t.get(3), 1.5);
+        assert!((t.total() - 1.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rebuild_squashes_drift() {
+        let t = KArySumTree::new(1000, 64);
+        let mut rng = Rng::new(99);
+        for _ in 0..50_000 {
+            let i = rng.below_usize(1000);
+            t.update(i, rng.f32());
+        }
+        t.rebuild();
+        assert!(t.invariant_error() < 1e-6);
+    }
+
+    #[test]
+    fn prefix_beyond_total_clamps() {
+        let t = KArySumTree::new(8, 4);
+        t.update(2, 1.0);
+        t.update(5, 2.0);
+        let (idx, p) = t.prefix_sum_index(t.total() * 10.0);
+        assert!(p > 0.0);
+        assert!(idx == 5, "got {idx}");
+    }
+}

@@ -1,0 +1,105 @@
+//! Uniform (non-prioritized) ring replay buffer.
+//!
+//! Used by the non-PER configurations (classic DQN/DDPG/SAC without
+//! prioritization) and as a cost floor in the Fig 11 comparisons. Lock
+//! strategy mirrors the paper's lazy writing: slot allocation is a single
+//! atomic, the copy is lock-free, and a per-slot "ready" epoch keeps
+//! half-written rows out of samples.
+
+use super::storage::{SampleBatch, Transition, TransitionStore};
+use super::ReplayBuffer;
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub struct UniformReplay {
+    store: TransitionStore,
+    /// Monotone insertion counter.
+    cursor: AtomicUsize,
+    /// Count of fully-written rows (monotone, saturates at capacity).
+    ready: AtomicUsize,
+    capacity: usize,
+}
+
+impl UniformReplay {
+    pub fn new(capacity: usize, obs_dim: usize, act_dim: usize) -> Self {
+        Self {
+            store: TransitionStore::new(capacity, obs_dim, act_dim),
+            cursor: AtomicUsize::new(0),
+            ready: AtomicUsize::new(0),
+            capacity,
+        }
+    }
+}
+
+impl ReplayBuffer for UniformReplay {
+    fn name(&self) -> &'static str {
+        "uniform-ring"
+    }
+
+    fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn len(&self) -> usize {
+        self.ready.load(Ordering::Acquire).min(self.capacity)
+    }
+
+    fn insert(&self, t: &Transition) {
+        let slot = self.cursor.fetch_add(1, Ordering::Relaxed) % self.capacity;
+        self.store.write(slot, t);
+        self.ready.fetch_add(1, Ordering::Release);
+    }
+
+    fn sample(&self, batch: usize, rng: &mut Rng, out: &mut SampleBatch) -> bool {
+        out.clear();
+        let n = self.len();
+        if n == 0 || batch == 0 {
+            return false;
+        }
+        for _ in 0..batch {
+            let idx = rng.below_usize(n);
+            out.indices.push(idx);
+            out.priorities.push(1.0);
+            out.is_weights.push(1.0);
+            self.store.read_into(idx, out);
+        }
+        true
+    }
+
+    fn update_priorities(&self, _indices: &[usize], _td_abs: &[f32]) {
+        // Uniform buffer ignores priorities.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fills_and_wraps() {
+        let b = UniformReplay::new(4, 1, 1);
+        for i in 0..10 {
+            b.insert(&Transition {
+                obs: vec![i as f32],
+                action: vec![0.0],
+                next_obs: vec![0.0],
+                reward: i as f32,
+                done: false,
+            });
+        }
+        assert_eq!(b.len(), 4);
+        let mut rng = Rng::new(0);
+        let mut out = SampleBatch::default();
+        assert!(b.sample(16, &mut rng, &mut out));
+        assert!(out.is_weights.iter().all(|&w| w == 1.0));
+        assert!(out.reward.iter().all(|&r| r >= 6.0));
+    }
+
+    #[test]
+    fn empty_sample_false() {
+        let b = UniformReplay::new(4, 1, 1);
+        let mut rng = Rng::new(0);
+        let mut out = SampleBatch::default();
+        assert!(!b.sample(2, &mut rng, &mut out));
+    }
+}

@@ -1,0 +1,254 @@
+//! Loader for `artifacts/manifest.json` produced by `python/compile/aot.py`.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One parameter tensor: name, shape, flat offset into the param vector.
+#[derive(Clone, Debug)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// One lowered graph: file + positional signature.
+#[derive(Clone, Debug)]
+pub struct GraphInfo {
+    pub file: PathBuf,
+    /// (name, shape) per positional input. Names are `p:<param>`,
+    /// `t:<param>`, or batch roles (`obs`, `action`, ..., `noise`).
+    pub inputs: Vec<(String, Vec<usize>)>,
+    pub outputs: Vec<String>,
+    /// Half-open slice of the param table covered by the grad outputs.
+    pub grad_slice: Option<(usize, usize)>,
+}
+
+/// One (algo, env) artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub id: String,
+    pub algo: String,
+    pub env: String,
+    pub obs_dim: usize,
+    pub flat_act_dim: usize,
+    pub n_actions: Option<usize>,
+    pub act_dim: Option<usize>,
+    pub act_high: f32,
+    pub discrete: bool,
+    pub hidden: Vec<usize>,
+    pub batch_size: usize,
+    pub gamma: f32,
+    pub params_file: PathBuf,
+    pub total_param_size: usize,
+    pub params: Vec<ParamInfo>,
+    pub graphs: BTreeMap<String, GraphInfo>,
+}
+
+impl ArtifactInfo {
+    /// Load the initial parameters blob (little-endian f32).
+    pub fn load_initial_params(&self) -> Result<Vec<f32>> {
+        let bytes = std::fs::read(&self.params_file)
+            .with_context(|| format!("reading {}", self.params_file.display()))?;
+        if bytes.len() != self.total_param_size * 4 {
+            bail!(
+                "param blob {} has {} bytes, manifest says {}",
+                self.params_file.display(),
+                bytes.len(),
+                self.total_param_size * 4
+            );
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+}
+
+fn req<'a>(j: &'a Json, key: &str, ctx: &str) -> Result<&'a Json> {
+    j.get(key).ok_or_else(|| anyhow!("manifest: missing `{key}` in {ctx}"))
+}
+
+fn usize_of(j: &Json, key: &str, ctx: &str) -> Result<usize> {
+    req(j, key, ctx)?
+        .as_usize()
+        .ok_or_else(|| anyhow!("manifest: `{key}` in {ctx} not a usize"))
+}
+
+fn shape_of(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("shape not an array"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad shape dim")))
+        .collect()
+}
+
+impl Manifest {
+    /// Parse `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+
+        let mut artifacts = BTreeMap::new();
+        for a in req(&j, "artifacts", "root")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("artifacts not an array"))?
+        {
+            let id = req(a, "id", "artifact")?
+                .as_str()
+                .ok_or_else(|| anyhow!("id not a string"))?
+                .to_string();
+            let ctx = id.clone();
+
+            let mut params = Vec::new();
+            for p in req(a, "params", &ctx)?.as_arr().unwrap_or(&[]) {
+                params.push(ParamInfo {
+                    name: req(p, "name", &ctx)?.as_str().unwrap_or("").to_string(),
+                    shape: shape_of(req(p, "shape", &ctx)?)?,
+                    offset: usize_of(p, "offset", &ctx)?,
+                    size: usize_of(p, "size", &ctx)?,
+                });
+            }
+
+            let mut graphs = BTreeMap::new();
+            if let Some(Json::Obj(gm)) = a.get("graphs") {
+                for (gname, g) in gm {
+                    let mut inputs = Vec::new();
+                    for i in req(g, "inputs", &ctx)?.as_arr().unwrap_or(&[]) {
+                        inputs.push((
+                            req(i, "name", &ctx)?.as_str().unwrap_or("").to_string(),
+                            shape_of(req(i, "shape", &ctx)?)?,
+                        ));
+                    }
+                    let outputs = req(g, "outputs", &ctx)?
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|o| o.as_str().map(str::to_string))
+                        .collect();
+                    let grad_slice = match g.get("grad_slice") {
+                        Some(Json::Arr(v)) if v.len() == 2 => Some((
+                            v[0].as_usize().ok_or_else(|| anyhow!("bad grad_slice"))?,
+                            v[1].as_usize().ok_or_else(|| anyhow!("bad grad_slice"))?,
+                        )),
+                        _ => None,
+                    };
+                    graphs.insert(
+                        gname.clone(),
+                        GraphInfo {
+                            file: dir.join(
+                                req(g, "file", &ctx)?.as_str().unwrap_or_default(),
+                            ),
+                            inputs,
+                            outputs,
+                            grad_slice,
+                        },
+                    );
+                }
+            }
+
+            let info = ArtifactInfo {
+                algo: req(a, "algo", &ctx)?.as_str().unwrap_or("").to_string(),
+                env: req(a, "env", &ctx)?.as_str().unwrap_or("").to_string(),
+                obs_dim: usize_of(a, "obs_dim", &ctx)?,
+                flat_act_dim: usize_of(a, "flat_act_dim", &ctx)?,
+                n_actions: a.get("n_actions").and_then(Json::as_usize),
+                act_dim: a.get("act_dim").and_then(Json::as_usize),
+                act_high: req(a, "act_high", &ctx)?.as_f64().unwrap_or(1.0) as f32,
+                discrete: req(a, "discrete", &ctx)?.as_bool().unwrap_or(false),
+                hidden: req(a, "hidden", &ctx)?
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(Json::as_usize)
+                    .collect(),
+                batch_size: usize_of(a, "batch_size", &ctx)?,
+                gamma: req(a, "gamma", &ctx)?.as_f64().unwrap_or(0.99) as f32,
+                params_file: dir.join(req(a, "params_file", &ctx)?.as_str().unwrap_or("")),
+                total_param_size: usize_of(a, "total_param_size", &ctx)?,
+                params,
+                graphs,
+                id: id.clone(),
+            };
+
+            // Sanity: offsets must tile [0, total).
+            let mut expect = 0usize;
+            for p in &info.params {
+                if p.offset != expect || p.size != p.shape.iter().product::<usize>() {
+                    bail!("manifest {id}: param table inconsistent at `{}`", p.name);
+                }
+                expect += p.size;
+            }
+            if expect != info.total_param_size {
+                bail!("manifest {id}: params sum {expect} != total {}", info.total_param_size);
+            }
+
+            artifacts.insert(id, info);
+        }
+        Ok(Self { dir, artifacts })
+    }
+
+    pub fn get(&self, id: &str) -> Result<&ArtifactInfo> {
+        self.artifacts.get(id).ok_or_else(|| {
+            anyhow!(
+                "artifact `{id}` not in manifest (have: {:?})",
+                self.artifacts.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Find the artifact for an (algo, env) pair.
+    pub fn find(&self, algo: &str, env: &str) -> Result<&ArtifactInfo> {
+        self.get(&format!("{algo}_{env}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Needs `make artifacts` (skips otherwise) — validates the real file.
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if !Path::new(dir).join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let m = Manifest::load(dir).unwrap();
+        assert!(!m.artifacts.is_empty());
+        for info in m.artifacts.values() {
+            assert!(info.graphs.contains_key("act"), "{}", info.id);
+            let p0 = info.load_initial_params().unwrap();
+            assert_eq!(p0.len(), info.total_param_size);
+            assert!(p0.iter().all(|v| v.is_finite()));
+            // Learn graphs must declare grad slices within the param table.
+            for (g, gi) in &info.graphs {
+                if g.starts_with("learn") {
+                    let (lo, hi) = gi.grad_slice.expect("learn graph needs grad_slice");
+                    assert!(lo < hi && hi <= info.params.len());
+                    // grads outputs must align with the slice.
+                    let n_grads = gi.outputs.iter().filter(|o| o.starts_with("g:")).count();
+                    assert_eq!(n_grads, hi - lo, "{}:{g}", info.id);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_missing_dir() {
+        assert!(Manifest::load("/nonexistent/dir").is_err());
+    }
+}

@@ -1,0 +1,236 @@
+//! PJRT runtime: load AOT-compiled HLO text and execute it on the CPU
+//! client from the rust hot path (python is never invoked here).
+//!
+//! Thread model: the `xla` crate's wrappers hold raw pointers and are not
+//! `Send`, so each worker thread owns its own [`Runtime`] (client +
+//! compiled executables). Model weights cross threads only as plain
+//! `Vec<f32>` via the parameter server, never as PJRT objects.
+
+pub mod manifest;
+
+pub use manifest::{ArtifactInfo, GraphInfo, Manifest, ParamInfo};
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::cell::Cell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+/// A PJRT CPU client plus execution accounting.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    /// Cumulative executions (metrics / perf accounting).
+    exec_count: Cell<u64>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Rc<Self>> {
+        Ok(Rc::new(Self {
+            client: xla::PjRtClient::cpu().map_err(|e| anyhow!("{e:?}"))?,
+            exec_count: Cell::new(0),
+        }))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn executions(&self) -> u64 {
+        self.exec_count.get()
+    }
+
+    /// Compile one HLO-text file into an executable.
+    pub fn load_hlo_text(&self, path: &std::path::Path) -> Result<xla::PjRtLoadedExecutable> {
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 path {}", path.display()))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))
+    }
+
+    /// Compile every graph of an artifact into a [`Model`].
+    pub fn load_model(self: &Rc<Self>, info: &ArtifactInfo) -> Result<Model> {
+        let mut graphs = BTreeMap::new();
+        for (name, g) in &info.graphs {
+            let exe = self
+                .load_hlo_text(&g.file)
+                .with_context(|| format!("graph {}:{name}", info.id))?;
+            graphs.insert(
+                name.clone(),
+                Graph { exe, info: g.clone(), rt: Rc::clone(self) },
+            );
+        }
+        Ok(Model { info: info.clone(), graphs })
+    }
+}
+
+/// One positional graph input: either host data (uploaded per call) or a
+/// device-resident buffer (uploaded once, reused across calls — the §Perf
+/// fast path for parameters that only change on version bumps).
+pub enum Input<'a> {
+    Host(&'a [f32]),
+    Device(&'a xla::PjRtBuffer),
+}
+
+/// One compiled graph with its positional signature.
+pub struct Graph {
+    exe: xla::PjRtLoadedExecutable,
+    pub info: GraphInfo,
+    rt: Rc<Runtime>,
+}
+
+impl Graph {
+    /// Number of positional inputs.
+    pub fn arity(&self) -> usize {
+        self.info.inputs.len()
+    }
+
+    /// Upload one input to the device (shape from the manifest signature).
+    pub fn upload(&self, input_idx: usize, data: &[f32]) -> Result<xla::PjRtBuffer> {
+        let (name, shape) = &self.info.inputs[input_idx];
+        let expect: usize = shape.iter().product();
+        if data.len() != expect {
+            bail!("upload `{name}`: {} elements, shape {shape:?} wants {expect}", data.len());
+        }
+        self.rt
+            .client
+            .buffer_from_host_buffer(data, shape, None)
+            .map_err(|e| anyhow!("upload `{name}`: {e:?}"))
+    }
+
+    /// Execute with a mix of device-resident and host inputs. Host inputs
+    /// are uploaded on the fly; device inputs are reused as-is.
+    pub fn run_mixed(&self, inputs: &[Input]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.info.inputs.len() {
+            bail!(
+                "graph {}: got {} inputs, signature has {}",
+                self.info.file.display(),
+                inputs.len(),
+                self.info.inputs.len()
+            );
+        }
+        // Keep uploads alive for the call duration.
+        let mut uploaded: Vec<xla::PjRtBuffer> = Vec::new();
+        let mut order: Vec<(bool, usize)> = Vec::with_capacity(inputs.len()); // (is_device, idx)
+        let mut device_refs: Vec<&xla::PjRtBuffer> = Vec::new();
+        for (i, inp) in inputs.iter().enumerate() {
+            match inp {
+                Input::Device(b) => {
+                    order.push((true, device_refs.len()));
+                    device_refs.push(b);
+                }
+                Input::Host(data) => {
+                    order.push((false, uploaded.len()));
+                    uploaded.push(self.upload(i, data)?);
+                }
+            }
+        }
+        let args: Vec<&xla::PjRtBuffer> = order
+            .iter()
+            .map(|&(dev, j)| if dev { device_refs[j] } else { &uploaded[j] })
+            .collect();
+        let result = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(&args)
+            .map_err(|e| anyhow!("execute_b {}: {e:?}", self.info.file.display()))?;
+        self.rt.exec_count.set(self.rt.exec_count.get() + 1);
+        self.collect_outputs(result)
+    }
+
+    fn collect_outputs(&self, result: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<Vec<f32>>> {
+        let root = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let parts = root.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        if parts.len() != self.info.outputs.len() {
+            bail!(
+                "graph {}: {} outputs, manifest says {}",
+                self.info.file.display(),
+                parts.len(),
+                self.info.outputs.len()
+            );
+        }
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(|e| anyhow!("output to_vec: {e:?}")))
+            .collect()
+    }
+
+    /// Execute with positional f32 buffers; shapes come from the manifest.
+    /// Returns one `Vec<f32>` per declared output.
+    pub fn run(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.info.inputs.len() {
+            bail!(
+                "graph {}: got {} inputs, signature has {}",
+                self.info.file.display(),
+                inputs.len(),
+                self.info.inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, (name, shape)) in inputs.iter().zip(&self.info.inputs) {
+            let expect: usize = shape.iter().product();
+            if buf.len() != expect {
+                bail!(
+                    "input `{name}`: {} elements, shape {shape:?} wants {expect}",
+                    buf.len()
+                );
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(buf)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape `{name}`: {e:?}"))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.info.file.display()))?;
+        self.rt.exec_count.set(self.rt.exec_count.get() + 1);
+        // aot.py lowers with return_tuple=True: root is always a tuple.
+        self.collect_outputs(result)
+    }
+}
+
+/// A fully-compiled model: all graphs of one artifact on one runtime.
+pub struct Model {
+    pub info: ArtifactInfo,
+    graphs: BTreeMap<String, Graph>,
+}
+
+impl Model {
+    pub fn graph(&self, name: &str) -> Result<&Graph> {
+        self.graphs.get(name).ok_or_else(|| {
+            anyhow!(
+                "model {} has no graph `{name}` (have {:?})",
+                self.info.id,
+                self.graphs.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn has_graph(&self, name: &str) -> bool {
+        self.graphs.contains_key(name)
+    }
+
+    /// Split a flat parameter vector into per-parameter slices in the
+    /// manifest's declared order (matching graph input positions).
+    pub fn param_slices<'a>(&self, flat: &'a [f32]) -> Result<Vec<&'a [f32]>> {
+        if flat.len() != self.info.total_param_size {
+            bail!(
+                "param vector has {} elems, manifest wants {}",
+                flat.len(),
+                self.info.total_param_size
+            );
+        }
+        Ok(self
+            .info
+            .params
+            .iter()
+            .map(|p| &flat[p.offset..p.offset + p.size])
+            .collect())
+    }
+}

@@ -1,0 +1,486 @@
+//! Discrete-event simulation of the actor/learner/buffer system on an
+//! M-core machine with an accelerator.
+//!
+//! **Why this exists** (DESIGN.md §Substitutions): the paper's Figs 8, 10
+//! and 12 measure wall-clock scalability on an 8-core i7 + GTX 1650. This
+//! container has one core, so real threads cannot show parallel speedup.
+//! The DES models the same system — cores as a resource pool, the replay
+//! buffer's locks as exclusive servers, the accelerator as a serialized
+//! device — driven by per-operation costs *measured on this machine* (see
+//! [`CostProfile::measure`]) so the projected curves keep the paper's
+//! shape: linear scaling while CPU-bound, saturation when the accelerator
+//! or a global lock becomes the bottleneck.
+//!
+//! The simulation is intentionally coarse (segment granularity, FIFO
+//! resource queues); it is a *model* of contention, not a cycle-accurate
+//! replay. Its fidelity claims are limited to ordering and ratio effects:
+//! who wins, by what factor, where the knee sits.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Exclusive resources a segment may need besides its core.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lock {
+    /// `global_tree_lock` of the prioritized buffer.
+    GlobalTree,
+    /// `last_level_lock` of the prioritized buffer.
+    LeafLevel,
+    /// The single accelerator (GPU in the paper; PJRT-CPU here).
+    Accel,
+    /// Parameter-server mutex.
+    Server,
+}
+
+const N_LOCKS: usize = 4;
+
+fn lock_idx(l: Lock) -> usize {
+    match l {
+        Lock::GlobalTree => 0,
+        Lock::LeafLevel => 1,
+        Lock::Accel => 2,
+        Lock::Server => 3,
+    }
+}
+
+/// One step of a task's cycle: hold the core for `ns`, plus `lock` if set.
+#[derive(Clone, Copy, Debug)]
+pub struct Segment {
+    pub ns: u64,
+    pub lock: Option<Lock>,
+    /// Segment runs on the accelerator *instead of* a core (learner
+    /// gradient computation when the accelerator is the GPU).
+    pub on_accel: bool,
+}
+
+impl Segment {
+    pub fn cpu(ns: u64) -> Self {
+        Self { ns, lock: None, on_accel: false }
+    }
+
+    pub fn locked(ns: u64, lock: Lock) -> Self {
+        Self { ns, lock: Some(lock), on_accel: false }
+    }
+
+    pub fn accel(ns: u64) -> Self {
+        Self { ns, lock: None, on_accel: true }
+    }
+}
+
+/// A cyclic task (one actor or one learner).
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub segments: Vec<Segment>,
+    /// Which counter this task's completed cycles add to.
+    pub counts_as: Counter,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Counter {
+    Collect,
+    Consume,
+}
+
+/// Simulation result.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimResult {
+    pub collect_per_sec: f64,
+    pub consume_per_sec: f64,
+    /// Fraction of total core-time spent waiting on each lock.
+    pub lock_wait_frac: [f64; N_LOCKS],
+    pub sim_ns: u64,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum TaskState {
+    WaitingCore,
+    WaitingLock(usize),
+    Running,
+}
+
+/// Event-driven simulation of `tasks` on `cores` cores for `horizon_ns`
+/// with a single-slot accelerator.
+pub fn simulate(tasks: &[Task], cores: usize, horizon_ns: u64) -> SimResult {
+    simulate_with(tasks, cores, 1, horizon_ns)
+}
+
+/// Simulation with an accelerator of `accel_slots` concurrent batches
+/// (GPUs overlap several learners' batches before compute-saturating).
+pub fn simulate_with(
+    tasks: &[Task],
+    cores: usize,
+    accel_slots: usize,
+    horizon_ns: u64,
+) -> SimResult {
+    assert!(cores >= 1);
+    assert!(accel_slots >= 1);
+    let n = tasks.len();
+    let mut seg_idx = vec![0usize; n];
+    let mut state = vec![TaskState::WaitingCore; n];
+    let mut cycles = vec![0u64; n];
+    let mut lock_wait_ns = vec![0u64; n];
+    let mut wait_since = vec![0u64; n];
+
+    // Resource state.
+    let mut free_cores = cores;
+    let mut lock_free = [true; N_LOCKS];
+    let mut accel_free = accel_slots;
+    // FIFO queues per resource.
+    let mut core_q: std::collections::VecDeque<usize> = (0..n).collect();
+    let mut lock_q: [std::collections::VecDeque<usize>; N_LOCKS] = Default::default();
+    let mut accel_q: std::collections::VecDeque<usize> = Default::default();
+
+    // (finish_time, task) completion events.
+    let mut events: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
+    let mut now = 0u64;
+
+    // Try to start task t at `now`; returns true if it started.
+    macro_rules! try_start {
+        ($t:expr, $now:expr, $events:expr, $free_cores:expr, $lock_free:expr, $accel_free:expr) => {{
+            let t = $t;
+            let seg = &tasks[t].segments[seg_idx[t]];
+            let need_core = !seg.on_accel;
+            let core_ok = !need_core || $free_cores > 0;
+            let accel_ok = !seg.on_accel || $accel_free > 0;
+            let lock_ok = seg.lock.map_or(true, |l| $lock_free[lock_idx(l)]);
+            if core_ok && accel_ok && lock_ok {
+                if need_core {
+                    $free_cores -= 1;
+                }
+                if seg.on_accel {
+                    $accel_free -= 1;
+                }
+                if let Some(l) = seg.lock {
+                    $lock_free[lock_idx(l)] = false;
+                }
+                if state[t] != TaskState::Running {
+                    lock_wait_ns[t] += $now - wait_since[t];
+                }
+                state[t] = TaskState::Running;
+                $events.push(Reverse(($now + seg.ns.max(1), t)));
+                true
+            } else {
+                false
+            }
+        }};
+    }
+
+    // Kick off: everyone queued for a core.
+    {
+        let mut defer = std::collections::VecDeque::new();
+        while let Some(t) = core_q.pop_front() {
+            wait_since[t] = 0;
+            if !try_start!(t, 0u64, events, free_cores, lock_free, accel_free) {
+                let seg = &tasks[t].segments[seg_idx[t]];
+                if seg.on_accel && accel_free == 0 {
+                    state[t] = TaskState::WaitingLock(lock_idx(Lock::Accel));
+                    accel_q.push_back(t);
+                } else if let Some(l) = seg.lock.filter(|l| !lock_free[lock_idx(*l)]) {
+                    state[t] = TaskState::WaitingLock(lock_idx(l));
+                    lock_q[lock_idx(l)].push_back(t);
+                } else {
+                    defer.push_back(t);
+                }
+            }
+        }
+        core_q = defer;
+    }
+
+    while let Some(Reverse((t_end, t))) = events.pop() {
+        if t_end > horizon_ns {
+            now = horizon_ns;
+            break;
+        }
+        now = t_end;
+        // Release resources of the finished segment.
+        let seg = tasks[t].segments[seg_idx[t]];
+        if !seg.on_accel {
+            free_cores += 1;
+        } else {
+            accel_free += 1;
+        }
+        if let Some(l) = seg.lock {
+            lock_free[lock_idx(l)] = true;
+        }
+        // Advance the task.
+        seg_idx[t] += 1;
+        if seg_idx[t] == tasks[t].segments.len() {
+            seg_idx[t] = 0;
+            cycles[t] += 1;
+        }
+        state[t] = TaskState::WaitingCore;
+        wait_since[t] = now;
+        core_q.push_back(t);
+
+        // Greedy re-dispatch: wake lock waiters first (they already hold
+        // their place), then core waiters.
+        for li in 0..N_LOCKS {
+            if lock_free[li] || li == lock_idx(Lock::Accel) {
+                if let Some(&w) = lock_q[li].front() {
+                    if try_start!(w, now, events, free_cores, lock_free, accel_free) {
+                        lock_q[li].pop_front();
+                    }
+                }
+            }
+        }
+        if accel_free > 0 {
+            if let Some(&w) = accel_q.front() {
+                if try_start!(w, now, events, free_cores, lock_free, accel_free) {
+                    accel_q.pop_front();
+                }
+            }
+        }
+        let mut requeue = std::collections::VecDeque::new();
+        while let Some(w) = core_q.pop_front() {
+            if !try_start!(w, now, events, free_cores, lock_free, accel_free) {
+                let seg = &tasks[w].segments[seg_idx[w]];
+                if seg.on_accel && accel_free == 0 {
+                    state[w] = TaskState::WaitingLock(lock_idx(Lock::Accel));
+                    accel_q.push_back(w);
+                } else if let Some(l) = seg.lock.filter(|l| !lock_free[lock_idx(*l)]) {
+                    state[w] = TaskState::WaitingLock(lock_idx(l));
+                    lock_q[lock_idx(l)].push_back(w);
+                } else {
+                    requeue.push_back(w);
+                }
+            }
+        }
+        core_q = requeue;
+    }
+
+    let secs = (now.max(1)) as f64 / 1e9;
+    let mut collect = 0u64;
+    let mut consume = 0u64;
+    for (i, task) in tasks.iter().enumerate() {
+        match task.counts_as {
+            Counter::Collect => collect += cycles[i],
+            Counter::Consume => consume += cycles[i],
+        }
+    }
+    let total_wait: u64 = lock_wait_ns.iter().sum();
+    let mut frac = [0.0; N_LOCKS];
+    // Approximate attribution: all wait counted under the first lock the
+    // task blocks on; refined attribution isn't needed for the figures.
+    frac[0] = total_wait as f64 / (now.max(1) as f64 * n as f64);
+    SimResult {
+        collect_per_sec: collect as f64 / secs,
+        consume_per_sec: consume as f64 / secs,
+        lock_wait_frac: frac,
+        sim_ns: now,
+    }
+}
+
+/// Build actor/learner task templates from per-op costs (ns).
+#[derive(Clone, Copy, Debug)]
+pub struct OpCosts {
+    /// Actor: policy inference for one step.
+    pub act_ns: u64,
+    /// Actor: one env.step.
+    pub env_ns: u64,
+    /// Actor: insert — lock-held tree update portion.
+    pub insert_lock_ns: u64,
+    /// Actor: insert — data copy portion (outside locks with lazy
+    /// writing; inside the global lock for the baseline).
+    pub insert_copy_ns: u64,
+    /// Learner: batch descent portion (global lock held).
+    pub sample_lock_ns: u64,
+    /// Learner: batch row copies (outside lock with lazy writing).
+    pub batch_copy_ns: u64,
+    /// Learner: gradient computation (accelerator).
+    pub learn_ns: u64,
+    /// Learner: priority update (lock-held).
+    pub update_lock_ns: u64,
+    /// Learner: parameter-server push.
+    pub server_ns: u64,
+}
+
+impl OpCosts {
+    fn learn_segment(&self, serialized_accel: bool) -> Segment {
+        if serialized_accel {
+            // Paper testbed: one GPU — learner compute is exclusive.
+            Segment::accel(self.learn_ns)
+        } else {
+            // This host: PJRT-CPU learners, one client per thread —
+            // learner compute parallelizes across cores.
+            Segment::cpu(self.learn_ns)
+        }
+    }
+
+    /// Tasks for the PAL design: short lock segments, copies outside.
+    /// `serialized_accel` models the paper's single GPU; false models
+    /// per-thread PJRT-CPU learners.
+    pub fn pal_tasks_accel(
+        &self,
+        actors: usize,
+        learners: usize,
+        serialized_accel: bool,
+    ) -> Vec<Task> {
+        let mut tasks = Vec::new();
+        for _ in 0..actors {
+            tasks.push(Task {
+                segments: vec![
+                    Segment::cpu(self.act_ns),
+                    Segment::cpu(self.env_ns),
+                    Segment::locked(self.insert_lock_ns, Lock::GlobalTree),
+                    Segment::cpu(self.insert_copy_ns), // lazy write: no lock
+                    Segment::locked(self.insert_lock_ns, Lock::GlobalTree),
+                ],
+                counts_as: Counter::Collect,
+            });
+        }
+        for _ in 0..learners {
+            tasks.push(Task {
+                segments: vec![
+                    Segment::locked(self.sample_lock_ns, Lock::GlobalTree),
+                    Segment::cpu(self.batch_copy_ns), // copies outside lock
+                    self.learn_segment(serialized_accel),
+                    Segment::locked(self.update_lock_ns, Lock::GlobalTree),
+                    Segment::locked(self.server_ns, Lock::Server),
+                ],
+                counts_as: Counter::Consume,
+            });
+        }
+        tasks
+    }
+
+    /// PAL tasks with the paper's serialized accelerator.
+    pub fn pal_tasks(&self, actors: usize, learners: usize) -> Vec<Task> {
+        self.pal_tasks_accel(actors, learners, true)
+    }
+
+    /// Baseline tasks: ONE global lock held across everything the buffer
+    /// does, including the copies.
+    pub fn baseline_tasks_accel(
+        &self,
+        actors: usize,
+        learners: usize,
+        serialized_accel: bool,
+    ) -> Vec<Task> {
+        let mut tasks = Vec::new();
+        for _ in 0..actors {
+            tasks.push(Task {
+                segments: vec![
+                    Segment::cpu(self.act_ns),
+                    Segment::cpu(self.env_ns),
+                    Segment::locked(
+                        2 * self.insert_lock_ns + self.insert_copy_ns,
+                        Lock::GlobalTree,
+                    ),
+                ],
+                counts_as: Counter::Collect,
+            });
+        }
+        for _ in 0..learners {
+            tasks.push(Task {
+                segments: vec![
+                    Segment::locked(
+                        self.sample_lock_ns + self.batch_copy_ns,
+                        Lock::GlobalTree,
+                    ),
+                    self.learn_segment(serialized_accel),
+                    Segment::locked(self.update_lock_ns, Lock::GlobalTree),
+                    Segment::locked(self.server_ns, Lock::Server),
+                ],
+                counts_as: Counter::Consume,
+            });
+        }
+        tasks
+    }
+
+    /// Baseline tasks with the paper's serialized accelerator.
+    pub fn baseline_tasks(&self, actors: usize, learners: usize) -> Vec<Task> {
+        self.baseline_tasks_accel(actors, learners, true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn costs() -> OpCosts {
+        OpCosts {
+            act_ns: 40_000,
+            env_ns: 10_000,
+            insert_lock_ns: 1_000,
+            insert_copy_ns: 2_000,
+            sample_lock_ns: 20_000,
+            batch_copy_ns: 10_000,
+            learn_ns: 500_000,
+            update_lock_ns: 15_000,
+            server_ns: 20_000,
+        }
+    }
+
+    #[test]
+    fn single_actor_throughput_matches_cycle_time() {
+        let c = costs();
+        let tasks = c.pal_tasks(1, 0);
+        let r = simulate(&tasks, 1, 1_000_000_000);
+        let cycle_ns: u64 = tasks[0].segments.iter().map(|s| s.ns).sum();
+        let expect = 1e9 / cycle_ns as f64;
+        assert!(
+            (r.collect_per_sec - expect).abs() / expect < 0.02,
+            "{} vs {expect}",
+            r.collect_per_sec
+        );
+    }
+
+    #[test]
+    fn actors_scale_linearly_until_cores_run_out() {
+        let c = costs();
+        let one = simulate(&c.pal_tasks(1, 0), 8, 500_000_000).collect_per_sec;
+        let four = simulate(&c.pal_tasks(4, 0), 8, 500_000_000).collect_per_sec;
+        let ratio = four / one;
+        assert!(ratio > 3.5, "4-actor speedup only {ratio:.2}");
+        // With 2 cores, 4 actors can't exceed ~2x.
+        let starved = simulate(&c.pal_tasks(4, 0), 2, 500_000_000).collect_per_sec;
+        assert!(starved / one < 2.3, "{}", starved / one);
+    }
+
+    #[test]
+    fn pal_beats_baseline_under_contention() {
+        // Buffer-dominated workload (the Fig 9 regime): cheap act/env so
+        // the lock discipline is what differentiates the designs.
+        let c = OpCosts {
+            act_ns: 1_000,
+            env_ns: 500,
+            insert_lock_ns: 700,
+            insert_copy_ns: 2_500,
+            sample_lock_ns: 20_000,
+            batch_copy_ns: 15_000,
+            learn_ns: 30_000,
+            update_lock_ns: 15_000,
+            server_ns: 5_000,
+        };
+        let pal = simulate(&c.pal_tasks(6, 2), 8, 500_000_000);
+        let base = simulate(&c.baseline_tasks(6, 2), 8, 500_000_000);
+        assert!(
+            pal.collect_per_sec > 1.2 * base.collect_per_sec,
+            "pal {} vs base {}",
+            pal.collect_per_sec,
+            base.collect_per_sec
+        );
+        // And with compute-dominated costs the two designs converge.
+        let c2 = costs();
+        let pal2 = simulate(&c2.pal_tasks(4, 2), 8, 500_000_000);
+        let base2 = simulate(&c2.baseline_tasks(4, 2), 8, 500_000_000);
+        assert!(pal2.collect_per_sec >= 0.95 * base2.collect_per_sec);
+    }
+
+    #[test]
+    fn accelerator_serializes_learners() {
+        let c = costs();
+        // learn_ns dominates; adding learners beyond 1 cannot scale
+        // because the accelerator is exclusive.
+        let one = simulate(&c.pal_tasks(0, 1), 8, 500_000_000).consume_per_sec;
+        let four = simulate(&c.pal_tasks(0, 4), 8, 500_000_000).consume_per_sec;
+        assert!(four / one < 1.4, "accelerator-bound: {}", four / one);
+    }
+
+    #[test]
+    fn zero_horizon_safe() {
+        let c = costs();
+        let r = simulate(&c.pal_tasks(1, 1), 1, 0);
+        assert_eq!(r.collect_per_sec, 0.0);
+    }
+}

@@ -1,0 +1,126 @@
+//! Cache-line-aligned heap buffers.
+//!
+//! The paper's data-layout contribution (§IV-C4, Fig 6) requires every
+//! group of K sibling nodes to start on a cache-line boundary. Rust's `Vec`
+//! only guarantees element alignment, so we allocate explicitly with a
+//! 64-byte-aligned `Layout`.
+
+use std::alloc::{alloc_zeroed, dealloc, Layout};
+use std::ops::{Deref, DerefMut};
+
+/// Cache line size assumed throughout the crate (bytes).
+pub const CACHE_LINE: usize = 64;
+
+/// A heap slice of `T` whose first element sits on a 64-byte boundary.
+///
+/// Memory is zero-initialised, which is a valid bit-pattern for every `T`
+/// we store (f32 bits / atomics over integer words).
+pub struct AlignedBox<T> {
+    ptr: *mut T,
+    len: usize,
+}
+
+// Safety: AlignedBox owns its allocation exclusively; `T: Send/Sync`
+// transfers as for Box<[T]>.
+unsafe impl<T: Send> Send for AlignedBox<T> {}
+unsafe impl<T: Sync> Sync for AlignedBox<T> {}
+
+impl<T> AlignedBox<T> {
+    /// Allocate `len` zeroed elements aligned to the cache line.
+    ///
+    /// Panics if `len == 0` allocations are requested with a zero-sized `T`
+    /// or if the allocator fails.
+    pub fn zeroed(len: usize) -> Self {
+        assert!(std::mem::size_of::<T>() > 0, "ZSTs not supported");
+        if len == 0 {
+            return Self { ptr: std::ptr::NonNull::dangling().as_ptr(), len: 0 };
+        }
+        let align = CACHE_LINE.max(std::mem::align_of::<T>());
+        let layout = Layout::from_size_align(len * std::mem::size_of::<T>(), align)
+            .expect("bad layout");
+        // Safety: layout has non-zero size (checked above).
+        let ptr = unsafe { alloc_zeroed(layout) } as *mut T;
+        assert!(!ptr.is_null(), "allocation failure of {} bytes", layout.size());
+        Self { ptr, len }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_ptr(&self) -> *const T {
+        self.ptr
+    }
+}
+
+impl<T> Deref for AlignedBox<T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        // Safety: ptr/len describe our exclusive allocation.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+}
+
+impl<T> DerefMut for AlignedBox<T> {
+    fn deref_mut(&mut self) -> &mut [T] {
+        // Safety: &mut self gives exclusive access.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr, self.len) }
+    }
+}
+
+impl<T> Drop for AlignedBox<T> {
+    fn drop(&mut self) {
+        if self.len == 0 {
+            return;
+        }
+        let align = CACHE_LINE.max(std::mem::align_of::<T>());
+        let layout = Layout::from_size_align(self.len * std::mem::size_of::<T>(), align)
+            .expect("bad layout");
+        // Safety: allocated with the identical layout in `zeroed`.
+        unsafe { dealloc(self.ptr as *mut u8, layout) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aligned_to_cache_line() {
+        for len in [1usize, 3, 16, 17, 1024] {
+            let b = AlignedBox::<f32>::zeroed(len);
+            assert_eq!(b.as_ptr() as usize % CACHE_LINE, 0);
+            assert_eq!(b.len(), len);
+            assert!(b.iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn zero_len_ok() {
+        let b = AlignedBox::<u64>::zeroed(0);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn mutation_roundtrip() {
+        let mut b = AlignedBox::<u32>::zeroed(100);
+        for (i, v) in b.iter_mut().enumerate() {
+            *v = i as u32;
+        }
+        assert_eq!(b[99], 99);
+        assert_eq!(b.iter().sum::<u32>(), 4950);
+    }
+
+    #[test]
+    fn atomics_supported() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        let b = AlignedBox::<AtomicU32>::zeroed(64);
+        b[5].store(7, Ordering::Relaxed);
+        assert_eq!(b[5].load(Ordering::Relaxed), 7);
+        assert_eq!(b[6].load(Ordering::Relaxed), 0);
+    }
+}

@@ -1,0 +1,171 @@
+//! Minimal benchmark harness (offline substitute for criterion).
+//!
+//! `cargo bench` targets are `harness = false` binaries that call
+//! [`bench_fn`] / [`Table`]. Reports mean, std, p50 and p99 over timed
+//! iterations after a warmup phase.
+
+use crate::util::stats::{percentile, Running};
+use std::time::Instant;
+
+/// Result of one measured benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+}
+
+impl BenchResult {
+    pub fn throughput_per_sec(&self) -> f64 {
+        1e9 / self.mean_ns.max(1e-9)
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} {:>12} {:>12} {:>12}  ({} iters)",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+            self.iters
+        )
+    }
+}
+
+/// Human duration formatting.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Time `f` (one logical operation per call). Auto-chooses iteration
+/// count so total measured time ≈ `budget_ms`.
+pub fn bench_fn<F: FnMut()>(name: &str, budget_ms: u64, mut f: F) -> BenchResult {
+    // Warmup + calibration.
+    let t0 = Instant::now();
+    let mut calib_iters = 0usize;
+    while t0.elapsed().as_millis() < (budget_ms / 4).max(5) as u128 {
+        f();
+        calib_iters += 1;
+    }
+    let per_iter = t0.elapsed().as_nanos() as f64 / calib_iters.max(1) as f64;
+    let target = ((budget_ms as f64 * 1e6) / per_iter.max(1.0)).ceil() as usize;
+    let iters = target.clamp(10, 1_000_000);
+
+    // Measured phase: sample in chunks to keep timer overhead low.
+    let chunk = (iters / 50).max(1);
+    let mut samples = Vec::with_capacity(iters / chunk + 1);
+    let mut stats = Running::new();
+    let mut done = 0usize;
+    while done < iters {
+        let n = chunk.min(iters - done);
+        let t = Instant::now();
+        for _ in 0..n {
+            f();
+        }
+        let per = t.elapsed().as_nanos() as f64 / n as f64;
+        samples.push(per);
+        stats.push(per);
+        done += n;
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: stats.mean(),
+        std_ns: stats.std(),
+        p50_ns: percentile(&samples, 50.0),
+        p99_ns: percentile(&samples, 99.0),
+    }
+}
+
+/// Header for bench output blocks.
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+    println!("{:<44} {:>12} {:>12} {:>12}", "benchmark", "mean", "p50", "p99");
+}
+
+/// Simple aligned table printer for figure-regeneration benches.
+pub struct Table {
+    cols: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(cols: &[&str]) -> Self {
+        Self { cols: cols.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.cols.len());
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut w: Vec<usize> = self.cols.iter().map(|c| c.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>width$}", c, width = w[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", line(&self.cols));
+        println!("{}", w.iter().map(|n| "-".repeat(*n)).collect::<Vec<_>>().join("  "));
+        for r in &self.rows {
+            println!("{}", line(r));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sleepless_work() {
+        let mut x = 0u64;
+        let r = bench_fn("spin", 20, || {
+            for i in 0..100 {
+                x = x.wrapping_add(i);
+            }
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p99_ns >= r.p50_ns * 0.5);
+        assert!(r.iters >= 10);
+        std::hint::black_box(x);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+
+    #[test]
+    fn table_prints() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.print();
+    }
+}

@@ -1,0 +1,138 @@
+//! Tiny CLI argument parser (offline substitute for clap).
+//!
+//! Supports `--key value`, `--key=value`, boolean flags (`--flag`),
+//! repeated keys, and positional arguments, with typed accessors and an
+//! unknown-flag check against a declared option list.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, Vec<String>>,
+}
+
+impl Args {
+    /// Parse a raw argument list (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if rest.is_empty() {
+                    // `--` terminates flag parsing.
+                    out.positional.extend(it);
+                    break;
+                }
+                let (key, val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => {
+                        // Value is the next token unless it looks like a flag.
+                        let take = it
+                            .peek()
+                            .map(|n| !n.starts_with("--"))
+                            .unwrap_or(false);
+                        let v = if take { it.next() } else { None };
+                        (rest.to_string(), v)
+                    }
+                };
+                out.flags
+                    .entry(key)
+                    .or_default()
+                    .push(val.unwrap_or_else(|| "true".to_string()));
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).and_then(|v| v.last()).map(String::as_str)
+    }
+
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.flags
+            .get(key)
+            .map(|v| v.iter().map(String::as_str).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<T>()
+                .map_err(|_| anyhow!("--{key}: cannot parse `{s}`")),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+            || (self.has(key) && self.get(key).is_none())
+    }
+
+    /// Error on flags not in `allowed` (catches typos).
+    pub fn check_known(&self, allowed: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !allowed.contains(&k.as_str()) {
+                bail!("unknown flag --{k} (allowed: {allowed:?})");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string)).unwrap()
+    }
+
+    #[test]
+    fn mixed_styles() {
+        let a = args("train --algo dqn --steps=5000 --verbose --seed 7 extra");
+        assert_eq!(a.positional, vec!["train", "extra"]);
+        assert_eq!(a.get("algo"), Some("dqn"));
+        assert_eq!(a.parse_or("steps", 0usize).unwrap(), 5000);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.parse_or("seed", 0u64).unwrap(), 7);
+        assert_eq!(a.parse_or("missing", 42i32).unwrap(), 42);
+    }
+
+    #[test]
+    fn repeated_and_double_dash() {
+        let a = args("--x 1 --x 2 -- --not-a-flag");
+        assert_eq!(a.get_all("x"), vec!["1", "2"]);
+        assert_eq!(a.get("x"), Some("2"));
+        assert_eq!(a.positional, vec!["--not-a-flag"]);
+    }
+
+    #[test]
+    fn unknown_flag_detected() {
+        let a = args("--algo dqn --typo 3");
+        assert!(a.check_known(&["algo"]).is_err());
+        assert!(a.check_known(&["algo", "typo"]).is_ok());
+    }
+
+    #[test]
+    fn parse_error_reported() {
+        let a = args("--steps abc");
+        assert!(a.parse_or("steps", 0usize).is_err());
+    }
+}

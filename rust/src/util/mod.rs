@@ -1,0 +1,8 @@
+//! Substrate utilities (offline-friendly stand-ins for common crates).
+pub mod aligned;
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

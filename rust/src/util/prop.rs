@@ -1,0 +1,207 @@
+//! Minimal property-testing harness (offline substitute for proptest).
+//!
+//! `check` runs a property over `cases` random inputs from a generator;
+//! on failure it performs greedy shrinking via the generator's
+//! `shrink` candidates and reports the minimal failing input with the
+//! seed needed to replay it.
+
+use crate::util::rng::Rng;
+
+/// A generator of random values with optional shrinking.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+
+    /// Candidate simpler values (default: no shrinking).
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Uniform usize in [lo, hi] with halving shrink toward lo.
+pub struct UsizeIn {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Gen for UsizeIn {
+    type Value = usize;
+
+    fn generate(&self, rng: &mut Rng) -> usize {
+        self.lo + rng.below_usize(self.hi - self.lo + 1)
+    }
+
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (v - self.lo) / 2);
+            out.push(v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Vec of f32 in [lo, hi) with length in [min_len, max_len]; shrinks by
+/// halving the vector and zeroing elements.
+pub struct VecF32 {
+    pub min_len: usize,
+    pub max_len: usize,
+    pub lo: f32,
+    pub hi: f32,
+}
+
+impl Gen for VecF32 {
+    type Value = Vec<f32>;
+
+    fn generate(&self, rng: &mut Rng) -> Vec<f32> {
+        let len = self.min_len + rng.below_usize(self.max_len - self.min_len + 1);
+        (0..len).map(|_| rng.range_f32(self.lo, self.hi)).collect()
+    }
+
+    fn shrink(&self, v: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            out.push(v[..self.min_len.max(v.len() / 2)].to_vec());
+        }
+        if v.iter().any(|&x| x != self.lo) {
+            out.push(vec![self.lo; v.len()]);
+        }
+        out
+    }
+}
+
+/// Pair of independent generators.
+pub struct Pair<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> =
+            self.0.shrink(&v.0).into_iter().map(|a| (a, v.1.clone())).collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+/// Result of a property check.
+#[derive(Debug)]
+pub enum PropResult<V> {
+    Ok { cases: usize },
+    Failed { seed: u64, original: V, minimal: V, shrinks: usize, message: String },
+}
+
+/// Run `prop` over `cases` generated inputs. Panics with a replayable
+/// report on failure (standard test integration).
+pub fn check<G: Gen>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    gen: &G,
+    prop: impl Fn(&G::Value) -> Result<(), String>,
+) {
+    match check_quiet(seed, cases, gen, &prop) {
+        PropResult::Ok { .. } => {}
+        PropResult::Failed { seed, original, minimal, shrinks, message } => {
+            panic!(
+                "property `{name}` failed (seed {seed}):\n  original: {original:?}\n  \
+                 minimal ({shrinks} shrinks): {minimal:?}\n  error: {message}"
+            );
+        }
+    }
+}
+
+/// Non-panicking variant (used to test the harness itself).
+pub fn check_quiet<G: Gen>(
+    seed: u64,
+    cases: usize,
+    gen: &G,
+    prop: &impl Fn(&G::Value) -> Result<(), String>,
+) -> PropResult<G::Value> {
+    let mut rng = Rng::new(seed);
+    for _ in 0..cases {
+        let v = gen.generate(&mut rng);
+        if let Err(msg) = prop(&v) {
+            // Greedy shrink.
+            let original = v.clone();
+            let mut cur = v;
+            let mut cur_msg = msg;
+            let mut shrinks = 0usize;
+            'outer: loop {
+                for cand in gen.shrink(&cur) {
+                    if let Err(m) = prop(&cand) {
+                        cur = cand;
+                        cur_msg = m;
+                        shrinks += 1;
+                        if shrinks < 200 {
+                            continue 'outer;
+                        }
+                    }
+                }
+                break;
+            }
+            return PropResult::Failed {
+                seed,
+                original,
+                minimal: cur,
+                shrinks,
+                message: cur_msg,
+            };
+        }
+    }
+    PropResult::Ok { cases }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum-nonneg", 1, 200, &VecF32 { min_len: 0, max_len: 20, lo: 0.0, hi: 5.0 },
+              |v| {
+                  if v.iter().sum::<f32>() >= 0.0 {
+                      Ok(())
+                  } else {
+                      Err("negative sum".into())
+                  }
+              });
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let gen = UsizeIn { lo: 0, hi: 1000 };
+        let r = check_quiet(7, 500, &gen, &|&v| {
+            if v < 100 {
+                Ok(())
+            } else {
+                Err(format!("{v} >= 100"))
+            }
+        });
+        match r {
+            PropResult::Failed { minimal, .. } => {
+                // Greedy shrink should land near the boundary.
+                assert!(minimal >= 100 && minimal <= 550, "minimal {minimal}");
+            }
+            PropResult::Ok { .. } => panic!("property should fail"),
+        }
+    }
+
+    #[test]
+    fn pair_generator_shrinks_both_sides() {
+        let gen = Pair(UsizeIn { lo: 1, hi: 64 }, UsizeIn { lo: 1, hi: 64 });
+        let mut rng = Rng::new(3);
+        let v = gen.generate(&mut rng);
+        assert!((1..=64).contains(&v.0) && (1..=64).contains(&v.1));
+        let shrunk = gen.shrink(&(32, 32));
+        assert!(shrunk.iter().any(|&(a, _)| a < 32));
+        assert!(shrunk.iter().any(|&(_, b)| b < 32));
+    }
+}

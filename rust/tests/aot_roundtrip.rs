@@ -1,0 +1,22 @@
+//! Integration smoke: jax-lowered HLO text loads, compiles and executes
+//! with correct numerics through the runtime. Requires `make artifacts`
+//! (or the reference gen_hlo.py) to have produced the smoke artifact.
+use pal_rl::runtime::Runtime;
+
+#[test]
+fn load_and_execute_smoke_hlo() {
+    let path = std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/smoke.hlo.txt"));
+    if !path.exists() {
+        eprintln!("skipping: smoke artifact missing (run `make artifacts`)");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_hlo_text(path).unwrap();
+    let x = xla::Literal::vec1(&[1f32, 2., 3., 4.]).reshape(&[2, 2]).unwrap();
+    let y = xla::Literal::vec1(&[1f32, 1., 1., 1.]).reshape(&[2, 2]).unwrap();
+    let result = exe.execute::<xla::Literal>(&[x, y]).unwrap()[0][0]
+        .to_literal_sync()
+        .unwrap();
+    let out = result.to_tuple1().unwrap();
+    assert_eq!(out.to_vec::<f32>().unwrap(), vec![5f32, 5., 9., 9.]);
+}

@@ -1,0 +1,203 @@
+//! Property-based tests on the replay-buffer invariants (the paper's
+//! correctness claims, §IV), driven by the in-repo `util::prop` harness
+//! across randomized shapes, fan-outs, priorities and op interleavings.
+
+use pal_rl::replay::{
+    GlobalLockReplay, KArySumTree, PrioritizedConfig, PrioritizedReplay, ReplayBuffer,
+    SampleBatch, Transition,
+};
+use pal_rl::util::prop::{check, Gen, Pair, UsizeIn, VecF32};
+use pal_rl::util::rng::Rng;
+
+fn tr(v: f32, obs_dim: usize, act_dim: usize) -> Transition {
+    Transition {
+        obs: vec![v; obs_dim],
+        action: vec![v; act_dim],
+        next_obs: vec![v + 1.0; obs_dim],
+        reward: v,
+        done: false,
+    }
+}
+
+/// Invariant: root == Σ leaves for any (capacity, fanout) and any
+/// sequence of updates.
+#[test]
+fn prop_tree_root_equals_leaf_sum() {
+    let gen = Pair(
+        Pair(UsizeIn { lo: 1, hi: 300 }, UsizeIn { lo: 2, hi: 128 }),
+        VecF32 { min_len: 1, max_len: 200, lo: 0.0, hi: 10.0 },
+    );
+    check("root=Σleaves", 42, 60, &gen, |((cap, fanout), prios)| {
+        let t = KArySumTree::new(*cap, *fanout);
+        let mut expect = 0.0f64;
+        let mut rng = Rng::new(7);
+        let mut vals = vec![0.0f32; *cap];
+        for &p in prios {
+            let i = rng.below_usize(*cap);
+            vals[i] = p;
+            t.update(i, p);
+        }
+        for &v in &vals {
+            expect += v as f64;
+        }
+        let got = t.total() as f64;
+        let scale = expect.abs().max(1.0);
+        if (got - expect).abs() / scale < 1e-3 {
+            Ok(())
+        } else {
+            Err(format!("total {got} vs Σ {expect} (cap {cap}, K {fanout})"))
+        }
+    });
+}
+
+/// Invariant: prefix-sum descent never returns a zero-priority leaf when
+/// the tree holds positive mass, for any sparsity pattern.
+#[test]
+fn prop_descent_skips_zero_leaves() {
+    let gen = Pair(UsizeIn { lo: 2, hi: 128 }, UsizeIn { lo: 4, hi: 256 });
+    check("no-zero-leaf", 43, 80, &gen, |(fanout, cap)| {
+        let t = KArySumTree::new(*cap, *fanout);
+        let mut rng = Rng::new(*cap as u64 ^ (*fanout as u64) << 8);
+        let mut any = false;
+        for i in 0..*cap {
+            if rng.chance(0.3) {
+                t.update(i, rng.f32() + 0.01);
+                any = true;
+            }
+        }
+        if !any {
+            t.update(0, 1.0);
+        }
+        for k in 0..200 {
+            let x = (k as f32 / 200.0) * t.total();
+            let (idx, p) = t.prefix_sum_index(x);
+            if p <= 0.0 {
+                return Err(format!("zero leaf {idx} at x={x} (cap {cap}, K {fanout})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Invariant: after any insert/sample/update interleaving the buffer's
+/// tree satisfies root≈Σleaves and len never exceeds capacity.
+#[test]
+fn prop_buffer_interleaving_consistent() {
+    let gen = Pair(
+        Pair(UsizeIn { lo: 8, hi: 256 }, UsizeIn { lo: 16, hi: 64 }),
+        UsizeIn { lo: 1, hi: 2000 },
+    );
+    check("interleave", 44, 25, &gen, |((cap, fanout), ops)| {
+        let b = PrioritizedReplay::new(PrioritizedConfig {
+            capacity: *cap,
+            obs_dim: 3,
+            act_dim: 1,
+            fanout: *fanout,
+            alpha: 0.6,
+            beta: 0.4,
+            lazy_writing: true,
+        });
+        let mut rng = Rng::new(*ops as u64);
+        let mut out = SampleBatch::default();
+        for i in 0..*ops {
+            match rng.below(10) {
+                0..=5 => b.insert(&tr(i as f32, 3, 1)),
+                6..=7 => {
+                    b.sample(8, &mut rng, &mut out);
+                }
+                _ => {
+                    if !out.indices.is_empty() {
+                        let tds: Vec<f32> =
+                            out.indices.iter().map(|_| rng.f32() * 3.0).collect();
+                        b.update_priorities(&out.indices.clone(), &tds);
+                    }
+                }
+            }
+            if b.len() > *cap {
+                return Err(format!("len {} > capacity {cap}", b.len()));
+            }
+        }
+        b.rebuild_tree();
+        let err = b.tree().invariant_error();
+        if err < 1e-4 {
+            Ok(())
+        } else {
+            Err(format!("invariant error {err} after {ops} ops"))
+        }
+    });
+}
+
+/// Invariant: sampled importance weights are in (0, 1] and sampled
+/// indices are always < len, for both prioritized implementations.
+#[test]
+fn prop_sample_outputs_well_formed() {
+    let gen = Pair(UsizeIn { lo: 1, hi: 200 }, UsizeIn { lo: 1, hi: 64 });
+    check("sample-well-formed", 45, 50, &gen, |(inserts, batch)| {
+        let impls: Vec<Box<dyn ReplayBuffer>> = vec![
+            Box::new(PrioritizedReplay::new(PrioritizedConfig {
+                capacity: 128,
+                obs_dim: 2,
+                act_dim: 1,
+                fanout: 16,
+                alpha: 0.7,
+                beta: 0.5,
+                lazy_writing: true,
+            })),
+            Box::new(GlobalLockReplay::new(128, 2, 1, 0.7, 0.5)),
+        ];
+        for b in &impls {
+            let mut rng = Rng::new(9);
+            for i in 0..*inserts {
+                b.insert(&tr(i as f32, 2, 1));
+            }
+            let mut out = SampleBatch::default();
+            if b.sample(*batch, &mut rng, &mut out) {
+                let n = b.len();
+                for (&idx, &w) in out.indices.iter().zip(&out.is_weights) {
+                    if idx >= n.max(128.min(*inserts)) && idx >= 128 {
+                        return Err(format!("{}: index {idx} out of range", b.name()));
+                    }
+                    if !(w > 0.0 && w <= 1.0 + 1e-5) {
+                        return Err(format!("{}: weight {w} out of (0,1]", b.name()));
+                    }
+                }
+                if out.obs.len() != out.len() * 2 {
+                    return Err(format!("{}: obs length mismatch", b.name()));
+                }
+            } else if *inserts > 0 {
+                return Err(format!("{}: sample failed with {inserts} rows", b.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Invariant: priorities round-trip through update/get as (|td|+ε)^α.
+#[test]
+fn prop_priority_roundtrip() {
+    let gen = VecF32 { min_len: 1, max_len: 64, lo: 0.0, hi: 50.0 };
+    check("priority-roundtrip", 46, 60, &gen, |tds| {
+        let b = PrioritizedReplay::new(PrioritizedConfig {
+            capacity: 64,
+            obs_dim: 2,
+            act_dim: 1,
+            fanout: 16,
+            alpha: 0.6,
+            beta: 0.4,
+            lazy_writing: true,
+        });
+        for i in 0..tds.len() {
+            b.insert(&tr(i as f32, 2, 1));
+        }
+        let idx: Vec<usize> = (0..tds.len()).collect();
+        b.update_priorities(&idx, tds);
+        for (i, &td) in tds.iter().enumerate() {
+            let want = b.transform_priority(td);
+            let got = b.get_priority(i);
+            if (got - want).abs() > 1e-5 * want.max(1.0) {
+                return Err(format!("slot {i}: got {got}, want {want}"));
+            }
+        }
+        Ok(())
+    });
+}

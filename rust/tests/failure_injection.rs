@@ -1,0 +1,118 @@
+//! Failure-injection integration tests: the framework must fail loudly
+//! and cleanly — not hang or corrupt — when artifacts are missing,
+//! malformed, or inconsistent with the request.
+
+use pal_rl::coordinator::{train, TrainConfig};
+use pal_rl::runtime::{Manifest, Runtime};
+
+fn artifacts_dir() -> &'static str {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(artifacts_dir()).join("manifest.json").exists()
+}
+
+#[test]
+fn missing_artifact_dir_is_clean_error() {
+    let mut cfg = TrainConfig::new("dqn", "CartPole-v1");
+    cfg.artifact_dir = "/nonexistent/pal/artifacts".into();
+    let err = train(&cfg).unwrap_err().to_string();
+    assert!(err.contains("manifest") || err.contains("artifacts"), "{err}");
+}
+
+#[test]
+fn unknown_algo_env_pair_is_clean_error() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = TrainConfig::new("dqn", "Pendulum-v1"); // not generated
+    cfg.artifact_dir = artifacts_dir().into();
+    let err = train(&cfg).unwrap_err().to_string();
+    assert!(err.contains("dqn_Pendulum-v1"), "{err}");
+}
+
+#[test]
+fn unknown_environment_is_clean_error() {
+    if !have_artifacts() {
+        return;
+    }
+    // Manifest entry exists but the rust env registry must still agree;
+    // fabricate a config whose env cannot be instantiated.
+    let mut cfg = TrainConfig::new("dqn", "NoSuchEnv-v0");
+    cfg.artifact_dir = artifacts_dir().into();
+    assert!(train(&cfg).is_err());
+}
+
+#[test]
+fn malformed_manifest_rejected() {
+    let dir = std::env::temp_dir().join("pal_bad_manifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    // Unparseable JSON.
+    std::fs::write(dir.join("manifest.json"), "{ not json").unwrap();
+    assert!(Manifest::load(&dir).is_err());
+    // Parseable but inconsistent param table (offsets don't tile).
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"version":1,"artifacts":[{"id":"x_y","algo":"dqn","env":"y",
+            "obs_dim":2,"flat_act_dim":1,"n_actions":2,"act_dim":null,
+            "act_high":1.0,"discrete":true,"hidden":[8],"batch_size":4,
+            "gamma":0.99,"params_file":"x.bin","total_param_size":10,
+            "params":[{"name":"w","shape":[2,2],"offset":5,"size":4}],
+            "graphs":{}}]}"#,
+    )
+    .unwrap();
+    let err = Manifest::load(&dir).unwrap_err().to_string();
+    assert!(err.contains("inconsistent"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn wrong_input_length_rejected_not_crash() {
+    if !have_artifacts() {
+        return;
+    }
+    let manifest = Manifest::load(artifacts_dir()).unwrap();
+    let info = manifest.get("dqn_CartPole-v1").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let model = rt.load_model(info).unwrap();
+    let graph = model.graph("act").unwrap();
+    // Too few inputs.
+    let err = graph.run(&[&[0.0f32; 4][..]]).unwrap_err().to_string();
+    assert!(err.contains("inputs"), "{err}");
+    // Right arity, wrong element count on one input.
+    let params = info.load_initial_params().unwrap();
+    let mut inputs: Vec<&[f32]> = model.param_slices(&params).unwrap();
+    let bad_obs = [0.0f32; 3]; // obs_dim is 4
+    inputs.push(&bad_obs);
+    let err = graph.run(&inputs).unwrap_err().to_string();
+    assert!(err.contains("obs"), "{err}");
+}
+
+#[test]
+fn corrupt_params_blob_rejected() {
+    if !have_artifacts() {
+        return;
+    }
+    let manifest = Manifest::load(artifacts_dir()).unwrap();
+    let mut info = manifest.get("dqn_CartPole-v1").unwrap().clone();
+    let dir = std::env::temp_dir().join("pal_bad_params");
+    std::fs::create_dir_all(&dir).unwrap();
+    let bad = dir.join("short.bin");
+    std::fs::write(&bad, [0u8; 12]).unwrap();
+    info.params_file = bad;
+    let err = info.load_initial_params().unwrap_err().to_string();
+    assert!(err.contains("bytes"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn hlo_text_garbage_rejected() {
+    let dir = std::env::temp_dir().join("pal_bad_hlo");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("garbage.hlo.txt");
+    std::fs::write(&path, "HloModule definitely { not valid").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    assert!(rt.load_hlo_text(&path).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,131 @@
+//! End-to-end integration: full train() runs — actors + learners +
+//! parameter server + prioritized buffer + PJRT graphs — on short
+//! budgets, for every algorithm family and several buffer kinds.
+//!
+//! Requires `make artifacts`; each test skips gracefully when missing.
+
+use pal_rl::coordinator::{train, BufferKind, TrainConfig};
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json")).exists()
+}
+
+fn base(algo: &str, env: &str) -> TrainConfig {
+    let mut cfg = TrainConfig::new(algo, env);
+    cfg.artifact_dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").into();
+    cfg.total_env_steps = 600;
+    cfg.warmup_steps = 100;
+    cfg.buffer_capacity = 4_096;
+    cfg.exploration.eps_decay_steps = 400;
+    cfg.seed = 7;
+    cfg
+}
+
+fn run_and_check(cfg: TrainConfig) {
+    let r = train(&cfg).expect("training failed");
+    assert!(r.env_steps >= cfg.total_env_steps, "{} < {}", r.env_steps, cfg.total_env_steps);
+    assert!(r.learn_steps > 0, "no learn steps happened");
+    assert!(r.episodes > 0, "no episodes finished");
+    assert!(r.final_mean_return.is_finite());
+    // Ratio pacing: learners must not exceed the configured ratio.
+    let max_learn = (r.env_steps as f64 / cfg.update_interval).ceil() + cfg.learners as f64;
+    assert!(
+        (r.learn_steps as f64) <= max_learn,
+        "pacing violated: {} learn steps vs {} env steps (ratio {})",
+        r.learn_steps,
+        r.env_steps,
+        cfg.update_interval
+    );
+}
+
+#[test]
+fn dqn_cartpole_single_worker() {
+    if !have_artifacts() {
+        return;
+    }
+    run_and_check(base("dqn", "CartPole-v1"));
+}
+
+#[test]
+fn dqn_cartpole_parallel_workers() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = base("dqn", "CartPole-v1");
+    cfg.actors = 2;
+    cfg.learners = 2;
+    cfg.update_interval = 2.0;
+    run_and_check(cfg);
+}
+
+#[test]
+fn ddqn_cartpole_runs() {
+    if !have_artifacts() {
+        return;
+    }
+    run_and_check(base("ddqn", "CartPole-v1"));
+}
+
+#[test]
+fn ddpg_pendulum_runs() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = base("ddpg", "Pendulum-v1");
+    cfg.update_interval = 2.0; // learn graphs are pricier; keep test fast
+    run_and_check(cfg);
+}
+
+#[test]
+fn td3_pendulum_runs_with_policy_delay() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = base("td3", "Pendulum-v1");
+    cfg.update_interval = 2.0;
+    run_and_check(cfg);
+}
+
+#[test]
+fn sac_pendulum_runs() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = base("sac", "Pendulum-v1");
+    cfg.update_interval = 2.0;
+    run_and_check(cfg);
+}
+
+#[test]
+fn all_buffer_kinds_train() {
+    if !have_artifacts() {
+        return;
+    }
+    for kind in [
+        BufferKind::PalKary,
+        BufferKind::GlobalLock,
+        BufferKind::Uniform,
+        BufferKind::EmulatedPython,
+        BufferKind::EmulatedBinding,
+    ] {
+        let mut cfg = base("dqn", "CartPole-v1");
+        cfg.buffer = kind;
+        cfg.total_env_steps = 300;
+        cfg.warmup_steps = 64;
+        run_and_check(cfg);
+    }
+}
+
+#[test]
+fn early_stop_on_reward_target() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = base("dqn", "CartPole-v1");
+    // Trivially reachable target: any mean return over 10 episodes > 1.
+    cfg.stop_at_reward = Some(1.0);
+    cfg.total_env_steps = 50_000; // would take long without early stop
+    let r = train(&cfg).unwrap();
+    assert!(r.reached_target);
+    assert!(r.env_steps < 50_000, "early stop did not trigger");
+}
