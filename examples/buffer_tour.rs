@@ -5,7 +5,7 @@
 
 use pal_rl::replay::{
     GlobalLockReplay, PrioritizedConfig, PrioritizedReplay, ReplayBuffer, SampleBatch,
-    Transition,
+    ShardedPrioritizedReplay, Transition,
 };
 use pal_rl::util::rng::Rng;
 use std::sync::Arc;
@@ -31,6 +31,7 @@ fn main() {
         alpha: 0.6,
         beta: 0.4,
         lazy_writing: true,
+        shards: 1,
     }));
     buf.stats.enable_timing();
 
@@ -108,5 +109,37 @@ fn main() {
         "\nbaseline (binary tree + global lock): 10k inserts in {:?} \
          (vs PAL: copies outside the lock)",
         t1.elapsed()
+    );
+
+    // 8. Sharded buffer: S independent sub-trees, actor-affinity insert
+    //    routing, two-level sampling, batched priority feedback.
+    let sharded = Arc::new(ShardedPrioritizedReplay::new(PrioritizedConfig {
+        capacity: 65_536,
+        obs_dim: 8,
+        act_dim: 2,
+        fanout: 64,
+        alpha: 0.6,
+        beta: 0.4,
+        lazy_writing: true,
+        shards: 4,
+    }));
+    for actor in 0..4 {
+        for i in 0..2_500 {
+            sharded.insert_from(actor, &tr(i as f32)); // actor -> shard actor%4
+        }
+    }
+    let mut out = SampleBatch::default();
+    sharded.sample(64, &mut rng, &mut out); // two-level: shard pick, then descent
+    let before = sharded.merged_stats().global_acquisitions;
+    let pairs: Vec<(usize, f32)> =
+        out.indices.iter().map(|&i| (i, 0.5)).collect();
+    sharded.update_priorities_batched(&pairs); // <= 1 lock pair per shard
+    let after = sharded.merged_stats().global_acquisitions;
+    println!(
+        "\nsharded (S=4): len {}, Σ priorities {:.1}, 64-pair priority batch \
+         took {} lock acquisitions (vs 64 unbatched)",
+        sharded.len(),
+        sharded.total_priority(),
+        after - before,
     );
 }

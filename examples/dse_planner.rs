@@ -5,6 +5,8 @@
 //! 1. Measures the replay buffer's per-op costs live on this machine.
 //! 2. Builds f_a(x) / f_l(x) throughput curves with the multicore DES.
 //! 3. Solves Eq. 5 by exhaustive search and prints the chosen core split.
+//! 4. Sweeps the replay-shard dimension of the design space (S ∈
+//!    {1,2,4,8,16}) and reports the planner's shard choice.
 
 use pal_rl::dse::{explore, render_curves, CostProfile};
 use pal_rl::util::cli::Args;
@@ -50,5 +52,16 @@ fn main() -> anyhow::Result<()> {
         "  joint simulation: collect {:.0}/s, consume {:.0}/s",
         joint.collect_per_sec, joint.consume_per_sec
     );
+
+    // Replay-shard dimension of the design space: best balanced
+    // throughput per shard count (each with its own Eq.5 core split).
+    let candidates = a.usize_list("shards", &[1, 2, 4, 8, 16])?;
+    let sweep = measured.shard_sweep(cores, ratio, &candidates);
+    println!("\nshard sweep (best balanced throughput per S at M={cores}):");
+    for &(s, tput) in &sweep {
+        println!("  S={s:2}  {tput:10.0} steps/s");
+    }
+    let (best_s, best_t) = CostProfile::pick_best_shards(&sweep);
+    println!("planner's shard choice: S={best_s} ({best_t:.0} steps/s)");
     Ok(())
 }

@@ -21,6 +21,7 @@ fn run(lazy: bool, obs_dim: usize) -> (f64, f64) {
         alpha: 0.6,
         beta: 0.4,
         lazy_writing: lazy,
+        shards: 1,
     }));
     let t = Transition {
         obs: vec![0.5; obs_dim],

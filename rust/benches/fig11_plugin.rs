@@ -92,6 +92,7 @@ fn main() {
             alpha: 0.6,
             beta: 0.4,
             lazy_writing: true,
+            shards: 1,
         });
         let pure_py = PySumTreeReplay::new(cap, 8, 2, 0.6, 0.4);
         let binding = PyBindBinaryReplay::new(cap, 8, 2, 0.6, 0.4);

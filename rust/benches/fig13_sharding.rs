@@ -1,0 +1,214 @@
+//! Fig 13 — sharded prioritized replay scalability: combined
+//! insert+update throughput vs shard count S and worker threads.
+//!
+//!     cargo bench --bench fig13_sharding -- \
+//!         [--shards 1,2,4,8,16] [--threads 1,2,4,8] [--rounds N]
+//!
+//! Protocol: T workers share one buffer; each round a worker inserts a
+//! batch with its own affinity id (`insert_from`), draws a stratified
+//! sample, and feeds the |TD| errors back through the batched priority
+//! update — the learner hot loop with the act/learn compute stripped
+//! away, so the buffer's locks are all that can limit scaling. Two views
+//! (same convention as Figs 9/10, DESIGN.md §Substitutions):
+//!
+//! * real threads on this host — exercises the actual lock code; on a
+//!   1-core container this measures critical-section length, not
+//!   parallelism;
+//! * the multicore DES projection at T cores, driven by per-op costs
+//!   measured on this machine, which shows the paper-style scaling: the
+//!   S=1 global tree lock saturates near 2 workers, while S ≥ 4 keeps
+//!   scaling until the cores run out (≥ 2x combined throughput at 8
+//!   threads).
+
+use pal_rl::dse::CostProfile;
+use pal_rl::replay::{
+    PrioritizedConfig, PrioritizedReplay, ReplayBuffer, SampleBatch,
+    ShardedPrioritizedReplay, Transition,
+};
+use pal_rl::util::bench::Table;
+use pal_rl::util::cli::Args;
+use pal_rl::util::rng::Rng;
+use std::sync::Arc;
+use std::time::Instant;
+
+const BATCH: usize = 32;
+
+fn tr() -> Transition {
+    Transition {
+        obs: vec![0.5; 8],
+        action: vec![0.1; 2],
+        next_obs: vec![0.6; 8],
+        reward: 1.0,
+        done: false,
+    }
+}
+
+/// S=1 is the plain single-tree buffer (the pre-sharding code path);
+/// S>1 is the sharded wrapper.
+fn mk(capacity: usize, shards: usize) -> Arc<dyn ReplayBuffer> {
+    let cfg = PrioritizedConfig {
+        capacity,
+        obs_dim: 8,
+        act_dim: 2,
+        fanout: 64,
+        alpha: 0.6,
+        beta: 0.4,
+        lazy_writing: true,
+        shards,
+    };
+    if shards > 1 {
+        Arc::new(ShardedPrioritizedReplay::new(cfg))
+    } else {
+        Arc::new(PrioritizedReplay::new(cfg))
+    }
+}
+
+/// Combined insert+update ops/sec over T real threads.
+fn run_real(buf: &Arc<dyn ReplayBuffer>, threads: usize, rounds: usize) -> f64 {
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for tid in 0..threads {
+            let buf = Arc::clone(buf);
+            s.spawn(move || {
+                let mut rng = Rng::new(tid as u64 + 1);
+                let mut out = SampleBatch::default();
+                let t = tr();
+                for _ in 0..rounds {
+                    for _ in 0..BATCH {
+                        buf.insert_from(tid, &t);
+                    }
+                    if buf.sample(BATCH, &mut rng, &mut out) {
+                        let idx = out.indices.clone();
+                        let tds: Vec<f32> = idx.iter().map(|_| rng.f32() * 2.0).collect();
+                        buf.update_priorities(&idx, &tds);
+                    }
+                }
+            });
+        }
+    });
+    let ops = (threads * rounds * 2 * BATCH) as f64; // inserts + updated pairs
+    ops / t0.elapsed().as_secs_f64()
+}
+
+/// DES combined throughput index (collect + consume cycles/sec) for the
+/// buffer-dominated workload at T cores with S shards.
+fn des_combined(profile: &CostProfile, shards: usize, threads: usize) -> f64 {
+    let mut p = *profile;
+    p.shards = shards;
+    let actors = threads.div_ceil(2);
+    let learners = (threads / 2).max(1);
+    let r = p.joint(actors, learners, threads.max(1));
+    r.collect_per_sec + r.consume_per_sec
+}
+
+fn main() -> anyhow::Result<()> {
+    let a = Args::from_env()?;
+    let mut shard_list = a.usize_list("shards", &[1, 2, 4, 8, 16])?;
+    if !shard_list.contains(&1) {
+        // S=1 is the baseline every "vs S=1" column and verdict divides
+        // by; always measure it.
+        shard_list.insert(0, 1);
+    }
+    let thread_list = a.usize_list("threads", &[1, 2, 4, 8])?;
+    let rounds: usize = a.parse_or("rounds", 200)?;
+    let capacity: usize = a.parse_or("capacity", 65_536)?;
+
+    println!("Fig 13 — sharded replay scalability (S x threads)\n");
+
+    // --- Real threads on this host -----------------------------------
+    println!(
+        "real threads ({} host cpus), combined insert+update ops/s:",
+        std::thread::available_parallelism().map_or(1, |n| n.get())
+    );
+    let mut t = Table::new(&["S", "threads", "ops/s", "vs S=1"]);
+    let mut real: Vec<(usize, usize, f64)> = Vec::new();
+    for &s in &shard_list {
+        for &th in &thread_list {
+            let buf = mk(capacity, s);
+            for i in 0..capacity.min(10_000) {
+                buf.insert_from(i, &tr());
+            }
+            let ops = run_real(&buf, th, rounds);
+            real.push((s, th, ops));
+        }
+    }
+    for &(s, th, ops) in &real {
+        let base = real
+            .iter()
+            .find(|&&(s0, th0, _)| s0 == 1 && th0 == th)
+            .map_or(ops, |&(_, _, o)| o);
+        t.row(vec![
+            s.to_string(),
+            th.to_string(),
+            format!("{ops:.0}"),
+            format!("{:.2}x", ops / base.max(1e-9)),
+        ]);
+    }
+    t.print();
+
+    // --- DES projection at T cores -----------------------------------
+    // Per-op costs measured live on this machine; act/env/learn set tiny
+    // so the buffer locks are the only possible bottleneck, and the
+    // parameter-server section kept short for the same reason.
+    println!("\nmeasuring per-op costs for the DES projection ...");
+    let mut profile = CostProfile::measure(2_000, 500, 5_000);
+    profile.costs.server_ns = 1_000;
+    println!(
+        "  insert lock {} ns | sample(64) lock {} ns | update(64) {} ns",
+        profile.costs.insert_lock_ns, profile.costs.sample_lock_ns, profile.costs.update_lock_ns
+    );
+
+    println!("\nDES projection (T cores), combined collect+consume cycles/s:");
+    let mut d = Table::new(&["S", "threads", "cycles/s", "vs S=1"]);
+    // Per-thread S=1 baselines, computed once.
+    let bases: Vec<f64> = thread_list
+        .iter()
+        .map(|&th| des_combined(&profile, 1, th))
+        .collect();
+    for &s in &shard_list {
+        for (ti, &th) in thread_list.iter().enumerate() {
+            let c = if s == 1 { bases[ti] } else { des_combined(&profile, s, th) };
+            d.row(vec![
+                s.to_string(),
+                th.to_string(),
+                format!("{c:.0}"),
+                format!("{:.2}x", c / bases[ti].max(1e-9)),
+            ]);
+        }
+    }
+    d.print();
+
+    // --- Acceptance verdict ------------------------------------------
+    let t8 = *thread_list.iter().max().unwrap_or(&8);
+    let des1 = des_combined(&profile, 1, t8);
+    let des4 = des_combined(&profile, 4, t8);
+    let ratio = des4 / des1.max(1e-9);
+    println!(
+        "\nverdict (DES @ {t8} threads): S=4 vs S=1 = {ratio:.2}x — target >= 2x [{}]",
+        if ratio >= 2.0 { "OK" } else { "MISS" }
+    );
+    if std::thread::available_parallelism().map_or(1, |n| n.get()) >= t8 {
+        let r1 = real
+            .iter()
+            .find(|&&(s, th, _)| s == 1 && th == t8)
+            .map_or(0.0, |&(_, _, o)| o);
+        // Largest sharded configuration in the sweep at t8 threads.
+        let best = real
+            .iter()
+            .filter(|&&(s, th, _)| s > 1 && th == t8)
+            .max_by_key(|&&(s, _, _)| s)
+            .copied();
+        if let (true, Some((s, _, rs))) = (r1 > 0.0, best) {
+            println!(
+                "verdict (real threads @ {t8}): S={s} vs S=1 = {:.2}x",
+                rs / r1
+            );
+        }
+    } else {
+        println!(
+            "(host has fewer than {t8} cpus: real-thread columns measure \
+             critical-section length, not parallel speedup — see DES)"
+        );
+    }
+    Ok(())
+}

@@ -134,6 +134,7 @@ fn main() {
                 alpha: 0.6,
                 beta: 0.4,
                 lazy_writing: true,
+                shards: 1,
             }));
             for _ in 0..n {
                 buf.insert(&tr());

@@ -43,6 +43,7 @@ fn main() -> anyhow::Result<()> {
         alpha: 0.6,
         beta: 0.4,
         lazy_writing: true,
+        shards: 1,
     });
     for i in 0..5_000 {
         buf.insert(&Transition {

@@ -27,6 +27,7 @@ fn fresh(n: usize) -> PrioritizedReplay {
         alpha: 0.6,
         beta: 0.4,
         lazy_writing: true,
+        shards: 1,
     });
     for i in 0..n {
         buf.insert(&tr(i as f32));

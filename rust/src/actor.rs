@@ -88,7 +88,6 @@ pub fn run_actor(
     let mut version = 0u64;
     let mut obs = env.reset(rng);
     let mut ep_return = 0.0f32;
-    let _ = actor_id;
 
     loop {
         if ctl.should_stop() {
@@ -116,13 +115,18 @@ pub fn run_actor(
 
         // Truncation is not a true terminal: bootstrap through it.
         let done_flag = step.done && !step.truncated;
-        buffer.insert(&Transition {
-            obs: obs.clone(),
-            action,
-            next_obs: step.obs.clone(),
-            reward: step.reward,
-            done: done_flag,
-        });
+        // Actor-affinity insert: sharded buffers route this actor to a
+        // fixed shard so concurrent actors take disjoint locks.
+        buffer.insert_from(
+            actor_id,
+            &Transition {
+                obs: obs.clone(),
+                action,
+                next_obs: step.obs.clone(),
+                reward: step.reward,
+                done: done_flag,
+            },
+        );
         metrics.inc_env_step();
 
         if step.done || step.truncated {

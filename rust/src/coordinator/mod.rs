@@ -13,7 +13,7 @@ use crate::metrics::{CurvePoint, Metrics};
 use crate::params::{AdamConfig, ParameterServer, TargetSync};
 use crate::replay::{
     GlobalLockReplay, NaiveScanReplay, PrioritizedConfig, PrioritizedReplay,
-    PyBindBinaryReplay, ReplayBuffer, UniformReplay,
+    PyBindBinaryReplay, ReplayBuffer, ShardedPrioritizedReplay, UniformReplay,
 };
 use crate::runtime::{Manifest, Runtime};
 use anyhow::{anyhow, bail, Context, Result};
@@ -62,6 +62,10 @@ pub struct TrainConfig {
     pub update_interval: f64,
     pub buffer: BufferKind,
     pub buffer_capacity: usize,
+    /// Replay shards S (PalKary only): >1 splits the buffer into S
+    /// independent sub-trees with actor-affinity insert routing,
+    /// two-level sampling and per-shard batched priority updates.
+    pub shards: usize,
     pub fanout: usize,
     pub alpha: f32,
     pub beta: f32,
@@ -95,6 +99,7 @@ impl TrainConfig {
             update_interval: 1.0,
             buffer: BufferKind::PalKary,
             buffer_capacity: 100_000,
+            shards: 1,
             fanout: 64,
             alpha: 0.6,
             beta: 0.4,
@@ -136,16 +141,22 @@ pub struct TrainReport {
 
 /// Build the configured replay buffer.
 pub fn make_buffer(cfg: &TrainConfig, obs_dim: usize, act_dim: usize) -> Arc<dyn ReplayBuffer> {
+    let prio_cfg = PrioritizedConfig {
+        capacity: cfg.buffer_capacity,
+        obs_dim,
+        act_dim,
+        fanout: cfg.fanout,
+        alpha: cfg.alpha,
+        beta: cfg.beta,
+        lazy_writing: true,
+        shards: cfg.shards.max(1),
+    };
     match cfg.buffer {
-        BufferKind::PalKary => Arc::new(PrioritizedReplay::new(PrioritizedConfig {
-            capacity: cfg.buffer_capacity,
-            obs_dim,
-            act_dim,
-            fanout: cfg.fanout,
-            alpha: cfg.alpha,
-            beta: cfg.beta,
-            lazy_writing: true,
-        })),
+        // S=1 keeps the single-tree fast path (no wrapper indirection).
+        BufferKind::PalKary if prio_cfg.shards > 1 => {
+            Arc::new(ShardedPrioritizedReplay::new(prio_cfg))
+        }
+        BufferKind::PalKary => Arc::new(PrioritizedReplay::new(prio_cfg)),
         BufferKind::GlobalLock => Arc::new(GlobalLockReplay::new(
             cfg.buffer_capacity,
             obs_dim,

@@ -23,6 +23,11 @@ pub struct CostProfile {
     /// Use the lazy-writing/two-lock task shapes (true) or the global-lock
     /// baseline shapes (false).
     pub pal_design: bool,
+    /// Replay shards S in the modeled buffer (PAL design only): actor
+    /// inserts route to `actor % S`, learner sample/update critical
+    /// sections split across the S shard locks. Part of the explored
+    /// design space — see [`CostProfile::shard_sweep`].
+    pub shards: usize,
     /// Model the accelerator as one exclusive device (the paper's GPU) or
     /// as per-thread compute (this host's PJRT-CPU learners).
     pub serialized_accel: bool,
@@ -74,6 +79,7 @@ impl CostProfile {
                 server_ns: 40_000,
             },
             pal_design: true,
+            shards: 1,
             serialized_accel: false,
             accel_slots: 1,
             framework_actor_ns: 0,
@@ -109,6 +115,7 @@ impl CostProfile {
             alpha: 0.6,
             beta: 0.4,
             lazy_writing: true,
+            shards: 1,
         });
         let tr = Transition {
             obs: vec![0.5; 8],
@@ -162,6 +169,7 @@ impl CostProfile {
                 server_ns: 40_000,
             },
             pal_design: true,
+            shards: 1,
             serialized_accel: false,
             accel_slots: 1,
             framework_actor_ns: 0,
@@ -173,7 +181,12 @@ impl CostProfile {
     fn tasks(&self, actors: usize, learners: usize) -> Vec<crate::sim::Task> {
         use crate::sim::{Lock, Segment};
         let mut tasks = if self.pal_design {
-            self.costs.pal_tasks_accel(actors, learners, self.serialized_accel)
+            self.costs.pal_tasks_sharded(
+                actors,
+                learners,
+                self.shards.max(1),
+                self.serialized_accel,
+            )
         } else {
             self.costs.baseline_tasks_accel(actors, learners, self.serialized_accel)
         };
@@ -245,6 +258,45 @@ impl CostProfile {
     /// Joint simulation of a concrete split on M cores.
     pub fn joint(&self, actors: usize, learners: usize, cores: usize) -> crate::sim::SimResult {
         self.run(&self.tasks(actors, learners), cores)
+    }
+
+    /// Extended design space: for each candidate shard count S, the best
+    /// balanced throughput over all core splits (Eq. 5 search run per S).
+    /// Returns `(S, throughput)` rows in candidate order; candidates are
+    /// clamped to ≥ 1, and the row reports the clamped value actually
+    /// simulated (the training path cannot honor S=0 either).
+    pub fn shard_sweep(
+        &self,
+        cores: usize,
+        ratio: f64,
+        candidates: &[usize],
+    ) -> Vec<(usize, f64)> {
+        candidates
+            .iter()
+            .map(|&s| {
+                let s = s.max(1);
+                let mut p = *self;
+                p.shards = s;
+                let (_, _, tput) = p.best_balanced(cores, ratio);
+                (s, tput)
+            })
+            .collect()
+    }
+
+    /// Fold the winning row out of [`Self::shard_sweep`] output — the
+    /// planner's choice for the S knob.
+    pub fn pick_best_shards(sweep: &[(usize, f64)]) -> (usize, f64) {
+        sweep
+            .iter()
+            .fold((1, 0.0f64), |best, &(s, t)| if t > best.1 { (s, t) } else { best })
+    }
+
+    /// The shard count (and its throughput) maximizing balanced training
+    /// throughput at `cores`. Convenience wrapper; callers that already
+    /// ran [`Self::shard_sweep`] should fold its rows with
+    /// [`Self::pick_best_shards`] instead of paying the sweep twice.
+    pub fn best_shards(&self, cores: usize, ratio: f64, candidates: &[usize]) -> (usize, f64) {
+        Self::pick_best_shards(&self.shard_sweep(cores, ratio, candidates))
     }
 }
 
@@ -343,6 +395,30 @@ mod tests {
                 / p.f_a(4).max(ratio * p.f_l(4));
             assert!(plan.mismatch <= naive + 1e-9, "ratio {ratio}");
         }
+    }
+
+    #[test]
+    fn shard_sweep_explores_and_pays_off_when_lock_bound() {
+        // Buffer-bound profile: cheap act/learn leaves the tree lock as
+        // the S=1 bottleneck at 8 cores, so the planner must pick S>1 and
+        // gain real balanced throughput from it.
+        let mut p = CostProfile::representative("dqn", "CartPole-v1");
+        p.costs.act_ns = 2_000;
+        p.costs.learn_ns = 20_000;
+        p.costs.sample_lock_ns = 40_000;
+        p.costs.update_lock_ns = 30_000;
+        p.costs.server_ns = 10_000;
+        let sweep = p.shard_sweep(8, 1.0, &[1, 2, 4, 8]);
+        assert_eq!(sweep.len(), 4);
+        let t1 = sweep[0].1;
+        assert!(t1 > 0.0);
+        let (best_s, best_t) = CostProfile::pick_best_shards(&sweep);
+        assert!(best_s >= 2, "planner stuck at S=1");
+        assert!(
+            best_t >= 1.5 * t1,
+            "sharding gain only {:.2}x",
+            best_t / t1
+        );
     }
 
     #[test]

@@ -16,9 +16,9 @@ use pal_rl::util::cli::Args;
 
 const TRAIN_FLAGS: &[&str] = &[
     "algo", "env", "artifacts", "actors", "learners", "steps", "warmup",
-    "update-interval", "buffer", "capacity", "fanout", "alpha", "beta", "lr",
-    "grad-clip", "aggregation", "seed", "stop-at-reward", "log-every",
-    "curve-out", "eps-decay", "action-noise", "save-checkpoint",
+    "update-interval", "buffer", "capacity", "shards", "fanout", "alpha",
+    "beta", "lr", "grad-clip", "aggregation", "seed", "stop-at-reward",
+    "log-every", "curve-out", "eps-decay", "action-noise", "save-checkpoint",
 ];
 
 fn usage() -> ! {
@@ -27,8 +27,8 @@ fn usage() -> ! {
 
 USAGE:
   pal train --algo <dqn|ddqn|ddpg|td3|sac> --env <ENV> [options]
-  pal dse   --algo <A> --env <E> [--cores M] [--update-interval R]
-  pal buffer-bench [--capacity N] [--fanout K] [--threads T] [--ops N]
+  pal dse   --algo <A> --env <E> [--cores M] [--update-interval R] [--shards 1,2,4,8,16]
+  pal buffer-bench [--capacity N] [--fanout K] [--shards S] [--threads T] [--ops N]
   pal envs
   pal info  [--artifacts DIR]
 
@@ -40,6 +40,9 @@ TRAIN OPTIONS:
   --update-interval R env-steps per learn-step ratio (default 1.0)
   --buffer KIND       pal | baseline | uniform | emulated-python | emulated-binding
   --capacity N        replay capacity (default 100000)
+  --shards S          replay shards, pal buffer only (default 1; >1 enables
+                      the sharded buffer: actor-affinity inserts, two-level
+                      sampling, per-shard batched priority updates)
   --fanout K          sum-tree fan-out (default 64)
   --alpha A --beta B  PER exponents (default 0.6 / 0.4)
   --lr LR             Adam learning rate (default 1e-3)
@@ -69,6 +72,7 @@ fn train_config_from(a: &Args) -> Result<TrainConfig> {
     cfg.update_interval = a.parse_or("update-interval", cfg.update_interval)?;
     cfg.buffer = BufferKind::parse(&a.str_or("buffer", "pal"))?;
     cfg.buffer_capacity = a.parse_or("capacity", cfg.buffer_capacity)?;
+    cfg.shards = a.parse_or("shards", cfg.shards)?;
     cfg.fanout = a.parse_or("fanout", cfg.fanout)?;
     cfg.alpha = a.parse_or("alpha", cfg.alpha)?;
     cfg.beta = a.parse_or("beta", cfg.beta)?;
@@ -160,9 +164,10 @@ fn cmd_buffer_bench(a: &Args) -> Result<()> {
     use std::sync::Arc;
     let capacity: usize = a.parse_or("capacity", 100_000)?;
     let fanout: usize = a.parse_or("fanout", 64)?;
+    let shards: usize = a.parse_or("shards", 1)?;
     let threads: usize = a.parse_or("threads", 4)?;
     let ops: usize = a.parse_or("ops", 100_000)?;
-    let buf = Arc::new(PrioritizedReplay::new(PrioritizedConfig {
+    let cfg = PrioritizedConfig {
         capacity,
         obs_dim: 8,
         act_dim: 2,
@@ -170,7 +175,13 @@ fn cmd_buffer_bench(a: &Args) -> Result<()> {
         alpha: 0.6,
         beta: 0.4,
         lazy_writing: true,
-    }));
+        shards,
+    };
+    let buf: Arc<dyn ReplayBuffer> = if shards > 1 {
+        Arc::new(ShardedPrioritizedReplay::new(cfg))
+    } else {
+        Arc::new(PrioritizedReplay::new(cfg))
+    };
     let t = Transition {
         obs: vec![0.5; 8],
         action: vec![0.1; 2],
@@ -178,7 +189,8 @@ fn cmd_buffer_bench(a: &Args) -> Result<()> {
         reward: 1.0,
         done: false,
     };
-    for _ in 0..capacity.min(10_000) {
+    let prefill = capacity.min(10_000);
+    for _ in 0..prefill {
         buf.insert(&t);
     }
     let t0 = std::time::Instant::now();
@@ -191,14 +203,20 @@ fn cmd_buffer_bench(a: &Args) -> Result<()> {
                 let mut out = SampleBatch::default();
                 for i in 0..ops / threads {
                     match i % 3 {
-                        0 => buf.insert(&tr),
+                        0 => buf.insert_from(tid, &tr),
                         1 => {
                             buf.sample(32, &mut rng, &mut out);
                         }
                         _ => {
-                            let idx: Vec<usize> =
-                                (0..32).map(|_| rng.below_usize(10_000)).collect();
-                            buf.update_priorities(&idx, &vec![0.5; 32]);
+                            // Feed back TDs for the last sampled batch
+                            // (keeps updates spread across shards the
+                            // way a real learner does).
+                            if !out.indices.is_empty() {
+                                let idx = out.indices.clone();
+                                let tds: Vec<f32> =
+                                    idx.iter().map(|_| rng.f32() * 2.0).collect();
+                                buf.update_priorities(&idx, &tds);
+                            }
                         }
                     }
                 }
@@ -207,10 +225,12 @@ fn cmd_buffer_bench(a: &Args) -> Result<()> {
     });
     let dt = t0.elapsed();
     println!(
-        "{} ops across {threads} threads in {:.3}s = {:.0} ops/s (capacity={capacity}, K={fanout})",
+        "{} ops across {threads} threads in {:.3}s = {:.0} ops/s \
+         (capacity={capacity}, K={fanout}, S={shards}, buffer={})",
         ops,
         dt.as_secs_f64(),
-        ops as f64 / dt.as_secs_f64()
+        ops as f64 / dt.as_secs_f64(),
+        buf.name(),
     );
     Ok(())
 }
@@ -228,6 +248,15 @@ fn cmd_dse(a: &Args) -> Result<()> {
          (collect {:.0}/s vs consume {:.0}/s)",
         plan.actors, plan.learners, plan.collect_throughput, plan.consume_throughput
     );
+    // Replay-shard dimension of the design space.
+    let candidates = a.usize_list("shards", &[1, 2, 4, 8, 16])?;
+    let sweep = profile.shard_sweep(cores, ratio, &candidates);
+    println!("\nshard sweep (best balanced throughput per S):");
+    for &(s, tput) in &sweep {
+        println!("  S={s:2}  {tput:10.0} steps/s");
+    }
+    let (best_s, best_t) = dse::CostProfile::pick_best_shards(&sweep);
+    println!("planner's shard choice: S={best_s} ({best_t:.0} steps/s)");
     Ok(())
 }
 

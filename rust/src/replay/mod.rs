@@ -2,6 +2,9 @@
 //!
 //! * [`PrioritizedReplay`] — K-ary sum tree, cache-aligned layout, lazy
 //!   writing, two-lock synchronization (§IV).
+//! * [`ShardedPrioritizedReplay`] — S independent shard primitives with
+//!   actor-affinity insert routing, two-level sampling and batched
+//!   priority feedback (the ROADMAP's sharding scaling lever).
 //! * [`GlobalLockReplay`] — binary sum tree + one global lock (Fig 9
 //!   baseline, RLlib-substitute framework buffer).
 //! * [`UniformReplay`] — plain ring buffer, uniform sampling.
@@ -14,18 +17,42 @@
 pub mod baseline;
 pub mod emulated;
 pub mod prioritized;
+pub mod sharded;
 pub mod storage;
 pub mod sumtree;
 pub mod uniform;
 
 pub use baseline::{BinarySumTree, GlobalLockReplay};
 pub use emulated::{NaiveScanReplay, PyBindBinaryReplay, PySumTreeReplay};
-pub use prioritized::{PrioritizedConfig, PrioritizedReplay};
+pub use prioritized::{LockStatsSnapshot, PrioritizedConfig, PrioritizedReplay};
+pub use sharded::ShardedPrioritizedReplay;
 pub use storage::{SampleBatch, Transition, TransitionStore};
 pub use sumtree::KArySumTree;
 pub use uniform::UniformReplay;
 
 use crate::util::rng::Rng;
+
+/// Importance weights for a sampled batch: is(i) = (N · Pr(i))^-β,
+/// normalized by the batch max so the largest weight is 1 (Schaul et
+/// al.; the paper's Alg 1 line 15 is the same quantity un-normalized).
+/// Shared by the single-tree and sharded prioritized buffers so the
+/// formula cannot silently diverge between them. Reads
+/// `out.priorities`, fills `out.is_weights`.
+pub(crate) fn fill_is_weights(out: &mut SampleBatch, n: f32, total: f32, beta: f32) {
+    let total = total.max(f32::MIN_POSITIVE);
+    let mut wmax = 0.0f32;
+    for &p in &out.priorities {
+        let pr = (p / total).max(f32::MIN_POSITIVE);
+        let w = (n * pr).powf(-beta);
+        out.is_weights.push(w);
+        wmax = wmax.max(w);
+    }
+    if wmax > 0.0 {
+        for w in &mut out.is_weights {
+            *w /= wmax;
+        }
+    }
+}
 
 /// Common interface of every replay buffer in the crate.
 ///
@@ -47,6 +74,14 @@ pub trait ReplayBuffer: Send + Sync {
 
     /// Insert one transition, evicting FIFO when full (paper §IV-A1).
     fn insert(&self, t: &Transition);
+
+    /// Insert attributed to a producer (actor) id. Sharded buffers route
+    /// on it so concurrent actors hit disjoint shard locks; everything
+    /// else ignores the id and falls through to [`Self::insert`].
+    fn insert_from(&self, actor_id: usize, t: &Transition) {
+        let _ = actor_id;
+        self.insert(t);
+    }
 
     /// Draw `batch` transitions into `out` (cleared first). Returns false
     /// if the buffer is empty. Prioritized impls fill `priorities` and
@@ -74,6 +109,17 @@ mod trait_tests {
                 alpha: 0.6,
                 beta: 0.4,
                 lazy_writing: true,
+                shards: 1,
+            })),
+            Arc::new(ShardedPrioritizedReplay::new(PrioritizedConfig {
+                capacity,
+                obs_dim: 2,
+                act_dim: 1,
+                fanout: 16,
+                alpha: 0.6,
+                beta: 0.4,
+                lazy_writing: true,
+                shards: 4,
             })),
             Arc::new(GlobalLockReplay::new(capacity, 2, 1, 0.6, 0.4)),
             Arc::new(UniformReplay::new(capacity, 2, 1)),

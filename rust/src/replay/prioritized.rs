@@ -82,6 +82,22 @@ pub struct LockStatsSnapshot {
     pub storage_copy_ns: u64,
 }
 
+impl LockStatsSnapshot {
+    /// Field-wise accumulation — used to build the merged view across the
+    /// shards of a [`super::ShardedPrioritizedReplay`].
+    pub fn accumulate(&mut self, other: &LockStatsSnapshot) {
+        self.global_acquisitions += other.global_acquisitions;
+        self.global_held_ns += other.global_held_ns;
+        self.leaf_acquisitions += other.leaf_acquisitions;
+        self.leaf_held_ns += other.leaf_held_ns;
+        self.inserts += other.inserts;
+        self.samples += other.samples;
+        self.retrievals += other.retrievals;
+        self.updates += other.updates;
+        self.storage_copy_ns += other.storage_copy_ns;
+    }
+}
+
 /// Configuration for [`PrioritizedReplay`].
 #[derive(Clone, Debug)]
 pub struct PrioritizedConfig {
@@ -97,6 +113,11 @@ pub struct PrioritizedConfig {
     /// Lazy writing (§IV-D2). `false` keeps the global lock held across
     /// the storage copy — the ablation knob for the design-choice bench.
     pub lazy_writing: bool,
+    /// Number of independent sub-tree shards when the config is consumed
+    /// by [`super::ShardedPrioritizedReplay`] (capacity is split evenly
+    /// across them). The single-tree [`PrioritizedReplay`] — which *is*
+    /// the S=1 shard primitive — ignores this field.
+    pub shards: usize,
 }
 
 impl Default for PrioritizedConfig {
@@ -109,6 +130,7 @@ impl Default for PrioritizedConfig {
             alpha: 0.6,
             beta: 0.4,
             lazy_writing: true,
+            shards: 1,
         }
     }
 }
@@ -238,6 +260,94 @@ impl PrioritizedReplay {
         &self.tree
     }
 
+    /// Copy one stored row into a batch. Takes no lock: with lazy writing
+    /// the zero-priority guard keeps half-written rows out of sampling,
+    /// so row copies are safe after the descent has released the lock.
+    pub fn copy_row_into(&self, idx: usize, out: &mut SampleBatch) {
+        self.store.read_into(idx, out);
+    }
+
+    /// Two-level sampling support: run the prefix-sum descents for every
+    /// value in `prefixes` under ONE `global_tree_lock` acquisition,
+    /// appending `(leaf_index, priority)` pairs to the output vectors.
+    /// Returns `false` — appending nothing — when the tree holds no
+    /// positive mass at lock time (the caller re-routes those strata).
+    /// Does NOT bump the `samples` counter: this is a sampling primitive,
+    /// and the wrapper counts one sample op per batch, keeping merged
+    /// stats comparable with the single-tree buffer's.
+    pub fn descend_batch(
+        &self,
+        prefixes: &[f32],
+        out_indices: &mut Vec<usize>,
+        out_priorities: &mut Vec<f32>,
+    ) -> bool {
+        if prefixes.is_empty() {
+            return true;
+        }
+        let timing = self.timing();
+        let t0 = timing.then(Instant::now);
+        let _global = self.global_tree_lock.lock().unwrap();
+        self.stats.global_acquisitions.fetch_add(1, Ordering::Relaxed);
+        if !(self.tree.total() > 0.0) {
+            return false;
+        }
+        for &x in prefixes {
+            let (idx, p) = self.tree.prefix_sum_index(x);
+            out_indices.push(idx);
+            out_priorities.push(p);
+        }
+        if let Some(t0) = t0 {
+            self.stats
+                .global_held_ns
+                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
+        true
+    }
+
+    /// Algorithm 3 PRIORITYUPDATE over a batch of already-transformed
+    /// priorities, amortized: ONE global and ONE leaf acquisition for the
+    /// whole batch instead of one pair per index. The leaf lock is still
+    /// released before interior propagation (Alg 3 line 5), so priority
+    /// retrieval overlaps the propagation exactly as in the per-index
+    /// path.
+    pub fn update_transformed_batch(&self, pairs: &[(usize, f32)]) {
+        if pairs.is_empty() {
+            return;
+        }
+        self.stats
+            .updates
+            .fetch_add(pairs.len() as u64, Ordering::Relaxed);
+        for &(_, p) in pairs {
+            f32_bits_max(&self.max_priority, p);
+        }
+        let timing = self.timing();
+        let t0 = timing.then(Instant::now);
+        let _global = self.global_tree_lock.lock().unwrap();
+        self.stats.global_acquisitions.fetch_add(1, Ordering::Relaxed);
+        let mut deltas: Vec<(usize, f32)> = Vec::with_capacity(pairs.len());
+        {
+            let t1 = timing.then(Instant::now);
+            let _leaf = self.last_level_lock.lock().unwrap();
+            self.stats.leaf_acquisitions.fetch_add(1, Ordering::Relaxed);
+            for &(idx, p) in pairs {
+                deltas.push((idx, self.tree.set_leaf(idx, p)));
+            }
+            if let Some(t1) = t1 {
+                self.stats
+                    .leaf_held_ns
+                    .fetch_add(t1.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            }
+        } // leaf lock released before interior propagation (Alg 3 line 5)
+        for &(idx, delta) in &deltas {
+            self.tree.propagate(idx, delta);
+        }
+        if let Some(t0) = t0 {
+            self.stats
+                .global_held_ns
+                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
+    }
+
     /// Algorithm 3 SAMPLE, batched: the prefix-sum descents run under ONE
     /// global-lock acquisition (amortizing the lock), the row copies run
     /// after release — zero-priority guard makes that safe. Stratified
@@ -323,23 +433,8 @@ impl ReplayBuffer for PrioritizedReplay {
         if !self.sample_indices(batch, rng, out) {
             return false;
         }
-        // Importance weights: is(i) = (N · Pr(i))^-β, normalized by the
-        // batch max so the largest weight is 1 (Schaul et al.; the paper's
-        // Alg 1 line 15 is the same quantity un-normalized).
-        let n = self.len() as f32;
-        let total = self.total_priority().max(f32::MIN_POSITIVE);
-        let mut wmax = 0.0f32;
-        for &p in &out.priorities {
-            let pr = (p / total).max(f32::MIN_POSITIVE);
-            let w = (n * pr).powf(-self.beta);
-            out.is_weights.push(w);
-            wmax = wmax.max(w);
-        }
-        if wmax > 0.0 {
-            for w in &mut out.is_weights {
-                *w /= wmax;
-            }
-        }
+        // Importance weights (shared formula — see fill_is_weights).
+        super::fill_is_weights(out, self.len() as f32, self.total_priority(), self.beta);
         // Row copies outside the lock (lazy-writing guarantee).
         for i in 0..out.indices.len() {
             let idx = out.indices[i];
@@ -348,17 +443,17 @@ impl ReplayBuffer for PrioritizedReplay {
         true
     }
 
-    /// Algorithm 3 PRIORITYUPDATE over a batch of |TD| errors.
+    /// Algorithm 3 PRIORITYUPDATE over a batch of |TD| errors, routed
+    /// through the lock-amortized batched path (one global + one leaf
+    /// acquisition per call instead of one pair per index).
     fn update_priorities(&self, indices: &[usize], td_abs: &[f32]) {
         debug_assert_eq!(indices.len(), td_abs.len());
-        self.stats
-            .updates
-            .fetch_add(indices.len() as u64, Ordering::Relaxed);
-        for (&idx, &td) in indices.iter().zip(td_abs) {
-            let p = self.transform_priority(td);
-            f32_bits_max(&self.max_priority, p);
-            self.locked_priority_update(idx, p);
-        }
+        let pairs: Vec<(usize, f32)> = indices
+            .iter()
+            .zip(td_abs)
+            .map(|(&idx, &td)| (idx, self.transform_priority(td)))
+            .collect();
+        self.update_transformed_batch(&pairs);
     }
 }
 
@@ -376,6 +471,7 @@ mod tests {
             alpha: 0.6,
             beta: 0.4,
             lazy_writing: true,
+            shards: 1,
         })
     }
 
@@ -500,6 +596,59 @@ mod tests {
         // New inserts arrive at the running max.
         b.insert(&tr(1.0));
         assert!((b.get_priority(1) - p).abs() < 1e-5);
+    }
+
+    #[test]
+    fn batched_update_amortizes_locks() {
+        let b = mk(64, 16);
+        for i in 0..64 {
+            b.insert(&tr(i as f32));
+        }
+        let before = b.stats.snapshot();
+        let idx: Vec<usize> = (0..64).collect();
+        let tds: Vec<f32> = (0..64).map(|i| 0.1 + i as f32).collect();
+        b.update_priorities(&idx, &tds);
+        let after = b.stats.snapshot();
+        // One global + one leaf acquisition for the whole 64-pair batch.
+        assert_eq!(after.global_acquisitions - before.global_acquisitions, 1);
+        assert_eq!(after.leaf_acquisitions - before.leaf_acquisitions, 1);
+        assert_eq!(after.updates - before.updates, 64);
+        // Values land exactly as in the per-index path.
+        for (i, &td) in tds.iter().enumerate() {
+            assert!((b.get_priority(i) - b.transform_priority(td)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn batched_update_handles_duplicate_indices() {
+        let b = mk(16, 16);
+        for i in 0..16 {
+            b.insert(&tr(i as f32));
+        }
+        b.update_priorities(&[3, 3, 3], &[5.0, 1.0, 2.0]);
+        let expect = b.transform_priority(2.0); // last write wins
+        assert!((b.get_priority(3) - expect).abs() < 1e-6);
+        // Per-pair deltas must sum to final-initial WITHOUT a rebuild.
+        assert!(b.tree().invariant_error() < 1e-4);
+    }
+
+    #[test]
+    fn descend_batch_matches_priorities() {
+        let b = mk(64, 16);
+        for i in 0..64 {
+            b.insert(&tr(i as f32));
+        }
+        let total = b.total_priority();
+        let prefixes: Vec<f32> = (0..8).map(|j| (j as f32 + 0.5) / 8.0 * total).collect();
+        let mut idx = Vec::new();
+        let mut pri = Vec::new();
+        assert!(b.descend_batch(&prefixes, &mut idx, &mut pri));
+        assert_eq!(idx.len(), 8);
+        for (&i, &p) in idx.iter().zip(&pri) {
+            assert!(i < 64);
+            assert!(p > 0.0);
+            assert!((b.get_priority(i) - p).abs() < 1e-6);
+        }
     }
 
     #[test]

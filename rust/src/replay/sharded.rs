@@ -1,0 +1,557 @@
+//! Sharded prioritized replay: S independent K-ary sum-tree shards.
+//!
+//! The single-tree [`PrioritizedReplay`] implements the paper's two-lock
+//! protocol, but every insert, sample and priority update still funnels
+//! through ONE `global_tree_lock` — the first serialization point to
+//! saturate as actors and learners multiply. This wrapper composes `S`
+//! complete shard primitives (each with its own tree, storage segment,
+//! lock pair, write cursor and [`LockStats`]) so concurrent workers hit
+//! disjoint locks:
+//!
+//! * **Insert routing** — actor affinity: actor `a` writes shard
+//!   `a % S` ([`ReplayBuffer::insert_from`]), so the common case of A
+//!   concurrent actors takes A disjoint lock pairs. Anonymous inserts
+//!   round-robin.
+//! * **Two-level sampling** — level 1 picks the shard for each stratum
+//!   draw proportional to its root total via a lock-free S-way prefix
+//!   scan over the atomic roots (a root read is one relaxed atomic
+//!   load); level 2 runs all of a shard's stratified descents under ONE
+//!   acquisition of that shard's global lock
+//!   ([`PrioritizedReplay::descend_batch`]). A transition's overall
+//!   sampling probability stays proportional to its priority:
+//!   P(shard) · P(leaf | shard) = (T_s / T) · (p_i / T_s) = p_i / T.
+//! * **Batched priority feedback** —
+//!   [`Self::update_priorities_batched`] groups `(index, |TD|)` pairs by
+//!   shard and applies each group under a single global+leaf acquisition
+//!   pair ([`PrioritizedReplay::update_transformed_batch`]): one lock
+//!   acquisition per *shard touched* per batch instead of one per index.
+//!
+//! Global leaf index `g` maps to shard `g / shard_capacity`, local slot
+//! `g % shard_capacity`; sampled indices are global, so learners feed
+//! TD errors back with no API change.
+
+use super::prioritized::{LockStatsSnapshot, PrioritizedConfig, PrioritizedReplay};
+use super::storage::{SampleBatch, Transition};
+use super::ReplayBuffer;
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// S independent prioritized shards behind the [`ReplayBuffer`] trait.
+pub struct ShardedPrioritizedReplay {
+    shards: Vec<PrioritizedReplay>,
+    shard_capacity: usize,
+    beta: f32,
+    /// Round-robin cursor for inserts without an actor id.
+    round_robin: AtomicUsize,
+    /// Wrapper-level sample-op counter (one per [`ReplayBuffer::sample`]
+    /// call, like the single-tree buffer — the per-shard descents under
+    /// one sample would otherwise inflate the merged count up to S-fold).
+    samples: AtomicU64,
+}
+
+impl ShardedPrioritizedReplay {
+    /// Build from a [`PrioritizedConfig`]; `cfg.shards` sub-trees share
+    /// `cfg.capacity` evenly (rounded up, so the effective capacity is
+    /// `ceil(capacity / S) * S`).
+    pub fn new(cfg: PrioritizedConfig) -> Self {
+        let s = cfg.shards.max(1);
+        assert!(
+            cfg.capacity > s,
+            "capacity {} too small for {s} shards",
+            cfg.capacity
+        );
+        let shard_capacity = cfg.capacity.div_ceil(s);
+        let shards = (0..s)
+            .map(|_| {
+                PrioritizedReplay::new(PrioritizedConfig {
+                    capacity: shard_capacity,
+                    shards: 1,
+                    ..cfg.clone()
+                })
+            })
+            .collect();
+        Self {
+            shards,
+            shard_capacity,
+            beta: cfg.beta,
+            round_robin: AtomicUsize::new(0),
+            samples: AtomicU64::new(0),
+        }
+    }
+
+    /// Number of shards S.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Leaf capacity of each shard.
+    pub fn shard_capacity(&self) -> usize {
+        self.shard_capacity
+    }
+
+    /// Direct access to one shard (tests / benches / stats).
+    pub fn shard(&self, s: usize) -> &PrioritizedReplay {
+        &self.shards[s]
+    }
+
+    /// Enable hold-time timing on every shard's [`LockStats`].
+    pub fn enable_timing(&self) {
+        for s in &self.shards {
+            s.stats.enable_timing();
+        }
+    }
+
+    /// Merged snapshot: field-wise sum of every shard's [`LockStats`],
+    /// plus the wrapper-level sample-op count (shards do not count their
+    /// descents as samples — see [`PrioritizedReplay::descend_batch`]).
+    pub fn merged_stats(&self) -> LockStatsSnapshot {
+        let mut m = LockStatsSnapshot::default();
+        for s in &self.shards {
+            m.accumulate(&s.stats.snapshot());
+        }
+        m.samples += self.samples.load(Ordering::Relaxed);
+        m
+    }
+
+    /// Σ of all priorities across shards (S relaxed root reads, no lock).
+    pub fn total_priority(&self) -> f32 {
+        self.shards.iter().map(|s| s.total_priority()).sum()
+    }
+
+    /// Max running priority across shards.
+    pub fn max_priority(&self) -> f32 {
+        self.shards
+            .iter()
+            .map(|s| s.max_priority())
+            .fold(0.0f32, f32::max)
+    }
+
+    /// Squash fp drift in every shard (takes each shard's locks in turn).
+    pub fn rebuild_trees(&self) {
+        for s in &self.shards {
+            s.rebuild_tree();
+        }
+    }
+
+    /// Worst per-shard tree invariant error (diagnostics / tests).
+    pub fn invariant_error(&self) -> f32 {
+        self.shards
+            .iter()
+            .map(|s| s.tree().invariant_error())
+            .fold(0.0f32, f32::max)
+    }
+
+    #[inline]
+    fn shard_of(&self, global_idx: usize) -> (usize, usize) {
+        (
+            global_idx / self.shard_capacity,
+            global_idx % self.shard_capacity,
+        )
+    }
+
+    /// The new batched priority-feedback API: group `(global index,
+    /// |TD|)` pairs by shard, then apply each group under one lock
+    /// acquisition pair on its shard.
+    pub fn update_priorities_batched(&self, pairs: &[(usize, f32)]) {
+        self.update_grouped(pairs.iter().copied());
+    }
+
+    /// Shared grouping core for the batched update paths (avoids the
+    /// intermediate pair Vec on the trait route).
+    fn update_grouped(&self, pairs: impl Iterator<Item = (usize, f32)>) {
+        let s_count = self.shards.len();
+        let mut buckets: Vec<Vec<(usize, f32)>> = vec![Vec::new(); s_count];
+        for (idx, td) in pairs {
+            let (s, local) = self.shard_of(idx);
+            // Match the single-tree buffer, which panics on an
+            // out-of-bounds leaf index — never silently drop feedback.
+            assert!(s < s_count, "priority index {idx} out of range");
+            buckets[s].push((local, self.shards[s].transform_priority(td)));
+        }
+        for (s, bucket) in buckets.iter().enumerate() {
+            if !bucket.is_empty() {
+                self.shards[s].update_transformed_batch(bucket);
+            }
+        }
+    }
+}
+
+impl ReplayBuffer for ShardedPrioritizedReplay {
+    fn name(&self) -> &'static str {
+        "pal-sharded"
+    }
+
+    fn capacity(&self) -> usize {
+        self.shards.len() * self.shard_capacity
+    }
+
+    fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.len()).sum()
+    }
+
+    /// Anonymous insert: round-robin over shards (keeps single-producer
+    /// callers load-balanced). Actor loops use [`Self::insert_from`].
+    fn insert(&self, t: &Transition) {
+        let s = self.round_robin.fetch_add(1, Ordering::Relaxed) % self.shards.len();
+        self.shards[s].insert(t);
+    }
+
+    /// Actor-affinity routing: actor `a` always writes shard `a % S`, so
+    /// concurrent actors take disjoint lock pairs.
+    fn insert_from(&self, actor_id: usize, t: &Transition) {
+        self.shards[actor_id % self.shards.len()].insert(t);
+    }
+
+    /// Two-level stratified sampling (see module docs). Returns `true`
+    /// only with a full batch; all row copies run outside every lock.
+    fn sample(&self, batch: usize, rng: &mut Rng, out: &mut SampleBatch) -> bool {
+        self.samples.fetch_add(1, Ordering::Relaxed);
+        out.clear();
+        if batch == 0 {
+            return false;
+        }
+        let n_total = self.len();
+        if n_total == 0 {
+            return false;
+        }
+        let s_count = self.shards.len();
+        // Level 1: lock-free prefix scan over the atomic shard roots.
+        let totals: Vec<f32> = self.shards.iter().map(|s| s.total_priority()).collect();
+        let total: f32 = totals.iter().sum();
+        if !(total > 0.0) {
+            return false;
+        }
+        // Stratified draws over the GLOBAL priority mass, bucketed by the
+        // shard whose root interval contains each draw. Skipping
+        // zero-total shards while tracking the last positive one mirrors
+        // the in-shard descent's never-sample-zero guarantee.
+        let seg = total / batch as f32;
+        let mut buckets: Vec<Vec<f32>> = vec![Vec::new(); s_count];
+        for j in 0..batch {
+            let x = (j as f32 + rng.f32()) * seg;
+            let mut sel = usize::MAX;
+            let mut sel_before = 0.0f32;
+            let mut acc = 0.0f32;
+            for (k, &t) in totals.iter().enumerate() {
+                if t > 0.0 {
+                    sel = k;
+                    sel_before = acc;
+                    if acc + t >= x {
+                        break;
+                    }
+                }
+                acc += t;
+            }
+            if sel == usize::MAX {
+                return false; // unreachable: total > 0 implies a positive shard
+            }
+            buckets[sel].push(x - sel_before);
+        }
+        // Level 2: per selected shard, ONE lock acquisition runs all of
+        // that shard's descents.
+        let mut retry: Vec<f32> = Vec::new();
+        for (s, bucket) in buckets.iter().enumerate() {
+            if bucket.is_empty() {
+                continue;
+            }
+            let start = out.indices.len();
+            if self.shards[s].descend_batch(bucket, &mut out.indices, &mut out.priorities) {
+                for idx in &mut out.indices[start..] {
+                    *idx += s * self.shard_capacity; // local → global
+                }
+            } else {
+                // The shard drained between the lock-free scan and the
+                // lock (benign race with in-flight lazy inserts): re-aim
+                // these strata at the currently heaviest shard.
+                retry.extend_from_slice(bucket);
+            }
+        }
+        if !retry.is_empty() {
+            let heaviest = self
+                .shards
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.total_priority() > 0.0)
+                .max_by(|a, b| {
+                    a.1.total_priority()
+                        .partial_cmp(&b.1.total_priority())
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                })
+                .map(|(k, _)| k);
+            let Some(s) = heaviest else {
+                out.clear();
+                return false;
+            };
+            let start = out.indices.len();
+            // Out-of-range prefixes clamp to the shard's last positive
+            // leaf inside the descent.
+            if !self.shards[s].descend_batch(&retry, &mut out.indices, &mut out.priorities) {
+                out.clear();
+                return false;
+            }
+            for idx in &mut out.indices[start..] {
+                *idx += s * self.shard_capacity;
+            }
+        }
+        // Importance weights: the single-tree formula with the merged
+        // total and merged length (shared helper — see fill_is_weights).
+        super::fill_is_weights(out, n_total as f32, total, self.beta);
+        // Row copies outside all locks (lazy-writing guarantee per shard).
+        for i in 0..out.indices.len() {
+            let (s, local) = self.shard_of(out.indices[i]);
+            self.shards[s].copy_row_into(local, out);
+        }
+        true
+    }
+
+    /// Trait-level priority feedback routes through the batched grouping
+    /// core directly (no intermediate pair Vec).
+    fn update_priorities(&self, indices: &[usize], td_abs: &[f32]) {
+        debug_assert_eq!(indices.len(), td_abs.len());
+        self.update_grouped(indices.iter().copied().zip(td_abs.iter().copied()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(capacity: usize, fanout: usize, shards: usize) -> PrioritizedConfig {
+        PrioritizedConfig {
+            capacity,
+            obs_dim: 3,
+            act_dim: 2,
+            fanout,
+            alpha: 0.6,
+            beta: 0.4,
+            lazy_writing: true,
+            shards,
+        }
+    }
+
+    fn mk(capacity: usize, fanout: usize, shards: usize) -> ShardedPrioritizedReplay {
+        ShardedPrioritizedReplay::new(cfg(capacity, fanout, shards))
+    }
+
+    fn tr(v: f32) -> Transition {
+        Transition {
+            obs: vec![v; 3],
+            action: vec![v; 2],
+            next_obs: vec![v + 1.0; 3],
+            reward: v,
+            done: false,
+        }
+    }
+
+    #[test]
+    fn capacity_splits_evenly_and_rounds_up() {
+        let b = mk(128, 16, 4);
+        assert_eq!(b.shard_count(), 4);
+        assert_eq!(b.shard_capacity(), 32);
+        assert_eq!(b.capacity(), 128);
+        let odd = mk(100, 16, 3);
+        assert_eq!(odd.shard_capacity(), 34);
+        assert_eq!(odd.capacity(), 102);
+    }
+
+    #[test]
+    fn actor_affinity_routes_to_disjoint_shards() {
+        let b = mk(64, 16, 4);
+        for a in 0..4 {
+            for i in 0..5 {
+                b.insert_from(a, &tr((a * 100 + i) as f32));
+            }
+        }
+        for s in 0..4 {
+            assert_eq!(b.shard(s).len(), 5, "shard {s}");
+            assert_eq!(b.shard(s).stats.snapshot().inserts, 5);
+        }
+        assert_eq!(b.len(), 20);
+    }
+
+    #[test]
+    fn round_robin_insert_balances_shards() {
+        let b = mk(64, 16, 4);
+        for i in 0..32 {
+            b.insert(&tr(i as f32));
+        }
+        for s in 0..4 {
+            assert_eq!(b.shard(s).len(), 8, "shard {s}");
+        }
+    }
+
+    #[test]
+    fn sample_returns_full_consistent_batch() {
+        let b = mk(128, 16, 4);
+        for i in 0..96 {
+            b.insert(&tr(i as f32));
+        }
+        let mut rng = Rng::new(1);
+        let mut out = SampleBatch::with_capacity(32, 3, 2);
+        assert!(b.sample(32, &mut rng, &mut out));
+        assert_eq!(out.len(), 32);
+        assert_eq!(out.obs.len(), 32 * 3);
+        assert_eq!(out.is_weights.len(), 32);
+        for (j, &idx) in out.indices.iter().enumerate() {
+            assert!(idx < b.capacity());
+            assert!(out.priorities[j] > 0.0);
+            // Row self-consistency: obs[0] == reward by construction.
+            assert_eq!(out.obs[j * 3], out.reward[j]);
+            assert!(out.is_weights[j] > 0.0 && out.is_weights[j] <= 1.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn empty_and_partial_shard_sampling() {
+        let b = mk(64, 16, 4);
+        let mut rng = Rng::new(2);
+        let mut out = SampleBatch::default();
+        assert!(!b.sample(8, &mut rng, &mut out));
+        // Only actor 2's shard has data; sampling must still work.
+        for i in 0..10 {
+            b.insert_from(2, &tr(i as f32));
+        }
+        assert!(b.sample(8, &mut rng, &mut out));
+        assert_eq!(out.len(), 8);
+        for &idx in &out.indices {
+            let shard = idx / b.shard_capacity();
+            assert_eq!(shard, 2, "index {idx} not in shard 2");
+        }
+    }
+
+    #[test]
+    fn batched_update_takes_one_lock_pair_per_shard() {
+        let b = mk(64, 16, 4);
+        for i in 0..64 {
+            b.insert(&tr(i as f32));
+        }
+        let before = b.merged_stats();
+        // 64 updates spanning all 4 shards.
+        let idx: Vec<usize> = (0..64).collect();
+        let tds: Vec<f32> = (0..64).map(|i| 0.1 + i as f32).collect();
+        b.update_priorities(&idx, &tds);
+        let after = b.merged_stats();
+        assert_eq!(after.updates - before.updates, 64);
+        // One global + one leaf acquisition per shard touched — not 64.
+        assert_eq!(after.global_acquisitions - before.global_acquisitions, 4);
+        assert_eq!(after.leaf_acquisitions - before.leaf_acquisitions, 4);
+        // Priorities landed on the right shard-local leaves.
+        for g in 0..64usize {
+            let (s, local) = (g / b.shard_capacity(), g % b.shard_capacity());
+            let expect = b.shard(s).transform_priority(tds[g]);
+            assert!((b.shard(s).get_priority(local) - expect).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn priority_update_biases_two_level_sampling() {
+        let b = mk(64, 16, 4);
+        for i in 0..64 {
+            b.insert(&tr(i as f32));
+        }
+        // Give global index 37 (shard 2) overwhelming priority.
+        let idx: Vec<usize> = (0..64).collect();
+        let mut tds = vec![0.001f32; 64];
+        tds[37] = 1000.0;
+        b.update_priorities(&idx, &tds);
+        let mut rng = Rng::new(3);
+        let mut out = SampleBatch::default();
+        let mut hits = 0;
+        for _ in 0..50 {
+            b.sample(8, &mut rng, &mut out);
+            hits += out.indices.iter().filter(|&&i| i == 37).count();
+        }
+        assert!(hits > 300, "index 37 sampled only {hits}/400 times");
+    }
+
+    /// Acceptance: the two-level scheme still samples every transition
+    /// with probability proportional to its priority, within the same
+    /// tolerance as `sampling_distribution_proportional_to_priority` in
+    /// the sum-tree tests (|got − expect| < 0.01).
+    #[test]
+    fn two_level_sampling_distribution_proportional_to_priority() {
+        let n = 16usize;
+        let b = mk(n, 16, 4);
+        for i in 0..n {
+            b.insert(&tr(i as f32));
+        }
+        // Deterministic priorities on the global leaves: p(g) ∝ g + 1.
+        let idx: Vec<usize> = (0..n).collect();
+        let tds: Vec<f32> = (0..n).map(|g| (g + 1) as f32).collect();
+        b.update_priorities(&idx, &tds);
+        // Expected distribution from the actual transformed priorities.
+        let probs: Vec<f64> = (0..n)
+            .map(|g| {
+                let (s, local) = (g / b.shard_capacity(), g % b.shard_capacity());
+                b.shard(s).get_priority(local) as f64
+            })
+            .collect();
+        let total: f64 = probs.iter().sum();
+        let mut rng = Rng::new(123);
+        let mut out = SampleBatch::default();
+        let rounds = 12_500;
+        let batch = 16;
+        let mut counts = vec![0usize; n];
+        for _ in 0..rounds {
+            assert!(b.sample(batch, &mut rng, &mut out));
+            for &g in &out.indices {
+                counts[g] += 1;
+            }
+        }
+        let trials = (rounds * batch) as f64;
+        for g in 0..n {
+            let expect = probs[g] / total;
+            let got = counts[g] as f64 / trials;
+            assert!(
+                (got - expect).abs() < 0.01,
+                "leaf {g}: got {got:.4} expect {expect:.4}"
+            );
+        }
+    }
+
+    #[test]
+    fn merged_stats_equal_sum_of_shard_snapshots() {
+        let b = mk(64, 16, 4);
+        b.enable_timing();
+        for a in 0..8 {
+            for i in 0..8 {
+                b.insert_from(a, &tr((a * 8 + i) as f32));
+            }
+        }
+        let mut rng = Rng::new(5);
+        let mut out = SampleBatch::default();
+        for _ in 0..10 {
+            b.sample(16, &mut rng, &mut out);
+            let idx = out.indices.clone();
+            b.update_priorities(&idx, &vec![0.5; idx.len()]);
+        }
+        let merged = b.merged_stats();
+        let mut manual = LockStatsSnapshot::default();
+        for s in 0..b.shard_count() {
+            manual.accumulate(&b.shard(s).stats.snapshot());
+        }
+        assert_eq!(merged.inserts, 64);
+        assert_eq!(merged.inserts, manual.inserts);
+        assert_eq!(merged.updates, manual.updates);
+        assert_eq!(merged.global_acquisitions, manual.global_acquisitions);
+        assert_eq!(merged.leaf_acquisitions, manual.leaf_acquisitions);
+        // One sample op per wrapper sample() call (shards count none).
+        assert_eq!(merged.samples, 10);
+        assert_eq!(manual.samples, 0);
+        assert!(merged.storage_copy_ns > 0);
+    }
+
+    #[test]
+    fn shard_count_one_degenerates_to_single_tree() {
+        let b = mk(32, 16, 1);
+        assert_eq!(b.shard_count(), 1);
+        assert_eq!(b.capacity(), 32);
+        for i in 0..32 {
+            b.insert(&tr(i as f32));
+        }
+        let mut rng = Rng::new(6);
+        let mut out = SampleBatch::default();
+        assert!(b.sample(16, &mut rng, &mut out));
+        assert_eq!(out.len(), 16);
+    }
+}

@@ -179,43 +179,43 @@ impl KArySumTree {
         let mut i = 0usize; // node index within its level
         for lvl in 1..self.height {
             let base = self.level_off[lvl] + i * self.fanout;
+            // Single forward scan of the K children (contiguous,
+            // cache-aligned): pick the first strictly-positive child whose
+            // running sum crosses `prefix`. The last strictly-positive
+            // child seen so far doubles as the fallback for fp drift /
+            // beyond-total clamping, so zero-priority children are never
+            // descended into while the subtree holds positive mass — with
+            // no rescans of the sibling group.
             let mut partial = 0.0f32;
-            let mut child = 0usize;
-            // Linear scan of the K children (contiguous, cache-aligned).
-            while child < self.fanout - 1 {
+            let mut chosen = usize::MAX;
+            let mut chosen_before = 0.0f32;
+            let mut last_pos = usize::MAX;
+            let mut last_pos_before = 0.0f32;
+            for child in 0..self.fanout {
                 let v = load(&self.nodes[base + child]);
-                let sum = partial + v;
-                if sum >= prefix && v > 0.0 {
-                    break;
-                }
-                partial = sum;
-                child += 1;
-            }
-            // Guard against fp drift / all-zero tails: back up to the last
-            // strictly-positive child so we never return a zero-priority
-            // leaf when the tree is non-empty.
-            if load(&self.nodes[base + child]) <= 0.0 {
-                let mut c = child;
-                loop {
-                    if load(&self.nodes[base + c]) > 0.0 {
-                        child = c;
+                if v > 0.0 {
+                    last_pos = child;
+                    last_pos_before = partial;
+                    if partial + v >= prefix {
+                        chosen = child;
+                        chosen_before = partial;
                         break;
                     }
-                    if c == 0 {
-                        break;
-                    }
-                    c -= 1;
                 }
-                // If everything left of us is zero, scan right.
-                if load(&self.nodes[base + child]) <= 0.0 {
-                    let mut c = child;
-                    while c < self.fanout - 1 && load(&self.nodes[base + c]) <= 0.0 {
-                        c += 1;
-                    }
-                    child = c;
-                }
+                partial += v;
             }
-            prefix -= partial;
+            let (child, before) = if chosen != usize::MAX {
+                (chosen, chosen_before)
+            } else if last_pos != usize::MAX {
+                // No crossing (prefix beyond the subtree total): clamp to
+                // the last strictly-positive child.
+                (last_pos, last_pos_before)
+            } else {
+                // Subtree transiently all-zero (benign race with a lazy
+                // insert); descend rightmost like the historical behavior.
+                (self.fanout - 1, partial)
+            };
+            prefix -= before;
             i = i * self.fanout + child;
         }
         (i, self.get(i))

@@ -30,9 +30,17 @@ pub enum Lock {
     Accel,
     /// Parameter-server mutex.
     Server,
+    /// `global_tree_lock` of shard `k` of the sharded buffer. Shard 0
+    /// aliases [`Lock::GlobalTree`], so S=1 sharded task shapes reduce
+    /// exactly to the unsharded ones.
+    TreeShard(u8),
 }
 
-const N_LOCKS: usize = 4;
+/// Largest shard count the DES distinguishes (larger values alias the
+/// top shard — by then the tree locks are far off the critical path).
+pub const MAX_SIM_SHARDS: usize = 16;
+
+const N_LOCKS: usize = 3 + MAX_SIM_SHARDS;
 
 fn lock_idx(l: Lock) -> usize {
     match l {
@@ -40,6 +48,14 @@ fn lock_idx(l: Lock) -> usize {
         Lock::LeafLevel => 1,
         Lock::Accel => 2,
         Lock::Server => 3,
+        Lock::TreeShard(k) => {
+            let k = (k as usize).min(MAX_SIM_SHARDS - 1);
+            if k == 0 {
+                0
+            } else {
+                3 + k
+            }
+        }
     }
 }
 
@@ -315,28 +331,57 @@ impl OpCosts {
         learners: usize,
         serialized_accel: bool,
     ) -> Vec<Task> {
+        self.pal_tasks_sharded(actors, learners, 1, serialized_accel)
+    }
+
+    /// PAL task shapes over an S-shard buffer. Actor `a` inserts into
+    /// shard `a % S` (actor affinity → disjoint insert locks); each
+    /// learner's two-level sample and batched priority update touch every
+    /// shard once, for 1/S of the unsharded critical-section length (the
+    /// stratified descents and leaf writes split evenly, and the lock
+    /// amortization keeps the per-shard overhead to one acquisition).
+    /// `shards = 1` reduces exactly to the unsharded shapes.
+    pub fn pal_tasks_sharded(
+        &self,
+        actors: usize,
+        learners: usize,
+        shards: usize,
+        serialized_accel: bool,
+    ) -> Vec<Task> {
+        let s = shards.clamp(1, MAX_SIM_SHARDS);
         let mut tasks = Vec::new();
-        for _ in 0..actors {
+        for a in 0..actors {
+            let lock = Lock::TreeShard((a % s) as u8);
             tasks.push(Task {
                 segments: vec![
                     Segment::cpu(self.act_ns),
                     Segment::cpu(self.env_ns),
-                    Segment::locked(self.insert_lock_ns, Lock::GlobalTree),
+                    Segment::locked(self.insert_lock_ns, lock),
                     Segment::cpu(self.insert_copy_ns), // lazy write: no lock
-                    Segment::locked(self.insert_lock_ns, Lock::GlobalTree),
+                    Segment::locked(self.insert_lock_ns, lock),
                 ],
                 counts_as: Counter::Collect,
             });
         }
         for _ in 0..learners {
+            let mut segments = Vec::with_capacity(2 * s + 3);
+            for k in 0..s {
+                segments.push(Segment::locked(
+                    (self.sample_lock_ns / s as u64).max(1),
+                    Lock::TreeShard(k as u8),
+                ));
+            }
+            segments.push(Segment::cpu(self.batch_copy_ns)); // copies outside lock
+            segments.push(self.learn_segment(serialized_accel));
+            for k in 0..s {
+                segments.push(Segment::locked(
+                    (self.update_lock_ns / s as u64).max(1),
+                    Lock::TreeShard(k as u8),
+                ));
+            }
+            segments.push(Segment::locked(self.server_ns, Lock::Server));
             tasks.push(Task {
-                segments: vec![
-                    Segment::locked(self.sample_lock_ns, Lock::GlobalTree),
-                    Segment::cpu(self.batch_copy_ns), // copies outside lock
-                    self.learn_segment(serialized_accel),
-                    Segment::locked(self.update_lock_ns, Lock::GlobalTree),
-                    Segment::locked(self.server_ns, Lock::Server),
-                ],
+                segments,
                 counts_as: Counter::Consume,
             });
         }
@@ -482,5 +527,45 @@ mod tests {
         let c = costs();
         let r = simulate(&c.pal_tasks(1, 1), 1, 0);
         assert_eq!(r.collect_per_sec, 0.0);
+    }
+
+    #[test]
+    fn sharded_tasks_reduce_to_unsharded_at_s1() {
+        let c = costs();
+        let a = c.pal_tasks_accel(3, 2, false);
+        let b = c.pal_tasks_sharded(3, 2, 1, false);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.segments.len(), y.segments.len());
+            for (sx, sy) in x.segments.iter().zip(&y.segments) {
+                assert_eq!(sx.ns, sy.ns);
+                assert_eq!(
+                    sx.lock.map(super::lock_idx),
+                    sy.lock.map(super::lock_idx)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sharding_relieves_tree_lock_contention() {
+        // Buffer-dominated workload: long descents/updates make the
+        // single tree lock the bottleneck at 8 workers.
+        let c = OpCosts {
+            act_ns: 1_000,
+            env_ns: 500,
+            insert_lock_ns: 2_000,
+            insert_copy_ns: 1_000,
+            sample_lock_ns: 40_000,
+            batch_copy_ns: 5_000,
+            learn_ns: 10_000,
+            update_lock_ns: 30_000,
+            server_ns: 1_000,
+        };
+        let s1 = simulate(&c.pal_tasks_sharded(4, 4, 1, false), 8, 500_000_000);
+        let s4 = simulate(&c.pal_tasks_sharded(4, 4, 4, false), 8, 500_000_000);
+        let t1 = s1.collect_per_sec + s1.consume_per_sec;
+        let t4 = s4.collect_per_sec + s4.consume_per_sec;
+        assert!(t4 > 2.0 * t1, "sharding speedup only {:.2}x", t4 / t1);
     }
 }

@@ -80,6 +80,24 @@ impl Args {
         }
     }
 
+    /// Parse a comma-separated list of usizes (sweep flags such as
+    /// `--shards 1,2,4,8,16` or `--threads 1,2,4,8`); `default` when the
+    /// flag is absent.
+    pub fn usize_list(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(str::trim)
+                .filter(|p| !p.is_empty())
+                .map(|p| {
+                    p.parse::<usize>()
+                        .map_err(|_| anyhow!("--{key}: cannot parse `{p}` in list"))
+                })
+                .collect(),
+        }
+    }
+
     pub fn flag(&self, key: &str) -> bool {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
             || (self.has(key) && self.get(key).is_none())
@@ -134,5 +152,14 @@ mod tests {
     fn parse_error_reported() {
         let a = args("--steps abc");
         assert!(a.parse_or("steps", 0usize).is_err());
+    }
+
+    #[test]
+    fn usize_list_parses_and_defaults() {
+        let a = args("--shards 1,2,4,8");
+        assert_eq!(a.usize_list("shards", &[1]).unwrap(), vec![1, 2, 4, 8]);
+        assert_eq!(a.usize_list("threads", &[1, 2]).unwrap(), vec![1, 2]);
+        let bad = args("--shards 1,x");
+        assert!(bad.usize_list("shards", &[1]).is_err());
     }
 }

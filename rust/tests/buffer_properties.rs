@@ -96,6 +96,7 @@ fn prop_buffer_interleaving_consistent() {
             alpha: 0.6,
             beta: 0.4,
             lazy_writing: true,
+            shards: 1,
         });
         let mut rng = Rng::new(*ops as u64);
         let mut out = SampleBatch::default();
@@ -142,6 +143,7 @@ fn prop_sample_outputs_well_formed() {
                 alpha: 0.7,
                 beta: 0.5,
                 lazy_writing: true,
+                shards: 1,
             })),
             Box::new(GlobalLockReplay::new(128, 2, 1, 0.7, 0.5)),
         ];
@@ -185,6 +187,7 @@ fn prop_priority_roundtrip() {
             alpha: 0.6,
             beta: 0.4,
             lazy_writing: true,
+            shards: 1,
         });
         for i in 0..tds.len() {
             b.insert(&tr(i as f32, 2, 1));

@@ -1,0 +1,204 @@
+//! Minimal offline substitute for the `anyhow` crate.
+//!
+//! The container has no crates.io access, so this vendored shim provides
+//! exactly the surface the workspace uses: [`Error`], [`Result`], the
+//! [`anyhow!`] / [`bail!`] macros, and the [`Context`] extension trait.
+//! Semantics match `anyhow` where it matters here:
+//!
+//! * any `std::error::Error + Send + Sync + 'static` converts into
+//!   [`Error`] via `?`;
+//! * `.context(..)` / `.with_context(..)` wrap an error with an outer
+//!   message; `Display` prints the full `outer: inner: ...` chain (a
+//!   superset of anyhow's default single-message `Display`, which keeps
+//!   substring assertions in tests working).
+
+use std::fmt;
+
+/// An error: a message plus an optional wrapped cause chain.
+pub struct Error {
+    msg: String,
+    cause: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { msg: message.to_string(), cause: None }
+    }
+
+    /// Wrap `self` with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Self { msg: context.to_string(), cause: Some(Box::new(self)) }
+    }
+
+    /// The outermost message (no cause chain).
+    pub fn root_message(&self) -> &str {
+        &self.msg
+    }
+
+    /// Iterate the chain of messages, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut msgs = vec![self.msg.as_str()];
+        let mut cur = self.cause.as_deref();
+        while let Some(e) = cur {
+            msgs.push(e.msg.as_str());
+            cur = e.cause.as_deref();
+        }
+        msgs.into_iter()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur = self.cause.as_deref();
+        while let Some(e) = cur {
+            write!(f, ": {}", e.msg)?;
+            cur = e.cause.as_deref();
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Mirror anyhow's Debug: message, then the cause chain.
+        write!(f, "{}", self.msg)?;
+        let mut cur = self.cause.as_deref();
+        if cur.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = cur {
+            write!(f, "\n    {}", e.msg)?;
+            cur = e.cause.as_deref();
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`, so
+// this blanket conversion does not overlap the reflexive `From<T> for T`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain: Vec<String> = Vec::new();
+        chain.push(e.to_string());
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        let mut err: Option<Error> = None;
+        for msg in chain.into_iter().rev() {
+            err = Some(match err {
+                None => Error { msg, cause: None },
+                Some(inner) => Error { msg, cause: Some(Box::new(inner)) },
+            });
+        }
+        err.expect("chain is non-empty")
+    }
+}
+
+/// `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Format an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<()> {
+        let r: std::result::Result<(), std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::NotFound, "missing file"));
+        r?;
+        Ok(())
+    }
+
+    #[test]
+    fn io_error_converts_and_displays() {
+        let err = fails_io().unwrap_err();
+        assert!(err.to_string().contains("missing file"));
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let err = fails_io().with_context(|| "reading manifest").unwrap_err();
+        let s = err.to_string();
+        assert!(s.starts_with("reading manifest"), "{s}");
+        assert!(s.contains("missing file"), "{s}");
+        assert_eq!(err.chain().count(), 2);
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("x = {}", 42);
+        assert_eq!(e.to_string(), "x = 42");
+        fn f() -> Result<()> {
+            bail!("boom {}", 1);
+        }
+        assert_eq!(f().unwrap_err().to_string(), "boom 1");
+        fn g(ok: bool) -> Result<u32> {
+            ensure!(ok, "not ok");
+            Ok(7)
+        }
+        assert_eq!(g(true).unwrap(), 7);
+        assert!(g(false).is_err());
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert!(v.context("empty").is_err());
+        assert_eq!(Some(3u32).context("empty").unwrap(), 3);
+    }
+}
