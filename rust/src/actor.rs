@@ -1,47 +1,40 @@
 //! Asynchronous actor (paper §V-A): interacts with its own environment
-//! instance using snapshot weights and inserts transitions into the
-//! shared replay buffer. No synchronization with other actors — acting
-//! never mutates weights.
+//! instance using snapshot weights and writes the trajectory into the
+//! replay service. No synchronization with other actors — acting never
+//! mutates weights.
+//!
+//! Pacing: the old `actor_lead` / `update_interval` throttle that lived
+//! here moved into the replay service's per-table rate limiters
+//! ([`crate::service::RateLimiter`]); the actor only sleep-polls its
+//! writer's admission, exactly like the old `actors_ahead` gate.
 
 use crate::agent::Agent;
 use crate::env::Env;
 use crate::metrics::Metrics;
 use crate::params::ParameterServer;
-use crate::replay::{ReplayBuffer, Transition};
+use crate::service::{TrajectoryWriter, WriterStep};
 use crate::util::rng::Rng;
 use anyhow::Result;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 
-/// Shared control plane handed to every worker.
+/// Shared control plane handed to every worker: the stop flag, the
+/// global env-step budget, and the run counters. Ratio pacing is NOT
+/// here any more — it belongs to the service's rate limiters.
 pub struct Control {
     pub stop: AtomicBool,
     /// Global environment-step budget (actors stop when exhausted).
     pub max_env_steps: usize,
-    /// Env-steps per learn-step the coordinator wants (Alg 1
-    /// update_interval). Learners never run ahead of it; actors also
-    /// throttle when collection runs too far ahead (two-sided pacing, the
-    /// ratio objective of Eq. 5).
-    pub update_interval: f64,
-    /// Learners hold off until the buffer has this many transitions.
-    pub warmup_steps: usize,
-    /// Actors may run at most this many env steps ahead of
-    /// `learn_steps * update_interval` once warmup is done (0 = actors
-    /// free-run, paper's fully-async mode).
-    pub actor_lead: usize,
-    /// Global counters for pacing (mirrors of Metrics, kept separate so
-    /// pacing never takes the metrics mutex).
+    /// Global counters (mirrors of Metrics, kept separate so budget
+    /// checks never take the metrics mutex).
     pub env_steps: AtomicUsize,
     pub learn_steps: AtomicUsize,
 }
 
 impl Control {
-    pub fn new(max_env_steps: usize, update_interval: f64, warmup_steps: usize) -> Self {
+    pub fn new(max_env_steps: usize) -> Self {
         Self {
             stop: AtomicBool::new(false),
             max_env_steps,
-            update_interval,
-            warmup_steps,
-            actor_lead: 512,
             env_steps: AtomicUsize::new(0),
             learn_steps: AtomicUsize::new(0),
         }
@@ -56,29 +49,21 @@ impl Control {
         self.stop.store(true, Ordering::Relaxed);
     }
 
-    /// True while actors should hold off (collection too far ahead).
+    /// True once the env-step budget is spent (learners use this to
+    /// stop waiting on a limiter that can no longer open).
     #[inline]
-    pub fn actors_ahead(&self) -> bool {
-        if self.actor_lead == 0 {
-            return false;
-        }
-        let env = self.env_steps.load(Ordering::Relaxed);
-        if env < self.warmup_steps {
-            return false;
-        }
-        let learn = self.learn_steps.load(Ordering::Relaxed);
-        (env as f64) > learn as f64 * self.update_interval + self.actor_lead as f64
+    pub fn budget_exhausted(&self) -> bool {
+        self.env_steps.load(Ordering::Relaxed) >= self.max_env_steps
     }
 }
 
 /// Actor main loop. Runs until the step budget is exhausted or stop is
-/// requested. `agent` and `env` are thread-local (PJRT objects inside).
-#[allow(clippy::too_many_arguments)]
+/// requested. `agent` and `env` are thread-local (PJRT objects inside);
+/// `writer` is this actor's private handle onto the shared service.
 pub fn run_actor(
-    actor_id: usize,
     agent: &mut Agent,
     env: &mut dyn Env,
-    buffer: &dyn ReplayBuffer,
+    writer: &mut TrajectoryWriter,
     server: &ParameterServer,
     metrics: &Metrics,
     ctl: &Control,
@@ -93,9 +78,9 @@ pub fn run_actor(
         if ctl.should_stop() {
             break;
         }
-        // Two-sided ratio pacing: wait while collection is too far ahead
-        // of consumption (learners have their own one-sided gate).
-        if ctl.actors_ahead() {
+        // Rate-limited collection: wait while any target table's limiter
+        // says collection is too far ahead of consumption.
+        if writer.throttled() {
             std::thread::sleep(std::time::Duration::from_micros(100));
             continue;
         }
@@ -113,20 +98,18 @@ pub fn run_actor(
         let step = env.step(&action, rng);
         ep_return += step.reward;
 
-        // Truncation is not a true terminal: bootstrap through it.
-        let done_flag = step.done && !step.truncated;
-        // Actor-affinity insert: sharded buffers route this actor to a
-        // fixed shard so concurrent actors take disjoint locks.
-        buffer.insert_from(
-            actor_id,
-            &Transition {
-                obs: obs.clone(),
-                action,
-                next_obs: step.obs.clone(),
-                reward: step.reward,
-                done: done_flag,
-            },
-        );
+        // The writer owns item assembly: 1-step passthrough, N-step
+        // folding, sequence flattening, and the
+        // bootstrap-through-truncation rule; its actor id gives sharded
+        // tables their affinity routing.
+        writer.append(WriterStep {
+            obs: obs.clone(),
+            action,
+            next_obs: step.obs.clone(),
+            reward: step.reward,
+            done: step.done,
+            truncated: step.truncated,
+        });
         metrics.inc_env_step();
 
         if step.done || step.truncated {

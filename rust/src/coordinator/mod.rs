@@ -1,9 +1,12 @@
-//! Coordinator: wires buffer + parameter server + parallel actors +
-//! parallel learners into one training run (paper §V, Fig 7).
+//! Coordinator: wires the replay service + parameter server + parallel
+//! actors + parallel learners into one training run (paper §V, Fig 7).
 //!
 //! Every worker thread owns its own PJRT runtime (compiled from the same
 //! AOT artifacts); weights move between threads only as flat f32 vectors
-//! through the parameter server.
+//! through the parameter server. Experience moves through the
+//! [`ReplayService`]: actors hold [`crate::service::TrajectoryWriter`]s,
+//! learners hold [`crate::service::SamplerHandle`]s, and the old
+//! `actor_lead` / `update_interval` pacing is each table's rate limiter.
 
 use crate::actor::{run_actor, Control};
 use crate::agent::{Agent, AlgoKind, Exploration};
@@ -16,6 +19,10 @@ use crate::replay::{
     PyBindBinaryReplay, ReplayBuffer, ShardedPrioritizedReplay, UniformReplay,
 };
 use crate::runtime::{Manifest, Runtime};
+use crate::service::{
+    ItemKind, RateLimitSpec, RateLimiter, ReplayService, Table, TableSpec,
+    TableStatsSnapshot,
+};
 use anyhow::{anyhow, bail, Context, Result};
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -58,11 +65,12 @@ pub struct TrainConfig {
     pub learners: usize,
     pub total_env_steps: usize,
     pub warmup_steps: usize,
-    /// Desired env-steps per learn-step (Alg 1 update_interval).
+    /// Desired env-steps per learn-step (Alg 1 update_interval). Feeds
+    /// the legacy rate-limiter mapping (σ = 1/update_interval).
     pub update_interval: f64,
     pub buffer: BufferKind,
     pub buffer_capacity: usize,
-    /// Replay shards S (PalKary only): >1 splits the buffer into S
+    /// Replay shards S (PalKary only): >1 splits each table into S
     /// independent sub-trees with actor-affinity insert routing,
     /// two-level sampling and per-shard batched priority updates.
     pub shards: usize,
@@ -75,8 +83,19 @@ pub struct TrainConfig {
     /// learner batch; >1 emulates synchronous parameter-server rounds).
     pub aggregation: usize,
     /// Max env steps collection may lead consumption×ratio (0 = actors
-    /// free-run, the paper's fully-asynchronous mode).
+    /// free-run, the paper's fully-asynchronous mode). Feeds the legacy
+    /// rate-limiter mapping (`max_diff = actor_lead · σ`).
     pub actor_lead: usize,
+    /// N-step return length for the default table (1 = plain
+    /// transitions).
+    pub n_step: usize,
+    /// Discount used for N-step reward folding.
+    pub gamma_nstep: f32,
+    /// Explicit table layout (`--tables`); empty = one table named
+    /// `replay` whose item kind follows `n_step`.
+    pub tables: Vec<TableSpec>,
+    /// Rate-limiter selection for every table (`--rate-limit`).
+    pub rate_limit: RateLimitSpec,
     pub target_sync: Option<TargetSync>,
     pub exploration: Exploration,
     pub seed: u64,
@@ -107,6 +126,10 @@ impl TrainConfig {
             grad_clip: 10.0,
             aggregation: 1,
             actor_lead: 512,
+            n_step: 1,
+            gamma_nstep: 0.99,
+            tables: Vec::new(),
+            rate_limit: RateLimitSpec::Legacy,
             target_sync: None,
             exploration: Exploration::default(),
             seed: 0,
@@ -117,6 +140,20 @@ impl TrainConfig {
 
     pub fn artifact_id(&self) -> String {
         format!("{}_{}", self.algo, self.env)
+    }
+
+    /// The table layout this run trains with: explicit `--tables` spec,
+    /// or one default table whose item kind follows `n_step`.
+    pub fn table_specs(&self) -> Vec<TableSpec> {
+        if !self.tables.is_empty() {
+            return self.tables.clone();
+        }
+        let kind = if self.n_step > 1 {
+            ItemKind::NStep { n: self.n_step, gamma: self.gamma_nstep }
+        } else {
+            ItemKind::OneStep
+        };
+        vec![TableSpec { name: "replay".to_string(), kind, capacity: None }]
     }
 }
 
@@ -137,12 +174,20 @@ pub struct TrainReport {
     pub final_weights: Vec<f32>,
     pub final_target_weights: Vec<f32>,
     pub opt_steps: usize,
+    /// Per-table service counters (inserts, granted batches, stalls).
+    pub table_stats: Vec<(String, TableStatsSnapshot)>,
 }
 
-/// Build the configured replay buffer.
-pub fn make_buffer(cfg: &TrainConfig, obs_dim: usize, act_dim: usize) -> Arc<dyn ReplayBuffer> {
+/// Build one replay buffer with an explicit capacity (tables may
+/// override the run default).
+fn make_buffer_with(
+    cfg: &TrainConfig,
+    capacity: usize,
+    obs_dim: usize,
+    act_dim: usize,
+) -> Arc<dyn ReplayBuffer> {
     let prio_cfg = PrioritizedConfig {
-        capacity: cfg.buffer_capacity,
+        capacity,
         obs_dim,
         act_dim,
         fanout: cfg.fanout,
@@ -158,30 +203,69 @@ pub fn make_buffer(cfg: &TrainConfig, obs_dim: usize, act_dim: usize) -> Arc<dyn
         }
         BufferKind::PalKary => Arc::new(PrioritizedReplay::new(prio_cfg)),
         BufferKind::GlobalLock => Arc::new(GlobalLockReplay::new(
-            cfg.buffer_capacity,
+            capacity,
             obs_dim,
             act_dim,
             cfg.alpha,
             cfg.beta,
         )),
-        BufferKind::Uniform => {
-            Arc::new(UniformReplay::new(cfg.buffer_capacity, obs_dim, act_dim))
-        }
+        BufferKind::Uniform => Arc::new(UniformReplay::new(capacity, obs_dim, act_dim)),
         BufferKind::EmulatedPython => Arc::new(NaiveScanReplay::new(
-            cfg.buffer_capacity,
+            capacity,
             obs_dim,
             act_dim,
             cfg.alpha,
             cfg.beta,
         )),
         BufferKind::EmulatedBinding => Arc::new(PyBindBinaryReplay::new(
-            cfg.buffer_capacity,
+            capacity,
             obs_dim,
             act_dim,
             cfg.alpha,
             cfg.beta,
         )),
     }
+}
+
+/// Build the configured replay buffer with the run-default capacity.
+pub fn make_buffer(cfg: &TrainConfig, obs_dim: usize, act_dim: usize) -> Arc<dyn ReplayBuffer> {
+    make_buffer_with(cfg, cfg.buffer_capacity, obs_dim, act_dim)
+}
+
+/// Build the run's replay service: one table per spec, each wrapping a
+/// buffer of the configured kind (sequence tables widen their dims by
+/// the window length) and carrying the run's rate limiter.
+pub fn build_service(cfg: &TrainConfig, obs_dim: usize, act_dim: usize) -> Result<ReplayService> {
+    let specs = cfg.table_specs();
+    // Learners sample the first table into base-dims batches, so it
+    // cannot be a flattened-sequence table.
+    if let ItemKind::Sequence { .. } = specs[0].kind {
+        bail!(
+            "first table `{}` is a sequence table; learners need a 1step or nstep table first",
+            specs[0].name
+        );
+    }
+    let mut tables = Vec::with_capacity(specs.len());
+    for (i, spec) in specs.iter().enumerate() {
+        let mult = spec.kind.dim_multiplier();
+        let capacity = spec.capacity.unwrap_or(cfg.buffer_capacity);
+        let buffer = make_buffer_with(cfg, capacity, obs_dim * mult, act_dim * mult);
+        // Only the learner-sampled (first) table gets the ratio limiter:
+        // the ratio couples inserts to THIS run's sampling, and writers
+        // block while ANY table denies inserts — a ratio limiter on an
+        // auxiliary table (whose sample counter never moves, nothing in
+        // this process samples it) would throttle every actor forever.
+        // Auxiliary tables free-run until per-table limiter specs land
+        // (see ROADMAP).
+        let limiter = if i == 0 {
+            cfg.rate_limit
+                .build(cfg.update_interval, cfg.warmup_steps, cfg.actor_lead)
+        } else {
+            RateLimiter::Unlimited { min_size_to_sample: cfg.warmup_steps }
+        };
+        tables.push(Table::new(spec.name.clone(), spec.kind, buffer, limiter));
+    }
+    ReplayService::new(tables)
 }
 
 /// Run one full training session. Blocks until the env-step budget is
@@ -200,15 +284,9 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         sync,
         cfg.aggregation,
     ));
-    let buffer = make_buffer(cfg, info.obs_dim, info.flat_act_dim);
+    let service = Arc::new(build_service(cfg, info.obs_dim, info.flat_act_dim)?);
     let metrics = Arc::new(Metrics::new());
-    let mut control = Control::new(
-        cfg.total_env_steps,
-        cfg.update_interval,
-        cfg.warmup_steps,
-    );
-    control.actor_lead = cfg.actor_lead;
-    let ctl = Arc::new(control);
+    let ctl = Arc::new(Control::new(cfg.total_env_steps));
 
     let mut root_rng = crate::util::rng::Rng::new(cfg.seed);
     let worker_seeds: Vec<u64> = (0..cfg.actors + cfg.learners)
@@ -219,7 +297,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         let mut handles = Vec::new();
         for a in 0..cfg.actors {
             let info = info.clone();
-            let buffer = Arc::clone(&buffer);
+            let service = Arc::clone(&service);
             let server = Arc::clone(&server);
             let metrics = Arc::clone(&metrics);
             let ctl = Arc::clone(&ctl);
@@ -233,9 +311,10 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
                 let mut env = make_env(&env_name)
                     .ok_or_else(|| anyhow!("unknown env {env_name}"))?;
                 let mut rng = crate::util::rng::Rng::new(seed);
+                let mut writer = service.writer(a);
                 let r = run_actor(
-                    a, &mut agent, env.as_mut(), buffer.as_ref(), &server, &metrics,
-                    &ctl, &mut rng,
+                    &mut agent, env.as_mut(), &mut writer, &server, &metrics, &ctl,
+                    &mut rng,
                 );
                 // An actor finishing its budget is normal; an actor
                 // erroring must stop the whole run.
@@ -247,7 +326,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         }
         for l in 0..cfg.learners {
             let info = info.clone();
-            let buffer = Arc::clone(&buffer);
+            let service = Arc::clone(&service);
             let server = Arc::clone(&server);
             let metrics = Arc::clone(&metrics);
             let ctl = Arc::clone(&ctl);
@@ -258,8 +337,9 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
                 let model = rt.load_model(&info)?;
                 let mut agent = Agent::new(model, explore)?;
                 let mut rng = crate::util::rng::Rng::new(seed);
+                let sampler = service.default_sampler();
                 let r = run_learner(
-                    l, &mut agent, buffer.as_ref(), &server, &metrics, &ctl, &mut rng,
+                    l, &mut agent, &sampler, &server, &metrics, &ctl, &mut rng,
                 );
                 if r.is_err() {
                     ctl.request_stop();
@@ -268,23 +348,22 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
             }));
         }
 
-        // Monitor loop: progress logging, early stop, learner shutdown.
+        // Monitor loop: progress logging (worker metrics + service
+        // limiter/stall stats), early stop, shutdown.
         let mut last_log = std::time::Instant::now();
-        let mut reached = false;
         loop {
             std::thread::sleep(Duration::from_millis(20));
             let env_steps = ctl.env_steps.load(Ordering::Relaxed);
             if cfg.log_every_secs > 0.0
                 && last_log.elapsed().as_secs_f64() >= cfg.log_every_secs
             {
-                eprintln!("[pal] {}", metrics.summary());
+                eprintln!("[pal] {} | {}", metrics.summary(), service.stats_line());
                 last_log = std::time::Instant::now();
             }
             if let Some(target) = cfg.stop_at_reward {
                 if metrics.mean_return().map_or(false, |r| r >= target as f64)
                     && metrics.episodes.load(Ordering::Relaxed) >= 10
                 {
-                    reached = true;
                     ctl.request_stop();
                 }
             }
@@ -295,10 +374,6 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
                 ctl.request_stop();
                 break;
             }
-        }
-        let _ = reached;
-        if reached {
-            // Stash in metrics via curve? Report computed below reads ctl.
         }
         for h in handles {
             h.join().map_err(|_| anyhow!("worker panicked"))??;
@@ -323,6 +398,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         env_steps_per_sec: metrics.env_throughput(),
         learn_steps_per_sec: metrics.learn_throughput(),
         reached_target: reached,
+        table_stats: service.stats_snapshots(),
     })
 }
 
@@ -353,4 +429,63 @@ pub fn evaluate(cfg: &TrainConfig, weights: &[f32], episodes: usize) -> Result<f
         total += ep as f64;
     }
     Ok(total / episodes as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_table_specs_follow_n_step() {
+        let mut cfg = TrainConfig::new("dqn", "CartPole-v1");
+        let specs = cfg.table_specs();
+        assert_eq!(specs.len(), 1);
+        assert_eq!(specs[0].name, "replay");
+        assert_eq!(specs[0].kind, ItemKind::OneStep);
+        cfg.n_step = 3;
+        assert_eq!(
+            cfg.table_specs()[0].kind,
+            ItemKind::NStep { n: 3, gamma: cfg.gamma_nstep }
+        );
+    }
+
+    #[test]
+    fn build_service_honors_specs_and_rejects_seq_first() {
+        let mut cfg = TrainConfig::new("dqn", "CartPole-v1");
+        cfg.buffer_capacity = 1_024;
+        cfg.tables = vec![
+            TableSpec { name: "replay".into(), kind: ItemKind::OneStep, capacity: None },
+            TableSpec {
+                name: "traj".into(),
+                kind: ItemKind::Sequence { len: 4 },
+                capacity: Some(512),
+            },
+        ];
+        let svc = build_service(&cfg, 4, 2).unwrap();
+        assert_eq!(svc.tables().len(), 2);
+        assert_eq!(svc.default_table().name(), "replay");
+        assert_eq!(svc.table("traj").unwrap().capacity(), 512);
+        // Auxiliary tables must free-run: nothing in this process
+        // samples them, so a ratio limiter there would throttle every
+        // writer forever (deadlock).
+        assert_eq!(
+            *svc.table("traj").unwrap().limiter(),
+            RateLimiter::Unlimited { min_size_to_sample: cfg.warmup_steps }
+        );
+        cfg.tables.rotate_right(1); // sequence table first → error
+        assert!(build_service(&cfg, 4, 2).is_err());
+    }
+
+    #[test]
+    fn legacy_limiter_built_by_default() {
+        let cfg = TrainConfig::new("dqn", "CartPole-v1");
+        let svc = build_service(&cfg, 4, 2).unwrap();
+        match svc.default_table().limiter() {
+            crate::service::RateLimiter::SampleToInsertRatio(r) => {
+                assert!((r.samples_per_insert - 1.0).abs() < 1e-12);
+                assert_eq!(r.min_size_to_sample, cfg.warmup_steps);
+            }
+            other => panic!("expected legacy ratio limiter, got {other:?}"),
+        }
+    }
 }

@@ -41,6 +41,11 @@ pub struct CostProfile {
     pub framework_actor_ns: u64,
     pub framework_learn_ns: u64,
     pub framework_sync_ns: u64,
+    /// Replay-service rate limiter in the modeled pipeline: σ samples
+    /// per insert (`SampleToInsertRatio`), 0.0 = no limiter. The DES
+    /// runs limiter-free; the coupling and its stall terms are applied
+    /// to its result ([`crate::sim::SimResult::rate_limited`]).
+    pub samples_per_insert: f64,
 }
 
 impl CostProfile {
@@ -85,6 +90,7 @@ impl CostProfile {
             framework_actor_ns: 0,
             framework_learn_ns: 0,
             framework_sync_ns: 0,
+            samples_per_insert: 0.0,
         }
     }
 
@@ -175,6 +181,7 @@ impl CostProfile {
             framework_actor_ns: 0,
             framework_learn_ns: 0,
             framework_sync_ns: 0,
+            samples_per_insert: 0.0,
         }
     }
 
@@ -216,12 +223,37 @@ impl CostProfile {
         crate::sim::simulate_with(tasks, cores, self.accel_slots, 200_000_000)
     }
 
-    /// Balanced training throughput of a split at `cores` cores under the
-    /// ratio constraint: min(collect, ratio × consume). This is what the
-    /// paper's end-to-end figures effectively measure (convergence speed
-    /// follows the paced pipeline's slower side).
-    pub fn balanced(&self, actors: usize, learners: usize, cores: usize, ratio: f64) -> f64 {
+    /// Joint simulation with the configured rate limiter's coupling (and
+    /// stall terms) applied; identical to [`Self::joint`] when
+    /// `samples_per_insert` is 0.
+    pub fn limited_joint(
+        &self,
+        actors: usize,
+        learners: usize,
+        cores: usize,
+    ) -> crate::sim::SimResult {
         let r = self.run(&self.tasks(actors, learners), cores);
+        if self.samples_per_insert > 0.0 {
+            r.rate_limited(self.samples_per_insert)
+        } else {
+            r
+        }
+    }
+
+    /// Rate-limiter stall terms at a split: the fraction of each side's
+    /// free-run throughput the limiter burns, `(actor, learner)`.
+    pub fn limiter_stalls(&self, actors: usize, learners: usize, cores: usize) -> (f64, f64) {
+        let r = self.limited_joint(actors, learners, cores);
+        (r.actor_stall_frac, r.learner_stall_frac)
+    }
+
+    /// Balanced training throughput of a split at `cores` cores under the
+    /// ratio constraint: min(collect, ratio × consume), after any
+    /// configured rate limiter has coupled the two sides. This is what
+    /// the paper's end-to-end figures effectively measure (convergence
+    /// speed follows the paced pipeline's slower side).
+    pub fn balanced(&self, actors: usize, learners: usize, cores: usize, ratio: f64) -> f64 {
+        let r = self.limited_joint(actors, learners, cores);
         r.collect_per_sec.min(ratio * r.consume_per_sec)
     }
 
@@ -419,6 +451,30 @@ mod tests {
             "sharding gain only {:.2}x",
             best_t / t1
         );
+    }
+
+    #[test]
+    fn rate_limiter_stall_terms_couple_the_pipeline() {
+        let mut p = CostProfile::representative("dqn", "CartPole-v1");
+        // No limiter: no stall terms, limited_joint == joint.
+        let free = p.limited_joint(4, 2, 8);
+        assert_eq!(free.actor_stall_frac, 0.0);
+        assert_eq!(free.learner_stall_frac, 0.0);
+        // σ = 8 samples per insert: cheap acting vastly outruns
+        // 8·consume, so the limiter stalls the actors hard.
+        p.samples_per_insert = 8.0;
+        let ltd = p.limited_joint(4, 2, 8);
+        assert!(ltd.collect_per_sec < free.collect_per_sec);
+        let (actor_stall, learner_stall) = p.limiter_stalls(4, 2, 8);
+        assert!(actor_stall > 0.5, "actor stall {actor_stall}");
+        assert_eq!(learner_stall, 0.0);
+        // The balanced objective must reflect the coupled pipeline.
+        assert!(p.balanced(4, 2, 8, 1.0) <= free.collect_per_sec);
+        // A tiny σ flips the stall to the learner side.
+        p.samples_per_insert = 1e-6;
+        let (a2, l2) = p.limiter_stalls(4, 2, 8);
+        assert_eq!(a2, 0.0);
+        assert!(l2 > 0.5, "learner stall {l2}");
     }
 
     #[test]

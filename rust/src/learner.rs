@@ -1,25 +1,31 @@
-//! Parallel learner (paper §V-B): samples a batch from the shared
-//! prioritized buffer, computes sub-gradients through the compiled learn
+//! Parallel learner (paper §V-B): draws a rate-limited batch from the
+//! replay service, computes sub-gradients through the compiled learn
 //! graph(s), pushes them to the parameter server and feeds |TD| back as
 //! new priorities (Algorithm 1 lines 12–18).
+//!
+//! The warmup and ratio gates that used to live here are now the
+//! sampled table's rate limiter: [`SamplerHandle::try_sample`] denies a
+//! batch while the table is below `min_size_to_sample` or consumption
+//! would run past the configured sample-to-insert ratio, and the
+//! learner sleep-polls on the denial.
 
 use crate::actor::Control;
 use crate::agent::Agent;
 use crate::metrics::Metrics;
 use crate::params::ParameterServer;
-use crate::replay::{ReplayBuffer, SampleBatch};
+use crate::replay::SampleBatch;
+use crate::service::{SampleOutcome, SamplerHandle};
 use crate::util::rng::Rng;
 use anyhow::Result;
 use std::sync::atomic::Ordering;
 use std::time::Duration;
 
-/// Learner main loop. Paces itself so that
-/// `learn_steps * update_interval <= env_steps` (the desired collection/
-/// consumption ratio of §V-D), with warmup gating on buffer fill.
+/// Learner main loop. Pacing (warmup + sample-to-insert ratio) comes
+/// entirely from the sampler's table limiter.
 pub fn run_learner(
     learner_id: usize,
     agent: &mut Agent,
-    buffer: &dyn ReplayBuffer,
+    sampler: &SamplerHandle,
     server: &ParameterServer,
     metrics: &Metrics,
     ctl: &Control,
@@ -38,36 +44,28 @@ pub fn run_learner(
         if ctl.should_stop() {
             break;
         }
-        // Warmup: wait for enough data.
-        if buffer.len() < ctl.warmup_steps.max(batch_size) {
-            std::thread::sleep(Duration::from_micros(200));
-            continue;
-        }
-        // Ratio pacing (Alg 1 update_interval, Eq. 5 objective).
-        let env_steps = ctl.env_steps.load(Ordering::Relaxed);
-        let learn_steps = ctl.learn_steps.load(Ordering::Relaxed);
-        if (learn_steps as f64 + 1.0) * ctl.update_interval > env_steps as f64 {
-            // Collection is behind; actors still running => wait, else stop.
-            if env_steps >= ctl.max_env_steps {
-                break;
+        match sampler.try_sample(batch_size, rng, &mut batch) {
+            SampleOutcome::Sampled => {}
+            SampleOutcome::Throttled | SampleOutcome::NotEnoughData => {
+                // Collection can no longer catch up once the env-step
+                // budget is spent: drain out instead of spinning.
+                if ctl.budget_exhausted() {
+                    break;
+                }
+                std::thread::sleep(Duration::from_micros(150));
+                continue;
             }
-            std::thread::sleep(Duration::from_micros(100));
-            continue;
         }
         ctl.learn_steps.fetch_add(1, Ordering::Relaxed);
 
         version = server.sync_pair(&mut params, &mut targets, version);
-        if !buffer.sample(batch_size, rng, &mut batch) {
-            std::thread::sleep(Duration::from_micros(200));
-            continue;
-        }
         let out = agent.learn(&params, &targets, &batch, rng)?;
         for u in &out.updates {
             server.push_gradient(u.lo, u.hi, &u.grads);
         }
         metrics.grad_updates.fetch_add(out.updates.len(), Ordering::Relaxed);
         if !out.td_abs.is_empty() {
-            buffer.update_priorities(&batch.indices, &out.td_abs);
+            sampler.update_priorities(&batch.indices, &out.td_abs);
         }
         metrics.record_learn(out.loss);
     }

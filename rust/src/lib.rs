@@ -8,6 +8,10 @@
 //!   prioritized replay buffer with cache-aligned layout, lazy writing
 //!   and two-lock synchronization, plus every baseline it is compared
 //!   against.
+//! * [`service`] — the replay service in front of those buffers:
+//!   named tables, rate limiters owning the sample-to-insert ratio,
+//!   and actor-side N-step / sequence trajectory writers (Reverb's
+//!   server shape, in-process).
 //! * [`coordinator`] — parallel actors + parallel learners + parameter
 //!   server training loop (Fig 7).
 //! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
@@ -27,5 +31,6 @@ pub mod metrics;
 pub mod params;
 pub mod replay;
 pub mod runtime;
+pub mod service;
 pub mod sim;
 pub mod util;

@@ -12,6 +12,7 @@ use pal_rl::coordinator::{train, BufferKind, TrainConfig};
 use pal_rl::dse;
 use pal_rl::env::ENV_NAMES;
 use pal_rl::runtime::Manifest;
+use pal_rl::service::{RateLimitSpec, TableSpec};
 use pal_rl::util::cli::Args;
 
 const TRAIN_FLAGS: &[&str] = &[
@@ -19,6 +20,7 @@ const TRAIN_FLAGS: &[&str] = &[
     "update-interval", "buffer", "capacity", "shards", "fanout", "alpha",
     "beta", "lr", "grad-clip", "aggregation", "seed", "stop-at-reward",
     "log-every", "curve-out", "eps-decay", "action-noise", "save-checkpoint",
+    "n-step", "gamma-nstep", "tables", "rate-limit",
 ];
 
 fn usage() -> ! {
@@ -27,7 +29,7 @@ fn usage() -> ! {
 
 USAGE:
   pal train --algo <dqn|ddqn|ddpg|td3|sac> --env <ENV> [options]
-  pal dse   --algo <A> --env <E> [--cores M] [--update-interval R] [--shards 1,2,4,8,16]
+  pal dse   --algo <A> --env <E> [--cores M] [--update-interval R] [--shards 1,2,4,8,16] [--rate-limit S]
   pal buffer-bench [--capacity N] [--fanout K] [--shards S] [--threads T] [--ops N]
   pal envs
   pal info  [--artifacts DIR]
@@ -47,6 +49,16 @@ TRAIN OPTIONS:
   --alpha A --beta B  PER exponents (default 0.6 / 0.4)
   --lr LR             Adam learning rate (default 1e-3)
   --aggregation K     sub-gradients per optimizer step (default 1)
+  --n-step N          N-step returns in the default table (default 1)
+  --gamma-nstep G     discount for N-step reward folding (default 0.99)
+  --tables SPEC       replay-service table layout, comma-separated
+                      name=kind[@capacity] entries with kind one of
+                      1step | nstep:N | seq:L (default: one `replay`
+                      table following --n-step); learners sample the
+                      first table
+  --rate-limit R      sample-to-insert limiter per table: `legacy`
+                      (default: the --update-interval + actor-lead
+                      pacing), `unlimited`, or a samples-per-insert float
   --seed S            PRNG seed
   --stop-at-reward R  early-stop at mean return R
   --log-every SECS    progress line interval (default 5)
@@ -79,6 +91,21 @@ fn train_config_from(a: &Args) -> Result<TrainConfig> {
     cfg.lr = a.parse_or("lr", cfg.lr)?;
     cfg.grad_clip = a.parse_or("grad-clip", cfg.grad_clip)?;
     cfg.aggregation = a.parse_or("aggregation", cfg.aggregation)?;
+    cfg.n_step = a.parse_or("n-step", cfg.n_step)?;
+    if cfg.n_step == 0 {
+        bail!("--n-step must be >= 1");
+    }
+    cfg.gamma_nstep = a.parse_or("gamma-nstep", cfg.gamma_nstep)?;
+    let table_specs = a.str_list("tables");
+    if !table_specs.is_empty() {
+        cfg.tables = table_specs
+            .iter()
+            .map(|s| TableSpec::parse(s, cfg.gamma_nstep))
+            .collect::<Result<Vec<_>>>()?;
+    }
+    if let Some(r) = a.get("rate-limit") {
+        cfg.rate_limit = RateLimitSpec::parse(r)?;
+    }
     cfg.seed = a.parse_or("seed", cfg.seed)?;
     cfg.exploration.eps_decay_steps = a.parse_or("eps-decay", cfg.exploration.eps_decay_steps)?;
     cfg.exploration.action_noise = a.parse_or("action-noise", cfg.exploration.action_noise)?;
@@ -108,6 +135,18 @@ fn cmd_train(a: &Args) -> Result<()> {
         report.final_mean_return,
         if report.reached_target { " [target reached]" } else { "" },
     );
+    for (name, s) in &report.table_stats {
+        println!(
+            "table {name}: {} inserts, {} batches ({} items), {} priority updates, \
+             stalls insert/sample = {}/{}",
+            s.inserts,
+            s.sample_batches,
+            s.sampled_items,
+            s.priority_updates,
+            s.insert_stalls,
+            s.sample_stalls,
+        );
+    }
     if let Some(path) = a.get("save-checkpoint") {
         pal_rl::params::Checkpoint {
             online: report.final_weights.clone(),
@@ -240,7 +279,10 @@ fn cmd_dse(a: &Args) -> Result<()> {
     let ratio: f64 = a.parse_or("update-interval", 1.0)?;
     let algo = a.str_or("algo", "dqn");
     let env = a.str_or("env", "CartPole-v1");
-    let profile = dse::CostProfile::representative(&algo, &env);
+    let mut profile = dse::CostProfile::representative(&algo, &env);
+    // Replay-service rate limiter in the modeled pipeline (σ samples
+    // per insert; 0 = no limiter).
+    profile.samples_per_insert = a.parse_or("rate-limit", 0.0)?;
     let plan = dse::explore(&profile, cores, ratio);
     println!("{}", dse::render_curves(&profile, cores));
     println!(
@@ -248,6 +290,17 @@ fn cmd_dse(a: &Args) -> Result<()> {
          (collect {:.0}/s vs consume {:.0}/s)",
         plan.actors, plan.learners, plan.collect_throughput, plan.consume_throughput
     );
+    if profile.samples_per_insert > 0.0 {
+        let (actor_stall, learner_stall) =
+            profile.limiter_stalls(plan.actors, plan.learners, cores);
+        println!(
+            "rate limiter σ={}: stall terms at this split — actors {:.1}%, \
+             learners {:.1}% of free-run throughput",
+            profile.samples_per_insert,
+            actor_stall * 100.0,
+            learner_stall * 100.0,
+        );
+    }
     // Replay-shard dimension of the design space.
     let candidates = a.usize_list("shards", &[1, 2, 4, 8, 16])?;
     let sweep = profile.shard_sweep(cores, ratio, &candidates);

@@ -172,13 +172,20 @@ mod trait_tests {
             for i in 0..64 {
                 b.insert(&tr(i as f32));
             }
+            // Concurrent producers use `insert_from` with DISTINCT actor
+            // ids: sharded buffers route them to disjoint shard locks
+            // (ids 0..4 cover every shard of the 4-shard impl), everyone
+            // else falls through to `insert` — either way the shard
+            // routing runs under real contention here.
             std::thread::scope(|s| {
-                let b1 = Arc::clone(&b);
-                s.spawn(move || {
-                    for i in 0..1000 {
-                        b1.insert(&tr(i as f32));
-                    }
-                });
+                for actor in 0..4usize {
+                    let b1 = Arc::clone(&b);
+                    s.spawn(move || {
+                        for i in 0..500 {
+                            b1.insert_from(actor, &tr(i as f32));
+                        }
+                    });
+                }
                 let b2 = Arc::clone(&b);
                 s.spawn(move || {
                     let mut rng = Rng::new(9);
@@ -191,6 +198,9 @@ mod trait_tests {
                     }
                 });
             });
+            // 64 round-robin prefills + 500 affinity inserts per actor
+            // overfill every shard, so every impl must sit exactly at
+            // capacity.
             assert_eq!(b.len(), 256, "{}", b.name());
         }
     }

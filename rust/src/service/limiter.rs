@@ -1,0 +1,310 @@
+//! Rate limiters: the replay service's ownership of the
+//! sample-to-insert ratio (Reverb's `RateLimiter` concept).
+//!
+//! A limiter watches two monotone per-table counters — items inserted
+//! and sample batches granted — and answers two questions without any
+//! lock of its own (both counters are relaxed atomics owned by the
+//! table):
+//!
+//! * may a writer insert another item right now?
+//! * may a learner be granted another sample batch right now?
+//!
+//! [`SampleToInsertRatio`] keeps the *ratio drift*
+//! `d = inserts · σ − samples` (σ = samples per insert) inside a
+//! `[min_diff, max_diff]` window once the table holds
+//! `min_size_to_sample` items: inserts stall when `d` would run past
+//! `max_diff` (collection too far ahead), samples stall when granting
+//! one would push `d` below `min_diff` (consumption too far ahead).
+//! [`RateLimiter::Unlimited`] never stalls either side (the paper's
+//! fully-asynchronous free-run mode); `min_size_to_sample` still gates
+//! sampling so learners never train on an all-but-empty table.
+//!
+//! The coordinator's legacy pacing — `Control::actors_ahead` plus the
+//! learner-side `(learn + 1) · update_interval <= env_steps` gate — is
+//! exactly [`RateLimiter::from_update_interval`]: σ = 1/update_interval,
+//! `min_diff = 0` (the learner gate), `max_diff = actor_lead · σ` (the
+//! actor gate), warmup as `min_size_to_sample`. The old CLI flags map
+//! onto the limiter without behaviour change.
+
+use anyhow::{bail, Result};
+
+/// Ratio window of a [`RateLimiter::SampleToInsertRatio`] table.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SampleToInsertRatio {
+    /// σ: average sample batches granted per inserted item.
+    pub samples_per_insert: f64,
+    /// Sampling is denied until the table holds this many items.
+    pub min_size_to_sample: usize,
+    /// Lower bound on the ratio drift `d = inserts·σ − samples`;
+    /// granting a sample that would push `d` below it stalls the caller.
+    pub min_diff: f64,
+    /// Upper bound on the drift; inserting past it stalls the writer.
+    pub max_diff: f64,
+}
+
+impl SampleToInsertRatio {
+    /// Reverb-style constructor: the allowed drift window is centred on
+    /// `σ · min_size_to_sample` with half-width `error_buffer`.
+    /// `error_buffer` must be at least `max(1, σ)` or the window could
+    /// be too narrow to ever admit both an insert and a sample
+    /// (deadlock); σ must be positive.
+    pub fn new(samples_per_insert: f64, min_size_to_sample: usize, error_buffer: f64) -> Result<Self> {
+        if !(samples_per_insert > 0.0) {
+            bail!("samples_per_insert must be > 0, got {samples_per_insert}");
+        }
+        let min_buffer = samples_per_insert.max(1.0);
+        if error_buffer < min_buffer {
+            bail!(
+                "error_buffer {error_buffer} too small: must be >= max(1, samples_per_insert) = {min_buffer}"
+            );
+        }
+        let offset = samples_per_insert * min_size_to_sample as f64;
+        Ok(Self {
+            samples_per_insert,
+            min_size_to_sample,
+            min_diff: offset - error_buffer,
+            max_diff: offset + error_buffer,
+        })
+    }
+}
+
+/// Per-table admission policy. `Copy` so tables and the DSE share one
+/// value without synchronization; all state lives in the table counters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RateLimiter {
+    /// Free-run: never stall inserts or samples. `min_size_to_sample`
+    /// still gates sampling.
+    Unlimited { min_size_to_sample: usize },
+    /// Hold samples ≈ σ · inserts inside an error window.
+    SampleToInsertRatio(SampleToInsertRatio),
+}
+
+impl RateLimiter {
+    /// The legacy `Control` pacing as a limiter (see module docs):
+    /// σ = 1/update_interval, learner gate `min_diff = 0`, actor gate
+    /// `max_diff = actor_lead · σ` (`actor_lead = 0` = free-run actors,
+    /// `max_diff = ∞`). The window is widened to at least `1 + σ` so a
+    /// degenerate `actor_lead < update_interval` cannot deadlock the
+    /// pipeline (legacy pacing had the same failure mode; the limiter
+    /// refuses to reproduce it).
+    pub fn from_update_interval(update_interval: f64, warmup: usize, actor_lead: usize) -> Self {
+        let sigma = 1.0 / update_interval.max(1e-9);
+        let max_diff = if actor_lead == 0 {
+            f64::INFINITY
+        } else {
+            (actor_lead as f64 * sigma).max(1.0 + sigma)
+        };
+        RateLimiter::SampleToInsertRatio(SampleToInsertRatio {
+            samples_per_insert: sigma,
+            min_size_to_sample: warmup,
+            min_diff: 0.0,
+            max_diff,
+        })
+    }
+
+    /// Items the table must hold before sampling is allowed.
+    pub fn min_size_to_sample(&self) -> usize {
+        match self {
+            RateLimiter::Unlimited { min_size_to_sample } => *min_size_to_sample,
+            RateLimiter::SampleToInsertRatio(r) => r.min_size_to_sample,
+        }
+    }
+
+    /// May a writer insert one more item, given the current counters?
+    /// Inserts are never denied below `min_size_to_sample` (warmup can
+    /// never be starved by the limiter itself).
+    #[inline]
+    pub fn insert_ok(&self, inserts: usize, samples: usize) -> bool {
+        match self {
+            RateLimiter::Unlimited { .. } => true,
+            RateLimiter::SampleToInsertRatio(r) => {
+                if inserts < r.min_size_to_sample {
+                    return true;
+                }
+                inserts as f64 * r.samples_per_insert - samples as f64 <= r.max_diff
+            }
+        }
+    }
+
+    /// May a sample batch be granted, where `samples_after` counts the
+    /// batch being requested (callers reserve with `fetch_add` first and
+    /// roll back on denial, so concurrent learners cannot overrun)?
+    #[inline]
+    pub fn sample_ok(&self, inserts: usize, samples_after: usize) -> bool {
+        match self {
+            RateLimiter::Unlimited { .. } => true,
+            RateLimiter::SampleToInsertRatio(r) => {
+                inserts as f64 * r.samples_per_insert - samples_after as f64 >= r.min_diff
+            }
+        }
+    }
+}
+
+/// How a training run configures its tables' limiters (parsed from
+/// `--rate-limit`, stored on `TrainConfig`). Separate from
+/// [`RateLimiter`] because the legacy mapping needs run parameters
+/// (update_interval / warmup / actor_lead) that only the coordinator
+/// holds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RateLimitSpec {
+    /// Reimplement the old `Control` pacing on the limiter (default —
+    /// keeps `--update-interval` and the actor-lead behaviour).
+    Legacy,
+    /// Explicit σ samples per insert (Reverb's `SampleToInsertRatio`).
+    SamplesPerInsert(f64),
+    /// Free-run.
+    Unlimited,
+}
+
+impl RateLimitSpec {
+    /// Parse a `--rate-limit` value: `legacy`, `unlimited`/`none`/`off`,
+    /// or a positive float σ (samples per insert).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "legacy" => Ok(RateLimitSpec::Legacy),
+            "unlimited" | "none" | "off" | "free" => Ok(RateLimitSpec::Unlimited),
+            other => {
+                let sigma: f64 = match other.parse() {
+                    Ok(v) => v,
+                    Err(_) => bail!(
+                        "--rate-limit: expected `legacy`, `unlimited` or a positive \
+                         samples-per-insert float, got `{other}`"
+                    ),
+                };
+                if !(sigma > 0.0) {
+                    bail!("--rate-limit: samples-per-insert must be > 0, got {sigma}");
+                }
+                Ok(RateLimitSpec::SamplesPerInsert(sigma))
+            }
+        }
+    }
+
+    /// Instantiate for one table of a run. The explicit-σ variant uses a
+    /// Reverb-style error buffer of `max(σ · warmup, max(1, σ))` — wide
+    /// enough that sampling opens as soon as warmup fills, never so
+    /// narrow the window deadlocks.
+    pub fn build(&self, update_interval: f64, warmup: usize, actor_lead: usize) -> RateLimiter {
+        match *self {
+            RateLimitSpec::Legacy => {
+                RateLimiter::from_update_interval(update_interval, warmup, actor_lead)
+            }
+            RateLimitSpec::SamplesPerInsert(sigma) => {
+                let error_buffer = (sigma * warmup as f64).max(sigma.max(1.0));
+                RateLimiter::SampleToInsertRatio(
+                    SampleToInsertRatio::new(sigma, warmup, error_buffer)
+                        .expect("error buffer chosen >= max(1, sigma)"),
+                )
+            }
+            RateLimitSpec::Unlimited => RateLimiter::Unlimited { min_size_to_sample: warmup },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unlimited_never_stalls() {
+        let l = RateLimiter::Unlimited { min_size_to_sample: 10 };
+        assert!(l.insert_ok(0, 0));
+        assert!(l.insert_ok(1_000_000, 0));
+        assert!(l.sample_ok(0, 1_000_000));
+        assert_eq!(l.min_size_to_sample(), 10);
+    }
+
+    #[test]
+    fn ratio_window_bounds_both_sides() {
+        // σ = 2 samples per insert, min_size 4, error buffer 8:
+        // offset = 8, window d ∈ [0, 16].
+        let l = RateLimiter::SampleToInsertRatio(
+            SampleToInsertRatio::new(2.0, 4, 8.0).unwrap(),
+        );
+        // Below min_size inserts always pass.
+        assert!(l.insert_ok(3, 0));
+        // d = 8·2 − 0 = 16 = max_diff: still allowed, one more is not.
+        assert!(l.insert_ok(8, 0));
+        assert!(!l.insert_ok(9, 0));
+        // Samples catch up: d = 9·2 − 10 = 8 <= 16 → inserts flow again.
+        assert!(l.insert_ok(9, 10));
+        // Sample side: granting batch #19 leaves d = 18 − 19 < 0 = min_diff.
+        assert!(l.sample_ok(9, 18));
+        assert!(!l.sample_ok(9, 19));
+    }
+
+    #[test]
+    fn legacy_mapping_matches_control_pacing() {
+        // update_interval R = 2, warmup 100, lead 512 — the old Control
+        // gates: learners wait while (learn+1)·R > env, actors while
+        // env > learn·R + 512.
+        let l = RateLimiter::from_update_interval(2.0, 100, 512);
+        // Learner gate: env = 9, learn = 4 → (4+1)·2 > 9 → denied.
+        assert!(!l.sample_ok(9, 5));
+        // env = 10 → allowed.
+        assert!(l.sample_ok(10, 5));
+        // Actor gate: env = learn·R + 512 → allowed; one past → denied.
+        assert!(l.insert_ok(1000 + 512, 500));
+        assert!(!l.insert_ok(1000 + 513, 500));
+        // Warmup bypass: below warmup inserts always pass.
+        assert!(l.insert_ok(99, 0));
+    }
+
+    #[test]
+    fn free_run_lead_zero_means_unbounded_inserts() {
+        let l = RateLimiter::from_update_interval(1.0, 100, 0);
+        assert!(l.insert_ok(usize::MAX / 2, 0));
+        // Learners still paced.
+        assert!(!l.sample_ok(10, 11));
+    }
+
+    #[test]
+    fn degenerate_lead_widened_to_avoid_deadlock() {
+        // lead < update_interval would deadlock under the literal legacy
+        // mapping; the limiter widens the window to 1 + σ.
+        let l = RateLimiter::from_update_interval(4.0, 0, 1);
+        match l {
+            RateLimiter::SampleToInsertRatio(r) => {
+                assert!(r.max_diff >= 1.0 + r.samples_per_insert);
+            }
+            _ => panic!("legacy mapping must be a ratio limiter"),
+        }
+        // Window admits an insert burst and then a sample.
+        assert!(l.insert_ok(0, 0));
+        assert!(l.insert_ok(4, 0));
+        assert!(l.sample_ok(4, 1));
+    }
+
+    #[test]
+    fn constructor_rejects_bad_parameters() {
+        assert!(SampleToInsertRatio::new(0.0, 10, 5.0).is_err());
+        assert!(SampleToInsertRatio::new(-1.0, 10, 5.0).is_err());
+        assert!(SampleToInsertRatio::new(4.0, 10, 2.0).is_err()); // buffer < σ
+        assert!(SampleToInsertRatio::new(4.0, 10, 4.0).is_ok());
+    }
+
+    #[test]
+    fn spec_parses_and_builds() {
+        assert_eq!(RateLimitSpec::parse("legacy").unwrap(), RateLimitSpec::Legacy);
+        assert_eq!(RateLimitSpec::parse("unlimited").unwrap(), RateLimitSpec::Unlimited);
+        assert_eq!(
+            RateLimitSpec::parse("8").unwrap(),
+            RateLimitSpec::SamplesPerInsert(8.0)
+        );
+        assert!(RateLimitSpec::parse("-2").is_err());
+        assert!(RateLimitSpec::parse("fast").is_err());
+
+        let l = RateLimitSpec::SamplesPerInsert(8.0).build(1.0, 100, 512);
+        match l {
+            RateLimiter::SampleToInsertRatio(r) => {
+                assert_eq!(r.samples_per_insert, 8.0);
+                assert_eq!(r.min_size_to_sample, 100);
+                assert!(r.max_diff > r.min_diff);
+            }
+            _ => panic!("explicit sigma must build a ratio limiter"),
+        }
+        assert_eq!(
+            RateLimitSpec::Unlimited.build(1.0, 7, 0),
+            RateLimiter::Unlimited { min_size_to_sample: 7 }
+        );
+    }
+}

@@ -1,0 +1,264 @@
+//! Replay service: a multi-table experience server in front of the
+//! replay buffers — the architectural layer Reverb (Cassirer et al.,
+//! 2021) showed production RL systems converge on, built here as an
+//! in-process subsystem so actors, learners and the coordinator stop
+//! talking to one bare `Arc<dyn ReplayBuffer>`.
+//!
+//! # Concept map (this crate ⇄ Reverb)
+//!
+//! | here | Reverb | notes |
+//! |------|--------|-------|
+//! | [`ReplayService`] | `reverb.Server` | in-process, no RPC layer (yet — see ROADMAP) |
+//! | [`Table`] | `reverb.Table` | named; wraps any [`crate::replay::ReplayBuffer`] impl |
+//! | wrapped buffer impl | sampler + remover | prioritized = proportional sampler, uniform = FIFO ring; both evict FIFO |
+//! | [`RateLimiter::SampleToInsertRatio`] | `reverb.rate_limiters.SampleToInsertRatio` | σ, `min_size_to_sample`, error bounds |
+//! | [`RateLimiter::Unlimited`] | `reverb.rate_limiters.MinSize` | free-run; min-size gate only |
+//! | [`TrajectoryWriter`] | `reverb.TrajectoryWriter` | actor-side; 1-step / N-step / sequence items |
+//! | [`SamplerHandle`] | `reverb.TFClient.sample` | learner-side; batch draw + priority feedback |
+//!
+//! # Shape of a training run
+//!
+//! The coordinator builds one service per run; every actor gets a
+//! [`TrajectoryWriter`] (all tables), every learner a [`SamplerHandle`]
+//! (the first table, which therefore must store `1step` or `nstep`
+//! items — `seq` tables are for auxiliary consumers). Pacing that used
+//! to be hardwired into `Control` (`actor_lead` / `update_interval`)
+//! is now each table's rate limiter: the legacy flags map onto
+//! [`RateLimiter::from_update_interval`], `--rate-limit` selects an
+//! explicit σ or free-run. A ratio limiter belongs only on a table
+//! something actually samples — writers block while ANY table denies
+//! inserts, so the coordinator attaches the configured ratio to the
+//! learner-sampled (first) table and lets auxiliary tables free-run
+//! (per-table limiter specs are a ROADMAP item). Nothing in the
+//! service blocks a thread —
+//! writers and samplers sleep-poll admission exactly like the old
+//! coordinator gates, so the 1-step/Unlimited configuration is the
+//! legacy hot path with one counter bump per op
+//! (`benches/fig_service.rs` holds it to parity).
+
+pub mod limiter;
+pub mod table;
+pub mod writer;
+
+pub use limiter::{RateLimitSpec, RateLimiter, SampleToInsertRatio};
+pub use table::{SampleOutcome, Table, TableStats, TableStatsSnapshot};
+pub use writer::{ItemKind, TrajectoryWriter, WriterStep};
+
+use crate::replay::SampleBatch;
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// Parsed `--tables` entry: `name=kind[@capacity]`, e.g.
+/// `replay=1step`, `multi=nstep:3@50000`, `traj=seq:8`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TableSpec {
+    pub name: String,
+    pub kind: ItemKind,
+    /// Per-table capacity override (run default when `None`).
+    pub capacity: Option<usize>,
+}
+
+impl TableSpec {
+    /// Parse one spec entry; `gamma` seeds N-step folding (the run's
+    /// `--gamma-nstep`).
+    pub fn parse(s: &str, gamma: f32) -> Result<Self> {
+        let (name, rest) = match s.split_once('=') {
+            Some((n, r)) => (n.trim(), r.trim()),
+            None => bail!("table spec `{s}` must be name=kind[@capacity]"),
+        };
+        if name.is_empty() {
+            bail!("table spec `{s}` has an empty name");
+        }
+        let (kind_str, capacity) = match rest.split_once('@') {
+            Some((k, c)) => {
+                let cap: usize = c
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad capacity in table spec `{s}`"))?;
+                if cap == 0 {
+                    bail!("capacity must be > 0 in table spec `{s}`");
+                }
+                (k, Some(cap))
+            }
+            None => (rest, None),
+        };
+        Ok(TableSpec {
+            name: name.to_string(),
+            kind: ItemKind::parse(kind_str, gamma)?,
+            capacity,
+        })
+    }
+}
+
+/// Learner-side handle onto one table: rate-limited batch draws plus
+/// priority feedback. Cheap to clone (one `Arc`).
+#[derive(Clone)]
+pub struct SamplerHandle {
+    table: Arc<Table>,
+}
+
+impl SamplerHandle {
+    pub fn table(&self) -> &Arc<Table> {
+        &self.table
+    }
+
+    /// Poll for a batch; see [`Table::try_sample`].
+    pub fn try_sample(&self, batch: usize, rng: &mut Rng, out: &mut SampleBatch) -> SampleOutcome {
+        self.table.try_sample(batch, rng, out)
+    }
+
+    /// Feed |TD| errors back for a sampled batch.
+    pub fn update_priorities(&self, indices: &[usize], td_abs: &[f32]) {
+        self.table.update_priorities(indices, td_abs);
+    }
+}
+
+/// The experience server: named tables, writer and sampler handles.
+pub struct ReplayService {
+    tables: Vec<Arc<Table>>,
+}
+
+impl ReplayService {
+    /// Build from constructed tables. At least one table; names unique.
+    pub fn new(tables: Vec<Table>) -> Result<Self> {
+        if tables.is_empty() {
+            bail!("replay service needs at least one table");
+        }
+        for (i, a) in tables.iter().enumerate() {
+            for b in &tables[i + 1..] {
+                if a.name() == b.name() {
+                    bail!("duplicate table name `{}`", a.name());
+                }
+            }
+        }
+        Ok(Self { tables: tables.into_iter().map(Arc::new).collect() })
+    }
+
+    pub fn tables(&self) -> &[Arc<Table>] {
+        &self.tables
+    }
+
+    pub fn table(&self, name: &str) -> Option<&Arc<Table>> {
+        self.tables.iter().find(|t| t.name() == name)
+    }
+
+    /// The table learners train from (first configured).
+    pub fn default_table(&self) -> &Arc<Table> {
+        &self.tables[0]
+    }
+
+    /// A writer handle for one actor, fanning out to every table.
+    pub fn writer(&self, actor_id: usize) -> TrajectoryWriter {
+        TrajectoryWriter::new(actor_id, self.tables.to_vec())
+    }
+
+    /// A sampler handle on a named table.
+    pub fn sampler(&self, name: &str) -> Option<SamplerHandle> {
+        self.table(name).map(|t| SamplerHandle { table: Arc::clone(t) })
+    }
+
+    /// A sampler handle on the default (first) table.
+    pub fn default_sampler(&self) -> SamplerHandle {
+        SamplerHandle { table: Arc::clone(self.default_table()) }
+    }
+
+    /// Total items across all tables.
+    pub fn total_len(&self) -> usize {
+        self.tables.iter().map(|t| t.len()).sum()
+    }
+
+    /// Per-table stats for the monitor's progress line.
+    pub fn stats_line(&self) -> String {
+        self.tables
+            .iter()
+            .map(|t| t.stats_line())
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    /// Snapshot every table's counters (reported in `TrainReport`).
+    pub fn stats_snapshots(&self) -> Vec<(String, TableStatsSnapshot)> {
+        self.tables
+            .iter()
+            .map(|t| (t.name().to_string(), t.stats_snapshot()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::replay::UniformReplay;
+
+    fn svc() -> ReplayService {
+        let mk = |name: &str, kind: ItemKind| {
+            let m = kind.dim_multiplier();
+            Table::new(
+                name,
+                kind,
+                Arc::new(UniformReplay::new(128, 2 * m, m)),
+                RateLimiter::Unlimited { min_size_to_sample: 1 },
+            )
+        };
+        ReplayService::new(vec![
+            mk("replay", ItemKind::OneStep),
+            mk("nstep", ItemKind::NStep { n: 2, gamma: 0.9 }),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn table_spec_parses() {
+        let s = TableSpec::parse("replay=1step", 0.99).unwrap();
+        assert_eq!(s.name, "replay");
+        assert_eq!(s.kind, ItemKind::OneStep);
+        assert_eq!(s.capacity, None);
+        let s = TableSpec::parse("multi=nstep:3@50000", 0.9).unwrap();
+        assert_eq!(s.kind, ItemKind::NStep { n: 3, gamma: 0.9 });
+        assert_eq!(s.capacity, Some(50_000));
+        assert!(TableSpec::parse("=1step", 0.99).is_err());
+        assert!(TableSpec::parse("noequals", 0.99).is_err());
+        assert!(TableSpec::parse("t=seq:4@0", 0.99).is_err());
+    }
+
+    #[test]
+    fn duplicate_table_names_rejected() {
+        let mk = |name: &str| {
+            Table::new(
+                name,
+                ItemKind::OneStep,
+                Arc::new(UniformReplay::new(16, 2, 1)) as Arc<dyn crate::replay::ReplayBuffer>,
+                RateLimiter::Unlimited { min_size_to_sample: 1 },
+            )
+        };
+        assert!(ReplayService::new(vec![mk("a"), mk("a")]).is_err());
+        assert!(ReplayService::new(vec![]).is_err());
+        assert!(ReplayService::new(vec![mk("a"), mk("b")]).is_ok());
+    }
+
+    #[test]
+    fn writer_fans_out_and_sampler_reads_back() {
+        let svc = svc();
+        let mut w = svc.writer(0);
+        for i in 0..6 {
+            w.append(WriterStep {
+                obs: vec![i as f32, 0.0],
+                action: vec![1.0],
+                next_obs: vec![i as f32 + 1.0, 0.0],
+                reward: 1.0,
+                done: i == 5,
+                truncated: false,
+            });
+        }
+        assert_eq!(svc.table("replay").unwrap().len(), 6);
+        assert_eq!(svc.table("nstep").unwrap().len(), 6);
+        assert_eq!(svc.total_len(), 12);
+        let sampler = svc.sampler("nstep").unwrap();
+        let mut rng = crate::util::rng::Rng::new(1);
+        let mut out = SampleBatch::default();
+        assert_eq!(sampler.try_sample(4, &mut rng, &mut out), SampleOutcome::Sampled);
+        assert_eq!(out.len(), 4);
+        assert!(svc.sampler("nope").is_none());
+        assert!(svc.stats_line().contains("replay[") && svc.stats_line().contains("nstep["));
+    }
+}

@@ -1,0 +1,309 @@
+//! A named replay table: one [`ReplayBuffer`] implementation plus the
+//! service-level policy around it — which item shape it stores, the
+//! [`RateLimiter`] that owns its sample-to-insert ratio, and lock-free
+//! stall/throughput stats for the monitor loop and the benches.
+//!
+//! A table is to the service what a Reverb `Table` is to a Reverb
+//! server: storage + sampler + remover come from the wrapped buffer
+//! implementation (prioritized = proportional sampler, uniform = FIFO
+//! ring, both evict FIFO), the limiter is attached here.
+
+use super::limiter::RateLimiter;
+use super::writer::ItemKind;
+use crate::replay::{ReplayBuffer, SampleBatch, Transition};
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Outcome of a [`Table::try_sample`] poll. The service never blocks a
+/// thread; callers sleep-poll exactly like the old coordinator pacing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SampleOutcome {
+    /// A batch was drawn into the caller's [`SampleBatch`].
+    Sampled,
+    /// The rate limiter denied the batch (consumption too far ahead).
+    Throttled,
+    /// The table is below `min_size_to_sample` (or empty).
+    NotEnoughData,
+}
+
+/// Monotone relaxed counters; written by writers/learners, read by the
+/// monitor loop without taking any lock.
+#[derive(Default)]
+pub struct TableStats {
+    /// Items inserted (the limiter's insert counter).
+    pub inserts: AtomicUsize,
+    /// Sample batches granted (the limiter's sample counter).
+    pub sample_batches: AtomicUsize,
+    /// Transitions handed out across all granted batches.
+    pub sampled_items: AtomicUsize,
+    /// Priorities fed back.
+    pub priority_updates: AtomicUsize,
+    /// Denied insert polls (writer-side stall pressure).
+    pub insert_stalls: AtomicUsize,
+    /// Denied sample polls (learner-side stall pressure).
+    pub sample_stalls: AtomicUsize,
+}
+
+/// Point-in-time copy of [`TableStats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TableStatsSnapshot {
+    pub inserts: usize,
+    pub sample_batches: usize,
+    pub sampled_items: usize,
+    pub priority_updates: usize,
+    pub insert_stalls: usize,
+    pub sample_stalls: usize,
+}
+
+/// One named table of a [`super::ReplayService`].
+pub struct Table {
+    name: String,
+    kind: ItemKind,
+    buffer: Arc<dyn ReplayBuffer>,
+    limiter: RateLimiter,
+    stats: TableStats,
+}
+
+impl Table {
+    pub fn new(
+        name: impl Into<String>,
+        kind: ItemKind,
+        buffer: Arc<dyn ReplayBuffer>,
+        limiter: RateLimiter,
+    ) -> Self {
+        Self {
+            name: name.into(),
+            kind,
+            buffer,
+            limiter,
+            stats: TableStats::default(),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The item shape writers must emit into this table.
+    pub fn kind(&self) -> ItemKind {
+        self.kind
+    }
+
+    pub fn limiter(&self) -> &RateLimiter {
+        &self.limiter
+    }
+
+    /// The wrapped buffer (benches / tests; training goes through the
+    /// writer and sampler paths).
+    pub fn buffer(&self) -> &Arc<dyn ReplayBuffer> {
+        &self.buffer
+    }
+
+    pub fn len(&self) -> usize {
+        self.buffer.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buffer.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.buffer.capacity()
+    }
+
+    /// Writer-side admission poll. Denials count as insert stalls (each
+    /// denied poll is one observed stall interval of the polling loop).
+    pub fn can_insert(&self) -> bool {
+        let inserts = self.stats.inserts.load(Ordering::Relaxed);
+        let samples = self.stats.sample_batches.load(Ordering::Relaxed);
+        let ok = self.limiter.insert_ok(inserts, samples);
+        if !ok {
+            self.stats.insert_stalls.fetch_add(1, Ordering::Relaxed);
+        }
+        ok
+    }
+
+    /// Insert one item attributed to a producer (actor affinity routes
+    /// sharded buffers to disjoint locks). Writers are expected to poll
+    /// [`Self::can_insert`] first; the insert itself never blocks.
+    pub fn insert_from(&self, actor_id: usize, t: &Transition) {
+        self.buffer.insert_from(actor_id, t);
+        self.stats.inserts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Learner-side sample poll: reserve a batch against the limiter,
+    /// roll back on denial. The reserve-then-check protocol makes the
+    /// ratio bound exact under concurrent learners: at most
+    /// `σ · inserts − min_diff` batches are ever granted.
+    pub fn try_sample(&self, batch: usize, rng: &mut Rng, out: &mut SampleBatch) -> SampleOutcome {
+        let need = self.limiter.min_size_to_sample().max(batch).max(1);
+        if self.buffer.len() < need {
+            self.stats.sample_stalls.fetch_add(1, Ordering::Relaxed);
+            return SampleOutcome::NotEnoughData;
+        }
+        let reserved = self.stats.sample_batches.fetch_add(1, Ordering::Relaxed) + 1;
+        let inserts = self.stats.inserts.load(Ordering::Relaxed);
+        if !self.limiter.sample_ok(inserts, reserved) {
+            self.stats.sample_batches.fetch_sub(1, Ordering::Relaxed);
+            self.stats.sample_stalls.fetch_add(1, Ordering::Relaxed);
+            return SampleOutcome::Throttled;
+        }
+        if !self.buffer.sample(batch, rng, out) {
+            self.stats.sample_batches.fetch_sub(1, Ordering::Relaxed);
+            self.stats.sample_stalls.fetch_add(1, Ordering::Relaxed);
+            return SampleOutcome::NotEnoughData;
+        }
+        self.stats.sampled_items.fetch_add(out.len(), Ordering::Relaxed);
+        SampleOutcome::Sampled
+    }
+
+    /// Feed |TD| errors back for sampled indices.
+    pub fn update_priorities(&self, indices: &[usize], td_abs: &[f32]) {
+        self.buffer.update_priorities(indices, td_abs);
+        self.stats.priority_updates.fetch_add(indices.len(), Ordering::Relaxed);
+    }
+
+    pub fn stats_snapshot(&self) -> TableStatsSnapshot {
+        TableStatsSnapshot {
+            inserts: self.stats.inserts.load(Ordering::Relaxed),
+            sample_batches: self.stats.sample_batches.load(Ordering::Relaxed),
+            sampled_items: self.stats.sampled_items.load(Ordering::Relaxed),
+            priority_updates: self.stats.priority_updates.load(Ordering::Relaxed),
+            insert_stalls: self.stats.insert_stalls.load(Ordering::Relaxed),
+            sample_stalls: self.stats.sample_stalls.load(Ordering::Relaxed),
+        }
+    }
+
+    /// One-line stats for the monitor's progress output, e.g.
+    /// `replay[n=4096 in=5000 out=120 stall i/s=3/40]`.
+    pub fn stats_line(&self) -> String {
+        let s = self.stats_snapshot();
+        format!(
+            "{}[n={} in={} out={} stall i/s={}/{}]",
+            self.name,
+            self.buffer.len(),
+            s.inserts,
+            s.sample_batches,
+            s.insert_stalls,
+            s.sample_stalls,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::replay::UniformReplay;
+    use crate::service::limiter::{RateLimitSpec, SampleToInsertRatio};
+
+    fn tr(v: f32) -> Transition {
+        Transition {
+            obs: vec![v, -v],
+            action: vec![v],
+            next_obs: vec![v + 1.0, -v],
+            reward: v,
+            done: false,
+        }
+    }
+
+    fn table(limiter: RateLimiter) -> Table {
+        Table::new(
+            "t",
+            ItemKind::OneStep,
+            Arc::new(UniformReplay::new(64, 2, 1)),
+            limiter,
+        )
+    }
+
+    #[test]
+    fn unlimited_table_inserts_and_samples() {
+        let t = table(RateLimiter::Unlimited { min_size_to_sample: 4 });
+        let mut rng = Rng::new(1);
+        let mut out = SampleBatch::default();
+        assert_eq!(t.try_sample(2, &mut rng, &mut out), SampleOutcome::NotEnoughData);
+        for i in 0..8 {
+            assert!(t.can_insert());
+            t.insert_from(0, &tr(i as f32));
+        }
+        assert_eq!(t.len(), 8);
+        assert_eq!(t.try_sample(4, &mut rng, &mut out), SampleOutcome::Sampled);
+        assert_eq!(out.len(), 4);
+        let s = t.stats_snapshot();
+        assert_eq!(s.inserts, 8);
+        assert_eq!(s.sample_batches, 1);
+        assert_eq!(s.sampled_items, 4);
+        assert_eq!(s.insert_stalls, 0);
+        assert_eq!(s.sample_stalls, 1);
+    }
+
+    #[test]
+    fn ratio_table_throttles_and_rolls_back_reserve() {
+        // σ = 1 sample per insert, min_size 2, window d ∈ [0, 4].
+        let t = table(RateLimiter::SampleToInsertRatio(SampleToInsertRatio {
+            samples_per_insert: 1.0,
+            min_size_to_sample: 2,
+            min_diff: 0.0,
+            max_diff: 4.0,
+        }));
+        let mut rng = Rng::new(2);
+        let mut out = SampleBatch::default();
+        for i in 0..4 {
+            t.insert_from(0, &tr(i as f32));
+        }
+        // 4 inserts allow exactly 4 batches, then throttle.
+        for _ in 0..4 {
+            assert_eq!(t.try_sample(2, &mut rng, &mut out), SampleOutcome::Sampled);
+        }
+        assert_eq!(t.try_sample(2, &mut rng, &mut out), SampleOutcome::Throttled);
+        let s = t.stats_snapshot();
+        // The denied reserve must have been rolled back.
+        assert_eq!(s.sample_batches, 4);
+        assert_eq!(s.sample_stalls, 1);
+        // One more insert unblocks one more batch.
+        t.insert_from(0, &tr(9.0));
+        assert_eq!(t.try_sample(2, &mut rng, &mut out), SampleOutcome::Sampled);
+    }
+
+    #[test]
+    fn insert_stall_counted_when_writers_run_ahead() {
+        // σ = 1, min_size 2, max_diff 4: inserts stall once d > 4.
+        let t = table(RateLimiter::SampleToInsertRatio(SampleToInsertRatio {
+            samples_per_insert: 1.0,
+            min_size_to_sample: 2,
+            min_diff: 0.0,
+            max_diff: 4.0,
+        }));
+        let mut stalled = 0;
+        for i in 0..16 {
+            if t.can_insert() {
+                t.insert_from(0, &tr(i as f32));
+            } else {
+                stalled += 1;
+            }
+        }
+        assert!(stalled > 0);
+        assert_eq!(t.stats_snapshot().insert_stalls, stalled);
+        // Inserted no further than the window allows past min_size.
+        assert!(t.stats_snapshot().inserts <= 5);
+    }
+
+    #[test]
+    fn legacy_spec_end_to_end_pacing() {
+        let limiter = RateLimitSpec::Legacy.build(2.0, 4, 8);
+        let t = table(limiter);
+        let mut rng = Rng::new(3);
+        let mut out = SampleBatch::default();
+        for i in 0..8 {
+            t.insert_from(0, &tr(i as f32));
+        }
+        // update_interval 2 → at most floor(8 / 2) = 4 batches.
+        let mut granted = 0;
+        for _ in 0..10 {
+            if t.try_sample(2, &mut rng, &mut out) == SampleOutcome::Sampled {
+                granted += 1;
+            }
+        }
+        assert_eq!(granted, 4);
+    }
+}

@@ -105,6 +105,38 @@ pub struct SimResult {
     /// Fraction of total core-time spent waiting on each lock.
     pub lock_wait_frac: [f64; N_LOCKS],
     pub sim_ns: u64,
+    /// Fraction of actor throughput lost to a rate limiter (0 until
+    /// [`SimResult::rate_limited`] applies one).
+    pub actor_stall_frac: f64,
+    /// Fraction of learner throughput lost to a rate limiter.
+    pub learner_stall_frac: f64,
+}
+
+impl SimResult {
+    /// Couple the two free-running throughputs through a
+    /// `SampleToInsertRatio` limiter with σ samples per insert: the
+    /// steady state obeys `consume = σ · collect`, so whichever side the
+    /// raw simulation ran faster stalls down to the ratio and the lost
+    /// fraction is recorded as its stall term. The DES itself stays
+    /// limiter-free — a limiter is a counter gate, not a lock, so its
+    /// effect on steady-state throughput is exactly this coupling.
+    pub fn rate_limited(mut self, samples_per_insert: f64) -> SimResult {
+        let sigma = samples_per_insert.max(1e-12);
+        let (c, l) = (self.collect_per_sec, self.consume_per_sec);
+        if c <= 0.0 || l <= 0.0 {
+            return self;
+        }
+        if l > sigma * c {
+            // Learners outrun the ratio: sample side stalls.
+            self.consume_per_sec = sigma * c;
+            self.learner_stall_frac = 1.0 - sigma * c / l;
+        } else if c > l / sigma {
+            // Collection outruns the ratio: insert side stalls.
+            self.collect_per_sec = l / sigma;
+            self.actor_stall_frac = 1.0 - (l / sigma) / c;
+        }
+        self
+    }
 }
 
 #[derive(Clone, Copy, PartialEq, Eq)]
@@ -283,6 +315,8 @@ pub fn simulate_with(
         consume_per_sec: consume as f64 / secs,
         lock_wait_frac: frac,
         sim_ns: now,
+        actor_stall_frac: 0.0,
+        learner_stall_frac: 0.0,
     }
 }
 
@@ -520,6 +554,34 @@ mod tests {
         let one = simulate(&c.pal_tasks(0, 1), 8, 500_000_000).consume_per_sec;
         let four = simulate(&c.pal_tasks(0, 4), 8, 500_000_000).consume_per_sec;
         assert!(four / one < 1.4, "accelerator-bound: {}", four / one);
+    }
+
+    #[test]
+    fn rate_limiter_coupling_stalls_the_faster_side() {
+        let base = SimResult {
+            collect_per_sec: 1000.0,
+            consume_per_sec: 100.0,
+            ..Default::default()
+        };
+        // σ = 1: collection 10x too fast → actors stall to 100/s.
+        let r = base.rate_limited(1.0);
+        assert!((r.collect_per_sec - 100.0).abs() < 1e-9);
+        assert!((r.actor_stall_frac - 0.9).abs() < 1e-9);
+        assert_eq!(r.learner_stall_frac, 0.0);
+        // σ = 0.01: learners are the fast side → they stall to 10/s.
+        let r = base.rate_limited(0.01);
+        assert!((r.consume_per_sec - 10.0).abs() < 1e-9);
+        assert!(r.learner_stall_frac > 0.89 && r.learner_stall_frac < 0.91);
+        assert_eq!(r.actor_stall_frac, 0.0);
+        // Exactly on-ratio: nothing stalls.
+        let r = base.rate_limited(0.1);
+        assert_eq!(r.collect_per_sec, 1000.0);
+        assert_eq!(r.consume_per_sec, 100.0);
+        assert_eq!(r.actor_stall_frac, 0.0);
+        assert_eq!(r.learner_stall_frac, 0.0);
+        // Degenerate inputs pass through untouched.
+        let z = SimResult::default().rate_limited(1.0);
+        assert_eq!(z.collect_per_sec, 0.0);
     }
 
     #[test]

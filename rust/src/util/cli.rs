@@ -84,16 +84,29 @@ impl Args {
     /// `--shards 1,2,4,8,16` or `--threads 1,2,4,8`); `default` when the
     /// flag is absent.
     pub fn usize_list(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        if !self.has(key) {
+            return Ok(default.to_vec());
+        }
+        self.str_list(key)
+            .iter()
+            .map(|p| {
+                p.parse::<usize>()
+                    .map_err(|_| anyhow!("--{key}: cannot parse `{p}` in list"))
+            })
+            .collect()
+    }
+
+    /// Parse a comma-separated list of raw strings (composite flags
+    /// such as `--tables replay=1step,multi=nstep:3`); empty when the
+    /// flag is absent. Entries are trimmed; empty entries dropped.
+    pub fn str_list(&self, key: &str) -> Vec<String> {
         match self.get(key) {
-            None => Ok(default.to_vec()),
+            None => Vec::new(),
             Some(s) => s
                 .split(',')
                 .map(str::trim)
                 .filter(|p| !p.is_empty())
-                .map(|p| {
-                    p.parse::<usize>()
-                        .map_err(|_| anyhow!("--{key}: cannot parse `{p}` in list"))
-                })
+                .map(str::to_string)
                 .collect(),
         }
     }
@@ -152,6 +165,15 @@ mod tests {
     fn parse_error_reported() {
         let a = args("--steps abc");
         assert!(a.parse_or("steps", 0usize).is_err());
+    }
+
+    #[test]
+    fn str_list_splits_and_trims() {
+        let a = args("--tables replay=1step,multi=nstep:3");
+        assert_eq!(a.str_list("tables"), vec!["replay=1step", "multi=nstep:3"]);
+        assert!(a.str_list("missing").is_empty());
+        let b = Args::parse(vec!["--tables".to_string(), " a , ,b ".to_string()]).unwrap();
+        assert_eq!(b.str_list("tables"), vec!["a", "b"]);
     }
 
     #[test]
