@@ -47,11 +47,11 @@ fn tr(v: f32) -> Transition {
 
 /// Sequential Algorithm-1 loop: insert every step, sample+learn+update
 /// every `update_interval` steps. Returns steps/sec.
-fn sequential_loop(buf: &dyn ReplayBuffer, learn_ns: u64, steps: usize) -> f64 {
+fn sequential_loop(buf: &dyn ReplayBuffer, learn_ns: u64, steps: usize, prefill: usize) -> f64 {
     let mut rng = Rng::new(5);
     let mut out = SampleBatch::default();
     // Pre-fill to a realistic occupancy so tree depth matters.
-    for i in 0..30_000 {
+    for i in 0..prefill {
         buf.insert(&tr(i as f32));
     }
     let t0 = Instant::now();
@@ -74,9 +74,12 @@ fn sequential_loop(buf: &dyn ReplayBuffer, learn_ns: u64, steps: usize) -> f64 {
 }
 
 fn main() {
+    // `--test` = CI smoke: small loop + shallow pre-fill, same paths.
+    let test_mode = std::env::args().any(|a| a == "--test");
     println!("Fig 11 — plugging the PAL buffer into framework-style loops\n");
-    let steps = 3_000usize;
-    let cap = 100_000usize;
+    let steps = if test_mode { 200usize } else { 3_000usize };
+    let cap = if test_mode { 10_000usize } else { 100_000usize };
+    let prefill = if test_mode { 2_000usize } else { 30_000usize };
 
     let mut t = Table::new(&[
         "algo",
@@ -97,9 +100,9 @@ fn main() {
         let pure_py = PySumTreeReplay::new(cap, 8, 2, 0.6, 0.4);
         let binding = PyBindBinaryReplay::new(cap, 8, 2, 0.6, 0.4);
 
-        let ours_tput = sequential_loop(&ours, learn_ns, steps);
-        let py_tput = sequential_loop(&pure_py, learn_ns, steps);
-        let bind_tput = sequential_loop(&binding, learn_ns, steps);
+        let ours_tput = sequential_loop(&ours, learn_ns, steps, prefill);
+        let py_tput = sequential_loop(&pure_py, learn_ns, steps, prefill);
+        let bind_tput = sequential_loop(&binding, learn_ns, steps, prefill);
         t.row(vec![
             algo.into(),
             format!("{:.2}x", ours_tput / py_tput),

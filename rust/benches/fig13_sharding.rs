@@ -103,15 +103,19 @@ fn des_combined(profile: &CostProfile, shards: usize, threads: usize) -> f64 {
 
 fn main() -> anyhow::Result<()> {
     let a = Args::from_env()?;
-    let mut shard_list = a.usize_list("shards", &[1, 2, 4, 8, 16])?;
+    // `--test` = CI smoke: a 2x2 sweep with tiny op counts.
+    let test_mode = a.flag("test");
+    let default_shards: &[usize] = if test_mode { &[1, 4] } else { &[1, 2, 4, 8, 16] };
+    let default_threads: &[usize] = if test_mode { &[1, 2] } else { &[1, 2, 4, 8] };
+    let mut shard_list = a.usize_list("shards", default_shards)?;
     if !shard_list.contains(&1) {
         // S=1 is the baseline every "vs S=1" column and verdict divides
         // by; always measure it.
         shard_list.insert(0, 1);
     }
-    let thread_list = a.usize_list("threads", &[1, 2, 4, 8])?;
-    let rounds: usize = a.parse_or("rounds", 200)?;
-    let capacity: usize = a.parse_or("capacity", 65_536)?;
+    let thread_list = a.usize_list("threads", default_threads)?;
+    let rounds: usize = a.parse_or("rounds", if test_mode { 20 } else { 200 })?;
+    let capacity: usize = a.parse_or("capacity", if test_mode { 4_096 } else { 65_536 })?;
 
     println!("Fig 13 — sharded replay scalability (S x threads)\n");
 
@@ -151,7 +155,11 @@ fn main() -> anyhow::Result<()> {
     // so the buffer locks are the only possible bottleneck, and the
     // parameter-server section kept short for the same reason.
     println!("\nmeasuring per-op costs for the DES projection ...");
-    let mut profile = CostProfile::measure(2_000, 500, 5_000);
+    let mut profile = if test_mode {
+        CostProfile::measure(500, 100, 1_000)
+    } else {
+        CostProfile::measure(2_000, 500, 5_000)
+    };
     profile.costs.server_ns = 1_000;
     println!(
         "  insert lock {} ns | sample(64) lock {} ns | update(64) {} ns",

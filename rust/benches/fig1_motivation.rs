@@ -10,6 +10,8 @@ use pal_rl::util::rng::Rng;
 use std::time::Instant;
 
 fn main() {
+    // `--test` = CI smoke: tiny step budget, same code paths.
+    let test_mode = std::env::args().any(|a| a == "--test");
     println!("Fig 1 — per-step simulator cost vs state-space size\n");
     let mut rows: Vec<(usize, String, f64)> = Vec::new();
 
@@ -18,7 +20,7 @@ fn main() {
         let spec = env.spec().clone();
         let mut rng = Rng::new(1);
         let mut obs = env.reset(&mut rng);
-        let steps = 10_000usize;
+        let steps = if test_mode { 500usize } else { 10_000usize };
         let t0 = Instant::now();
         for _ in 0..steps {
             let action = match &spec.action_space {

@@ -103,17 +103,24 @@ fn des_throughput(sample_ns: u64, update_ns: u64, two_lock: bool, cores: usize) 
 }
 
 fn main() {
-    println!("Fig 9 — K-ary + two-lock vs binary + global lock");
-    println!("({THREADS} threads x {OPS_PER_THREAD} sample+update rounds, batch {BATCH})\n");
+    // `--test` = CI smoke: one small N, two fan-outs, tiny op counts —
+    // exercises every code path (real threads + DES) in seconds.
+    let test_mode = std::env::args().any(|a| a == "--test");
+    let sizes: &[usize] = if test_mode { &[1_000] } else { &[1_000, 10_000, 100_000] };
+    let fanouts: &[usize] = if test_mode { &[16, 64] } else { &[16, 32, 64, 128, 256, 512] };
+    let ops_per_thread = if test_mode { 50 } else { OPS_PER_THREAD };
 
-    for &n in &[1_000usize, 10_000, 100_000] {
+    println!("Fig 9 — K-ary + two-lock vs binary + global lock");
+    println!("({THREADS} threads x {ops_per_thread} sample+update rounds, batch {BATCH})\n");
+
+    for &n in sizes {
         // Baseline: binary tree + single global lock.
         let base = Arc::new(GlobalLockReplay::new(n, 8, 2, 0.6, 0.4));
         for _ in 0..n {
             base.insert(&tr());
         }
         let (bs_ns, bu_ns) = measure_op_costs(base.as_ref(), n);
-        let base_tput = run_threads(base, THREADS, OPS_PER_THREAD);
+        let base_tput = run_threads(base, THREADS, ops_per_thread);
         let base_des = des_throughput(bs_ns, bu_ns, false, THREADS);
 
         let mut table = Table::new(&[
@@ -125,7 +132,7 @@ fn main() {
         ]);
         let mut best_k = 0usize;
         let mut best_des = 0.0f64;
-        for &k in &[16usize, 32, 64, 128, 256, 512] {
+        for &k in fanouts {
             let buf = Arc::new(PrioritizedReplay::new(PrioritizedConfig {
                 capacity: n,
                 obs_dim: 8,
@@ -140,7 +147,7 @@ fn main() {
                 buf.insert(&tr());
             }
             let (s_ns, u_ns) = measure_op_costs(buf.as_ref(), n);
-            let tput = run_threads(buf, THREADS, OPS_PER_THREAD);
+            let tput = run_threads(buf, THREADS, ops_per_thread);
             let des = des_throughput(s_ns, u_ns, true, THREADS);
             if des > best_des {
                 best_des = des;

@@ -399,7 +399,8 @@ mod tests {
 
     #[test]
     fn epsilon_schedule_linear() {
-        let e = Exploration { eps_start: 1.0, eps_end: 0.1, eps_decay_steps: 100, action_noise: 0.1 };
+        let e =
+            Exploration { eps_start: 1.0, eps_end: 0.1, eps_decay_steps: 100, action_noise: 0.1 };
         assert!((e.epsilon(0) - 1.0).abs() < 1e-6);
         assert!((e.epsilon(50) - 0.55).abs() < 1e-6);
         assert!((e.epsilon(100) - 0.1).abs() < 1e-6);

@@ -13,15 +13,15 @@ use crate::agent::{Agent, AlgoKind, Exploration};
 use crate::env::make_env;
 use crate::learner::run_learner;
 use crate::metrics::{CurvePoint, Metrics};
-use crate::params::{AdamConfig, ParameterServer, TargetSync};
+use crate::params::{AdamConfig, Checkpoint, ParameterServer, TargetSync};
 use crate::replay::{
     GlobalLockReplay, NaiveScanReplay, PrioritizedConfig, PrioritizedReplay,
     PyBindBinaryReplay, ReplayBuffer, ShardedPrioritizedReplay, UniformReplay,
 };
 use crate::runtime::{Manifest, Runtime};
 use crate::service::{
-    ItemKind, RateLimitSpec, RateLimiter, ReplayService, Table, TableSpec,
-    TableStatsSnapshot,
+    ItemKind, RateLimitSpec, RateLimiter, ReplayService, ServiceState, Table, TableSpec,
+    TableStatsSnapshot, STATE_FILE,
 };
 use anyhow::{anyhow, bail, Context, Result};
 use std::sync::atomic::Ordering;
@@ -96,6 +96,17 @@ pub struct TrainConfig {
     pub tables: Vec<TableSpec>,
     /// Rate-limiter selection for every table (`--rate-limit`).
     pub rate_limit: RateLimitSpec,
+    /// Run-state directory (`--save-state`): weights + replay-service
+    /// state are written here atomically at the end of the run and, if
+    /// `checkpoint_every_secs > 0`, periodically during it.
+    pub save_state: Option<std::path::PathBuf>,
+    /// Resume directory (`--restore-state`): weights + replay state are
+    /// loaded before any worker starts, so the run continues from the
+    /// snapshot's buffers and limiter accounting.
+    pub restore_state: Option<std::path::PathBuf>,
+    /// Seconds between periodic run-state snapshots (0 = only at the
+    /// end of the run). Requires `save_state`.
+    pub checkpoint_every_secs: f64,
     pub target_sync: Option<TargetSync>,
     pub exploration: Exploration,
     pub seed: u64,
@@ -130,6 +141,9 @@ impl TrainConfig {
             gamma_nstep: 0.99,
             tables: Vec::new(),
             rate_limit: RateLimitSpec::Legacy,
+            save_state: None,
+            restore_state: None,
+            checkpoint_every_secs: 0.0,
             target_sync: None,
             exploration: Exploration::default(),
             seed: 0,
@@ -268,6 +282,48 @@ pub fn build_service(cfg: &TrainConfig, obs_dim: usize, act_dim: usize) -> Resul
     ReplayService::new(tables)
 }
 
+/// File name of the weights checkpoint inside a run-state directory
+/// (the replay state sits next to it as [`STATE_FILE`]).
+pub const WEIGHTS_FILE: &str = "weights.bin";
+
+/// Write one unified run-state snapshot into `dir`: the parameter
+/// server's weights (`weights.bin`, `params::Checkpoint` format) and
+/// the whole replay service (`replay_state.bin`,
+/// `service::checkpoint::ServiceState` format). Both files are written
+/// atomically (temp file + rename), so a crash mid-snapshot leaves the
+/// previous complete snapshot in place.
+pub fn save_run_state(
+    dir: &std::path::Path,
+    server: &ParameterServer,
+    service: &ReplayService,
+) -> Result<()> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating run-state dir {}", dir.display()))?;
+    Checkpoint::from_server(server).save(dir.join(WEIGHTS_FILE))?;
+    ServiceState::capture(service)?.save(dir.join(STATE_FILE))?;
+    Ok(())
+}
+
+/// Load a unified run-state snapshot from `dir` into a freshly built
+/// parameter server + replay service. Everything is validated before
+/// anything is mutated; on error both targets are untouched.
+pub fn restore_run_state(
+    dir: &std::path::Path,
+    server: &ParameterServer,
+    service: &ReplayService,
+) -> Result<()> {
+    let ck = Checkpoint::load(dir.join(WEIGHTS_FILE))?;
+    let state = ServiceState::load(dir.join(STATE_FILE))?;
+    // Validate the replay state against the service BEFORE touching the
+    // parameter server, so a bad state file leaves no partial restore;
+    // the apply step reuses the validated targets rather than
+    // re-running the topology pass.
+    let targets = state.validate_against(service)?;
+    server.restore(&ck)?;
+    state.apply_to(&targets)?;
+    Ok(())
+}
+
 /// Run one full training session. Blocks until the env-step budget is
 /// exhausted (or early-stop). Thread layout: `actors` actor threads +
 /// `learners` learner threads + this monitor thread.
@@ -285,6 +341,28 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         cfg.aggregation,
     ));
     let service = Arc::new(build_service(cfg, info.obs_dim, info.flat_act_dim)?);
+    if cfg.checkpoint_every_secs > 0.0 && cfg.save_state.is_none() {
+        bail!("--checkpoint-every requires --save-state DIR");
+    }
+    if cfg.save_state.is_some() {
+        // Fail fast on a buffer kind that cannot snapshot (the emulated
+        // plugin buffers): the capture of the still-empty service is
+        // cheap, and erroring here beats training for hours and losing
+        // the run at the final save.
+        ServiceState::capture(&service).context(
+            "--save-state: this run's buffer kind does not support checkpointing",
+        )?;
+    }
+    if let Some(dir) = &cfg.restore_state {
+        restore_run_state(dir, &server, &service)
+            .with_context(|| format!("restoring run state from {}", dir.display()))?;
+        eprintln!(
+            "[pal] resumed from {}: {} replay items, {} optimizer steps",
+            dir.display(),
+            service.total_len(),
+            server.opt_steps(),
+        );
+    }
     let metrics = Arc::new(Metrics::new());
     let ctl = Arc::new(Control::new(cfg.total_env_steps));
 
@@ -349,8 +427,10 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         }
 
         // Monitor loop: progress logging (worker metrics + service
-        // limiter/stall stats), early stop, shutdown.
+        // limiter/stall stats), periodic run-state snapshots, early
+        // stop, shutdown.
         let mut last_log = std::time::Instant::now();
+        let mut last_ckpt = std::time::Instant::now();
         loop {
             std::thread::sleep(Duration::from_millis(20));
             let env_steps = ctl.env_steps.load(Ordering::Relaxed);
@@ -359,6 +439,20 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
             {
                 eprintln!("[pal] {} | {}", metrics.summary(), service.stats_line());
                 last_log = std::time::Instant::now();
+            }
+            if cfg.checkpoint_every_secs > 0.0
+                && last_ckpt.elapsed().as_secs_f64() >= cfg.checkpoint_every_secs
+            {
+                // Snapshot while workers run: each shard is captured
+                // under its lock pair, the atomic write keeps the
+                // previous snapshot intact until the new one is
+                // complete. A failed write warns but never kills the
+                // run it exists to protect.
+                let dir = cfg.save_state.as_ref().expect("checked above");
+                if let Err(e) = save_run_state(dir, &server, &service) {
+                    eprintln!("[pal] WARNING: periodic checkpoint failed: {e:#}");
+                }
+                last_ckpt = std::time::Instant::now();
             }
             if let Some(target) = cfg.stop_at_reward {
                 if metrics.mean_return().map_or(false, |r| r >= target as f64)
@@ -380,6 +474,18 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         }
         Ok(())
     })?;
+
+    // Final (quiescent) run-state snapshot: all workers have joined, so
+    // this one is exact — the file a later `--restore-state` resumes.
+    if let Some(dir) = &cfg.save_state {
+        save_run_state(dir, &server, &service)
+            .with_context(|| format!("saving run state to {}", dir.display()))?;
+        eprintln!(
+            "[pal] run state saved to {} ({} replay items)",
+            dir.display(),
+            service.total_len(),
+        );
+    }
 
     let reached = cfg
         .stop_at_reward

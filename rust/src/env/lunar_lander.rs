@@ -115,7 +115,11 @@ impl Env for LunarLanderLite {
         let main_cmd = action[0].clamp(-1.0, 1.0);
         let side_cmd = action.get(1).copied().unwrap_or(0.0).clamp(-1.0, 1.0);
         let main = if main_cmd > 0.0 { 0.5 + 0.5 * main_cmd } else { 0.0 };
-        let side = if side_cmd.abs() > 0.5 { side_cmd.signum() * (side_cmd.abs() - 0.5) * 2.0 } else { 0.0 };
+        let side = if side_cmd.abs() > 0.5 {
+            side_cmd.signum() * (side_cmd.abs() - 0.5) * 2.0
+        } else {
+            0.0
+        };
 
         // Thruster dispersion noise (Box2D's particle impulse jitter).
         let jitter = 1.0 + rng.range_f32(-0.05, 0.05);

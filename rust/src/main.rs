@@ -7,12 +7,18 @@
 //!   envs          list built-in environments
 //!   info          show manifest contents
 
-use anyhow::{anyhow, bail, Result};
-use pal_rl::coordinator::{train, BufferKind, TrainConfig};
+use anyhow::{anyhow, bail, ensure, Result};
+use pal_rl::coordinator::{
+    build_service, restore_run_state, save_run_state, train, BufferKind, TrainConfig,
+};
 use pal_rl::dse;
 use pal_rl::env::ENV_NAMES;
+use pal_rl::params::{AdamConfig, ParameterServer, TargetSync};
 use pal_rl::runtime::Manifest;
-use pal_rl::service::{RateLimitSpec, TableSpec};
+use pal_rl::service::{
+    ItemKind, RateLimitSpec, ReplayService, SampleOutcome, ServiceState, TableSpec, WriterStep,
+    STATE_FILE,
+};
 use pal_rl::util::cli::Args;
 
 const TRAIN_FLAGS: &[&str] = &[
@@ -20,7 +26,8 @@ const TRAIN_FLAGS: &[&str] = &[
     "update-interval", "buffer", "capacity", "shards", "fanout", "alpha",
     "beta", "lr", "grad-clip", "aggregation", "seed", "stop-at-reward",
     "log-every", "curve-out", "eps-decay", "action-noise", "save-checkpoint",
-    "n-step", "gamma-nstep", "tables", "rate-limit",
+    "n-step", "gamma-nstep", "tables", "rate-limit", "save-state",
+    "restore-state", "checkpoint-every",
 ];
 
 fn usage() -> ! {
@@ -31,6 +38,7 @@ USAGE:
   pal train --algo <dqn|ddqn|ddpg|td3|sac> --env <ENV> [options]
   pal dse   --algo <A> --env <E> [--cores M] [--update-interval R] [--shards 1,2,4,8,16] [--rate-limit S]
   pal buffer-bench [--capacity N] [--fanout K] [--shards S] [--threads T] [--ops N]
+  pal state-smoke --dir DIR --phase <collect|resume> [--items N] [--capacity N] [--shards S]
   pal envs
   pal info  [--artifacts DIR]
 
@@ -66,6 +74,18 @@ TRAIN OPTIONS:
   --eps-decay N       epsilon decay steps (DQN-family)
   --action-noise S    exploration noise std (DDPG/TD3)
   --save-checkpoint F write final weights (params::Checkpoint format)
+  --save-state DIR    write the unified run state (weights.bin +
+                      replay_state.bin: buffers, priorities, table
+                      stats, limiter counters) at the end of the run
+  --restore-state DIR resume from a previously saved run state
+  --checkpoint-every S
+                      also snapshot the run state every S seconds
+                      during training (atomic; requires --save-state)
+
+  `state-smoke` is the CI durability gate: `--phase collect` drives a
+  short synthetic writer/sampler run and saves its state; `--phase
+  resume` restores into a fresh service and fails unless buffer sizes,
+  priority mass and limiter counters all match the snapshot.
 "
     );
     std::process::exit(2)
@@ -105,6 +125,16 @@ fn train_config_from(a: &Args) -> Result<TrainConfig> {
     }
     if let Some(r) = a.get("rate-limit") {
         cfg.rate_limit = RateLimitSpec::parse(r)?;
+    }
+    if let Some(dir) = a.get("save-state") {
+        cfg.save_state = Some(dir.into());
+    }
+    if let Some(dir) = a.get("restore-state") {
+        cfg.restore_state = Some(dir.into());
+    }
+    cfg.checkpoint_every_secs = a.parse_or("checkpoint-every", cfg.checkpoint_every_secs)?;
+    if cfg.checkpoint_every_secs > 0.0 && cfg.save_state.is_none() {
+        bail!("--checkpoint-every requires --save-state DIR");
     }
     cfg.seed = a.parse_or("seed", cfg.seed)?;
     cfg.exploration.eps_decay_steps = a.parse_or("eps-decay", cfg.exploration.eps_decay_steps)?;
@@ -274,6 +304,175 @@ fn cmd_buffer_bench(a: &Args) -> Result<()> {
     Ok(())
 }
 
+const STATE_SMOKE_FLAGS: &[&str] = &["dir", "phase", "items", "capacity", "shards"];
+const SMOKE_OBS: usize = 4;
+const SMOKE_ACT: usize = 2;
+
+/// The run shape the checkpoint smoke drives: a sharded prioritized
+/// learner table under a σ=1 ratio limiter plus a free-running N-step
+/// auxiliary table — the config both phases must build identically.
+fn smoke_config(a: &Args) -> Result<TrainConfig> {
+    let mut cfg = TrainConfig::new("dqn", "CartPole-v1");
+    cfg.buffer = BufferKind::PalKary;
+    cfg.buffer_capacity = a.parse_or("capacity", 4_096)?;
+    cfg.shards = a.parse_or("shards", 4)?;
+    cfg.warmup_steps = 64;
+    cfg.rate_limit = RateLimitSpec::SamplesPerInsert(1.0);
+    cfg.tables = vec![
+        TableSpec { name: "replay".into(), kind: ItemKind::OneStep, capacity: None },
+        TableSpec {
+            name: "aux".into(),
+            kind: ItemKind::NStep { n: 3, gamma: cfg.gamma_nstep },
+            capacity: None,
+        },
+    ];
+    Ok(cfg)
+}
+
+/// Drive `items` synthetic env steps through the service with 2 writer
+/// threads + 1 sampler thread (the learner hot loop with the PJRT
+/// compute stripped away), exactly like a miniature train run.
+fn smoke_traffic(service: &ReplayService, items: usize) {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    let done = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for actor in 0..2usize {
+            let mut writer = service.writer(actor);
+            handles.push(s.spawn(move || {
+                for i in 0..items / 2 {
+                    while writer.throttled() {
+                        std::thread::yield_now();
+                    }
+                    writer.append(WriterStep {
+                        obs: vec![i as f32; SMOKE_OBS],
+                        action: vec![0.1; SMOKE_ACT],
+                        next_obs: vec![i as f32 + 1.0; SMOKE_OBS],
+                        reward: 1.0,
+                        done: i % 32 == 31,
+                        truncated: false,
+                    });
+                }
+            }));
+        }
+        {
+            let sampler = service.default_sampler();
+            let done = &done;
+            s.spawn(move || {
+                let mut rng = pal_rl::util::rng::Rng::new(17);
+                let mut out = pal_rl::replay::SampleBatch::default();
+                while !done.load(Ordering::Relaxed) {
+                    if sampler.try_sample(16, &mut rng, &mut out) == SampleOutcome::Sampled {
+                        let idx = out.indices.clone();
+                        let tds: Vec<f32> = idx.iter().map(|_| rng.f32() * 2.0).collect();
+                        sampler.update_priorities(&idx, &tds);
+                    } else {
+                        std::thread::yield_now();
+                    }
+                }
+            });
+        }
+        for h in handles {
+            h.join().expect("writer thread panicked");
+        }
+        done.store(true, Ordering::Relaxed);
+    });
+}
+
+/// Checkpoint round-trip smoke (the CI durability gate). `--phase
+/// collect` runs synthetic traffic and saves the unified run state;
+/// `--phase resume` rebuilds the same service in a NEW process,
+/// restores, and asserts element counts, priority mass and limiter
+/// counters all equal the snapshotted values, then proves the resumed
+/// service still trains (more traffic, ratio bound intact).
+fn cmd_state_smoke(a: &Args) -> Result<()> {
+    a.check_known(STATE_SMOKE_FLAGS)?;
+    let dir: std::path::PathBuf =
+        a.get("dir").ok_or_else(|| anyhow!("--dir required"))?.into();
+    let items: usize = a.parse_or("items", 2_000)?;
+    let cfg = smoke_config(a)?;
+    let service = build_service(&cfg, SMOKE_OBS, SMOKE_ACT)?;
+    let server = ParameterServer::new(
+        vec![0.5; 16],
+        AdamConfig::default(),
+        TargetSync::None,
+        1,
+    );
+    match a.get("phase") {
+        Some("collect") => {
+            smoke_traffic(&service, items);
+            server.push_gradient(0, 16, &[0.1; 16]);
+            save_run_state(&dir, &server, &service)?;
+            for t in service.tables() {
+                eprintln!("[smoke] saved {}", t.stats_line());
+            }
+            println!(
+                "state-smoke collect OK: {} items saved to {}",
+                service.total_len(),
+                dir.display()
+            );
+            Ok(())
+        }
+        Some("resume") => {
+            let state = ServiceState::load(dir.join(STATE_FILE))?;
+            restore_run_state(&dir, &server, &service)?;
+            for t in service.tables() {
+                let ts = state
+                    .table(t.name())
+                    .ok_or_else(|| anyhow!("table `{}` missing from state", t.name()))?;
+                ensure!(
+                    t.len() == ts.buffer.len(),
+                    "table `{}`: restored {} items, snapshot has {}",
+                    t.name(),
+                    t.len(),
+                    ts.buffer.len()
+                );
+                ensure!(
+                    t.stats_snapshot() == ts.stats,
+                    "table `{}`: restored counters {:?} != snapshot {:?}",
+                    t.name(),
+                    t.stats_snapshot(),
+                    ts.stats
+                );
+            }
+            // Priority mass: re-capture the restored service and compare
+            // per-table priority sums against the file.
+            let recap = ServiceState::capture(&service)?;
+            for ts in &state.tables {
+                let got = recap.table(&ts.name).unwrap().buffer.total_priority();
+                let want = ts.buffer.total_priority();
+                ensure!(
+                    (got - want).abs() <= want.abs().max(1.0) * 1e-3,
+                    "table `{}`: restored priority mass {got} != snapshot {want}",
+                    ts.name
+                );
+            }
+            ensure!(server.opt_steps() == 1, "optimizer steps not restored");
+            // The resumed service keeps working: more traffic, and the
+            // sample-to-insert ratio bound holds over the COMBINED
+            // (restored + new) counters.
+            let before = service.default_table().stats_snapshot();
+            smoke_traffic(&service, 512);
+            let after = service.default_table().stats_snapshot();
+            ensure!(after.inserts > before.inserts, "resumed run inserted nothing");
+            ensure!(
+                after.sample_batches as f64 <= after.inserts as f64 + 1e-9,
+                "ratio bound violated after resume: {} batches vs {} inserts",
+                after.sample_batches,
+                after.inserts
+            );
+            println!(
+                "state-smoke resume OK: {} items, priority mass and limiter counters match; \
+                 +{} inserts after resume",
+                state.total_len(),
+                after.inserts - before.inserts
+            );
+            Ok(())
+        }
+        other => bail!("--phase must be `collect` or `resume`, got {other:?}"),
+    }
+}
+
 fn cmd_dse(a: &Args) -> Result<()> {
     let cores: usize = a.parse_or("cores", 8)?;
     let ratio: f64 = a.parse_or("update-interval", 1.0)?;
@@ -324,6 +523,7 @@ fn main() -> Result<()> {
         }
         Some("info") => cmd_info(&a),
         Some("buffer-bench") => cmd_buffer_bench(&a),
+        Some("state-smoke") => cmd_state_smoke(&a),
         Some("dse") => cmd_dse(&a),
         Some(other) => bail!("unknown subcommand `{other}` (try `pal` for usage)"),
         None => usage(),

@@ -3,10 +3,14 @@
 //!
 //! Format (little-endian): magic "PALCKPT1", u64 dim, u64 opt_steps,
 //! online f32[dim], target f32[dim], trailing crc32 of the payload.
+//! Magic/crc validation and the atomic temp-file + rename write are the
+//! shared [`crate::util::blob`] helpers — the same ones the replay-state
+//! checkpoint ([`crate::service::checkpoint`]) uses, so the two loaders
+//! cannot drift apart in how they reject corrupt files.
 
 use super::ParameterServer;
+use crate::util::blob::{read_blob, write_blob, ByteReader};
 use anyhow::{bail, Context, Result};
-use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"PALCKPT1";
@@ -17,19 +21,6 @@ pub struct Checkpoint {
     pub online: Vec<f32>,
     pub target: Vec<f32>,
     pub opt_steps: u64,
-}
-
-fn crc32(data: &[u8]) -> u32 {
-    // Small table-free CRC-32 (IEEE), enough for corruption detection.
-    let mut crc = 0xFFFF_FFFFu32;
-    for &b in data {
-        crc ^= b as u32;
-        for _ in 0..8 {
-            let mask = (crc & 1).wrapping_neg();
-            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
-        }
-    }
-    !crc
 }
 
 impl Checkpoint {
@@ -49,43 +40,39 @@ impl Checkpoint {
         for v in self.online.iter().chain(&self.target) {
             payload.extend_from_slice(&v.to_le_bytes());
         }
-        let crc = crc32(&payload);
-        let mut f = std::fs::File::create(path.as_ref())
-            .with_context(|| format!("creating {}", path.as_ref().display()))?;
-        f.write_all(MAGIC)?;
-        f.write_all(&payload)?;
-        f.write_all(&crc.to_le_bytes())?;
-        Ok(())
+        write_blob(path.as_ref(), MAGIC, &payload)
+            .with_context(|| format!("writing checkpoint {}", path.as_ref().display()))
     }
 
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
-        let mut bytes = Vec::new();
-        std::fs::File::open(path.as_ref())
-            .with_context(|| format!("opening {}", path.as_ref().display()))?
-            .read_to_end(&mut bytes)?;
-        if bytes.len() < MAGIC.len() + 16 + 4 || &bytes[..8] != MAGIC {
-            bail!("not a PAL checkpoint: {}", path.as_ref().display());
+        let path = path.as_ref();
+        let payload = read_blob(path, MAGIC)
+            .with_context(|| format!("not a PAL checkpoint: {}", path.display()))?;
+        let mut r = ByteReader::new(&payload);
+        let dim = r.u64("dim")? as usize;
+        let opt_steps = r.u64("opt_steps")?;
+        // Checked arithmetic: a corrupted `dim` must be a clean error,
+        // never an overflow or a capacity-overflow panic in Vec.
+        let want = dim
+            .checked_mul(8)
+            .and_then(|b| b.checked_add(16))
+            .filter(|&w| w == payload.len());
+        if want.is_none() {
+            bail!(
+                "checkpoint truncated or dim corrupted: payload {} bytes, dim {dim}",
+                payload.len()
+            );
         }
-        let payload = &bytes[8..bytes.len() - 4];
-        let stored_crc = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
-        if crc32(payload) != stored_crc {
-            bail!("checkpoint corrupted (crc mismatch): {}", path.as_ref().display());
+        let mut online = Vec::with_capacity(dim);
+        let mut target = Vec::with_capacity(dim);
+        for _ in 0..dim {
+            online.push(r.f32("online")?);
         }
-        let dim = u64::from_le_bytes(payload[0..8].try_into().unwrap()) as usize;
-        let opt_steps = u64::from_le_bytes(payload[8..16].try_into().unwrap());
-        let need = 16 + dim * 8;
-        if payload.len() != need {
-            bail!("checkpoint truncated: payload {} bytes, want {need}", payload.len());
+        for _ in 0..dim {
+            target.push(r.f32("target")?);
         }
-        let floats: Vec<f32> = payload[16..]
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-            .collect();
-        Ok(Self {
-            online: floats[..dim].to_vec(),
-            target: floats[dim..].to_vec(),
-            opt_steps,
-        })
+        r.expect_end()?;
+        Ok(Self { online, target, opt_steps })
     }
 }
 
@@ -133,5 +120,60 @@ mod tests {
         std::fs::write(&path, b"PALCKPT1").unwrap();
         assert!(Checkpoint::load(&path).is_err());
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_forged_huge_dim_without_panic() {
+        // A payload whose dim field would overflow `dim * 8` (with a
+        // VALID crc — crc32 is not tamper-proof) must be a clean error,
+        // not an arithmetic or allocation panic.
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&u64::MAX.to_le_bytes()); // dim
+        payload.extend_from_slice(&0u64.to_le_bytes()); // opt_steps
+        let path = std::env::temp_dir().join("pal_ckpt_forged.bin");
+        crate::util::blob::write_blob(&path, b"PALCKPT1", &payload).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn save_is_atomic_no_tmp_left() {
+        let ck = Checkpoint { online: vec![0.5; 4], target: vec![0.5; 4], opt_steps: 0 };
+        let path = std::env::temp_dir().join("pal_ckpt_atomic.bin");
+        ck.save(&path).unwrap();
+        assert!(!path.with_extension("tmp").exists());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn restore_into_server_resumes_opt_steps() {
+        let server = ParameterServer::new(
+            vec![1.0; 4],
+            AdamConfig::default(),
+            TargetSync::None,
+            1,
+        );
+        server.push_gradient(0, 4, &[0.2; 4]);
+        let ck = Checkpoint::from_server(&server);
+        let fresh = ParameterServer::new(
+            vec![0.0; 4],
+            AdamConfig::default(),
+            TargetSync::None,
+            1,
+        );
+        let v0 = fresh.version();
+        fresh.restore(&ck).unwrap();
+        assert_eq!(fresh.online_copy(), ck.online);
+        assert_eq!(fresh.target_copy(), ck.target);
+        assert_eq!(fresh.opt_steps(), 1);
+        assert!(fresh.version() > v0, "restore must bump the version");
+        // Dimension mismatch must be rejected.
+        let small = ParameterServer::new(
+            vec![0.0; 2],
+            AdamConfig::default(),
+            TargetSync::None,
+            1,
+        );
+        assert!(small.restore(&ck).is_err());
     }
 }

@@ -16,6 +16,7 @@ pub mod checkpoint;
 pub use adam::{Adam, AdamConfig};
 pub use checkpoint::Checkpoint;
 
+use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -174,6 +175,31 @@ impl ParameterServer {
     /// Optimizer steps applied so far.
     pub fn opt_steps(&self) -> usize {
         self.inner.lock().unwrap().opt_steps
+    }
+
+    /// Overwrite the server with a loaded [`Checkpoint`]: online and
+    /// target weights plus the optimizer step count, bumping the version
+    /// so every worker re-pulls. Adam moment vectors are NOT part of the
+    /// checkpoint format; they warm back up over the first few steps of
+    /// the resumed run. Pending (partially aggregated) gradients are
+    /// dropped.
+    pub fn restore(&self, ck: &Checkpoint) -> Result<()> {
+        if ck.online.len() != self.dim || ck.target.len() != self.dim {
+            bail!(
+                "checkpoint dim mismatch: file has {} online / {} target params, server has {}",
+                ck.online.len(),
+                ck.target.len(),
+                self.dim
+            );
+        }
+        let mut g = self.inner.lock().unwrap();
+        g.online.copy_from_slice(&ck.online);
+        g.target.copy_from_slice(&ck.target);
+        g.opt_steps = ck.opt_steps as usize;
+        g.pending.clear();
+        drop(g);
+        self.version.fetch_add(1, Ordering::AcqRel);
+        Ok(())
     }
 
     /// Read-only copy of the online weights (tests / checkpoints).

@@ -7,9 +7,11 @@
 //! the critical section includes the O(row) memory copy that the paper's
 //! lazy writing moves outside.
 
+use super::snapshot::{BufferState, ShardState};
 use super::storage::{SampleBatch, Transition, TransitionStore};
 use super::ReplayBuffer;
 use crate::util::rng::Rng;
+use anyhow::Result;
 use std::sync::Mutex;
 
 /// Classic 2N-array binary sum tree (no cache-alignment, no level
@@ -40,6 +42,20 @@ impl BinarySumTree {
         while i >= 1 {
             self.nodes[i] += delta;
             i /= 2;
+        }
+    }
+
+    /// Overwrite every leaf (zeroing those past `leaves.len()`) and
+    /// recompute all interior sums bottom-up — exact assignment with no
+    /// incremental fp drift, used by checkpoint restore.
+    pub fn assign(&mut self, leaves: &[f32]) {
+        assert!(leaves.len() <= self.cap);
+        for slot in self.nodes[self.cap..].iter_mut() {
+            *slot = 0.0;
+        }
+        self.nodes[self.cap..self.cap + leaves.len()].copy_from_slice(leaves);
+        for i in (1..self.cap).rev() {
+            self.nodes[i] = self.nodes[2 * i] + self.nodes[2 * i + 1];
         }
     }
 
@@ -167,6 +183,60 @@ impl ReplayBuffer for GlobalLockReplay {
             }
             g.tree.update(idx, p);
         }
+    }
+
+    /// Everything lives behind the one lock, so the capture is trivially
+    /// consistent: one shard, leaf priorities read off the binary tree.
+    fn snapshot_state(&self) -> Option<BufferState> {
+        let g = self.inner.lock().unwrap();
+        let len = g.cursor.min(self.capacity);
+        let mut priorities = Vec::with_capacity(len);
+        let mut rows = Vec::with_capacity(len);
+        for i in 0..len {
+            priorities.push(g.tree.get(i));
+            rows.push(self.store.read(i));
+        }
+        Some(BufferState {
+            impl_name: self.name().to_string(),
+            capacity: self.capacity,
+            obs_dim: self.store.obs_dim(),
+            act_dim: self.store.act_dim(),
+            shards: vec![ShardState {
+                cursor: g.cursor as u64,
+                max_priority: g.max_priority,
+                priorities,
+                rows,
+            }],
+        })
+    }
+
+    fn validate_state(&self, state: &BufferState) -> Result<()> {
+        state.check_header(
+            self.name(),
+            self.capacity,
+            self.store.obs_dim(),
+            self.store.act_dim(),
+            1,
+        )?;
+        state.shards[0].validate(
+            self.name(),
+            self.capacity,
+            self.store.obs_dim(),
+            self.store.act_dim(),
+        )
+    }
+
+    fn restore_state(&self, state: &BufferState) -> Result<()> {
+        self.validate_state(state)?;
+        let s = &state.shards[0];
+        let mut g = self.inner.lock().unwrap();
+        for (i, row) in s.rows.iter().enumerate() {
+            self.store.write(i, row);
+        }
+        g.tree.assign(&s.priorities);
+        g.cursor = s.cursor as usize;
+        g.max_priority = s.max_priority.max(f32::MIN_POSITIVE);
+        Ok(())
     }
 }
 

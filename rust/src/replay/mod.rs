@@ -18,6 +18,7 @@ pub mod baseline;
 pub mod emulated;
 pub mod prioritized;
 pub mod sharded;
+pub mod snapshot;
 pub mod storage;
 pub mod sumtree;
 pub mod uniform;
@@ -26,11 +27,13 @@ pub use baseline::{BinarySumTree, GlobalLockReplay};
 pub use emulated::{NaiveScanReplay, PyBindBinaryReplay, PySumTreeReplay};
 pub use prioritized::{LockStatsSnapshot, PrioritizedConfig, PrioritizedReplay};
 pub use sharded::ShardedPrioritizedReplay;
+pub use snapshot::{BufferState, ShardState};
 pub use storage::{SampleBatch, Transition, TransitionStore};
 pub use sumtree::KArySumTree;
 pub use uniform::UniformReplay;
 
 use crate::util::rng::Rng;
+use anyhow::Result;
 
 /// Importance weights for a sampled batch: is(i) = (N · Pr(i))^-β,
 /// normalized by the batch max so the largest weight is 1 (Schaul et
@@ -90,6 +93,32 @@ pub trait ReplayBuffer: Send + Sync {
 
     /// Feed back new |TD| errors for sampled indices (paper §IV-A4).
     fn update_priorities(&self, indices: &[usize], td_abs: &[f32]);
+
+    /// Capture a consistent, serializable [`BufferState`] (ring
+    /// contents, leaf priorities, cursors, max priority). `None` when
+    /// the implementation does not support checkpointing (the emulated
+    /// comparison buffers); the training buffers (`pal-kary`,
+    /// `pal-sharded`, `uniform-ring`) all support it.
+    fn snapshot_state(&self) -> Option<BufferState> {
+        None
+    }
+
+    /// Validate that `state` could be restored into this buffer without
+    /// mutating anything. Callers restoring several buffers validate
+    /// ALL of them first so a failure can never leave a service
+    /// half-loaded.
+    fn validate_state(&self, state: &BufferState) -> Result<()> {
+        let _ = state;
+        anyhow::bail!("buffer `{}` does not support checkpoint restore", self.name())
+    }
+
+    /// Restore a previously captured state, rebuilding every derived
+    /// structure (interior sum-tree nodes are recomputed from the
+    /// leaves, never trusted from the file). Fails cleanly — with the
+    /// buffer untouched — on any mismatch or inconsistency.
+    fn restore_state(&self, state: &BufferState) -> Result<()> {
+        self.validate_state(state)
+    }
 }
 
 #[cfg(test)]
@@ -203,5 +232,51 @@ mod trait_tests {
             // capacity.
             assert_eq!(b.len(), 256, "{}", b.name());
         }
+    }
+
+    #[test]
+    fn checkpointable_impls_roundtrip_exactly() {
+        // Every impl that supports snapshotting must reproduce its
+        // EXACT state when the snapshot is restored — even into a
+        // buffer that has drifted since (restore must clear the drift).
+        let mut supported = 0;
+        for b in impls(32) {
+            for i in 0..20 {
+                b.insert(&tr(i as f32));
+            }
+            b.update_priorities(&[2, 5, 9], &[3.0, 0.2, 7.5]);
+            let Some(s1) = b.snapshot_state() else {
+                // Unsupported impls must fail restore cleanly too.
+                let dummy = BufferState {
+                    impl_name: b.name().to_string(),
+                    capacity: b.capacity(),
+                    obs_dim: 2,
+                    act_dim: 1,
+                    shards: vec![],
+                };
+                assert!(b.restore_state(&dummy).is_err(), "{}", b.name());
+                continue;
+            };
+            supported += 1;
+            assert_eq!(s1.len(), 20, "{}", b.name());
+            assert_eq!(s1.impl_name, b.name());
+            // Drift the buffer past the snapshot...
+            for i in 0..30 {
+                b.insert(&tr((100 + i) as f32));
+            }
+            b.update_priorities(&[0, 1], &[9.0, 9.0]);
+            // ...then restore and re-capture: states must be identical.
+            b.restore_state(&s1).unwrap_or_else(|e| panic!("{}: {e}", b.name()));
+            assert_eq!(b.len(), 20, "{}", b.name());
+            let s2 = b.snapshot_state().unwrap();
+            assert_eq!(s1, s2, "{}", b.name());
+            // The restored buffer keeps working: sampling + feedback.
+            let mut rng = Rng::new(11);
+            let mut out = SampleBatch::default();
+            assert!(b.sample(8, &mut rng, &mut out), "{}", b.name());
+            let idx = out.indices.clone();
+            b.update_priorities(&idx, &vec![0.4; idx.len()]);
+        }
+        assert_eq!(supported, 4, "pal-kary, pal-sharded, baseline and uniform");
     }
 }

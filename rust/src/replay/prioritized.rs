@@ -18,10 +18,12 @@
 //! zero-priority leaf is never returned by the descent, so sampling can
 //! proceed concurrently with the bulk data copy.
 
+use super::snapshot::{BufferState, ShardState};
 use super::storage::{SampleBatch, Transition, TransitionStore};
 use super::sumtree::KArySumTree;
 use super::ReplayBuffer;
 use crate::util::rng::Rng;
+use anyhow::Result;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
@@ -267,6 +269,78 @@ impl PrioritizedReplay {
         self.store.read_into(idx, out);
     }
 
+    /// Storage dims `(obs_dim, act_dim)`.
+    pub fn dims(&self) -> (usize, usize) {
+        (self.store.obs_dim(), self.store.act_dim())
+    }
+
+    /// Capture this tree + storage segment as one [`ShardState`]. Takes
+    /// both locks, so the captured leaves and cursor are mutually
+    /// consistent; a lazy insert whose data copy is in flight at capture
+    /// time shows up — exactly as in live sampling — as a zero-priority
+    /// slot that can never be drawn until it is overwritten.
+    ///
+    /// The O(occupied) row copy runs under both locks, stalling this
+    /// shard's writers and samplers for the duration — acceptable for
+    /// periodic checkpoints (rare, and sharding bounds the stall to one
+    /// shard at a time); a flat-memcpy capture that defers per-row
+    /// structuring past the unlock is the known optimization if
+    /// checkpoint cadence ever becomes hot.
+    pub fn snapshot_shard(&self) -> ShardState {
+        let _global = self.global_tree_lock.lock().unwrap();
+        let _leaf = self.last_level_lock.lock().unwrap();
+        let cursor = self.write_cursor.load(Ordering::Relaxed);
+        let len = cursor.min(self.capacity);
+        let mut priorities = Vec::with_capacity(len);
+        let mut rows = Vec::with_capacity(len);
+        for i in 0..len {
+            priorities.push(self.tree.get(i));
+            rows.push(self.store.read(i));
+        }
+        ShardState {
+            cursor: cursor as u64,
+            max_priority: self.max_priority(),
+            priorities,
+            rows,
+        }
+    }
+
+    /// Structural validation of a shard state against this buffer's
+    /// geometry (no mutation).
+    pub fn validate_shard(&self, s: &ShardState) -> Result<()> {
+        s.validate(self.name(), self.capacity, self.store.obs_dim(), self.store.act_dim())
+    }
+
+    /// Overwrite this shard with a validated state: rows into storage,
+    /// priorities onto the leaves (slots beyond the state's length are
+    /// zeroed), then a full [`KArySumTree::rebuild`] so every interior
+    /// sum is recomputed from the leaves rather than trusted from disk.
+    /// Callers must run [`Self::validate_shard`] first.
+    pub(crate) fn apply_shard(&self, s: &ShardState) {
+        let _global = self.global_tree_lock.lock().unwrap();
+        let _leaf = self.last_level_lock.lock().unwrap();
+        for (i, row) in s.rows.iter().enumerate() {
+            self.store.write(i, row);
+        }
+        for (i, &p) in s.priorities.iter().enumerate() {
+            self.tree.set_leaf(i, p);
+        }
+        for i in s.priorities.len()..self.capacity {
+            self.tree.set_leaf(i, 0.0);
+        }
+        self.tree.rebuild();
+        self.write_cursor.store(s.cursor as usize, Ordering::Relaxed);
+        self.max_priority
+            .store(s.max_priority.max(f32::MIN_POSITIVE).to_bits(), Ordering::Relaxed);
+    }
+
+    /// Validate + apply one shard state (the single-tree restore path).
+    pub fn restore_shard(&self, s: &ShardState) -> Result<()> {
+        self.validate_shard(s)?;
+        self.apply_shard(s);
+        Ok(())
+    }
+
     /// Two-level sampling support: run the prefix-sum descents for every
     /// value in `prefixes` under ONE `global_tree_lock` acquisition,
     /// appending `(leaf_index, priority)` pairs to the output vectors.
@@ -454,6 +528,33 @@ impl ReplayBuffer for PrioritizedReplay {
             .map(|(&idx, &td)| (idx, self.transform_priority(td)))
             .collect();
         self.update_transformed_batch(&pairs);
+    }
+
+    fn snapshot_state(&self) -> Option<BufferState> {
+        Some(BufferState {
+            impl_name: self.name().to_string(),
+            capacity: self.capacity,
+            obs_dim: self.store.obs_dim(),
+            act_dim: self.store.act_dim(),
+            shards: vec![self.snapshot_shard()],
+        })
+    }
+
+    fn validate_state(&self, state: &BufferState) -> Result<()> {
+        state.check_header(
+            self.name(),
+            self.capacity,
+            self.store.obs_dim(),
+            self.store.act_dim(),
+            1,
+        )?;
+        self.validate_shard(&state.shards[0])
+    }
+
+    fn restore_state(&self, state: &BufferState) -> Result<()> {
+        self.validate_state(state)?;
+        self.apply_shard(&state.shards[0]);
+        Ok(())
     }
 }
 
@@ -699,6 +800,39 @@ mod tests {
         b.rebuild_tree();
         assert!(b.tree().invariant_error() < 1e-5);
         assert_eq!(b.len(), 1024);
+    }
+
+    #[test]
+    fn snapshot_restore_rebuilds_tree_sums() {
+        let b = mk(64, 16);
+        for i in 0..40 {
+            b.insert(&tr(i as f32));
+        }
+        let idx: Vec<usize> = (0..40).collect();
+        let tds: Vec<f32> = (0..40).map(|i| 0.1 + i as f32).collect();
+        b.update_priorities(&idx, &tds);
+        let s = b.snapshot_shard();
+        assert_eq!(s.len(), 40);
+        assert!((b.max_priority() - s.max_priority).abs() < 1e-6);
+
+        let fresh = mk(64, 16);
+        fresh.restore_shard(&s).unwrap();
+        // Leaves, cursor, max priority and every INTERIOR sum must come
+        // back: the interior nodes are rebuilt, so root == Σ leaves.
+        assert_eq!(fresh.len(), 40);
+        assert!(fresh.tree().invariant_error() < 1e-6);
+        let total: f64 = s.total_priority();
+        assert!((fresh.total_priority() as f64 - total).abs() / total < 1e-4);
+        for i in 0..40 {
+            assert!((fresh.get_priority(i) - b.get_priority(i)).abs() < 1e-6, "leaf {i}");
+        }
+        assert!((fresh.max_priority() - b.max_priority()).abs() < 1e-6);
+        // A corrupted state must be rejected without mutation.
+        let mut bad = s.clone();
+        bad.priorities[3] = f32::INFINITY;
+        let before = fresh.snapshot_shard();
+        assert!(fresh.restore_shard(&bad).is_err());
+        assert_eq!(fresh.snapshot_shard(), before);
     }
 
     #[test]

@@ -31,9 +31,11 @@
 //! TD errors back with no API change.
 
 use super::prioritized::{LockStatsSnapshot, PrioritizedConfig, PrioritizedReplay};
+use super::snapshot::BufferState;
 use super::storage::{SampleBatch, Transition};
 use super::ReplayBuffer;
 use crate::util::rng::Rng;
+use anyhow::Result;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 /// S independent prioritized shards behind the [`ReplayBuffer`] trait.
@@ -309,6 +311,48 @@ impl ReplayBuffer for ShardedPrioritizedReplay {
     fn update_priorities(&self, indices: &[usize], td_abs: &[f32]) {
         debug_assert_eq!(indices.len(), td_abs.len());
         self.update_grouped(indices.iter().copied().zip(td_abs.iter().copied()));
+    }
+
+    /// One [`super::ShardState`] per shard, each captured under that
+    /// shard's lock pair, so the per-shard slot layout created by
+    /// actor-affinity routing survives the round trip exactly.
+    fn snapshot_state(&self) -> Option<BufferState> {
+        let (obs_dim, act_dim) = self.shards[0].dims();
+        Some(BufferState {
+            impl_name: self.name().to_string(),
+            capacity: self.capacity(),
+            obs_dim,
+            act_dim,
+            shards: self.shards.iter().map(PrioritizedReplay::snapshot_shard).collect(),
+        })
+    }
+
+    /// Validates EVERY shard before anything mutates, so a corrupt
+    /// shard entry can never leave the buffer half-restored.
+    fn validate_state(&self, state: &BufferState) -> Result<()> {
+        let (obs_dim, act_dim) = self.shards[0].dims();
+        state.check_header(
+            self.name(),
+            self.capacity(),
+            obs_dim,
+            act_dim,
+            self.shards.len(),
+        )?;
+        for (s, shard_state) in self.shards.iter().zip(&state.shards) {
+            s.validate_shard(shard_state)?;
+        }
+        Ok(())
+    }
+
+    fn restore_state(&self, state: &BufferState) -> Result<()> {
+        self.validate_state(state)?;
+        for (s, shard_state) in self.shards.iter().zip(&state.shards) {
+            s.apply_shard(shard_state);
+        }
+        // Anonymous round-robin inserts restart from shard 0; affinity
+        // routing (`insert_from`) is position-independent either way.
+        self.round_robin.store(0, Ordering::Relaxed);
+        Ok(())
     }
 }
 

@@ -1,0 +1,250 @@
+//! Plain-data snapshot types for checkpointable replay buffers.
+//!
+//! A [`BufferState`] is everything a buffer needs to reproduce its
+//! sampling behavior after a restart: per-shard ring contents in slot
+//! order, leaf priorities, the monotone write cursor (so FIFO eviction
+//! continues at the right slot) and the running max priority (so new
+//! inserts arrive at the right priority). Interior sum-tree nodes are
+//! deliberately NOT part of the state — restore rebuilds them from the
+//! leaves ([`crate::replay::sumtree::KArySumTree::rebuild`]), so a
+//! corrupted or stale interior sum can never be smuggled in from disk.
+//!
+//! Single-tree buffers are the `shards.len() == 1` special case; the
+//! sharded buffer stores one [`ShardState`] per shard so actor-affinity
+//! slot layout survives the round trip exactly.
+
+use super::storage::Transition;
+use anyhow::{bail, Result};
+
+/// State of one shard: ring slots `0..len` plus cursor/max-priority.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardState {
+    /// Monotone insertion counter (next slot = `cursor % capacity`).
+    pub cursor: u64,
+    /// Running max transformed priority (1.0 for non-prioritized rings).
+    pub max_priority: f32,
+    /// Leaf priorities of the occupied slots, in slot order.
+    pub priorities: Vec<f32>,
+    /// Stored transitions of the occupied slots, in slot order.
+    pub rows: Vec<Transition>,
+}
+
+impl ShardState {
+    /// Occupied slot count.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Σ of the stored leaf priorities (f64 to keep the test-side
+    /// comparison independent of summation order).
+    pub fn total_priority(&self) -> f64 {
+        self.priorities.iter().map(|&p| p as f64).sum()
+    }
+
+    /// Structural validation against a shard's geometry. `kind` names
+    /// the buffer in error messages.
+    pub fn validate(
+        &self,
+        kind: &str,
+        capacity: usize,
+        obs_dim: usize,
+        act_dim: usize,
+    ) -> Result<()> {
+        if self.priorities.len() != self.rows.len() {
+            bail!(
+                "{kind}: shard state has {} priorities for {} rows",
+                self.priorities.len(),
+                self.rows.len()
+            );
+        }
+        if self.rows.len() > capacity {
+            bail!(
+                "{kind}: shard state holds {} rows but the shard capacity is {capacity}",
+                self.rows.len()
+            );
+        }
+        let expect_len = (self.cursor as usize).min(capacity);
+        if self.rows.len() != expect_len {
+            bail!(
+                "{kind}: shard cursor {} implies {} occupied slots, state has {}",
+                self.cursor,
+                expect_len,
+                self.rows.len()
+            );
+        }
+        if !self.max_priority.is_finite() || self.max_priority < 0.0 {
+            bail!("{kind}: invalid max priority {}", self.max_priority);
+        }
+        for (i, p) in self.priorities.iter().enumerate() {
+            if !p.is_finite() || *p < 0.0 {
+                bail!("{kind}: invalid priority {p} at slot {i}");
+            }
+        }
+        for (i, row) in self.rows.iter().enumerate() {
+            if row.obs.len() != obs_dim
+                || row.next_obs.len() != obs_dim
+                || row.action.len() != act_dim
+            {
+                bail!(
+                    "{kind}: row {i} dims obs={}/{} act={} do not match buffer dims \
+                     obs={obs_dim} act={act_dim}",
+                    row.obs.len(),
+                    row.next_obs.len(),
+                    row.action.len()
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Serializable state of one whole replay buffer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BufferState {
+    /// [`crate::replay::ReplayBuffer::name`] of the impl that captured
+    /// the state; restore refuses a different implementation.
+    pub impl_name: String,
+    /// Total leaf capacity across shards.
+    pub capacity: usize,
+    pub obs_dim: usize,
+    pub act_dim: usize,
+    pub shards: Vec<ShardState>,
+}
+
+impl BufferState {
+    /// Total occupied slots across shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(ShardState::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.iter().all(ShardState::is_empty)
+    }
+
+    /// Σ of all stored leaf priorities across shards.
+    pub fn total_priority(&self) -> f64 {
+        self.shards.iter().map(ShardState::total_priority).sum()
+    }
+
+    /// Cheap cross-impl checks shared by every `validate_state` impl.
+    pub fn check_header(
+        &self,
+        impl_name: &str,
+        capacity: usize,
+        obs_dim: usize,
+        act_dim: usize,
+        shard_count: usize,
+    ) -> Result<()> {
+        if self.impl_name != impl_name {
+            bail!(
+                "buffer state was captured from `{}` but this buffer is `{impl_name}`",
+                self.impl_name
+            );
+        }
+        if self.capacity != capacity {
+            bail!(
+                "{impl_name}: state capacity {} does not match buffer capacity {capacity}",
+                self.capacity
+            );
+        }
+        if self.obs_dim != obs_dim || self.act_dim != act_dim {
+            bail!(
+                "{impl_name}: state dims obs={} act={} do not match buffer dims \
+                 obs={obs_dim} act={act_dim}",
+                self.obs_dim,
+                self.act_dim
+            );
+        }
+        if self.shards.len() != shard_count {
+            bail!(
+                "{impl_name}: state has {} shards, buffer has {shard_count}",
+                self.shards.len()
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(v: f32) -> Transition {
+        Transition {
+            obs: vec![v, v],
+            action: vec![v],
+            next_obs: vec![v, v],
+            reward: v,
+            done: false,
+        }
+    }
+
+    fn shard(n: usize) -> ShardState {
+        ShardState {
+            cursor: n as u64,
+            max_priority: 1.0,
+            priorities: vec![0.5; n],
+            rows: (0..n).map(|i| row(i as f32)).collect(),
+        }
+    }
+
+    #[test]
+    fn validate_accepts_consistent_state() {
+        assert!(shard(4).validate("test", 8, 2, 1).is_ok());
+        // Wrapped cursor: 12 inserts into capacity 8 leaves 8 rows.
+        let mut s = shard(8);
+        s.cursor = 12;
+        assert!(s.validate("test", 8, 2, 1).is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_each_inconsistency() {
+        let mut s = shard(4);
+        s.priorities.pop();
+        assert!(s.validate("test", 8, 2, 1).is_err());
+
+        let s = shard(9);
+        assert!(s.validate("test", 8, 2, 1).is_err());
+
+        let mut s = shard(4);
+        s.cursor = 7; // cursor says 7 rows, state has 4
+        assert!(s.validate("test", 8, 2, 1).is_err());
+
+        let mut s = shard(4);
+        s.priorities[2] = f32::NAN;
+        assert!(s.validate("test", 8, 2, 1).is_err());
+
+        let mut s = shard(4);
+        s.priorities[1] = -1.0;
+        assert!(s.validate("test", 8, 2, 1).is_err());
+
+        let mut s = shard(4);
+        s.rows[3].obs.push(0.0);
+        assert!(s.validate("test", 8, 2, 1).is_err());
+
+        let s = shard(4);
+        assert!(s.validate("test", 8, 3, 1).is_err());
+    }
+
+    #[test]
+    fn buffer_state_header_checks() {
+        let b = BufferState {
+            impl_name: "pal-kary".into(),
+            capacity: 8,
+            obs_dim: 2,
+            act_dim: 1,
+            shards: vec![shard(4)],
+        };
+        assert!(b.check_header("pal-kary", 8, 2, 1, 1).is_ok());
+        assert!(b.check_header("uniform-ring", 8, 2, 1, 1).is_err());
+        assert!(b.check_header("pal-kary", 16, 2, 1, 1).is_err());
+        assert!(b.check_header("pal-kary", 8, 3, 1, 1).is_err());
+        assert!(b.check_header("pal-kary", 8, 2, 1, 2).is_err());
+        assert_eq!(b.len(), 4);
+        assert!((b.total_priority() - 2.0).abs() < 1e-9);
+    }
+}

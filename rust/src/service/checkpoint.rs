@@ -1,0 +1,502 @@
+//! Replay-service checkpointing: serialize every table of a
+//! [`ReplayService`] — buffer contents, table stats and the rate
+//! limiter's counters — to one versioned, checksummed file, and restore
+//! it into a freshly built service so a resumed run continues with
+//! identical sampling behavior (Reverb's table-checkpointing feature,
+//! arXiv:2102.04736 §"Checkpointing").
+//!
+//! # What is (and is not) in the file
+//!
+//! * **Per table**: name, item-kind tag, the six [`TableStatsSnapshot`]
+//!   counters, and the wrapped buffer's [`BufferState`] (per-shard ring
+//!   rows + leaf priorities + cursors + max priority).
+//! * The limiter's *state* is exactly the `inserts` / `sample_batches`
+//!   counters — restoring them transfers the sample-to-insert ratio
+//!   accounting, so a resumed run neither stalls (drift wrongly high)
+//!   nor bursts (drift wrongly zeroed) after restart.
+//! * Interior sum-tree nodes are **not** stored: restore rebuilds them
+//!   from the leaves, so a corrupted interior sum cannot be loaded.
+//! * The limiter *configuration* (σ, error bounds) is not stored — it
+//!   belongs to the run configuration, which must match between save
+//!   and restore (enforced structurally via table names/kinds/geometry).
+//!
+//! # File format
+//!
+//! `magic "PALSTAT1" + payload + crc32(payload)` via the shared
+//! [`crate::util::blob`] helpers (same writer/validator as the weights
+//! [`crate::params::Checkpoint`]); writes are atomic (temp file +
+//! rename). The payload starts with a `u32` format version so a future
+//! layout change is reported as a version mismatch, not as garbage.
+//!
+//! # Failure semantics
+//!
+//! [`ServiceState::restore_into`] validates EVERY table — names, kinds,
+//! buffer implementation, geometry, per-shard consistency — before the
+//! first byte of service state is mutated. A corrupt, truncated,
+//! version-mismatched or mismatched-topology file therefore fails with
+//! a descriptive error and leaves the target service untouched; a table
+//! can never be half-loaded.
+
+use super::table::{Table, TableStatsSnapshot};
+use super::ReplayService;
+use crate::replay::{BufferState, ShardState, Transition};
+use crate::util::blob::{read_blob, write_blob, ByteReader, ByteWriter};
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+/// File-kind magic for replay-service state blobs.
+pub const STATE_MAGIC: &[u8; 8] = b"PALSTAT1";
+/// Payload layout version (first field of the payload).
+pub const STATE_VERSION: u32 = 1;
+/// Conventional file name inside a run/checkpoint directory.
+pub const STATE_FILE: &str = "replay_state.bin";
+
+/// Serialized state of one [`Table`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct TableState {
+    pub name: String,
+    /// [`super::ItemKind::tag`] of the table's item kind.
+    pub kind_tag: String,
+    /// Counter snapshot; `inserts` and `sample_batches` double as the
+    /// rate limiter's state.
+    pub stats: TableStatsSnapshot,
+    pub buffer: BufferState,
+}
+
+/// Serialized state of a whole [`ReplayService`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServiceState {
+    pub tables: Vec<TableState>,
+}
+
+impl ServiceState {
+    /// Capture every table. Fails if any table's buffer implementation
+    /// does not support checkpointing (the emulated plugin buffers).
+    pub fn capture(service: &ReplayService) -> Result<Self> {
+        let tables = service
+            .tables()
+            .iter()
+            .map(|t| t.checkpoint())
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self { tables })
+    }
+
+    /// Validate this state against a service without mutating anything:
+    /// table count, per-table existence, names/kinds, buffer impl and
+    /// geometry, per-shard consistency. Returns the matched tables in
+    /// state order. The single validation pass both [`Self::restore_into`]
+    /// and the coordinator's cross-subsystem restore build on — one copy
+    /// of the "no half-load" logic.
+    pub fn validate_against<'a>(&self, service: &'a ReplayService) -> Result<Vec<&'a Table>> {
+        if self.tables.len() != service.tables().len() {
+            bail!(
+                "state file has {} tables, service has {}",
+                self.tables.len(),
+                service.tables().len()
+            );
+        }
+        // Duplicate names would let two state entries resolve to ONE
+        // service table, leaving another silently unrestored despite
+        // the count check passing.
+        for (i, a) in self.tables.iter().enumerate() {
+            for b in &self.tables[i + 1..] {
+                if a.name == b.name {
+                    bail!("state file lists table `{}` twice", a.name);
+                }
+            }
+        }
+        let mut targets: Vec<&Table> = Vec::with_capacity(self.tables.len());
+        for ts in &self.tables {
+            let table = service.table(&ts.name).ok_or_else(|| {
+                anyhow!("state file table `{}` does not exist in this service", ts.name)
+            })?;
+            table.validate_restore(ts)?;
+            targets.push(table.as_ref());
+        }
+        Ok(targets)
+    }
+
+    /// Apply a state already validated by [`Self::validate_against`] to
+    /// the tables that call returned, in state order. The cross-table
+    /// topology pass is NOT repeated; each buffer's `restore_state`
+    /// still re-checks its own shard consistency once at the point of
+    /// mutation (last-gate insurance).
+    pub(crate) fn apply_to(&self, targets: &[&Table]) -> Result<()> {
+        for (table, ts) in targets.iter().zip(&self.tables) {
+            table.apply_restore(ts)?;
+        }
+        Ok(())
+    }
+
+    /// Restore into a freshly built (or at least structurally
+    /// identical) service. Two-phase: validate all tables, then apply.
+    pub fn restore_into(&self, service: &ReplayService) -> Result<()> {
+        let targets = self.validate_against(service)?;
+        self.apply_to(&targets)
+    }
+
+    /// Total items across all tables.
+    pub fn total_len(&self) -> usize {
+        self.tables.iter().map(|t| t.buffer.len()).sum()
+    }
+
+    /// Find one table's state by name.
+    pub fn table(&self, name: &str) -> Option<&TableState> {
+        self.tables.iter().find(|t| t.name == name)
+    }
+
+    /// Encode to the versioned payload (no header/crc — see [`Self::save`]).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.u32(STATE_VERSION);
+        w.u32(self.tables.len() as u32);
+        for t in &self.tables {
+            w.str_(&t.name);
+            w.str_(&t.kind_tag);
+            w.u64(t.stats.inserts as u64);
+            w.u64(t.stats.sample_batches as u64);
+            w.u64(t.stats.sampled_items as u64);
+            w.u64(t.stats.priority_updates as u64);
+            w.u64(t.stats.insert_stalls as u64);
+            w.u64(t.stats.sample_stalls as u64);
+            w.str_(&t.buffer.impl_name);
+            w.u64(t.buffer.capacity as u64);
+            w.u32(t.buffer.obs_dim as u32);
+            w.u32(t.buffer.act_dim as u32);
+            w.u32(t.buffer.shards.len() as u32);
+            for s in &t.buffer.shards {
+                w.u64(s.cursor);
+                w.f32(s.max_priority);
+                w.f32s(&s.priorities);
+                w.u64(s.rows.len() as u64);
+                for row in &s.rows {
+                    for &v in row.obs.iter().chain(&row.action).chain(&row.next_obs) {
+                        w.f32(v);
+                    }
+                    w.f32(row.reward);
+                    w.u8(row.done as u8);
+                }
+            }
+        }
+        w.finish()
+    }
+
+    /// Decode a payload produced by [`Self::encode`].
+    pub fn decode(payload: &[u8]) -> Result<Self> {
+        let mut r = ByteReader::new(payload);
+        let version = r.u32("format version")?;
+        if version != STATE_VERSION {
+            bail!(
+                "replay state format version mismatch: file is v{version}, \
+                 this build reads v{STATE_VERSION}"
+            );
+        }
+        // Sanity bounds on every count used for allocation, so a
+        // corrupted length field fails cleanly instead of attempting an
+        // absurd allocation.
+        const MAX_TABLES: usize = 4_096;
+        const MAX_SHARDS: usize = 65_536;
+        const MAX_DIM: usize = 1 << 20;
+        let n_tables = r.u32("table count")? as usize;
+        if n_tables > MAX_TABLES {
+            bail!("implausible table count {n_tables} (corrupted state file?)");
+        }
+        let mut tables = Vec::with_capacity(n_tables);
+        for _ in 0..n_tables {
+            let name = r.str_("table name")?;
+            let kind_tag = r.str_("table kind")?;
+            let stats = TableStatsSnapshot {
+                inserts: r.u64("inserts")? as usize,
+                sample_batches: r.u64("sample_batches")? as usize,
+                sampled_items: r.u64("sampled_items")? as usize,
+                priority_updates: r.u64("priority_updates")? as usize,
+                insert_stalls: r.u64("insert_stalls")? as usize,
+                sample_stalls: r.u64("sample_stalls")? as usize,
+            };
+            let impl_name = r.str_("buffer impl")?;
+            let capacity = r.u64("capacity")? as usize;
+            let obs_dim = r.u32("obs_dim")? as usize;
+            let act_dim = r.u32("act_dim")? as usize;
+            let n_shards = r.u32("shard count")? as usize;
+            if obs_dim > MAX_DIM || act_dim > MAX_DIM || n_shards > MAX_SHARDS {
+                bail!(
+                    "implausible geometry obs={obs_dim} act={act_dim} shards={n_shards} \
+                     (corrupted state file?)"
+                );
+            }
+            let mut shards = Vec::with_capacity(n_shards);
+            for _ in 0..n_shards {
+                let cursor = r.u64("shard cursor")?;
+                let max_priority = r.f32("max priority")?;
+                let priorities = r.f32s("priorities")?;
+                let n_rows = r.u64("row count")? as usize;
+                if n_rows != priorities.len() {
+                    bail!(
+                        "shard claims {n_rows} rows for {} priorities",
+                        priorities.len()
+                    );
+                }
+                let mut rows = Vec::with_capacity(n_rows);
+                for _ in 0..n_rows {
+                    let mut obs = Vec::with_capacity(obs_dim);
+                    for _ in 0..obs_dim {
+                        obs.push(r.f32("row obs")?);
+                    }
+                    let mut action = Vec::with_capacity(act_dim);
+                    for _ in 0..act_dim {
+                        action.push(r.f32("row action")?);
+                    }
+                    let mut next_obs = Vec::with_capacity(obs_dim);
+                    for _ in 0..obs_dim {
+                        next_obs.push(r.f32("row next_obs")?);
+                    }
+                    let reward = r.f32("row reward")?;
+                    let done = r.u8("row done")? != 0;
+                    rows.push(Transition { obs, action, next_obs, reward, done });
+                }
+                shards.push(ShardState { cursor, max_priority, priorities, rows });
+            }
+            tables.push(TableState {
+                name,
+                kind_tag,
+                stats,
+                buffer: BufferState { impl_name, capacity, obs_dim, act_dim, shards },
+            });
+        }
+        r.expect_end()?;
+        Ok(Self { tables })
+    }
+
+    /// Write the state to one file, atomically (temp file + rename).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        write_blob(path.as_ref(), STATE_MAGIC, &self.encode())
+            .with_context(|| format!("writing replay state {}", path.as_ref().display()))
+    }
+
+    /// Load and fully validate a state file (magic, crc, version,
+    /// internal consistency of the encoding).
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let payload = read_blob(path, STATE_MAGIC)
+            .with_context(|| format!("not a PAL replay state file: {}", path.display()))?;
+        Self::decode(&payload)
+            .with_context(|| format!("decoding replay state {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::replay::{PrioritizedConfig, ReplayBuffer, ShardedPrioritizedReplay, UniformReplay};
+    use crate::service::{ItemKind, RateLimiter, SampleOutcome, Table};
+    use crate::util::blob;
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    fn tr(v: f32) -> Transition {
+        Transition {
+            obs: vec![v, -v],
+            action: vec![v],
+            next_obs: vec![v + 1.0, -v],
+            reward: v,
+            done: false,
+        }
+    }
+
+    fn svc(capacity: usize) -> ReplayService {
+        let prio = Arc::new(ShardedPrioritizedReplay::new(PrioritizedConfig {
+            capacity,
+            obs_dim: 2,
+            act_dim: 1,
+            fanout: 16,
+            alpha: 0.6,
+            beta: 0.4,
+            lazy_writing: true,
+            shards: 4,
+        }));
+        let aux = Arc::new(UniformReplay::new(capacity, 2, 1));
+        ReplayService::new(vec![
+            Table::new(
+                "replay",
+                ItemKind::OneStep,
+                prio,
+                RateLimiter::SampleToInsertRatio(
+                    crate::service::SampleToInsertRatio::new(1.0, 8, 16.0).unwrap(),
+                ),
+            ),
+            Table::new(
+                "aux",
+                ItemKind::NStep { n: 3, gamma: 0.9 },
+                aux,
+                RateLimiter::Unlimited { min_size_to_sample: 1 },
+            ),
+        ])
+        .unwrap()
+    }
+
+    fn drive(service: &ReplayService, items: usize) {
+        let mut rng = Rng::new(7);
+        let mut out = crate::replay::SampleBatch::default();
+        for i in 0..items {
+            for t in service.tables() {
+                t.can_insert();
+                t.insert_from(i % 4, &tr(i as f32));
+            }
+            if i % 3 == 0 {
+                let t = service.default_table();
+                if t.try_sample(4, &mut rng, &mut out) == SampleOutcome::Sampled {
+                    let idx = out.indices.clone();
+                    t.update_priorities(&idx, &vec![rng.f32() * 2.0; idx.len()]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn capture_encode_decode_save_load_roundtrip() {
+        let service = svc(64);
+        drive(&service, 50);
+        let state = ServiceState::capture(&service).unwrap();
+        assert_eq!(state.tables.len(), 2);
+        assert_eq!(state.table("replay").unwrap().kind_tag, "1step");
+        assert_eq!(state.table("aux").unwrap().kind_tag, "nstep:3");
+        assert!(state.total_len() > 0);
+
+        // Pure encode/decode.
+        let decoded = ServiceState::decode(&state.encode()).unwrap();
+        assert_eq!(decoded, state);
+
+        // Disk roundtrip.
+        let path = std::env::temp_dir().join("pal_svc_state_test.bin");
+        state.save(&path).unwrap();
+        assert!(!path.with_extension("tmp").exists(), "save must be atomic");
+        let loaded = ServiceState::load(&path).unwrap();
+        assert_eq!(loaded, state);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn restore_reproduces_tables_and_limiter_counters() {
+        let service = svc(64);
+        drive(&service, 50);
+        let state = ServiceState::capture(&service).unwrap();
+
+        let fresh = svc(64);
+        state.restore_into(&fresh).unwrap();
+        for t in fresh.tables() {
+            let ts = state.table(t.name()).unwrap();
+            assert_eq!(t.len(), ts.buffer.len(), "{}", t.name());
+            assert_eq!(t.stats_snapshot(), ts.stats, "{}", t.name());
+        }
+        // Idempotence: capture(restore(capture(x))) == capture(x).
+        assert_eq!(ServiceState::capture(&fresh).unwrap(), state);
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_topology_without_mutation() {
+        let service = svc(64);
+        drive(&service, 30);
+        let state = ServiceState::capture(&service).unwrap();
+
+        // Wrong capacity.
+        let wrong_cap = svc(128);
+        assert!(state.restore_into(&wrong_cap).is_err());
+        assert_eq!(wrong_cap.total_len(), 0, "failed restore must not mutate");
+
+        // Wrong table name.
+        let mut renamed = state.clone();
+        renamed.tables[1].name = "other".into();
+        let fresh = svc(64);
+        assert!(renamed.restore_into(&fresh).is_err());
+        assert_eq!(fresh.total_len(), 0);
+
+        // Wrong kind tag.
+        let mut rekinded = state.clone();
+        rekinded.tables[1].kind_tag = "seq:4".into();
+        assert!(rekinded.restore_into(&fresh).is_err());
+        assert_eq!(fresh.total_len(), 0);
+
+        // Corrupt SECOND table: the valid first table must not be
+        // half-loaded before the failure is noticed.
+        let mut corrupt = state;
+        corrupt.tables[1].buffer.shards[0].priorities.push(1.0);
+        assert!(corrupt.restore_into(&fresh).is_err());
+        assert_eq!(fresh.total_len(), 0, "no table may be half-loaded");
+    }
+
+    #[test]
+    fn duplicate_state_table_names_rejected() {
+        // Two state entries with one name would both resolve to the
+        // same service table, leaving another table silently
+        // unrestored while the count check passes.
+        let service = svc(64);
+        drive(&service, 20);
+        let mut state = ServiceState::capture(&service).unwrap();
+        state.tables[1] = state.tables[0].clone();
+        let fresh = svc(64);
+        let err = state.restore_into(&fresh).unwrap_err();
+        assert!(format!("{err:#}").contains("twice"), "{err:#}");
+        assert_eq!(fresh.total_len(), 0);
+    }
+
+    #[test]
+    fn version_mismatch_reported_distinctly() {
+        let service = svc(64);
+        drive(&service, 10);
+        let state = ServiceState::capture(&service).unwrap();
+        let mut payload = state.encode();
+        payload[0] = 99; // bump the version field
+        let path = std::env::temp_dir().join("pal_svc_state_vers.bin");
+        blob::write_blob(&path, STATE_MAGIC, &payload).unwrap();
+        let err = ServiceState::load(&path).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("version"), "{msg}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn limiter_accounting_continues_exactly_after_restore() {
+        // σ = 1, min_diff 0 effectively: with I inserts and B granted
+        // batches restored, exactly floor(I·σ − min_diff) − B more
+        // batches are grantable before Throttled.
+        let mk = || {
+            let buf: Arc<dyn ReplayBuffer> = Arc::new(UniformReplay::new(64, 2, 1));
+            ReplayService::new(vec![Table::new(
+                "replay",
+                ItemKind::OneStep,
+                buf,
+                RateLimiter::SampleToInsertRatio(crate::service::SampleToInsertRatio {
+                    samples_per_insert: 1.0,
+                    min_size_to_sample: 2,
+                    min_diff: 0.0,
+                    max_diff: 1e9,
+                }),
+            )])
+            .unwrap()
+        };
+        let service = mk();
+        let t = service.default_table();
+        let mut rng = Rng::new(3);
+        let mut out = crate::replay::SampleBatch::default();
+        for i in 0..10 {
+            t.insert_from(0, &tr(i as f32));
+        }
+        for _ in 0..4 {
+            assert_eq!(t.try_sample(2, &mut rng, &mut out), SampleOutcome::Sampled);
+        }
+        // Live budget left: 10·1 − 4 = 6 batches.
+        let state = ServiceState::capture(&service).unwrap();
+
+        let resumed = mk();
+        state.restore_into(&resumed).unwrap();
+        let t2 = resumed.default_table();
+        for k in 0..6 {
+            assert_eq!(
+                t2.try_sample(2, &mut rng, &mut out),
+                SampleOutcome::Sampled,
+                "batch {k} after restore"
+            );
+        }
+        assert_eq!(t2.try_sample(2, &mut rng, &mut out), SampleOutcome::Throttled);
+    }
+}

@@ -48,7 +48,11 @@ impl SampleToInsertRatio {
     /// `error_buffer` must be at least `max(1, σ)` or the window could
     /// be too narrow to ever admit both an insert and a sample
     /// (deadlock); σ must be positive.
-    pub fn new(samples_per_insert: f64, min_size_to_sample: usize, error_buffer: f64) -> Result<Self> {
+    pub fn new(
+        samples_per_insert: f64,
+        min_size_to_sample: usize,
+        error_buffer: f64,
+    ) -> Result<Self> {
         if !(samples_per_insert > 0.0) {
             bail!("samples_per_insert must be > 0, got {samples_per_insert}");
         }

@@ -15,6 +15,7 @@
 //! | [`RateLimiter::Unlimited`] | `reverb.rate_limiters.MinSize` | free-run; min-size gate only |
 //! | [`TrajectoryWriter`] | `reverb.TrajectoryWriter` | actor-side; 1-step / N-step / sequence items |
 //! | [`SamplerHandle`] | `reverb.TFClient.sample` | learner-side; batch draw + priority feedback |
+//! | [`ServiceState`] | `reverb.checkpointers` | versioned + checksummed table snapshots, atomic writes |
 //!
 //! # Shape of a training run
 //!
@@ -36,10 +37,12 @@
 //! legacy hot path with one counter bump per op
 //! (`benches/fig_service.rs` holds it to parity).
 
+pub mod checkpoint;
 pub mod limiter;
 pub mod table;
 pub mod writer;
 
+pub use checkpoint::{ServiceState, TableState, STATE_FILE};
 pub use limiter::{RateLimitSpec, RateLimiter, SampleToInsertRatio};
 pub use table::{SampleOutcome, Table, TableStats, TableStatsSnapshot};
 pub use writer::{ItemKind, TrajectoryWriter, WriterStep};
@@ -174,6 +177,18 @@ impl ReplayService {
             .map(|t| t.stats_line())
             .collect::<Vec<_>>()
             .join(" ")
+    }
+
+    /// Serialize every table (buffers + stats + limiter counters) —
+    /// see [`checkpoint::ServiceState::capture`].
+    pub fn checkpoint(&self) -> Result<ServiceState> {
+        ServiceState::capture(self)
+    }
+
+    /// Restore a previously captured state into this (freshly built)
+    /// service — see [`checkpoint::ServiceState::restore_into`].
+    pub fn restore(&self, state: &ServiceState) -> Result<()> {
+        state.restore_into(self)
     }
 
     /// Snapshot every table's counters (reported in `TrainReport`).

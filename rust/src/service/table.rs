@@ -8,10 +8,12 @@
 //! implementation (prioritized = proportional sampler, uniform = FIFO
 //! ring, both evict FIFO), the limiter is attached here.
 
+use super::checkpoint::TableState;
 use super::limiter::RateLimiter;
 use super::writer::ItemKind;
 use crate::replay::{ReplayBuffer, SampleBatch, Transition};
 use crate::util::rng::Rng;
+use anyhow::{anyhow, bail, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
@@ -43,6 +45,20 @@ pub struct TableStats {
     pub insert_stalls: AtomicUsize,
     /// Denied sample polls (learner-side stall pressure).
     pub sample_stalls: AtomicUsize,
+}
+
+impl TableStats {
+    /// Overwrite every counter from a snapshot (checkpoint restore).
+    /// `inserts` and `sample_batches` carry the rate limiter's ratio
+    /// accounting across the restart.
+    pub fn restore(&self, s: &TableStatsSnapshot) {
+        self.inserts.store(s.inserts, Ordering::Relaxed);
+        self.sample_batches.store(s.sample_batches, Ordering::Relaxed);
+        self.sampled_items.store(s.sampled_items, Ordering::Relaxed);
+        self.priority_updates.store(s.priority_updates, Ordering::Relaxed);
+        self.insert_stalls.store(s.insert_stalls, Ordering::Relaxed);
+        self.sample_stalls.store(s.sample_stalls, Ordering::Relaxed);
+    }
 }
 
 /// Point-in-time copy of [`TableStats`].
@@ -162,6 +178,59 @@ impl Table {
     pub fn update_priorities(&self, indices: &[usize], td_abs: &[f32]) {
         self.buffer.update_priorities(indices, td_abs);
         self.stats.priority_updates.fetch_add(indices.len(), Ordering::Relaxed);
+    }
+
+    /// Serialize this table: buffer contents + stats counters (which
+    /// ARE the limiter's ratio-accounting state). Fails if the wrapped
+    /// buffer implementation does not support checkpointing.
+    pub fn checkpoint(&self) -> Result<TableState> {
+        let buffer = self.buffer.snapshot_state().ok_or_else(|| {
+            anyhow!(
+                "table `{}`: buffer `{}` does not support checkpointing",
+                self.name,
+                self.buffer.name()
+            )
+        })?;
+        Ok(TableState {
+            name: self.name.clone(),
+            kind_tag: self.kind.tag(),
+            stats: self.stats_snapshot(),
+            buffer,
+        })
+    }
+
+    /// Check that `state` can be restored into this table without
+    /// mutating anything (name, item kind, buffer impl + geometry,
+    /// per-shard consistency).
+    pub fn validate_restore(&self, state: &TableState) -> Result<()> {
+        if state.name != self.name {
+            bail!("state for table `{}` offered to table `{}`", state.name, self.name);
+        }
+        if state.kind_tag != self.kind.tag() {
+            bail!(
+                "table `{}`: state stores `{}` items, this table stores `{}`",
+                self.name,
+                state.kind_tag,
+                self.kind.tag()
+            );
+        }
+        self.buffer.validate_state(&state.buffer)
+    }
+
+    /// Restore a validated state: buffer contents first, then the stats
+    /// counters so the rate limiter resumes with the exact snapshot
+    /// accounting (no post-restart stall or burst).
+    pub fn restore(&self, state: &TableState) -> Result<()> {
+        self.validate_restore(state)?;
+        self.apply_restore(state)
+    }
+
+    /// Apply without re-running the cross-table validation (the service
+    /// restore path validates every table before applying any).
+    pub(crate) fn apply_restore(&self, state: &TableState) -> Result<()> {
+        self.buffer.restore_state(&state.buffer)?;
+        self.stats.restore(&state.stats);
+        Ok(())
     }
 
     pub fn stats_snapshot(&self) -> TableStatsSnapshot {

@@ -71,6 +71,18 @@ impl ItemKind {
         bail!("unknown table kind `{s}` (expected 1step | nstep:N | seq:L)")
     }
 
+    /// Canonical spec tag (`1step`, `nstep:N`, `seq:L`) — what
+    /// [`Self::parse`] accepts, minus γ (which is run configuration,
+    /// not table identity). Used by checkpoint restore to verify a
+    /// state file is being loaded into a table of the same shape.
+    pub fn tag(&self) -> String {
+        match *self {
+            ItemKind::OneStep => "1step".to_string(),
+            ItemKind::NStep { n, .. } => format!("nstep:{n}"),
+            ItemKind::Sequence { len } => format!("seq:{len}"),
+        }
+    }
+
     /// How many steps one item spans (the writer's retention window).
     pub fn span(&self) -> usize {
         match *self {
@@ -309,6 +321,18 @@ mod tests {
             reward,
             done,
             truncated,
+        }
+    }
+
+    #[test]
+    fn item_kind_tag_roundtrips_through_parse() {
+        for kind in [
+            ItemKind::OneStep,
+            ItemKind::NStep { n: 3, gamma: 0.9 },
+            ItemKind::Sequence { len: 8 },
+        ] {
+            let reparsed = ItemKind::parse(&kind.tag(), 0.9).unwrap();
+            assert_eq!(reparsed, kind);
         }
     }
 

@@ -1,0 +1,291 @@
+//! Shared on-disk blob format for every PAL checkpoint file.
+//!
+//! One file = `magic (8 bytes) + payload + crc32(payload)`. The magic
+//! identifies the file *kind* (weights vs replay state); versioning of
+//! the payload layout is the payload's own first field, so a bumped
+//! format is reported as a version mismatch rather than "not a
+//! checkpoint". Writes go through a temp file + rename so a crash
+//! mid-write can never leave a half-written file under the final name —
+//! readers either see the previous complete blob or the new one.
+//!
+//! [`ByteWriter`] / [`ByteReader`] are the little-endian encode/decode
+//! cursors used on top of the payload: every read is bounds-checked and
+//! fails with a descriptive error naming the field, so corrupt or
+//! truncated payloads surface as clean `Err`s, never panics.
+
+use anyhow::{bail, Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+/// Table-free CRC-32 (IEEE), enough for corruption detection.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+/// Write `magic + payload + crc` atomically: the bytes land in
+/// `<path>.tmp` first and are renamed into place only after a full
+/// flush, so `path` always holds a complete blob.
+pub fn write_blob(path: impl AsRef<Path>, magic: &[u8; 8], payload: &[u8]) -> Result<()> {
+    let path = path.as_ref();
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(magic)?;
+        f.write_all(payload)?;
+        f.write_all(&crc32(payload).to_le_bytes())?;
+        f.sync_all()
+            .with_context(|| format!("flushing {}", tmp.display()))?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} into place", tmp.display()))?;
+    Ok(())
+}
+
+/// Read a blob back, validating length, magic and checksum. Returns the
+/// payload bytes.
+pub fn read_blob(path: impl AsRef<Path>, magic: &[u8; 8]) -> Result<Vec<u8>> {
+    let path = path.as_ref();
+    let bytes = std::fs::read(path).with_context(|| format!("opening {}", path.display()))?;
+    if bytes.len() < magic.len() + 4 {
+        bail!(
+            "{}: {} bytes is too short to be a PAL blob",
+            path.display(),
+            bytes.len()
+        );
+    }
+    if &bytes[..magic.len()] != magic {
+        bail!(
+            "{}: bad magic (want `{}`)",
+            path.display(),
+            String::from_utf8_lossy(magic)
+        );
+    }
+    let payload = &bytes[magic.len()..bytes.len() - 4];
+    let stored = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
+    if crc32(payload) != stored {
+        bail!("{}: corrupted (crc mismatch)", path.display());
+    }
+    Ok(payload.to_vec())
+}
+
+/// Little-endian payload encoder.
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Length-prefixed UTF-8 string (u32 length).
+    pub fn str_(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Length-prefixed f32 slice (u64 length).
+    pub fn f32s(&mut self, v: &[f32]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Little-endian payload decoder; every read is bounds-checked and
+/// errors name the field being read.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!(
+                "truncated payload: wanted {n} bytes for `{what}` at offset {}, only {} left",
+                self.pos,
+                self.buf.len() - self.pos
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    pub fn u32(&mut self, what: &str) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self, what: &str) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self, what: &str) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    pub fn str_(&mut self, what: &str) -> Result<String> {
+        let n = self.u32(what)? as usize;
+        let bytes = self.take(n, what)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| anyhow::anyhow!("`{what}` is not valid UTF-8"))
+    }
+
+    pub fn f32s(&mut self, what: &str) -> Result<Vec<f32>> {
+        let n = self.u64(what)? as usize;
+        // Guard the allocation against a corrupted length before trusting it.
+        let fits = match n.checked_mul(4).and_then(|b| self.pos.checked_add(b)) {
+            Some(end) => end <= self.buf.len(),
+            None => false,
+        };
+        if !fits {
+            bail!(
+                "truncated payload: `{what}` claims {n} f32s but only {} bytes remain",
+                self.buf.len() - self.pos
+            );
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(f32::from_le_bytes(self.take(4, what)?.try_into().unwrap()));
+        }
+        Ok(out)
+    }
+
+    /// Error if any bytes remain unread (catches layout drift).
+    pub fn expect_end(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!(
+                "{} trailing bytes after the last field (format drift or corruption)",
+                self.buf.len() - self.pos
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writer_reader_roundtrip() {
+        let mut w = ByteWriter::new();
+        w.u8(7);
+        w.u32(0xDEAD_BEEF);
+        w.u64(1 << 40);
+        w.f32(-2.5);
+        w.str_("hello");
+        w.f32s(&[1.0, 2.0, 3.0]);
+        let bytes = w.finish();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.u8("a").unwrap(), 7);
+        assert_eq!(r.u32("b").unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64("c").unwrap(), 1 << 40);
+        assert_eq!(r.f32("d").unwrap(), -2.5);
+        assert_eq!(r.str_("e").unwrap(), "hello");
+        assert_eq!(r.f32s("f").unwrap(), vec![1.0, 2.0, 3.0]);
+        assert!(r.expect_end().is_ok());
+    }
+
+    #[test]
+    fn reader_rejects_truncation_with_field_name() {
+        let mut w = ByteWriter::new();
+        w.u32(5);
+        let bytes = w.finish();
+        let mut r = ByteReader::new(&bytes);
+        let err = r.u64("cursor").unwrap_err().to_string();
+        assert!(err.contains("cursor"), "{err}");
+    }
+
+    #[test]
+    fn reader_rejects_bogus_slice_length() {
+        let mut w = ByteWriter::new();
+        w.u64(u64::MAX); // claims 2^64 f32s
+        let bytes = w.finish();
+        let mut r = ByteReader::new(&bytes);
+        assert!(r.f32s("priorities").is_err());
+    }
+
+    #[test]
+    fn reader_flags_trailing_bytes() {
+        let bytes = vec![0u8; 4];
+        let mut r = ByteReader::new(&bytes);
+        r.u8("x").unwrap();
+        assert!(r.expect_end().is_err());
+    }
+
+    #[test]
+    fn blob_roundtrip_and_rejections() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("pal_blob_test.bin");
+        write_blob(&path, b"PALTEST1", b"payload bytes").unwrap();
+        assert_eq!(read_blob(&path, b"PALTEST1").unwrap(), b"payload bytes");
+        // Wrong magic.
+        assert!(read_blob(&path, b"PALOTHER").is_err());
+        // Flipped payload byte -> crc mismatch.
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[10] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(read_blob(&path, b"PALTEST1").is_err());
+        // Too short.
+        std::fs::write(&path, b"PAL").unwrap();
+        assert!(read_blob(&path, b"PALTEST1").is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn write_leaves_no_tmp_behind() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("pal_blob_atomic.bin");
+        write_blob(&path, b"PALTEST1", &[1, 2, 3]).unwrap();
+        assert!(path.exists());
+        assert!(!path.with_extension("tmp").exists());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn crc_matches_known_vector() {
+        // CRC-32/IEEE of "123456789" is 0xCBF43926.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+}

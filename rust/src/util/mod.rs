@@ -1,6 +1,7 @@
 //! Substrate utilities (offline-friendly stand-ins for common crates).
 pub mod aligned;
 pub mod bench;
+pub mod blob;
 pub mod cli;
 pub mod json;
 pub mod prop;

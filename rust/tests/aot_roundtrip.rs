@@ -5,7 +5,8 @@ use pal_rl::runtime::Runtime;
 
 #[test]
 fn load_and_execute_smoke_hlo() {
-    let path = std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/smoke.hlo.txt"));
+    let path =
+        std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/smoke.hlo.txt"));
     if !path.exists() {
         eprintln!("skipping: smoke artifact missing (run `make artifacts`)");
         return;

@@ -1,0 +1,348 @@
+//! End-to-end checkpoint round-trip: a run's replay service (buffers +
+//! priorities + table stats + limiter counters) and weights are saved
+//! mid-flight, a FRESH service/server is built the way a restarted
+//! process would build it, the state is restored, and the resumed stack
+//! must (a) equal the snapshot exactly and (b) keep training with
+//! identical sampling behavior.
+//!
+//! Corruption coverage: truncated files, flipped bytes, wrong magic,
+//! version bumps and mismatched topologies must all fail cleanly with a
+//! descriptive error and leave the target service untouched — never
+//! panic, never half-load a table.
+
+use pal_rl::coordinator::{
+    build_service, restore_run_state, save_run_state, BufferKind, TrainConfig, WEIGHTS_FILE,
+};
+use pal_rl::params::{AdamConfig, ParameterServer, TargetSync};
+use pal_rl::replay::{
+    PrioritizedConfig, ReplayBuffer, SampleBatch, ShardedPrioritizedReplay, Transition,
+};
+use pal_rl::service::{
+    ItemKind, RateLimitSpec, ReplayService, SampleOutcome, ServiceState, TableSpec, WriterStep,
+    STATE_FILE,
+};
+use pal_rl::util::rng::Rng;
+
+const OBS: usize = 3;
+const ACT: usize = 2;
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("pal_ckpt_rt_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A restart-shaped config: sharded prioritized learner table under a
+/// σ=1 ratio limiter + a free-running N-step auxiliary table.
+fn cfg() -> TrainConfig {
+    let mut cfg = TrainConfig::new("dqn", "CartPole-v1");
+    cfg.buffer = BufferKind::PalKary;
+    cfg.buffer_capacity = 512;
+    cfg.shards = 4;
+    cfg.warmup_steps = 32;
+    cfg.rate_limit = RateLimitSpec::SamplesPerInsert(1.0);
+    cfg.tables = vec![
+        TableSpec { name: "replay".into(), kind: ItemKind::OneStep, capacity: None },
+        TableSpec {
+            name: "aux".into(),
+            kind: ItemKind::NStep { n: 3, gamma: 0.99 },
+            capacity: Some(256),
+        },
+    ];
+    cfg
+}
+
+fn svc() -> ReplayService {
+    build_service(&cfg(), OBS, ACT).unwrap()
+}
+
+fn server(init: f32) -> ParameterServer {
+    ParameterServer::new(vec![init; 8], AdamConfig::default(), TargetSync::None, 1)
+}
+
+/// Drive a mini training run: writer items + rate-limited sampling +
+/// priority feedback.
+fn drive(service: &ReplayService, steps: usize, seed: u64) {
+    let mut rng = Rng::new(seed);
+    let mut out = SampleBatch::default();
+    let mut writer = service.writer(0);
+    let sampler = service.default_sampler();
+    for i in 0..steps {
+        writer.append(WriterStep {
+            obs: vec![i as f32; OBS],
+            action: vec![0.5; ACT],
+            next_obs: vec![i as f32 + 1.0; OBS],
+            reward: 1.0,
+            done: i % 25 == 24,
+            truncated: false,
+        });
+        if i % 2 == 1 && sampler.try_sample(8, &mut rng, &mut out) == SampleOutcome::Sampled {
+            let idx = out.indices.clone();
+            let tds: Vec<f32> = idx.iter().map(|_| rng.f32() * 3.0).collect();
+            sampler.update_priorities(&idx, &tds);
+        }
+    }
+}
+
+#[test]
+fn killed_run_resumes_with_snapshot_equal_state() {
+    let dir = tmpdir("resume");
+    // "Run" 1: train a while, snapshot, then die (drop everything).
+    {
+        let service = svc();
+        let server = server(0.5);
+        server.push_gradient(0, 8, &[0.1; 8]);
+        server.push_gradient(0, 8, &[0.1; 8]);
+        drive(&service, 300, 7);
+        save_run_state(&dir, &server, &service).unwrap();
+    }
+    // "Run" 2: a fresh process rebuilds the same config and resumes.
+    let state = ServiceState::load(dir.join(STATE_FILE)).unwrap();
+    let service = svc();
+    let fresh = server(0.0);
+    restore_run_state(&dir, &fresh, &service).unwrap();
+
+    assert_eq!(fresh.opt_steps(), 2, "optimizer steps must survive");
+    for t in service.tables() {
+        let ts = state.table(t.name()).unwrap();
+        // Element count.
+        assert_eq!(t.len(), ts.buffer.len(), "{}", t.name());
+        // Limiter counters (= samples_per_insert accounting).
+        assert_eq!(t.stats_snapshot(), ts.stats, "{}", t.name());
+    }
+    // Total priority mass: the re-captured state must match the file.
+    let recap = ServiceState::capture(&service).unwrap();
+    for ts in &state.tables {
+        let got = recap.table(&ts.name).unwrap().buffer.total_priority();
+        let want = ts.buffer.total_priority();
+        assert!(
+            (got - want).abs() <= want.max(1.0) * 1e-4,
+            "{}: priority mass {got} vs {want}",
+            ts.name
+        );
+    }
+    // Full state equality (rows, priorities, cursors, counters).
+    assert_eq!(recap, state);
+
+    // The resumed run keeps training and the ratio bound holds across
+    // the restart: batches ≤ σ·inserts with σ = 1.
+    drive(&service, 100, 8);
+    let s = service.default_table().stats_snapshot();
+    let before = state.table("replay").unwrap().stats;
+    assert!(s.inserts > before.inserts);
+    assert!(s.sample_batches >= before.sample_batches);
+    assert!(s.sample_batches <= s.inserts, "{} > {}", s.sample_batches, s.inserts);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn restored_sharded_buffer_samples_identically() {
+    let mk = || {
+        ShardedPrioritizedReplay::new(PrioritizedConfig {
+            capacity: 256,
+            obs_dim: 2,
+            act_dim: 1,
+            fanout: 16,
+            alpha: 0.6,
+            beta: 0.4,
+            lazy_writing: true,
+            shards: 4,
+        })
+    };
+    let original = mk();
+    let mut rng = Rng::new(3);
+    for i in 0..200 {
+        original.insert_from(i % 5, &Transition {
+            obs: vec![i as f32, -(i as f32)],
+            action: vec![0.1],
+            next_obs: vec![i as f32 + 1.0, 0.0],
+            reward: i as f32,
+            done: false,
+        });
+    }
+    // Vary priorities the way a learner does: feed TDs back for
+    // sampled (hence occupied) indices.
+    let mut out = SampleBatch::default();
+    for _ in 0..10 {
+        assert!(original.sample(32, &mut rng, &mut out));
+        let idx = out.indices.clone();
+        let tds: Vec<f32> = idx.iter().map(|_| rng.f32() * 4.0).collect();
+        original.update_priorities(&idx, &tds);
+    }
+
+    let state = original.snapshot_state().unwrap();
+    let restored = mk();
+    restored.restore_state(&state).unwrap();
+
+    // Put the live tree in the same canonical (rebuilt) shape restore
+    // produces, then identical seeds must draw identical batches.
+    original.rebuild_trees();
+    let mut rng_a = Rng::new(42);
+    let mut rng_b = Rng::new(42);
+    let mut out_a = SampleBatch::default();
+    let mut out_b = SampleBatch::default();
+    for round in 0..20 {
+        assert!(original.sample(16, &mut rng_a, &mut out_a));
+        assert!(restored.sample(16, &mut rng_b, &mut out_b));
+        assert_eq!(out_a.indices, out_b.indices, "round {round}");
+        assert_eq!(out_a.priorities, out_b.priorities, "round {round}");
+        assert_eq!(out_a.is_weights, out_b.is_weights, "round {round}");
+        assert_eq!(out_a.obs, out_b.obs, "round {round}");
+        assert_eq!(out_a.reward, out_b.reward, "round {round}");
+    }
+}
+
+#[test]
+fn corrupt_and_truncated_state_files_fail_cleanly() {
+    let dir = tmpdir("corrupt");
+    let service = svc();
+    drive(&service, 120, 5);
+    let server0 = server(1.0);
+    save_run_state(&dir, &server0, &service).unwrap();
+    let path = dir.join(STATE_FILE);
+    let good = std::fs::read(&path).unwrap();
+
+    // Flipped byte anywhere in the payload -> crc mismatch.
+    for frac in [0.3, 0.6, 0.9] {
+        let mut bad = good.clone();
+        let at = (bad.len() as f64 * frac) as usize;
+        bad[at] ^= 0xA5;
+        std::fs::write(&path, &bad).unwrap();
+        let err = ServiceState::load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("crc") || format!("{err:#}").contains("magic"));
+    }
+
+    // Truncation at various points -> clean error, no panic.
+    for keep in [0usize, 5, 11, 40, good.len() - 5] {
+        std::fs::write(&path, &good[..keep]).unwrap();
+        assert!(ServiceState::load(&path).is_err(), "truncated at {keep}");
+    }
+
+    // Garbage with the right length -> magic error.
+    std::fs::write(&path, vec![0x42u8; good.len()]).unwrap();
+    assert!(ServiceState::load(&path).is_err());
+
+    // A failed load never touches a service: restore_run_state against
+    // the corrupt file leaves the fresh service and server untouched.
+    let fresh = svc();
+    let fresh_server = server(0.0);
+    assert!(restore_run_state(&dir, &fresh_server, &fresh).is_err());
+    assert_eq!(fresh.total_len(), 0);
+    assert_eq!(fresh_server.opt_steps(), 0);
+    assert_eq!(fresh_server.online_copy(), vec![0.0; 8]);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn version_bump_is_a_descriptive_error_not_garbage() {
+    let dir = tmpdir("version");
+    let service = svc();
+    drive(&service, 60, 6);
+    let state = ServiceState::capture(&service).unwrap();
+    let mut payload = state.encode();
+    payload[0] = 2; // future format version
+    pal_rl::util::blob::write_blob(
+        dir.join(STATE_FILE),
+        pal_rl::service::checkpoint::STATE_MAGIC,
+        &payload,
+    )
+    .unwrap();
+    let err = ServiceState::load(dir.join(STATE_FILE)).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("version") && msg.contains("v2"), "{msg}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn mismatched_topology_cannot_half_load() {
+    let dir = tmpdir("topo");
+    let service = svc();
+    drive(&service, 120, 9);
+    let server0 = server(1.0);
+    save_run_state(&dir, &server0, &service).unwrap();
+
+    // A run with different table shapes must refuse the whole state —
+    // including the table that WOULD have matched.
+    let mut other_cfg = cfg();
+    other_cfg.tables[1].kind = ItemKind::Sequence { len: 4 };
+    let other = build_service(&other_cfg, OBS, ACT).unwrap();
+    let other_server = server(0.0);
+    assert!(restore_run_state(&dir, &other_server, &other).is_err());
+    assert_eq!(other.total_len(), 0, "no table may be half-loaded");
+    assert_eq!(other_server.opt_steps(), 0);
+
+    // Different shard count: geometry mismatch is rejected too.
+    let mut sharded_cfg = cfg();
+    sharded_cfg.shards = 8;
+    let resharded = build_service(&sharded_cfg, OBS, ACT).unwrap();
+    assert!(restore_run_state(&dir, &server(0.0), &resharded).is_err());
+    assert_eq!(resharded.total_len(), 0);
+
+    // Weights-dim mismatch: service must stay untouched as well.
+    let small_server = ParameterServer::new(
+        vec![0.0; 4],
+        AdamConfig::default(),
+        TargetSync::None,
+        1,
+    );
+    let fresh = svc();
+    assert!(restore_run_state(&dir, &small_server, &fresh).is_err());
+    assert_eq!(fresh.total_len(), 0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn periodic_snapshot_files_are_atomic_and_complete() {
+    let dir = tmpdir("atomic");
+    let service = svc();
+    let server0 = server(0.25);
+    // Overwrite the snapshot repeatedly while traffic flows — every
+    // on-disk version must load cleanly (rename is atomic) and no .tmp
+    // files may linger.
+    for round in 0..5 {
+        drive(&service, 60, round as u64);
+        save_run_state(&dir, &server0, &service).unwrap();
+        let loaded = ServiceState::load(dir.join(STATE_FILE)).unwrap();
+        assert_eq!(loaded.total_len(), service.total_len(), "round {round}");
+        assert!(!dir.join("replay_state.tmp").exists());
+        assert!(!dir.join("weights.tmp").exists());
+        assert!(dir.join(WEIGHTS_FILE).exists());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Full `train()` kill-and-resume, exercising the real coordinator
+/// path. Requires compiled artifacts; skips gracefully without them.
+#[test]
+fn train_save_restore_roundtrip_with_artifacts() {
+    let have = std::path::Path::new(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/artifacts/manifest.json"
+    ))
+    .exists();
+    if !have {
+        return;
+    }
+    let dir = tmpdir("train");
+    let mut cfg = TrainConfig::new("dqn", "CartPole-v1");
+    cfg.artifact_dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").into();
+    cfg.total_env_steps = 400;
+    cfg.warmup_steps = 64;
+    cfg.buffer_capacity = 4_096;
+    cfg.seed = 3;
+    cfg.save_state = Some(dir.clone());
+    let r1 = pal_rl::coordinator::train(&cfg).expect("first run failed");
+
+    let state = ServiceState::load(dir.join(STATE_FILE)).unwrap();
+    let (name, stats) = &r1.table_stats[0];
+    assert_eq!(&state.tables[0].name, name);
+    assert_eq!(&state.tables[0].stats, stats, "snapshot must be the final counters");
+
+    // Resume: the second run starts from the first run's buffers.
+    cfg.save_state = None;
+    cfg.restore_state = Some(dir.clone());
+    let r2 = pal_rl::coordinator::train(&cfg).expect("resumed run failed");
+    let (_, stats2) = &r2.table_stats[0];
+    assert!(stats2.inserts > stats.inserts, "resumed run must keep the old items");
+    std::fs::remove_dir_all(&dir).ok();
+}

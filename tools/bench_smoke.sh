@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# CI bench smoke: run EVERY fig* bench in its `--test` configuration so
+# a bench that stops compiling or starts crashing fails the build
+# instead of silently rotting. The list is discovered from the tree, so
+# new fig* benches are swept automatically.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+status=0
+for src in rust/benches/fig*.rs; do
+    bench="$(basename "$src" .rs)"
+    echo "::group::bench $bench --test"
+    if ! cargo bench --bench "$bench" -- --test; then
+        echo "FAILED: $bench"
+        status=1
+    fi
+    echo "::endgroup::"
+done
+exit "$status"

@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# CI checkpoint round-trip smoke: a short synthetic train run saves its
+# replay-service state (`--phase collect`), then a SECOND process — the
+# "restarted" run — rebuilds the service, restores (`--phase resume`),
+# and fails unless buffer sizes, total priority mass and rate-limiter
+# counters all equal the snapshotted values and the resumed service
+# keeps accepting traffic under the ratio bound.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+dir="${1:-$(mktemp -d)}"
+cargo run --release --bin pal -- state-smoke --dir "$dir" --phase collect
+cargo run --release --bin pal -- state-smoke --dir "$dir" --phase resume
+echo "checkpoint round-trip smoke OK ($dir)"
