@@ -12,7 +12,7 @@ use crate::agent::Agent;
 use crate::env::Env;
 use crate::metrics::Metrics;
 use crate::params::ParameterServer;
-use crate::service::{TrajectoryWriter, WriterStep};
+use crate::service::{ExperienceWriter, WriterStep};
 use crate::util::rng::Rng;
 use anyhow::Result;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -59,11 +59,13 @@ impl Control {
 
 /// Actor main loop. Runs until the step budget is exhausted or stop is
 /// requested. `agent` and `env` are thread-local (PJRT objects inside);
-/// `writer` is this actor's private handle onto the shared service.
+/// `writer` is this actor's private handle onto the shared service —
+/// in-process ([`crate::service::TrajectoryWriter`]) or remote
+/// ([`crate::remote::RemoteWriter`]); the loop cannot tell which.
 pub fn run_actor(
     agent: &mut Agent,
     env: &mut dyn Env,
-    writer: &mut TrajectoryWriter,
+    writer: &mut dyn ExperienceWriter,
     server: &ParameterServer,
     metrics: &Metrics,
     ctl: &Control,
@@ -80,7 +82,7 @@ pub fn run_actor(
         }
         // Rate-limited collection: wait while any target table's limiter
         // says collection is too far ahead of consumption.
-        if writer.throttled() {
+        if writer.throttled()? {
             std::thread::sleep(std::time::Duration::from_micros(100));
             continue;
         }
@@ -109,7 +111,7 @@ pub fn run_actor(
             reward: step.reward,
             done: step.done,
             truncated: step.truncated,
-        });
+        })?;
         metrics.inc_env_step();
 
         if step.done || step.truncated {

@@ -14,14 +14,15 @@ use crate::env::make_env;
 use crate::learner::run_learner;
 use crate::metrics::{CurvePoint, Metrics};
 use crate::params::{AdamConfig, Checkpoint, ParameterServer, TargetSync};
+use crate::remote::{RemoteClient, RemoteSampler, RemoteWriter, TableInfo};
 use crate::replay::{
     GlobalLockReplay, NaiveScanReplay, PrioritizedConfig, PrioritizedReplay,
     PyBindBinaryReplay, ReplayBuffer, ShardedPrioritizedReplay, UniformReplay,
 };
 use crate::runtime::{Manifest, Runtime};
 use crate::service::{
-    ItemKind, RateLimitSpec, RateLimiter, ReplayService, ServiceState, Table, TableSpec,
-    TableStatsSnapshot, STATE_FILE,
+    ExperienceSampler, ExperienceWriter, ItemKind, RateLimitSpec, RateLimiter, ReplayService,
+    ServiceState, Table, TableSpec, TableStatsSnapshot, STATE_FILE,
 };
 use anyhow::{anyhow, bail, Context, Result};
 use std::sync::atomic::Ordering;
@@ -94,6 +95,12 @@ pub struct TrainConfig {
     /// Explicit table layout (`--tables`); empty = one table named
     /// `replay` whose item kind follows `n_step`.
     pub tables: Vec<TableSpec>,
+    /// Remote replay front-end (`--remote`): the socket path of an
+    /// external `pal serve` process. When set, this run builds NO local
+    /// tables — actors hold [`RemoteWriter`]s, learners
+    /// [`RemoteSampler`]s, and the buffer/table/limiter flags belong to
+    /// the serving process.
+    pub remote: Option<std::path::PathBuf>,
     /// Rate-limiter selection for every table (`--rate-limit`).
     pub rate_limit: RateLimitSpec,
     /// Run-state directory (`--save-state`): weights + replay-service
@@ -140,6 +147,7 @@ impl TrainConfig {
             n_step: 1,
             gamma_nstep: 0.99,
             tables: Vec::new(),
+            remote: None,
             rate_limit: RateLimitSpec::Legacy,
             save_state: None,
             restore_state: None,
@@ -167,7 +175,13 @@ impl TrainConfig {
         } else {
             ItemKind::OneStep
         };
-        vec![TableSpec { name: "replay".to_string(), kind, capacity: None }]
+        vec![TableSpec {
+            name: "replay".to_string(),
+            kind,
+            capacity: None,
+            alpha: None,
+            beta: None,
+        }]
     }
 }
 
@@ -192,21 +206,23 @@ pub struct TrainReport {
     pub table_stats: Vec<(String, TableStatsSnapshot)>,
 }
 
-/// Build one replay buffer with an explicit capacity (tables may
-/// override the run default).
+/// Build one replay buffer with explicit capacity and PER exponents
+/// (tables may override the run defaults).
 fn make_buffer_with(
     cfg: &TrainConfig,
     capacity: usize,
     obs_dim: usize,
     act_dim: usize,
+    alpha: f32,
+    beta: f32,
 ) -> Arc<dyn ReplayBuffer> {
     let prio_cfg = PrioritizedConfig {
         capacity,
         obs_dim,
         act_dim,
         fanout: cfg.fanout,
-        alpha: cfg.alpha,
-        beta: cfg.beta,
+        alpha,
+        beta,
         lazy_writing: true,
         shards: cfg.shards.max(1),
     };
@@ -220,30 +236,30 @@ fn make_buffer_with(
             capacity,
             obs_dim,
             act_dim,
-            cfg.alpha,
-            cfg.beta,
+            alpha,
+            beta,
         )),
         BufferKind::Uniform => Arc::new(UniformReplay::new(capacity, obs_dim, act_dim)),
         BufferKind::EmulatedPython => Arc::new(NaiveScanReplay::new(
             capacity,
             obs_dim,
             act_dim,
-            cfg.alpha,
-            cfg.beta,
+            alpha,
+            beta,
         )),
         BufferKind::EmulatedBinding => Arc::new(PyBindBinaryReplay::new(
             capacity,
             obs_dim,
             act_dim,
-            cfg.alpha,
-            cfg.beta,
+            alpha,
+            beta,
         )),
     }
 }
 
 /// Build the configured replay buffer with the run-default capacity.
 pub fn make_buffer(cfg: &TrainConfig, obs_dim: usize, act_dim: usize) -> Arc<dyn ReplayBuffer> {
-    make_buffer_with(cfg, cfg.buffer_capacity, obs_dim, act_dim)
+    make_buffer_with(cfg, cfg.buffer_capacity, obs_dim, act_dim, cfg.alpha, cfg.beta)
 }
 
 /// Build the run's replay service: one table per spec, each wrapping a
@@ -263,7 +279,11 @@ pub fn build_service(cfg: &TrainConfig, obs_dim: usize, act_dim: usize) -> Resul
     for (i, spec) in specs.iter().enumerate() {
         let mult = spec.kind.dim_multiplier();
         let capacity = spec.capacity.unwrap_or(cfg.buffer_capacity);
-        let buffer = make_buffer_with(cfg, capacity, obs_dim * mult, act_dim * mult);
+        // Per-table PER exponents: a spec's `@alpha=..,beta=..`
+        // overrides the run's globals for that table only.
+        let alpha = spec.alpha.unwrap_or(cfg.alpha);
+        let beta = spec.beta.unwrap_or(cfg.beta);
+        let buffer = make_buffer_with(cfg, capacity, obs_dim * mult, act_dim * mult, alpha, beta);
         // Only the learner-sampled (first) table gets the ratio limiter:
         // the ratio couples inserts to THIS run's sampling, and writers
         // block while ANY table denies inserts — a ratio limiter on an
@@ -324,6 +344,168 @@ pub fn restore_run_state(
     Ok(())
 }
 
+/// One `Stats` RPC against a remote replay server.
+fn remote_stats(path: &std::path::Path) -> Result<Vec<TableInfo>> {
+    RemoteClient::connect(path)?.stats()
+}
+
+/// The replay front-end of one training run: either the in-process
+/// [`ReplayService`] this process built, or the socket of an external
+/// `pal serve` process (`--remote`). Everything the trainer needs —
+/// writer/sampler handles, stats, checkpoint/restore — goes through
+/// here, so `train()` is transport-agnostic.
+pub enum ReplayFront {
+    Local(Arc<ReplayService>),
+    Remote(std::path::PathBuf),
+}
+
+impl ReplayFront {
+    /// Build from a run config (local tables, or a remote socket).
+    pub fn from_config(cfg: &TrainConfig, obs_dim: usize, act_dim: usize) -> Result<Self> {
+        match &cfg.remote {
+            Some(path) => Ok(ReplayFront::Remote(path.clone())),
+            None => Ok(ReplayFront::Local(Arc::new(build_service(cfg, obs_dim, act_dim)?))),
+        }
+    }
+
+    /// The wrapped in-process service, if local.
+    pub fn service(&self) -> Option<&Arc<ReplayService>> {
+        match self {
+            ReplayFront::Local(s) => Some(s),
+            ReplayFront::Remote(_) => None,
+        }
+    }
+
+    /// A writer handle for one actor. Remote writers each own a
+    /// connection, so parallel actors do not serialize on one stream.
+    pub fn writer(&self, actor_id: usize) -> Result<Box<dyn ExperienceWriter>> {
+        Ok(match self {
+            ReplayFront::Local(s) => Box::new(s.writer(actor_id)),
+            ReplayFront::Remote(path) => Box::new(RemoteWriter::connect(path, actor_id as u64)?),
+        })
+    }
+
+    /// A sampler handle on the default (first) table. `seed` seeds the
+    /// remote connection's server-side sampling RNG; the in-process
+    /// sampler uses the learner's own RNG instead.
+    pub fn sampler(&self, seed: u64) -> Result<Box<dyn ExperienceSampler>> {
+        Ok(match self {
+            ReplayFront::Local(s) => Box::new(s.default_sampler()),
+            ReplayFront::Remote(path) => Box::new(RemoteSampler::connect_default(path, seed)?),
+        })
+    }
+
+    /// Total items across all tables (0 if the remote server is
+    /// unreachable — monitoring must not kill a run).
+    pub fn total_len(&self) -> usize {
+        match self {
+            ReplayFront::Local(s) => s.total_len(),
+            ReplayFront::Remote(path) => remote_stats(path)
+                .map(|ts| ts.iter().map(|t| t.len as usize).sum())
+                .unwrap_or(0),
+        }
+    }
+
+    /// Per-table stats for the monitor's progress line.
+    pub fn stats_line(&self) -> String {
+        match self {
+            ReplayFront::Local(s) => s.stats_line(),
+            ReplayFront::Remote(path) => match remote_stats(path) {
+                Ok(tables) => tables
+                    .iter()
+                    .map(|t| {
+                        format!(
+                            "{}[n={} in={} out={} stall i/s={}/{}]",
+                            t.name,
+                            t.len,
+                            t.stats.inserts,
+                            t.stats.sample_batches,
+                            t.stats.insert_stalls,
+                            t.stats.sample_stalls,
+                        )
+                    })
+                    .collect::<Vec<_>>()
+                    .join(" "),
+                Err(e) => format!("remote[{}: {e}]", path.display()),
+            },
+        }
+    }
+
+    /// Snapshot every table's counters (reported in `TrainReport`).
+    /// Unreachable remote → empty (with a warning), not a dead run.
+    pub fn stats_snapshots(&self) -> Vec<(String, TableStatsSnapshot)> {
+        match self {
+            ReplayFront::Local(s) => s.stats_snapshots(),
+            ReplayFront::Remote(path) => match remote_stats(path) {
+                Ok(tables) => tables.into_iter().map(|t| (t.name, t.stats)).collect(),
+                Err(e) => {
+                    eprintln!("[pal] WARNING: remote stats unavailable: {e}");
+                    Vec::new()
+                }
+            },
+        }
+    }
+
+    /// Cheap fail-fast probe for `--save-state`: locally, a capture of
+    /// the still-empty service proves the buffer kind can snapshot;
+    /// remotely, a `Stats` RPC proves the server is reachable WITHOUT
+    /// downloading its (possibly huge) existing state just to throw it
+    /// away.
+    pub fn probe_save_state(&self) -> Result<()> {
+        match self {
+            ReplayFront::Local(s) => ServiceState::capture(s).map(|_| ()),
+            ReplayFront::Remote(path) => remote_stats(path).map(|_| ()),
+        }
+    }
+
+    /// Serialize every table — locally, or via the `Checkpoint` RPC.
+    pub fn capture_state(&self) -> Result<ServiceState> {
+        match self {
+            ReplayFront::Local(s) => ServiceState::capture(s),
+            ReplayFront::Remote(path) => RemoteClient::connect(path)?.checkpoint_state(),
+        }
+    }
+
+    /// Restore a captured state — locally (two-phase validate/apply),
+    /// or via the `Restore` RPC (the server validates before mutating).
+    pub fn restore_state_snapshot(&self, state: &ServiceState) -> Result<()> {
+        match self {
+            ReplayFront::Local(s) => state.restore_into(s),
+            ReplayFront::Remote(path) => RemoteClient::connect(path)?.restore_state(state),
+        }
+    }
+
+    /// Front-aware [`save_run_state`]: weights from the local parameter
+    /// server plus the replay state of whichever side of the socket
+    /// holds the tables (local capture, or the `Checkpoint` RPC), both
+    /// written atomically.
+    pub fn save_run_state(&self, dir: &std::path::Path, server: &ParameterServer) -> Result<()> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating run-state dir {}", dir.display()))?;
+        Checkpoint::from_server(server).save(dir.join(WEIGHTS_FILE))?;
+        self.capture_state()?.save(dir.join(STATE_FILE))?;
+        Ok(())
+    }
+
+    /// Front-aware [`restore_run_state`]. For a remote front the
+    /// process-local weights are restored FIRST: if they fail, the
+    /// long-lived (possibly shared) replay server is untouched; only
+    /// then is the replay state pushed through the `Restore` RPC,
+    /// which the server validates in full before mutating a table.
+    pub fn restore_run_state(&self, dir: &std::path::Path, server: &ParameterServer) -> Result<()> {
+        match self {
+            ReplayFront::Local(s) => restore_run_state(dir, server, s),
+            ReplayFront::Remote(_) => {
+                let ck = Checkpoint::load(dir.join(WEIGHTS_FILE))?;
+                let state = ServiceState::load(dir.join(STATE_FILE))?;
+                server.restore(&ck)?;
+                self.restore_state_snapshot(&state)?;
+                Ok(())
+            }
+        }
+    }
+}
+
 /// Run one full training session. Blocks until the env-step budget is
 /// exhausted (or early-stop). Thread layout: `actors` actor threads +
 /// `learners` learner threads + this monitor thread.
@@ -340,26 +522,27 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         sync,
         cfg.aggregation,
     ));
-    let service = Arc::new(build_service(cfg, info.obs_dim, info.flat_act_dim)?);
+    let front = ReplayFront::from_config(cfg, info.obs_dim, info.flat_act_dim)?;
     if cfg.checkpoint_every_secs > 0.0 && cfg.save_state.is_none() {
         bail!("--checkpoint-every requires --save-state DIR");
     }
     if cfg.save_state.is_some() {
-        // Fail fast on a buffer kind that cannot snapshot (the emulated
-        // plugin buffers): the capture of the still-empty service is
-        // cheap, and erroring here beats training for hours and losing
-        // the run at the final save.
-        ServiceState::capture(&service).context(
-            "--save-state: this run's buffer kind does not support checkpointing",
+        // Fail fast on a front-end that cannot snapshot (the emulated
+        // plugin buffers) or an unreachable remote server: erroring
+        // here beats training for hours and losing the run at the
+        // final save.
+        front.probe_save_state().context(
+            "--save-state: this run's replay front-end cannot be checkpointed",
         )?;
     }
     if let Some(dir) = &cfg.restore_state {
-        restore_run_state(dir, &server, &service)
+        front
+            .restore_run_state(dir, &server)
             .with_context(|| format!("restoring run state from {}", dir.display()))?;
         eprintln!(
             "[pal] resumed from {}: {} replay items, {} optimizer steps",
             dir.display(),
-            service.total_len(),
+            front.total_len(),
             server.opt_steps(),
         );
     }
@@ -372,10 +555,10 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         .collect();
 
     std::thread::scope(|s| -> Result<()> {
+        let front = &front;
         let mut handles = Vec::new();
         for a in 0..cfg.actors {
             let info = info.clone();
-            let service = Arc::clone(&service);
             let server = Arc::clone(&server);
             let metrics = Arc::clone(&metrics);
             let ctl = Arc::clone(&ctl);
@@ -383,17 +566,22 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
             let explore = cfg.exploration;
             let seed = worker_seeds[a];
             handles.push(s.spawn(move || -> Result<()> {
-                let rt = Runtime::cpu()?;
-                let model = rt.load_model(&info)?;
-                let mut agent = Agent::new(model, explore)?;
-                let mut env = make_env(&env_name)
-                    .ok_or_else(|| anyhow!("unknown env {env_name}"))?;
-                let mut rng = crate::util::rng::Rng::new(seed);
-                let mut writer = service.writer(a);
-                let r = run_actor(
-                    &mut agent, env.as_mut(), &mut writer, &server, &metrics, &ctl,
-                    &mut rng,
-                );
+                // Setup errors (missing runtime, unreachable remote
+                // server) must stop the run like loop errors do, not
+                // leave the other workers spinning.
+                let r = (|| -> Result<()> {
+                    let rt = Runtime::cpu()?;
+                    let model = rt.load_model(&info)?;
+                    let mut agent = Agent::new(model, explore)?;
+                    let mut env = make_env(&env_name)
+                        .ok_or_else(|| anyhow!("unknown env {env_name}"))?;
+                    let mut rng = crate::util::rng::Rng::new(seed);
+                    let mut writer = front.writer(a)?;
+                    run_actor(
+                        &mut agent, env.as_mut(), writer.as_mut(), &server, &metrics,
+                        &ctl, &mut rng,
+                    )
+                })();
                 // An actor finishing its budget is normal; an actor
                 // erroring must stop the whole run.
                 if r.is_err() {
@@ -404,21 +592,23 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         }
         for l in 0..cfg.learners {
             let info = info.clone();
-            let service = Arc::clone(&service);
             let server = Arc::clone(&server);
             let metrics = Arc::clone(&metrics);
             let ctl = Arc::clone(&ctl);
             let explore = cfg.exploration;
             let seed = worker_seeds[cfg.actors + l];
             handles.push(s.spawn(move || -> Result<()> {
-                let rt = Runtime::cpu()?;
-                let model = rt.load_model(&info)?;
-                let mut agent = Agent::new(model, explore)?;
-                let mut rng = crate::util::rng::Rng::new(seed);
-                let sampler = service.default_sampler();
-                let r = run_learner(
-                    l, &mut agent, &sampler, &server, &metrics, &ctl, &mut rng,
-                );
+                let r = (|| -> Result<()> {
+                    let rt = Runtime::cpu()?;
+                    let model = rt.load_model(&info)?;
+                    let mut agent = Agent::new(model, explore)?;
+                    let mut rng = crate::util::rng::Rng::new(seed);
+                    let mut sampler = front.sampler(seed)?;
+                    run_learner(
+                        l, &mut agent, sampler.as_mut(), &server, &metrics, &ctl,
+                        &mut rng,
+                    )
+                })();
                 if r.is_err() {
                     ctl.request_stop();
                 }
@@ -437,7 +627,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
             if cfg.log_every_secs > 0.0
                 && last_log.elapsed().as_secs_f64() >= cfg.log_every_secs
             {
-                eprintln!("[pal] {} | {}", metrics.summary(), service.stats_line());
+                eprintln!("[pal] {} | {}", metrics.summary(), front.stats_line());
                 last_log = std::time::Instant::now();
             }
             if cfg.checkpoint_every_secs > 0.0
@@ -449,7 +639,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
                 // complete. A failed write warns but never kills the
                 // run it exists to protect.
                 let dir = cfg.save_state.as_ref().expect("checked above");
-                if let Err(e) = save_run_state(dir, &server, &service) {
+                if let Err(e) = front.save_run_state(dir, &server) {
                     eprintln!("[pal] WARNING: periodic checkpoint failed: {e:#}");
                 }
                 last_ckpt = std::time::Instant::now();
@@ -478,12 +668,13 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     // Final (quiescent) run-state snapshot: all workers have joined, so
     // this one is exact — the file a later `--restore-state` resumes.
     if let Some(dir) = &cfg.save_state {
-        save_run_state(dir, &server, &service)
+        front
+            .save_run_state(dir, &server)
             .with_context(|| format!("saving run state to {}", dir.display()))?;
         eprintln!(
             "[pal] run state saved to {} ({} replay items)",
             dir.display(),
-            service.total_len(),
+            front.total_len(),
         );
     }
 
@@ -504,7 +695,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         env_steps_per_sec: metrics.env_throughput(),
         learn_steps_per_sec: metrics.learn_throughput(),
         reached_target: reached,
-        table_stats: service.stats_snapshots(),
+        table_stats: front.stats_snapshots(),
     })
 }
 
@@ -560,11 +751,19 @@ mod tests {
         let mut cfg = TrainConfig::new("dqn", "CartPole-v1");
         cfg.buffer_capacity = 1_024;
         cfg.tables = vec![
-            TableSpec { name: "replay".into(), kind: ItemKind::OneStep, capacity: None },
+            TableSpec {
+                name: "replay".into(),
+                kind: ItemKind::OneStep,
+                capacity: None,
+                alpha: None,
+                beta: None,
+            },
             TableSpec {
                 name: "traj".into(),
                 kind: ItemKind::Sequence { len: 4 },
                 capacity: Some(512),
+                alpha: None,
+                beta: None,
             },
         ];
         let svc = build_service(&cfg, 4, 2).unwrap();
@@ -580,6 +779,61 @@ mod tests {
         );
         cfg.tables.rotate_right(1); // sequence table first → error
         assert!(build_service(&cfg, 4, 2).is_err());
+    }
+
+    #[test]
+    fn per_table_exponents_override_run_globals() {
+        // Two tables over one stream: the run's α/β plus a per-table
+        // override — both must build, and the override table's
+        // prioritization must actually differ (α=0 samples uniformly,
+        // so repeated priority feedback must not skew it).
+        let mut cfg = TrainConfig::new("dqn", "CartPole-v1");
+        cfg.buffer_capacity = 256;
+        cfg.alpha = 1.0;
+        cfg.beta = 0.4;
+        cfg.warmup_steps = 1;
+        cfg.tables = TableSpec::parse_list(
+            "hot=1step,flat=1step@alpha=0.0,beta=1.0",
+            cfg.gamma_nstep,
+        )
+        .unwrap();
+        let svc = build_service(&cfg, 2, 1).unwrap();
+        let mut w = svc.writer(0);
+        for i in 0..64 {
+            w.append(crate::service::WriterStep {
+                obs: vec![i as f32, 0.0],
+                action: vec![0.0],
+                next_obs: vec![i as f32 + 1.0, 0.0],
+                reward: 0.0,
+                done: false,
+                truncated: false,
+            });
+        }
+        // Blow up one item's priority on both tables; with α=1 the hot
+        // table concentrates on it, with α=0 the flat table must not.
+        for t in svc.tables() {
+            t.update_priorities(&[7], &[1_000.0]);
+        }
+        let mut rng = crate::util::rng::Rng::new(11);
+        let mut out = crate::replay::SampleBatch::default();
+        let mut count_hits = |table: &str, rng: &mut crate::util::rng::Rng| {
+            let mut hits = 0usize;
+            let sampler = svc.sampler(table).unwrap();
+            for _ in 0..64 {
+                assert_eq!(
+                    sampler.try_sample(8, rng, &mut out),
+                    crate::service::SampleOutcome::Sampled
+                );
+                hits += out.indices.iter().filter(|&&i| i == 7).count();
+            }
+            hits
+        };
+        let hot_hits = count_hits("hot", &mut rng);
+        let flat_hits = count_hits("flat", &mut rng);
+        assert!(
+            hot_hits > flat_hits + 50,
+            "α=1 table must concentrate on the boosted item: hot {hot_hits} vs flat {flat_hits}"
+        );
     }
 
     #[test]

@@ -14,18 +14,21 @@ use crate::agent::Agent;
 use crate::metrics::Metrics;
 use crate::params::ParameterServer;
 use crate::replay::SampleBatch;
-use crate::service::{SampleOutcome, SamplerHandle};
+use crate::service::{ExperienceSampler, SampleOutcome};
 use crate::util::rng::Rng;
 use anyhow::Result;
 use std::sync::atomic::Ordering;
 use std::time::Duration;
 
 /// Learner main loop. Pacing (warmup + sample-to-insert ratio) comes
-/// entirely from the sampler's table limiter.
+/// entirely from the sampled table's limiter, whether the table is
+/// in-process ([`crate::service::SamplerHandle`]) or behind a socket
+/// ([`crate::remote::RemoteSampler`]) — a stalled remote sample is a
+/// retriable `WouldStall` frame, polled exactly like a local denial.
 pub fn run_learner(
     learner_id: usize,
     agent: &mut Agent,
-    sampler: &SamplerHandle,
+    sampler: &mut dyn ExperienceSampler,
     server: &ParameterServer,
     metrics: &Metrics,
     ctl: &Control,
@@ -44,7 +47,7 @@ pub fn run_learner(
         if ctl.should_stop() {
             break;
         }
-        match sampler.try_sample(batch_size, rng, &mut batch) {
+        match sampler.try_sample(batch_size, rng, &mut batch)? {
             SampleOutcome::Sampled => {}
             SampleOutcome::Throttled | SampleOutcome::NotEnoughData => {
                 // Collection can no longer catch up once the env-step
@@ -65,7 +68,7 @@ pub fn run_learner(
         }
         metrics.grad_updates.fetch_add(out.updates.len(), Ordering::Relaxed);
         if !out.td_abs.is_empty() {
-            sampler.update_priorities(&batch.indices, &out.td_abs);
+            sampler.update_priorities(&batch.indices, &out.td_abs)?;
         }
         metrics.record_learn(out.loss);
     }

@@ -12,6 +12,10 @@
 //!   named tables, rate limiters owning the sample-to-insert ratio,
 //!   and actor-side N-step / sequence trajectory writers (Reverb's
 //!   server shape, in-process).
+//! * [`remote`] — the socket front-end over that service: a
+//!   Unix-domain-socket `ReplayServer` plus `RemoteWriter` /
+//!   `RemoteSampler` client handles, so actors and learners can run in
+//!   separate processes from the experience server.
 //! * [`coordinator`] — parallel actors + parallel learners + parameter
 //!   server training loop (Fig 7).
 //! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
@@ -29,6 +33,7 @@ pub mod env;
 pub mod learner;
 pub mod metrics;
 pub mod params;
+pub mod remote;
 pub mod replay;
 pub mod runtime;
 pub mod service;

@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   train         run one training session (the paper's Fig 7 pipeline)
+//!   serve         expose a replay service on a Unix socket (`--remote` target)
 //!   dse           design-space exploration: pick actor/learner core split
 //!   buffer-bench  quick replay-buffer micro-benchmark
 //!   envs          list built-in environments
@@ -14,12 +15,16 @@ use pal_rl::coordinator::{
 use pal_rl::dse;
 use pal_rl::env::ENV_NAMES;
 use pal_rl::params::{AdamConfig, ParameterServer, TargetSync};
+use pal_rl::remote::{RemoteClient, RemoteSampler, RemoteWriter, ReplayServer};
+use pal_rl::replay::SampleBatch;
 use pal_rl::runtime::Manifest;
 use pal_rl::service::{
-    ItemKind, RateLimitSpec, ReplayService, SampleOutcome, ServiceState, TableSpec, WriterStep,
-    STATE_FILE,
+    ExperienceSampler, ExperienceWriter, ItemKind, RateLimitSpec, ReplayService, SampleOutcome,
+    ServiceState, TableSpec, WriterStep, STATE_FILE,
 };
 use pal_rl::util::cli::Args;
+use pal_rl::util::rng::Rng;
+use std::sync::Arc;
 
 const TRAIN_FLAGS: &[&str] = &[
     "algo", "env", "artifacts", "actors", "learners", "steps", "warmup",
@@ -27,7 +32,7 @@ const TRAIN_FLAGS: &[&str] = &[
     "beta", "lr", "grad-clip", "aggregation", "seed", "stop-at-reward",
     "log-every", "curve-out", "eps-decay", "action-noise", "save-checkpoint",
     "n-step", "gamma-nstep", "tables", "rate-limit", "save-state",
-    "restore-state", "checkpoint-every",
+    "restore-state", "checkpoint-every", "remote",
 ];
 
 fn usage() -> ! {
@@ -36,9 +41,11 @@ fn usage() -> ! {
 
 USAGE:
   pal train --algo <dqn|ddqn|ddpg|td3|sac> --env <ENV> [options]
+  pal serve --socket PATH [--obs-dim N] [--act-dim N] [table/buffer options]
   pal dse   --algo <A> --env <E> [--cores M] [--update-interval R] [--shards 1,2,4,8,16] [--rate-limit S]
   pal buffer-bench [--capacity N] [--fanout K] [--shards S] [--threads T] [--ops N]
   pal state-smoke --dir DIR --phase <collect|resume> [--items N] [--capacity N] [--shards S]
+  pal remote-smoke --socket PATH [--items N] [--capacity N] [--shards S]
   pal envs
   pal info  [--artifacts DIR]
 
@@ -81,14 +88,62 @@ TRAIN OPTIONS:
   --checkpoint-every S
                       also snapshot the run state every S seconds
                       during training (atomic; requires --save-state)
+  --remote PATH       use an external `pal serve` process at this Unix
+                      socket as the replay front-end: actors and
+                      learners connect as clients, and the table /
+                      buffer / rate-limit flags belong to the server
+
+SERVE OPTIONS (same table/buffer flags as train, plus):
+  --socket PATH       Unix-domain socket to listen on (required)
+  --obs-dim N --act-dim N
+                      transition dims of the served tables (must match
+                      the connecting run's model; default 4 / 2)
+  --restore-state DIR load replay_state.bin from DIR before serving
+  --save-state DIR    write replay_state.bin to DIR on clean shutdown
+                      (a client's Shutdown RPC)
 
   `state-smoke` is the CI durability gate: `--phase collect` drives a
   short synthetic writer/sampler run and saves its state; `--phase
   resume` restores into a fresh service and fails unless buffer sizes,
   priority mass and limiter counters all match the snapshot.
+
+  `remote-smoke` is the CI gate for the socket front-end: against a
+  freshly started `pal serve` it drives a deterministic writer/sampler
+  phase both remotely and in-process and fails unless the two
+  checkpoints are byte-identical, then soaks the server with concurrent
+  writer/sampler clients and verifies exact sample-to-insert accounting
+  over the Stats RPC before asking the server to shut down.
 "
     );
     std::process::exit(2)
+}
+
+/// Apply the flags shared by `train` (local tables) and `serve` (the
+/// same table layout, built in the serving process): buffer kind and
+/// geometry, table specs, warmup and rate limiting.
+fn apply_service_flags(cfg: &mut TrainConfig, a: &Args) -> Result<()> {
+    cfg.warmup_steps = a.parse_or("warmup", cfg.warmup_steps)?;
+    cfg.update_interval = a.parse_or("update-interval", cfg.update_interval)?;
+    cfg.buffer = BufferKind::parse(&a.str_or("buffer", "pal"))?;
+    cfg.buffer_capacity = a.parse_or("capacity", cfg.buffer_capacity)?;
+    cfg.shards = a.parse_or("shards", cfg.shards)?;
+    cfg.fanout = a.parse_or("fanout", cfg.fanout)?;
+    cfg.alpha = a.parse_or("alpha", cfg.alpha)?;
+    cfg.beta = a.parse_or("beta", cfg.beta)?;
+    cfg.n_step = a.parse_or("n-step", cfg.n_step)?;
+    if cfg.n_step == 0 {
+        bail!("--n-step must be >= 1");
+    }
+    cfg.gamma_nstep = a.parse_or("gamma-nstep", cfg.gamma_nstep)?;
+    if let Some(spec) = a.get("tables") {
+        // Entry-aware splitting: `TableSpec::parse_list` keeps
+        // `@alpha=..,beta=..` options attached to their entry.
+        cfg.tables = TableSpec::parse_list(spec, cfg.gamma_nstep)?;
+    }
+    if let Some(r) = a.get("rate-limit") {
+        cfg.rate_limit = RateLimitSpec::parse(r)?;
+    }
+    Ok(())
 }
 
 fn train_config_from(a: &Args) -> Result<TrainConfig> {
@@ -100,31 +155,26 @@ fn train_config_from(a: &Args) -> Result<TrainConfig> {
     cfg.actors = a.parse_or("actors", cfg.actors)?;
     cfg.learners = a.parse_or("learners", cfg.learners)?;
     cfg.total_env_steps = a.parse_or("steps", cfg.total_env_steps)?;
-    cfg.warmup_steps = a.parse_or("warmup", cfg.warmup_steps)?;
-    cfg.update_interval = a.parse_or("update-interval", cfg.update_interval)?;
-    cfg.buffer = BufferKind::parse(&a.str_or("buffer", "pal"))?;
-    cfg.buffer_capacity = a.parse_or("capacity", cfg.buffer_capacity)?;
-    cfg.shards = a.parse_or("shards", cfg.shards)?;
-    cfg.fanout = a.parse_or("fanout", cfg.fanout)?;
-    cfg.alpha = a.parse_or("alpha", cfg.alpha)?;
-    cfg.beta = a.parse_or("beta", cfg.beta)?;
+    apply_service_flags(&mut cfg, a)?;
     cfg.lr = a.parse_or("lr", cfg.lr)?;
     cfg.grad_clip = a.parse_or("grad-clip", cfg.grad_clip)?;
     cfg.aggregation = a.parse_or("aggregation", cfg.aggregation)?;
-    cfg.n_step = a.parse_or("n-step", cfg.n_step)?;
-    if cfg.n_step == 0 {
-        bail!("--n-step must be >= 1");
-    }
-    cfg.gamma_nstep = a.parse_or("gamma-nstep", cfg.gamma_nstep)?;
-    let table_specs = a.str_list("tables");
-    if !table_specs.is_empty() {
-        cfg.tables = table_specs
-            .iter()
-            .map(|s| TableSpec::parse(s, cfg.gamma_nstep))
-            .collect::<Result<Vec<_>>>()?;
-    }
-    if let Some(r) = a.get("rate-limit") {
-        cfg.rate_limit = RateLimitSpec::parse(r)?;
+    if let Some(path) = a.get("remote") {
+        cfg.remote = Some(path.into());
+        // The tables live in the serving process: local table/buffer/
+        // limiter flags do nothing on a remote run, and silently
+        // ignoring them would let users believe they applied.
+        let server_side: &[&str] = &[
+            "tables", "capacity", "shards", "fanout", "alpha", "beta", "warmup",
+            "rate-limit", "buffer", "n-step", "gamma-nstep",
+        ];
+        let ignored: Vec<&str> = server_side.iter().copied().filter(|f| a.has(f)).collect();
+        if !ignored.is_empty() {
+            eprintln!(
+                "[pal] WARNING: --remote uses the server's table configuration; \
+                 ignoring local flags {ignored:?} (set them on `pal serve`)"
+            );
+        }
     }
     if let Some(dir) = a.get("save-state") {
         cfg.save_state = Some(dir.into());
@@ -319,11 +369,19 @@ fn smoke_config(a: &Args) -> Result<TrainConfig> {
     cfg.warmup_steps = 64;
     cfg.rate_limit = RateLimitSpec::SamplesPerInsert(1.0);
     cfg.tables = vec![
-        TableSpec { name: "replay".into(), kind: ItemKind::OneStep, capacity: None },
+        TableSpec {
+            name: "replay".into(),
+            kind: ItemKind::OneStep,
+            capacity: None,
+            alpha: None,
+            beta: None,
+        },
         TableSpec {
             name: "aux".into(),
             kind: ItemKind::NStep { n: 3, gamma: cfg.gamma_nstep },
             capacity: None,
+            alpha: None,
+            beta: None,
         },
     ];
     Ok(cfg)
@@ -473,6 +531,344 @@ fn cmd_state_smoke(a: &Args) -> Result<()> {
     }
 }
 
+const SERVE_FLAGS: &[&str] = &[
+    "socket", "buffer", "capacity", "shards", "fanout", "alpha", "beta",
+    "warmup", "update-interval", "n-step", "gamma-nstep", "tables",
+    "rate-limit", "obs-dim", "act-dim", "seed", "restore-state", "save-state",
+];
+
+/// `pal serve`: build a replay service from the same table/buffer flags
+/// `train` uses and expose it on a Unix-domain socket, so actors and
+/// learners in OTHER processes (`pal train --remote PATH`) share its
+/// tables. Runs until a client sends the Shutdown RPC (or the process
+/// is killed); a clean shutdown optionally saves the replay state.
+fn cmd_serve(a: &Args) -> Result<()> {
+    a.check_known(SERVE_FLAGS)?;
+    let socket = a
+        .get("socket")
+        .ok_or_else(|| anyhow!("--socket PATH required"))?
+        .to_string();
+    let mut cfg = TrainConfig::new("serve", "remote");
+    apply_service_flags(&mut cfg, a)?;
+    let obs_dim: usize = a.parse_or("obs-dim", 4)?;
+    let act_dim: usize = a.parse_or("act-dim", 2)?;
+    let seed: u64 = a.parse_or("seed", 0)?;
+    let service = Arc::new(build_service(&cfg, obs_dim, act_dim)?);
+    if let Some(dir) = a.get("restore-state") {
+        let state = ServiceState::load(std::path::Path::new(dir).join(STATE_FILE))?;
+        service.restore(&state)?;
+        eprintln!(
+            "[pal] replay server restored {} items from {dir}",
+            service.total_len()
+        );
+    }
+    let server =
+        ReplayServer::bind(Arc::clone(&service), &socket, seed)?.expect_dims(obs_dim, act_dim);
+    eprintln!(
+        "[pal] replay server listening on {socket} — {}",
+        service.stats_line()
+    );
+    server.serve()?;
+    if let Some(dir) = a.get("save-state") {
+        let dir = std::path::PathBuf::from(dir);
+        std::fs::create_dir_all(&dir)?;
+        ServiceState::capture(&service)?.save(dir.join(STATE_FILE))?;
+        eprintln!(
+            "[pal] replay state saved to {} ({} items)",
+            dir.display(),
+            service.total_len()
+        );
+    }
+    eprintln!("[pal] replay server stopped — {}", service.stats_line());
+    Ok(())
+}
+
+const REMOTE_SMOKE_FLAGS: &[&str] = &["socket", "items", "capacity", "shards"];
+
+/// Seed of the deterministic phase's sampling RNG — the remote
+/// connection's server-side RNG (via Hello) and the in-process twin's
+/// local RNG, so the two runs draw identical index sequences.
+const REMOTE_SMOKE_SEED: u64 = 0x5EED_50CC;
+
+/// One synthetic env step of the remote smoke's traffic.
+fn smoke_step(i: usize) -> WriterStep {
+    WriterStep {
+        obs: vec![i as f32; SMOKE_OBS],
+        action: vec![0.1; SMOKE_ACT],
+        next_obs: vec![i as f32 + 1.0; SMOKE_OBS],
+        reward: 1.0,
+        done: i % 32 == 31,
+        truncated: false,
+    }
+}
+
+/// Deterministic collect/sample loop over trait-level handles, so the
+/// EXACT same call sequence can run against a remote server and an
+/// in-process service. Once past `warmup`, every append is preceded by
+/// one sample+priority-update round, which with the smoke's σ=1 ratio
+/// limiter keeps the drift window open — the loop never stalls, so
+/// even the stall counters of the two runs stay equal. Returns the
+/// number of granted batches.
+fn deterministic_drive(
+    w: &mut dyn ExperienceWriter,
+    s: &mut dyn ExperienceSampler,
+    rng: &mut Rng,
+    warmup: usize,
+    items: usize,
+) -> Result<u64> {
+    let mut out = SampleBatch::default();
+    let mut batches = 0u64;
+    for i in 0..items {
+        if i >= warmup {
+            match s.try_sample(16, rng, &mut out)? {
+                SampleOutcome::Sampled => {
+                    batches += 1;
+                    let idx = out.indices.clone();
+                    // Priorities are a pure function of (round, slot) so
+                    // both runs feed identical values.
+                    let tds: Vec<f32> = (0..idx.len())
+                        .map(|j| ((batches * 31 + j as u64) % 97) as f32 * 0.1 + 0.05)
+                        .collect();
+                    s.update_priorities(&idx, &tds)?;
+                }
+                other => bail!("deterministic phase stalled sampling at item {i}: {other:?}"),
+            }
+        }
+        ensure!(
+            !w.throttled()?,
+            "deterministic phase writer unexpectedly throttled at item {i}"
+        );
+        w.append(smoke_step(i))?;
+    }
+    Ok(batches)
+}
+
+/// Remote round-trip smoke (the CI gate for the socket front-end), run
+/// against a FRESHLY started `pal serve` on the same table layout as
+/// `state-smoke` (tools/remote_smoke.sh starts it with matching flags):
+///
+/// 1. deterministic phase — one writer + one seeded sampler drive the
+///    server through `RemoteWriter`/`RemoteSampler`, the identical loop
+///    drives an in-process twin service, and the two checkpoints must
+///    be BYTE-identical (items, priorities, stats, limiter counters);
+/// 2. concurrent soak — two writer clients + one sampler client hammer
+///    the server; every sampled batch must be zero-priority-free and
+///    the final Stats must account for every client-side operation
+///    exactly (inserts, batches, items, priority updates);
+/// 3. Shutdown RPC — the serving process exits cleanly (and writes its
+///    `--save-state`, which the script asserts).
+fn cmd_remote_smoke(a: &Args) -> Result<()> {
+    a.check_known(REMOTE_SMOKE_FLAGS)?;
+    let socket = a
+        .get("socket")
+        .ok_or_else(|| anyhow!("--socket PATH required"))?
+        .to_string();
+    let items: usize = a.parse_or("items", 2_000)?;
+    let cfg = smoke_config(a)?;
+    ensure!(
+        items >= cfg.warmup_steps * 4,
+        "--items {items} too small for warmup {}",
+        cfg.warmup_steps
+    );
+
+    // The server must be fresh: the deterministic comparison assumes
+    // both sides start from empty tables.
+    let before = RemoteClient::connect(&socket)?.stats()?;
+    ensure!(
+        before.iter().all(|t| t.len == 0 && t.stats.inserts == 0),
+        "remote-smoke needs a freshly started server (tables already hold data)"
+    );
+    ensure!(!before.is_empty(), "server reports no tables");
+
+    // Phase 1a: deterministic drive over the wire.
+    let mut remote_writer = RemoteWriter::connect(&socket, 0)?;
+    let mut remote_sampler = RemoteSampler::connect_default(&socket, REMOTE_SMOKE_SEED)?;
+    let mut unused_rng = Rng::new(1); // remote sampling uses the server-side RNG
+    let remote_batches = deterministic_drive(
+        &mut remote_writer,
+        &mut remote_sampler,
+        &mut unused_rng,
+        cfg.warmup_steps,
+        items,
+    )?;
+
+    // Phase 1b: the identical drive against an in-process twin.
+    let local = build_service(&cfg, SMOKE_OBS, SMOKE_ACT)?;
+    let mut local_writer = local.writer(0);
+    let mut local_sampler = local.default_sampler();
+    let mut local_rng = Rng::new(REMOTE_SMOKE_SEED);
+    let local_batches = deterministic_drive(
+        &mut local_writer,
+        &mut local_sampler,
+        &mut local_rng,
+        cfg.warmup_steps,
+        items,
+    )?;
+    ensure!(
+        remote_batches == local_batches,
+        "granted batches diverged: remote {remote_batches} vs local {local_batches}"
+    );
+
+    // The wire must not change the state: byte-identical checkpoints.
+    let remote_bytes = RemoteClient::connect(&socket)?.checkpoint_bytes()?;
+    let local_bytes = ServiceState::capture(&local)?.encode();
+    if remote_bytes != local_bytes {
+        let first_diff = remote_bytes
+            .iter()
+            .zip(&local_bytes)
+            .position(|(a, b)| a != b)
+            .unwrap_or_else(|| remote_bytes.len().min(local_bytes.len()));
+        bail!(
+            "remote checkpoint differs from the in-process twin: {} vs {} bytes, \
+             first difference at offset {first_diff}",
+            remote_bytes.len(),
+            local_bytes.len()
+        );
+    }
+    eprintln!(
+        "[smoke] deterministic phase OK: {} items, {remote_batches} batches, \
+         checkpoints byte-identical ({} bytes)",
+        items,
+        remote_bytes.len()
+    );
+    // Quiesce phase-1 connections so the final Shutdown drains fast.
+    drop(remote_writer);
+    drop(remote_sampler);
+
+    // Phase 2: concurrent soak through separate client connections.
+    let soak_each = (items / 4).max(64);
+    let done = std::sync::atomic::AtomicBool::new(false);
+    let soak_batches = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|s| -> Result<()> {
+        let mut writers = Vec::new();
+        for actor in 1..3usize {
+            let socket = socket.clone();
+            writers.push(s.spawn(move || -> Result<()> {
+                let mut w = RemoteWriter::connect(&socket, actor as u64)?;
+                // Bounded waits so a dead sampler fails the smoke
+                // instead of hanging CI.
+                let wait_admitted = |w: &mut RemoteWriter| -> Result<()> {
+                    let mut spins = 0u32;
+                    while w.throttled()? {
+                        spins += 1;
+                        ensure!(spins < 60_000, "soak writer stalled >60s (sampler dead?)");
+                        std::thread::sleep(std::time::Duration::from_millis(1));
+                    }
+                    Ok(())
+                };
+                for i in 0..soak_each {
+                    wait_admitted(&mut w)?;
+                    w.append(smoke_step(actor * 1_000_000 + i))?;
+                }
+                // Drain: a step the limiter stalled must still land.
+                wait_admitted(&mut w)?;
+                Ok(())
+            }));
+        }
+        let sampler_handle = {
+            let socket = socket.clone();
+            let done = &done;
+            let soak_batches = &soak_batches;
+            s.spawn(move || -> Result<()> {
+                let mut sampler = RemoteSampler::connect_default(&socket, 99)?;
+                let mut rng = Rng::new(99);
+                let mut out = SampleBatch::default();
+                while !done.load(std::sync::atomic::Ordering::Relaxed) {
+                    match sampler.try_sample(16, &mut rng, &mut out)? {
+                        SampleOutcome::Sampled => {
+                            ensure!(
+                                out.priorities.iter().all(|&p| p > 0.0),
+                                "sampled a zero-priority item over the wire"
+                            );
+                            soak_batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            let idx = out.indices.clone();
+                            let tds: Vec<f32> =
+                                idx.iter().map(|_| rng.f32() * 2.0 + 0.01).collect();
+                            sampler.update_priorities(&idx, &tds)?;
+                        }
+                        _ => std::thread::yield_now(),
+                    }
+                }
+                Ok(())
+            })
+        };
+        // Collect every outcome BEFORE propagating any error: an early
+        // return would leave `done` unset and the scope joining a
+        // sampler that never exits.
+        let writer_results: Vec<_> = writers.into_iter().map(|h| h.join()).collect();
+        done.store(true, std::sync::atomic::Ordering::Relaxed);
+        let sampler_result = sampler_handle.join();
+        for r in writer_results {
+            r.map_err(|_| anyhow!("soak writer panicked"))??;
+        }
+        sampler_result.map_err(|_| anyhow!("soak sampler panicked"))??;
+        Ok(())
+    })?;
+    let soak_batches = soak_batches.load(std::sync::atomic::Ordering::Relaxed) as u64;
+
+    // Exact accounting across the wire, against the final Stats.
+    let stats = RemoteClient::connect(&socket)?.stats()?;
+    ensure!(!stats.is_empty(), "server reports no tables after the soak");
+    let total_inserts = items + 2 * soak_each;
+    let total_batches = remote_batches + soak_batches;
+    for t in &stats {
+        ensure!(t.len > 0, "table `{}` is empty after the smoke", t.name);
+        ensure!(
+            t.len <= t.capacity,
+            "table `{}` overflows its capacity",
+            t.name
+        );
+        // The 1-step learner table gets exactly one item per appended
+        // step. N-step tables legitimately emit up to n−1 fewer items
+        // per writer whose final episode never terminated (the partial
+        // window tail is only flushed at a boundary).
+        let slack = if t.name == stats[0].name { 0 } else { 3 * 3 };
+        ensure!(
+            t.stats.inserts <= total_inserts && t.stats.inserts + slack >= total_inserts,
+            "table `{}`: {} inserts recorded, clients performed {total_inserts}",
+            t.name,
+            t.stats.inserts
+        );
+    }
+    let replay = &stats[0];
+    ensure!(
+        replay.stats.sample_batches as u64 == total_batches,
+        "table `{}`: {} batches recorded, clients drew {total_batches}",
+        replay.name,
+        replay.stats.sample_batches
+    );
+    ensure!(
+        replay.stats.sampled_items as u64 == 16 * total_batches,
+        "sampled-items accounting off: {} != 16·{total_batches}",
+        replay.stats.sampled_items
+    );
+    ensure!(
+        replay.stats.priority_updates as u64 == 16 * total_batches,
+        "priority-update accounting off: {} != 16·{total_batches}",
+        replay.stats.priority_updates
+    );
+    // The σ=1 ratio bound holds over the combined phases.
+    ensure!(
+        replay.stats.sample_batches <= replay.stats.inserts,
+        "ratio bound violated: {} batches vs {} inserts",
+        replay.stats.sample_batches,
+        replay.stats.inserts
+    );
+    eprintln!(
+        "[smoke] soak OK: +{} inserts, {soak_batches} batches, stalls i/s = {}/{}",
+        2 * soak_each,
+        replay.stats.insert_stalls,
+        replay.stats.sample_stalls
+    );
+
+    RemoteClient::connect(&socket)?.shutdown()?;
+    println!(
+        "remote-smoke OK: {total_inserts} inserts, {total_batches} batches, \
+         byte-identical checkpoint, exact accounting over the wire"
+    );
+    Ok(())
+}
+
 fn cmd_dse(a: &Args) -> Result<()> {
     let cores: usize = a.parse_or("cores", 8)?;
     let ratio: f64 = a.parse_or("update-interval", 1.0)?;
@@ -517,6 +913,7 @@ fn main() -> Result<()> {
     let cmd = a.positional.first().map(String::as_str);
     match cmd {
         Some("train") => cmd_train(&a),
+        Some("serve") => cmd_serve(&a),
         Some("envs") => {
             cmd_envs();
             Ok(())
@@ -524,6 +921,7 @@ fn main() -> Result<()> {
         Some("info") => cmd_info(&a),
         Some("buffer-bench") => cmd_buffer_bench(&a),
         Some("state-smoke") => cmd_state_smoke(&a),
+        Some("remote-smoke") => cmd_remote_smoke(&a),
         Some("dse") => cmd_dse(&a),
         Some(other) => bail!("unknown subcommand `{other}` (try `pal` for usage)"),
         None => usage(),

@@ -1,0 +1,294 @@
+//! Client side of the remote replay protocol: a low-level
+//! [`RemoteClient`] (one frame in, one frame out) plus the
+//! [`RemoteWriter`] / [`RemoteSampler`] handles that mirror the
+//! in-process [`TrajectoryWriter`] / [`SamplerHandle`] APIs through
+//! the [`ExperienceWriter`] / [`ExperienceSampler`] traits — the
+//! actor and learner loops cannot tell which side of the socket their
+//! tables live on.
+//!
+//! Rate-limiter semantics are preserved across the wire without ever
+//! blocking the connection: a stalled insert comes back as a short
+//! `Appended` frame (the un-admitted steps stay queued client-side and
+//! are retried by the actor's normal `throttled()` poll), a stalled
+//! sample as a retriable `WouldStall` frame the learner sleep-polls,
+//! exactly like the in-process outcomes.
+
+use super::frame::{read_frame, write_frame};
+use super::proto::{Request, Response, StallReason, TableInfo};
+use crate::replay::SampleBatch;
+use crate::service::{
+    ExperienceSampler, ExperienceWriter, SampleOutcome, ServiceState, WriterStep,
+};
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+use std::collections::VecDeque;
+use std::os::unix::net::UnixStream;
+use std::path::Path;
+use std::time::Duration;
+
+/// How long one RPC may stay silent before the client gives up. The
+/// server never blocks on a rate limiter (stalls come back as
+/// immediate `WouldStall`/short-`Appended` frames), so a long silence
+/// means a wedged or dead server — erroring lets the worker loops
+/// stop the run instead of hanging past `ctl.request_stop`. Sized for
+/// the slowest legitimate RPC (a multi-hundred-MiB `Checkpoint`).
+const RPC_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// One connection to a [`super::ReplayServer`]; a thin call/response
+/// wrapper plus typed helpers for every RPC.
+pub struct RemoteClient {
+    stream: UnixStream,
+}
+
+impl RemoteClient {
+    pub fn connect(path: impl AsRef<Path>) -> Result<Self> {
+        let stream = UnixStream::connect(path.as_ref()).with_context(|| {
+            format!("connecting to replay server at {}", path.as_ref().display())
+        })?;
+        stream
+            .set_read_timeout(Some(RPC_TIMEOUT))
+            .context("setting the RPC read timeout")?;
+        stream
+            .set_write_timeout(Some(RPC_TIMEOUT))
+            .context("setting the RPC write timeout")?;
+        Ok(Self { stream })
+    }
+
+    /// One request, one response.
+    pub fn call(&mut self, req: &Request) -> Result<Response> {
+        write_frame(&mut self.stream, &req.encode())?;
+        match read_frame(&mut self.stream)? {
+            None => bail!("replay server closed the connection mid-call"),
+            Some(payload) => Response::decode(&payload),
+        }
+    }
+
+    /// As [`Self::call`], but a `Response::Error` becomes an `Err`.
+    fn call_checked(&mut self, req: &Request) -> Result<Response> {
+        match self.call(req)? {
+            Response::Error { message } => bail!("replay server error: {message}"),
+            resp => Ok(resp),
+        }
+    }
+
+    /// Seed this connection's server-side sampling RNG.
+    pub fn hello(&mut self, rng_seed: u64) -> Result<()> {
+        match self.call_checked(&Request::Hello { rng_seed })? {
+            Response::Ok => Ok(()),
+            other => bail!("unexpected response to Hello: {other:?}"),
+        }
+    }
+
+    /// Append steps for one actor; returns `(consumed, emitted)`. A
+    /// `consumed` short of `steps.len()` means the limiter stalled —
+    /// retry the tail later.
+    pub fn append(&mut self, actor_id: u64, steps: Vec<WriterStep>) -> Result<(u32, u32)> {
+        match self.call_checked(&Request::Append { actor_id, steps })? {
+            Response::Appended { consumed, emitted } => Ok((consumed, emitted)),
+            other => bail!("unexpected response to Append: {other:?}"),
+        }
+    }
+
+    /// Sample one batch from a named table into `out`.
+    pub fn sample(
+        &mut self,
+        table: &str,
+        batch: usize,
+        out: &mut SampleBatch,
+    ) -> Result<SampleOutcome> {
+        let req = Request::Sample { table: table.to_string(), batch: batch as u32 };
+        match self.call_checked(&req)? {
+            Response::Sampled(b) => {
+                *out = b;
+                Ok(SampleOutcome::Sampled)
+            }
+            Response::WouldStall { reason } => Ok(match reason {
+                StallReason::Throttled => SampleOutcome::Throttled,
+                StallReason::NotEnoughData => SampleOutcome::NotEnoughData,
+            }),
+            other => bail!("unexpected response to Sample: {other:?}"),
+        }
+    }
+
+    /// Feed |TD| errors back for sampled indices of a named table.
+    pub fn update_priorities(
+        &mut self,
+        table: &str,
+        indices: &[usize],
+        td_abs: &[f32],
+    ) -> Result<()> {
+        let req = Request::UpdatePriorities {
+            table: table.to_string(),
+            indices: indices.iter().map(|&i| i as u64).collect(),
+            td_abs: td_abs.to_vec(),
+        };
+        match self.call_checked(&req)? {
+            Response::Ok => Ok(()),
+            other => bail!("unexpected response to UpdatePriorities: {other:?}"),
+        }
+    }
+
+    /// Per-table sizes and counters.
+    pub fn stats(&mut self) -> Result<Vec<TableInfo>> {
+        match self.call_checked(&Request::Stats)? {
+            Response::Stats { tables } => Ok(tables),
+            other => bail!("unexpected response to Stats: {other:?}"),
+        }
+    }
+
+    /// The server's whole serialized state, as raw `ServiceState`
+    /// payload bytes (what [`ServiceState::encode`] produced).
+    pub fn checkpoint_bytes(&mut self) -> Result<Vec<u8>> {
+        match self.call_checked(&Request::Checkpoint)? {
+            Response::State { state } => Ok(state),
+            other => bail!("unexpected response to Checkpoint: {other:?}"),
+        }
+    }
+
+    /// The server's whole state, decoded.
+    pub fn checkpoint_state(&mut self) -> Result<ServiceState> {
+        ServiceState::decode(&self.checkpoint_bytes()?)
+            .context("decoding the replay server's checkpoint payload")
+    }
+
+    /// Restore a previously captured state into the served tables.
+    pub fn restore_state(&mut self, state: &ServiceState) -> Result<()> {
+        match self.call_checked(&Request::Restore { state: state.encode() })? {
+            Response::Ok => Ok(()),
+            other => bail!("unexpected response to Restore: {other:?}"),
+        }
+    }
+
+    /// Ask the server to stop accepting connections and exit.
+    pub fn shutdown(&mut self) -> Result<()> {
+        match self.call_checked(&Request::Shutdown)? {
+            Response::Ok => Ok(()),
+            other => bail!("unexpected response to Shutdown: {other:?}"),
+        }
+    }
+}
+
+/// Remote counterpart of [`crate::service::TrajectoryWriter`]: ships
+/// raw env steps to the server, which runs the real writer (item
+/// assembly server-side keeps remote and local items byte-identical).
+/// Steps the limiter has not yet admitted wait in a small client-side
+/// queue that [`ExperienceWriter::throttled`] retries — mirroring the
+/// local writer, where a throttled actor holds its next step in the
+/// loop instead.
+pub struct RemoteWriter {
+    client: RemoteClient,
+    actor_id: u64,
+    pending: VecDeque<WriterStep>,
+    items_emitted: u64,
+}
+
+impl RemoteWriter {
+    pub fn connect(path: impl AsRef<Path>, actor_id: u64) -> Result<Self> {
+        Ok(Self {
+            client: RemoteClient::connect(path)?,
+            actor_id,
+            pending: VecDeque::new(),
+            items_emitted: 0,
+        })
+    }
+
+    /// Items the server reported emitting for this writer so far.
+    pub fn items_emitted(&self) -> u64 {
+        self.items_emitted
+    }
+
+    /// Try to ship every pending step; stops early when the server
+    /// reports a limiter stall (the tail stays queued for the next
+    /// poll).
+    fn flush(&mut self) -> Result<()> {
+        while !self.pending.is_empty() {
+            let steps: Vec<WriterStep> = self.pending.iter().cloned().collect();
+            let sent = steps.len();
+            let (consumed, emitted) = self.client.append(self.actor_id, steps)?;
+            for _ in 0..consumed {
+                self.pending.pop_front();
+            }
+            self.items_emitted += emitted as u64;
+            if (consumed as usize) < sent {
+                break; // limiter stall — retriable, not an error
+            }
+        }
+        Ok(())
+    }
+}
+
+impl ExperienceWriter for RemoteWriter {
+    fn throttled(&mut self) -> Result<bool> {
+        self.flush()?;
+        Ok(!self.pending.is_empty())
+    }
+
+    fn append(&mut self, step: WriterStep) -> Result<usize> {
+        let before = self.items_emitted;
+        self.pending.push_back(step);
+        self.flush()?;
+        Ok((self.items_emitted - before) as usize)
+    }
+}
+
+impl Drop for RemoteWriter {
+    fn drop(&mut self) {
+        // Best-effort: one last try at delivering a step the limiter
+        // stalled right before shutdown.
+        let _ = self.flush();
+    }
+}
+
+/// Remote counterpart of [`crate::service::SamplerHandle`] on one named
+/// table. Sampling randomness lives server-side (seeded at connect),
+/// so a fixed seed makes a remote sample/update loop bit-reproducible
+/// against an in-process one.
+pub struct RemoteSampler {
+    client: RemoteClient,
+    table: String,
+}
+
+impl RemoteSampler {
+    /// Connect and seed the connection's sampling RNG.
+    pub fn connect(
+        path: impl AsRef<Path>,
+        table: impl Into<String>,
+        rng_seed: u64,
+    ) -> Result<Self> {
+        let mut client = RemoteClient::connect(path)?;
+        client.hello(rng_seed)?;
+        Ok(Self { client, table: table.into() })
+    }
+
+    /// Connect to the server's default (first) table.
+    pub fn connect_default(path: impl AsRef<Path>, rng_seed: u64) -> Result<Self> {
+        let path = path.as_ref();
+        let mut client = RemoteClient::connect(path)?;
+        let tables = client.stats()?;
+        let first = tables
+            .first()
+            .map(|t| t.name.clone())
+            .context("replay server reports no tables")?;
+        client.hello(rng_seed)?;
+        Ok(Self { client, table: first })
+    }
+
+    pub fn table(&self) -> &str {
+        &self.table
+    }
+}
+
+impl ExperienceSampler for RemoteSampler {
+    fn try_sample(
+        &mut self,
+        batch: usize,
+        _rng: &mut Rng,
+        out: &mut SampleBatch,
+    ) -> Result<SampleOutcome> {
+        self.client.sample(&self.table, batch, out)
+    }
+
+    fn update_priorities(&mut self, indices: &[usize], td_abs: &[f32]) -> Result<()> {
+        self.client.update_priorities(&self.table, indices, td_abs)
+    }
+}

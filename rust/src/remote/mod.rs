@@ -1,0 +1,36 @@
+//! Remote replay front-end: a Unix-domain-socket transport in front of
+//! the in-process [`crate::service::ReplayService`], so parallel
+//! actors and parallel learners can live in **separate processes** from
+//! the experience server — the Reverb server shape (Cassirer et al.,
+//! 2021) the service module was built toward.
+//!
+//! std-only: `std::os::unix::net` streams carrying length-prefixed
+//! frames in the same magic/CRC discipline as the on-disk
+//! [`crate::util::blob`] format.
+//!
+//! * [`frame`] — wire framing (`PALRPC01` magic + length + payload +
+//!   crc32); every malformed input is a descriptive error, never a
+//!   panic.
+//! * [`proto`] — the RPC surface: `Append`, `Sample`,
+//!   `UpdatePriorities`, `Stats`, `Checkpoint`, `Restore`, `Shutdown`.
+//! * [`server`] — [`ReplayServer`]: accept loop + per-connection
+//!   server-side writers and sampling RNGs.
+//! * [`client`] — [`RemoteClient`] plus the [`RemoteWriter`] /
+//!   [`RemoteSampler`] handles implementing
+//!   [`crate::service::ExperienceWriter`] /
+//!   [`crate::service::ExperienceSampler`], so `actor.rs` /
+//!   `learner.rs` switch transports at the trait level only.
+//!
+//! Rate limiters keep their semantics across the wire: a stalled
+//! sample is a retriable `WouldStall` frame, a stalled insert a short
+//! `Appended` frame — connections never block on admission.
+
+pub mod client;
+pub mod frame;
+pub mod proto;
+pub mod server;
+
+pub use client::{RemoteClient, RemoteSampler, RemoteWriter};
+pub use frame::{read_frame, write_frame, FRAME_MAGIC, MAX_FRAME_LEN};
+pub use proto::{Request, Response, StallReason, TableInfo};
+pub use server::ReplayServer;

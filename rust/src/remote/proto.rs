@@ -1,0 +1,520 @@
+//! Request/response payloads of the remote replay protocol.
+//!
+//! Every payload rides inside one [`super::frame`] frame; the first
+//! byte is the opcode, the rest is little-endian fields through the
+//! shared [`crate::util::blob`] cursors, so every decode failure is a
+//! bounds-checked, field-named error — a malformed request can never
+//! panic the server or half-apply (the whole payload is decoded before
+//! any table is touched).
+//!
+//! The RPC surface mirrors the in-process [`crate::service`] API:
+//!
+//! | RPC | in-process equivalent |
+//! |-----|----------------------|
+//! | `Append` | [`TrajectoryWriter::append`](crate::service::TrajectoryWriter::append) (server-side writer, one per `(connection, actor)`) |
+//! | `Sample` | [`SamplerHandle::try_sample`](crate::service::SamplerHandle::try_sample) |
+//! | `UpdatePriorities` | [`SamplerHandle::update_priorities`](crate::service::SamplerHandle::update_priorities) |
+//! | `Stats` | [`ReplayService::stats_snapshots`](crate::service::ReplayService::stats_snapshots) |
+//! | `Checkpoint` / `Restore` | [`ReplayService::checkpoint`](crate::service::ReplayService::checkpoint) / `restore` |
+//!
+//! Rate-limiter semantics cross the wire as *retriable* outcomes: a
+//! stalled sample (or an insert batch the limiter only partially
+//! admits) is a [`Response::WouldStall`] / short [`Response::Appended`]
+//! frame the client polls on, never a blocked connection.
+
+use crate::replay::SampleBatch;
+use crate::service::{TableStatsSnapshot, WriterStep};
+use crate::util::blob::{ByteReader, ByteWriter};
+use anyhow::{bail, Result};
+
+/// Most steps one `Append` may carry (bounds a corrupted count field).
+pub const MAX_APPEND_STEPS: usize = 65_536;
+/// Largest sample batch a client may request.
+pub const MAX_SAMPLE_BATCH: usize = 1 << 20;
+/// Most indices one `UpdatePriorities` may carry.
+pub const MAX_UPDATE_INDICES: usize = 1 << 20;
+/// Most tables a `Stats` response may list (matches the checkpoint
+/// decoder's bound).
+pub const MAX_TABLES: usize = 4_096;
+
+const OP_HELLO: u8 = 1;
+const OP_APPEND: u8 = 2;
+const OP_SAMPLE: u8 = 3;
+const OP_UPDATE_PRIORITIES: u8 = 4;
+const OP_STATS: u8 = 5;
+const OP_CHECKPOINT: u8 = 6;
+const OP_RESTORE: u8 = 7;
+const OP_SHUTDOWN: u8 = 8;
+
+const RESP_OK: u8 = 1;
+const RESP_APPENDED: u8 = 2;
+const RESP_SAMPLED: u8 = 3;
+const RESP_WOULD_STALL: u8 = 4;
+const RESP_STATS: u8 = 5;
+const RESP_STATE: u8 = 6;
+const RESP_ERROR: u8 = 7;
+
+/// Why a `Sample` was denied; the client maps these straight onto
+/// [`crate::service::SampleOutcome`] and sleep-polls, exactly like an
+/// in-process learner.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StallReason {
+    /// The table's rate limiter denied the batch.
+    Throttled,
+    /// The table is below `min_size_to_sample`.
+    NotEnoughData,
+}
+
+/// One request frame, client → server.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Seed this connection's server-side sampling RNG. Optional; a
+    /// connection that never says hello samples from a seed derived
+    /// from its connection id. With a fixed seed, a remote
+    /// `Sample`/`UpdatePriorities` loop is bit-reproducible against an
+    /// in-process [`crate::service::SamplerHandle`] loop using
+    /// `Rng::new(seed)` on the same table contents.
+    Hello { rng_seed: u64 },
+    /// Append raw env steps for one actor; the server-side
+    /// [`crate::service::TrajectoryWriter`] owns item assembly (N-step
+    /// folding, sequence windows, boundary rules) so remote actors get
+    /// byte-identical items to local ones.
+    Append { actor_id: u64, steps: Vec<WriterStep> },
+    /// Draw one batch from a named table.
+    Sample { table: String, batch: u32 },
+    /// Feed |TD| errors back for previously sampled indices.
+    UpdatePriorities { table: String, indices: Vec<u64>, td_abs: Vec<f32> },
+    /// Per-table sizes and counters.
+    Stats,
+    /// Serialize the whole service (a `ServiceState` payload).
+    Checkpoint,
+    /// Restore a `ServiceState` payload into the served tables
+    /// (validated server-side before anything is mutated).
+    Restore { state: Vec<u8> },
+    /// Stop the server's accept loop (the serving process then runs its
+    /// `--save-state` hook, if any, and exits).
+    Shutdown,
+}
+
+/// One response frame, server → client.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    /// Request applied; nothing to return.
+    Ok,
+    /// `Append` outcome: the first `consumed` steps were applied (the
+    /// rest hit a rate-limiter stall — retriable), emitting `emitted`
+    /// items across the tables.
+    Appended { consumed: u32, emitted: u32 },
+    /// A sampled batch.
+    Sampled(SampleBatch),
+    /// The sample was denied; retry later. The connection never blocks.
+    WouldStall { reason: StallReason },
+    /// Per-table stats.
+    Stats { tables: Vec<TableInfo> },
+    /// A serialized `ServiceState` payload (from `Checkpoint`).
+    State { state: Vec<u8> },
+    /// The request was understood but failed; the message is the
+    /// server-side error chain.
+    Error { message: String },
+}
+
+/// One table's row in a `Stats` response.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TableInfo {
+    pub name: String,
+    pub len: u64,
+    pub capacity: u64,
+    pub stats: TableStatsSnapshot,
+}
+
+fn encode_step(w: &mut ByteWriter, s: &WriterStep) {
+    w.f32s(&s.obs);
+    w.f32s(&s.action);
+    w.f32s(&s.next_obs);
+    w.f32(s.reward);
+    w.u8(s.done as u8);
+    w.u8(s.truncated as u8);
+}
+
+fn decode_step(r: &mut ByteReader) -> Result<WriterStep> {
+    Ok(WriterStep {
+        obs: r.f32s("step obs")?,
+        action: r.f32s("step action")?,
+        next_obs: r.f32s("step next_obs")?,
+        reward: r.f32("step reward")?,
+        done: r.u8("step done")? != 0,
+        truncated: r.u8("step truncated")? != 0,
+    })
+}
+
+fn encode_batch(w: &mut ByteWriter, b: &SampleBatch) {
+    w.u32(b.len() as u32);
+    w.u64s(&b.indices.iter().map(|&i| i as u64).collect::<Vec<_>>());
+    w.f32s(&b.priorities);
+    w.f32s(&b.is_weights);
+    w.f32s(&b.obs);
+    w.f32s(&b.action);
+    w.f32s(&b.next_obs);
+    w.f32s(&b.reward);
+    w.f32s(&b.done);
+}
+
+fn decode_batch(r: &mut ByteReader) -> Result<SampleBatch> {
+    let n = r.u32("batch size")? as usize;
+    if n == 0 || n > MAX_SAMPLE_BATCH {
+        bail!("implausible sampled-batch size {n}");
+    }
+    let indices: Vec<usize> = r.u64s("batch indices")?.into_iter().map(|i| i as usize).collect();
+    let priorities = r.f32s("batch priorities")?;
+    let is_weights = r.f32s("batch is_weights")?;
+    let obs = r.f32s("batch obs")?;
+    let action = r.f32s("batch action")?;
+    let next_obs = r.f32s("batch next_obs")?;
+    let reward = r.f32s("batch reward")?;
+    let done = r.f32s("batch done")?;
+    if indices.len() != n
+        || priorities.len() != n
+        || reward.len() != n
+        || done.len() != n
+        || !(is_weights.is_empty() || is_weights.len() == n)
+    {
+        bail!(
+            "inconsistent sampled batch: {n} items but {} indices / {} priorities / \
+             {} rewards / {} dones / {} is_weights",
+            indices.len(),
+            priorities.len(),
+            reward.len(),
+            done.len(),
+            is_weights.len()
+        );
+    }
+    if obs.len() % n != 0 || action.len() % n != 0 || next_obs.len() != obs.len() {
+        bail!(
+            "inconsistent sampled batch: {} obs / {} next_obs / {} action values \
+             do not divide into {n} items",
+            obs.len(),
+            next_obs.len(),
+            action.len()
+        );
+    }
+    Ok(SampleBatch { indices, priorities, is_weights, obs, action, next_obs, reward, done })
+}
+
+impl Request {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        match self {
+            Request::Hello { rng_seed } => {
+                w.u8(OP_HELLO);
+                w.u64(*rng_seed);
+            }
+            Request::Append { actor_id, steps } => {
+                w.u8(OP_APPEND);
+                w.u64(*actor_id);
+                w.u32(steps.len() as u32);
+                for s in steps {
+                    encode_step(&mut w, s);
+                }
+            }
+            Request::Sample { table, batch } => {
+                w.u8(OP_SAMPLE);
+                w.str_(table);
+                w.u32(*batch);
+            }
+            Request::UpdatePriorities { table, indices, td_abs } => {
+                w.u8(OP_UPDATE_PRIORITIES);
+                w.str_(table);
+                w.u64s(indices);
+                w.f32s(td_abs);
+            }
+            Request::Stats => w.u8(OP_STATS),
+            Request::Checkpoint => w.u8(OP_CHECKPOINT),
+            Request::Restore { state } => {
+                w.u8(OP_RESTORE);
+                w.bytes(state);
+            }
+            Request::Shutdown => w.u8(OP_SHUTDOWN),
+        }
+        w.finish()
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<Self> {
+        let mut r = ByteReader::new(payload);
+        let op = r.u8("request opcode")?;
+        let req = match op {
+            OP_HELLO => Request::Hello { rng_seed: r.u64("rng seed")? },
+            OP_APPEND => {
+                let actor_id = r.u64("actor id")?;
+                let count = r.u32("step count")? as usize;
+                if count > MAX_APPEND_STEPS {
+                    bail!("append claims {count} steps (protocol cap {MAX_APPEND_STEPS})");
+                }
+                let mut steps = Vec::with_capacity(count);
+                for _ in 0..count {
+                    steps.push(decode_step(&mut r)?);
+                }
+                Request::Append { actor_id, steps }
+            }
+            OP_SAMPLE => {
+                let table = r.str_("table name")?;
+                let batch = r.u32("batch size")?;
+                if batch == 0 || batch as usize > MAX_SAMPLE_BATCH {
+                    bail!("sample batch {batch} out of range [1, {MAX_SAMPLE_BATCH}]");
+                }
+                Request::Sample { table, batch }
+            }
+            OP_UPDATE_PRIORITIES => {
+                let table = r.str_("table name")?;
+                let indices = r.u64s("priority indices")?;
+                let td_abs = r.f32s("priority values")?;
+                if indices.len() > MAX_UPDATE_INDICES {
+                    bail!(
+                        "priority update claims {} indices (protocol cap {MAX_UPDATE_INDICES})",
+                        indices.len()
+                    );
+                }
+                if indices.len() != td_abs.len() {
+                    bail!(
+                        "priority update has {} indices but {} values",
+                        indices.len(),
+                        td_abs.len()
+                    );
+                }
+                Request::UpdatePriorities { table, indices, td_abs }
+            }
+            OP_STATS => Request::Stats,
+            OP_CHECKPOINT => Request::Checkpoint,
+            OP_RESTORE => Request::Restore { state: r.bytes("state payload")? },
+            OP_SHUTDOWN => Request::Shutdown,
+            other => bail!("unknown request opcode {other}"),
+        };
+        r.expect_end()?;
+        Ok(req)
+    }
+}
+
+impl Response {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        match self {
+            Response::Ok => w.u8(RESP_OK),
+            Response::Appended { consumed, emitted } => {
+                w.u8(RESP_APPENDED);
+                w.u32(*consumed);
+                w.u32(*emitted);
+            }
+            Response::Sampled(b) => {
+                w.u8(RESP_SAMPLED);
+                encode_batch(&mut w, b);
+            }
+            Response::WouldStall { reason } => {
+                w.u8(RESP_WOULD_STALL);
+                w.u8(match reason {
+                    StallReason::Throttled => 0,
+                    StallReason::NotEnoughData => 1,
+                });
+            }
+            Response::Stats { tables } => {
+                w.u8(RESP_STATS);
+                w.u32(tables.len() as u32);
+                for t in tables {
+                    w.str_(&t.name);
+                    w.u64(t.len);
+                    w.u64(t.capacity);
+                    w.u64(t.stats.inserts as u64);
+                    w.u64(t.stats.sample_batches as u64);
+                    w.u64(t.stats.sampled_items as u64);
+                    w.u64(t.stats.priority_updates as u64);
+                    w.u64(t.stats.insert_stalls as u64);
+                    w.u64(t.stats.sample_stalls as u64);
+                }
+            }
+            Response::State { state } => {
+                w.u8(RESP_STATE);
+                w.bytes(state);
+            }
+            Response::Error { message } => {
+                w.u8(RESP_ERROR);
+                w.str_(message);
+            }
+        }
+        w.finish()
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<Self> {
+        let mut r = ByteReader::new(payload);
+        let op = r.u8("response opcode")?;
+        let resp = match op {
+            RESP_OK => Response::Ok,
+            RESP_APPENDED => Response::Appended {
+                consumed: r.u32("consumed count")?,
+                emitted: r.u32("emitted count")?,
+            },
+            RESP_SAMPLED => Response::Sampled(decode_batch(&mut r)?),
+            RESP_WOULD_STALL => {
+                let reason = match r.u8("stall reason")? {
+                    0 => StallReason::Throttled,
+                    1 => StallReason::NotEnoughData,
+                    other => bail!("unknown stall reason {other}"),
+                };
+                Response::WouldStall { reason }
+            }
+            RESP_STATS => {
+                let count = r.u32("table count")? as usize;
+                if count > MAX_TABLES {
+                    bail!("stats claim {count} tables (protocol cap {MAX_TABLES})");
+                }
+                let mut tables = Vec::with_capacity(count);
+                for _ in 0..count {
+                    tables.push(TableInfo {
+                        name: r.str_("table name")?,
+                        len: r.u64("table len")?,
+                        capacity: r.u64("table capacity")?,
+                        stats: TableStatsSnapshot {
+                            inserts: r.u64("inserts")? as usize,
+                            sample_batches: r.u64("sample_batches")? as usize,
+                            sampled_items: r.u64("sampled_items")? as usize,
+                            priority_updates: r.u64("priority_updates")? as usize,
+                            insert_stalls: r.u64("insert_stalls")? as usize,
+                            sample_stalls: r.u64("sample_stalls")? as usize,
+                        },
+                    });
+                }
+                Response::Stats { tables }
+            }
+            RESP_STATE => Response::State { state: r.bytes("state payload")? },
+            RESP_ERROR => Response::Error { message: r.str_("error message")? },
+            other => bail!("unknown response opcode {other}"),
+        };
+        r.expect_end()?;
+        Ok(resp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn step(i: usize) -> WriterStep {
+        WriterStep {
+            obs: vec![i as f32, -1.0],
+            action: vec![0.5],
+            next_obs: vec![i as f32 + 1.0, -1.0],
+            reward: i as f32,
+            done: i % 2 == 0,
+            truncated: i % 3 == 0,
+        }
+    }
+
+    #[test]
+    fn every_request_roundtrips() {
+        let reqs = vec![
+            Request::Hello { rng_seed: 0xDEAD_BEEF },
+            Request::Append { actor_id: 3, steps: vec![step(0), step(1)] },
+            Request::Append { actor_id: 0, steps: vec![] },
+            Request::Sample { table: "replay".into(), batch: 32 },
+            Request::UpdatePriorities {
+                table: "replay".into(),
+                indices: vec![0, 7, 1 << 40],
+                td_abs: vec![0.1, 2.0, 0.0],
+            },
+            Request::Stats,
+            Request::Checkpoint,
+            Request::Restore { state: vec![1, 2, 3, 4] },
+            Request::Shutdown,
+        ];
+        for req in reqs {
+            let decoded = Request::decode(&req.encode()).unwrap();
+            assert_eq!(decoded, req);
+        }
+    }
+
+    #[test]
+    fn every_response_roundtrips() {
+        let batch = SampleBatch {
+            indices: vec![4, 9],
+            priorities: vec![0.5, 1.5],
+            is_weights: vec![1.0, 0.25],
+            obs: vec![0.0, 1.0, 2.0, 3.0],
+            action: vec![0.1, 0.2],
+            next_obs: vec![1.0, 2.0, 3.0, 4.0],
+            reward: vec![1.0, -1.0],
+            done: vec![0.0, 1.0],
+        };
+        let resps = vec![
+            Response::Ok,
+            Response::Appended { consumed: 5, emitted: 9 },
+            Response::Sampled(batch),
+            Response::WouldStall { reason: StallReason::Throttled },
+            Response::WouldStall { reason: StallReason::NotEnoughData },
+            Response::Stats {
+                tables: vec![TableInfo {
+                    name: "replay".into(),
+                    len: 128,
+                    capacity: 1024,
+                    stats: TableStatsSnapshot {
+                        inserts: 200,
+                        sample_batches: 12,
+                        sampled_items: 384,
+                        priority_updates: 384,
+                        insert_stalls: 3,
+                        sample_stalls: 9,
+                    },
+                }],
+            },
+            Response::State { state: vec![9, 9, 9] },
+            Response::Error { message: "unknown table `x`".into() },
+        ];
+        for resp in resps {
+            let decoded = Response::decode(&resp.encode()).unwrap();
+            assert_eq!(decoded, resp);
+        }
+    }
+
+    #[test]
+    fn decode_rejects_malformed_payloads() {
+        // Unknown opcodes.
+        assert!(Request::decode(&[0xEE]).is_err());
+        assert!(Response::decode(&[0xEE]).is_err());
+        // Empty payloads.
+        assert!(Request::decode(&[]).is_err());
+        assert!(Response::decode(&[]).is_err());
+        // Truncated mid-field.
+        let full = Request::Append { actor_id: 1, steps: vec![step(0)] }.encode();
+        for cut in 1..full.len() {
+            assert!(Request::decode(&full[..cut]).is_err(), "cut at {cut}");
+        }
+        // Trailing garbage after a valid request.
+        let mut padded = Request::Stats.encode();
+        padded.push(0);
+        assert!(Request::decode(&padded).is_err());
+        // Mismatched priority-update lengths.
+        let mut w = ByteWriter::new();
+        w.u8(OP_UPDATE_PRIORITIES);
+        w.str_("replay");
+        w.u64s(&[1, 2, 3]);
+        w.f32s(&[0.5]);
+        let err = Request::decode(&w.finish()).unwrap_err().to_string();
+        assert!(err.contains("3 indices"), "{err}");
+        // Zero-batch sample.
+        let zero = Request::Sample { table: "t".into(), batch: 0 }.encode();
+        assert!(Request::decode(&zero).is_err());
+    }
+
+    #[test]
+    fn writer_step_flags_roundtrip() {
+        for (done, truncated) in [(false, false), (true, false), (false, true), (true, true)] {
+            let req = Request::Append {
+                actor_id: 0,
+                steps: vec![WriterStep { done, truncated, ..step(1) }],
+            };
+            match Request::decode(&req.encode()).unwrap() {
+                Request::Append { steps, .. } => {
+                    assert_eq!(steps[0].done, done);
+                    assert_eq!(steps[0].truncated, truncated);
+                }
+                other => panic!("decoded {other:?}"),
+            }
+        }
+    }
+}

@@ -1,0 +1,524 @@
+//! The remote replay server: a Unix-domain-socket front-end over one
+//! [`ReplayService`] (Reverb's `reverb.Server` shape, std-only).
+//!
+//! One accept loop, one detached thread per connection. Each
+//! connection owns its server-side state: a sampling RNG (seeded by
+//! the client's `Hello`, or from the connection id) and one
+//! [`TrajectoryWriter`] per actor id, so remote actors get the same
+//! item assembly (N-step folding, sequence windows, boundary rules) as
+//! local ones and sharded tables keep their actor-affinity routing.
+//!
+//! # Failure semantics
+//!
+//! * A malformed *frame* (truncated, bit-flipped, oversized length,
+//!   wrong magic) gets a best-effort [`Response::Error`] and the
+//!   connection is dropped — the stream can no longer be trusted to be
+//!   on a frame boundary. Nothing was applied: a request is decoded in
+//!   full before any table is touched.
+//! * A malformed *payload* inside a checksummed frame (bad opcode,
+//!   inconsistent lengths) gets a [`Response::Error`] and the
+//!   connection stays up (the frame boundary is intact).
+//! * Application errors (unknown table, out-of-range indices,
+//!   non-finite priorities, failed restore) get a [`Response::Error`]
+//!   carrying the server-side error chain; the connection stays up.
+//! * A stalled sample is a retriable [`Response::WouldStall`]; a
+//!   partially admitted insert batch is a short
+//!   [`Response::Appended`]. The server never blocks a connection on a
+//!   rate limiter.
+
+use super::frame::{read_frame, write_frame};
+use super::proto::{Request, Response, StallReason, TableInfo};
+use crate::replay::SampleBatch;
+use crate::service::{ReplayService, SampleOutcome, ServiceState, TrajectoryWriter};
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Decrements the server's live-connection count when a connection
+/// thread exits by any path (EOF, protocol error, shutdown, panic).
+struct ConnGuard(Arc<AtomicUsize>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Release);
+    }
+}
+
+/// Most distinct actor ids one connection may write for. Every other
+/// hostile count in the protocol is bounded; this bounds the
+/// server-side writer map (a buggy client passing a step counter as
+/// its actor id would otherwise grow it without limit).
+pub const MAX_WRITERS_PER_CONN: usize = 1_024;
+
+/// A bound replay server. [`Self::serve`] runs the accept loop until a
+/// client sends `Shutdown` (or [`Self::stop_handle`] is flipped).
+pub struct ReplayServer {
+    service: Arc<ReplayService>,
+    listener: UnixListener,
+    path: PathBuf,
+    stop: Arc<AtomicBool>,
+    active: Arc<AtomicUsize>,
+    seed: u64,
+    /// Expected base step dims (obs, action), when known: `Append`
+    /// steps are rejected with a descriptive error on mismatch instead
+    /// of silently truncating/padding rows in storage.
+    dims: Option<(usize, usize)>,
+}
+
+impl ReplayServer {
+    /// Bind a Unix-domain socket at `path`. A stale socket file left by
+    /// a dead server is replaced; a socket another server still answers
+    /// on, or any other kind of file, is refused. `seed` derives the
+    /// default per-connection sampling RNGs.
+    pub fn bind(service: Arc<ReplayService>, path: impl AsRef<Path>, seed: u64) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        if let Ok(meta) = std::fs::symlink_metadata(&path) {
+            if !std::os::unix::fs::FileTypeExt::is_socket(&meta.file_type()) {
+                bail!(
+                    "{} exists and is not a socket — refusing to replace it",
+                    path.display()
+                );
+            }
+            // Liveness probe: only a DEAD server's socket may be
+            // replaced. Stealing a live server's path would split the
+            // experience stream between two servers with no error.
+            if UnixStream::connect(&path).is_ok() {
+                bail!(
+                    "a replay server is already listening on {} — refusing to replace it",
+                    path.display()
+                );
+            }
+            std::fs::remove_file(&path)
+                .with_context(|| format!("removing stale socket {}", path.display()))?;
+        }
+        let listener = UnixListener::bind(&path)
+            .with_context(|| format!("binding replay server socket {}", path.display()))?;
+        // Non-blocking accept so the loop can notice a stop request.
+        listener
+            .set_nonblocking(true)
+            .context("setting the listener non-blocking")?;
+        Ok(Self {
+            service,
+            listener,
+            path,
+            stop: Arc::new(AtomicBool::new(false)),
+            active: Arc::new(AtomicUsize::new(0)),
+            seed,
+            dims: None,
+        })
+    }
+
+    /// Enforce base step dims on every `Append` (what `pal serve`'s
+    /// `--obs-dim`/`--act-dim` declare): mismatched clients get a
+    /// descriptive error on their first frame instead of silently
+    /// corrupted rows.
+    pub fn expect_dims(mut self, obs_dim: usize, act_dim: usize) -> Self {
+        self.dims = Some((obs_dim, act_dim));
+        self
+    }
+
+    /// Flag that ends the accept loop (also set by a `Shutdown` RPC).
+    pub fn stop_handle(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.stop)
+    }
+
+    pub fn socket_path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Accept loop. Returns after `Shutdown` (or an external stop);
+    /// connection threads are detached and exit when their client hangs
+    /// up. On the way out the loop drains in-flight connections
+    /// (bounded wait) so a post-`serve` state capture cannot race a
+    /// request the server already acknowledged, then removes the
+    /// socket file.
+    pub fn serve(&self) -> Result<()> {
+        let mut conn_id = 0u64;
+        while !self.stop.load(Ordering::Relaxed) {
+            match self.listener.accept() {
+                Ok((stream, _addr)) => {
+                    conn_id += 1;
+                    let service = Arc::clone(&self.service);
+                    let stop = Arc::clone(&self.stop);
+                    let guard = ConnGuard(Arc::clone(&self.active));
+                    self.active.fetch_add(1, Ordering::Acquire);
+                    let dims = self.dims;
+                    let seed = self
+                        .seed
+                        .wrapping_add(conn_id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                    std::thread::spawn(move || {
+                        let _guard = guard;
+                        handle_connection(service, stream, seed, stop, dims);
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Err(e) => {
+                    return Err(e).with_context(|| {
+                        format!("accepting on replay server socket {}", self.path.display())
+                    });
+                }
+            }
+        }
+        // Drain: clients that quiesced before Shutdown disconnect
+        // promptly; an idle client parked in a blocking read cannot be
+        // joined, so the wait is bounded and reported.
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while self.active.load(Ordering::Acquire) > 0 {
+            if std::time::Instant::now() >= deadline {
+                eprintln!(
+                    "[pal] WARNING: {} connection(s) still open at shutdown; \
+                     a concurrent state capture may miss their in-flight requests",
+                    self.active.load(Ordering::Acquire)
+                );
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        std::fs::remove_file(&self.path).ok();
+        Ok(())
+    }
+}
+
+/// Per-connection loop: read frame → decode → dispatch → respond.
+fn handle_connection(
+    service: Arc<ReplayService>,
+    mut stream: UnixStream,
+    seed: u64,
+    stop: Arc<AtomicBool>,
+    dims: Option<(usize, usize)>,
+) {
+    // Accepted sockets may inherit the listener's non-blocking mode;
+    // connection I/O is plain blocking reads.
+    let _ = stream.set_nonblocking(false);
+    let mut rng = Rng::new(seed);
+    let mut writers: HashMap<u64, TrajectoryWriter> = HashMap::new();
+    let mut scratch = SampleBatch::default();
+    loop {
+        let payload = match read_frame(&mut stream) {
+            Ok(Some(p)) => p,
+            // Client hung up between frames.
+            Ok(None) => break,
+            Err(e) => {
+                // The stream may be mid-frame; answer and drop it.
+                let resp = Response::Error { message: format!("protocol error: {e}") };
+                let _ = write_frame(&mut stream, &resp.encode());
+                break;
+            }
+        };
+        let resp = match Request::decode(&payload) {
+            // Frame boundaries are intact (the frame checksum passed);
+            // a bad payload is answerable without closing.
+            Err(e) => Response::Error { message: format!("bad request: {e}") },
+            Ok(Request::Shutdown) => {
+                let _ = write_frame(&mut stream, &Response::Ok.encode());
+                stop.store(true, Ordering::Relaxed);
+                break;
+            }
+            Ok(req) => dispatch(&service, &mut writers, &mut rng, &mut scratch, dims, req),
+        };
+        if write_frame(&mut stream, &resp.encode()).is_err() {
+            break;
+        }
+    }
+}
+
+/// Apply one decoded request against the service. Infallible by
+/// construction: every failure is a [`Response::Error`] value, so a
+/// hostile request can never take the connection thread down.
+fn dispatch(
+    service: &Arc<ReplayService>,
+    writers: &mut HashMap<u64, TrajectoryWriter>,
+    rng: &mut Rng,
+    scratch: &mut SampleBatch,
+    dims: Option<(usize, usize)>,
+    req: Request,
+) -> Response {
+    match req {
+        Request::Hello { rng_seed } => {
+            *rng = Rng::new(rng_seed);
+            Response::Ok
+        }
+        Request::Append { actor_id, steps } => {
+            // Validate the WHOLE batch before applying any of it, so a
+            // malformed batch never half-applies. Without declared dims
+            // only self-consistency is checkable; with them a
+            // mismatched client fails on its first frame instead of
+            // silently truncating/padding rows in storage.
+            for (i, s) in steps.iter().enumerate() {
+                let self_consistent =
+                    !s.obs.is_empty() && !s.action.is_empty() && s.obs.len() == s.next_obs.len();
+                let dims_ok = dims
+                    .map_or(true, |(od, ad)| s.obs.len() == od && s.action.len() == ad);
+                if !self_consistent || !dims_ok {
+                    let expected = match dims {
+                        Some((od, ad)) => format!("obs_dim {od}, act_dim {ad}"),
+                        None => "non-empty obs/action with obs_dim == next_obs dim".to_string(),
+                    };
+                    return Response::Error {
+                        message: format!(
+                            "append step {i} has dims obs={}/next_obs={}/action={}, server \
+                             expects {expected}",
+                            s.obs.len(),
+                            s.next_obs.len(),
+                            s.action.len(),
+                        ),
+                    };
+                }
+            }
+            if !writers.contains_key(&actor_id) && writers.len() >= MAX_WRITERS_PER_CONN {
+                return Response::Error {
+                    message: format!(
+                        "connection already writes for {MAX_WRITERS_PER_CONN} distinct \
+                         actor ids — actor id {actor_id} rejected (buggy id generation?)"
+                    ),
+                };
+            }
+            let writer = writers
+                .entry(actor_id)
+                .or_insert_with(|| service.writer(actor_id as usize));
+            let mut consumed = 0u32;
+            let mut emitted = 0u32;
+            for step in steps {
+                // Stop at the first limiter stall; the client retries
+                // the tail. An admitted step is fully fanned out, so an
+                // insert is never half-applied.
+                if writer.throttled() {
+                    break;
+                }
+                emitted += writer.append(step) as u32;
+                consumed += 1;
+            }
+            Response::Appended { consumed, emitted }
+        }
+        Request::Sample { table, batch } => match service.sampler(&table) {
+            None => Response::Error { message: format!("unknown table `{table}`") },
+            Some(sampler) => match sampler.try_sample(batch as usize, rng, scratch) {
+                SampleOutcome::Sampled => Response::Sampled(scratch.clone()),
+                SampleOutcome::Throttled => {
+                    Response::WouldStall { reason: StallReason::Throttled }
+                }
+                SampleOutcome::NotEnoughData => {
+                    Response::WouldStall { reason: StallReason::NotEnoughData }
+                }
+            },
+        },
+        Request::UpdatePriorities { table, indices, td_abs } => match service.table(&table) {
+            None => Response::Error { message: format!("unknown table `{table}`") },
+            Some(t) => {
+                let cap = t.capacity() as u64;
+                if let Some(bad) = indices.iter().find(|&&i| i >= cap) {
+                    return Response::Error {
+                        message: format!(
+                            "priority index {bad} out of range for table `{table}` \
+                             (capacity {cap})"
+                        ),
+                    };
+                }
+                if let Some(bad) = td_abs.iter().find(|v| !v.is_finite()) {
+                    return Response::Error {
+                        message: format!("non-finite priority value {bad} rejected"),
+                    };
+                }
+                let idx: Vec<usize> = indices.iter().map(|&i| i as usize).collect();
+                t.update_priorities(&idx, &td_abs);
+                Response::Ok
+            }
+        },
+        Request::Stats => Response::Stats {
+            tables: service
+                .tables()
+                .iter()
+                .map(|t| TableInfo {
+                    name: t.name().to_string(),
+                    len: t.len() as u64,
+                    capacity: t.capacity() as u64,
+                    stats: t.stats_snapshot(),
+                })
+                .collect(),
+        },
+        Request::Checkpoint => match service.checkpoint() {
+            Ok(state) => {
+                let state = state.encode();
+                // A state payload the framing layer cannot carry must be
+                // a clear error frame, not a dropped connection.
+                if state.len() + 64 > super::frame::MAX_FRAME_LEN {
+                    Response::Error {
+                        message: format!(
+                            "checkpoint is {} bytes, larger than the {}-byte frame cap — \
+                             checkpoint the serving process directly (`pal serve --save-state`)",
+                            state.len(),
+                            super::frame::MAX_FRAME_LEN
+                        ),
+                    }
+                } else {
+                    Response::State { state }
+                }
+            }
+            Err(e) => Response::Error { message: format!("checkpoint failed: {e}") },
+        },
+        Request::Restore { state } => {
+            match ServiceState::decode(&state).and_then(|s| service.restore(&s)) {
+                Ok(()) => Response::Ok,
+                Err(e) => Response::Error { message: format!("restore failed: {e}") },
+            }
+        }
+        // Handled (and answered) by the connection loop before dispatch.
+        Request::Shutdown => Response::Ok,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::replay::UniformReplay;
+    use crate::service::{ItemKind, RateLimiter, Table};
+
+    fn tiny_service() -> Arc<ReplayService> {
+        Arc::new(
+            ReplayService::new(vec![Table::new(
+                "replay",
+                ItemKind::OneStep,
+                Arc::new(UniformReplay::new(32, 2, 1)),
+                RateLimiter::Unlimited { min_size_to_sample: 1 },
+            )])
+            .unwrap(),
+        )
+    }
+
+    #[test]
+    fn bind_refuses_non_socket_files_and_replaces_stale_sockets() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("pal_srv_bind_{}.sock", std::process::id()));
+        std::fs::write(&path, b"not a socket").unwrap();
+        assert!(ReplayServer::bind(tiny_service(), &path, 0).is_err());
+        std::fs::remove_file(&path).unwrap();
+
+        // A stale socket (no listener behind it) is replaced.
+        {
+            let first = ReplayServer::bind(tiny_service(), &path, 0).unwrap();
+            drop(first); // listener gone, socket file left behind
+        }
+        assert!(path.exists(), "dropping the server leaves the socket file");
+        let second = ReplayServer::bind(tiny_service(), &path, 0).unwrap();
+        assert_eq!(second.socket_path(), path.as_path());
+        drop(second);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn dispatch_rejects_hostile_priority_updates() {
+        let service = tiny_service();
+        let mut writers = HashMap::new();
+        let mut rng = Rng::new(1);
+        let mut scratch = SampleBatch::default();
+        // Out-of-range index.
+        let resp = dispatch(
+            &service,
+            &mut writers,
+            &mut rng,
+            &mut scratch,
+            None,
+            Request::UpdatePriorities {
+                table: "replay".into(),
+                indices: vec![1 << 50],
+                td_abs: vec![1.0],
+            },
+        );
+        match resp {
+            Response::Error { message } => assert!(message.contains("out of range"), "{message}"),
+            other => panic!("expected Error, got {other:?}"),
+        }
+        // Non-finite priority.
+        let resp = dispatch(
+            &service,
+            &mut writers,
+            &mut rng,
+            &mut scratch,
+            None,
+            Request::UpdatePriorities {
+                table: "replay".into(),
+                indices: vec![0],
+                td_abs: vec![f32::NAN],
+            },
+        );
+        assert!(matches!(resp, Response::Error { .. }));
+        // Unknown table.
+        let resp = dispatch(
+            &service,
+            &mut writers,
+            &mut rng,
+            &mut scratch,
+            None,
+            Request::Sample { table: "nope".into(), batch: 4 },
+        );
+        assert!(matches!(resp, Response::Error { .. }));
+    }
+
+    fn step_with_dims(obs: usize, act: usize) -> crate::service::WriterStep {
+        crate::service::WriterStep {
+            obs: vec![0.5; obs],
+            action: vec![0.1; act],
+            next_obs: vec![0.6; obs],
+            reward: 1.0,
+            done: false,
+            truncated: false,
+        }
+    }
+
+    #[test]
+    fn dispatch_rejects_mismatched_step_dims_atomically() {
+        let service = tiny_service(); // tables are obs_dim 2, act_dim 1
+        let mut writers = HashMap::new();
+        let mut rng = Rng::new(1);
+        let mut scratch = SampleBatch::default();
+        // Declared dims: a wrong-width step is rejected and NOTHING of
+        // the batch (even its valid steps) is applied.
+        let resp = dispatch(
+            &service,
+            &mut writers,
+            &mut rng,
+            &mut scratch,
+            Some((2, 1)),
+            Request::Append {
+                actor_id: 0,
+                steps: vec![step_with_dims(2, 1), step_with_dims(8, 1)],
+            },
+        );
+        match resp {
+            Response::Error { message } => assert!(message.contains("expects"), "{message}"),
+            other => panic!("expected Error, got {other:?}"),
+        }
+        assert_eq!(service.table("replay").unwrap().len(), 0);
+        // Without declared dims, self-inconsistent steps still fail.
+        let mut bad = step_with_dims(2, 1);
+        bad.next_obs = vec![0.0; 5];
+        let resp = dispatch(
+            &service,
+            &mut writers,
+            &mut rng,
+            &mut scratch,
+            None,
+            Request::Append { actor_id: 0, steps: vec![bad] },
+        );
+        assert!(matches!(resp, Response::Error { .. }));
+        assert_eq!(service.table("replay").unwrap().len(), 0);
+        // A well-formed batch passes.
+        let resp = dispatch(
+            &service,
+            &mut writers,
+            &mut rng,
+            &mut scratch,
+            Some((2, 1)),
+            Request::Append { actor_id: 0, steps: vec![step_with_dims(2, 1)] },
+        );
+        assert!(matches!(resp, Response::Appended { consumed: 1, .. }));
+        assert_eq!(service.table("replay").unwrap().len(), 1);
+    }
+}

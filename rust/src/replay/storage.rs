@@ -30,7 +30,7 @@ impl Transition {
 }
 
 /// A batch of transitions in flat SoA form, ready for literal conversion.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct SampleBatch {
     pub indices: Vec<usize>,
     pub priorities: Vec<f32>,

@@ -8,7 +8,7 @@
 //!
 //! | here | Reverb | notes |
 //! |------|--------|-------|
-//! | [`ReplayService`] | `reverb.Server` | in-process, no RPC layer (yet — see ROADMAP) |
+//! | [`ReplayService`] | `reverb.Server` | in-process; [`crate::remote`] puts a socket front-end on it |
 //! | [`Table`] | `reverb.Table` | named; wraps any [`crate::replay::ReplayBuffer`] impl |
 //! | wrapped buffer impl | sampler + remover | prioritized = proportional sampler, uniform = FIFO ring; both evict FIFO |
 //! | [`RateLimiter::SampleToInsertRatio`] | `reverb.rate_limiters.SampleToInsertRatio` | σ, `min_size_to_sample`, error bounds |
@@ -52,14 +52,23 @@ use crate::util::rng::Rng;
 use anyhow::{bail, Result};
 use std::sync::Arc;
 
-/// Parsed `--tables` entry: `name=kind[@capacity]`, e.g.
-/// `replay=1step`, `multi=nstep:3@50000`, `traj=seq:8`.
+/// Parsed `--tables` entry: `name=kind[@option,option,...]`, e.g.
+/// `replay=1step`, `multi=nstep:3@50000`, `traj=seq:8`,
+/// `hot=1step@50000,alpha=0.9,beta=0.6`. Options after `@` are a bare
+/// integer (capacity) and per-table PER exponent overrides
+/// `alpha=..` / `beta=..` (the run's `--alpha`/`--beta` when absent),
+/// so a uniform-ish FIFO table can sit next to a heavily-prioritized
+/// one for the same stream.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TableSpec {
     pub name: String,
     pub kind: ItemKind,
     /// Per-table capacity override (run default when `None`).
     pub capacity: Option<usize>,
+    /// Per-table PER priority exponent α (run default when `None`).
+    pub alpha: Option<f32>,
+    /// Per-table PER importance exponent β (run default when `None`).
+    pub beta: Option<f32>,
 }
 
 impl TableSpec {
@@ -68,28 +77,154 @@ impl TableSpec {
     pub fn parse(s: &str, gamma: f32) -> Result<Self> {
         let (name, rest) = match s.split_once('=') {
             Some((n, r)) => (n.trim(), r.trim()),
-            None => bail!("table spec `{s}` must be name=kind[@capacity]"),
+            None => bail!("table spec `{s}` must be name=kind[@capacity,alpha=..,beta=..]"),
         };
         if name.is_empty() {
             bail!("table spec `{s}` has an empty name");
         }
-        let (kind_str, capacity) = match rest.split_once('@') {
-            Some((k, c)) => {
-                let cap: usize = c
+        let (kind_str, opts) = match rest.split_once('@') {
+            Some((k, o)) => (k, Some(o)),
+            None => (rest, None),
+        };
+        let mut capacity = None;
+        let mut alpha = None;
+        let mut beta = None;
+        for opt in opts.into_iter().flat_map(|o| o.split(',')) {
+            let opt = opt.trim();
+            if opt.is_empty() {
+                bail!("empty option in table spec `{s}`");
+            }
+            if let Some((key, value)) = opt.split_once('=') {
+                let (key, value) = (key.trim(), value.trim());
+                let slot = match key {
+                    "alpha" => &mut alpha,
+                    "beta" => &mut beta,
+                    other => bail!(
+                        "unknown option `{other}` in table spec `{s}` \
+                         (expected a capacity, alpha=.., beta=..)"
+                    ),
+                };
+                let v: f32 = value
                     .parse()
-                    .map_err(|_| anyhow::anyhow!("bad capacity in table spec `{s}`"))?;
+                    .map_err(|_| anyhow::anyhow!("bad {key} value `{value}` in table spec `{s}`"))?;
+                if !v.is_finite() || !(0.0..=1.0).contains(&v) {
+                    bail!("{key} must be within [0, 1] in table spec `{s}`, got `{value}`");
+                }
+                if slot.replace(v).is_some() {
+                    bail!("duplicate {key} in table spec `{s}`");
+                }
+            } else {
+                let cap: usize = opt
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad capacity `{opt}` in table spec `{s}`"))?;
                 if cap == 0 {
                     bail!("capacity must be > 0 in table spec `{s}`");
                 }
-                (k, Some(cap))
+                if capacity.replace(cap).is_some() {
+                    bail!("duplicate capacity in table spec `{s}`");
+                }
             }
-            None => (rest, None),
-        };
+        }
         Ok(TableSpec {
             name: name.to_string(),
             kind: ItemKind::parse(kind_str, gamma)?,
             capacity,
+            alpha,
+            beta,
         })
+    }
+
+    /// Parse a whole `--tables` value. Entries split on commas, but a
+    /// comma also separates the options *inside* one entry
+    /// (`hot=1step@alpha=0.9,beta=0.6`): a segment whose key before the
+    /// first `=` is `alpha`/`beta` continues the previous entry instead
+    /// of starting a new one. Consequence: `alpha` and `beta` are
+    /// reserved by the grammar and cannot be used as table names.
+    pub fn parse_list(s: &str, gamma: f32) -> Result<Vec<TableSpec>> {
+        let mut entries: Vec<String> = Vec::new();
+        for seg in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            // A segment continues the previous entry when it is an
+            // exponent option, or a bare capacity following an entry
+            // that already opened its option list (a capacity can never
+            // START an entry — entries need `name=kind`).
+            let continues = matches!(
+                seg.split_once('=').map(|(k, _)| k.trim()),
+                Some("alpha") | Some("beta")
+            ) || (seg.bytes().all(|b| b.is_ascii_digit())
+                && entries.last().is_some_and(|p| p.contains('@')));
+            match (continues, entries.last_mut()) {
+                (true, Some(prev)) => {
+                    prev.push(',');
+                    prev.push_str(seg);
+                }
+                (true, None) => bail!(
+                    "`{seg}` looks like a per-table exponent option but no table entry \
+                     precedes it (`alpha` and `beta` are reserved option keys, not \
+                     usable as table names)"
+                ),
+                (false, _) => entries.push(seg.to_string()),
+            }
+        }
+        entries.iter().map(|e| Self::parse(e, gamma)).collect()
+    }
+}
+
+/// Actor-side experience sink: what an actor loop needs from a replay
+/// front-end, whether the tables live in this process
+/// ([`TrajectoryWriter`]) or behind a socket
+/// ([`crate::remote::RemoteWriter`]). Methods are fallible because the
+/// remote implementation does I/O; the in-process one never errors.
+pub trait ExperienceWriter: Send {
+    /// True while a target table's rate limiter denies inserts; the
+    /// actor sleep-polls on this instead of blocking.
+    fn throttled(&mut self) -> Result<bool>;
+
+    /// Append one raw env step; returns the number of finished items it
+    /// emitted (a remote writer may report them on a later call once
+    /// the limiter admits the step).
+    fn append(&mut self, step: WriterStep) -> Result<usize>;
+}
+
+impl ExperienceWriter for TrajectoryWriter {
+    fn throttled(&mut self) -> Result<bool> {
+        Ok(TrajectoryWriter::throttled(self))
+    }
+
+    fn append(&mut self, step: WriterStep) -> Result<usize> {
+        Ok(TrajectoryWriter::append(self, step))
+    }
+}
+
+/// Learner-side experience source: rate-limited batch draws plus
+/// priority feedback, in-process ([`SamplerHandle`]) or over a socket
+/// ([`crate::remote::RemoteSampler`]).
+pub trait ExperienceSampler: Send {
+    /// Poll for a batch. The remote implementation samples with a
+    /// server-side RNG (seeded at connect) and ignores `rng`.
+    fn try_sample(
+        &mut self,
+        batch: usize,
+        rng: &mut Rng,
+        out: &mut SampleBatch,
+    ) -> Result<SampleOutcome>;
+
+    /// Feed |TD| errors back for a sampled batch.
+    fn update_priorities(&mut self, indices: &[usize], td_abs: &[f32]) -> Result<()>;
+}
+
+impl ExperienceSampler for SamplerHandle {
+    fn try_sample(
+        &mut self,
+        batch: usize,
+        rng: &mut Rng,
+        out: &mut SampleBatch,
+    ) -> Result<SampleOutcome> {
+        Ok(SamplerHandle::try_sample(self, batch, rng, out))
+    }
+
+    fn update_priorities(&mut self, indices: &[usize], td_abs: &[f32]) -> Result<()> {
+        SamplerHandle::update_priorities(self, indices, td_abs);
+        Ok(())
     }
 }
 
@@ -228,12 +363,43 @@ mod tests {
         assert_eq!(s.name, "replay");
         assert_eq!(s.kind, ItemKind::OneStep);
         assert_eq!(s.capacity, None);
+        assert_eq!((s.alpha, s.beta), (None, None));
         let s = TableSpec::parse("multi=nstep:3@50000", 0.9).unwrap();
         assert_eq!(s.kind, ItemKind::NStep { n: 3, gamma: 0.9 });
         assert_eq!(s.capacity, Some(50_000));
+        let s = TableSpec::parse("hot=1step@50000,alpha=0.9,beta=0.6", 0.99).unwrap();
+        assert_eq!(s.capacity, Some(50_000));
+        assert_eq!(s.alpha, Some(0.9));
+        assert_eq!(s.beta, Some(0.6));
         assert!(TableSpec::parse("=1step", 0.99).is_err());
         assert!(TableSpec::parse("noequals", 0.99).is_err());
         assert!(TableSpec::parse("t=seq:4@0", 0.99).is_err());
+    }
+
+    #[test]
+    fn table_spec_list_keeps_exponent_options_attached() {
+        let specs = TableSpec::parse_list(
+            "replay=1step@alpha=0.7,beta=0.5, aux=nstep:3@1024, flat=1step@alpha=0.0",
+            0.9,
+        )
+        .unwrap();
+        assert_eq!(specs.len(), 3);
+        assert_eq!(specs[0].name, "replay");
+        assert_eq!((specs[0].alpha, specs[0].beta), (Some(0.7), Some(0.5)));
+        assert_eq!(specs[1].name, "aux");
+        assert_eq!(specs[1].capacity, Some(1024));
+        assert_eq!((specs[1].alpha, specs[1].beta), (None, None));
+        assert_eq!(specs[2].alpha, Some(0.0));
+        // A bare capacity after the option list stays attached too.
+        let specs = TableSpec::parse_list("t=seq:4@alpha=0.9,beta=0.4,128", 0.9).unwrap();
+        assert_eq!(specs.len(), 1);
+        assert_eq!(specs[0].capacity, Some(128));
+        assert_eq!((specs[0].alpha, specs[0].beta), (Some(0.9), Some(0.4)));
+        // An exponent option with no entry to attach to is an error, as
+        // is a bare capacity with no option list to join.
+        assert!(TableSpec::parse_list("alpha=0.5", 0.9).is_err());
+        assert!(TableSpec::parse_list("beta=0.5,replay=1step", 0.9).is_err());
+        assert!(TableSpec::parse_list("replay=1step,128", 0.9).is_err());
     }
 
     #[test]

@@ -105,7 +105,7 @@ impl ItemKind {
 /// One raw env step as the actor observed it. Unlike
 /// [`Transition`], truncation is kept separate from termination — the
 /// writer owns the bootstrap-through-truncation rule.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct WriterStep {
     pub obs: Vec<f32>,
     pub action: Vec<f32>,

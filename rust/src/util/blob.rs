@@ -118,6 +118,21 @@ impl ByteWriter {
         }
     }
 
+    /// Length-prefixed raw byte slice (u64 length) — nested payloads
+    /// (e.g. an encoded `ServiceState` inside an RPC frame).
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.u64(v.len() as u64);
+        self.buf.extend_from_slice(v);
+    }
+
+    /// Length-prefixed u64 slice (u64 length).
+    pub fn u64s(&mut self, v: &[u64]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
     pub fn finish(self) -> Vec<u8> {
         self.buf
     }
@@ -191,6 +206,38 @@ impl<'a> ByteReader<'a> {
         Ok(out)
     }
 
+    /// Length-prefixed raw byte slice written by [`ByteWriter::bytes`].
+    pub fn bytes(&mut self, what: &str) -> Result<Vec<u8>> {
+        let n = self.u64(what)? as usize;
+        if n > self.buf.len() - self.pos {
+            bail!(
+                "truncated payload: `{what}` claims {n} bytes but only {} remain",
+                self.buf.len() - self.pos
+            );
+        }
+        Ok(self.take(n, what)?.to_vec())
+    }
+
+    /// Length-prefixed u64 slice written by [`ByteWriter::u64s`].
+    pub fn u64s(&mut self, what: &str) -> Result<Vec<u64>> {
+        let n = self.u64(what)? as usize;
+        let fits = match n.checked_mul(8).and_then(|b| self.pos.checked_add(b)) {
+            Some(end) => end <= self.buf.len(),
+            None => false,
+        };
+        if !fits {
+            bail!(
+                "truncated payload: `{what}` claims {n} u64s but only {} bytes remain",
+                self.buf.len() - self.pos
+            );
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()));
+        }
+        Ok(out)
+    }
+
     /// Error if any bytes remain unread (catches layout drift).
     pub fn expect_end(&self) -> Result<()> {
         if self.pos != self.buf.len() {
@@ -225,6 +272,24 @@ mod tests {
         assert_eq!(r.str_("e").unwrap(), "hello");
         assert_eq!(r.f32s("f").unwrap(), vec![1.0, 2.0, 3.0]);
         assert!(r.expect_end().is_ok());
+    }
+
+    #[test]
+    fn bytes_and_u64s_roundtrip_and_reject_bogus_lengths() {
+        let mut w = ByteWriter::new();
+        w.bytes(b"nested payload");
+        w.u64s(&[3, 1 << 40, 0]);
+        let buf = w.finish();
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.bytes("blob").unwrap(), b"nested payload");
+        assert_eq!(r.u64s("indices").unwrap(), vec![3, 1 << 40, 0]);
+        assert!(r.expect_end().is_ok());
+
+        let mut w = ByteWriter::new();
+        w.u64(u64::MAX); // claims 2^64 bytes / u64s
+        let buf = w.finish();
+        assert!(ByteReader::new(&buf).bytes("blob").is_err());
+        assert!(ByteReader::new(&buf).u64s("indices").is_err());
     }
 
     #[test]

@@ -42,11 +42,19 @@ fn cfg() -> TrainConfig {
     cfg.warmup_steps = 32;
     cfg.rate_limit = RateLimitSpec::SamplesPerInsert(1.0);
     cfg.tables = vec![
-        TableSpec { name: "replay".into(), kind: ItemKind::OneStep, capacity: None },
+        TableSpec {
+            name: "replay".into(),
+            kind: ItemKind::OneStep,
+            capacity: None,
+            alpha: None,
+            beta: None,
+        },
         TableSpec {
             name: "aux".into(),
             kind: ItemKind::NStep { n: 3, gamma: 0.99 },
             capacity: Some(256),
+            alpha: None,
+            beta: None,
         },
     ];
     cfg

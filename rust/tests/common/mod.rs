@@ -1,0 +1,43 @@
+//! Shared scaffolding for the remote-replay integration tests: bind a
+//! [`ReplayServer`] on a unique socket, serve it on a background
+//! thread, wait for liveness, and end it over the `Shutdown` RPC —
+//! one copy of the server lifecycle, so every suite tests the same
+//! bind/drain/shutdown semantics.
+
+use pal_rl::remote::{RemoteClient, ReplayServer};
+use pal_rl::service::ReplayService;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Bind on a unique temp socket, serve on a background thread, and
+/// block until the server accepts connections.
+pub fn start_server(
+    service: Arc<ReplayService>,
+) -> (PathBuf, std::thread::JoinHandle<anyhow::Result<()>>) {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    let path = std::env::temp_dir().join(format!(
+        "pal_remote_test_{}_{}.sock",
+        std::process::id(),
+        NEXT.fetch_add(1, Ordering::Relaxed)
+    ));
+    let server = ReplayServer::bind(service, &path, 42).expect("bind");
+    let handle = std::thread::spawn(move || server.serve());
+    for _ in 0..500 {
+        if std::os::unix::net::UnixStream::connect(&path).is_ok() {
+            return (path, handle);
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    panic!("server at {} never came up", path.display());
+}
+
+/// Shutdown RPC + join; panics if the server errored.
+pub fn stop_server(path: &Path, handle: std::thread::JoinHandle<anyhow::Result<()>>) {
+    RemoteClient::connect(path)
+        .expect("connect for shutdown")
+        .shutdown()
+        .expect("shutdown rpc");
+    handle.join().expect("server thread").expect("serve result");
+}

@@ -1,0 +1,217 @@
+//! Protocol fuzz/property tests for the remote replay front-end: every
+//! malformed input — truncated, bit-flipped, oversized-length,
+//! wrong-magic frames, garbage payloads — must yield a descriptive
+//! error, never a panic, and must never leave a half-applied insert in
+//! the served tables.
+
+mod common;
+
+use common::{start_server, stop_server};
+use pal_rl::remote::{read_frame, write_frame, RemoteClient, Request, Response, FRAME_MAGIC};
+use pal_rl::replay::UniformReplay;
+use pal_rl::service::{ItemKind, RateLimiter, ReplayService, Table, WriterStep};
+use pal_rl::util::prop::{check, Pair, UsizeIn};
+use pal_rl::util::rng::Rng;
+use std::io::{Cursor, Read, Write};
+use std::os::unix::net::UnixStream;
+use std::sync::Arc;
+
+fn step(i: usize) -> WriterStep {
+    WriterStep {
+        obs: vec![i as f32, -(i as f32)],
+        action: vec![0.5],
+        next_obs: vec![i as f32 + 1.0, -(i as f32)],
+        reward: 1.0,
+        done: false,
+        truncated: false,
+    }
+}
+
+fn tiny_service() -> Arc<ReplayService> {
+    Arc::new(
+        ReplayService::new(vec![Table::new(
+            "replay",
+            ItemKind::OneStep,
+            Arc::new(UniformReplay::new(64, 2, 1)),
+            RateLimiter::Unlimited { min_size_to_sample: 1 },
+        )])
+        .unwrap(),
+    )
+}
+
+/// A frame with a representative request inside, as raw bytes.
+fn sample_frame() -> Vec<u8> {
+    let req = Request::Append { actor_id: 3, steps: vec![step(0), step(1), step(2)] };
+    let mut buf = Vec::new();
+    write_frame(&mut buf, &req.encode()).unwrap();
+    buf
+}
+
+#[test]
+fn prop_truncated_frames_error_at_every_cut() {
+    let frame = sample_frame();
+    let gen = UsizeIn { lo: 1, hi: frame.len() - 1 };
+    check("frame-truncation", 0x7A11, 300, &gen, |&cut| {
+        let mut cur = Cursor::new(frame[..cut].to_vec());
+        match read_frame(&mut cur) {
+            Err(e) => {
+                let msg = e.to_string();
+                if msg.is_empty() {
+                    Err("error with empty message".into())
+                } else {
+                    Ok(())
+                }
+            }
+            Ok(got) => Err(format!("cut at {cut} decoded to {got:?}")),
+        }
+    });
+}
+
+#[test]
+fn prop_bit_flips_anywhere_are_rejected() {
+    let frame = sample_frame();
+    let gen = Pair(UsizeIn { lo: 0, hi: frame.len() - 1 }, UsizeIn { lo: 0, hi: 7 });
+    check("frame-bitflip", 0xF11B, 400, &gen, |&(pos, bit)| {
+        let mut bytes = frame.clone();
+        bytes[pos] ^= 1 << bit;
+        // A flip in the length field may make the frame "longer" than
+        // the buffer (truncation error) or shorter (checksum error);
+        // flips in magic/payload/crc hit their own checks. All must
+        // fail — the decoder may never hand back a frame.
+        match read_frame(&mut Cursor::new(bytes)) {
+            Err(_) => Ok(()),
+            Ok(got) => Err(format!("flip at byte {pos} bit {bit} decoded to {got:?}")),
+        }
+    });
+}
+
+#[test]
+fn oversized_length_and_wrong_magic_are_descriptive() {
+    // Oversized length field: rejected before any allocation.
+    let mut oversized = Vec::new();
+    oversized.extend_from_slice(FRAME_MAGIC);
+    oversized.extend_from_slice(&u32::MAX.to_le_bytes());
+    oversized.extend_from_slice(&[0u8; 64]);
+    let err = read_frame(&mut Cursor::new(oversized)).unwrap_err().to_string();
+    assert!(err.contains("exceeds"), "{err}");
+
+    // Wrong magic (e.g. a future protocol version).
+    let mut wrong = sample_frame();
+    wrong[7] = b'9';
+    let err = read_frame(&mut Cursor::new(wrong)).unwrap_err().to_string();
+    assert!(err.contains("magic"), "{err}");
+}
+
+#[test]
+fn prop_request_decoder_never_panics_and_roundtrips_valid_decodes() {
+    // Random payloads: decode must never panic; when garbage happens to
+    // decode as a valid request, re-encoding it must roundtrip (the
+    // encoding is canonical).
+    let gen = Pair(UsizeIn { lo: 0, hi: 200 }, UsizeIn { lo: 0, hi: u32::MAX as usize });
+    check("request-fuzz", 0xDECD, 500, &gen, |&(len, seed)| {
+        let mut rng = Rng::new(seed as u64);
+        let bytes: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        if let Ok(req) = Request::decode(&bytes) {
+            let redecoded = Request::decode(&req.encode())
+                .map_err(|e| format!("canonical re-decode failed: {e}"))?;
+            if redecoded != req {
+                return Err(format!("roundtrip changed the request: {req:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn corrupted_append_is_rejected_with_no_half_applied_insert() {
+    let service = tiny_service();
+    let (path, handle) = start_server(Arc::clone(&service));
+
+    // A valid append lands fully.
+    let mut client = RemoteClient::connect(&path).unwrap();
+    let (consumed, _) = client.append(0, vec![step(0), step(1)]).unwrap();
+    assert_eq!(consumed, 2);
+    assert_eq!(service.table("replay").unwrap().len(), 2);
+    let inserts_before = service.table("replay").unwrap().stats_snapshot().inserts;
+    assert_eq!(inserts_before, 2);
+
+    // The same append with one payload byte flipped: the frame checksum
+    // fails, the server answers a descriptive error and applies nothing.
+    let req = Request::Append { actor_id: 0, steps: vec![step(2), step(3), step(4)] };
+    let mut frame = Vec::new();
+    write_frame(&mut frame, &req.encode()).unwrap();
+    let payload_start = FRAME_MAGIC.len() + 4;
+    frame[payload_start + 9] ^= 0xFF;
+    let mut raw = UnixStream::connect(&path).unwrap();
+    raw.write_all(&frame).unwrap();
+    let resp = read_frame(&mut raw).expect("server must answer").expect("with a frame");
+    match Response::decode(&resp).unwrap() {
+        Response::Error { message } => {
+            assert!(message.contains("checksum"), "{message}");
+        }
+        other => panic!("corrupt frame got {other:?}"),
+    }
+    // The connection was dropped after the protocol error.
+    let mut probe = [0u8; 1];
+    assert_eq!(raw.read(&mut probe).unwrap_or(0), 0, "connection must be closed");
+
+    // No step of the corrupted batch was applied — not even the ones
+    // "before" the flipped byte.
+    assert_eq!(service.table("replay").unwrap().len(), 2);
+    assert_eq!(
+        service.table("replay").unwrap().stats_snapshot().inserts,
+        inserts_before,
+        "a corrupted frame must never half-apply an insert"
+    );
+
+    // The server still serves fresh connections afterwards.
+    let mut after = RemoteClient::connect(&path).unwrap();
+    let stats = after.stats().unwrap();
+    assert_eq!(stats[0].stats.inserts, 2);
+
+    // Quiesce before shutdown so the server's drain returns promptly.
+    drop(client);
+    drop(after);
+    stop_server(&path, handle);
+}
+
+#[test]
+fn server_survives_garbage_streams_and_bad_payloads() {
+    let service = tiny_service();
+    let (path, handle) = start_server(Arc::clone(&service));
+
+    // Random garbage streams: the server may answer an error frame or
+    // just drop the connection; it must keep serving either way.
+    let mut rng = Rng::new(0xBAD5EED);
+    for round in 0..20 {
+        let mut s = UnixStream::connect(&path).unwrap();
+        let len = 1 + rng.below_usize(300);
+        let garbage: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        // The write itself may fail once the server closes its end —
+        // that is fine; panics and hangs are not.
+        let _ = s.write_all(&garbage);
+        let _ = s.shutdown(std::net::Shutdown::Write);
+        let mut sink = Vec::new();
+        let _ = s.read_to_end(&mut sink);
+        drop(s);
+        // Still alive?
+        let mut probe = RemoteClient::connect(&path)
+            .unwrap_or_else(|e| panic!("server died after garbage round {round}: {e}"));
+        probe.stats().expect("stats after garbage");
+    }
+
+    // A checksummed frame with a bogus payload keeps the connection up.
+    let mut client = RemoteClient::connect(&path).unwrap();
+    match client.call(&Request::Sample { table: "no-such-table".into(), batch: 4 }).unwrap() {
+        Response::Error { message } => assert!(message.contains("unknown table"), "{message}"),
+        other => panic!("unknown table got {other:?}"),
+    }
+    // Same connection still works.
+    client.stats().expect("stats after app-level error");
+
+    // Tables were never touched by any of it.
+    assert_eq!(service.table("replay").unwrap().len(), 0);
+
+    drop(client);
+    stop_server(&path, handle);
+}

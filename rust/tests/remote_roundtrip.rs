@@ -1,0 +1,264 @@
+//! Multi-client round-trip tests for the remote replay front-end: a
+//! server thread plus N writer / M sampler clients, asserting
+//! sampled-batch validity (no zero-priority items), exact
+//! sample-to-insert accounting across the wire, byte-identical
+//! checkpoints against an equivalent in-process run, and seeded
+//! sampling equivalence with the in-process `SamplerHandle`.
+
+mod common;
+
+use common::{start_server, stop_server};
+use pal_rl::coordinator::{build_service, BufferKind, TrainConfig};
+use pal_rl::remote::{RemoteClient, RemoteSampler, RemoteWriter};
+use pal_rl::replay::SampleBatch;
+use pal_rl::service::{
+    ExperienceSampler, ExperienceWriter, RateLimitSpec, ReplayService, SampleOutcome,
+    ServiceState, TableSpec, WriterStep,
+};
+use pal_rl::util::rng::Rng;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+const OBS: usize = 3;
+const ACT: usize = 1;
+
+fn step(tag: usize, i: usize) -> WriterStep {
+    WriterStep {
+        obs: vec![tag as f32, i as f32, 0.5],
+        action: vec![i as f32 * 0.1],
+        next_obs: vec![tag as f32, i as f32 + 1.0, 0.5],
+        reward: (i % 7) as f32,
+        done: i % 25 == 24,
+        truncated: false,
+    }
+}
+
+/// One sharded prioritized `replay` table (1-step) under the given
+/// rate-limit spec — the learner-table shape real runs use.
+fn cfg(rate_limit: RateLimitSpec, warmup: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::new("dqn", "CartPole-v1");
+    cfg.buffer = BufferKind::PalKary;
+    cfg.buffer_capacity = 4_096;
+    cfg.shards = 4;
+    cfg.warmup_steps = warmup;
+    cfg.rate_limit = rate_limit;
+    cfg.tables = TableSpec::parse_list("replay=1step", cfg.gamma_nstep).unwrap();
+    cfg
+}
+
+#[test]
+fn soak_n_writers_m_samplers_exact_accounting_no_zero_priorities() {
+    const WRITERS: usize = 3;
+    const SAMPLERS: usize = 2;
+    const STEPS_EACH: usize = 400;
+    const BATCH: usize = 8;
+
+    let service = Arc::new(
+        build_service(&cfg(RateLimitSpec::SamplesPerInsert(1.0), 32), OBS, ACT).unwrap(),
+    );
+    let (path, handle) = start_server(Arc::clone(&service));
+
+    let done = AtomicBool::new(false);
+    let batches_drawn = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        let mut worker_handles = Vec::new();
+        for w in 0..WRITERS {
+            let path = path.clone();
+            worker_handles.push(s.spawn(move || {
+                let mut writer = RemoteWriter::connect(&path, w as u64).expect("writer connect");
+                let wait = |writer: &mut RemoteWriter| {
+                    let mut spins = 0u32;
+                    while writer.throttled().expect("throttled rpc") {
+                        spins += 1;
+                        assert!(spins < 60_000, "writer {w} stalled >60s");
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                };
+                for i in 0..STEPS_EACH {
+                    wait(&mut writer);
+                    writer.append(step(w, i)).expect("append rpc");
+                }
+                // Drain: the limiter may have stalled the final step.
+                wait(&mut writer);
+            }));
+        }
+        for m in 0..SAMPLERS {
+            let path = path.clone();
+            let done = &done;
+            let batches_drawn = &batches_drawn;
+            s.spawn(move || {
+                let mut sampler =
+                    RemoteSampler::connect_default(&path, 1_000 + m as u64).expect("sampler");
+                let mut rng = Rng::new(m as u64);
+                let mut out = SampleBatch::default();
+                while !done.load(Ordering::Relaxed) {
+                    match sampler.try_sample(BATCH, &mut rng, &mut out).expect("sample rpc") {
+                        SampleOutcome::Sampled => {
+                            assert_eq!(out.len(), BATCH);
+                            // Lazy-writing guard: a half-written row has
+                            // zero priority and must never be sampled,
+                            // in-process or over the wire.
+                            assert!(
+                                out.priorities.iter().all(|&p| p > 0.0),
+                                "sampled a zero-priority item over the wire"
+                            );
+                            batches_drawn.fetch_add(1, Ordering::Relaxed);
+                            let idx = out.indices.clone();
+                            let tds: Vec<f32> =
+                                idx.iter().map(|_| rng.f32() * 2.0 + 0.01).collect();
+                            sampler.update_priorities(&idx, &tds).expect("update rpc");
+                        }
+                        _ => std::thread::yield_now(),
+                    }
+                }
+            });
+        }
+        // Join writers and set `done` BEFORE asserting, so a failed
+        // writer cannot leave the samplers spinning forever while the
+        // scope waits on them.
+        let results: Vec<_> = worker_handles.into_iter().map(|h| h.join()).collect();
+        done.store(true, Ordering::Relaxed);
+        for r in results {
+            r.expect("writer thread");
+        }
+    });
+
+    // Exact accounting: the server's counters equal the clients' tallies.
+    let batches = batches_drawn.load(Ordering::Relaxed);
+    let stats = RemoteClient::connect(&path).unwrap().stats().unwrap();
+    assert_eq!(stats.len(), 1);
+    let t = &stats[0].stats;
+    assert_eq!(
+        t.inserts,
+        WRITERS * STEPS_EACH,
+        "every appended step must be recorded exactly once"
+    );
+    assert_eq!(t.sample_batches, batches, "granted batches must match client tally");
+    assert_eq!(t.sampled_items, BATCH * batches);
+    assert_eq!(t.priority_updates, BATCH * batches);
+    // σ=1 ratio bound over the whole run.
+    assert!(
+        t.sample_batches <= t.inserts,
+        "ratio bound violated: {} batches vs {} inserts",
+        t.sample_batches,
+        t.inserts
+    );
+    // And the server-side table really holds the data.
+    assert_eq!(service.table("replay").unwrap().len(), WRITERS * STEPS_EACH);
+
+    stop_server(&path, handle);
+}
+
+#[test]
+fn concurrent_remote_writers_checkpoint_byte_identical_to_in_process_run() {
+    // 4 writers with distinct actor ids on a 4-shard table: affinity
+    // routing gives each shard exactly one writer's items in order, so
+    // the final state is deterministic even under concurrency — and
+    // must equal, byte for byte, the same traffic applied in-process.
+    const WRITERS: usize = 4;
+    const STEPS_EACH: usize = 200;
+
+    let make = || {
+        Arc::new(build_service(&cfg(RateLimitSpec::Unlimited, 16), OBS, ACT).unwrap())
+    };
+    let served = make();
+    let (path, handle) = start_server(Arc::clone(&served));
+
+    std::thread::scope(|s| {
+        for w in 0..WRITERS {
+            let path = path.clone();
+            s.spawn(move || {
+                let mut writer = RemoteWriter::connect(&path, w as u64).expect("connect");
+                for i in 0..STEPS_EACH {
+                    assert!(!writer.throttled().expect("rpc"), "unlimited table throttled");
+                    writer.append(step(w, i)).expect("append");
+                }
+            });
+        }
+    });
+    let remote_bytes = RemoteClient::connect(&path).unwrap().checkpoint_bytes().unwrap();
+    stop_server(&path, handle);
+
+    // The equivalent in-process run: same steps, one actor at a time.
+    let twin = make();
+    for w in 0..WRITERS {
+        let mut writer = twin.writer(w);
+        for i in 0..STEPS_EACH {
+            writer.append(step(w, i));
+        }
+    }
+    let twin_bytes = ServiceState::capture(&twin).unwrap().encode();
+    assert_eq!(remote_bytes.len(), twin_bytes.len(), "checkpoint sizes differ");
+    assert!(
+        remote_bytes == twin_bytes,
+        "remote checkpoint differs from the in-process twin (first diff at byte {})",
+        remote_bytes
+            .iter()
+            .zip(&twin_bytes)
+            .position(|(a, b)| a != b)
+            .unwrap_or(0)
+    );
+}
+
+#[test]
+fn seeded_remote_sample_update_loop_equals_in_process_sampler() {
+    const SEED: u64 = 0xE0_11AB;
+    const ROUNDS: usize = 50;
+    const BATCH: usize = 16;
+
+    // Two identically built and identically filled services...
+    let fill = |svc: &ReplayService| {
+        let mut w = svc.writer(0);
+        for i in 0..300 {
+            w.append(step(0, i));
+        }
+    };
+    let served = Arc::new(build_service(&cfg(RateLimitSpec::Unlimited, 1), OBS, ACT).unwrap());
+    let local = build_service(&cfg(RateLimitSpec::Unlimited, 1), OBS, ACT).unwrap();
+    fill(&served);
+    fill(&local);
+
+    // ...one behind the socket, one sampled in-process with the same
+    // seed the remote connection's server-side RNG gets.
+    let (path, handle) = start_server(Arc::clone(&served));
+    let mut remote = RemoteSampler::connect(&path, "replay", SEED).unwrap();
+    let local_sampler = local.default_sampler();
+    let mut local_rng = Rng::new(SEED);
+
+    let mut unused = Rng::new(9); // the remote side ignores this RNG
+    let mut remote_out = SampleBatch::default();
+    let mut local_out = SampleBatch::default();
+    for round in 0..ROUNDS {
+        let r = remote.try_sample(BATCH, &mut unused, &mut remote_out).unwrap();
+        let l = local_sampler.try_sample(BATCH, &mut local_rng, &mut local_out);
+        assert_eq!(r, l, "round {round}: outcomes diverged");
+        assert_eq!(r, SampleOutcome::Sampled, "round {round} must sample");
+        assert_eq!(
+            remote_out.indices, local_out.indices,
+            "round {round}: index trajectories diverged"
+        );
+        assert_eq!(
+            remote_out.priorities, local_out.priorities,
+            "round {round}: priorities diverged"
+        );
+        assert_eq!(
+            remote_out.is_weights, local_out.is_weights,
+            "round {round}: importance weights diverged"
+        );
+        // Identical feedback keeps the two tables in lockstep.
+        let tds: Vec<f32> = (0..BATCH)
+            .map(|j| ((round * 13 + j) % 31) as f32 * 0.2 + 0.1)
+            .collect();
+        remote.update_priorities(&remote_out.indices, &tds).unwrap();
+        local_sampler.update_priorities(&local_out.indices, &tds);
+    }
+
+    // After the lockstep loop the full states still agree.
+    let remote_state = RemoteClient::connect(&path).unwrap().checkpoint_state().unwrap();
+    let local_state = ServiceState::capture(&local).unwrap();
+    assert_eq!(remote_state, local_state);
+
+    drop(remote);
+    stop_server(&path, handle);
+}

@@ -6,8 +6,8 @@
 //! direct-insert path.
 
 use pal_rl::replay::{ReplayBuffer, SampleBatch, Transition};
-use pal_rl::service::{ItemKind, RateLimiter, Table, TrajectoryWriter, WriterStep};
-use pal_rl::util::prop::{check, Gen};
+use pal_rl::service::{ItemKind, RateLimiter, Table, TableSpec, TrajectoryWriter, WriterStep};
+use pal_rl::util::prop::{check, Gen, Pair, UsizeIn};
 use pal_rl::util::rng::Rng;
 use std::sync::{Arc, Mutex};
 
@@ -272,4 +272,85 @@ fn sequence_windows_never_span_episodes() {
         assert_eq!(item.obs[2], item.obs[4]);
         assert_eq!(item.reward, 3.0);
     }
+}
+
+// ---------------------------------------------------------------------
+// Per-table priority-exponent grammar (`name=kind[@cap,alpha=..,beta=..]`)
+// ---------------------------------------------------------------------
+
+#[test]
+fn table_spec_exponent_grammar_accepts_valid_entries() {
+    let cases = [
+        ("t=1step@alpha=0.7", Some(0.7), None, None),
+        ("t=1step@beta=0.25", None, Some(0.25), None),
+        ("t=1step@alpha=1,beta=0", Some(1.0), Some(0.0), None),
+        ("t=nstep:3@4096,alpha=0.5", Some(0.5), None, Some(4096)),
+        ("t=seq:4@alpha=0.9,beta=0.4,128", Some(0.9), Some(0.4), Some(128)),
+        ("t=1step@ alpha = 0.5 , beta = 0.5 ", Some(0.5), Some(0.5), None),
+    ];
+    for (spec, alpha, beta, capacity) in cases {
+        let s = TableSpec::parse(spec, 0.99).unwrap_or_else(|e| panic!("{spec}: {e}"));
+        assert_eq!(s.alpha, alpha, "{spec}");
+        assert_eq!(s.beta, beta, "{spec}");
+        assert_eq!(s.capacity, capacity, "{spec}");
+    }
+}
+
+#[test]
+fn table_spec_exponent_grammar_rejects_malformed_entries() {
+    let bad = [
+        "t=1step@alpha=",          // missing value
+        "t=1step@alpha=x",         // non-numeric
+        "t=1step@gamma=0.5",       // unknown key
+        "t=1step@alpha=0.5,alpha=0.6", // duplicate exponent
+        "t=1step@64,128",          // duplicate capacity
+        "t=1step@",                // empty option
+        "t=1step@,",               // empty options
+        "t=1step@alpha",           // bare non-numeric option
+    ];
+    for spec in bad {
+        assert!(TableSpec::parse(spec, 0.99).is_err(), "`{spec}` must be rejected");
+    }
+}
+
+#[test]
+fn table_spec_exponent_grammar_rejects_out_of_range_values() {
+    let bad = [
+        "t=1step@alpha=1.5",
+        "t=1step@alpha=-0.1",
+        "t=1step@beta=2",
+        "t=1step@beta=-1e9",
+        "t=1step@alpha=nan",
+        "t=1step@beta=inf",
+    ];
+    for spec in bad {
+        let err = TableSpec::parse(spec, 0.99).unwrap_err().to_string();
+        assert!(
+            err.contains("[0, 1]") || err.contains("bad"),
+            "`{spec}` rejected without naming the range: {err}"
+        );
+    }
+}
+
+#[test]
+fn prop_in_range_exponents_always_parse_and_roundtrip() {
+    // Any α/β pair on a [0, 1] lattice must parse, land in the spec
+    // unchanged, and survive a format->parse round trip.
+    let gen = Pair(UsizeIn { lo: 0, hi: 100 }, UsizeIn { lo: 0, hi: 100 });
+    check("tablespec-exponents", 0xA1FA, 200, &gen, |&(a, b)| {
+        let (alpha, beta) = (a as f32 / 100.0, b as f32 / 100.0);
+        let spec = format!("t=1step@alpha={alpha},beta={beta}");
+        let parsed = TableSpec::parse(&spec, 0.99).map_err(|e| e.to_string())?;
+        if parsed.alpha != Some(alpha) || parsed.beta != Some(beta) {
+            return Err(format!(
+                "{spec} parsed to alpha={:?} beta={:?}",
+                parsed.alpha, parsed.beta
+            ));
+        }
+        let relisted = TableSpec::parse_list(&spec, 0.99).map_err(|e| e.to_string())?;
+        if relisted.len() != 1 || relisted[0] != parsed {
+            return Err(format!("parse_list split `{spec}` into {relisted:?}"));
+        }
+        Ok(())
+    });
 }

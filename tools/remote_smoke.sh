@@ -1,0 +1,52 @@
+#!/usr/bin/env bash
+# CI remote replay smoke: start `pal serve` on a Unix socket, then run
+# `pal remote-smoke` against it — a deterministic collect/sample phase
+# whose checkpoint must be BYTE-identical to an in-process twin, a
+# concurrent multi-client soak with exact sample-to-insert accounting
+# over the Stats RPC, and a clean Shutdown RPC. The script then asserts
+# the serving process exited 0 and wrote its --save-state replay state.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+dir="${1:-$(mktemp -d)}"
+socket="$dir/replay.sock"
+state_dir="$dir/state"
+
+cargo build --release --bin pal
+
+# Server and smoke client must agree on the table layout: remote-smoke
+# drives the state-smoke shape (sharded prioritized `replay` 1step
+# under a σ=1 ratio limiter + free-running `aux` nstep:3, warmup 64).
+./target/release/pal serve \
+  --socket "$socket" \
+  --capacity 4096 --shards 4 --warmup 64 --rate-limit 1.0 \
+  --tables "replay=1step,aux=nstep:3" \
+  --obs-dim 4 --act-dim 2 \
+  --save-state "$state_dir" &
+server_pid=$!
+
+cleanup() {
+  kill "$server_pid" 2>/dev/null || true
+}
+trap cleanup EXIT
+
+# Wait for the socket to come up.
+for _ in $(seq 1 100); do
+  [ -S "$socket" ] && break
+  sleep 0.1
+done
+[ -S "$socket" ] || { echo "server socket never appeared" >&2; exit 1; }
+
+./target/release/pal remote-smoke --socket "$socket" --capacity 4096 --shards 4
+
+# The Shutdown RPC must end the serving process cleanly...
+wait "$server_pid"
+trap - EXIT
+
+# ...and its clean-shutdown state save must exist.
+[ -f "$state_dir/replay_state.bin" ] || {
+  echo "server did not write replay_state.bin on shutdown" >&2
+  exit 1
+}
+
+echo "remote replay smoke OK ($dir)"
