@@ -1,0 +1,367 @@
+//! Remote replay data-path throughput: batched appends × writers ×
+//! pipelined sample prefetch over a REAL Unix-domain socket, against
+//! the in-process path.
+//!
+//!     cargo bench --bench fig_remote -- \
+//!         [--writers 1,2,4] [--batches 1,16,64] [--steps N] \
+//!         [--rounds N] [--learner-batch 64] [--capacity N] \
+//!         [--json PATH] [--test]
+//!
+//! Protocol, append side: W writer threads each ship `steps` synthetic
+//! env steps through a `RemoteWriter` with client-side batch size B
+//! (one `Append` RPC per B steps; B = 1 is the pre-batching
+//! one-RPC-per-step wire behaviour). The in-process rows run the same
+//! loop through a `TrajectoryWriter` as the upper bound.
+//!
+//! Protocol, sample side: one learner connection draws
+//! `--learner-batch`-sized batches and feeds priorities back, prefetch
+//! off (two serial round-trips per iteration) vs on (the next `Sample`
+//! rides behind each `UpdatePriorities`, so `try_sample` only reads an
+//! already-travelling response). The visible sample wait is timed
+//! per-iteration.
+//!
+//! Verdicts (advisory in --test mode — CI runners are too noisy to
+//! gate on wall-clock): batch 16 must lift append steps/s ≥ 5× over
+//! batch 1, and prefetch must hide ≥ 50% of the per-batch sample wait.
+//!
+//! `--json PATH` writes the machine-readable results
+//! (`BENCH_remote.json` via tools/bench_remote.sh) so later PRs have a
+//! perf baseline to diff against.
+
+use pal_rl::remote::{RemoteClient, RemoteSampler, RemoteWriter, ReplayServer, Request};
+use pal_rl::replay::{PrioritizedConfig, PrioritizedReplay, SampleBatch};
+use pal_rl::service::{
+    ExperienceSampler, ExperienceWriter, ItemKind, RateLimiter, ReplayService, SampleOutcome,
+    Table, WriterStep,
+};
+use pal_rl::util::bench::Table as Report;
+use pal_rl::util::cli::Args;
+use pal_rl::util::rng::Rng;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+const OBS_DIM: usize = 8;
+const ACT_DIM: usize = 2;
+const EPISODE_LEN: usize = 64;
+
+fn mk_service(capacity: usize) -> Arc<ReplayService> {
+    let buffer = Arc::new(PrioritizedReplay::new(PrioritizedConfig {
+        capacity,
+        obs_dim: OBS_DIM,
+        act_dim: ACT_DIM,
+        fanout: 64,
+        alpha: 0.6,
+        beta: 0.4,
+        lazy_writing: true,
+        shards: 1,
+    }));
+    Arc::new(
+        ReplayService::new(vec![Table::new(
+            "replay",
+            ItemKind::OneStep,
+            buffer,
+            RateLimiter::Unlimited { min_size_to_sample: 1 },
+        )])
+        .expect("valid service"),
+    )
+}
+
+fn mk_step(i: usize) -> WriterStep {
+    WriterStep {
+        obs: vec![i as f32; OBS_DIM],
+        action: vec![0.1; ACT_DIM],
+        next_obs: vec![i as f32 + 1.0; OBS_DIM],
+        reward: 1.0,
+        done: i % EPISODE_LEN == EPISODE_LEN - 1,
+        truncated: false,
+    }
+}
+
+/// Bind a fresh server for one configuration; the caller shuts it down.
+fn start_server(service: Arc<ReplayService>) -> (PathBuf, std::thread::JoinHandle<()>) {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    let path = std::env::temp_dir().join(format!(
+        "pal_fig_remote_{}_{}.sock",
+        std::process::id(),
+        NEXT.fetch_add(1, Ordering::Relaxed)
+    ));
+    let server = ReplayServer::bind(service, &path, 7).expect("bind");
+    let handle = std::thread::spawn(move || {
+        server.serve().expect("serve");
+    });
+    for _ in 0..1_000 {
+        if std::os::unix::net::UnixStream::connect(&path).is_ok() {
+            return (path, handle);
+        }
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    panic!("fig_remote server never came up at {}", path.display());
+}
+
+fn stop_server(path: &Path, handle: std::thread::JoinHandle<()>) {
+    RemoteClient::connect(path).expect("connect").shutdown().expect("shutdown");
+    handle.join().expect("server thread");
+}
+
+/// W remote writers × `steps` appends at client batch `batch`;
+/// returns (steps/s, wire bytes per Append RPC).
+fn run_remote_append(writers: usize, batch: usize, steps: usize, capacity: usize) -> (f64, usize) {
+    let service = mk_service(capacity);
+    let (path, handle) = start_server(Arc::clone(&service));
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for w in 0..writers {
+            let path = path.clone();
+            s.spawn(move || {
+                let mut writer = RemoteWriter::connect(&path, w as u64)
+                    .expect("connect")
+                    .with_batch(batch);
+                for i in 0..steps {
+                    assert!(!writer.throttled().expect("rpc"), "unlimited table throttled");
+                    writer.append(mk_step(i)).expect("append");
+                }
+                assert_eq!(writer.flush().expect("flush"), 0);
+            });
+        }
+    });
+    let secs = t0.elapsed().as_secs_f64();
+    let inserts = service.table("replay").expect("table").stats_snapshot().inserts;
+    assert_eq!(inserts, writers * steps, "appends lost on the wire");
+    stop_server(&path, handle);
+    // Representative Append payload: `batch` steps + framing (16 bytes
+    // of magic/len/crc around the payload).
+    let payload = Request::Append {
+        actor_id: 0,
+        steps: (0..batch).map(mk_step).collect(),
+    }
+    .encode()
+    .len();
+    ((writers * steps) as f64 / secs, payload + 16)
+}
+
+/// The in-process upper bound: same loop through `TrajectoryWriter`s.
+fn run_local_append(writers: usize, steps: usize, capacity: usize) -> f64 {
+    let service = mk_service(capacity);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for w in 0..writers {
+            let service = Arc::clone(&service);
+            s.spawn(move || {
+                let mut writer = service.writer(w);
+                let wr: &mut dyn ExperienceWriter = &mut writer;
+                for i in 0..steps {
+                    assert!(!wr.throttled().expect("local"), "unlimited table throttled");
+                    wr.append(mk_step(i)).expect("append");
+                }
+            });
+        }
+    });
+    (writers * steps) as f64 / t0.elapsed().as_secs_f64()
+}
+
+struct SampleResult {
+    batches_per_sec: f64,
+    /// Mean time the learner loop spent inside try_sample (the wait
+    /// prefetch exists to hide).
+    mean_wait_us: f64,
+    mean_iter_us: f64,
+}
+
+/// One learner connection: `rounds` × (try_sample + update) at `batch`.
+fn run_remote_sample(prefetch: bool, rounds: usize, batch: usize, capacity: usize) -> SampleResult {
+    let service = mk_service(capacity);
+    // Prefill past the batch size with stable priorities.
+    let mut feeder = service.writer(0);
+    for i in 0..(batch * 4).max(1_024) {
+        feeder.append(mk_step(i));
+    }
+    let (path, handle) = start_server(Arc::clone(&service));
+
+    let mut sampler = RemoteSampler::connect(&path, "replay", 11)
+        .expect("sampler")
+        .with_prefetch(prefetch);
+    let mut rng = Rng::new(11);
+    let mut out = SampleBatch::default();
+    let tds: Vec<f32> = (0..batch).map(|j| (j % 7) as f32 * 0.3 + 0.1).collect();
+    let mut wait = std::time::Duration::ZERO;
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        let s0 = Instant::now();
+        let outcome = sampler.try_sample(batch, &mut rng, &mut out).expect("sample");
+        wait += s0.elapsed();
+        assert_eq!(outcome, SampleOutcome::Sampled, "unlimited table stalled");
+        sampler.update_priorities(&out.indices, &tds).expect("update");
+    }
+    let total = t0.elapsed();
+    sampler.drain().expect("drain");
+    drop(sampler);
+    stop_server(&path, handle);
+    SampleResult {
+        batches_per_sec: rounds as f64 / total.as_secs_f64(),
+        mean_wait_us: wait.as_secs_f64() * 1e6 / rounds as f64,
+        mean_iter_us: total.as_secs_f64() * 1e6 / rounds as f64,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let a = Args::from_env()?;
+    let smoke = a.flag("test");
+    let default_writers: &[usize] = if smoke { &[2] } else { &[1, 2, 4] };
+    let writer_list = a.usize_list("writers", default_writers)?;
+    let default_batches: &[usize] = if smoke { &[1, 16] } else { &[1, 16, 64] };
+    let batch_list = a.usize_list("batches", default_batches)?;
+    let steps: usize = a.parse_or("steps", if smoke { 2_000 } else { 30_000 })?;
+    let rounds: usize = a.parse_or("rounds", if smoke { 400 } else { 5_000 })?;
+    let learner_batch: usize = a.parse_or("learner-batch", 64)?;
+    let capacity: usize = a.parse_or("capacity", 65_536)?;
+
+    println!(
+        "Remote replay data path (real Unix socket): append batching x writers, \
+         sample prefetch on/off; {steps} steps/writer, {rounds} sample rounds, \
+         learner batch {learner_batch}{}\n",
+        if smoke { " [smoke]" } else { "" },
+    );
+
+    // --- Append side ---------------------------------------------------
+    let mut report = Report::new(&[
+        "path", "writers", "batch", "steps/s", "bytes/RPC", "vs batch=1", "vs local",
+    ]);
+    // (writers, batch) -> steps/s for the JSON + verdicts.
+    let mut append_rows: Vec<(usize, usize, f64, usize, f64)> = Vec::new();
+    let mut local_rows: Vec<(usize, f64)> = Vec::new();
+    for &w in &writer_list {
+        let local = run_local_append(w, steps, capacity);
+        local_rows.push((w, local));
+        // Measure every batch size first, then normalize against the
+        // batch-1 row wherever it sits in the sweep (1.0 when the
+        // sweep omits batch 1).
+        let measured: Vec<(usize, f64, usize)> = batch_list
+            .iter()
+            .map(|&b| {
+                let (rate, bytes) = run_remote_append(w, b, steps, capacity);
+                (b, rate, bytes)
+            })
+            .collect();
+        let base1 = measured.iter().find(|r| r.0 == 1).map(|r| r.1);
+        for (b, rate, bytes) in measured {
+            let vs1 = rate / base1.unwrap_or(rate).max(1e-9);
+            append_rows.push((w, b, rate, bytes, vs1));
+            report.row(vec![
+                "remote".into(),
+                w.to_string(),
+                b.to_string(),
+                format!("{rate:.0}"),
+                bytes.to_string(),
+                format!("{vs1:.2}x"),
+                format!("{:.2}x", rate / local.max(1e-9)),
+            ]);
+        }
+        report.row(vec![
+            "in-process".into(),
+            w.to_string(),
+            "-".into(),
+            format!("{local:.0}"),
+            "-".into(),
+            "-".into(),
+            "1.00x".into(),
+        ]);
+    }
+    report.print();
+
+    // --- Sample side ---------------------------------------------------
+    let off = run_remote_sample(false, rounds, learner_batch, capacity);
+    let on = run_remote_sample(true, rounds, learner_batch, capacity);
+    let hidden = 1.0 - on.mean_wait_us / off.mean_wait_us.max(1e-9);
+    println!("\nsample path (batch {learner_batch}, {rounds} rounds):");
+    let mut sreport = Report::new(&["prefetch", "batches/s", "sample wait", "iter time"]);
+    for (name, r) in [("off", &off), ("on", &on)] {
+        sreport.row(vec![
+            name.into(),
+            format!("{:.0}", r.batches_per_sec),
+            format!("{:.1} µs", r.mean_wait_us),
+            format!("{:.1} µs", r.mean_iter_us),
+        ]);
+    }
+    sreport.print();
+
+    // --- Verdicts ------------------------------------------------------
+    // Smallest batch-16 speedup across writer counts (5x target); the
+    // batch list may omit 16 in a custom sweep, then it's skipped.
+    let speedup16 = writer_list
+        .iter()
+        .filter_map(|&w| {
+            let b1 = append_rows.iter().find(|r| r.0 == w && r.1 == 1)?.2;
+            let b16 = append_rows.iter().find(|r| r.0 == w && r.1 == 16)?.2;
+            Some(b16 / b1.max(1e-9))
+        })
+        .fold(f64::INFINITY, f64::min);
+    if speedup16.is_finite() {
+        println!(
+            "\nverdict: append batch=16 vs batch=1, worst over writer counts = \
+             {speedup16:.2}x — target >= 5x [{}]",
+            if speedup16 >= 5.0 { "OK" } else { "MISS" }
+        );
+    }
+    println!(
+        "verdict: prefetch hides {:.0}% of the per-batch sample wait \
+         ({:.1} µs -> {:.1} µs) — target >= 50% [{}]",
+        hidden * 100.0,
+        off.mean_wait_us,
+        on.mean_wait_us,
+        if hidden >= 0.5 { "OK" } else { "MISS" }
+    );
+
+    if smoke {
+        // The deterministic part is the CI gate (data integrity across
+        // the wire, asserted inside the runs); wall-clock verdicts stay
+        // advisory on shared runners.
+        println!("\nsmoke OK: all configurations moved every step and batch");
+    }
+
+    // --- Machine-readable output ---------------------------------------
+    if let Some(path) = a.get("json") {
+        let mut j = String::from("{\n  \"bench\": \"fig_remote\",\n");
+        j.push_str(&format!(
+            "  \"config\": {{\"steps\": {steps}, \"rounds\": {rounds}, \
+             \"learner_batch\": {learner_batch}, \"capacity\": {capacity}, \
+             \"smoke\": {smoke}}},\n"
+        ));
+        j.push_str("  \"append\": [\n");
+        for (i, (w, b, rate, bytes, vs1)) in append_rows.iter().enumerate() {
+            j.push_str(&format!(
+                "    {{\"writers\": {w}, \"remote_batch\": {b}, \"steps_per_sec\": {rate:.1}, \
+                 \"bytes_per_rpc\": {bytes}, \"speedup_vs_batch1\": {vs1:.3}}}{}\n",
+                if i + 1 < append_rows.len() { "," } else { "" }
+            ));
+        }
+        j.push_str("  ],\n  \"in_process\": [\n");
+        for (i, (w, rate)) in local_rows.iter().enumerate() {
+            j.push_str(&format!(
+                "    {{\"writers\": {w}, \"steps_per_sec\": {rate:.1}}}{}\n",
+                if i + 1 < local_rows.len() { "," } else { "" }
+            ));
+        }
+        j.push_str("  ],\n  \"sample\": [\n");
+        for (i, (name, r)) in [("off", &off), ("on", &on)].iter().enumerate() {
+            j.push_str(&format!(
+                "    {{\"prefetch\": \"{name}\", \"batches_per_sec\": {:.1}, \
+                 \"mean_sample_wait_us\": {:.2}, \"mean_iter_us\": {:.2}}}{}\n",
+                r.batches_per_sec,
+                r.mean_wait_us,
+                r.mean_iter_us,
+                if i == 0 { "," } else { "" }
+            ));
+        }
+        j.push_str(&format!(
+            "  ],\n  \"verdicts\": {{\"append_speedup_batch16_worst\": {}, \
+             \"append_target\": 5.0, \"sample_wait_hidden_frac\": {hidden:.3}, \
+             \"sample_target\": 0.5}}\n}}\n",
+            if speedup16.is_finite() { format!("{speedup16:.3}") } else { "null".into() },
+        ));
+        std::fs::write(path, j)?;
+        eprintln!("[fig_remote] results written to {path}");
+    }
+    Ok(())
+}

@@ -122,5 +122,10 @@ pub fn run_actor(
             obs = step.obs;
         }
     }
+    // A batching remote writer may hold a sub-batch tail; push it out
+    // so the budget's final steps reach the tables. A limiter stall
+    // here is not an error — the run is ending and the writer's drop
+    // retries once more.
+    let _ = writer.flush()?;
     Ok(())
 }

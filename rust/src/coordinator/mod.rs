@@ -14,7 +14,7 @@ use crate::env::make_env;
 use crate::learner::run_learner;
 use crate::metrics::{CurvePoint, Metrics};
 use crate::params::{AdamConfig, Checkpoint, ParameterServer, TargetSync};
-use crate::remote::{RemoteClient, RemoteSampler, RemoteWriter, TableInfo};
+use crate::remote::{RemoteClient, RemoteSampler, RemoteWriter, TableInfo, DEFAULT_REMOTE_BATCH};
 use crate::replay::{
     GlobalLockReplay, NaiveScanReplay, PrioritizedConfig, PrioritizedReplay,
     PyBindBinaryReplay, ReplayBuffer, ShardedPrioritizedReplay, UniformReplay,
@@ -101,6 +101,11 @@ pub struct TrainConfig {
     /// [`RemoteSampler`]s, and the buffer/table/limiter flags belong to
     /// the serving process.
     pub remote: Option<std::path::PathBuf>,
+    /// Client-side append batching on a remote run (`--remote-batch`):
+    /// each actor's `RemoteWriter` accumulates this many steps per
+    /// `Append` RPC. 1 = one RPC per step (the pre-batching wire
+    /// behaviour); ignored on local runs.
+    pub remote_batch: usize,
     /// Rate-limiter selection for every table (`--rate-limit`).
     pub rate_limit: RateLimitSpec,
     /// Run-state directory (`--save-state`): weights + replay-service
@@ -148,6 +153,7 @@ impl TrainConfig {
             gamma_nstep: 0.99,
             tables: Vec::new(),
             remote: None,
+            remote_batch: DEFAULT_REMOTE_BATCH,
             rate_limit: RateLimitSpec::Legacy,
             save_state: None,
             restore_state: None,
@@ -181,6 +187,7 @@ impl TrainConfig {
             capacity: None,
             alpha: None,
             beta: None,
+            limit: None,
         }]
     }
 }
@@ -284,18 +291,22 @@ pub fn build_service(cfg: &TrainConfig, obs_dim: usize, act_dim: usize) -> Resul
         let alpha = spec.alpha.unwrap_or(cfg.alpha);
         let beta = spec.beta.unwrap_or(cfg.beta);
         let buffer = make_buffer_with(cfg, capacity, obs_dim * mult, act_dim * mult, alpha, beta);
-        // Only the learner-sampled (first) table gets the ratio limiter:
+        // A spec's `limit=..` overrides the run default. Without one,
+        // only the learner-sampled (first) table gets the ratio limiter:
         // the ratio couples inserts to THIS run's sampling, and writers
         // block while ANY table denies inserts — a ratio limiter on an
         // auxiliary table (whose sample counter never moves, nothing in
         // this process samples it) would throttle every actor forever.
-        // Auxiliary tables free-run until per-table limiter specs land
-        // (see ROADMAP).
-        let limiter = if i == 0 {
-            cfg.rate_limit
-                .build(cfg.update_interval, cfg.warmup_steps, cfg.actor_lead)
-        } else {
-            RateLimiter::Unlimited { min_size_to_sample: cfg.warmup_steps }
+        // A per-table `limit=` is the user asserting something DOES
+        // sample that table; the default protects the common case.
+        let limiter = match spec.limit {
+            Some(per_table) => {
+                per_table.build(cfg.update_interval, cfg.warmup_steps, cfg.actor_lead)
+            }
+            None if i == 0 => cfg
+                .rate_limit
+                .build(cfg.update_interval, cfg.warmup_steps, cfg.actor_lead),
+            None => RateLimiter::Unlimited { min_size_to_sample: cfg.warmup_steps },
         };
         tables.push(Table::new(spec.name.clone(), spec.kind, buffer, limiter));
     }
@@ -344,9 +355,40 @@ pub fn restore_run_state(
     Ok(())
 }
 
-/// One `Stats` RPC against a remote replay server.
-fn remote_stats(path: &std::path::Path) -> Result<Vec<TableInfo>> {
-    RemoteClient::connect(path)?.stats()
+/// The remote half of a [`ReplayFront`]: the socket path, the run's
+/// client-side append batch size, and one lazily-connected,
+/// auto-reconnecting monitor connection shared by every per-tick
+/// `Stats` poll and state RPC — the monitor loop no longer dials the
+/// server once per tick.
+pub struct RemoteFront {
+    path: std::path::PathBuf,
+    batch: usize,
+    monitor: std::sync::Mutex<Option<RemoteClient>>,
+}
+
+impl RemoteFront {
+    fn new(path: std::path::PathBuf, batch: usize) -> Self {
+        Self { path, batch, monitor: std::sync::Mutex::new(None) }
+    }
+
+    /// Run one RPC closure over the cached monitor connection,
+    /// dialling on first use. Any error drops the connection so the
+    /// next poll reconnects — a restarted server heals transparently.
+    fn with_monitor<T>(&self, f: impl FnOnce(&mut RemoteClient) -> Result<T>) -> Result<T> {
+        let mut guard = self.monitor.lock().expect("monitor connection poisoned");
+        if guard.is_none() {
+            *guard = Some(RemoteClient::connect(&self.path)?);
+        }
+        let r = f(guard.as_mut().expect("connected above"));
+        if r.is_err() {
+            *guard = None;
+        }
+        r
+    }
+
+    fn stats(&self) -> Result<Vec<TableInfo>> {
+        self.with_monitor(|c| c.stats())
+    }
 }
 
 /// The replay front-end of one training run: either the in-process
@@ -356,14 +398,17 @@ fn remote_stats(path: &std::path::Path) -> Result<Vec<TableInfo>> {
 /// here, so `train()` is transport-agnostic.
 pub enum ReplayFront {
     Local(Arc<ReplayService>),
-    Remote(std::path::PathBuf),
+    Remote(RemoteFront),
 }
 
 impl ReplayFront {
     /// Build from a run config (local tables, or a remote socket).
     pub fn from_config(cfg: &TrainConfig, obs_dim: usize, act_dim: usize) -> Result<Self> {
         match &cfg.remote {
-            Some(path) => Ok(ReplayFront::Remote(path.clone())),
+            Some(path) => {
+                let batch = cfg.remote_batch.max(1);
+                Ok(ReplayFront::Remote(RemoteFront::new(path.clone(), batch)))
+            }
             None => Ok(ReplayFront::Local(Arc::new(build_service(cfg, obs_dim, act_dim)?))),
         }
     }
@@ -377,21 +422,27 @@ impl ReplayFront {
     }
 
     /// A writer handle for one actor. Remote writers each own a
-    /// connection, so parallel actors do not serialize on one stream.
+    /// connection (parallel actors do not serialize on one stream) and
+    /// batch their appends per the run's `--remote-batch`.
     pub fn writer(&self, actor_id: usize) -> Result<Box<dyn ExperienceWriter>> {
         Ok(match self {
             ReplayFront::Local(s) => Box::new(s.writer(actor_id)),
-            ReplayFront::Remote(path) => Box::new(RemoteWriter::connect(path, actor_id as u64)?),
+            ReplayFront::Remote(r) => {
+                Box::new(RemoteWriter::connect(&r.path, actor_id as u64)?.with_batch(r.batch))
+            }
         })
     }
 
     /// A sampler handle on the default (first) table. `seed` seeds the
     /// remote connection's server-side sampling RNG; the in-process
-    /// sampler uses the learner's own RNG instead.
+    /// sampler uses the learner's own RNG instead. Remote samplers run
+    /// pipelined: one batch kept in flight behind each priority update.
     pub fn sampler(&self, seed: u64) -> Result<Box<dyn ExperienceSampler>> {
         Ok(match self {
             ReplayFront::Local(s) => Box::new(s.default_sampler()),
-            ReplayFront::Remote(path) => Box::new(RemoteSampler::connect_default(path, seed)?),
+            ReplayFront::Remote(r) => {
+                Box::new(RemoteSampler::connect_default(&r.path, seed)?.with_prefetch(true))
+            }
         })
     }
 
@@ -400,7 +451,8 @@ impl ReplayFront {
     pub fn total_len(&self) -> usize {
         match self {
             ReplayFront::Local(s) => s.total_len(),
-            ReplayFront::Remote(path) => remote_stats(path)
+            ReplayFront::Remote(r) => r
+                .stats()
                 .map(|ts| ts.iter().map(|t| t.len as usize).sum())
                 .unwrap_or(0),
         }
@@ -410,7 +462,7 @@ impl ReplayFront {
     pub fn stats_line(&self) -> String {
         match self {
             ReplayFront::Local(s) => s.stats_line(),
-            ReplayFront::Remote(path) => match remote_stats(path) {
+            ReplayFront::Remote(r) => match r.stats() {
                 Ok(tables) => tables
                     .iter()
                     .map(|t| {
@@ -426,7 +478,7 @@ impl ReplayFront {
                     })
                     .collect::<Vec<_>>()
                     .join(" "),
-                Err(e) => format!("remote[{}: {e}]", path.display()),
+                Err(e) => format!("remote[{}: {e}]", r.path.display()),
             },
         }
     }
@@ -436,7 +488,7 @@ impl ReplayFront {
     pub fn stats_snapshots(&self) -> Vec<(String, TableStatsSnapshot)> {
         match self {
             ReplayFront::Local(s) => s.stats_snapshots(),
-            ReplayFront::Remote(path) => match remote_stats(path) {
+            ReplayFront::Remote(r) => match r.stats() {
                 Ok(tables) => tables.into_iter().map(|t| (t.name, t.stats)).collect(),
                 Err(e) => {
                     eprintln!("[pal] WARNING: remote stats unavailable: {e}");
@@ -454,24 +506,30 @@ impl ReplayFront {
     pub fn probe_save_state(&self) -> Result<()> {
         match self {
             ReplayFront::Local(s) => ServiceState::capture(s).map(|_| ()),
-            ReplayFront::Remote(path) => remote_stats(path).map(|_| ()),
+            ReplayFront::Remote(r) => r.stats().map(|_| ()),
         }
     }
 
     /// Serialize every table — locally, or via the `Checkpoint` RPC.
+    /// State RPCs use a throwaway connection, NOT the cached monitor
+    /// one: a checkpoint frame can run to hundreds of MiB and a
+    /// connection's receive buffer never shrinks, so routing it through
+    /// the long-lived monitor client would pin that memory for the
+    /// rest of the run.
     pub fn capture_state(&self) -> Result<ServiceState> {
         match self {
             ReplayFront::Local(s) => ServiceState::capture(s),
-            ReplayFront::Remote(path) => RemoteClient::connect(path)?.checkpoint_state(),
+            ReplayFront::Remote(r) => RemoteClient::connect(&r.path)?.checkpoint_state(),
         }
     }
 
     /// Restore a captured state — locally (two-phase validate/apply),
     /// or via the `Restore` RPC (the server validates before mutating).
+    /// Fresh connection for the same reason as [`Self::capture_state`].
     pub fn restore_state_snapshot(&self, state: &ServiceState) -> Result<()> {
         match self {
             ReplayFront::Local(s) => state.restore_into(s),
-            ReplayFront::Remote(path) => RemoteClient::connect(path)?.restore_state(state),
+            ReplayFront::Remote(r) => RemoteClient::connect(&r.path)?.restore_state(state),
         }
     }
 
@@ -757,6 +815,7 @@ mod tests {
                 capacity: None,
                 alpha: None,
                 beta: None,
+                limit: None,
             },
             TableSpec {
                 name: "traj".into(),
@@ -764,6 +823,7 @@ mod tests {
                 capacity: Some(512),
                 alpha: None,
                 beta: None,
+                limit: None,
             },
         ];
         let svc = build_service(&cfg, 4, 2).unwrap();
@@ -847,5 +907,36 @@ mod tests {
             }
             other => panic!("expected legacy ratio limiter, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn per_table_limit_specs_override_the_run_default() {
+        // `limit=` on an entry wins over the first-table/auxiliary
+        // default in both directions: an unlimited learner table next
+        // to a ratio-limited auxiliary one.
+        let mut cfg = TrainConfig::new("dqn", "CartPole-v1");
+        cfg.warmup_steps = 32;
+        cfg.tables = TableSpec::parse_list(
+            "replay=1step@limit=unlimited,aux=nstep:3@limit=2.0,free=1step",
+            cfg.gamma_nstep,
+        )
+        .unwrap();
+        let svc = build_service(&cfg, 4, 2).unwrap();
+        assert_eq!(
+            *svc.table("replay").unwrap().limiter(),
+            RateLimiter::Unlimited { min_size_to_sample: cfg.warmup_steps }
+        );
+        match svc.table("aux").unwrap().limiter() {
+            RateLimiter::SampleToInsertRatio(r) => {
+                assert!((r.samples_per_insert - 2.0).abs() < 1e-12);
+                assert_eq!(r.min_size_to_sample, cfg.warmup_steps);
+            }
+            other => panic!("expected ratio limiter on aux, got {other:?}"),
+        }
+        // No `limit=` on a non-first table keeps the free-run default.
+        assert_eq!(
+            *svc.table("free").unwrap().limiter(),
+            RateLimiter::Unlimited { min_size_to_sample: cfg.warmup_steps }
+        );
     }
 }

@@ -72,5 +72,9 @@ pub fn run_learner(
         }
         metrics.record_learn(out.loss);
     }
+    // A pipelined remote sampler may still have a prefetched batch in
+    // flight; consume it so the connection closes on a frame boundary
+    // instead of abandoning a response mid-stream.
+    sampler.finish()?;
     Ok(())
 }

@@ -32,7 +32,7 @@ const TRAIN_FLAGS: &[&str] = &[
     "beta", "lr", "grad-clip", "aggregation", "seed", "stop-at-reward",
     "log-every", "curve-out", "eps-decay", "action-noise", "save-checkpoint",
     "n-step", "gamma-nstep", "tables", "rate-limit", "save-state",
-    "restore-state", "checkpoint-every", "remote",
+    "restore-state", "checkpoint-every", "remote", "remote-batch",
 ];
 
 fn usage() -> ! {
@@ -67,13 +67,17 @@ TRAIN OPTIONS:
   --n-step N          N-step returns in the default table (default 1)
   --gamma-nstep G     discount for N-step reward folding (default 0.99)
   --tables SPEC       replay-service table layout, comma-separated
-                      name=kind[@capacity] entries with kind one of
-                      1step | nstep:N | seq:L (default: one `replay`
-                      table following --n-step); learners sample the
-                      first table
-  --rate-limit R      sample-to-insert limiter per table: `legacy`
-                      (default: the --update-interval + actor-lead
-                      pacing), `unlimited`, or a samples-per-insert float
+                      name=kind[@cap,alpha=A,beta=B,limit=L] entries
+                      with kind one of 1step | nstep:N | seq:L
+                      (default: one `replay` table following --n-step);
+                      limit= attaches a per-table rate limiter in the
+                      --rate-limit grammar; learners sample the first
+                      table
+  --rate-limit R      sample-to-insert limiter default: `legacy`
+                      (the --update-interval + actor-lead pacing),
+                      `unlimited`, or a samples-per-insert float;
+                      applies to the learner-sampled (first) table
+                      unless an entry carries its own limit=
   --seed S            PRNG seed
   --stop-at-reward R  early-stop at mean return R
   --log-every SECS    progress line interval (default 5)
@@ -92,6 +96,10 @@ TRAIN OPTIONS:
                       socket as the replay front-end: actors and
                       learners connect as clients, and the table /
                       buffer / rate-limit flags belong to the server
+  --remote-batch N    client-side append batching on a remote run:
+                      each actor ships N steps per Append RPC
+                      (default 16; 1 = one RPC per step). Samplers
+                      always pipeline one batch in flight.
 
 SERVE OPTIONS (same table/buffer flags as train, plus):
   --socket PATH       Unix-domain socket to listen on (required)
@@ -159,6 +167,10 @@ fn train_config_from(a: &Args) -> Result<TrainConfig> {
     cfg.lr = a.parse_or("lr", cfg.lr)?;
     cfg.grad_clip = a.parse_or("grad-clip", cfg.grad_clip)?;
     cfg.aggregation = a.parse_or("aggregation", cfg.aggregation)?;
+    cfg.remote_batch = a.parse_or("remote-batch", cfg.remote_batch)?;
+    if cfg.remote_batch == 0 {
+        bail!("--remote-batch must be >= 1");
+    }
     if let Some(path) = a.get("remote") {
         cfg.remote = Some(path.into());
         // The tables live in the serving process: local table/buffer/
@@ -175,6 +187,8 @@ fn train_config_from(a: &Args) -> Result<TrainConfig> {
                  ignoring local flags {ignored:?} (set them on `pal serve`)"
             );
         }
+    } else if a.has("remote-batch") {
+        eprintln!("[pal] WARNING: --remote-batch only applies to --remote runs; ignored");
     }
     if let Some(dir) = a.get("save-state") {
         cfg.save_state = Some(dir.into());
@@ -375,6 +389,7 @@ fn smoke_config(a: &Args) -> Result<TrainConfig> {
             capacity: None,
             alpha: None,
             beta: None,
+            limit: None,
         },
         TableSpec {
             name: "aux".into(),
@@ -382,6 +397,7 @@ fn smoke_config(a: &Args) -> Result<TrainConfig> {
             capacity: None,
             alpha: None,
             beta: None,
+            limit: None,
         },
     ];
     Ok(cfg)
@@ -602,24 +618,51 @@ fn smoke_step(i: usize) -> WriterStep {
     }
 }
 
+/// Client-side append batch of the smoke's remote writer, and the
+/// group size of [`deterministic_drive`] — the two must agree so the
+/// batched remote appends land on the server exactly where the
+/// in-process twin's writer has inserted them.
+const REMOTE_SMOKE_BATCH: usize = 16;
+
 /// Deterministic collect/sample loop over trait-level handles, so the
 /// EXACT same call sequence can run against a remote server and an
-/// in-process service. Once past `warmup`, every append is preceded by
-/// one sample+priority-update round, which with the smoke's σ=1 ratio
-/// limiter keeps the drift window open — the loop never stalls, so
-/// even the stall counters of the two runs stay equal. Returns the
-/// number of granted batches.
+/// in-process service. Steps go in `chunk`-aligned groups (the remote
+/// writer's `--remote-batch`), each group followed by one
+/// sample+priority-update round per step past `warmup`, which with the
+/// smoke's σ=1 ratio limiter keeps the drift window open — the loop
+/// never stalls, so even the stall counters of the two runs stay
+/// equal. Returns the number of granted batches.
 fn deterministic_drive(
     w: &mut dyn ExperienceWriter,
     s: &mut dyn ExperienceSampler,
     rng: &mut Rng,
     warmup: usize,
     items: usize,
+    chunk: usize,
 ) -> Result<u64> {
     let mut out = SampleBatch::default();
     let mut batches = 0u64;
-    for i in 0..items {
-        if i >= warmup {
+    let mut start = 0usize;
+    while start < items {
+        let group = chunk.min(items - start);
+        for i in start..start + group {
+            ensure!(
+                !w.throttled()?,
+                "deterministic phase writer unexpectedly throttled at item {i}"
+            );
+            w.append(smoke_step(i))?;
+        }
+        // A partial tail group (items not a chunk multiple) still has
+        // to land before its samples; a full group already shipped at
+        // the batching threshold.
+        ensure!(
+            w.flush()? == 0,
+            "deterministic phase writer stalled flushing at item {start}"
+        );
+        for i in start..start + group {
+            if i < warmup {
+                continue;
+            }
             match s.try_sample(16, rng, &mut out)? {
                 SampleOutcome::Sampled => {
                     batches += 1;
@@ -634,28 +677,81 @@ fn deterministic_drive(
                 other => bail!("deterministic phase stalled sampling at item {i}: {other:?}"),
             }
         }
-        ensure!(
-            !w.throttled()?,
-            "deterministic phase writer unexpectedly throttled at item {i}"
-        );
-        w.append(smoke_step(i))?;
+        start += group;
     }
     Ok(batches)
+}
+
+/// Deterministic pipelined-sampling phase: `rounds` lockstep
+/// sample+update rounds with prefetch enabled remotely and a plain
+/// in-process sampler locally. With no appends interleaved, the
+/// prefetch (drawn right after each update, before the next
+/// `try_sample`) sees exactly the state the local sampler sees, so the
+/// two stay bit-identical. The trailing in-flight prefetch is drained
+/// and mirrored with one extra local draw, keeping the counters — and
+/// the checkpoints — equal. Returns `(granted, updated)` batch counts
+/// (the drained prefetch is granted but never priority-updated).
+fn prefetch_lockstep_drive(
+    remote: &mut RemoteSampler,
+    local: &pal_rl::service::SamplerHandle,
+    local_rng: &mut Rng,
+    rounds: usize,
+) -> Result<(u64, u64)> {
+    let mut unused = Rng::new(7); // remote sampling uses the server-side RNG
+    let mut remote_out = SampleBatch::default();
+    let mut local_out = SampleBatch::default();
+    let mut batches = 0u64;
+    for round in 0..rounds {
+        let r = remote.try_sample(16, &mut unused, &mut remote_out)?;
+        let l = local.try_sample(16, local_rng, &mut local_out);
+        ensure!(r == l, "prefetch round {round}: outcomes diverged ({r:?} vs {l:?})");
+        ensure!(r == SampleOutcome::Sampled, "prefetch round {round} stalled: {r:?}");
+        ensure!(
+            remote_out.indices == local_out.indices,
+            "prefetch round {round}: sampled indices diverged"
+        );
+        batches += 1;
+        let tds: Vec<f32> = (0..remote_out.indices.len())
+            .map(|j| ((round * 17 + j) % 89) as f32 * 0.1 + 0.05)
+            .collect();
+        remote.update_priorities(&remote_out.indices, &tds)?;
+        local.update_priorities(&local_out.indices, &tds);
+    }
+    let updates = batches;
+    // The pipeline's trailing prefetch is a batch the server already
+    // granted and counted; mirror it locally so both sides' counters
+    // (and therefore their checkpoints) stay identical.
+    if let Some(outcome) = remote.drain()? {
+        let l = local.try_sample(16, local_rng, &mut local_out);
+        ensure!(
+            outcome == l,
+            "drained prefetch outcome {outcome:?} diverged from local {l:?}"
+        );
+        if outcome == SampleOutcome::Sampled {
+            batches += 1;
+        }
+    }
+    Ok((batches, updates))
 }
 
 /// Remote round-trip smoke (the CI gate for the socket front-end), run
 /// against a FRESHLY started `pal serve` on the same table layout as
 /// `state-smoke` (tools/remote_smoke.sh starts it with matching flags):
 ///
-/// 1. deterministic phase — one writer + one seeded sampler drive the
-///    server through `RemoteWriter`/`RemoteSampler`, the identical loop
-///    drives an in-process twin service, and the two checkpoints must
-///    be BYTE-identical (items, priorities, stats, limiter counters);
-/// 2. concurrent soak — two writer clients + one sampler client hammer
-///    the server; every sampled batch must be zero-priority-free and
-///    the final Stats must account for every client-side operation
-///    exactly (inserts, batches, items, priority updates);
-/// 3. Shutdown RPC — the serving process exits cleanly (and writes its
+/// 1. deterministic phase — one BATCHED writer (`--remote-batch`-style
+///    chunks) + one seeded sampler drive the server through
+///    `RemoteWriter`/`RemoteSampler`, the identical loop drives an
+///    in-process twin service;
+/// 2. deterministic prefetch phase — a pipelined sampler (one batch in
+///    flight behind every priority update) runs lockstep against the
+///    twin; after both phases the two checkpoints must be
+///    BYTE-identical (items, priorities, stats, limiter counters);
+/// 3. concurrent soak — two batched writer clients + one pipelined
+///    sampler client hammer the server; every sampled batch must be
+///    zero-priority-free and the final Stats must account for every
+///    client-side operation exactly (inserts, batches, items,
+///    priority updates);
+/// 4. Shutdown RPC — the serving process exits cleanly (and writes its
 ///    `--save-state`, which the script asserts).
 fn cmd_remote_smoke(a: &Args) -> Result<()> {
     a.check_known(REMOTE_SMOKE_FLAGS)?;
@@ -680,8 +776,8 @@ fn cmd_remote_smoke(a: &Args) -> Result<()> {
     );
     ensure!(!before.is_empty(), "server reports no tables");
 
-    // Phase 1a: deterministic drive over the wire.
-    let mut remote_writer = RemoteWriter::connect(&socket, 0)?;
+    // Phase 1a: deterministic drive over the wire, appends batched.
+    let mut remote_writer = RemoteWriter::connect(&socket, 0)?.with_batch(REMOTE_SMOKE_BATCH);
     let mut remote_sampler = RemoteSampler::connect_default(&socket, REMOTE_SMOKE_SEED)?;
     let mut unused_rng = Rng::new(1); // remote sampling uses the server-side RNG
     let remote_batches = deterministic_drive(
@@ -690,6 +786,7 @@ fn cmd_remote_smoke(a: &Args) -> Result<()> {
         &mut unused_rng,
         cfg.warmup_steps,
         items,
+        REMOTE_SMOKE_BATCH,
     )?;
 
     // Phase 1b: the identical drive against an in-process twin.
@@ -703,13 +800,29 @@ fn cmd_remote_smoke(a: &Args) -> Result<()> {
         &mut local_rng,
         cfg.warmup_steps,
         items,
+        REMOTE_SMOKE_BATCH,
     )?;
     ensure!(
         remote_batches == local_batches,
         "granted batches diverged: remote {remote_batches} vs local {local_batches}"
     );
 
-    // The wire must not change the state: byte-identical checkpoints.
+    // Phase 2: pipelined sampling in lockstep with the twin. A fresh
+    // seeded connection on each side; prefetched batches must track
+    // the in-process draws exactly.
+    let prefetch_seed = REMOTE_SMOKE_SEED ^ 0xA5A5;
+    let mut prefetch_sampler =
+        RemoteSampler::connect_default(&socket, prefetch_seed)?.with_prefetch(true);
+    let mut prefetch_rng = Rng::new(prefetch_seed);
+    let (prefetch_batches, prefetch_updates) = prefetch_lockstep_drive(
+        &mut prefetch_sampler,
+        &local.default_sampler(),
+        &mut prefetch_rng,
+        32,
+    )?;
+
+    // The wire must not change the state: byte-identical checkpoints
+    // after batched appends AND pipelined sampling.
     let remote_bytes = RemoteClient::connect(&socket)?.checkpoint_bytes()?;
     let local_bytes = ServiceState::capture(&local)?.encode();
     if remote_bytes != local_bytes {
@@ -726,25 +839,30 @@ fn cmd_remote_smoke(a: &Args) -> Result<()> {
         );
     }
     eprintln!(
-        "[smoke] deterministic phase OK: {} items, {remote_batches} batches, \
+        "[smoke] deterministic phase OK: {} items (batch {REMOTE_SMOKE_BATCH}), \
+         {remote_batches}+{prefetch_batches} batches (plain+prefetch), \
          checkpoints byte-identical ({} bytes)",
         items,
         remote_bytes.len()
     );
-    // Quiesce phase-1 connections so the final Shutdown drains fast.
+    // Quiesce deterministic connections so the final Shutdown drains fast.
     drop(remote_writer);
     drop(remote_sampler);
+    drop(prefetch_sampler);
 
-    // Phase 2: concurrent soak through separate client connections.
+    // Phase 3: concurrent soak through separate client connections —
+    // batched writers, pipelined sampler.
     let soak_each = (items / 4).max(64);
     let done = std::sync::atomic::AtomicBool::new(false);
     let soak_batches = std::sync::atomic::AtomicUsize::new(0);
+    let soak_updates = std::sync::atomic::AtomicUsize::new(0);
     std::thread::scope(|s| -> Result<()> {
         let mut writers = Vec::new();
         for actor in 1..3usize {
             let socket = socket.clone();
             writers.push(s.spawn(move || -> Result<()> {
-                let mut w = RemoteWriter::connect(&socket, actor as u64)?;
+                let mut w =
+                    RemoteWriter::connect(&socket, actor as u64)?.with_batch(REMOTE_SMOKE_BATCH);
                 // Bounded waits so a dead sampler fails the smoke
                 // instead of hanging CI.
                 let wait_admitted = |w: &mut RemoteWriter| -> Result<()> {
@@ -760,8 +878,14 @@ fn cmd_remote_smoke(a: &Args) -> Result<()> {
                     wait_admitted(&mut w)?;
                     w.append(smoke_step(actor * 1_000_000 + i))?;
                 }
-                // Drain: a step the limiter stalled must still land.
-                wait_admitted(&mut w)?;
+                // Drain: the sub-batch tail AND any steps the limiter
+                // stalled must still land before the tally.
+                let mut spins = 0u32;
+                while w.flush()? > 0 {
+                    spins += 1;
+                    ensure!(spins < 60_000, "soak writer could not drain (sampler dead?)");
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }
                 Ok(())
             }));
         }
@@ -769,8 +893,9 @@ fn cmd_remote_smoke(a: &Args) -> Result<()> {
             let socket = socket.clone();
             let done = &done;
             let soak_batches = &soak_batches;
+            let soak_updates = &soak_updates;
             s.spawn(move || -> Result<()> {
-                let mut sampler = RemoteSampler::connect_default(&socket, 99)?;
+                let mut sampler = RemoteSampler::connect_default(&socket, 99)?.with_prefetch(true);
                 let mut rng = Rng::new(99);
                 let mut out = SampleBatch::default();
                 while !done.load(std::sync::atomic::Ordering::Relaxed) {
@@ -785,9 +910,16 @@ fn cmd_remote_smoke(a: &Args) -> Result<()> {
                             let tds: Vec<f32> =
                                 idx.iter().map(|_| rng.f32() * 2.0 + 0.01).collect();
                             sampler.update_priorities(&idx, &tds)?;
+                            soak_updates.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                         }
                         _ => std::thread::yield_now(),
                     }
+                }
+                // The pipeline's trailing prefetch is a granted batch
+                // the server counted; tally it so the Stats accounting
+                // below stays exact.
+                if sampler.drain()? == Some(SampleOutcome::Sampled) {
+                    soak_batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 }
                 Ok(())
             })
@@ -805,12 +937,16 @@ fn cmd_remote_smoke(a: &Args) -> Result<()> {
         Ok(())
     })?;
     let soak_batches = soak_batches.load(std::sync::atomic::Ordering::Relaxed) as u64;
+    let soak_updates = soak_updates.load(std::sync::atomic::Ordering::Relaxed) as u64;
 
     // Exact accounting across the wire, against the final Stats.
     let stats = RemoteClient::connect(&socket)?.stats()?;
     ensure!(!stats.is_empty(), "server reports no tables after the soak");
     let total_inserts = items + 2 * soak_each;
-    let total_batches = remote_batches + soak_batches;
+    let total_batches = remote_batches + prefetch_batches + soak_batches;
+    // Drained trailing prefetches are granted batches that never got a
+    // priority update, so updates are tracked separately.
+    let total_updates = remote_batches + prefetch_updates + soak_updates;
     for t in &stats {
         ensure!(t.len > 0, "table `{}` is empty after the smoke", t.name);
         ensure!(
@@ -843,8 +979,8 @@ fn cmd_remote_smoke(a: &Args) -> Result<()> {
         replay.stats.sampled_items
     );
     ensure!(
-        replay.stats.priority_updates as u64 == 16 * total_batches,
-        "priority-update accounting off: {} != 16·{total_batches}",
+        replay.stats.priority_updates as u64 == 16 * total_updates,
+        "priority-update accounting off: {} != 16·{total_updates}",
         replay.stats.priority_updates
     );
     // The σ=1 ratio bound holds over the combined phases.

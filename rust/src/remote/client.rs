@@ -1,24 +1,50 @@
 //! Client side of the remote replay protocol: a low-level
-//! [`RemoteClient`] (one frame in, one frame out) plus the
-//! [`RemoteWriter`] / [`RemoteSampler`] handles that mirror the
-//! in-process [`TrajectoryWriter`] / [`SamplerHandle`] APIs through
-//! the [`ExperienceWriter`] / [`ExperienceSampler`] traits — the
-//! actor and learner loops cannot tell which side of the socket their
-//! tables live on.
+//! [`RemoteClient`] (framed call/response with reusable encode/decode
+//! buffers) plus the [`RemoteWriter`] / [`RemoteSampler`] handles that
+//! mirror the in-process [`TrajectoryWriter`] / [`SamplerHandle`] APIs
+//! through the [`ExperienceWriter`] / [`ExperienceSampler`] traits —
+//! the actor and learner loops cannot tell which side of the socket
+//! their tables live on.
+//!
+//! # Throughput machinery
+//!
+//! * **Batched appends** — [`RemoteWriter`] accumulates steps and
+//!   ships them `batch` at a time (one `Append` RPC per chunk instead
+//!   of one per step). A limiter stall comes back as a short
+//!   `Appended` frame; the un-admitted tail stays queued and is
+//!   retried by the actor's normal `throttled()` poll, re-encoding at
+//!   most one chunk per retry (never the whole backlog).
+//! * **Pipelined sampling** — [`RemoteSampler`] writes the next
+//!   `Sample` request immediately after each `UpdatePriorities` (same
+//!   connection, strictly after the update so the server applies
+//!   priorities before drawing), leaving the response in flight while
+//!   the learner runs its gradient step. The next `try_sample` only
+//!   reads the already-travelling response, collapsing the two serial
+//!   round-trips per learn iteration into roughly one.
+//! * **Allocation-free framing** — every RPC encodes into the
+//!   connection's reused [`ByteWriter`] and decodes out of its reused
+//!   payload buffer; sampled batches land directly in the learner's
+//!   [`SampleBatch`] scratch. Steady-state append/sample does no
+//!   per-RPC heap allocation on the client, and none for framing or
+//!   response encoding on the server (the server's `Append` decode
+//!   still materializes owned `WriterStep`s — they become storage
+//!   rows).
 //!
 //! Rate-limiter semantics are preserved across the wire without ever
 //! blocking the connection: a stalled insert comes back as a short
-//! `Appended` frame (the un-admitted steps stay queued client-side and
-//! are retried by the actor's normal `throttled()` poll), a stalled
-//! sample as a retriable `WouldStall` frame the learner sleep-polls,
-//! exactly like the in-process outcomes.
+//! `Appended` frame, a stalled sample as a retriable `WouldStall`
+//! frame the learner sleep-polls, exactly like the in-process
+//! outcomes.
 
-use super::frame::{read_frame, write_frame};
-use super::proto::{Request, Response, StallReason, TableInfo};
+use super::frame::{read_frame_into, write_frame};
+use super::proto::{
+    self, Request, Response, SampleOutcomeWire, StallReason, TableInfo, MAX_APPEND_STEPS,
+};
 use crate::replay::SampleBatch;
 use crate::service::{
     ExperienceSampler, ExperienceWriter, SampleOutcome, ServiceState, WriterStep,
 };
+use crate::util::blob::ByteWriter;
 use crate::util::rng::Rng;
 use anyhow::{bail, Context, Result};
 use std::collections::VecDeque;
@@ -34,10 +60,20 @@ use std::time::Duration;
 /// the slowest legitimate RPC (a multi-hundred-MiB `Checkpoint`).
 const RPC_TIMEOUT: Duration = Duration::from_secs(120);
 
+/// Default [`RemoteWriter`] flush threshold of a training run
+/// (`--remote-batch`); `RemoteWriter::connect` itself starts at 1
+/// (exact legacy one-step-per-RPC semantics) until
+/// [`RemoteWriter::with_batch`] raises it.
+pub const DEFAULT_REMOTE_BATCH: usize = 16;
+
 /// One connection to a [`super::ReplayServer`]; a thin call/response
-/// wrapper plus typed helpers for every RPC.
+/// wrapper plus typed helpers for every RPC. Requests encode into a
+/// per-connection [`ByteWriter`] and responses decode out of a
+/// per-connection payload buffer, both reused across calls.
 pub struct RemoteClient {
     stream: UnixStream,
+    enc: ByteWriter,
+    rbuf: Vec<u8>,
 }
 
 impl RemoteClient {
@@ -51,16 +87,41 @@ impl RemoteClient {
         stream
             .set_write_timeout(Some(RPC_TIMEOUT))
             .context("setting the RPC write timeout")?;
-        Ok(Self { stream })
+        Ok(Self { stream, enc: ByteWriter::new(), rbuf: Vec::new() })
+    }
+
+    /// Ship whatever the last `self.enc.reset()` + encode produced.
+    fn send_encoded(&mut self) -> Result<()> {
+        write_frame(&mut self.stream, self.enc.as_slice())
+    }
+
+    /// Write one request frame without reading its response (the
+    /// pipelining half; pair with a receive helper).
+    pub fn send(&mut self, req: &Request) -> Result<()> {
+        self.enc.reset();
+        req.encode_into(&mut self.enc);
+        self.send_encoded()
+    }
+
+    /// Read one response frame into the reused payload buffer.
+    fn recv_payload(&mut self) -> Result<()> {
+        if !read_frame_into(&mut self.stream, &mut self.rbuf)? {
+            bail!("replay server closed the connection mid-call");
+        }
+        Ok(())
+    }
+
+    /// Read one response and decode it (allocates for payload-carrying
+    /// variants; hot paths use the typed receive helpers instead).
+    pub fn recv(&mut self) -> Result<Response> {
+        self.recv_payload()?;
+        Response::decode(&self.rbuf)
     }
 
     /// One request, one response.
     pub fn call(&mut self, req: &Request) -> Result<Response> {
-        write_frame(&mut self.stream, &req.encode())?;
-        match read_frame(&mut self.stream)? {
-            None => bail!("replay server closed the connection mid-call"),
-            Some(payload) => Response::decode(&payload),
-        }
+        self.send(req)?;
+        self.recv()
     }
 
     /// As [`Self::call`], but a `Response::Error` becomes an `Err`.
@@ -71,10 +132,21 @@ impl RemoteClient {
         }
     }
 
-    /// Seed this connection's server-side sampling RNG.
-    pub fn hello(&mut self, rng_seed: u64) -> Result<()> {
-        match self.call_checked(&Request::Hello { rng_seed })? {
+    /// Read one response that must be a bare `Ok`.
+    fn recv_ok(&mut self, what: &str) -> Result<()> {
+        match self.recv()? {
             Response::Ok => Ok(()),
+            Response::Error { message } => bail!("replay server error: {message}"),
+            other => bail!("unexpected response to {what}: {other:?}"),
+        }
+    }
+
+    /// Seed this connection's server-side sampling RNG; returns the
+    /// server's default (first) table name, so a sampler binds without
+    /// a separate `Stats` round-trip.
+    pub fn hello(&mut self, rng_seed: u64) -> Result<String> {
+        match self.call_checked(&Request::Hello { rng_seed })? {
+            Response::Hello { default_table } => Ok(default_table),
             other => bail!("unexpected response to Hello: {other:?}"),
         }
     }
@@ -82,11 +154,46 @@ impl RemoteClient {
     /// Append steps for one actor; returns `(consumed, emitted)`. A
     /// `consumed` short of `steps.len()` means the limiter stalled —
     /// retry the tail later.
-    pub fn append(&mut self, actor_id: u64, steps: Vec<WriterStep>) -> Result<(u32, u32)> {
-        match self.call_checked(&Request::Append { actor_id, steps })? {
+    pub fn append(&mut self, actor_id: u64, steps: &[WriterStep]) -> Result<(u32, u32)> {
+        self.append_steps(actor_id, steps.iter())
+    }
+
+    /// As [`Self::append`], but straight from borrowed steps (e.g. a
+    /// slice of a pending queue) — no clone, no intermediate `Request`.
+    pub fn append_steps<'a>(
+        &mut self,
+        actor_id: u64,
+        steps: impl ExactSizeIterator<Item = &'a WriterStep>,
+    ) -> Result<(u32, u32)> {
+        self.enc.reset();
+        proto::encode_append(&mut self.enc, actor_id, steps);
+        self.send_encoded()?;
+        match self.recv()? {
             Response::Appended { consumed, emitted } => Ok((consumed, emitted)),
+            Response::Error { message } => bail!("replay server error: {message}"),
             other => bail!("unexpected response to Append: {other:?}"),
         }
+    }
+
+    /// Write a `Sample` request without reading the response (the
+    /// prefetch half; pair with [`Self::recv_sample`]).
+    pub fn send_sample(&mut self, table: &str, batch: usize) -> Result<()> {
+        self.enc.reset();
+        proto::encode_sample(&mut self.enc, table, batch as u32);
+        self.send_encoded()
+    }
+
+    /// Read one `Sample` response, decoding a granted batch into `out`
+    /// without allocating.
+    pub fn recv_sample(&mut self, out: &mut SampleBatch) -> Result<SampleOutcome> {
+        self.recv_payload()?;
+        Ok(match proto::decode_sample_response(&self.rbuf, out)? {
+            SampleOutcomeWire::Sampled => SampleOutcome::Sampled,
+            SampleOutcomeWire::WouldStall(StallReason::Throttled) => SampleOutcome::Throttled,
+            SampleOutcomeWire::WouldStall(StallReason::NotEnoughData) => {
+                SampleOutcome::NotEnoughData
+            }
+        })
     }
 
     /// Sample one batch from a named table into `out`.
@@ -96,18 +203,16 @@ impl RemoteClient {
         batch: usize,
         out: &mut SampleBatch,
     ) -> Result<SampleOutcome> {
-        let req = Request::Sample { table: table.to_string(), batch: batch as u32 };
-        match self.call_checked(&req)? {
-            Response::Sampled(b) => {
-                *out = b;
-                Ok(SampleOutcome::Sampled)
-            }
-            Response::WouldStall { reason } => Ok(match reason {
-                StallReason::Throttled => SampleOutcome::Throttled,
-                StallReason::NotEnoughData => SampleOutcome::NotEnoughData,
-            }),
-            other => bail!("unexpected response to Sample: {other:?}"),
-        }
+        self.send_sample(table, batch)?;
+        self.recv_sample(out)
+    }
+
+    /// Write an `UpdatePriorities` request without reading the
+    /// response (the pipelining half; pair with a `recv_ok`).
+    fn send_update(&mut self, table: &str, indices: &[usize], td_abs: &[f32]) -> Result<()> {
+        self.enc.reset();
+        proto::encode_update_priorities(&mut self.enc, table, indices, td_abs);
+        self.send_encoded()
     }
 
     /// Feed |TD| errors back for sampled indices of a named table.
@@ -117,15 +222,8 @@ impl RemoteClient {
         indices: &[usize],
         td_abs: &[f32],
     ) -> Result<()> {
-        let req = Request::UpdatePriorities {
-            table: table.to_string(),
-            indices: indices.iter().map(|&i| i as u64).collect(),
-            td_abs: td_abs.to_vec(),
-        };
-        match self.call_checked(&req)? {
-            Response::Ok => Ok(()),
-            other => bail!("unexpected response to UpdatePriorities: {other:?}"),
-        }
+        self.send_update(table, indices, td_abs)?;
+        self.recv_ok("UpdatePriorities")
     }
 
     /// Per-table sizes and counters.
@@ -171,25 +269,47 @@ impl RemoteClient {
 /// Remote counterpart of [`crate::service::TrajectoryWriter`]: ships
 /// raw env steps to the server, which runs the real writer (item
 /// assembly server-side keeps remote and local items byte-identical).
-/// Steps the limiter has not yet admitted wait in a small client-side
-/// queue that [`ExperienceWriter::throttled`] retries — mirroring the
-/// local writer, where a throttled actor holds its next step in the
-/// loop instead.
+///
+/// Steps accumulate client-side and go out `batch` at a time — one
+/// `Append` RPC per chunk. With `batch` = 1 ([`Self::connect`]'s
+/// default) every step is its own RPC, byte-for-byte the pre-batching
+/// behaviour. Steps the limiter has not yet admitted wait in the
+/// pending queue, retried by [`ExperienceWriter::throttled`] polls one
+/// chunk per RPC, so a long stall re-encodes at most `batch` steps per
+/// retry — never the whole backlog.
 pub struct RemoteWriter {
     client: RemoteClient,
     actor_id: u64,
     pending: VecDeque<WriterStep>,
+    /// Flush threshold AND per-RPC chunk size (≥ 1).
+    batch: usize,
+    /// The last `Append` was cut short by a limiter stall; cleared
+    /// when a flush drains the queue.
+    stalled: bool,
     items_emitted: u64,
+    wire_steps_sent: u64,
 }
 
 impl RemoteWriter {
+    /// Connect with the legacy one-step-per-RPC behaviour (`batch` 1);
+    /// chain [`Self::with_batch`] to enable client-side batching.
     pub fn connect(path: impl AsRef<Path>, actor_id: u64) -> Result<Self> {
         Ok(Self {
             client: RemoteClient::connect(path)?,
             actor_id,
             pending: VecDeque::new(),
+            batch: 1,
+            stalled: false,
             items_emitted: 0,
+            wire_steps_sent: 0,
         })
+    }
+
+    /// Set the flush threshold: steps accumulate until `batch` are
+    /// pending, then ship as one `Append` RPC.
+    pub fn with_batch(mut self, batch: usize) -> Self {
+        self.batch = batch.clamp(1, MAX_APPEND_STEPS);
+        self
     }
 
     /// Items the server reported emitting for this writer so far.
@@ -197,45 +317,73 @@ impl RemoteWriter {
         self.items_emitted
     }
 
-    /// Try to ship every pending step; stops early when the server
-    /// reports a limiter stall (the tail stays queued for the next
-    /// poll).
-    fn flush(&mut self) -> Result<()> {
+    /// Steps queued client-side (not yet acknowledged by the server).
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Total steps encoded onto the wire, retries included — the
+    /// regression probe for the flush path: a stall must re-send at
+    /// most one chunk per retry, so this stays O(steps + retries ·
+    /// batch), never O(steps²).
+    pub fn wire_steps_sent(&self) -> u64 {
+        self.wire_steps_sent
+    }
+
+    /// Ship pending steps one chunk per RPC; stops early when the
+    /// server reports a limiter stall (the tail stays queued for the
+    /// next poll). Returns the number of steps still pending.
+    fn flush_pending(&mut self) -> Result<usize> {
         while !self.pending.is_empty() {
-            let steps: Vec<WriterStep> = self.pending.iter().cloned().collect();
-            let sent = steps.len();
-            let (consumed, emitted) = self.client.append(self.actor_id, steps)?;
+            let chunk = self.pending.len().min(self.batch);
+            let (consumed, emitted) =
+                self.client.append_steps(self.actor_id, self.pending.iter().take(chunk))?;
+            self.wire_steps_sent += chunk as u64;
             for _ in 0..consumed {
                 self.pending.pop_front();
             }
             self.items_emitted += emitted as u64;
-            if (consumed as usize) < sent {
-                break; // limiter stall — retriable, not an error
+            if (consumed as usize) < chunk {
+                self.stalled = true; // limiter stall — retriable, not an error
+                return Ok(self.pending.len());
             }
         }
-        Ok(())
+        self.stalled = false;
+        Ok(0)
     }
 }
 
 impl ExperienceWriter for RemoteWriter {
     fn throttled(&mut self) -> Result<bool> {
-        self.flush()?;
-        Ok(!self.pending.is_empty())
+        if self.stalled || self.pending.len() >= self.batch {
+            self.flush_pending()?;
+        }
+        Ok(self.stalled)
     }
 
     fn append(&mut self, step: WriterStep) -> Result<usize> {
         let before = self.items_emitted;
         self.pending.push_back(step);
-        self.flush()?;
+        // While stalled, retries belong to the `throttled()` poll (the
+        // actor's sleep loop), not to every queued step — that keeps a
+        // long stall at one chunk-sized RPC per poll instead of one
+        // per append.
+        if !self.stalled && self.pending.len() >= self.batch {
+            self.flush_pending()?;
+        }
         Ok((self.items_emitted - before) as usize)
+    }
+
+    fn flush(&mut self) -> Result<usize> {
+        self.flush_pending()
     }
 }
 
 impl Drop for RemoteWriter {
     fn drop(&mut self) {
-        // Best-effort: one last try at delivering a step the limiter
-        // stalled right before shutdown.
-        let _ = self.flush();
+        // Best-effort: one last try at delivering steps still queued
+        // (a sub-batch tail, or steps the limiter stalled) at shutdown.
+        let _ = self.flush_pending();
     }
 }
 
@@ -243,13 +391,32 @@ impl Drop for RemoteWriter {
 /// table. Sampling randomness lives server-side (seeded at connect),
 /// so a fixed seed makes a remote sample/update loop bit-reproducible
 /// against an in-process one.
+///
+/// With [`Self::with_prefetch`] the sampler keeps one decoded batch in
+/// flight: each `update_priorities` writes the update *and* the next
+/// `Sample` request back-to-back on the connection (the server applies
+/// the priorities before drawing, preserving in-process ordering), so
+/// the following `try_sample` only reads a response that travelled
+/// during the learner's gradient step. A `WouldStall` read out of the
+/// pipeline ends it cleanly — the next `try_sample` issues a fresh
+/// request, and no granted batch is ever lost or duplicated.
 pub struct RemoteSampler {
     client: RemoteClient,
     table: String,
+    prefetch: bool,
+    /// Batch size of the `Sample` request currently in flight.
+    inflight: Option<usize>,
+    /// Batch size of the last granted batch (what a prefetch requests).
+    last_batch: Option<usize>,
+    /// Responses drained out of order (an in-flight sample consumed by
+    /// a second consecutive update), oldest first, each tagged with its
+    /// requested batch size; handed back by `try_sample` in order so no
+    /// granted batch is ever lost.
+    stashed: VecDeque<(usize, SampleOutcome, SampleBatch)>,
 }
 
 impl RemoteSampler {
-    /// Connect and seed the connection's sampling RNG.
+    /// Connect to a named table and seed the connection's sampling RNG.
     pub fn connect(
         path: impl AsRef<Path>,
         table: impl Into<String>,
@@ -257,24 +424,53 @@ impl RemoteSampler {
     ) -> Result<Self> {
         let mut client = RemoteClient::connect(path)?;
         client.hello(rng_seed)?;
-        Ok(Self { client, table: table.into() })
+        Ok(Self::new(client, table.into()))
     }
 
-    /// Connect to the server's default (first) table.
+    /// Connect to the server's default (first) table: one dial, one
+    /// round-trip — the `Hello` response names the table.
     pub fn connect_default(path: impl AsRef<Path>, rng_seed: u64) -> Result<Self> {
-        let path = path.as_ref();
         let mut client = RemoteClient::connect(path)?;
-        let tables = client.stats()?;
-        let first = tables
-            .first()
-            .map(|t| t.name.clone())
-            .context("replay server reports no tables")?;
-        client.hello(rng_seed)?;
-        Ok(Self { client, table: first })
+        let table = client.hello(rng_seed)?;
+        if table.is_empty() {
+            bail!("replay server reports no default table");
+        }
+        Ok(Self::new(client, table))
+    }
+
+    fn new(client: RemoteClient, table: String) -> Self {
+        Self {
+            client,
+            table,
+            prefetch: false,
+            inflight: None,
+            last_batch: None,
+            stashed: VecDeque::new(),
+        }
+    }
+
+    /// Enable pipelined sampling (one batch kept in flight).
+    pub fn with_prefetch(mut self, on: bool) -> Self {
+        self.prefetch = on;
+        self
     }
 
     pub fn table(&self) -> &str {
         &self.table
+    }
+
+    /// Consume the in-flight prefetch response, if any, and report its
+    /// outcome. A `Sampled` outcome here is a batch the server granted
+    /// (and counted) that this client will never use — callers that
+    /// audit exact accounting must tally it.
+    pub fn drain(&mut self) -> Result<Option<SampleOutcome>> {
+        match self.inflight.take() {
+            None => Ok(None),
+            Some(_) => {
+                let mut scratch = SampleBatch::default();
+                Ok(Some(self.client.recv_sample(&mut scratch)?))
+            }
+        }
     }
 }
 
@@ -285,10 +481,63 @@ impl ExperienceSampler for RemoteSampler {
         _rng: &mut Rng,
         out: &mut SampleBatch,
     ) -> Result<SampleOutcome> {
-        self.client.sample(&self.table, batch, out)
+        if let Some((n, outcome, mut stashed)) = self.stashed.pop_front() {
+            if n != batch {
+                bail!(
+                    "stashed sample batch size does not match the request ({n} stashed, \
+                     {batch} requested)"
+                );
+            }
+            std::mem::swap(out, &mut stashed);
+            if outcome == SampleOutcome::Sampled {
+                self.last_batch = Some(batch);
+            }
+            return Ok(outcome);
+        }
+        let outcome = match self.inflight.take() {
+            Some(n) => {
+                if n != batch {
+                    bail!(
+                        "pipelined sample batch size changed mid-flight ({n} in flight, \
+                         {batch} requested)"
+                    );
+                }
+                self.client.recv_sample(out)?
+            }
+            None => {
+                self.client.send_sample(&self.table, batch)?;
+                self.client.recv_sample(out)?
+            }
+        };
+        if outcome == SampleOutcome::Sampled {
+            self.last_batch = Some(batch);
+        }
+        Ok(outcome)
     }
 
     fn update_priorities(&mut self, indices: &[usize], td_abs: &[f32]) -> Result<()> {
-        self.client.update_priorities(&self.table, indices, td_abs)
+        if let Some(n) = self.inflight.take() {
+            // Two updates without a try_sample in between: drain the
+            // in-flight response into the stash queue so the granted
+            // batch is neither lost nor read out of frame order (even
+            // across several consecutive updates).
+            let mut scratch = SampleBatch::default();
+            let outcome = self.client.recv_sample(&mut scratch)?;
+            self.stashed.push_back((n, outcome, scratch));
+        }
+        self.client.send_update(&self.table, indices, td_abs)?;
+        if self.prefetch {
+            if let Some(n) = self.last_batch {
+                // Written strictly after the update on the same stream:
+                // the server applies the new priorities, then draws.
+                self.client.send_sample(&self.table, n)?;
+                self.inflight = Some(n);
+            }
+        }
+        self.client.recv_ok("UpdatePriorities")
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        self.drain().map(|_| ())
     }
 }

@@ -60,12 +60,20 @@ fn read_exact_or(r: &mut impl Read, buf: &mut [u8], what: &str) -> Result<()> {
 /// Read one frame's payload. `Ok(None)` on clean EOF before any frame
 /// byte; every malformed input is a descriptive error.
 pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
+    let mut payload = Vec::new();
+    Ok(read_frame_into(r, &mut payload)?.then_some(payload))
+}
+
+/// As [`read_frame`], but into a caller-owned buffer (cleared first) so
+/// a connection loop reads every frame into one reused allocation.
+/// Returns `false` on clean EOF before any frame byte.
+pub fn read_frame_into(r: &mut impl Read, payload: &mut Vec<u8>) -> Result<bool> {
     // Read the first byte by hand so "peer closed between frames" is
     // distinguishable from "frame cut off mid-flight".
     let mut first = [0u8; 1];
     loop {
         match r.read(&mut first) {
-            Ok(0) => return Ok(None),
+            Ok(0) => return Ok(false),
             Ok(_) => break,
             Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
             Err(e) => return Err(e).context("reading frame magic"),
@@ -91,19 +99,20 @@ pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
              (corrupted or hostile frame)"
         );
     }
-    let mut payload = vec![0u8; len];
-    read_exact_or(r, &mut payload, "frame payload")?;
+    payload.clear();
+    payload.resize(len, 0);
+    read_exact_or(r, payload, "frame payload")?;
     let mut crc4 = [0u8; 4];
     read_exact_or(r, &mut crc4, "frame checksum")?;
     let stored = u32::from_le_bytes(crc4);
-    let computed = crc32(&payload);
+    let computed = crc32(payload);
     if computed != stored {
         bail!(
             "frame checksum mismatch: payload crc {computed:#010x}, frame says \
              {stored:#010x} (corrupted frame)"
         );
     }
-    Ok(Some(payload))
+    Ok(true)
 }
 
 #[cfg(test)]

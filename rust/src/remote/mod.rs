@@ -24,13 +24,21 @@
 //! Rate limiters keep their semantics across the wire: a stalled
 //! sample is a retriable `WouldStall` frame, a stalled insert a short
 //! `Appended` frame — connections never block on admission.
+//!
+//! The data path is built for throughput: writers batch steps
+//! client-side (one `Append` RPC per `--remote-batch` chunk), samplers
+//! pipeline one batch in flight behind every priority update, and both
+//! sides of the socket reuse their framing and encode/decode buffers —
+//! the client allocates nothing per RPC in steady state; the server
+//! allocates only the owned `WriterStep`s an `Append` delivers into
+//! storage (`benches/fig_remote.rs` measures all of it).
 
 pub mod client;
 pub mod frame;
 pub mod proto;
 pub mod server;
 
-pub use client::{RemoteClient, RemoteSampler, RemoteWriter};
-pub use frame::{read_frame, write_frame, FRAME_MAGIC, MAX_FRAME_LEN};
+pub use client::{RemoteClient, RemoteSampler, RemoteWriter, DEFAULT_REMOTE_BATCH};
+pub use frame::{read_frame, read_frame_into, write_frame, FRAME_MAGIC, MAX_FRAME_LEN};
 pub use proto::{Request, Response, StallReason, TableInfo};
 pub use server::ReplayServer;

@@ -53,6 +53,7 @@ const RESP_WOULD_STALL: u8 = 4;
 const RESP_STATS: u8 = 5;
 const RESP_STATE: u8 = 6;
 const RESP_ERROR: u8 = 7;
+const RESP_HELLO: u8 = 8;
 
 /// Why a `Sample` was denied; the client maps these straight onto
 /// [`crate::service::SampleOutcome`] and sleep-polls, exactly like an
@@ -101,6 +102,10 @@ pub enum Request {
 pub enum Response {
     /// Request applied; nothing to return.
     Ok,
+    /// `Hello` acknowledged; carries the server's default (first) table
+    /// name so a sampler can bind to it without a separate `Stats`
+    /// round-trip.
+    Hello { default_table: String },
     /// `Append` outcome: the first `consumed` steps were applied (the
     /// rest hit a rate-limiter stall — retriable), emitting `emitted`
     /// items across the tables.
@@ -136,6 +141,58 @@ fn encode_step(w: &mut ByteWriter, s: &WriterStep) {
     w.u8(s.truncated as u8);
 }
 
+/// Encode an `Append` request straight from borrowed steps — the
+/// writer hot path: no `Request` value, no step clones, the frame
+/// payload lands in the caller's reused [`ByteWriter`].
+pub fn encode_append<'a>(
+    w: &mut ByteWriter,
+    actor_id: u64,
+    steps: impl ExactSizeIterator<Item = &'a WriterStep>,
+) {
+    w.u8(OP_APPEND);
+    w.u64(actor_id);
+    w.u32(steps.len() as u32);
+    for s in steps {
+        encode_step(w, s);
+    }
+}
+
+/// Encode a `Sample` request without cloning the table name.
+pub fn encode_sample(w: &mut ByteWriter, table: &str, batch: u32) {
+    w.u8(OP_SAMPLE);
+    w.str_(table);
+    w.u32(batch);
+}
+
+/// Encode an `UpdatePriorities` request straight from the learner's
+/// `usize` indices (no intermediate `Vec<u64>`).
+pub fn encode_update_priorities(
+    w: &mut ByteWriter,
+    table: &str,
+    indices: &[usize],
+    td_abs: &[f32],
+) {
+    encode_update_raw(w, table, indices.iter().map(|&i| i as u64), td_abs);
+}
+
+/// The one definition of the `UpdatePriorities` wire layout; both the
+/// hot path above and `Request::encode_into` delegate here so the two
+/// can never drift.
+fn encode_update_raw(
+    w: &mut ByteWriter,
+    table: &str,
+    indices: impl ExactSizeIterator<Item = u64>,
+    td_abs: &[f32],
+) {
+    w.u8(OP_UPDATE_PRIORITIES);
+    w.str_(table);
+    w.u64(indices.len() as u64);
+    for i in indices {
+        w.u64(i);
+    }
+    w.f32s(td_abs);
+}
+
 fn decode_step(r: &mut ByteReader) -> Result<WriterStep> {
     Ok(WriterStep {
         obs: r.f32s("step obs")?,
@@ -147,9 +204,19 @@ fn decode_step(r: &mut ByteReader) -> Result<WriterStep> {
     })
 }
 
+/// Encode a `Sampled` *response* straight from the server's scratch
+/// batch — the sampler hot path: no `Response` value, no batch clone.
+pub fn encode_sampled(w: &mut ByteWriter, b: &SampleBatch) {
+    w.u8(RESP_SAMPLED);
+    encode_batch(w, b);
+}
+
 fn encode_batch(w: &mut ByteWriter, b: &SampleBatch) {
     w.u32(b.len() as u32);
-    w.u64s(&b.indices.iter().map(|&i| i as u64).collect::<Vec<_>>());
+    w.u64(b.indices.len() as u64);
+    for &i in &b.indices {
+        w.u64(i as u64);
+    }
     w.f32s(&b.priorities);
     w.f32s(&b.is_weights);
     w.f32s(&b.obs);
@@ -159,73 +226,116 @@ fn encode_batch(w: &mut ByteWriter, b: &SampleBatch) {
     w.f32s(&b.done);
 }
 
-fn decode_batch(r: &mut ByteReader) -> Result<SampleBatch> {
+/// Decode a sampled batch into a caller-owned [`SampleBatch`] (every
+/// field vector cleared and refilled in place), so a learner's receive
+/// loop reuses one set of allocations. On error `out` may hold partial
+/// data and must not be used.
+fn decode_batch_into(r: &mut ByteReader, out: &mut SampleBatch) -> Result<()> {
     let n = r.u32("batch size")? as usize;
     if n == 0 || n > MAX_SAMPLE_BATCH {
         bail!("implausible sampled-batch size {n}");
     }
-    let indices: Vec<usize> = r.u64s("batch indices")?.into_iter().map(|i| i as usize).collect();
-    let priorities = r.f32s("batch priorities")?;
-    let is_weights = r.f32s("batch is_weights")?;
-    let obs = r.f32s("batch obs")?;
-    let action = r.f32s("batch action")?;
-    let next_obs = r.f32s("batch next_obs")?;
-    let reward = r.f32s("batch reward")?;
-    let done = r.f32s("batch done")?;
-    if indices.len() != n
-        || priorities.len() != n
-        || reward.len() != n
-        || done.len() != n
-        || !(is_weights.is_empty() || is_weights.len() == n)
+    let idx_count = r.u64("batch indices")? as usize;
+    if idx_count > MAX_SAMPLE_BATCH {
+        bail!("implausible sampled-batch index count {idx_count}");
+    }
+    out.indices.clear();
+    out.indices.reserve(idx_count);
+    for _ in 0..idx_count {
+        out.indices.push(r.u64("batch index")? as usize);
+    }
+    r.f32s_into("batch priorities", &mut out.priorities)?;
+    r.f32s_into("batch is_weights", &mut out.is_weights)?;
+    r.f32s_into("batch obs", &mut out.obs)?;
+    r.f32s_into("batch action", &mut out.action)?;
+    r.f32s_into("batch next_obs", &mut out.next_obs)?;
+    r.f32s_into("batch reward", &mut out.reward)?;
+    r.f32s_into("batch done", &mut out.done)?;
+    if out.indices.len() != n
+        || out.priorities.len() != n
+        || out.reward.len() != n
+        || out.done.len() != n
+        || !(out.is_weights.is_empty() || out.is_weights.len() == n)
     {
         bail!(
             "inconsistent sampled batch: {n} items but {} indices / {} priorities / \
              {} rewards / {} dones / {} is_weights",
-            indices.len(),
-            priorities.len(),
-            reward.len(),
-            done.len(),
-            is_weights.len()
+            out.indices.len(),
+            out.priorities.len(),
+            out.reward.len(),
+            out.done.len(),
+            out.is_weights.len()
         );
     }
-    if obs.len() % n != 0 || action.len() % n != 0 || next_obs.len() != obs.len() {
+    if out.obs.len() % n != 0 || out.action.len() % n != 0 || out.next_obs.len() != out.obs.len() {
         bail!(
             "inconsistent sampled batch: {} obs / {} next_obs / {} action values \
              do not divide into {n} items",
-            obs.len(),
-            next_obs.len(),
-            action.len()
+            out.obs.len(),
+            out.next_obs.len(),
+            out.action.len()
         );
     }
-    Ok(SampleBatch { indices, priorities, is_weights, obs, action, next_obs, reward, done })
+    Ok(())
+}
+
+fn decode_batch(r: &mut ByteReader) -> Result<SampleBatch> {
+    let mut out = SampleBatch::default();
+    decode_batch_into(r, &mut out)?;
+    Ok(out)
+}
+
+/// Parse one *response* payload as a sample outcome, decoding a
+/// `Sampled` batch into `out` without allocating. The client's receive
+/// half of [`encode_sample`]; any other opcode (including `Error`) is
+/// an `Err`.
+pub fn decode_sample_response(payload: &[u8], out: &mut SampleBatch) -> Result<SampleOutcomeWire> {
+    let mut r = ByteReader::new(payload);
+    match r.u8("response opcode")? {
+        RESP_SAMPLED => {
+            decode_batch_into(&mut r, out)?;
+            r.expect_end()?;
+            Ok(SampleOutcomeWire::Sampled)
+        }
+        RESP_WOULD_STALL => {
+            let reason = match r.u8("stall reason")? {
+                0 => StallReason::Throttled,
+                1 => StallReason::NotEnoughData,
+                other => bail!("unknown stall reason {other}"),
+            };
+            r.expect_end()?;
+            Ok(SampleOutcomeWire::WouldStall(reason))
+        }
+        RESP_ERROR => bail!("replay server error: {}", r.str_("error message")?),
+        other => bail!("unexpected response opcode {other} to Sample"),
+    }
+}
+
+/// Outcome of [`decode_sample_response`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SampleOutcomeWire {
+    Sampled,
+    WouldStall(StallReason),
 }
 
 impl Request {
     pub fn encode(&self) -> Vec<u8> {
         let mut w = ByteWriter::new();
+        self.encode_into(&mut w);
+        w.finish()
+    }
+
+    /// Encode into a caller-owned (typically reused) [`ByteWriter`].
+    pub fn encode_into(&self, w: &mut ByteWriter) {
         match self {
             Request::Hello { rng_seed } => {
                 w.u8(OP_HELLO);
                 w.u64(*rng_seed);
             }
-            Request::Append { actor_id, steps } => {
-                w.u8(OP_APPEND);
-                w.u64(*actor_id);
-                w.u32(steps.len() as u32);
-                for s in steps {
-                    encode_step(&mut w, s);
-                }
-            }
-            Request::Sample { table, batch } => {
-                w.u8(OP_SAMPLE);
-                w.str_(table);
-                w.u32(*batch);
-            }
+            Request::Append { actor_id, steps } => encode_append(w, *actor_id, steps.iter()),
+            Request::Sample { table, batch } => encode_sample(w, table, *batch),
             Request::UpdatePriorities { table, indices, td_abs } => {
-                w.u8(OP_UPDATE_PRIORITIES);
-                w.str_(table);
-                w.u64s(indices);
-                w.f32s(td_abs);
+                encode_update_raw(w, table, indices.iter().copied(), td_abs)
             }
             Request::Stats => w.u8(OP_STATS),
             Request::Checkpoint => w.u8(OP_CHECKPOINT),
@@ -235,7 +345,6 @@ impl Request {
             }
             Request::Shutdown => w.u8(OP_SHUTDOWN),
         }
-        w.finish()
     }
 
     pub fn decode(payload: &[u8]) -> Result<Self> {
@@ -296,17 +405,24 @@ impl Request {
 impl Response {
     pub fn encode(&self) -> Vec<u8> {
         let mut w = ByteWriter::new();
+        self.encode_into(&mut w);
+        w.finish()
+    }
+
+    /// Encode into a caller-owned (typically reused) [`ByteWriter`].
+    pub fn encode_into(&self, w: &mut ByteWriter) {
         match self {
             Response::Ok => w.u8(RESP_OK),
+            Response::Hello { default_table } => {
+                w.u8(RESP_HELLO);
+                w.str_(default_table);
+            }
             Response::Appended { consumed, emitted } => {
                 w.u8(RESP_APPENDED);
                 w.u32(*consumed);
                 w.u32(*emitted);
             }
-            Response::Sampled(b) => {
-                w.u8(RESP_SAMPLED);
-                encode_batch(&mut w, b);
-            }
+            Response::Sampled(b) => encode_sampled(w, b),
             Response::WouldStall { reason } => {
                 w.u8(RESP_WOULD_STALL);
                 w.u8(match reason {
@@ -338,7 +454,6 @@ impl Response {
                 w.str_(message);
             }
         }
-        w.finish()
     }
 
     pub fn decode(payload: &[u8]) -> Result<Self> {
@@ -346,6 +461,7 @@ impl Response {
         let op = r.u8("response opcode")?;
         let resp = match op {
             RESP_OK => Response::Ok,
+            RESP_HELLO => Response::Hello { default_table: r.str_("default table name")? },
             RESP_APPENDED => Response::Appended {
                 consumed: r.u32("consumed count")?,
                 emitted: r.u32("emitted count")?,
@@ -443,6 +559,7 @@ mod tests {
         };
         let resps = vec![
             Response::Ok,
+            Response::Hello { default_table: "replay".into() },
             Response::Appended { consumed: 5, emitted: 9 },
             Response::Sampled(batch),
             Response::WouldStall { reason: StallReason::Throttled },

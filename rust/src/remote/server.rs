@@ -26,10 +26,11 @@
 //!   [`Response::Appended`]. The server never blocks a connection on a
 //!   rate limiter.
 
-use super::frame::{read_frame, write_frame};
-use super::proto::{Request, Response, StallReason, TableInfo};
+use super::frame::{read_frame_into, write_frame};
+use super::proto::{self, Request, Response, StallReason, TableInfo};
 use crate::replay::SampleBatch;
 use crate::service::{ReplayService, SampleOutcome, ServiceState, TrajectoryWriter};
+use crate::util::blob::ByteWriter;
 use crate::util::rng::Rng;
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
@@ -186,7 +187,11 @@ impl ReplayServer {
     }
 }
 
-/// Per-connection loop: read frame → decode → dispatch → respond.
+/// Per-connection loop: read frame → decode → dispatch → respond. One
+/// read buffer and one response encoder per connection, reused for
+/// every frame, so framing and response encoding allocate nothing per
+/// RPC (request *decoding* still materializes owned payloads — an
+/// `Append`'s steps become storage rows).
 fn handle_connection(
     service: Arc<ReplayService>,
     mut stream: UnixStream,
@@ -200,50 +205,98 @@ fn handle_connection(
     let mut rng = Rng::new(seed);
     let mut writers: HashMap<u64, TrajectoryWriter> = HashMap::new();
     let mut scratch = SampleBatch::default();
+    let mut rbuf: Vec<u8> = Vec::new();
+    let mut enc = ByteWriter::new();
     loop {
-        let payload = match read_frame(&mut stream) {
-            Ok(Some(p)) => p,
+        match read_frame_into(&mut stream, &mut rbuf) {
+            Ok(true) => {}
             // Client hung up between frames.
-            Ok(None) => break,
+            Ok(false) => break,
             Err(e) => {
                 // The stream may be mid-frame; answer and drop it.
                 let resp = Response::Error { message: format!("protocol error: {e}") };
                 let _ = write_frame(&mut stream, &resp.encode());
                 break;
             }
-        };
-        let resp = match Request::decode(&payload) {
+        }
+        enc.reset();
+        let mut shutdown = false;
+        match Request::decode(&rbuf) {
             // Frame boundaries are intact (the frame checksum passed);
             // a bad payload is answerable without closing.
-            Err(e) => Response::Error { message: format!("bad request: {e}") },
-            Ok(Request::Shutdown) => {
-                let _ = write_frame(&mut stream, &Response::Ok.encode());
-                stop.store(true, Ordering::Relaxed);
-                break;
+            Err(e) => {
+                Response::Error { message: format!("bad request: {e}") }.encode_into(&mut enc)
             }
-            Ok(req) => dispatch(&service, &mut writers, &mut rng, &mut scratch, dims, req),
-        };
-        if write_frame(&mut stream, &resp.encode()).is_err() {
+            Ok(Request::Shutdown) => {
+                Response::Ok.encode_into(&mut enc);
+                shutdown = true;
+            }
+            Ok(req) => {
+                dispatch_into(&service, &mut writers, &mut rng, &mut scratch, dims, req, &mut enc)
+            }
+        }
+        if shutdown {
+            // Set the stop flag BEFORE attempting the Ok response: a
+            // client that hangs up right after sending Shutdown must
+            // still stop the server (the reply is best-effort).
+            stop.store(true, Ordering::Relaxed);
+            let _ = write_frame(&mut stream, enc.as_slice());
+            break;
+        }
+        if write_frame(&mut stream, enc.as_slice()).is_err() {
             break;
         }
     }
 }
 
-/// Apply one decoded request against the service. Infallible by
-/// construction: every failure is a [`Response::Error`] value, so a
-/// hostile request can never take the connection thread down.
-fn dispatch(
+/// Apply one decoded request against the service, encoding the
+/// response into `enc`. Infallible by construction: every failure is
+/// an encoded [`Response::Error`], so a hostile request can never take
+/// the connection thread down. The `Sampled` hot path encodes the
+/// scratch batch directly (no clone, no `Response` value).
+fn dispatch_into(
     service: &Arc<ReplayService>,
     writers: &mut HashMap<u64, TrajectoryWriter>,
     rng: &mut Rng,
     scratch: &mut SampleBatch,
     dims: Option<(usize, usize)>,
     req: Request,
+    enc: &mut ByteWriter,
+) {
+    if let Request::Sample { table, batch } = &req {
+        match service.sampler(table) {
+            None => {
+                Response::Error { message: format!("unknown table `{table}`") }.encode_into(enc)
+            }
+            Some(sampler) => match sampler.try_sample(*batch as usize, rng, scratch) {
+                SampleOutcome::Sampled => proto::encode_sampled(enc, scratch),
+                SampleOutcome::Throttled => {
+                    Response::WouldStall { reason: StallReason::Throttled }.encode_into(enc)
+                }
+                SampleOutcome::NotEnoughData => {
+                    Response::WouldStall { reason: StallReason::NotEnoughData }.encode_into(enc)
+                }
+            },
+        }
+        return;
+    }
+    dispatch_cold(service, writers, rng, dims, req).encode_into(enc);
+}
+
+/// The non-`Sample` requests, as plain response values (their payloads
+/// are either tiny or intrinsically owned, so value construction costs
+/// nothing that matters).
+fn dispatch_cold(
+    service: &Arc<ReplayService>,
+    writers: &mut HashMap<u64, TrajectoryWriter>,
+    rng: &mut Rng,
+    dims: Option<(usize, usize)>,
+    req: Request,
 ) -> Response {
     match req {
         Request::Hello { rng_seed } => {
             *rng = Rng::new(rng_seed);
-            Response::Ok
+            Response::Hello { default_table: service.default_table().name().to_string() }
         }
         Request::Append { actor_id, steps } => {
             // Validate the WHOLE batch before applying any of it, so a
@@ -297,18 +350,8 @@ fn dispatch(
             }
             Response::Appended { consumed, emitted }
         }
-        Request::Sample { table, batch } => match service.sampler(&table) {
-            None => Response::Error { message: format!("unknown table `{table}`") },
-            Some(sampler) => match sampler.try_sample(batch as usize, rng, scratch) {
-                SampleOutcome::Sampled => Response::Sampled(scratch.clone()),
-                SampleOutcome::Throttled => {
-                    Response::WouldStall { reason: StallReason::Throttled }
-                }
-                SampleOutcome::NotEnoughData => {
-                    Response::WouldStall { reason: StallReason::NotEnoughData }
-                }
-            },
-        },
+        // Handled by the hot path in `dispatch_into`.
+        Request::Sample { .. } => unreachable!("Sample is dispatched before the cold path"),
         Request::UpdatePriorities { table, indices, td_abs } => match service.table(&table) {
             None => Response::Error { message: format!("unknown table `{table}`") },
             Some(t) => {
@@ -379,6 +422,21 @@ mod tests {
     use super::*;
     use crate::replay::UniformReplay;
     use crate::service::{ItemKind, RateLimiter, Table};
+
+    /// Round one request through the encoding dispatch path back to a
+    /// decoded `Response` (what tests assert on).
+    fn dispatch(
+        service: &Arc<ReplayService>,
+        writers: &mut HashMap<u64, TrajectoryWriter>,
+        rng: &mut Rng,
+        scratch: &mut SampleBatch,
+        dims: Option<(usize, usize)>,
+        req: Request,
+    ) -> Response {
+        let mut enc = ByteWriter::new();
+        dispatch_into(service, writers, rng, scratch, dims, req, &mut enc);
+        Response::decode(enc.as_slice()).expect("dispatch must encode a decodable response")
+    }
 
     fn tiny_service() -> Arc<ReplayService> {
         Arc::new(

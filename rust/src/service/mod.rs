@@ -54,11 +54,13 @@ use std::sync::Arc;
 
 /// Parsed `--tables` entry: `name=kind[@option,option,...]`, e.g.
 /// `replay=1step`, `multi=nstep:3@50000`, `traj=seq:8`,
-/// `hot=1step@50000,alpha=0.9,beta=0.6`. Options after `@` are a bare
-/// integer (capacity) and per-table PER exponent overrides
+/// `hot=1step@50000,alpha=0.9,beta=0.6,limit=1.5`. Options after `@`
+/// are a bare integer (capacity), per-table PER exponent overrides
 /// `alpha=..` / `beta=..` (the run's `--alpha`/`--beta` when absent),
-/// so a uniform-ish FIFO table can sit next to a heavily-prioritized
-/// one for the same stream.
+/// and a per-table rate limiter `limit=..` taking the `--rate-limit`
+/// grammar (`legacy`, `unlimited`, or a samples-per-insert float) —
+/// so one stream can feed a ratio-limited learner table next to a
+/// free-running auxiliary one, each with its own policy.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TableSpec {
     pub name: String,
@@ -69,6 +71,12 @@ pub struct TableSpec {
     pub alpha: Option<f32>,
     /// Per-table PER importance exponent β (run default when `None`).
     pub beta: Option<f32>,
+    /// Per-table rate limiter (`limit=..`). `None` keeps the
+    /// coordinator's default: the run's `--rate-limit` on the
+    /// learner-sampled (first) table, free-run on auxiliaries. A ratio
+    /// limiter only belongs on a table something actually samples —
+    /// writers block while ANY table denies inserts.
+    pub limit: Option<RateLimitSpec>,
 }
 
 impl TableSpec {
@@ -89,6 +97,7 @@ impl TableSpec {
         let mut capacity = None;
         let mut alpha = None;
         let mut beta = None;
+        let mut limit = None;
         for opt in opts.into_iter().flat_map(|o| o.split(',')) {
             let opt = opt.trim();
             if opt.is_empty() {
@@ -96,12 +105,21 @@ impl TableSpec {
             }
             if let Some((key, value)) = opt.split_once('=') {
                 let (key, value) = (key.trim(), value.trim());
+                if key == "limit" {
+                    let spec = RateLimitSpec::parse(value).map_err(|e| {
+                        anyhow::anyhow!("bad limit value `{value}` in table spec `{s}`: {e}")
+                    })?;
+                    if limit.replace(spec).is_some() {
+                        bail!("duplicate limit in table spec `{s}`");
+                    }
+                    continue;
+                }
                 let slot = match key {
                     "alpha" => &mut alpha,
                     "beta" => &mut beta,
                     other => bail!(
                         "unknown option `{other}` in table spec `{s}` \
-                         (expected a capacity, alpha=.., beta=..)"
+                         (expected a capacity, alpha=.., beta=.., limit=..)"
                     ),
                 };
                 let v: f32 = value
@@ -131,25 +149,27 @@ impl TableSpec {
             capacity,
             alpha,
             beta,
+            limit,
         })
     }
 
     /// Parse a whole `--tables` value. Entries split on commas, but a
     /// comma also separates the options *inside* one entry
-    /// (`hot=1step@alpha=0.9,beta=0.6`): a segment whose key before the
-    /// first `=` is `alpha`/`beta` continues the previous entry instead
-    /// of starting a new one. Consequence: `alpha` and `beta` are
-    /// reserved by the grammar and cannot be used as table names.
+    /// (`hot=1step@alpha=0.9,beta=0.6,limit=2`): a segment whose key
+    /// before the first `=` is `alpha`/`beta`/`limit` continues the
+    /// previous entry instead of starting a new one. Consequence:
+    /// `alpha`, `beta` and `limit` are reserved by the grammar and
+    /// cannot be used as table names.
     pub fn parse_list(s: &str, gamma: f32) -> Result<Vec<TableSpec>> {
         let mut entries: Vec<String> = Vec::new();
         for seg in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
             // A segment continues the previous entry when it is an
-            // exponent option, or a bare capacity following an entry
-            // that already opened its option list (a capacity can never
-            // START an entry — entries need `name=kind`).
+            // option (exponent or limiter), or a bare capacity following
+            // an entry that already opened its option list (a capacity
+            // can never START an entry — entries need `name=kind`).
             let continues = matches!(
                 seg.split_once('=').map(|(k, _)| k.trim()),
-                Some("alpha") | Some("beta")
+                Some("alpha") | Some("beta") | Some("limit")
             ) || (seg.bytes().all(|b| b.is_ascii_digit())
                 && entries.last().is_some_and(|p| p.contains('@')));
             match (continues, entries.last_mut()) {
@@ -158,9 +178,9 @@ impl TableSpec {
                     prev.push_str(seg);
                 }
                 (true, None) => bail!(
-                    "`{seg}` looks like a per-table exponent option but no table entry \
-                     precedes it (`alpha` and `beta` are reserved option keys, not \
-                     usable as table names)"
+                    "`{seg}` looks like a per-table option but no table entry \
+                     precedes it (`alpha`, `beta` and `limit` are reserved option \
+                     keys, not usable as table names)"
                 ),
                 (false, _) => entries.push(seg.to_string()),
             }
@@ -180,9 +200,19 @@ pub trait ExperienceWriter: Send {
     fn throttled(&mut self) -> Result<bool>;
 
     /// Append one raw env step; returns the number of finished items it
-    /// emitted (a remote writer may report them on a later call once
-    /// the limiter admits the step).
+    /// emitted (a remote writer batching steps client-side may report
+    /// them on a later call, once the chunk ships and the limiter
+    /// admits it).
     fn append(&mut self, step: WriterStep) -> Result<usize>;
+
+    /// Push any client-side pending steps toward the tables now
+    /// (ignoring batching thresholds); returns how many remain pending
+    /// (> 0 only when a rate limiter stalled the tail — retriable).
+    /// In-process writers hand every step to the tables inside
+    /// `append`, so the default is a no-op.
+    fn flush(&mut self) -> Result<usize> {
+        Ok(0)
+    }
 }
 
 impl ExperienceWriter for TrajectoryWriter {
@@ -210,6 +240,13 @@ pub trait ExperienceSampler: Send {
 
     /// Feed |TD| errors back for a sampled batch.
     fn update_priorities(&mut self, indices: &[usize], td_abs: &[f32]) -> Result<()>;
+
+    /// Wind the sampler down: a pipelined remote sampler consumes its
+    /// in-flight prefetch here so the connection closes on a frame
+    /// boundary. In-process samplers have nothing in flight.
+    fn finish(&mut self) -> Result<()> {
+        Ok(())
+    }
 }
 
 impl ExperienceSampler for SamplerHandle {
@@ -371,9 +408,17 @@ mod tests {
         assert_eq!(s.capacity, Some(50_000));
         assert_eq!(s.alpha, Some(0.9));
         assert_eq!(s.beta, Some(0.6));
+        assert_eq!(s.limit, None);
+        let s = TableSpec::parse("hot=1step@limit=2.5", 0.99).unwrap();
+        assert_eq!(s.limit, Some(RateLimitSpec::SamplesPerInsert(2.5)));
+        let s = TableSpec::parse("aux=seq:4@512,limit=unlimited", 0.99).unwrap();
+        assert_eq!(s.limit, Some(RateLimitSpec::Unlimited));
+        assert_eq!(s.capacity, Some(512));
         assert!(TableSpec::parse("=1step", 0.99).is_err());
         assert!(TableSpec::parse("noequals", 0.99).is_err());
         assert!(TableSpec::parse("t=seq:4@0", 0.99).is_err());
+        assert!(TableSpec::parse("t=1step@limit=fast", 0.99).is_err());
+        assert!(TableSpec::parse("t=1step@limit=1,limit=2", 0.99).is_err());
     }
 
     #[test]
@@ -395,10 +440,22 @@ mod tests {
         assert_eq!(specs.len(), 1);
         assert_eq!(specs[0].capacity, Some(128));
         assert_eq!((specs[0].alpha, specs[0].beta), (Some(0.9), Some(0.4)));
-        // An exponent option with no entry to attach to is an error, as
-        // is a bare capacity with no option list to join.
+        // A limit option stays attached to its entry across the list
+        // split, like the exponents.
+        let specs = TableSpec::parse_list(
+            "replay=1step@limit=1.0,alpha=0.7, aux=nstep:3@limit=unlimited",
+            0.9,
+        )
+        .unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].limit, Some(RateLimitSpec::SamplesPerInsert(1.0)));
+        assert_eq!(specs[0].alpha, Some(0.7));
+        assert_eq!(specs[1].limit, Some(RateLimitSpec::Unlimited));
+        // An option with no entry to attach to is an error, as is a
+        // bare capacity with no option list to join.
         assert!(TableSpec::parse_list("alpha=0.5", 0.9).is_err());
         assert!(TableSpec::parse_list("beta=0.5,replay=1step", 0.9).is_err());
+        assert!(TableSpec::parse_list("limit=2,replay=1step", 0.9).is_err());
         assert!(TableSpec::parse_list("replay=1step,128", 0.9).is_err());
     }
 

@@ -88,6 +88,27 @@ impl ByteWriter {
         Self::default()
     }
 
+    /// Clear the payload but keep the allocation — the reuse hook the
+    /// remote hot paths lean on: one `ByteWriter` per connection,
+    /// `reset()` per RPC, zero steady-state allocation.
+    pub fn reset(&mut self) {
+        self.buf.clear();
+    }
+
+    /// The encoded payload so far (borrowed; pair with [`Self::reset`]
+    /// to reuse the writer instead of consuming it via `finish`).
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
     pub fn u8(&mut self, v: u8) {
         self.buf.push(v);
     }
@@ -187,6 +208,14 @@ impl<'a> ByteReader<'a> {
     }
 
     pub fn f32s(&mut self, what: &str) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.f32s_into(what, &mut out)?;
+        Ok(out)
+    }
+
+    /// As [`Self::f32s`], but into a caller-owned vector (cleared
+    /// first) so steady-state decoding reuses one allocation.
+    pub fn f32s_into(&mut self, what: &str, out: &mut Vec<f32>) -> Result<()> {
         let n = self.u64(what)? as usize;
         // Guard the allocation against a corrupted length before trusting it.
         let fits = match n.checked_mul(4).and_then(|b| self.pos.checked_add(b)) {
@@ -199,11 +228,12 @@ impl<'a> ByteReader<'a> {
                 self.buf.len() - self.pos
             );
         }
-        let mut out = Vec::with_capacity(n);
+        out.clear();
+        out.reserve(n);
         for _ in 0..n {
             out.push(f32::from_le_bytes(self.take(4, what)?.try_into().unwrap()));
         }
-        Ok(out)
+        Ok(())
     }
 
     /// Length-prefixed raw byte slice written by [`ByteWriter::bytes`].

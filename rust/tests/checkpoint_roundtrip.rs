@@ -48,6 +48,7 @@ fn cfg() -> TrainConfig {
             capacity: None,
             alpha: None,
             beta: None,
+            limit: None,
         },
         TableSpec {
             name: "aux".into(),
@@ -55,6 +56,7 @@ fn cfg() -> TrainConfig {
             capacity: Some(256),
             alpha: None,
             beta: None,
+            limit: None,
         },
     ];
     cfg

@@ -129,7 +129,7 @@ fn corrupted_append_is_rejected_with_no_half_applied_insert() {
 
     // A valid append lands fully.
     let mut client = RemoteClient::connect(&path).unwrap();
-    let (consumed, _) = client.append(0, vec![step(0), step(1)]).unwrap();
+    let (consumed, _) = client.append(0, &[step(0), step(1)]).unwrap();
     assert_eq!(consumed, 2);
     assert_eq!(service.table("replay").unwrap().len(), 2);
     let inserts_before = service.table("replay").unwrap().stats_snapshot().inserts;

@@ -262,3 +262,296 @@ fn seeded_remote_sample_update_loop_equals_in_process_sampler() {
     drop(remote);
     stop_server(&path, handle);
 }
+
+#[test]
+fn batched_writer_checkpoint_byte_identical_and_sends_each_step_once() {
+    // Batched appends (16 steps per RPC) against the same 4-shard
+    // affinity layout: the server must end up byte-identical to the
+    // in-process twin, and the wire must carry every step exactly once
+    // (no re-encodes without a stall).
+    const WRITERS: usize = 4;
+    const STEPS_EACH: usize = 200;
+    const BATCH: usize = 16;
+
+    let make = || {
+        Arc::new(build_service(&cfg(RateLimitSpec::Unlimited, 16), OBS, ACT).unwrap())
+    };
+    let served = make();
+    let (path, handle) = start_server(Arc::clone(&served));
+
+    std::thread::scope(|s| {
+        for w in 0..WRITERS {
+            let path = path.clone();
+            s.spawn(move || {
+                let mut writer = RemoteWriter::connect(&path, w as u64)
+                    .expect("connect")
+                    .with_batch(BATCH);
+                for i in 0..STEPS_EACH {
+                    assert!(!writer.throttled().expect("rpc"), "unlimited table throttled");
+                    writer.append(step(w, i)).expect("append");
+                }
+                // STEPS_EACH is not a BATCH multiple in general; the
+                // tail must land before the checkpoint.
+                assert_eq!(writer.flush().expect("flush"), 0, "unlimited flush left a tail");
+                assert_eq!(
+                    writer.wire_steps_sent(),
+                    STEPS_EACH as u64,
+                    "a stall-free batched writer must encode each step exactly once"
+                );
+            });
+        }
+    });
+    let remote_bytes = RemoteClient::connect(&path).unwrap().checkpoint_bytes().unwrap();
+    stop_server(&path, handle);
+
+    let twin = make();
+    for w in 0..WRITERS {
+        let mut writer = twin.writer(w);
+        for i in 0..STEPS_EACH {
+            writer.append(step(w, i));
+        }
+    }
+    let twin_bytes = ServiceState::capture(&twin).unwrap().encode();
+    assert!(
+        remote_bytes == twin_bytes,
+        "batched-append checkpoint differs from the in-process twin (first diff at byte {})",
+        remote_bytes
+            .iter()
+            .zip(&twin_bytes)
+            .position(|(a, b)| a != b)
+            .unwrap_or(0)
+    );
+}
+
+#[test]
+fn seeded_prefetch_loop_bit_identical_to_in_process_sampler() {
+    // The pipelined sampler keeps one batch in flight behind every
+    // priority update; with no concurrent appends, its draws must stay
+    // bit-identical to a plain in-process SamplerHandle on the same
+    // seed, and the trailing prefetch must be drainable without losing
+    // the granted batch.
+    const SEED: u64 = 0xF1_7EC4;
+    const ROUNDS: usize = 40;
+    const BATCH: usize = 16;
+
+    let fill = |svc: &ReplayService| {
+        let mut w = svc.writer(0);
+        for i in 0..300 {
+            w.append(step(0, i));
+        }
+    };
+    let served = Arc::new(build_service(&cfg(RateLimitSpec::Unlimited, 1), OBS, ACT).unwrap());
+    let local = build_service(&cfg(RateLimitSpec::Unlimited, 1), OBS, ACT).unwrap();
+    fill(&served);
+    fill(&local);
+
+    let (path, handle) = start_server(Arc::clone(&served));
+    let mut remote = RemoteSampler::connect(&path, "replay", SEED).unwrap().with_prefetch(true);
+    let local_sampler = local.default_sampler();
+    let mut local_rng = Rng::new(SEED);
+
+    let mut unused = Rng::new(9);
+    let mut remote_out = SampleBatch::default();
+    let mut local_out = SampleBatch::default();
+    for round in 0..ROUNDS {
+        let r = remote.try_sample(BATCH, &mut unused, &mut remote_out).unwrap();
+        let l = local_sampler.try_sample(BATCH, &mut local_rng, &mut local_out);
+        assert_eq!(r, l, "round {round}: outcomes diverged");
+        assert_eq!(r, SampleOutcome::Sampled, "round {round} must sample");
+        assert_eq!(
+            remote_out.indices, local_out.indices,
+            "round {round}: prefetched index trajectory diverged"
+        );
+        assert_eq!(
+            remote_out.priorities, local_out.priorities,
+            "round {round}: priorities diverged"
+        );
+        let tds: Vec<f32> = (0..BATCH)
+            .map(|j| ((round * 13 + j) % 31) as f32 * 0.2 + 0.1)
+            .collect();
+        remote.update_priorities(&remote_out.indices, &tds).unwrap();
+        local_sampler.update_priorities(&local_out.indices, &tds);
+    }
+
+    // Drain the trailing prefetch and mirror it locally so counters
+    // (part of the checkpoint) stay equal; then the full states must
+    // still agree bit for bit.
+    assert_eq!(remote.drain().unwrap(), Some(SampleOutcome::Sampled));
+    assert_eq!(
+        local_sampler.try_sample(BATCH, &mut local_rng, &mut local_out),
+        SampleOutcome::Sampled
+    );
+    let remote_state = RemoteClient::connect(&path).unwrap().checkpoint_state().unwrap();
+    let local_state = ServiceState::capture(&local).unwrap();
+    assert_eq!(remote_state, local_state);
+
+    drop(remote);
+    stop_server(&path, handle);
+}
+
+#[test]
+fn would_stall_mid_pipeline_loses_and_duplicates_nothing() {
+    // A σ=1 ratio limiter denies the pipeline's in-flight prefetch at
+    // some point; the stall must surface as a clean Throttled, the
+    // pipeline must resume after more inserts, and at the end the
+    // server's granted-batch counter must equal the client's tally
+    // exactly (nothing lost, nothing double-counted).
+    const BATCH: usize = 8;
+    const TARGET_BATCHES: usize = 60;
+
+    let service = Arc::new(
+        build_service(&cfg(RateLimitSpec::SamplesPerInsert(1.0), 16), OBS, ACT).unwrap(),
+    );
+    let (path, handle) = start_server(Arc::clone(&service));
+
+    // Seed the table past warmup; σ=1 then allows ~`inserts` batches.
+    let mut feeder = service.writer(0);
+    let mut fed = 0usize;
+    for _ in 0..40 {
+        feeder.append(step(0, fed));
+        fed += 1;
+    }
+
+    let mut sampler = RemoteSampler::connect(&path, "replay", 0xBEEF).unwrap().with_prefetch(true);
+    let mut rng = Rng::new(1);
+    let mut out = SampleBatch::default();
+    let mut granted = 0u64;
+    let mut updates = 0u64;
+    let mut throttles = 0u64;
+    let mut guard = 0usize;
+    while granted < TARGET_BATCHES as u64 {
+        guard += 1;
+        assert!(guard < 10_000, "pipeline wedged: {granted} batches after {guard} polls");
+        match sampler.try_sample(BATCH, &mut rng, &mut out).unwrap() {
+            SampleOutcome::Sampled => {
+                granted += 1;
+                assert!(out.priorities.iter().all(|&p| p > 0.0));
+                let tds: Vec<f32> = out.indices.iter().map(|_| 1.0).collect();
+                sampler.update_priorities(&out.indices, &tds).unwrap();
+                updates += 1;
+            }
+            SampleOutcome::Throttled | SampleOutcome::NotEnoughData => {
+                // The denial that ended the pipeline; open the window
+                // and let the next try_sample start a fresh request.
+                throttles += 1;
+                for _ in 0..8 {
+                    while feeder.throttled() {
+                        std::thread::yield_now();
+                    }
+                    feeder.append(step(0, fed));
+                    fed += 1;
+                }
+            }
+        }
+    }
+    assert!(throttles > 0, "the limiter never stalled the pipeline — test shape broken");
+
+    // Drain the trailing prefetch; if it was granted it counts.
+    if sampler.drain().unwrap() == Some(SampleOutcome::Sampled) {
+        granted += 1;
+    }
+    let stats = RemoteClient::connect(&path).unwrap().stats().unwrap();
+    let t = &stats[0].stats;
+    assert_eq!(
+        t.sample_batches as u64, granted,
+        "granted batches diverged from the client tally (lost or duplicated batch)"
+    );
+    assert_eq!(t.sampled_items as u64, granted * BATCH as u64);
+    assert_eq!(t.priority_updates as u64, updates * BATCH as u64);
+    assert!(t.sample_stalls as u64 >= throttles, "server must have recorded the stalls");
+
+    drop(sampler);
+    stop_server(&path, handle);
+}
+
+#[test]
+fn consecutive_updates_stash_prefetches_in_order_without_loss() {
+    // A caller that fires several update_priorities without sampling in
+    // between forces the pipeline to drain in-flight responses out of
+    // order; every granted batch must still be handed back (in order)
+    // and the server accounting must stay exact.
+    const BATCH: usize = 4;
+    let service = Arc::new(build_service(&cfg(RateLimitSpec::Unlimited, 1), OBS, ACT).unwrap());
+    let (path, handle) = start_server(Arc::clone(&service));
+    let mut feeder = service.writer(0);
+    for i in 0..64 {
+        feeder.append(step(0, i));
+    }
+
+    let mut sampler = RemoteSampler::connect(&path, "replay", 5).unwrap().with_prefetch(true);
+    let mut rng = Rng::new(5);
+    let mut out = SampleBatch::default();
+    assert_eq!(sampler.try_sample(BATCH, &mut rng, &mut out).unwrap(), SampleOutcome::Sampled);
+    let ones = vec![1.0f32; BATCH];
+    // Three consecutive updates: the first arms the prefetch, each
+    // further one drains the previous in-flight batch into the stash.
+    sampler.update_priorities(&out.indices, &ones).unwrap();
+    sampler.update_priorities(&out.indices, &ones).unwrap();
+    sampler.update_priorities(&out.indices, &ones).unwrap();
+    // Two stashed batches + one live in-flight + the explicit first
+    // draw = four granted batches, all retrievable.
+    for k in 0..3 {
+        assert_eq!(
+            sampler.try_sample(BATCH, &mut rng, &mut out).unwrap(),
+            SampleOutcome::Sampled,
+            "stashed/inflight batch {k} was lost"
+        );
+        assert_eq!(out.len(), BATCH);
+    }
+    assert_eq!(sampler.drain().unwrap(), None, "pipeline fully consumed");
+
+    let stats = RemoteClient::connect(&path).unwrap().stats().unwrap();
+    assert_eq!(stats[0].stats.sample_batches, 4, "granted batches must match draws exactly");
+    assert_eq!(stats[0].stats.priority_updates, 3 * BATCH);
+
+    drop(sampler);
+    stop_server(&path, handle);
+}
+
+#[test]
+fn stalled_writer_flush_is_chunked_not_quadratic() {
+    // A long limiter stall with a deep pending queue: every retry may
+    // re-encode at most one chunk, so total wire traffic stays
+    // O(steps + retries · batch). The pre-fix writer re-sent the WHOLE
+    // backlog every retry — O(steps²) on this shape.
+    const STEPS: usize = 60;
+    const BATCH: usize = 8;
+
+    // σ=1, warmup 1 → drift window [0, 2]: at most 2 inserts ahead of
+    // granted batches, so the backlog drains one insert per sample.
+    let service = Arc::new(
+        build_service(&cfg(RateLimitSpec::SamplesPerInsert(1.0), 1), OBS, ACT).unwrap(),
+    );
+    let (path, handle) = start_server(Arc::clone(&service));
+
+    let mut writer = RemoteWriter::connect(&path, 0).unwrap().with_batch(BATCH);
+    for i in 0..STEPS {
+        // Deliberately NOT polling throttled(): the queue must absorb
+        // a producer that runs ahead of the limiter.
+        writer.append(step(0, i)).unwrap();
+    }
+    assert!(writer.pending_len() > 0, "the limiter never stalled — test shape broken");
+
+    let mut sampler = RemoteSampler::connect(&path, "replay", 3).unwrap();
+    let mut rng = Rng::new(3);
+    let mut out = SampleBatch::default();
+    let mut guard = 0usize;
+    while writer.flush().unwrap() > 0 {
+        guard += 1;
+        assert!(guard < 1_000, "stalled backlog never drained");
+        // One granted batch opens one insert of drift headroom.
+        let _ = sampler.try_sample(2, &mut rng, &mut out).unwrap();
+    }
+    assert_eq!(service.table("replay").unwrap().len(), STEPS);
+    let bound = (STEPS * BATCH) as u64;
+    assert!(
+        writer.wire_steps_sent() <= bound,
+        "stall retries re-encoded {} steps for {STEPS} appends (chunk bound {bound}) — \
+         quadratic resend regression",
+        writer.wire_steps_sent()
+    );
+
+    drop(writer);
+    drop(sampler);
+    stop_server(&path, handle);
+}

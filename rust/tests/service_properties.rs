@@ -332,6 +332,59 @@ fn table_spec_exponent_grammar_rejects_out_of_range_values() {
     }
 }
 
+// ---------------------------------------------------------------------
+// Per-table rate-limiter grammar (`name=kind[@...,limit=spec]`)
+// ---------------------------------------------------------------------
+
+#[test]
+fn table_spec_limit_grammar_accepts_valid_entries() {
+    use pal_rl::service::RateLimitSpec;
+    let cases = [
+        ("t=1step@limit=legacy", Some(RateLimitSpec::Legacy)),
+        ("t=1step@limit=unlimited", Some(RateLimitSpec::Unlimited)),
+        ("t=1step@limit=none", Some(RateLimitSpec::Unlimited)),
+        ("t=1step@limit=0.5", Some(RateLimitSpec::SamplesPerInsert(0.5))),
+        ("t=1step@limit=8", Some(RateLimitSpec::SamplesPerInsert(8.0))),
+        ("t=nstep:3@4096,alpha=0.5,limit=2", Some(RateLimitSpec::SamplesPerInsert(2.0))),
+        ("t=1step@alpha=0.7,beta=0.4", None),
+    ];
+    for (spec, limit) in cases {
+        let s = TableSpec::parse(spec, 0.99).unwrap_or_else(|e| panic!("{spec}: {e}"));
+        assert_eq!(s.limit, limit, "{spec}");
+    }
+    // The limit option composes with everything else in one entry, in
+    // any position, and survives the list split.
+    let specs = TableSpec::parse_list(
+        "hot=1step@100,limit=1.5,alpha=0.9, cold=seq:4@limit=unlimited,beta=0.2",
+        0.99,
+    )
+    .unwrap();
+    assert_eq!(specs.len(), 2);
+    assert_eq!(specs[0].limit, Some(RateLimitSpec::SamplesPerInsert(1.5)));
+    assert_eq!(specs[0].capacity, Some(100));
+    assert_eq!(specs[0].alpha, Some(0.9));
+    assert_eq!(specs[1].limit, Some(RateLimitSpec::Unlimited));
+    assert_eq!(specs[1].beta, Some(0.2));
+}
+
+#[test]
+fn table_spec_limit_grammar_rejects_malformed_entries() {
+    let bad = [
+        "t=1step@limit=",          // missing value
+        "t=1step@limit=fast",      // not a limiter spec
+        "t=1step@limit=-1",        // sigma must be positive
+        "t=1step@limit=0",         // sigma must be positive
+        "t=1step@limit=nan",       // non-finite sigma
+        "t=1step@limit=1,limit=2", // duplicate
+    ];
+    for spec in bad {
+        assert!(TableSpec::parse(spec, 0.99).is_err(), "`{spec}` must be rejected");
+    }
+    // `limit` is a reserved option key: it cannot start an entry.
+    assert!(TableSpec::parse_list("limit=2", 0.99).is_err());
+    assert!(TableSpec::parse_list("limit=2,t=1step", 0.99).is_err());
+}
+
 #[test]
 fn prop_in_range_exponents_always_parse_and_roundtrip() {
     // Any α/β pair on a [0, 1] lattice must parse, land in the spec

@@ -1,0 +1,39 @@
+#!/usr/bin/env bash
+# Remote data-path perf baseline: run the fig_remote sweep (batched
+# appends x writers, sample prefetch on/off over a real Unix socket)
+# and write machine-readable BENCH_remote.json at the repo root, so
+# every future PR that touches the remote path has a number to diff
+# against.
+#
+# Usage: tools/bench_remote.sh [--smoke] [extra fig_remote flags...]
+#   --smoke   small CI-sized sweep (still writes the JSON)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+out="BENCH_remote.json"
+extra=()
+if [ "${1:-}" = "--smoke" ]; then
+    shift
+    extra+=(--test)
+fi
+
+# Absolute output path: cargo runs bench binaries with cwd set to the
+# package root (rust/), not the workspace root this script cd'd to.
+cargo bench --bench fig_remote -- --json "$PWD/$out" "${extra[@]}" "$@"
+
+# The JSON must exist and parse as the gate for the step itself.
+python3 - "$out" <<'EOF'
+import json, sys
+with open(sys.argv[1]) as f:
+    data = json.load(f)
+assert data["bench"] == "fig_remote"
+assert data["append"], "no append rows recorded"
+assert data["sample"], "no sample rows recorded"
+v = data["verdicts"]
+print(
+    f"BENCH_remote.json OK: batch16 speedup "
+    f"{v['append_speedup_batch16_worst']}x (target {v['append_target']}x), "
+    f"prefetch hides {100 * v['sample_wait_hidden_frac']:.0f}% "
+    f"(target {100 * v['sample_target']:.0f}%)"
+)
+EOF

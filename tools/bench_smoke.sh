@@ -2,13 +2,19 @@
 # CI bench smoke: run EVERY fig* bench in its `--test` configuration so
 # a bench that stops compiling or starts crashing fails the build
 # instead of silently rotting. The list is discovered from the tree, so
-# new fig* benches are swept automatically.
+# new fig* benches are swept automatically. fig_remote is skipped here:
+# tools/bench_remote.sh runs the same --test sweep (and writes
+# BENCH_remote.json) as its own CI step — running the real-socket sweep
+# twice per push buys nothing.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 status=0
 for src in rust/benches/fig*.rs; do
     bench="$(basename "$src" .rs)"
+    if [ "$bench" = "fig_remote" ]; then
+        continue
+    fi
     echo "::group::bench $bench --test"
     if ! cargo bench --bench "$bench" -- --test; then
         echo "FAILED: $bench"
