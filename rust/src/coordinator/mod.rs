@@ -14,7 +14,10 @@ use crate::env::make_env;
 use crate::learner::run_learner;
 use crate::metrics::{CurvePoint, Metrics};
 use crate::params::{AdamConfig, Checkpoint, ParameterServer, TargetSync};
-use crate::remote::{RemoteClient, RemoteSampler, RemoteWriter, TableInfo, DEFAULT_REMOTE_BATCH};
+use crate::remote::{
+    BackoffPolicy, ConnectionPolicy, RemoteClient, RemoteSampler, RemoteWriter, TableInfo,
+    DEFAULT_REMOTE_BATCH, DEFAULT_RPC_TIMEOUT, DEFAULT_SPILL_CAP,
+};
 use crate::replay::{
     GlobalLockReplay, NaiveScanReplay, PrioritizedConfig, PrioritizedReplay,
     PyBindBinaryReplay, ReplayBuffer, ShardedPrioritizedReplay, UniformReplay,
@@ -106,6 +109,19 @@ pub struct TrainConfig {
     /// `Append` RPC. 1 = one RPC per step (the pre-batching wire
     /// behaviour); ignored on local runs.
     pub remote_batch: usize,
+    /// Per-RPC socket timeout in seconds on a remote run
+    /// (`--rpc-timeout`): an RPC silent longer than this counts as a
+    /// transport failure and is handed to the reconnect supervisor.
+    pub rpc_timeout_secs: f64,
+    /// Overall reconnect deadline in seconds on a remote run
+    /// (`--reconnect-deadline`): how long one outage may last before a
+    /// supervised connection gives up and fails the worker.
+    pub reconnect_deadline_secs: f64,
+    /// Bound on each remote writer's outage spill queue
+    /// (`--spill-cap`): steps queued past this while the server is
+    /// unreachable drop oldest-first, counted in the server's
+    /// `steps_dropped` stat once the link heals.
+    pub spill_cap: usize,
     /// Rate-limiter selection for every table (`--rate-limit`).
     pub rate_limit: RateLimitSpec,
     /// Run-state directory (`--save-state`): weights + replay-service
@@ -154,6 +170,9 @@ impl TrainConfig {
             tables: Vec::new(),
             remote: None,
             remote_batch: DEFAULT_REMOTE_BATCH,
+            rpc_timeout_secs: DEFAULT_RPC_TIMEOUT.as_secs_f64(),
+            reconnect_deadline_secs: BackoffPolicy::default().deadline.as_secs_f64(),
+            spill_cap: DEFAULT_SPILL_CAP,
             rate_limit: RateLimitSpec::Legacy,
             save_state: None,
             restore_state: None,
@@ -189,6 +208,16 @@ impl TrainConfig {
             beta: None,
             limit: None,
         }]
+    }
+
+    /// The supervised-connection policy every remote handle of this
+    /// run dials under (`--rpc-timeout` / `--reconnect-deadline`).
+    pub fn connection_policy(&self) -> ConnectionPolicy {
+        ConnectionPolicy {
+            rpc_timeout: Duration::from_secs_f64(self.rpc_timeout_secs),
+            backoff: BackoffPolicy::default()
+                .with_deadline(Duration::from_secs_f64(self.reconnect_deadline_secs)),
+        }
     }
 }
 
@@ -363,23 +392,51 @@ pub fn restore_run_state(
 pub struct RemoteFront {
     path: std::path::PathBuf,
     batch: usize,
+    policy: ConnectionPolicy,
+    spill_cap: usize,
     monitor: std::sync::Mutex<Option<RemoteClient>>,
+    /// Times the monitor link was re-established (surfaced as ` rc=N`
+    /// in the per-tick stats line, so an unstable server is visible).
+    monitor_reconnects: std::sync::atomic::AtomicU64,
 }
 
 impl RemoteFront {
-    fn new(path: std::path::PathBuf, batch: usize) -> Self {
-        Self { path, batch, monitor: std::sync::Mutex::new(None) }
+    fn new(
+        path: std::path::PathBuf,
+        batch: usize,
+        policy: ConnectionPolicy,
+        spill_cap: usize,
+    ) -> Self {
+        Self {
+            path,
+            batch,
+            policy,
+            spill_cap,
+            monitor: std::sync::Mutex::new(None),
+            monitor_reconnects: std::sync::atomic::AtomicU64::new(0),
+        }
     }
 
     /// Run one RPC closure over the cached monitor connection,
-    /// dialling on first use. Any error drops the connection so the
-    /// next poll reconnects — a restarted server heals transparently.
-    fn with_monitor<T>(&self, f: impl FnOnce(&mut RemoteClient) -> Result<T>) -> Result<T> {
+    /// dialling on first use. A transport failure triggers one
+    /// supervised (backoff + deadline) reconnect and a retry; any
+    /// remaining error drops the connection so the next poll redials —
+    /// a restarted server heals transparently.
+    fn with_monitor<T>(&self, f: impl Fn(&mut RemoteClient) -> Result<T>) -> Result<T> {
         let mut guard = self.monitor.lock().expect("monitor connection poisoned");
         if guard.is_none() {
-            *guard = Some(RemoteClient::connect(&self.path)?);
+            *guard = Some(RemoteClient::connect_with(&self.path, self.policy.clone())?);
         }
-        let r = f(guard.as_mut().expect("connected above"));
+        let c = guard.as_mut().expect("connected above");
+        let r = match f(c) {
+            Err(e) if crate::remote::client::is_transport_error(&e) => {
+                c.reconnect().and_then(|()| {
+                    self.monitor_reconnects.fetch_add(1, Ordering::Relaxed);
+                    f(c)
+                })
+            }
+            r => r,
+        };
         if r.is_err() {
             *guard = None;
         }
@@ -407,7 +464,12 @@ impl ReplayFront {
         match &cfg.remote {
             Some(path) => {
                 let batch = cfg.remote_batch.max(1);
-                Ok(ReplayFront::Remote(RemoteFront::new(path.clone(), batch)))
+                Ok(ReplayFront::Remote(RemoteFront::new(
+                    path.clone(),
+                    batch,
+                    cfg.connection_policy(),
+                    cfg.spill_cap,
+                )))
             }
             None => Ok(ReplayFront::Local(Arc::new(build_service(cfg, obs_dim, act_dim)?))),
         }
@@ -427,9 +489,11 @@ impl ReplayFront {
     pub fn writer(&self, actor_id: usize) -> Result<Box<dyn ExperienceWriter>> {
         Ok(match self {
             ReplayFront::Local(s) => Box::new(s.writer(actor_id)),
-            ReplayFront::Remote(r) => {
-                Box::new(RemoteWriter::connect(&r.path, actor_id as u64)?.with_batch(r.batch))
-            }
+            ReplayFront::Remote(r) => Box::new(
+                RemoteWriter::connect_with(&r.path, actor_id as u64, r.policy.clone())?
+                    .with_batch(r.batch)
+                    .with_spill_cap(r.spill_cap),
+            ),
         })
     }
 
@@ -440,9 +504,10 @@ impl ReplayFront {
     pub fn sampler(&self, seed: u64) -> Result<Box<dyn ExperienceSampler>> {
         Ok(match self {
             ReplayFront::Local(s) => Box::new(s.default_sampler()),
-            ReplayFront::Remote(r) => {
-                Box::new(RemoteSampler::connect_default(&r.path, seed)?.with_prefetch(true))
-            }
+            ReplayFront::Remote(r) => Box::new(
+                RemoteSampler::connect_default_with(&r.path, seed, r.policy.clone())?
+                    .with_prefetch(true),
+            ),
         })
     }
 
@@ -463,21 +528,33 @@ impl ReplayFront {
         match self {
             ReplayFront::Local(s) => s.stats_line(),
             ReplayFront::Remote(r) => match r.stats() {
-                Ok(tables) => tables
-                    .iter()
-                    .map(|t| {
-                        format!(
-                            "{}[n={} in={} out={} stall i/s={}/{}]",
-                            t.name,
-                            t.len,
-                            t.stats.inserts,
-                            t.stats.sample_batches,
-                            t.stats.insert_stalls,
-                            t.stats.sample_stalls,
-                        )
-                    })
-                    .collect::<Vec<_>>()
-                    .join(" "),
+                Ok(tables) => {
+                    let mut line = tables
+                        .iter()
+                        .map(|t| {
+                            let mut s = format!(
+                                "{}[n={} in={} out={} stall i/s={}/{}",
+                                t.name,
+                                t.len,
+                                t.stats.inserts,
+                                t.stats.sample_batches,
+                                t.stats.insert_stalls,
+                                t.stats.sample_stalls,
+                            );
+                            if t.stats.steps_dropped > 0 {
+                                s.push_str(&format!(" drop={}", t.stats.steps_dropped));
+                            }
+                            s.push(']');
+                            s
+                        })
+                        .collect::<Vec<_>>()
+                        .join(" ");
+                    let rc = r.monitor_reconnects.load(Ordering::Relaxed);
+                    if rc > 0 {
+                        line.push_str(&format!(" rc={rc}"));
+                    }
+                    line
+                }
                 Err(e) => format!("remote[{}: {e}]", r.path.display()),
             },
         }
@@ -519,7 +596,9 @@ impl ReplayFront {
     pub fn capture_state(&self) -> Result<ServiceState> {
         match self {
             ReplayFront::Local(s) => ServiceState::capture(s),
-            ReplayFront::Remote(r) => RemoteClient::connect(&r.path)?.checkpoint_state(),
+            ReplayFront::Remote(r) => {
+                RemoteClient::connect_with(&r.path, r.policy.clone())?.checkpoint_state()
+            }
         }
     }
 
@@ -529,7 +608,9 @@ impl ReplayFront {
     pub fn restore_state_snapshot(&self, state: &ServiceState) -> Result<()> {
         match self {
             ReplayFront::Local(s) => state.restore_into(s),
-            ReplayFront::Remote(r) => RemoteClient::connect(&r.path)?.restore_state(state),
+            ReplayFront::Remote(r) => {
+                RemoteClient::connect_with(&r.path, r.policy.clone())?.restore_state(state)
+            }
         }
     }
 

@@ -15,7 +15,10 @@ use pal_rl::coordinator::{
 use pal_rl::dse;
 use pal_rl::env::ENV_NAMES;
 use pal_rl::params::{AdamConfig, ParameterServer, TargetSync};
-use pal_rl::remote::{RemoteClient, RemoteSampler, RemoteWriter, ReplayServer};
+use pal_rl::remote::{
+    BackoffPolicy, ChaosConfig, ChaosProxy, ConnectionPolicy, RemoteClient, RemoteSampler,
+    RemoteWriter, ReplayServer,
+};
 use pal_rl::replay::SampleBatch;
 use pal_rl::runtime::Manifest;
 use pal_rl::service::{
@@ -33,6 +36,7 @@ const TRAIN_FLAGS: &[&str] = &[
     "log-every", "curve-out", "eps-decay", "action-noise", "save-checkpoint",
     "n-step", "gamma-nstep", "tables", "rate-limit", "save-state",
     "restore-state", "checkpoint-every", "remote", "remote-batch",
+    "rpc-timeout", "reconnect-deadline", "spill-cap",
 ];
 
 fn usage() -> ! {
@@ -46,6 +50,7 @@ USAGE:
   pal buffer-bench [--capacity N] [--fanout K] [--shards S] [--threads T] [--ops N]
   pal state-smoke --dir DIR --phase <collect|resume> [--items N] [--capacity N] [--shards S]
   pal remote-smoke --socket PATH [--items N] [--capacity N] [--shards S]
+  pal chaos-smoke [--dir DIR] [--seed S] [--steps-per-writer N] [--batches-per-sampler N]
   pal envs
   pal info  [--artifacts DIR]
 
@@ -100,6 +105,17 @@ TRAIN OPTIONS:
                       each actor ships N steps per Append RPC
                       (default 16; 1 = one RPC per step). Samplers
                       always pipeline one batch in flight.
+  --rpc-timeout SECS  per-RPC socket timeout on a remote run (default
+                      120); a silent RPC past this counts as a dead
+                      connection and triggers a supervised reconnect
+  --reconnect-deadline SECS
+                      how long a remote connection keeps retrying
+                      (exponential backoff, seeded jitter) before the
+                      worker gives up on an outage (default 30)
+  --spill-cap N       max steps a remote writer queues locally while
+                      the server is unreachable (default 65536); past
+                      the cap the oldest steps drop, counted in the
+                      server's steps_dropped stat after the link heals
 
 SERVE OPTIONS (same table/buffer flags as train, plus):
   --socket PATH       Unix-domain socket to listen on (required)
@@ -108,7 +124,10 @@ SERVE OPTIONS (same table/buffer flags as train, plus):
                       the connecting run's model; default 4 / 2)
   --restore-state DIR load replay_state.bin from DIR before serving
   --save-state DIR    write replay_state.bin to DIR on clean shutdown
-                      (a client's Shutdown RPC)
+                      (a client's Shutdown RPC, SIGINT or SIGTERM)
+  --drain-deadline SECS
+                      max wait for in-flight connections to finish
+                      after a shutdown request (default 5)
 
   `state-smoke` is the CI durability gate: `--phase collect` drives a
   short synthetic writer/sampler run and saves its state; `--phase
@@ -121,6 +140,15 @@ SERVE OPTIONS (same table/buffer flags as train, plus):
   checkpoints are byte-identical, then soaks the server with concurrent
   writer/sampler clients and verifies exact sample-to-insert accounting
   over the Stats RPC before asking the server to shut down.
+
+  `chaos-smoke` is the CI fault-tolerance gate (restart drill): it
+  starts its own replay server behind a seeded fault-injecting proxy
+  (delays, shredded writes, connection resets), soaks it with
+  concurrent writers and samplers, hard-kills the server mid-run and
+  restarts it from a checkpoint, and fails unless every step is
+  accounted for exactly once and the final checkpoint is byte-identical
+  to an unfaulted in-process twin — including a writer pushed past its
+  --spill-cap, whose dropped steps must land in steps_dropped.
 "
     );
     std::process::exit(2)
@@ -171,6 +199,14 @@ fn train_config_from(a: &Args) -> Result<TrainConfig> {
     if cfg.remote_batch == 0 {
         bail!("--remote-batch must be >= 1");
     }
+    cfg.rpc_timeout_secs = a.seconds_or("rpc-timeout", cfg.rpc_timeout_secs)?.as_secs_f64();
+    cfg.reconnect_deadline_secs = a
+        .seconds_or("reconnect-deadline", cfg.reconnect_deadline_secs)?
+        .as_secs_f64();
+    cfg.spill_cap = a.parse_or("spill-cap", cfg.spill_cap)?;
+    if cfg.spill_cap == 0 {
+        bail!("--spill-cap must be >= 1");
+    }
     if let Some(path) = a.get("remote") {
         cfg.remote = Some(path.into());
         // The tables live in the serving process: local table/buffer/
@@ -187,8 +223,12 @@ fn train_config_from(a: &Args) -> Result<TrainConfig> {
                  ignoring local flags {ignored:?} (set them on `pal serve`)"
             );
         }
-    } else if a.has("remote-batch") {
-        eprintln!("[pal] WARNING: --remote-batch only applies to --remote runs; ignored");
+    } else {
+        for f in ["remote-batch", "rpc-timeout", "reconnect-deadline", "spill-cap"] {
+            if a.has(f) {
+                eprintln!("[pal] WARNING: --{f} only applies to --remote runs; ignored");
+            }
+        }
     }
     if let Some(dir) = a.get("save-state") {
         cfg.save_state = Some(dir.into());
@@ -551,13 +591,44 @@ const SERVE_FLAGS: &[&str] = &[
     "socket", "buffer", "capacity", "shards", "fanout", "alpha", "beta",
     "warmup", "update-interval", "n-step", "gamma-nstep", "tables",
     "rate-limit", "obs-dim", "act-dim", "seed", "restore-state", "save-state",
+    "drain-deadline",
 ];
+
+/// Set by [`on_stop_signal`] when the serving process receives SIGINT
+/// or SIGTERM, polled by the serve watcher thread so Ctrl-C and
+/// orchestrator TERMs get the same drain + `--save-state` path a
+/// client's Shutdown RPC gets.
+static SIGNAL_STOP: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+extern "C" fn on_stop_signal(_sig: i32) {
+    // Async-signal-safe: a single atomic store, nothing else.
+    SIGNAL_STOP.store(true, std::sync::atomic::Ordering::SeqCst);
+}
+
+/// Route SIGINT (2) and SIGTERM (15) to [`on_stop_signal`]. std has no
+/// signal API, so this declares libc's `signal(2)` directly — with a
+/// typed handler pointer, not a `usize`, so no function-pointer casts
+/// are involved. Installation failure (`SIG_ERR`) is ignored: signals
+/// then keep their default disposition and `pal serve` dies the
+/// pre-handler way, which is a degraded mode, not an error.
+fn install_stop_signal_handlers() {
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGINT, on_stop_signal);
+        signal(SIGTERM, on_stop_signal);
+    }
+}
 
 /// `pal serve`: build a replay service from the same table/buffer flags
 /// `train` uses and expose it on a Unix-domain socket, so actors and
 /// learners in OTHER processes (`pal train --remote PATH`) share its
-/// tables. Runs until a client sends the Shutdown RPC (or the process
-/// is killed); a clean shutdown optionally saves the replay state.
+/// tables. Runs until a client sends the Shutdown RPC or the process
+/// receives SIGINT/SIGTERM — both take the same drain path, so a clean
+/// shutdown (including Ctrl-C) optionally saves the replay state.
 fn cmd_serve(a: &Args) -> Result<()> {
     a.check_known(SERVE_FLAGS)?;
     let socket = a
@@ -569,6 +640,7 @@ fn cmd_serve(a: &Args) -> Result<()> {
     let obs_dim: usize = a.parse_or("obs-dim", 4)?;
     let act_dim: usize = a.parse_or("act-dim", 2)?;
     let seed: u64 = a.parse_or("seed", 0)?;
+    let drain_deadline = a.seconds_or("drain-deadline", 5.0)?;
     let service = Arc::new(build_service(&cfg, obs_dim, act_dim)?);
     if let Some(dir) = a.get("restore-state") {
         let state = ServiceState::load(std::path::Path::new(dir).join(STATE_FILE))?;
@@ -578,13 +650,38 @@ fn cmd_serve(a: &Args) -> Result<()> {
             service.total_len()
         );
     }
-    let server =
-        ReplayServer::bind(Arc::clone(&service), &socket, seed)?.expect_dims(obs_dim, act_dim);
+    let server = ReplayServer::bind(Arc::clone(&service), &socket, seed)?
+        .expect_dims(obs_dim, act_dim)
+        .with_drain_deadline(drain_deadline);
     eprintln!(
         "[pal] replay server listening on {socket} — {}",
         service.stats_line()
     );
-    server.serve()?;
+    // SIGINT/SIGTERM flip SIGNAL_STOP; a watcher thread relays that to
+    // the server's stop handle so the accept loop drains and returns
+    // (signal handlers must not touch the server themselves).
+    install_stop_signal_handlers();
+    let stop = server.stop_handle();
+    let serve_done = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let watcher = {
+        let stop = Arc::clone(&stop);
+        let serve_done = Arc::clone(&serve_done);
+        std::thread::spawn(move || {
+            use std::sync::atomic::Ordering;
+            while !serve_done.load(Ordering::Relaxed) {
+                if SIGNAL_STOP.load(Ordering::SeqCst) {
+                    eprintln!("[pal] stop signal received — draining replay server");
+                    stop.store(true, Ordering::SeqCst);
+                    break;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(25));
+            }
+        })
+    };
+    let served = server.serve();
+    serve_done.store(true, std::sync::atomic::Ordering::Relaxed);
+    let _ = watcher.join();
+    served?;
     if let Some(dir) = a.get("save-state") {
         let dir = std::path::PathBuf::from(dir);
         std::fs::create_dir_all(&dir)?;
@@ -1005,6 +1102,446 @@ fn cmd_remote_smoke(a: &Args) -> Result<()> {
     Ok(())
 }
 
+const CHAOS_SMOKE_FLAGS: &[&str] = &["dir", "seed", "steps-per-writer", "batches-per-sampler"];
+
+/// Bounded retry for client connects that race a chaos fault (the
+/// proxy may reset the very `Hello` that opens a connection).
+fn retry_connect<T>(what: &str, mut f: impl FnMut() -> Result<T>) -> Result<T> {
+    let mut last = None;
+    for _ in 0..50 {
+        match f() {
+            Ok(v) => return Ok(v),
+            Err(e) => last = Some(e),
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    Err(last.expect("at least one attempt ran").context(format!("{what} kept failing")))
+}
+
+/// One replay server for the chaos drill, served from a background
+/// thread so the drill can hard-stop and restart it in-process.
+struct ChaosServer {
+    stop: Arc<std::sync::atomic::AtomicBool>,
+    thread: std::thread::JoinHandle<Result<()>>,
+}
+
+impl ChaosServer {
+    fn start(
+        cfg: &TrainConfig,
+        socket: &std::path::Path,
+        state: Option<&ServiceState>,
+    ) -> Result<Self> {
+        let service = Arc::new(build_service(cfg, SMOKE_OBS, SMOKE_ACT)?);
+        if let Some(s) = state {
+            service.restore(s)?;
+        }
+        let server = ReplayServer::bind(Arc::clone(&service), socket, 0)?
+            .expect_dims(SMOKE_OBS, SMOKE_ACT)
+            .with_drain_deadline(std::time::Duration::from_millis(500));
+        let stop = server.stop_handle();
+        let thread = std::thread::spawn(move || server.serve());
+        Ok(Self { stop, thread })
+    }
+
+    /// Ask the accept loop to stop and wait for it. Phase B uses this
+    /// as the `kill -9` stand-in: the sessions, the reply caches, and
+    /// the socket all die with the serving thread.
+    fn stop(self) -> Result<()> {
+        self.stop.store(true, std::sync::atomic::Ordering::SeqCst);
+        self.thread
+            .join()
+            .map_err(|_| anyhow!("replay server thread panicked"))?
+    }
+}
+
+/// Fail with the first differing offset when two checkpoints diverge.
+fn ensure_checkpoints_match(stage: &str, remote: &[u8], local: &[u8]) -> Result<()> {
+    if remote == local {
+        return Ok(());
+    }
+    let first_diff = remote
+        .iter()
+        .zip(local)
+        .position(|(a, b)| a != b)
+        .unwrap_or_else(|| remote.len().min(local.len()));
+    bail!(
+        "{stage}: remote checkpoint differs from the in-process twin: {} vs {} bytes, \
+         first difference at offset {first_diff}",
+        remote.len(),
+        local.len()
+    )
+}
+
+/// `pal chaos-smoke`: the self-contained fault-tolerance restart drill
+/// (the CI gate wired up by tools/chaos_smoke.sh). Everything runs in
+/// this process — a real [`ReplayServer`] on a private socket, a
+/// seeded [`ChaosProxy`] in front of it, and an unfaulted in-process
+/// twin service mirroring every operation — so the drill needs no
+/// orchestration and its verdict is exact:
+///
+/// * phase A — 3 concurrent writers + 2 concurrent samplers soak the
+///   server THROUGH the proxy (delays, shredded writes, seeded
+///   resets); every reconnect must resume its session, so the
+///   checkpoint afterwards is byte-identical to the twin's;
+/// * phase B — the server is hard-stopped mid-outage (the `kill -9`
+///   stand-in) while writers keep appending into their spill queues; a
+///   fresh server restores the phase-A checkpoint and every spilled
+///   step lands exactly once;
+/// * phase C — pipelined samplers re-arm against the restarted server
+///   in lockstep with the twin (prefetch + priority updates under
+///   faults);
+/// * phase D — a writer with a tiny spill cap rides out a full outage:
+///   overflow drops oldest-first and the drops are accounted in every
+///   table's `steps_dropped` once the link heals.
+///
+/// The final checkpoint must be byte-identical to the twin's and the
+/// final Stats must account for every client-side operation exactly.
+fn cmd_chaos_smoke(a: &Args) -> Result<()> {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::time::Duration;
+
+    a.check_known(CHAOS_SMOKE_FLAGS)?;
+    let dir: std::path::PathBuf = match a.get("dir") {
+        Some(d) => d.into(),
+        None => std::env::temp_dir().join(format!("pal_chaos_smoke_{}", std::process::id())),
+    };
+    let seed: u64 = a.parse_or("seed", 0xC4A0_5EED)?;
+    let steps_per_writer: usize = a.parse_or("steps-per-writer", 320)?;
+    let batches_per_sampler: usize = a.parse_or("batches-per-sampler", 30)?;
+    ensure!(
+        steps_per_writer >= 128 && steps_per_writer % 32 == 0,
+        "--steps-per-writer must be a multiple of 32 (the episode length) and >= 128"
+    );
+    ensure!(batches_per_sampler >= 1, "--batches-per-sampler must be >= 1");
+    std::fs::create_dir_all(&dir)?;
+    let server_sock = dir.join("server.sock");
+    let proxy_sock = dir.join("proxy.sock");
+
+    // Unlimited limiter: admission never stalls, so the concurrent
+    // phases' stall counters are deterministically zero and the twin
+    // comparison stays byte-exact.
+    let mut cfg = smoke_config(a)?;
+    cfg.rate_limit = RateLimitSpec::Unlimited;
+    let warmup = cfg.warmup_steps;
+
+    let policy = ConnectionPolicy {
+        rpc_timeout: Duration::from_secs(10),
+        backoff: BackoffPolicy::default().with_deadline(Duration::from_secs(20)),
+    };
+    let chaos = ChaosConfig {
+        seed,
+        delay_chance: 0.02,
+        max_delay: Duration::from_millis(2),
+        shred_chance: 0.05,
+        reset_chance: 0.01,
+        max_resets: 4,
+    };
+    let server = ChaosServer::start(&cfg, &server_sock, None)?;
+    let proxy = ChaosProxy::start(&server_sock, &proxy_sock, chaos)?;
+    eprintln!(
+        "[chaos] server on {} behind seeded proxy on {} (seed {seed:#x})",
+        server_sock.display(),
+        proxy_sock.display()
+    );
+
+    // ---- Phase A: concurrent soak through the faulted link ---------
+    let soak_batches = AtomicU64::new(0);
+    std::thread::scope(|s| -> Result<()> {
+        let mut handles = Vec::new();
+        for actor in 0..3usize {
+            let proxy_sock = &proxy_sock;
+            let policy = policy.clone();
+            handles.push(s.spawn(move || -> Result<()> {
+                let w = retry_connect("soak writer connect", || {
+                    RemoteWriter::connect_with(proxy_sock, actor as u64, policy.clone())
+                })?;
+                let mut w = w.with_batch(REMOTE_SMOKE_BATCH);
+                for i in 0..steps_per_writer {
+                    let mut spins = 0u32;
+                    while w.throttled()? {
+                        spins += 1;
+                        ensure!(spins < 60_000, "soak writer throttled >60s");
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                    w.append(smoke_step(actor * 1_000_000 + i))?;
+                }
+                let mut spins = 0u32;
+                while w.flush()? > 0 {
+                    spins += 1;
+                    ensure!(spins < 60_000, "soak writer could not drain");
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                ensure!(
+                    w.steps_dropped() == 0,
+                    "soak writer dropped steps without a spill overflow"
+                );
+                Ok(())
+            }));
+        }
+        for sidx in 0..2u64 {
+            let proxy_sock = &proxy_sock;
+            let server_sock = &server_sock;
+            let policy = policy.clone();
+            let soak_batches = &soak_batches;
+            handles.push(s.spawn(move || -> Result<()> {
+                // Gate on warmup over the DIRECT socket (`Stats` never
+                // touches table counters), so the faulted sampler
+                // never sees NotEnoughData — keeping outcomes, and
+                // therefore counters, deterministic.
+                let mut direct = RemoteClient::connect(server_sock)?;
+                let mut spins = 0u32;
+                while direct.stats()?[0].len < warmup as u64 {
+                    spins += 1;
+                    ensure!(spins < 60_000, "replay table never reached warmup");
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                let mut smp = retry_connect("soak sampler connect", || {
+                    RemoteSampler::connect_default_with(
+                        proxy_sock,
+                        0xC4A0_0000 + sidx,
+                        policy.clone(),
+                    )
+                })?;
+                let mut rng = Rng::new(1); // sampling uses the server-side RNG
+                let mut out = SampleBatch::default();
+                for b in 0..batches_per_sampler {
+                    match smp.try_sample(16, &mut rng, &mut out)? {
+                        SampleOutcome::Sampled => ensure!(
+                            out.priorities.iter().all(|&p| p > 0.0),
+                            "sampled a zero-priority item through the proxy"
+                        ),
+                        other => bail!("soak sampler {sidx} stalled at batch {b}: {other:?}"),
+                    }
+                    soak_batches.fetch_add(1, Ordering::Relaxed);
+                }
+                Ok(())
+            }));
+        }
+        let results: Vec<_> = handles.into_iter().map(|h| h.join()).collect();
+        for r in results {
+            r.map_err(|_| anyhow!("chaos soak thread panicked"))??;
+        }
+        Ok(())
+    })?;
+
+    // Twin mirror of phase A (unfaulted, in-process): the actor ids
+    // land on distinct shards, so per-shard insertion order — and the
+    // checkpoint bytes — are independent of thread interleaving.
+    let twin = build_service(&cfg, SMOKE_OBS, SMOKE_ACT)?;
+    for actor in 0..3usize {
+        let mut tw = twin.writer(actor);
+        for i in 0..steps_per_writer {
+            ensure!(!tw.throttled(), "twin writer throttled under an unlimited limiter");
+            tw.append(smoke_step(actor * 1_000_000 + i));
+        }
+    }
+    {
+        let ts = twin.default_sampler();
+        let mut rng = Rng::new(0xA11CE);
+        let mut out = SampleBatch::default();
+        for b in 0..2 * batches_per_sampler {
+            ensure!(
+                ts.try_sample(16, &mut rng, &mut out) == SampleOutcome::Sampled,
+                "twin sampler stalled at batch {b}"
+            );
+        }
+    }
+    let mid_bytes = RemoteClient::connect(&server_sock)?.checkpoint_bytes()?;
+    ensure_checkpoints_match(
+        "after the chaos soak",
+        &mid_bytes,
+        &ServiceState::capture(&twin)?.encode(),
+    )?;
+    let soak_batches = soak_batches.load(Ordering::Relaxed);
+    eprintln!(
+        "[chaos] phase A OK: {} appends + {soak_batches} sampled batches through the proxy, \
+         checkpoint byte-identical ({} bytes), {} proxy reset(s) so far",
+        3 * steps_per_writer,
+        mid_bytes.len(),
+        proxy.resets_injected()
+    );
+
+    // ---- Phase B: hard-kill the server mid-outage, restart it from
+    // the checkpoint, deliver every spilled step exactly once --------
+    let mut writers_b = Vec::new();
+    for a_id in 0..3u64 {
+        let w = retry_connect("outage writer connect", || {
+            RemoteWriter::connect_with(&proxy_sock, 10 + a_id, policy.clone())
+        })?;
+        writers_b.push(w.with_batch(REMOTE_SMOKE_BATCH));
+    }
+    proxy.set_blackhole(true);
+    proxy.kill_connections();
+    server.stop()?;
+    ensure!(
+        RemoteClient::connect(&server_sock).is_err(),
+        "server socket still answers after the kill"
+    );
+    for (a_idx, w) in writers_b.iter_mut().enumerate() {
+        for i in 0..steps_per_writer {
+            ensure!(
+                !w.throttled()?,
+                "writer must keep accepting steps during an outage (spill), not block"
+            );
+            w.append(smoke_step((10 + a_idx) * 1_000_000 + i))?;
+        }
+        ensure!(
+            w.pending_len() == steps_per_writer && w.steps_dropped() == 0,
+            "outage writer spilled wrong: {} pending, {} dropped (want {steps_per_writer} / 0)",
+            w.pending_len(),
+            w.steps_dropped()
+        );
+    }
+    let restored = ServiceState::decode(&mid_bytes)?;
+    let server = ChaosServer::start(&cfg, &server_sock, Some(&restored))?;
+    proxy.set_blackhole(false);
+    for w in &mut writers_b {
+        let mut spins = 0u32;
+        while w.flush()? > 0 {
+            spins += 1;
+            ensure!(spins < 60_000, "outage writer could not drain after the restart");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        ensure!(w.reconnects() >= 1, "outage writer never reconnected");
+        ensure!(w.steps_dropped() == 0, "outage writer dropped steps below its spill cap");
+    }
+    drop(writers_b);
+    for a_idx in 0..3usize {
+        let mut tw = twin.writer(10 + a_idx);
+        for i in 0..steps_per_writer {
+            tw.append(smoke_step((10 + a_idx) * 1_000_000 + i));
+        }
+    }
+    ensure_checkpoints_match(
+        "after the kill/restart drill",
+        &RemoteClient::connect(&server_sock)?.checkpoint_bytes()?,
+        &ServiceState::capture(&twin)?.encode(),
+    )?;
+    eprintln!(
+        "[chaos] phase B OK: server killed and restarted from its checkpoint, {} spilled \
+         steps delivered exactly once",
+        3 * steps_per_writer
+    );
+
+    // ---- Phase C: pipelined samplers re-arm against the restarted
+    // server, in lockstep with the twin ------------------------------
+    let mut c_grants = 0u64;
+    let mut c_updates = 0u64;
+    for s_seed in [seed ^ 0x51, seed ^ 0x52] {
+        let smp = retry_connect("prefetch sampler connect", || {
+            RemoteSampler::connect_default_with(&proxy_sock, s_seed, policy.clone())
+        })?;
+        let mut smp = smp.with_prefetch(true);
+        let mut local_rng = Rng::new(s_seed);
+        let (granted, updated) =
+            prefetch_lockstep_drive(&mut smp, &twin.default_sampler(), &mut local_rng, 16)?;
+        c_grants += granted;
+        c_updates += updated;
+    }
+    eprintln!("[chaos] phase C OK: {c_grants} prefetched batches re-armed after the restart");
+
+    // ---- Phase D: spill overflow under a full outage ---------------
+    let w7 = retry_connect("spill writer connect", || {
+        RemoteWriter::connect_with(&proxy_sock, 7, policy.clone())
+    })?;
+    let mut w7 = w7.with_batch(4).with_spill_cap(8);
+    proxy.set_blackhole(true);
+    proxy.kill_connections();
+    for i in 0..40usize {
+        ensure!(!w7.throttled()?, "spill writer must not block during the outage");
+        w7.append(smoke_step(7_000_000 + i))?;
+    }
+    ensure!(
+        w7.steps_dropped() == 32 && w7.pending_len() == 8,
+        "spill overflow accounting wrong: {} dropped, {} pending (want 32 / 8)",
+        w7.steps_dropped(),
+        w7.pending_len()
+    );
+    proxy.set_blackhole(false);
+    let mut spins = 0u32;
+    while w7.flush()? > 0 {
+        spins += 1;
+        ensure!(spins < 60_000, "spill writer could not drain after the outage");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    ensure!(w7.reconnects() >= 1, "spill writer never reconnected");
+    // Twin mirror: the first failed flush pinned steps 0..4 in flight
+    // (they survive the overflow), the spill tail 36..40 survives by
+    // recency, and the 32 steps between dropped — which the server
+    // accounts into every table's steps_dropped on delivery. The twin
+    // writer stays alive through the final capture, mirroring the
+    // still-open remote session (partial N-step windows stay pending
+    // on both sides).
+    let mut tw7 = twin.writer(7);
+    for i in (0..4usize).chain(36..40) {
+        tw7.append(smoke_step(7_000_000 + i));
+    }
+    for t in twin.tables() {
+        t.add_steps_dropped(32);
+    }
+    let final_remote = RemoteClient::connect(&server_sock)?.checkpoint_bytes()?;
+    ensure_checkpoints_match(
+        "after the spill-overflow drill",
+        &final_remote,
+        &ServiceState::capture(&twin)?.encode(),
+    )?;
+    drop(w7);
+
+    // ---- Exact end-to-end accounting over the direct socket --------
+    let stats = RemoteClient::connect(&server_sock)?.stats()?;
+    ensure!(!stats.is_empty(), "server reports no tables after the drill");
+    let total_steps = 6 * steps_per_writer + 8;
+    let replay = &stats[0];
+    ensure!(
+        replay.stats.inserts == total_steps,
+        "insert accounting off: {} recorded, clients delivered {total_steps}",
+        replay.stats.inserts
+    );
+    let total_batches = soak_batches + c_grants;
+    ensure!(
+        replay.stats.sample_batches as u64 == total_batches,
+        "batch accounting off: {} recorded, clients drew {total_batches}",
+        replay.stats.sample_batches
+    );
+    ensure!(
+        replay.stats.sampled_items as u64 == 16 * total_batches,
+        "sampled-items accounting off: {} != 16·{total_batches}",
+        replay.stats.sampled_items
+    );
+    ensure!(
+        replay.stats.priority_updates as u64 == 16 * c_updates,
+        "priority-update accounting off: {} != 16·{c_updates}",
+        replay.stats.priority_updates
+    );
+    for t in &stats {
+        ensure!(
+            t.stats.steps_dropped == 32,
+            "table `{}`: steps_dropped {} != 32",
+            t.name,
+            t.stats.steps_dropped
+        );
+        ensure!(
+            t.stats.insert_stalls == 0 && t.stats.sample_stalls == 0,
+            "table `{}` stalled under an unlimited limiter",
+            t.name
+        );
+    }
+    let resets = proxy.resets_injected();
+    ensure!(resets >= 1, "the chaos proxy never injected a reset");
+
+    RemoteClient::connect(&server_sock)?.shutdown()?;
+    server.stop()?;
+    drop(proxy);
+    let _ = std::fs::remove_dir_all(&dir);
+    println!(
+        "chaos-smoke OK: {total_steps} steps exactly once across {resets} proxy resets and \
+         one server restart, 32 overflow drops accounted, final checkpoint byte-identical \
+         ({} bytes)",
+        final_remote.len()
+    );
+    Ok(())
+}
+
 fn cmd_dse(a: &Args) -> Result<()> {
     let cores: usize = a.parse_or("cores", 8)?;
     let ratio: f64 = a.parse_or("update-interval", 1.0)?;
@@ -1058,6 +1595,7 @@ fn main() -> Result<()> {
         Some("buffer-bench") => cmd_buffer_bench(&a),
         Some("state-smoke") => cmd_state_smoke(&a),
         Some("remote-smoke") => cmd_remote_smoke(&a),
+        Some("chaos-smoke") => cmd_chaos_smoke(&a),
         Some("dse") => cmd_dse(&a),
         Some(other) => bail!("unknown subcommand `{other}` (try `pal` for usage)"),
         None => usage(),

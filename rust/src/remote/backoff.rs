@@ -1,0 +1,203 @@
+//! Shared reconnect backoff policy for the supervised remote clients.
+//!
+//! One policy, four users: [`super::RemoteClient`] (blocking reconnect
+//! loops), [`super::RemoteWriter`] (non-blocking attempt pacing while
+//! the spill queue absorbs steps), [`super::RemoteSampler`], and the
+//! coordinator's monitor front. The schedule is exponential with
+//! full-decorrelation jitter — each delay is drawn uniformly from
+//! `[base/2, base]` where `base = initial · multiplier^attempt`
+//! (clamped to `max`) — plus one overall `deadline` after which
+//! [`Backoff::next_delay`] returns `None` and the caller surfaces a
+//! descriptive "reconnect deadline exceeded" error instead of retrying
+//! forever.
+//!
+//! Jitter is drawn from the crate's seeded [`Rng`], so a test (or the
+//! chaos harness) that fixes the seed gets a reproducible retry
+//! schedule.
+
+use crate::util::rng::Rng;
+use std::time::{Duration, Instant};
+
+/// Configuration of one reconnect schedule. `Default` is tuned for a
+/// local Unix-socket server: fast first retry, capped at 1 s, giving up
+/// after 30 s (override via `--reconnect-deadline`).
+#[derive(Clone, Debug)]
+pub struct BackoffPolicy {
+    /// Base delay of the first retry.
+    pub initial: Duration,
+    /// Upper clamp on any single delay.
+    pub max: Duration,
+    /// Growth factor per attempt.
+    pub multiplier: f64,
+    /// Overall give-up deadline measured from the first failure.
+    pub deadline: Duration,
+    /// Seed for the jitter stream.
+    pub jitter_seed: u64,
+}
+
+impl Default for BackoffPolicy {
+    fn default() -> Self {
+        Self {
+            initial: Duration::from_millis(10),
+            max: Duration::from_secs(1),
+            multiplier: 2.0,
+            deadline: Duration::from_secs(30),
+            jitter_seed: 0x0BAC_0FF5,
+        }
+    }
+}
+
+impl BackoffPolicy {
+    /// The policy with a different overall deadline (the
+    /// `--reconnect-deadline` hook).
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = deadline;
+        self
+    }
+
+    /// Start one outage's schedule.
+    pub fn start(&self) -> Backoff {
+        Backoff {
+            policy: self.clone(),
+            attempt: 0,
+            started: Instant::now(),
+            rng: Rng::new(self.jitter_seed),
+        }
+    }
+}
+
+/// One outage's live schedule; create via [`BackoffPolicy::start`],
+/// drop (or [`Backoff::reset`]) once reconnected.
+pub struct Backoff {
+    policy: BackoffPolicy,
+    attempt: u32,
+    started: Instant,
+    rng: Rng,
+}
+
+impl Backoff {
+    /// The delay to sleep before the next attempt, or `None` once the
+    /// overall deadline has passed (give up and report).
+    pub fn next_delay(&mut self) -> Option<Duration> {
+        let elapsed = self.started.elapsed();
+        if elapsed >= self.policy.deadline {
+            return None;
+        }
+        let base = self
+            .policy
+            .initial
+            .as_secs_f64()
+            .max(1e-9)
+            * self.policy.multiplier.max(1.0).powi(self.attempt as i32);
+        let base = base.min(self.policy.max.as_secs_f64());
+        // Uniform in [base/2, base]: decorrelates a fleet of clients
+        // reconnecting to one restarted server.
+        let jittered = base * (0.5 + 0.5 * self.rng.f32() as f64);
+        self.attempt = self.attempt.saturating_add(1);
+        let remaining = self.policy.deadline - elapsed;
+        Some(Duration::from_secs_f64(jittered).min(remaining))
+    }
+
+    /// Attempts scheduled so far (for error messages).
+    pub fn attempts(&self) -> u32 {
+        self.attempt
+    }
+
+    /// Time since the schedule started.
+    pub fn elapsed(&self) -> Duration {
+        self.started.elapsed()
+    }
+
+    /// The overall deadline this schedule enforces.
+    pub fn deadline(&self) -> Duration {
+        self.policy.deadline
+    }
+
+    /// Restart the schedule (connection healed, then failed again
+    /// later: the new outage gets a fresh deadline).
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+        self.started = Instant::now();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy_ms(initial: u64, max: u64, deadline: u64) -> BackoffPolicy {
+        BackoffPolicy {
+            initial: Duration::from_millis(initial),
+            max: Duration::from_millis(max),
+            multiplier: 2.0,
+            deadline: Duration::from_millis(deadline),
+            jitter_seed: 42,
+        }
+    }
+
+    #[test]
+    fn delays_grow_exponentially_and_clamp() {
+        let mut b = policy_ms(10, 80, 60_000).start();
+        let delays: Vec<f64> = (0..8)
+            .map(|_| b.next_delay().unwrap().as_secs_f64() * 1_000.0)
+            .collect();
+        // Each delay lies in [base/2, base] for base = 10·2^k clamped to 80.
+        for (k, d) in delays.iter().enumerate() {
+            let base = (10.0 * 2f64.powi(k as i32)).min(80.0);
+            assert!(
+                *d >= base / 2.0 - 1e-6 && *d <= base + 1e-6,
+                "attempt {k}: delay {d} ms outside [{}, {base}]",
+                base / 2.0
+            );
+        }
+        assert_eq!(b.attempts(), 8);
+    }
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let a: Vec<_> = {
+            let mut b = policy_ms(10, 1_000, 60_000).start();
+            (0..6).map(|_| b.next_delay().unwrap()).collect()
+        };
+        let c: Vec<_> = {
+            let mut b = policy_ms(10, 1_000, 60_000).start();
+            (0..6).map(|_| b.next_delay().unwrap()).collect()
+        };
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn deadline_exhausts_to_none() {
+        let mut b = policy_ms(1, 2, 30).start();
+        let mut total = Duration::ZERO;
+        let mut gave_up = false;
+        for _ in 0..10_000 {
+            match b.next_delay() {
+                Some(d) => {
+                    total += d;
+                    std::thread::sleep(d);
+                }
+                None => {
+                    gave_up = true;
+                    break;
+                }
+            }
+        }
+        assert!(gave_up, "deadline must eventually exhaust");
+        assert!(b.elapsed() >= Duration::from_millis(30));
+        // No single sleep may overshoot the deadline by more than one
+        // clamped delay.
+        assert!(total <= Duration::from_millis(40), "slept {total:?}");
+    }
+
+    #[test]
+    fn reset_restarts_the_deadline() {
+        let mut b = policy_ms(1, 1, 25).start();
+        while b.next_delay().is_some() {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(b.next_delay().is_none());
+        b.reset();
+        assert!(b.next_delay().is_some(), "reset must re-arm the schedule");
+    }
+}

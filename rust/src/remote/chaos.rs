@@ -1,0 +1,503 @@
+//! A deterministic chaos proxy for the remote replay protocol: a
+//! Unix-socket-to-Unix-socket forwarder that injects faults — delays,
+//! partial writes, connection resets, hard connection kills, and a
+//! black-hole mode — between clients and a [`super::ReplayServer`],
+//! without either side knowing it is there.
+//!
+//! This is test infrastructure (the `remote_chaos` soaks and the
+//! `pal chaos-smoke` CI restart drill), shipped in the library so the
+//! binary's drill and the integration tests share one implementation.
+//!
+//! # Determinism contract
+//!
+//! All fault *decisions* are drawn from seeded [`Rng`] streams, never
+//! from ambient entropy:
+//!
+//! * Connection `i` (1-based accept order) gets two decision streams,
+//!   forked from [`ChaosConfig::seed`] as `fork(2·i)` for the
+//!   client→server direction and `fork(2·i + 1)` for server→client.
+//!   Streams are independent of thread interleaving across
+//!   connections.
+//! * Within one direction, the `k`-th forwarded chunk always consults
+//!   the stream in the same order (reset? → delay? → shred?), so a
+//!   fixed seed yields a fixed verdict sequence per (connection,
+//!   direction).
+//!
+//! What the seed does **not** pin down is chunk *boundaries*: the
+//! proxy forwards whatever each `read` returns, and the OS may split
+//! a stream differently across runs, shifting which byte a given
+//! verdict lands on. The guarantee is therefore reproducibility of the
+//! fault *mix* (same rates, same per-chunk schedule), not a
+//! byte-exact fault script. End-state determinism in the chaos tests
+//! comes from the protocol — sessions, sequenced requests, and the
+//! server's reply cache make the *outcome* (table contents, stats
+//! accounting) independent of where faults land, which is precisely
+//! what the tests assert.
+//!
+//! Faults injected:
+//!
+//! * **Delay** — with [`ChaosConfig::delay_chance`], sleep a seeded
+//!   duration up to [`ChaosConfig::max_delay`] before forwarding a
+//!   chunk (exercises RPC timeouts and slow-link pacing).
+//! * **Shred (partial writes)** — with [`ChaosConfig::shred_chance`],
+//!   forward a chunk in 1–7-byte slices with tiny sleeps in between
+//!   (exercises the framing layer's short-read/short-write handling).
+//! * **Reset** — with [`ChaosConfig::reset_chance`], drop the
+//!   connection mid-stream (both directions shut down; at most
+//!   [`ChaosConfig::max_resets`] total so a soak always finishes).
+//! * **Kill** — [`ChaosProxy::kill_connections`] hard-drops every
+//!   live connection now (the `kill -9` stand-in for a link).
+//! * **Black hole** — [`ChaosProxy::set_blackhole`] makes the proxy
+//!   accept-and-immediately-close new connections (the
+//!   server-unreachable outage; clients see connect-then-dead, their
+//!   backoff schedules pace the retries).
+
+use crate::util::rng::Rng;
+use anyhow::{Context, Result};
+use std::io::{Read, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Fault rates for one [`ChaosProxy`]. `Default` injects nothing —
+/// enable faults explicitly so each test states what it exercises.
+#[derive(Clone, Debug)]
+pub struct ChaosConfig {
+    /// Root seed of every decision stream (see the module docs).
+    pub seed: u64,
+    /// Per-chunk chance of an injected forwarding delay.
+    pub delay_chance: f64,
+    /// Upper bound on one injected delay (the actual delay is seeded,
+    /// uniform in `[0, max_delay]`).
+    pub max_delay: Duration,
+    /// Per-chunk chance of forwarding in 1–7-byte slices.
+    pub shred_chance: f64,
+    /// Per-chunk chance of dropping the connection mid-stream.
+    pub reset_chance: f64,
+    /// Global cap on injected resets (so a soak cannot reset forever).
+    pub max_resets: u64,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        Self {
+            seed: 0xC4A0_5EED,
+            delay_chance: 0.0,
+            max_delay: Duration::from_millis(5),
+            shred_chance: 0.0,
+            reset_chance: 0.0,
+            max_resets: u64::MAX,
+        }
+    }
+}
+
+/// One live proxied connection: both stream halves (kept so a kill can
+/// shut them down from outside the pump threads) plus its kill flag.
+struct Conn {
+    client: UnixStream,
+    server: UnixStream,
+    dead: Arc<AtomicBool>,
+}
+
+impl Conn {
+    fn kill(&self) {
+        self.dead.store(true, Ordering::Relaxed);
+        let _ = self.client.shutdown(std::net::Shutdown::Both);
+        let _ = self.server.shutdown(std::net::Shutdown::Both);
+    }
+}
+
+/// State shared between the accept loop, the pump threads, and the
+/// test-facing handle.
+struct Shared {
+    cfg: ChaosConfig,
+    stop: AtomicBool,
+    blackhole: AtomicBool,
+    resets: AtomicU64,
+    conns: Mutex<Vec<Conn>>,
+}
+
+/// A running chaos proxy; construct with [`ChaosProxy::start`], point
+/// clients at [`ChaosProxy::listen_path`]. Dropping the handle stops
+/// the accept loop, kills live connections, and removes the socket.
+pub struct ChaosProxy {
+    shared: Arc<Shared>,
+    listen_path: PathBuf,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ChaosProxy {
+    /// Bind `listen_path` and forward each accepted connection to the
+    /// replay server at `upstream`, injecting faults per `cfg`.
+    pub fn start(
+        upstream: impl AsRef<Path>,
+        listen_path: impl AsRef<Path>,
+        cfg: ChaosConfig,
+    ) -> Result<Self> {
+        let upstream = upstream.as_ref().to_path_buf();
+        let listen_path = listen_path.as_ref().to_path_buf();
+        if listen_path.exists() {
+            std::fs::remove_file(&listen_path).with_context(|| {
+                format!("removing stale chaos socket {}", listen_path.display())
+            })?;
+        }
+        let listener = UnixListener::bind(&listen_path)
+            .with_context(|| format!("binding chaos proxy socket {}", listen_path.display()))?;
+        listener
+            .set_nonblocking(true)
+            .context("setting the chaos listener non-blocking")?;
+        let shared = Arc::new(Shared {
+            cfg,
+            stop: AtomicBool::new(false),
+            blackhole: AtomicBool::new(false),
+            resets: AtomicU64::new(0),
+            conns: Mutex::new(Vec::new()),
+        });
+        let accept_shared = Arc::clone(&shared);
+        let accept_thread = std::thread::spawn(move || {
+            accept_loop(listener, upstream, accept_shared);
+        });
+        Ok(Self { shared, listen_path, accept_thread: Some(accept_thread) })
+    }
+
+    /// The socket clients should dial instead of the real server's.
+    pub fn listen_path(&self) -> &Path {
+        &self.listen_path
+    }
+
+    /// Total connection resets injected so far (seeded resets plus
+    /// [`Self::kill_connections`] victims).
+    pub fn resets_injected(&self) -> u64 {
+        self.shared.resets.load(Ordering::Relaxed)
+    }
+
+    /// Switch the server-unreachable mode: while on, new connections
+    /// are accepted and immediately closed. Existing connections are
+    /// untouched — pair with [`Self::kill_connections`] for a full
+    /// outage.
+    pub fn set_blackhole(&self, on: bool) {
+        self.shared.blackhole.store(on, Ordering::Relaxed);
+    }
+
+    /// Hard-drop every live proxied connection right now; returns how
+    /// many were killed.
+    pub fn kill_connections(&self) -> usize {
+        let mut conns = self.shared.conns.lock().expect("chaos connection list poisoned");
+        let mut killed = 0;
+        for c in conns.iter() {
+            if !c.dead.load(Ordering::Relaxed) {
+                c.kill();
+                killed += 1;
+            }
+        }
+        self.shared.resets.fetch_add(killed as u64, Ordering::Relaxed);
+        conns.retain(|c| !c.dead.load(Ordering::Relaxed));
+        killed
+    }
+
+    /// Stop the accept loop, kill live connections, remove the socket.
+    /// Also what `Drop` does; explicit form for tests that want to
+    /// simulate the proxy process dying.
+    pub fn stop(&mut self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        self.kill_connections();
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        let _ = std::fs::remove_file(&self.listen_path);
+    }
+}
+
+impl Drop for ChaosProxy {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(listener: UnixListener, upstream: PathBuf, shared: Arc<Shared>) {
+    let mut conn_id = 0u64;
+    // One root stream per proxy; each connection forks its two
+    // direction streams from it by id, so decision streams are fixed
+    // by (seed, accept order) alone.
+    let mut root = Rng::new(shared.cfg.seed);
+    while !shared.stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((client, _addr)) => {
+                if shared.blackhole.load(Ordering::Relaxed) {
+                    drop(client); // accept-then-vanish: the outage mode
+                    continue;
+                }
+                conn_id += 1;
+                let _ = client.set_nonblocking(false);
+                let server = match UnixStream::connect(&upstream) {
+                    Ok(s) => s,
+                    Err(_) => {
+                        drop(client); // upstream gone: behave like it
+                        continue;
+                    }
+                };
+                let dead = Arc::new(AtomicBool::new(false));
+                let c2s = Rng::new(root.next_u64()).fork(2 * conn_id);
+                let s2c = Rng::new(root.next_u64()).fork(2 * conn_id + 1);
+                spawn_pumps(&shared, &client, &server, &dead, c2s, s2c);
+                let mut conns = shared.conns.lock().expect("chaos connection list poisoned");
+                // Opportunistic sweep so a long soak's list stays small.
+                conns.retain(|c| !c.dead.load(Ordering::Relaxed));
+                conns.push(Conn { client, server, dead });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+fn spawn_pumps(
+    shared: &Arc<Shared>,
+    client: &UnixStream,
+    server: &UnixStream,
+    dead: &Arc<AtomicBool>,
+    c2s_rng: Rng,
+    s2c_rng: Rng,
+) {
+    for (rng, from, to) in [
+        (c2s_rng, client.try_clone(), server.try_clone()),
+        (s2c_rng, server.try_clone(), client.try_clone()),
+    ] {
+        let (from, to) = match (from, to) {
+            (Ok(f), Ok(t)) => (f, t),
+            _ => {
+                dead.store(true, Ordering::Relaxed);
+                return;
+            }
+        };
+        let shared = Arc::clone(shared);
+        let dead = Arc::clone(dead);
+        std::thread::spawn(move || pump(shared, from, to, dead, rng));
+    }
+}
+
+/// Forward one direction chunk by chunk, consulting the seeded stream
+/// in a fixed order per chunk: reset? → delay? → shred?.
+fn pump(
+    shared: Arc<Shared>,
+    mut from: UnixStream,
+    mut to: UnixStream,
+    dead: Arc<AtomicBool>,
+    mut rng: Rng,
+) {
+    // A short read timeout so the pump notices kill/stop flags even
+    // when the link is idle.
+    let _ = from.set_read_timeout(Some(Duration::from_millis(25)));
+    let mut buf = [0u8; 4096];
+    loop {
+        if dead.load(Ordering::Relaxed) || shared.stop.load(Ordering::Relaxed) {
+            break;
+        }
+        let n = match from.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => n,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(_) => break,
+        };
+        // Decision order per chunk is part of the determinism contract.
+        let reset = rng.chance(shared.cfg.reset_chance);
+        let delay = rng.chance(shared.cfg.delay_chance);
+        let shred = rng.chance(shared.cfg.shred_chance);
+        if reset && try_claim_reset(&shared) {
+            dead.store(true, Ordering::Relaxed);
+            let _ = from.shutdown(std::net::Shutdown::Both);
+            let _ = to.shutdown(std::net::Shutdown::Both);
+            break;
+        }
+        if delay {
+            let frac = rng.f64();
+            std::thread::sleep(shared.cfg.max_delay.mul_f64(frac));
+        }
+        let write = if shred {
+            write_shredded(&mut to, &buf[..n], &mut rng)
+        } else {
+            to.write_all(&buf[..n]).and_then(|()| to.flush())
+        };
+        if write.is_err() {
+            break;
+        }
+    }
+    let _ = from.shutdown(std::net::Shutdown::Both);
+    let _ = to.shutdown(std::net::Shutdown::Both);
+}
+
+/// Claim one of the bounded reset slots; false once the cap is spent.
+fn try_claim_reset(shared: &Shared) -> bool {
+    let mut cur = shared.resets.load(Ordering::Relaxed);
+    loop {
+        if cur >= shared.cfg.max_resets {
+            return false;
+        }
+        match shared.resets.compare_exchange(cur, cur + 1, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return true,
+            Err(now) => cur = now,
+        }
+    }
+}
+
+/// Forward a chunk in seeded 1–7-byte slices with microsleeps between
+/// them — the torn-write torture for the framing layer.
+fn write_shredded(to: &mut UnixStream, chunk: &[u8], rng: &mut Rng) -> std::io::Result<()> {
+    let mut off = 0;
+    while off < chunk.len() {
+        let piece = 1 + rng.below(7) as usize;
+        let end = (off + piece).min(chunk.len());
+        to.write_all(&chunk[off..end])?;
+        to.flush()?;
+        off = end;
+        std::thread::sleep(Duration::from_micros(200));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+
+    fn sock(dir: &std::path::Path, name: &str) -> PathBuf {
+        dir.join(name)
+    }
+
+    /// A trivial upstream echo server: reads chunks, writes them back.
+    fn spawn_echo(path: PathBuf, stop: Arc<AtomicBool>) -> std::thread::JoinHandle<()> {
+        let listener = UnixListener::bind(&path).expect("bind echo");
+        listener.set_nonblocking(true).expect("nonblocking echo");
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((mut s, _)) => {
+                        let _ = s.set_nonblocking(false);
+                        let _ = s.set_read_timeout(Some(Duration::from_millis(25)));
+                        let stop = Arc::clone(&stop);
+                        std::thread::spawn(move || {
+                            let mut buf = [0u8; 1024];
+                            loop {
+                                if stop.load(Ordering::Relaxed) {
+                                    break;
+                                }
+                                match s.read(&mut buf) {
+                                    Ok(0) => break,
+                                    Ok(n) => {
+                                        if s.write_all(&buf[..n]).is_err() {
+                                            break;
+                                        }
+                                    }
+                                    Err(e)
+                                        if e.kind() == std::io::ErrorKind::WouldBlock
+                                            || e.kind() == std::io::ErrorKind::TimedOut =>
+                                    {
+                                        continue
+                                    }
+                                    Err(_) => break,
+                                }
+                            }
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                    Err(_) => break,
+                }
+            }
+            let _ = std::fs::remove_file(&path);
+        })
+    }
+
+    #[test]
+    fn forwards_bytes_transparently_even_when_shredding() {
+        let dir = std::env::temp_dir().join(format!("pal_chaos_fwd_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).expect("mkdir");
+        let up = sock(&dir, "up.sock");
+        let stop = Arc::new(AtomicBool::new(false));
+        let echo = spawn_echo(up.clone(), Arc::clone(&stop));
+        let proxy = ChaosProxy::start(
+            &up,
+            sock(&dir, "proxy.sock"),
+            ChaosConfig { shred_chance: 1.0, ..ChaosConfig::default() },
+        )
+        .expect("start proxy");
+
+        let mut c = UnixStream::connect(proxy.listen_path()).expect("connect");
+        let msg = b"the chaos proxy must not corrupt payload bytes";
+        c.write_all(msg).expect("write");
+        let mut got = vec![0u8; msg.len()];
+        c.read_exact(&mut got).expect("read back");
+        assert_eq!(&got, msg);
+
+        drop(c);
+        drop(proxy);
+        stop.store(true, Ordering::Relaxed);
+        echo.join().expect("echo thread");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn blackhole_and_kill_sever_clients() {
+        let dir = std::env::temp_dir().join(format!("pal_chaos_kill_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).expect("mkdir");
+        let up = sock(&dir, "up.sock");
+        let stop = Arc::new(AtomicBool::new(false));
+        let echo = spawn_echo(up.clone(), Arc::clone(&stop));
+        let proxy = ChaosProxy::start(&up, sock(&dir, "proxy.sock"), ChaosConfig::default())
+            .expect("start proxy");
+
+        // A live connection echoes...
+        let mut c = UnixStream::connect(proxy.listen_path()).expect("connect");
+        c.write_all(b"ping").expect("write");
+        let mut got = [0u8; 4];
+        c.read_exact(&mut got).expect("read");
+        // ...until killed: the next read sees EOF or an error.
+        assert_eq!(proxy.kill_connections(), 1);
+        let mut buf = [0u8; 1];
+        match c.read(&mut buf) {
+            Ok(0) | Err(_) => {}
+            Ok(n) => panic!("killed connection still delivered {n} byte(s)"),
+        }
+        assert_eq!(proxy.resets_injected(), 1);
+
+        // Black hole: connects succeed, then the socket is dead.
+        proxy.set_blackhole(true);
+        let mut c2 = UnixStream::connect(proxy.listen_path()).expect("connect during blackhole");
+        let _ = c2.set_read_timeout(Some(Duration::from_millis(500)));
+        let _ = c2.write_all(b"hello?");
+        match c2.read(&mut buf) {
+            Ok(0) | Err(_) => {}
+            Ok(n) => panic!("blackholed connection delivered {n} byte(s)"),
+        }
+
+        drop(proxy);
+        stop.store(true, Ordering::Relaxed);
+        echo.join().expect("echo thread");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn same_seed_same_decision_stream() {
+        // The contract is about the decision stream, not socket timing:
+        // replay the per-chunk verdict sequence directly.
+        let verdicts = |seed: u64| -> Vec<(bool, bool, bool)> {
+            let mut root = Rng::new(seed);
+            let mut rng = Rng::new(root.next_u64()).fork(2);
+            (0..64)
+                .map(|_| (rng.chance(0.1), rng.chance(0.3), rng.chance(0.5)))
+                .collect()
+        };
+        assert_eq!(verdicts(7), verdicts(7));
+        assert_ne!(verdicts(7), verdicts(8), "different seeds must differ somewhere");
+    }
+}

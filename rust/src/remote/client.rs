@@ -24,11 +24,29 @@
 //! * **Allocation-free framing** — every RPC encodes into the
 //!   connection's reused [`ByteWriter`] and decodes out of its reused
 //!   payload buffer; sampled batches land directly in the learner's
-//!   [`SampleBatch`] scratch. Steady-state append/sample does no
-//!   per-RPC heap allocation on the client, and none for framing or
-//!   response encoding on the server (the server's `Append` decode
-//!   still materializes owned `WriterStep`s — they become storage
-//!   rows).
+//!   [`SampleBatch`] scratch.
+//!
+//! # Fault tolerance
+//!
+//! All three handles are *supervised*: a dead or wedged connection is
+//! redialed under the shared [`BackoffPolicy`] schedule (exponential,
+//! jittered, bounded by an overall reconnect deadline), and each
+//! redial re-sends `Hello` quoting the old session id. When the server
+//! still holds the session, every request re-sent after the reconnect
+//! is deduplicated by the server's reply cache — appends are
+//! exactly-once across reconnects. When it does not (server restart,
+//! session expiry), unacked work is re-sent under fresh sequence
+//! numbers.
+//!
+//! [`RemoteWriter`] additionally degrades gracefully through an
+//! outage: its pending queue doubles as a bounded spill buffer, so the
+//! actor keeps stepping while the server is away. Past the spill cap
+//! the oldest queued steps are dropped (newest experience is the most
+//! valuable); every drop is counted and reported to the server on the
+//! next successful append, where it lands in the `steps_dropped` stat.
+//! Note that a dropped step breaks trajectory continuity for N-step
+//! and sequence tables — the server-side writer folds across the gap —
+//! which is the documented price of not blocking the actor.
 //!
 //! Rate-limiter semantics are preserved across the wire without ever
 //! blocking the connection: a stalled insert comes back as a short
@@ -36,6 +54,7 @@
 //! frame the learner sleep-polls, exactly like the in-process
 //! outcomes.
 
+use super::backoff::{Backoff, BackoffPolicy};
 use super::frame::{read_frame_into, write_frame};
 use super::proto::{
     self, Request, Response, SampleOutcomeWire, StallReason, TableInfo, MAX_APPEND_STEPS,
@@ -49,16 +68,17 @@ use crate::util::rng::Rng;
 use anyhow::{bail, Context, Result};
 use std::collections::VecDeque;
 use std::os::unix::net::UnixStream;
-use std::path::Path;
-use std::time::Duration;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
 
-/// How long one RPC may stay silent before the client gives up. The
-/// server never blocks on a rate limiter (stalls come back as
-/// immediate `WouldStall`/short-`Appended` frames), so a long silence
-/// means a wedged or dead server — erroring lets the worker loops
-/// stop the run instead of hanging past `ctl.request_stop`. Sized for
-/// the slowest legitimate RPC (a multi-hundred-MiB `Checkpoint`).
-const RPC_TIMEOUT: Duration = Duration::from_secs(120);
+/// Default bound on one RPC's silence before the client gives up on
+/// the connection (`--rpc-timeout`). The server never blocks on a rate
+/// limiter (stalls come back as immediate `WouldStall`/short-`Appended`
+/// frames), so a long silence means a wedged or dead server — treating
+/// it as a transport failure hands the connection to the reconnect
+/// supervisor instead of hanging the worker loop. Sized for the
+/// slowest legitimate RPC (a multi-hundred-MiB `Checkpoint`).
+pub const DEFAULT_RPC_TIMEOUT: Duration = Duration::from_secs(120);
 
 /// Default [`RemoteWriter`] flush threshold of a training run
 /// (`--remote-batch`); `RemoteWriter::connect` itself starts at 1
@@ -66,33 +86,182 @@ const RPC_TIMEOUT: Duration = Duration::from_secs(120);
 /// [`RemoteWriter::with_batch`] raises it.
 pub const DEFAULT_REMOTE_BATCH: usize = 16;
 
+/// Default [`RemoteWriter`] spill-queue bound (`--spill-cap`): steps
+/// queued past this during an outage drop oldest-first.
+pub const DEFAULT_SPILL_CAP: usize = 65_536;
+
+/// Reconnect rounds one [`RemoteSampler`] operation may burn before
+/// reporting the link unstabilizable (each round is a full
+/// [`BackoffPolicy`]-bounded reconnect, so this only bounds a link
+/// that keeps dying immediately after healing).
+const MAX_RECOVER_ROUNDS: u32 = 16;
+
+/// Marker context attached to every raw-I/O failure inside
+/// [`RemoteClient`], so supervision code can tell a dead *connection*
+/// (redial and retry) from a server-reported *application* error
+/// (surface to the caller). The vendored `anyhow` shim carries string
+/// chains only, so the classification is a context-message prefix.
+const TRANSPORT_MARK: &str = "replay transport";
+
+/// True when `e` is a connection-level failure (socket died, stream
+/// corrupted, RPC timed out) rather than an application error the
+/// server answered with.
+pub(crate) fn is_transport_error(e: &anyhow::Error) -> bool {
+    e.chain().any(|m| m.starts_with(TRANSPORT_MARK))
+}
+
+/// How one supervised connection dials, times out, and retries. The
+/// training CLI maps `--rpc-timeout` and `--reconnect-deadline` here.
+#[derive(Clone, Debug)]
+pub struct ConnectionPolicy {
+    /// Per-RPC read/write timeout on the socket.
+    pub rpc_timeout: Duration,
+    /// Redial schedule after a transport failure.
+    pub backoff: BackoffPolicy,
+}
+
+impl Default for ConnectionPolicy {
+    fn default() -> Self {
+        Self { rpc_timeout: DEFAULT_RPC_TIMEOUT, backoff: BackoffPolicy::default() }
+    }
+}
+
 /// One connection to a [`super::ReplayServer`]; a thin call/response
 /// wrapper plus typed helpers for every RPC. Requests encode into a
 /// per-connection [`ByteWriter`] and responses decode out of a
-/// per-connection payload buffer, both reused across calls.
+/// per-connection payload buffer, both reused across calls. The client
+/// remembers its dial path, session id, and request sequence counter,
+/// so a supervisor can redial and resume the server-side session.
 pub struct RemoteClient {
     stream: UnixStream,
     enc: ByteWriter,
     rbuf: Vec<u8>,
+    path: PathBuf,
+    policy: ConnectionPolicy,
+    /// Seed re-quoted on every redial's `Hello`, once [`Self::hello`]
+    /// has run (a client that never said hello redials sessionless).
+    hello_seed: Option<u64>,
+    /// Server-side session id (0 until the first `Hello` reply).
+    session: u64,
+    /// Next sequence number [`Self::alloc_seq`] hands out.
+    next_seq: u64,
+    reconnects: u64,
+    /// Whether the last `Hello` reattached existing server-side state.
+    last_hello_resumed: bool,
 }
 
 impl RemoteClient {
     pub fn connect(path: impl AsRef<Path>) -> Result<Self> {
-        let stream = UnixStream::connect(path.as_ref()).with_context(|| {
-            format!("connecting to replay server at {}", path.as_ref().display())
-        })?;
+        Self::connect_with(path, ConnectionPolicy::default())
+    }
+
+    /// Connect under an explicit timeout/backoff policy.
+    pub fn connect_with(path: impl AsRef<Path>, policy: ConnectionPolicy) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        let stream = Self::dial(&path, &policy)?;
+        Ok(Self {
+            stream,
+            enc: ByteWriter::new(),
+            rbuf: Vec::new(),
+            path,
+            policy,
+            hello_seed: None,
+            session: 0,
+            next_seq: 1,
+            reconnects: 0,
+            last_hello_resumed: false,
+        })
+    }
+
+    fn dial(path: &Path, policy: &ConnectionPolicy) -> Result<UnixStream> {
+        let stream = UnixStream::connect(path)
+            .with_context(|| format!("connecting to replay server at {}", path.display()))?;
         stream
-            .set_read_timeout(Some(RPC_TIMEOUT))
+            .set_read_timeout(Some(policy.rpc_timeout))
             .context("setting the RPC read timeout")?;
         stream
-            .set_write_timeout(Some(RPC_TIMEOUT))
+            .set_write_timeout(Some(policy.rpc_timeout))
             .context("setting the RPC write timeout")?;
-        Ok(Self { stream, enc: ByteWriter::new(), rbuf: Vec::new() })
+        Ok(stream)
+    }
+
+    pub fn policy(&self) -> &ConnectionPolicy {
+        &self.policy
+    }
+
+    /// The server-side session id this connection is bound to (0 before
+    /// the first `Hello`).
+    pub fn session(&self) -> u64 {
+        self.session
+    }
+
+    /// Successful redials so far (the monitor surfaces this per tick).
+    pub fn reconnects(&self) -> u64 {
+        self.reconnects
+    }
+
+    /// Whether the most recent `Hello` resumed existing server-side
+    /// session state (false after a server restart or session expiry).
+    pub fn last_hello_resumed(&self) -> bool {
+        self.last_hello_resumed
+    }
+
+    /// Hand out the next request sequence number (sequenced requests
+    /// start at 1; 0 on the wire means "unsequenced").
+    pub fn alloc_seq(&mut self) -> u64 {
+        let s = self.next_seq;
+        self.next_seq += 1;
+        s
+    }
+
+    /// One redial attempt: dial, then re-`Hello` quoting the old
+    /// session id (when [`Self::hello`] ever ran). On success the
+    /// connection is usable; check [`Self::last_hello_resumed`] to
+    /// learn whether server-side state survived.
+    pub fn try_redial(&mut self) -> Result<()> {
+        self.stream = Self::dial(&self.path, &self.policy)?;
+        if let Some(seed) = self.hello_seed {
+            self.hello(seed)?;
+        }
+        self.reconnects += 1;
+        Ok(())
+    }
+
+    /// Blocking reconnect under the policy's backoff schedule; gives up
+    /// with a descriptive error once the reconnect deadline passes.
+    pub fn reconnect(&mut self) -> Result<()> {
+        let mut backoff = self.policy.backoff.start();
+        loop {
+            match self.try_redial() {
+                Ok(()) => return Ok(()),
+                Err(e) => match backoff.next_delay() {
+                    Some(d) => std::thread::sleep(d),
+                    None => {
+                        return Err(e).with_context(|| {
+                            format!(
+                                "reconnect to replay server at {} gave up: deadline {:?} \
+                                 exceeded after {} attempts",
+                                self.path.display(),
+                                backoff.deadline(),
+                                backoff.attempts()
+                            )
+                        });
+                    }
+                },
+            }
+        }
     }
 
     /// Ship whatever the last `self.enc.reset()` + encode produced.
     fn send_encoded(&mut self) -> Result<()> {
-        write_frame(&mut self.stream, self.enc.as_slice())
+        write_frame(&mut self.stream, self.enc.as_slice()).context(TRANSPORT_MARK)
+    }
+
+    /// Ship one pre-encoded request payload (the supervision resend
+    /// path: outstanding requests are re-sent byte-identical so the
+    /// server's reply cache can match them).
+    pub fn send_payload(&mut self, payload: &[u8]) -> Result<()> {
+        write_frame(&mut self.stream, payload).context(TRANSPORT_MARK)
     }
 
     /// Write one request frame without reading its response (the
@@ -105,10 +274,11 @@ impl RemoteClient {
 
     /// Read one response frame into the reused payload buffer.
     fn recv_payload(&mut self) -> Result<()> {
-        if !read_frame_into(&mut self.stream, &mut self.rbuf)? {
-            bail!("replay server closed the connection mid-call");
+        match read_frame_into(&mut self.stream, &mut self.rbuf) {
+            Ok(true) => Ok(()),
+            Ok(false) => bail!("{TRANSPORT_MARK}: replay server closed the connection mid-call"),
+            Err(e) => Err(e.context(TRANSPORT_MARK)),
         }
-        Ok(())
     }
 
     /// Read one response and decode it (allocates for payload-carrying
@@ -122,6 +292,20 @@ impl RemoteClient {
     pub fn call(&mut self, req: &Request) -> Result<Response> {
         self.send(req)?;
         self.recv()
+    }
+
+    /// As [`Self::call`], but a transport failure triggers one
+    /// supervised reconnect (backoff, deadline) and a single retry.
+    /// Only safe for idempotent or unsequenced requests (`Stats`,
+    /// `Checkpoint`) — the monitor's poll path.
+    pub fn call_resilient(&mut self, req: &Request) -> Result<Response> {
+        match self.call(req) {
+            Err(e) if is_transport_error(&e) => {
+                self.reconnect()?;
+                self.call(req)
+            }
+            other => other,
+        }
     }
 
     /// As [`Self::call`], but a `Response::Error` becomes an `Err`.
@@ -141,12 +325,26 @@ impl RemoteClient {
         }
     }
 
-    /// Seed this connection's server-side sampling RNG; returns the
-    /// server's default (first) table name, so a sampler binds without
-    /// a separate `Stats` round-trip.
+    /// Bind (or, after a redial, resume) a server-side session and seed
+    /// its sampling RNG; returns the server's default (first) table
+    /// name, so a sampler binds without a separate `Stats` round-trip.
     pub fn hello(&mut self, rng_seed: u64) -> Result<String> {
-        match self.call_checked(&Request::Hello { rng_seed })? {
-            Response::Hello { default_table } => Ok(default_table),
+        self.hello_seed = Some(rng_seed);
+        let quoted = self.session;
+        match self.call_checked(&Request::Hello { rng_seed, session: quoted })? {
+            Response::Hello { default_table, session, resumed, next_seq } => {
+                self.session = session;
+                self.last_hello_resumed = resumed;
+                if resumed {
+                    // The local counter is already at or past the
+                    // server's expectation (it allocated every number
+                    // the server has seen); never move it backwards.
+                    self.next_seq = self.next_seq.max(next_seq);
+                } else {
+                    self.next_seq = next_seq;
+                }
+                Ok(default_table)
+            }
             other => bail!("unexpected response to Hello: {other:?}"),
         }
     }
@@ -165,8 +363,21 @@ impl RemoteClient {
         actor_id: u64,
         steps: impl ExactSizeIterator<Item = &'a WriterStep>,
     ) -> Result<(u32, u32)> {
+        self.append_steps_seq(actor_id, 0, 0, steps)
+    }
+
+    /// The sequenced append used by [`RemoteWriter`]: `seq` rides the
+    /// session's exactly-once gate and `dropped` reports client-side
+    /// spill drops since the last acked append.
+    pub fn append_steps_seq<'a>(
+        &mut self,
+        actor_id: u64,
+        seq: u64,
+        dropped: u64,
+        steps: impl ExactSizeIterator<Item = &'a WriterStep>,
+    ) -> Result<(u32, u32)> {
         self.enc.reset();
-        proto::encode_append(&mut self.enc, actor_id, steps);
+        proto::encode_append(&mut self.enc, actor_id, seq, dropped, steps);
         self.send_encoded()?;
         match self.recv()? {
             Response::Appended { consumed, emitted } => Ok((consumed, emitted)),
@@ -179,7 +390,7 @@ impl RemoteClient {
     /// prefetch half; pair with [`Self::recv_sample`]).
     pub fn send_sample(&mut self, table: &str, batch: usize) -> Result<()> {
         self.enc.reset();
-        proto::encode_sample(&mut self.enc, table, batch as u32);
+        proto::encode_sample(&mut self.enc, table, batch as u32, 0);
         self.send_encoded()
     }
 
@@ -207,14 +418,6 @@ impl RemoteClient {
         self.recv_sample(out)
     }
 
-    /// Write an `UpdatePriorities` request without reading the
-    /// response (the pipelining half; pair with a `recv_ok`).
-    fn send_update(&mut self, table: &str, indices: &[usize], td_abs: &[f32]) -> Result<()> {
-        self.enc.reset();
-        proto::encode_update_priorities(&mut self.enc, table, indices, td_abs);
-        self.send_encoded()
-    }
-
     /// Feed |TD| errors back for sampled indices of a named table.
     pub fn update_priorities(
         &mut self,
@@ -222,7 +425,9 @@ impl RemoteClient {
         indices: &[usize],
         td_abs: &[f32],
     ) -> Result<()> {
-        self.send_update(table, indices, td_abs)?;
+        self.enc.reset();
+        proto::encode_update_priorities(&mut self.enc, table, indices, td_abs, 0);
+        self.send_encoded()?;
         self.recv_ok("UpdatePriorities")
     }
 
@@ -266,6 +471,17 @@ impl RemoteClient {
     }
 }
 
+/// The chunk a [`RemoteWriter`] has sent but not yet seen acked: the
+/// first `len` steps of the pending queue under sequence `seq`,
+/// claiming `dropped` spill drops. Pinned — the spill cap never drops
+/// these steps, and a reconnect re-sends them byte-identically so the
+/// server's reply cache can dedupe.
+struct InflightAppend {
+    seq: u64,
+    len: usize,
+    dropped: u64,
+}
+
 /// Remote counterpart of [`crate::service::TrajectoryWriter`]: ships
 /// raw env steps to the server, which runs the real writer (item
 /// assembly server-side keeps remote and local items byte-identical).
@@ -277,31 +493,70 @@ impl RemoteClient {
 /// pending queue, retried by [`ExperienceWriter::throttled`] polls one
 /// chunk per RPC, so a long stall re-encodes at most `batch` steps per
 /// retry — never the whole backlog.
+///
+/// The writer is supervised: every append carries a session sequence
+/// number, so a chunk whose ack was lost to a dead connection is
+/// re-sent after the redial and deduplicated by the server — appends
+/// are exactly-once across reconnects. During an outage the pending
+/// queue doubles as a bounded spill buffer (see [`Self::with_spill_cap`])
+/// and the actor keeps stepping; drops past the cap are counted here
+/// and reported to the server as the `steps_dropped` stat.
 pub struct RemoteWriter {
     client: RemoteClient,
     actor_id: u64,
     pending: VecDeque<WriterStep>,
     /// Flush threshold AND per-RPC chunk size (≥ 1).
     batch: usize,
+    /// Spill bound on `pending` (effective cap is `max(spill_cap,
+    /// batch)`; the in-flight chunk is never dropped).
+    spill_cap: usize,
     /// The last `Append` was cut short by a limiter stall; cleared
     /// when a flush drains the queue.
     stalled: bool,
     items_emitted: u64,
     wire_steps_sent: u64,
+    inflight: Option<InflightAppend>,
+    /// Spill drops not yet acked by the server (`steps_dropped` minus
+    /// everything already reported in an acked append).
+    dropped_unacked: u64,
+    steps_dropped: u64,
+    connected: bool,
+    /// Live outage pacing for the non-blocking paths: the backoff
+    /// schedule plus the earliest next redial attempt.
+    outage: Option<(Backoff, Instant)>,
 }
 
 impl RemoteWriter {
     /// Connect with the legacy one-step-per-RPC behaviour (`batch` 1);
     /// chain [`Self::with_batch`] to enable client-side batching.
     pub fn connect(path: impl AsRef<Path>, actor_id: u64) -> Result<Self> {
+        Self::connect_with(path, actor_id, ConnectionPolicy::default())
+    }
+
+    /// Connect under an explicit timeout/backoff policy.
+    pub fn connect_with(
+        path: impl AsRef<Path>,
+        actor_id: u64,
+        policy: ConnectionPolicy,
+    ) -> Result<Self> {
+        let mut client = RemoteClient::connect_with(path, policy)?;
+        // Register a resumable session up front (the seed only matters
+        // for sampling, which a writer never does).
+        client.hello(actor_id)?;
         Ok(Self {
-            client: RemoteClient::connect(path)?,
+            client,
             actor_id,
             pending: VecDeque::new(),
             batch: 1,
+            spill_cap: DEFAULT_SPILL_CAP,
             stalled: false,
             items_emitted: 0,
             wire_steps_sent: 0,
+            inflight: None,
+            dropped_unacked: 0,
+            steps_dropped: 0,
+            connected: true,
+            outage: None,
         })
     }
 
@@ -309,6 +564,13 @@ impl RemoteWriter {
     /// pending, then ship as one `Append` RPC.
     pub fn with_batch(mut self, batch: usize) -> Self {
         self.batch = batch.clamp(1, MAX_APPEND_STEPS);
+        self
+    }
+
+    /// Bound the outage spill queue (steps queued past the cap drop
+    /// oldest-first, counted in [`Self::steps_dropped`]).
+    pub fn with_spill_cap(mut self, cap: usize) -> Self {
+        self.spill_cap = cap.max(1);
         self
     }
 
@@ -322,6 +584,17 @@ impl RemoteWriter {
         self.pending.len()
     }
 
+    /// Steps dropped out of the spill queue so far (outages longer
+    /// than the cap absorbs).
+    pub fn steps_dropped(&self) -> u64 {
+        self.steps_dropped
+    }
+
+    /// Successful redials of the underlying connection.
+    pub fn reconnects(&self) -> u64 {
+        self.client.reconnects()
+    }
+
     /// Total steps encoded onto the wire, retries included — the
     /// regression probe for the flush path: a stall must re-send at
     /// most one chunk per retry, so this stays O(steps + retries ·
@@ -330,33 +603,190 @@ impl RemoteWriter {
         self.wire_steps_sent
     }
 
-    /// Ship pending steps one chunk per RPC; stops early when the
-    /// server reports a limiter stall (the tail stays queued for the
-    /// next poll). Returns the number of steps still pending.
-    fn flush_pending(&mut self) -> Result<usize> {
-        while !self.pending.is_empty() {
-            let chunk = self.pending.len().min(self.batch);
-            let (consumed, emitted) =
-                self.client.append_steps(self.actor_id, self.pending.iter().take(chunk))?;
-            self.wire_steps_sent += chunk as u64;
-            for _ in 0..consumed {
-                self.pending.pop_front();
-            }
-            self.items_emitted += emitted as u64;
-            if (consumed as usize) < chunk {
-                self.stalled = true; // limiter stall — retriable, not an error
-                return Ok(self.pending.len());
+    /// Keep `pending` within the spill cap by dropping the oldest
+    /// steps that are not part of the in-flight chunk.
+    fn enforce_spill_cap(&mut self) {
+        let cap = self.spill_cap.max(self.batch);
+        let pinned = self.inflight.as_ref().map_or(0, |f| f.len);
+        while self.pending.len() > cap && self.pending.len() > pinned {
+            self.pending.remove(pinned);
+            self.steps_dropped += 1;
+            self.dropped_unacked += 1;
+        }
+    }
+
+    /// After a successful redial: when the session did NOT resume
+    /// (server restart or expiry), the in-flight chunk's sequence
+    /// number means nothing to the fresh session — void it so the
+    /// steps (still at the queue front) re-ship under a fresh seq.
+    fn on_reconnected(&mut self) {
+        if !self.client.last_hello_resumed() {
+            self.inflight = None;
+        }
+    }
+
+    /// One non-blocking redial attempt, paced by the outage backoff;
+    /// returns whether the connection is usable. Errors only once the
+    /// reconnect deadline is exhausted.
+    fn try_heal(&mut self) -> Result<bool> {
+        let now = Instant::now();
+        if let Some((_, next_at)) = &self.outage {
+            if now < *next_at {
+                return Ok(false);
             }
         }
-        self.stalled = false;
-        Ok(0)
+        match self.client.try_redial() {
+            Ok(()) => {
+                self.outage = None;
+                self.connected = true;
+                self.on_reconnected();
+                Ok(true)
+            }
+            Err(e) => {
+                if self.outage.is_none() {
+                    self.outage = Some((self.client.policy().backoff.start(), now));
+                }
+                let gave_up = {
+                    let (backoff, next_at) =
+                        self.outage.as_mut().expect("outage schedule just ensured");
+                    match backoff.next_delay() {
+                        Some(d) => {
+                            *next_at = now + d;
+                            None
+                        }
+                        None => Some((backoff.attempts(), backoff.elapsed(), backoff.deadline())),
+                    }
+                };
+                match gave_up {
+                    None => Ok(false),
+                    Some((attempts, elapsed, deadline)) => {
+                        self.outage = None;
+                        Err(e).with_context(|| {
+                            format!(
+                                "writer gave up reconnecting after {attempts} attempts over \
+                                 {elapsed:?} (reconnect deadline {deadline:?}); {} step(s) \
+                                 pending, {} dropped",
+                                self.pending.len(),
+                                self.steps_dropped
+                            )
+                        })
+                    }
+                }
+            }
+        }
+    }
+
+    /// Blocking redial under the backoff schedule (the `flush` path:
+    /// a checkpoint barrier must deliver or error, not spill).
+    fn heal_blocking(&mut self) -> Result<()> {
+        let mut backoff = match self.outage.take() {
+            Some((b, _)) => b,
+            None => self.client.policy().backoff.start(),
+        };
+        loop {
+            match self.client.try_redial() {
+                Ok(()) => {
+                    self.connected = true;
+                    self.on_reconnected();
+                    return Ok(());
+                }
+                Err(e) => match backoff.next_delay() {
+                    Some(d) => std::thread::sleep(d),
+                    None => {
+                        return Err(e).with_context(|| {
+                            format!(
+                                "writer flush gave up reconnecting after {} attempts over \
+                                 {:?} (reconnect deadline {:?}); {} step(s) still pending",
+                                backoff.attempts(),
+                                backoff.elapsed(),
+                                backoff.deadline(),
+                                self.pending.len()
+                            )
+                        });
+                    }
+                },
+            }
+        }
+    }
+
+    /// The one delivery loop: heal the connection if needed, keep one
+    /// chunk in flight, apply acks. Stops early on a limiter stall
+    /// (the tail stays queued for the next poll) and — unless
+    /// `block_on_outage` — on a dead connection (the queue spills).
+    /// Returns the number of steps still pending.
+    fn run_flush(&mut self, block_on_outage: bool) -> Result<usize> {
+        loop {
+            if !self.connected {
+                if block_on_outage {
+                    self.heal_blocking()?;
+                } else if !self.try_heal()? {
+                    return Ok(self.pending.len());
+                }
+            }
+            if self.inflight.is_none() {
+                if self.pending.is_empty() && self.dropped_unacked == 0 {
+                    self.stalled = false;
+                    return Ok(0);
+                }
+                self.inflight = Some(InflightAppend {
+                    seq: self.client.alloc_seq(),
+                    len: self.pending.len().min(self.batch),
+                    dropped: self.dropped_unacked,
+                });
+            }
+            let (seq, len, dropped) = {
+                let f = self.inflight.as_ref().expect("in-flight chunk just ensured");
+                (f.seq, f.len, f.dropped)
+            };
+            self.wire_steps_sent += len as u64;
+            match self.client.append_steps_seq(
+                self.actor_id,
+                seq,
+                dropped,
+                self.pending.iter().take(len),
+            ) {
+                Ok((consumed, emitted)) => {
+                    self.inflight = None;
+                    self.dropped_unacked -= dropped;
+                    for _ in 0..consumed {
+                        self.pending.pop_front();
+                    }
+                    self.items_emitted += emitted as u64;
+                    if (consumed as usize) < len {
+                        self.stalled = true; // limiter stall — retriable, not an error
+                        return Ok(self.pending.len());
+                    }
+                    self.stalled = false;
+                }
+                Err(e) if is_transport_error(&e) => {
+                    // The chunk stays pinned in flight: after the next
+                    // successful redial it re-ships byte-identical and
+                    // the server's reply cache dedupes it. A dead link
+                    // is not a limiter stall — the actor must keep
+                    // stepping (and spilling), not throttle-poll.
+                    self.connected = false;
+                    self.stalled = false;
+                    if !block_on_outage {
+                        return Ok(self.pending.len());
+                    }
+                }
+                Err(e) => {
+                    self.inflight = None;
+                    return Err(e);
+                }
+            }
+        }
     }
 }
 
 impl ExperienceWriter for RemoteWriter {
     fn throttled(&mut self) -> Result<bool> {
-        if self.stalled || self.pending.len() >= self.batch {
-            self.flush_pending()?;
+        if self.stalled
+            || !self.connected
+            || self.inflight.is_some()
+            || self.pending.len() >= self.batch
+        {
+            self.run_flush(false)?;
         }
         Ok(self.stalled)
     }
@@ -364,27 +794,61 @@ impl ExperienceWriter for RemoteWriter {
     fn append(&mut self, step: WriterStep) -> Result<usize> {
         let before = self.items_emitted;
         self.pending.push_back(step);
+        self.enforce_spill_cap();
         // While stalled, retries belong to the `throttled()` poll (the
         // actor's sleep loop), not to every queued step — that keeps a
         // long stall at one chunk-sized RPC per poll instead of one
         // per append.
         if !self.stalled && self.pending.len() >= self.batch {
-            self.flush_pending()?;
+            self.run_flush(false)?;
         }
         Ok((self.items_emitted - before) as usize)
     }
 
     fn flush(&mut self) -> Result<usize> {
-        self.flush_pending()
+        self.run_flush(true)
     }
 }
 
 impl Drop for RemoteWriter {
     fn drop(&mut self) {
         // Best-effort: one last try at delivering steps still queued
-        // (a sub-batch tail, or steps the limiter stalled) at shutdown.
-        let _ = self.flush_pending();
+        // at shutdown. Non-blocking, so a dead server cannot wedge a
+        // worker thread in its destructor.
+        if self.connected {
+            let _ = self.run_flush(false);
+        }
     }
+}
+
+/// What kind of request a [`RemoteSampler`] has in flight.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum OutstandingKind {
+    /// A `Sample` for this batch size.
+    Sample(usize),
+    /// An `UpdatePriorities` awaiting its `Ok`.
+    Update,
+}
+
+/// One request the sampler has written but not yet seen answered. The
+/// encoded bytes are kept so a reconnect can re-send the request
+/// byte-identical — the server's reply cache then either replays the
+/// original answer or executes it fresh, exactly once.
+struct Outstanding {
+    kind: OutstandingKind,
+    bytes: Vec<u8>,
+}
+
+/// What one [`RemoteSampler::pump_one`] call consumed off the wire.
+enum Pumped {
+    /// A sample response for a request of batch size `n` (decoded into
+    /// the caller's buffer when one was given, stashed otherwise).
+    Sample { n: usize, outcome: SampleOutcome },
+    /// An `UpdatePriorities` ack.
+    Update,
+    /// A reconnect dropped everything outstanding (fresh session with
+    /// only updates in flight) — nothing left to read.
+    Dry,
 }
 
 /// Remote counterpart of [`crate::service::SamplerHandle`] on one named
@@ -397,22 +861,33 @@ impl Drop for RemoteWriter {
 /// `Sample` request back-to-back on the connection (the server applies
 /// the priorities before drawing, preserving in-process ordering), so
 /// the following `try_sample` only reads a response that travelled
-/// during the learner's gradient step. A `WouldStall` read out of the
-/// pipeline ends it cleanly — the next `try_sample` issues a fresh
-/// request, and no granted batch is ever lost or duplicated.
+/// during the learner's gradient step.
+///
+/// The sampler is supervised: every request is sequenced and its
+/// encoded bytes retained until answered. After a reconnect that
+/// *resumed* the session, outstanding requests re-ship byte-identical —
+/// the server replays already-executed ones from its reply cache (same
+/// bytes, same RNG stream: the pipeline re-arms with no drawn batch
+/// lost or duplicated). After a reconnect that could NOT resume
+/// (server restart), in-flight priority updates are dropped (counted
+/// in [`Self::updates_lost`]) and sample requests re-issue under fresh
+/// sequence numbers.
 pub struct RemoteSampler {
     client: RemoteClient,
     table: String,
     prefetch: bool,
-    /// Batch size of the `Sample` request currently in flight.
-    inflight: Option<usize>,
     /// Batch size of the last granted batch (what a prefetch requests).
     last_batch: Option<usize>,
+    /// Requests written but not yet answered, oldest first (responses
+    /// arrive in this order).
+    outstanding: VecDeque<Outstanding>,
     /// Responses drained out of order (an in-flight sample consumed by
     /// a second consecutive update), oldest first, each tagged with its
     /// requested batch size; handed back by `try_sample` in order so no
     /// granted batch is ever lost.
     stashed: VecDeque<(usize, SampleOutcome, SampleBatch)>,
+    /// Priority updates lost to a non-resumable reconnect.
+    updates_lost: u64,
 }
 
 impl RemoteSampler {
@@ -430,7 +905,17 @@ impl RemoteSampler {
     /// Connect to the server's default (first) table: one dial, one
     /// round-trip — the `Hello` response names the table.
     pub fn connect_default(path: impl AsRef<Path>, rng_seed: u64) -> Result<Self> {
-        let mut client = RemoteClient::connect(path)?;
+        Self::connect_default_with(path, rng_seed, ConnectionPolicy::default())
+    }
+
+    /// As [`Self::connect_default`], under an explicit timeout/backoff
+    /// policy.
+    pub fn connect_default_with(
+        path: impl AsRef<Path>,
+        rng_seed: u64,
+        policy: ConnectionPolicy,
+    ) -> Result<Self> {
+        let mut client = RemoteClient::connect_with(path, policy)?;
         let table = client.hello(rng_seed)?;
         if table.is_empty() {
             bail!("replay server reports no default table");
@@ -443,9 +928,10 @@ impl RemoteSampler {
             client,
             table,
             prefetch: false,
-            inflight: None,
             last_batch: None,
+            outstanding: VecDeque::new(),
             stashed: VecDeque::new(),
+            updates_lost: 0,
         }
     }
 
@@ -459,18 +945,136 @@ impl RemoteSampler {
         &self.table
     }
 
-    /// Consume the in-flight prefetch response, if any, and report its
-    /// outcome. A `Sampled` outcome here is a batch the server granted
-    /// (and counted) that this client will never use — callers that
-    /// audit exact accounting must tally it.
-    pub fn drain(&mut self) -> Result<Option<SampleOutcome>> {
-        match self.inflight.take() {
-            None => Ok(None),
-            Some(_) => {
-                let mut scratch = SampleBatch::default();
-                Ok(Some(self.client.recv_sample(&mut scratch)?))
+    /// Successful redials of the underlying connection.
+    pub fn reconnects(&self) -> u64 {
+        self.client.reconnects()
+    }
+
+    /// Priority updates lost because a reconnect could not resume the
+    /// session (the server restarted; the items they targeted may no
+    /// longer exist).
+    pub fn updates_lost(&self) -> u64 {
+        self.updates_lost
+    }
+
+    /// Sequence, encode, queue, and (best-effort) send one `Sample`
+    /// request. A transport failure here still leaves the request
+    /// queued — the pump's reconnect path re-sends it.
+    fn issue_sample(&mut self, n: usize) -> Result<()> {
+        let seq = self.client.alloc_seq();
+        let mut w = ByteWriter::new();
+        proto::encode_sample(&mut w, &self.table, n as u32, seq);
+        self.outstanding
+            .push_back(Outstanding { kind: OutstandingKind::Sample(n), bytes: w.finish() });
+        self.client
+            .send_payload(&self.outstanding.back().expect("request just queued").bytes)
+    }
+
+    /// Heal the connection and re-arm the pipeline: on a resumed
+    /// session every outstanding request re-ships byte-identical (the
+    /// reply cache dedupes); on a fresh session updates are dropped
+    /// and samples re-issued under fresh sequence numbers.
+    fn recover(&mut self, cause: &anyhow::Error) -> Result<()> {
+        self.client
+            .reconnect()
+            .with_context(|| format!("sampler lost the replay connection ({cause})"))?;
+        if self.client.last_hello_resumed() {
+            for o in &self.outstanding {
+                self.client.send_payload(&o.bytes)?;
+            }
+        } else {
+            let mut reissue = Vec::new();
+            for o in self.outstanding.drain(..) {
+                match o.kind {
+                    OutstandingKind::Update => self.updates_lost += 1,
+                    OutstandingKind::Sample(n) => reissue.push(n),
+                }
+            }
+            for n in reissue {
+                self.issue_sample(n)?;
             }
         }
+        Ok(())
+    }
+
+    /// Read one response off the wire and pop the request it answers.
+    /// A transport failure runs the supervised reconnect (bounded
+    /// rounds) and retries; an application error pops the request it
+    /// answered and surfaces.
+    fn pump_one(&mut self, mut out: Option<&mut SampleBatch>) -> Result<Pumped> {
+        let mut rounds = 0u32;
+        loop {
+            let front = match self.outstanding.front() {
+                Some(o) => o.kind,
+                None if rounds > 0 => return Ok(Pumped::Dry),
+                None => bail!("internal: sampler pump with no outstanding request"),
+            };
+            let result = match front {
+                OutstandingKind::Update => {
+                    self.client.recv_ok("UpdatePriorities").map(|()| Pumped::Update)
+                }
+                OutstandingKind::Sample(n) => match out.as_deref_mut() {
+                    Some(buf) => self
+                        .client
+                        .recv_sample(buf)
+                        .map(|outcome| Pumped::Sample { n, outcome }),
+                    None => {
+                        let mut scratch = SampleBatch::default();
+                        match self.client.recv_sample(&mut scratch) {
+                            Ok(outcome) => {
+                                self.stashed.push_back((n, outcome, scratch));
+                                Ok(Pumped::Sample { n, outcome })
+                            }
+                            Err(e) => Err(e),
+                        }
+                    }
+                },
+            };
+            match result {
+                Ok(p) => {
+                    self.outstanding.pop_front();
+                    return Ok(p);
+                }
+                Err(e) if is_transport_error(&e) => {
+                    rounds += 1;
+                    if rounds > MAX_RECOVER_ROUNDS {
+                        return Err(e).context(format!(
+                            "sampler could not stabilize the replay connection after \
+                             {MAX_RECOVER_ROUNDS} reconnect rounds"
+                        ));
+                    }
+                    if let Err(re) = self.recover(&e) {
+                        if !is_transport_error(&re) {
+                            return Err(re);
+                        }
+                        // The link flapped during recovery; the next
+                        // round reconnects again.
+                    }
+                }
+                Err(e) => {
+                    self.outstanding.pop_front();
+                    return Err(e);
+                }
+            }
+        }
+    }
+
+    /// Consume every outstanding response and report the last sample
+    /// outcome seen, if any. A `Sampled` outcome here is a batch the
+    /// server granted (and counted) that this client will never use —
+    /// callers that audit exact accounting must tally it.
+    pub fn drain(&mut self) -> Result<Option<SampleOutcome>> {
+        let keep = self.stashed.len();
+        let mut last = None;
+        while !self.outstanding.is_empty() {
+            if let Pumped::Sample { outcome, .. } = self.pump_one(None)? {
+                last = Some(outcome);
+            }
+        }
+        // Batches pumped here were drained, not delivered; report
+        // their outcome but do not hand them to a later `try_sample`.
+        self.stashed.truncate(keep);
+        Ok(last)
     }
 }
 
@@ -494,47 +1098,67 @@ impl ExperienceSampler for RemoteSampler {
             }
             return Ok(outcome);
         }
-        let outcome = match self.inflight.take() {
-            Some(n) => {
-                if n != batch {
-                    bail!(
-                        "pipelined sample batch size changed mid-flight ({n} in flight, \
-                         {batch} requested)"
-                    );
+        loop {
+            if !self
+                .outstanding
+                .iter()
+                .any(|o| matches!(o.kind, OutstandingKind::Sample(_)))
+            {
+                if let Err(e) = self.issue_sample(batch) {
+                    if !is_transport_error(&e) {
+                        return Err(e);
+                    }
                 }
-                self.client.recv_sample(out)?
             }
-            None => {
-                self.client.send_sample(&self.table, batch)?;
-                self.client.recv_sample(out)?
+            match self.pump_one(Some(&mut *out))? {
+                Pumped::Sample { n, outcome } => {
+                    if n != batch {
+                        bail!(
+                            "pipelined sample batch size changed mid-flight ({n} in flight, \
+                             {batch} requested)"
+                        );
+                    }
+                    if outcome == SampleOutcome::Sampled {
+                        self.last_batch = Some(batch);
+                    }
+                    return Ok(outcome);
+                }
+                Pumped::Update | Pumped::Dry => continue,
             }
-        };
-        if outcome == SampleOutcome::Sampled {
-            self.last_batch = Some(batch);
         }
-        Ok(outcome)
     }
 
     fn update_priorities(&mut self, indices: &[usize], td_abs: &[f32]) -> Result<()> {
-        if let Some(n) = self.inflight.take() {
-            // Two updates without a try_sample in between: drain the
-            // in-flight response into the stash queue so the granted
-            // batch is neither lost nor read out of frame order (even
-            // across several consecutive updates).
-            let mut scratch = SampleBatch::default();
-            let outcome = self.client.recv_sample(&mut scratch)?;
-            self.stashed.push_back((n, outcome, scratch));
+        let seq = self.client.alloc_seq();
+        let mut w = ByteWriter::new();
+        proto::encode_update_priorities(&mut w, &self.table, indices, td_abs, seq);
+        self.outstanding
+            .push_back(Outstanding { kind: OutstandingKind::Update, bytes: w.finish() });
+        if let Err(e) = self
+            .client
+            .send_payload(&self.outstanding.back().expect("request just queued").bytes)
+        {
+            if !is_transport_error(&e) {
+                return Err(e);
+            }
         }
-        self.client.send_update(&self.table, indices, td_abs)?;
         if self.prefetch {
             if let Some(n) = self.last_batch {
                 // Written strictly after the update on the same stream:
                 // the server applies the new priorities, then draws.
-                self.client.send_sample(&self.table, n)?;
-                self.inflight = Some(n);
+                if let Err(e) = self.issue_sample(n) {
+                    if !is_transport_error(&e) {
+                        return Err(e);
+                    }
+                }
             }
         }
-        self.client.recv_ok("UpdatePriorities")
+        // Read until this update's ack is in; sample responses reached
+        // along the way (a stale prefetch) land in the stash.
+        while self.outstanding.iter().any(|o| o.kind == OutstandingKind::Update) {
+            self.pump_one(None)?;
+        }
+        Ok(())
     }
 
     fn finish(&mut self) -> Result<()> {

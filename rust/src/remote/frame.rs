@@ -1,12 +1,12 @@
 //! Length-prefixed wire frames for the remote replay protocol.
 //!
-//! One frame = `magic "PALRPC01" (8 bytes) + u32 payload length +
+//! One frame = `magic "PALRPC02" (8 bytes) + u32 payload length +
 //! payload + crc32(payload)` — the same magic/CRC discipline as the
 //! on-disk [`crate::util::blob`] format, adapted to a stream: the
 //! length prefix delimits frames, the trailing CRC catches corruption
 //! in flight, and the magic doubles as the protocol version (a client
-//! speaking a future `PALRPC02` is rejected as a bad magic, not
-//! misparsed).
+//! speaking a different version, like the pre-session `PALRPC01`, is
+//! rejected as a bad magic, not misparsed).
 //!
 //! Every failure mode of [`read_frame`] — truncated stream, wrong
 //! magic, oversized length, checksum mismatch — is a descriptive
@@ -19,8 +19,10 @@ use crate::util::blob::crc32;
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
 
-/// Frame magic; the trailing `01` is the protocol version.
-pub const FRAME_MAGIC: &[u8; 8] = b"PALRPC01";
+/// Frame magic; the trailing `02` is the protocol version (bumped from
+/// `01` when sessions and request sequence numbers joined the payload
+/// layouts).
+pub const FRAME_MAGIC: &[u8; 8] = b"PALRPC02";
 
 /// Upper bound on one frame's payload. Large enough for a checkpointed
 /// service of realistic size (`Checkpoint`/`Restore` frames carry whole

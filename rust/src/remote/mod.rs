@@ -8,18 +8,23 @@
 //! frames in the same magic/CRC discipline as the on-disk
 //! [`crate::util::blob`] format.
 //!
-//! * [`frame`] — wire framing (`PALRPC01` magic + length + payload +
+//! * [`frame`] — wire framing (`PALRPC02` magic + length + payload +
 //!   crc32); every malformed input is a descriptive error, never a
 //!   panic.
-//! * [`proto`] — the RPC surface: `Append`, `Sample`,
+//! * [`proto`] — the RPC surface: `Hello`, `Append`, `Sample`,
 //!   `UpdatePriorities`, `Stats`, `Checkpoint`, `Restore`, `Shutdown`.
-//! * [`server`] — [`ReplayServer`]: accept loop + per-connection
-//!   server-side writers and sampling RNGs.
+//! * [`server`] — [`ReplayServer`]: accept loop + resumable sessions
+//!   (server-side writers, sampling RNGs, request-sequence reply
+//!   caches).
 //! * [`client`] — [`RemoteClient`] plus the [`RemoteWriter`] /
 //!   [`RemoteSampler`] handles implementing
 //!   [`crate::service::ExperienceWriter`] /
 //!   [`crate::service::ExperienceSampler`], so `actor.rs` /
 //!   `learner.rs` switch transports at the trait level only.
+//! * [`backoff`] — the shared reconnect schedule (exponential, seeded
+//!   jitter, overall deadline) every supervised handle retries under.
+//! * [`chaos`] — a seeded fault-injecting proxy ([`ChaosProxy`]) for
+//!   the chaos soaks and the CI restart drill.
 //!
 //! Rate limiters keep their semantics across the wire: a stalled
 //! sample is a retriable `WouldStall` frame, a stalled insert a short
@@ -32,13 +37,27 @@
 //! the client allocates nothing per RPC in steady state; the server
 //! allocates only the owned `WriterStep`s an `Append` delivers into
 //! storage (`benches/fig_remote.rs` measures all of it).
+//!
+//! And it is built to survive faults: every connection is supervised
+//! (backoff + deadline reconnects), every session is resumable, and
+//! sequenced requests are exactly-once across reconnects via the
+//! server's reply cache — see the module docs of [`client`] and
+//! [`server`] for the contract, and [`chaos`] for how it is tortured
+//! in CI.
 
+pub mod backoff;
+pub mod chaos;
 pub mod client;
 pub mod frame;
 pub mod proto;
 pub mod server;
 
-pub use client::{RemoteClient, RemoteSampler, RemoteWriter, DEFAULT_REMOTE_BATCH};
+pub use backoff::{Backoff, BackoffPolicy};
+pub use chaos::{ChaosConfig, ChaosProxy};
+pub use client::{
+    ConnectionPolicy, RemoteClient, RemoteSampler, RemoteWriter, DEFAULT_REMOTE_BATCH,
+    DEFAULT_RPC_TIMEOUT, DEFAULT_SPILL_CAP,
+};
 pub use frame::{read_frame, read_frame_into, write_frame, FRAME_MAGIC, MAX_FRAME_LEN};
 pub use proto::{Request, Response, StallReason, TableInfo};
 pub use server::ReplayServer;

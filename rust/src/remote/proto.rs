@@ -21,6 +21,22 @@
 //! stalled sample (or an insert batch the limiter only partially
 //! admits) is a [`Response::WouldStall`] / short [`Response::Appended`]
 //! frame the client polls on, never a blocked connection.
+//!
+//! ## Sessions and exactly-once requests
+//!
+//! `Hello` carries a session id (0 = "start fresh"); the server answers
+//! with the session it bound — `resumed` says whether server-side state
+//! (the per-actor [`crate::service::TrajectoryWriter`] assembly windows,
+//! the sampling RNG, the reply cache) survived from a previous
+//! connection. The mutating RPCs (`Append`, `Sample`,
+//! `UpdatePriorities`) carry a session-scoped sequence number (`seq`,
+//! starting at 1; `seq == 0` opts out of sequencing): the server
+//! executes each sequence number at most once and caches the encoded
+//! reply, so a client that re-sends an unacked request after a
+//! reconnect either gets the cached reply verbatim (the request DID
+//! execute before the link died) or a fresh execution — never a
+//! double-apply. This is what makes reconnecting writers exactly-once:
+//! replayed appends dedupe instead of double-inserting.
 
 use crate::replay::SampleBatch;
 use crate::service::{TableStatsSnapshot, WriterStep};
@@ -69,22 +85,33 @@ pub enum StallReason {
 /// One request frame, client → server.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
-    /// Seed this connection's server-side sampling RNG. Optional; a
-    /// connection that never says hello samples from a seed derived
-    /// from its connection id. With a fixed seed, a remote
-    /// `Sample`/`UpdatePriorities` loop is bit-reproducible against an
-    /// in-process [`crate::service::SamplerHandle`] loop using
-    /// `Rng::new(seed)` on the same table contents.
-    Hello { rng_seed: u64 },
+    /// Bind (or resume) a server-side session and seed its sampling
+    /// RNG. `session == 0` asks for a fresh session; a non-zero id from
+    /// a previous [`Response::Hello`] asks to resume that session's
+    /// state (writer assembly windows, RNG stream, reply cache). An
+    /// unknown or evicted id is not an error — the server hands back a
+    /// fresh session with `resumed == false` (this is exactly the
+    /// server-restart path). A connection that never says hello gets a
+    /// non-resumable session seeded from its connection id. With a
+    /// fixed seed, a remote `Sample`/`UpdatePriorities` loop is
+    /// bit-reproducible against an in-process
+    /// [`crate::service::SamplerHandle`] loop using `Rng::new(seed)` on
+    /// the same table contents.
+    Hello { rng_seed: u64, session: u64 },
     /// Append raw env steps for one actor; the server-side
     /// [`crate::service::TrajectoryWriter`] owns item assembly (N-step
     /// folding, sequence windows, boundary rules) so remote actors get
-    /// byte-identical items to local ones.
-    Append { actor_id: u64, steps: Vec<WriterStep> },
-    /// Draw one batch from a named table.
-    Sample { table: String, batch: u32 },
-    /// Feed |TD| errors back for previously sampled indices.
-    UpdatePriorities { table: String, indices: Vec<u64>, td_abs: Vec<f32> },
+    /// byte-identical items to local ones. `seq` is the session request
+    /// sequence (0 = unsequenced); `dropped` reports how many steps the
+    /// client spilled and dropped client-side since its last acked
+    /// append (a delta, folded into the `steps_dropped` stat
+    /// exactly-once by the reply cache).
+    Append { actor_id: u64, seq: u64, dropped: u64, steps: Vec<WriterStep> },
+    /// Draw one batch from a named table (`seq` as in `Append`).
+    Sample { table: String, batch: u32, seq: u64 },
+    /// Feed |TD| errors back for previously sampled indices (`seq` as
+    /// in `Append`).
+    UpdatePriorities { table: String, indices: Vec<u64>, td_abs: Vec<f32>, seq: u64 },
     /// Per-table sizes and counters.
     Stats,
     /// Serialize the whole service (a `ServiceState` payload).
@@ -104,8 +131,10 @@ pub enum Response {
     Ok,
     /// `Hello` acknowledged; carries the server's default (first) table
     /// name so a sampler can bind to it without a separate `Stats`
-    /// round-trip.
-    Hello { default_table: String },
+    /// round-trip, plus the bound session: its id (quote it in the next
+    /// `Hello` to resume), whether prior state was `resumed`, and the
+    /// next request sequence number the server expects.
+    Hello { default_table: String, session: u64, resumed: bool, next_seq: u64 },
     /// `Append` outcome: the first `consumed` steps were applied (the
     /// rest hit a rate-limiter stall — retriable), emitting `emitted`
     /// items across the tables.
@@ -147,10 +176,14 @@ fn encode_step(w: &mut ByteWriter, s: &WriterStep) {
 pub fn encode_append<'a>(
     w: &mut ByteWriter,
     actor_id: u64,
+    seq: u64,
+    dropped: u64,
     steps: impl ExactSizeIterator<Item = &'a WriterStep>,
 ) {
     w.u8(OP_APPEND);
     w.u64(actor_id);
+    w.u64(seq);
+    w.u64(dropped);
     w.u32(steps.len() as u32);
     for s in steps {
         encode_step(w, s);
@@ -158,10 +191,11 @@ pub fn encode_append<'a>(
 }
 
 /// Encode a `Sample` request without cloning the table name.
-pub fn encode_sample(w: &mut ByteWriter, table: &str, batch: u32) {
+pub fn encode_sample(w: &mut ByteWriter, table: &str, batch: u32, seq: u64) {
     w.u8(OP_SAMPLE);
     w.str_(table);
     w.u32(batch);
+    w.u64(seq);
 }
 
 /// Encode an `UpdatePriorities` request straight from the learner's
@@ -171,8 +205,9 @@ pub fn encode_update_priorities(
     table: &str,
     indices: &[usize],
     td_abs: &[f32],
+    seq: u64,
 ) {
-    encode_update_raw(w, table, indices.iter().map(|&i| i as u64), td_abs);
+    encode_update_raw(w, table, indices.iter().map(|&i| i as u64), td_abs, seq);
 }
 
 /// The one definition of the `UpdatePriorities` wire layout; both the
@@ -183,6 +218,7 @@ fn encode_update_raw(
     table: &str,
     indices: impl ExactSizeIterator<Item = u64>,
     td_abs: &[f32],
+    seq: u64,
 ) {
     w.u8(OP_UPDATE_PRIORITIES);
     w.str_(table);
@@ -191,6 +227,7 @@ fn encode_update_raw(
         w.u64(i);
     }
     w.f32s(td_abs);
+    w.u64(seq);
 }
 
 fn decode_step(r: &mut ByteReader) -> Result<WriterStep> {
@@ -328,14 +365,17 @@ impl Request {
     /// Encode into a caller-owned (typically reused) [`ByteWriter`].
     pub fn encode_into(&self, w: &mut ByteWriter) {
         match self {
-            Request::Hello { rng_seed } => {
+            Request::Hello { rng_seed, session } => {
                 w.u8(OP_HELLO);
                 w.u64(*rng_seed);
+                w.u64(*session);
             }
-            Request::Append { actor_id, steps } => encode_append(w, *actor_id, steps.iter()),
-            Request::Sample { table, batch } => encode_sample(w, table, *batch),
-            Request::UpdatePriorities { table, indices, td_abs } => {
-                encode_update_raw(w, table, indices.iter().copied(), td_abs)
+            Request::Append { actor_id, seq, dropped, steps } => {
+                encode_append(w, *actor_id, *seq, *dropped, steps.iter())
+            }
+            Request::Sample { table, batch, seq } => encode_sample(w, table, *batch, *seq),
+            Request::UpdatePriorities { table, indices, td_abs, seq } => {
+                encode_update_raw(w, table, indices.iter().copied(), td_abs, *seq)
             }
             Request::Stats => w.u8(OP_STATS),
             Request::Checkpoint => w.u8(OP_CHECKPOINT),
@@ -351,9 +391,13 @@ impl Request {
         let mut r = ByteReader::new(payload);
         let op = r.u8("request opcode")?;
         let req = match op {
-            OP_HELLO => Request::Hello { rng_seed: r.u64("rng seed")? },
+            OP_HELLO => {
+                Request::Hello { rng_seed: r.u64("rng seed")?, session: r.u64("session id")? }
+            }
             OP_APPEND => {
                 let actor_id = r.u64("actor id")?;
+                let seq = r.u64("request seq")?;
+                let dropped = r.u64("dropped count")?;
                 let count = r.u32("step count")? as usize;
                 if count > MAX_APPEND_STEPS {
                     bail!("append claims {count} steps (protocol cap {MAX_APPEND_STEPS})");
@@ -362,7 +406,7 @@ impl Request {
                 for _ in 0..count {
                     steps.push(decode_step(&mut r)?);
                 }
-                Request::Append { actor_id, steps }
+                Request::Append { actor_id, seq, dropped, steps }
             }
             OP_SAMPLE => {
                 let table = r.str_("table name")?;
@@ -370,7 +414,7 @@ impl Request {
                 if batch == 0 || batch as usize > MAX_SAMPLE_BATCH {
                     bail!("sample batch {batch} out of range [1, {MAX_SAMPLE_BATCH}]");
                 }
-                Request::Sample { table, batch }
+                Request::Sample { table, batch, seq: r.u64("request seq")? }
             }
             OP_UPDATE_PRIORITIES => {
                 let table = r.str_("table name")?;
@@ -389,7 +433,7 @@ impl Request {
                         td_abs.len()
                     );
                 }
-                Request::UpdatePriorities { table, indices, td_abs }
+                Request::UpdatePriorities { table, indices, td_abs, seq: r.u64("request seq")? }
             }
             OP_STATS => Request::Stats,
             OP_CHECKPOINT => Request::Checkpoint,
@@ -413,9 +457,12 @@ impl Response {
     pub fn encode_into(&self, w: &mut ByteWriter) {
         match self {
             Response::Ok => w.u8(RESP_OK),
-            Response::Hello { default_table } => {
+            Response::Hello { default_table, session, resumed, next_seq } => {
                 w.u8(RESP_HELLO);
                 w.str_(default_table);
+                w.u64(*session);
+                w.u8(*resumed as u8);
+                w.u64(*next_seq);
             }
             Response::Appended { consumed, emitted } => {
                 w.u8(RESP_APPENDED);
@@ -443,6 +490,7 @@ impl Response {
                     w.u64(t.stats.priority_updates as u64);
                     w.u64(t.stats.insert_stalls as u64);
                     w.u64(t.stats.sample_stalls as u64);
+                    w.u64(t.stats.steps_dropped as u64);
                 }
             }
             Response::State { state } => {
@@ -461,7 +509,12 @@ impl Response {
         let op = r.u8("response opcode")?;
         let resp = match op {
             RESP_OK => Response::Ok,
-            RESP_HELLO => Response::Hello { default_table: r.str_("default table name")? },
+            RESP_HELLO => Response::Hello {
+                default_table: r.str_("default table name")?,
+                session: r.u64("session id")?,
+                resumed: r.u8("resumed flag")? != 0,
+                next_seq: r.u64("next seq")?,
+            },
             RESP_APPENDED => Response::Appended {
                 consumed: r.u32("consumed count")?,
                 emitted: r.u32("emitted count")?,
@@ -493,6 +546,7 @@ impl Response {
                             priority_updates: r.u64("priority_updates")? as usize,
                             insert_stalls: r.u64("insert_stalls")? as usize,
                             sample_stalls: r.u64("sample_stalls")? as usize,
+                            steps_dropped: r.u64("steps_dropped")? as usize,
                         },
                     });
                 }
@@ -525,14 +579,16 @@ mod tests {
     #[test]
     fn every_request_roundtrips() {
         let reqs = vec![
-            Request::Hello { rng_seed: 0xDEAD_BEEF },
-            Request::Append { actor_id: 3, steps: vec![step(0), step(1)] },
-            Request::Append { actor_id: 0, steps: vec![] },
-            Request::Sample { table: "replay".into(), batch: 32 },
+            Request::Hello { rng_seed: 0xDEAD_BEEF, session: 0 },
+            Request::Hello { rng_seed: 1, session: 0xFEED_F00D },
+            Request::Append { actor_id: 3, seq: 7, dropped: 0, steps: vec![step(0), step(1)] },
+            Request::Append { actor_id: 0, seq: 0, dropped: 12, steps: vec![] },
+            Request::Sample { table: "replay".into(), batch: 32, seq: 9 },
             Request::UpdatePriorities {
                 table: "replay".into(),
                 indices: vec![0, 7, 1 << 40],
                 td_abs: vec![0.1, 2.0, 0.0],
+                seq: 10,
             },
             Request::Stats,
             Request::Checkpoint,
@@ -559,7 +615,18 @@ mod tests {
         };
         let resps = vec![
             Response::Ok,
-            Response::Hello { default_table: "replay".into() },
+            Response::Hello {
+                default_table: "replay".into(),
+                session: 0xABCD,
+                resumed: true,
+                next_seq: 42,
+            },
+            Response::Hello {
+                default_table: "replay".into(),
+                session: 1,
+                resumed: false,
+                next_seq: 1,
+            },
             Response::Appended { consumed: 5, emitted: 9 },
             Response::Sampled(batch),
             Response::WouldStall { reason: StallReason::Throttled },
@@ -576,6 +643,7 @@ mod tests {
                         priority_updates: 384,
                         insert_stalls: 3,
                         sample_stalls: 9,
+                        steps_dropped: 4,
                     },
                 }],
             },
@@ -597,9 +665,25 @@ mod tests {
         assert!(Request::decode(&[]).is_err());
         assert!(Response::decode(&[]).is_err());
         // Truncated mid-field.
-        let full = Request::Append { actor_id: 1, steps: vec![step(0)] }.encode();
+        let full =
+            Request::Append { actor_id: 1, seq: 3, dropped: 0, steps: vec![step(0)] }.encode();
         for cut in 1..full.len() {
             assert!(Request::decode(&full[..cut]).is_err(), "cut at {cut}");
+        }
+        // Truncated session-resume Hello: every cut must error.
+        let hello = Request::Hello { rng_seed: 0x1234, session: 0x5678 }.encode();
+        for cut in 1..hello.len() {
+            assert!(Request::decode(&hello[..cut]).is_err(), "hello cut at {cut}");
+        }
+        let hello_resp = Response::Hello {
+            default_table: "replay".into(),
+            session: 0x9ABC,
+            resumed: true,
+            next_seq: 17,
+        }
+        .encode();
+        for cut in 1..hello_resp.len() {
+            assert!(Response::decode(&hello_resp[..cut]).is_err(), "hello resp cut at {cut}");
         }
         // Trailing garbage after a valid request.
         let mut padded = Request::Stats.encode();
@@ -611,10 +695,11 @@ mod tests {
         w.str_("replay");
         w.u64s(&[1, 2, 3]);
         w.f32s(&[0.5]);
+        w.u64(1);
         let err = Request::decode(&w.finish()).unwrap_err().to_string();
         assert!(err.contains("3 indices"), "{err}");
         // Zero-batch sample.
-        let zero = Request::Sample { table: "t".into(), batch: 0 }.encode();
+        let zero = Request::Sample { table: "t".into(), batch: 0, seq: 1 }.encode();
         assert!(Request::decode(&zero).is_err());
     }
 
@@ -623,6 +708,8 @@ mod tests {
         for (done, truncated) in [(false, false), (true, false), (false, true), (true, true)] {
             let req = Request::Append {
                 actor_id: 0,
+                seq: 0,
+                dropped: 0,
                 steps: vec![WriterStep { done, truncated, ..step(1) }],
             };
             match Request::decode(&req.encode()).unwrap() {

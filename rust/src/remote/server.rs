@@ -2,11 +2,29 @@
 //! [`ReplayService`] (Reverb's `reverb.Server` shape, std-only).
 //!
 //! One accept loop, one detached thread per connection. Each
-//! connection owns its server-side state: a sampling RNG (seeded by
-//! the client's `Hello`, or from the connection id) and one
-//! [`TrajectoryWriter`] per actor id, so remote actors get the same
+//! connection binds a server-side *session*: a sampling RNG (seeded by
+//! the client's `Hello`, or from the connection id), one
+//! [`TrajectoryWriter`] per actor id — so remote actors get the same
 //! item assembly (N-step folding, sequence windows, boundary rules) as
-//! local ones and sharded tables keep their actor-affinity routing.
+//! local ones and sharded tables keep their actor-affinity routing —
+//! plus the session's request-sequence state and reply cache.
+//!
+//! # Sessions and exactly-once requests
+//!
+//! A `Hello` with `session == 0` registers a fresh session and returns
+//! its id; a reconnecting client quotes that id and, if the session is
+//! still registered (it survives a dropped connection, with a TTL),
+//! reattaches to ALL of its state: the sampling RNG stream continues,
+//! per-actor `TrajectoryWriter` assembly windows reattach instead of
+//! resetting, and the reply cache dedupes replayed requests. The
+//! mutating RPCs carry a session-scoped sequence number: the server
+//! executes each number once, caches the encoded reply, and answers a
+//! replay (a request the client re-sent because the link died before
+//! the ack arrived) from the cache verbatim — an append can therefore
+//! never double-insert across reconnects. An unknown or expired
+//! session id simply binds a fresh session (`resumed == false` in the
+//! response) — the server-restart path, where clients re-send all
+//! unacked work under new sequence numbers.
 //!
 //! # Failure semantics
 //!
@@ -33,12 +51,12 @@ use crate::service::{ReplayService, SampleOutcome, ServiceState, TrajectoryWrite
 use crate::util::blob::ByteWriter;
 use crate::util::rng::Rng;
 use anyhow::{bail, Context, Result};
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 /// Decrements the server's live-connection count when a connection
 /// thread exits by any path (EOF, protocol error, shutdown, panic).
@@ -50,11 +68,121 @@ impl Drop for ConnGuard {
     }
 }
 
-/// Most distinct actor ids one connection may write for. Every other
+/// Most distinct actor ids one session may write for. Every other
 /// hostile count in the protocol is bounded; this bounds the
 /// server-side writer map (a buggy client passing a step counter as
 /// its actor id would otherwise grow it without limit).
 pub const MAX_WRITERS_PER_CONN: usize = 1_024;
+
+/// Most registered sessions the server keeps; past this, the oldest
+/// detached session is evicted to make room.
+pub const MAX_SESSIONS: usize = 4_096;
+
+/// How long a detached session's state survives before it may be
+/// evicted (a reconnect after this binds a fresh session).
+pub const SESSION_TTL: Duration = Duration::from_secs(900);
+
+/// Encoded replies kept per session for request dedupe. Deeper than
+/// any client's in-flight pipeline (the sampler keeps at most 2
+/// requests outstanding, the writer 1).
+pub const REPLY_CACHE_DEPTH: usize = 8;
+
+/// The default bound on the post-stop connection drain (override with
+/// [`ReplayServer::with_drain_deadline`] / `pal serve --drain-deadline`).
+pub const DEFAULT_DRAIN_DEADLINE: Duration = Duration::from_secs(5);
+
+/// One session's server-side state. Owned by the registry (detached
+/// sessions keep it alive for [`SESSION_TTL`]); a connection locks it
+/// per request.
+struct Session {
+    id: u64,
+    rng: Rng,
+    writers: HashMap<u64, TrajectoryWriter>,
+    /// Next expected sequenced-request number (sequenced requests start
+    /// at 1; `seq == 0` opts out of sequencing).
+    next_seq: u64,
+    /// Encoded replies of the most recent sequenced requests, for
+    /// replay dedupe.
+    replies: VecDeque<(u64, Vec<u8>)>,
+}
+
+impl Session {
+    fn new(id: u64, seed: u64) -> Self {
+        Self {
+            id,
+            rng: Rng::new(seed),
+            writers: HashMap::new(),
+            next_seq: 1,
+            replies: VecDeque::new(),
+        }
+    }
+}
+
+struct SessionEntry {
+    slot: Arc<Mutex<Session>>,
+    last_seen: Instant,
+}
+
+/// Registry of resumable sessions. Ids mix a per-boot nonce with a
+/// counter so a restarted server can never wrongly resume a session id
+/// minted by a previous incarnation.
+struct SessionRegistry {
+    inner: Mutex<HashMap<u64, SessionEntry>>,
+    next: AtomicU64,
+}
+
+impl SessionRegistry {
+    fn new() -> Self {
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap_or_default()
+            .as_nanos() as u64;
+        let nonce = nanos ^ ((std::process::id() as u64) << 32);
+        // Odd base + even strides keeps every id odd, hence nonzero
+        // (0 means "fresh" on the wire).
+        Self { inner: Mutex::new(HashMap::new()), next: AtomicU64::new(nonce | 1) }
+    }
+
+    /// Bind a `Hello`: resume `requested` if it is still registered,
+    /// else mint a fresh session seeded with `seed`. Returns the slot
+    /// and whether prior state was resumed.
+    fn hello(&self, requested: u64, seed: u64) -> (Arc<Mutex<Session>>, bool) {
+        let mut map = self.inner.lock().expect("session registry poisoned");
+        let now = Instant::now();
+        // Evict expired detached sessions (attached slots have a second
+        // Arc holder: the connection).
+        map.retain(|_, e| {
+            Arc::strong_count(&e.slot) > 1 || now.duration_since(e.last_seen) < SESSION_TTL
+        });
+        if requested != 0 {
+            if let Some(e) = map.get_mut(&requested) {
+                e.last_seen = now;
+                return (Arc::clone(&e.slot), true);
+            }
+        }
+        if map.len() >= MAX_SESSIONS {
+            let oldest = map
+                .iter()
+                .filter(|(_, e)| Arc::strong_count(&e.slot) == 1)
+                .min_by_key(|(_, e)| e.last_seen)
+                .map(|(&id, _)| id);
+            if let Some(id) = oldest {
+                map.remove(&id);
+            }
+        }
+        let id = self.next.fetch_add(2, Ordering::Relaxed);
+        let slot = Arc::new(Mutex::new(Session::new(id, seed)));
+        map.insert(id, SessionEntry { slot: Arc::clone(&slot), last_seen: now });
+        (slot, false)
+    }
+
+    /// Record detach time so the TTL measures time since last use.
+    fn touch(&self, id: u64) {
+        if let Some(e) = self.inner.lock().expect("session registry poisoned").get_mut(&id) {
+            e.last_seen = Instant::now();
+        }
+    }
+}
 
 /// A bound replay server. [`Self::serve`] runs the accept loop until a
 /// client sends `Shutdown` (or [`Self::stop_handle`] is flipped).
@@ -69,6 +197,8 @@ pub struct ReplayServer {
     /// steps are rejected with a descriptive error on mismatch instead
     /// of silently truncating/padding rows in storage.
     dims: Option<(usize, usize)>,
+    sessions: Arc<SessionRegistry>,
+    drain_deadline: Duration,
 }
 
 impl ReplayServer {
@@ -111,7 +241,16 @@ impl ReplayServer {
             active: Arc::new(AtomicUsize::new(0)),
             seed,
             dims: None,
+            sessions: Arc::new(SessionRegistry::new()),
+            drain_deadline: DEFAULT_DRAIN_DEADLINE,
         })
+    }
+
+    /// Bound the post-stop wait for open connections to drain (`pal
+    /// serve --drain-deadline`).
+    pub fn with_drain_deadline(mut self, deadline: Duration) -> Self {
+        self.drain_deadline = deadline;
+        self
     }
 
     /// Enforce base step dims on every `Append` (what `pal serve`'s
@@ -149,12 +288,13 @@ impl ReplayServer {
                     let guard = ConnGuard(Arc::clone(&self.active));
                     self.active.fetch_add(1, Ordering::Acquire);
                     let dims = self.dims;
+                    let sessions = Arc::clone(&self.sessions);
                     let seed = self
                         .seed
                         .wrapping_add(conn_id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
                     std::thread::spawn(move || {
                         let _guard = guard;
-                        handle_connection(service, stream, seed, stop, dims);
+                        handle_connection(service, stream, seed, stop, dims, sessions);
                     });
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -170,9 +310,9 @@ impl ReplayServer {
         // Drain: clients that quiesced before Shutdown disconnect
         // promptly; an idle client parked in a blocking read cannot be
         // joined, so the wait is bounded and reported.
-        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        let deadline = Instant::now() + self.drain_deadline;
         while self.active.load(Ordering::Acquire) > 0 {
-            if std::time::Instant::now() >= deadline {
+            if Instant::now() >= deadline {
                 eprintln!(
                     "[pal] WARNING: {} connection(s) still open at shutdown; \
                      a concurrent state capture may miss their in-flight requests",
@@ -198,12 +338,16 @@ fn handle_connection(
     seed: u64,
     stop: Arc<AtomicBool>,
     dims: Option<(usize, usize)>,
+    sessions: Arc<SessionRegistry>,
 ) {
     // Accepted sockets may inherit the listener's non-blocking mode;
     // connection I/O is plain blocking reads.
     let _ = stream.set_nonblocking(false);
-    let mut rng = Rng::new(seed);
-    let mut writers: HashMap<u64, TrajectoryWriter> = HashMap::new();
+    // Until (unless) the client says Hello, the connection runs on an
+    // implicit session: same state shape, but unregistered — it dies
+    // with the connection, exactly the pre-session behavior.
+    let mut session: Arc<Mutex<Session>> = Arc::new(Mutex::new(Session::new(0, seed)));
+    let mut registered = 0u64;
     let mut scratch = SampleBatch::default();
     let mut rbuf: Vec<u8> = Vec::new();
     let mut enc = ByteWriter::new();
@@ -231,8 +375,25 @@ fn handle_connection(
                 Response::Ok.encode_into(&mut enc);
                 shutdown = true;
             }
+            Ok(Request::Hello { rng_seed, session: requested }) => {
+                let (slot, resumed) = sessions.hello(requested, rng_seed);
+                let (id, next_seq) = {
+                    let s = slot.lock().expect("session poisoned");
+                    (s.id, s.next_seq)
+                };
+                session = slot;
+                registered = id;
+                Response::Hello {
+                    default_table: service.default_table().name().to_string(),
+                    session: id,
+                    resumed,
+                    next_seq,
+                }
+                .encode_into(&mut enc);
+            }
             Ok(req) => {
-                dispatch_into(&service, &mut writers, &mut rng, &mut scratch, dims, req, &mut enc)
+                let mut s = session.lock().expect("session poisoned");
+                dispatch_into(&service, &mut s, &mut scratch, dims, req, &mut enc)
             }
         }
         if shutdown {
@@ -247,6 +408,11 @@ fn handle_connection(
             break;
         }
     }
+    if registered != 0 {
+        // Stamp detach time so the session TTL measures idleness, not
+        // age.
+        sessions.touch(registered);
+    }
 }
 
 /// Apply one decoded request against the service, encoding the
@@ -254,33 +420,86 @@ fn handle_connection(
 /// an encoded [`Response::Error`], so a hostile request can never take
 /// the connection thread down. The `Sampled` hot path encodes the
 /// scratch batch directly (no clone, no `Response` value).
+///
+/// Sequenced requests (`seq > 0`) pass the session's exactly-once
+/// gate first: in-order requests execute and their encoded reply is
+/// cached; a replayed number answers from the cache verbatim (no
+/// re-execution); a number older than the cache window or ahead of the
+/// expected one is a descriptive error.
 fn dispatch_into(
     service: &Arc<ReplayService>,
-    writers: &mut HashMap<u64, TrajectoryWriter>,
-    rng: &mut Rng,
+    session: &mut Session,
     scratch: &mut SampleBatch,
     dims: Option<(usize, usize)>,
     req: Request,
     enc: &mut ByteWriter,
 ) {
-    if let Request::Sample { table, batch } = &req {
+    let seq = match &req {
+        Request::Append { seq, .. }
+        | Request::Sample { seq, .. }
+        | Request::UpdatePriorities { seq, .. }
+            if *seq > 0 =>
+        {
+            Some(*seq)
+        }
+        _ => None,
+    };
+    if let Some(seq) = seq {
+        if seq < session.next_seq {
+            if let Some((_, bytes)) = session.replies.iter().find(|(s, _)| *s == seq) {
+                enc.raw(bytes);
+            } else {
+                Response::Error {
+                    message: format!(
+                        "stale request seq {seq}: session expects {} and the reply \
+                         cache no longer holds it",
+                        session.next_seq
+                    ),
+                }
+                .encode_into(enc);
+            }
+            return;
+        }
+        if seq > session.next_seq {
+            Response::Error {
+                message: format!(
+                    "request seq gap: got {seq}, session expects {} (requests lost \
+                     or reordered)",
+                    session.next_seq
+                ),
+            }
+            .encode_into(enc);
+            return;
+        }
+    }
+    if let Request::Sample { table, batch, .. } = &req {
         match service.sampler(table) {
             None => {
                 Response::Error { message: format!("unknown table `{table}`") }.encode_into(enc)
             }
-            Some(sampler) => match sampler.try_sample(*batch as usize, rng, scratch) {
-                SampleOutcome::Sampled => proto::encode_sampled(enc, scratch),
-                SampleOutcome::Throttled => {
-                    Response::WouldStall { reason: StallReason::Throttled }.encode_into(enc)
+            Some(sampler) => {
+                match sampler.try_sample(*batch as usize, &mut session.rng, scratch) {
+                    SampleOutcome::Sampled => proto::encode_sampled(enc, scratch),
+                    SampleOutcome::Throttled => {
+                        Response::WouldStall { reason: StallReason::Throttled }.encode_into(enc)
+                    }
+                    SampleOutcome::NotEnoughData => {
+                        Response::WouldStall { reason: StallReason::NotEnoughData }
+                            .encode_into(enc)
+                    }
                 }
-                SampleOutcome::NotEnoughData => {
-                    Response::WouldStall { reason: StallReason::NotEnoughData }.encode_into(enc)
-                }
-            },
+            }
         }
-        return;
+    } else {
+        dispatch_cold(service, session, dims, req).encode_into(enc);
     }
-    dispatch_cold(service, writers, rng, dims, req).encode_into(enc);
+    if let Some(seq) = seq {
+        session.next_seq = seq + 1;
+        session.replies.push_back((seq, enc.as_slice().to_vec()));
+        while session.replies.len() > REPLY_CACHE_DEPTH {
+            session.replies.pop_front();
+        }
+    }
 }
 
 /// The non-`Sample` requests, as plain response values (their payloads
@@ -288,17 +507,26 @@ fn dispatch_into(
 /// nothing that matters).
 fn dispatch_cold(
     service: &Arc<ReplayService>,
-    writers: &mut HashMap<u64, TrajectoryWriter>,
-    rng: &mut Rng,
+    session: &mut Session,
     dims: Option<(usize, usize)>,
     req: Request,
 ) -> Response {
     match req {
-        Request::Hello { rng_seed } => {
-            *rng = Rng::new(rng_seed);
-            Response::Hello { default_table: service.default_table().name().to_string() }
-        }
-        Request::Append { actor_id, steps } => {
+        // Session binding happens in the connection loop (it swaps the
+        // session slot itself); reaching here means a decoder bug.
+        Request::Hello { .. } => Response::Error {
+            message: "internal: Hello reached the dispatch path".to_string(),
+        },
+        Request::Append { actor_id, seq: _, dropped, steps } => {
+            // A client reporting spill-queue drops folds the delta into
+            // server-side stats even when the limiter admits nothing:
+            // the reply (cached under this request's seq) is the ack, so
+            // the count is applied exactly once.
+            if dropped > 0 {
+                for t in service.tables() {
+                    t.add_steps_dropped(dropped as usize);
+                }
+            }
             // Validate the WHOLE batch before applying any of it, so a
             // malformed batch never half-applies. Without declared dims
             // only self-consistency is checkable; with them a
@@ -325,15 +553,18 @@ fn dispatch_cold(
                     };
                 }
             }
-            if !writers.contains_key(&actor_id) && writers.len() >= MAX_WRITERS_PER_CONN {
+            if !session.writers.contains_key(&actor_id)
+                && session.writers.len() >= MAX_WRITERS_PER_CONN
+            {
                 return Response::Error {
                     message: format!(
-                        "connection already writes for {MAX_WRITERS_PER_CONN} distinct \
+                        "session already writes for {MAX_WRITERS_PER_CONN} distinct \
                          actor ids — actor id {actor_id} rejected (buggy id generation?)"
                     ),
                 };
             }
-            let writer = writers
+            let writer = session
+                .writers
                 .entry(actor_id)
                 .or_insert_with(|| service.writer(actor_id as usize));
             let mut consumed = 0u32;
@@ -352,7 +583,8 @@ fn dispatch_cold(
         }
         // Handled by the hot path in `dispatch_into`.
         Request::Sample { .. } => unreachable!("Sample is dispatched before the cold path"),
-        Request::UpdatePriorities { table, indices, td_abs } => match service.table(&table) {
+        Request::UpdatePriorities { table, indices, td_abs, seq: _ } => match service.table(&table)
+        {
             None => Response::Error { message: format!("unknown table `{table}`") },
             Some(t) => {
                 let cap = t.capacity() as u64;
@@ -427,14 +659,13 @@ mod tests {
     /// decoded `Response` (what tests assert on).
     fn dispatch(
         service: &Arc<ReplayService>,
-        writers: &mut HashMap<u64, TrajectoryWriter>,
-        rng: &mut Rng,
+        session: &mut Session,
         scratch: &mut SampleBatch,
         dims: Option<(usize, usize)>,
         req: Request,
     ) -> Response {
         let mut enc = ByteWriter::new();
-        dispatch_into(service, writers, rng, scratch, dims, req, &mut enc);
+        dispatch_into(service, session, scratch, dims, req, &mut enc);
         Response::decode(enc.as_slice()).expect("dispatch must encode a decodable response")
     }
 
@@ -473,20 +704,19 @@ mod tests {
     #[test]
     fn dispatch_rejects_hostile_priority_updates() {
         let service = tiny_service();
-        let mut writers = HashMap::new();
-        let mut rng = Rng::new(1);
+        let mut session = Session::new(0, 1);
         let mut scratch = SampleBatch::default();
         // Out-of-range index.
         let resp = dispatch(
             &service,
-            &mut writers,
-            &mut rng,
+            &mut session,
             &mut scratch,
             None,
             Request::UpdatePriorities {
                 table: "replay".into(),
                 indices: vec![1 << 50],
                 td_abs: vec![1.0],
+                seq: 0,
             },
         );
         match resp {
@@ -496,25 +726,24 @@ mod tests {
         // Non-finite priority.
         let resp = dispatch(
             &service,
-            &mut writers,
-            &mut rng,
+            &mut session,
             &mut scratch,
             None,
             Request::UpdatePriorities {
                 table: "replay".into(),
                 indices: vec![0],
                 td_abs: vec![f32::NAN],
+                seq: 0,
             },
         );
         assert!(matches!(resp, Response::Error { .. }));
         // Unknown table.
         let resp = dispatch(
             &service,
-            &mut writers,
-            &mut rng,
+            &mut session,
             &mut scratch,
             None,
-            Request::Sample { table: "nope".into(), batch: 4 },
+            Request::Sample { table: "nope".into(), batch: 4, seq: 0 },
         );
         assert!(matches!(resp, Response::Error { .. }));
     }
@@ -533,19 +762,19 @@ mod tests {
     #[test]
     fn dispatch_rejects_mismatched_step_dims_atomically() {
         let service = tiny_service(); // tables are obs_dim 2, act_dim 1
-        let mut writers = HashMap::new();
-        let mut rng = Rng::new(1);
+        let mut session = Session::new(0, 1);
         let mut scratch = SampleBatch::default();
         // Declared dims: a wrong-width step is rejected and NOTHING of
         // the batch (even its valid steps) is applied.
         let resp = dispatch(
             &service,
-            &mut writers,
-            &mut rng,
+            &mut session,
             &mut scratch,
             Some((2, 1)),
             Request::Append {
                 actor_id: 0,
+                seq: 0,
+                dropped: 0,
                 steps: vec![step_with_dims(2, 1), step_with_dims(8, 1)],
             },
         );
@@ -559,24 +788,156 @@ mod tests {
         bad.next_obs = vec![0.0; 5];
         let resp = dispatch(
             &service,
-            &mut writers,
-            &mut rng,
+            &mut session,
             &mut scratch,
             None,
-            Request::Append { actor_id: 0, steps: vec![bad] },
+            Request::Append { actor_id: 0, seq: 0, dropped: 0, steps: vec![bad] },
         );
         assert!(matches!(resp, Response::Error { .. }));
         assert_eq!(service.table("replay").unwrap().len(), 0);
         // A well-formed batch passes.
         let resp = dispatch(
             &service,
-            &mut writers,
-            &mut rng,
+            &mut session,
             &mut scratch,
             Some((2, 1)),
-            Request::Append { actor_id: 0, steps: vec![step_with_dims(2, 1)] },
+            Request::Append {
+                actor_id: 0,
+                seq: 0,
+                dropped: 0,
+                steps: vec![step_with_dims(2, 1)],
+            },
         );
         assert!(matches!(resp, Response::Appended { consumed: 1, .. }));
         assert_eq!(service.table("replay").unwrap().len(), 1);
+    }
+
+    fn append_req(seq: u64, n: usize) -> Request {
+        Request::Append {
+            actor_id: 0,
+            seq,
+            dropped: 0,
+            steps: (0..n).map(|_| step_with_dims(2, 1)).collect(),
+        }
+    }
+
+    #[test]
+    fn replayed_seq_answers_from_cache_without_reexecuting() {
+        let service = tiny_service();
+        let mut session = Session::new(0, 1);
+        let mut scratch = SampleBatch::default();
+        let first = dispatch(&service, &mut session, &mut scratch, None, append_req(1, 3));
+        assert!(matches!(first, Response::Appended { consumed: 3, .. }));
+        assert_eq!(service.table("replay").unwrap().len(), 3);
+        // The exact request re-sent (link died before the ack): the
+        // cached reply comes back verbatim and nothing is re-inserted.
+        let replay = dispatch(&service, &mut session, &mut scratch, None, append_req(1, 3));
+        assert!(matches!(replay, Response::Appended { consumed: 3, .. }));
+        assert_eq!(
+            service.table("replay").unwrap().len(),
+            3,
+            "a replayed append must not double-insert"
+        );
+        assert_eq!(session.next_seq, 2);
+    }
+
+    #[test]
+    fn seq_gap_and_stale_seq_are_descriptive_errors() {
+        let service = tiny_service();
+        let mut session = Session::new(0, 1);
+        let mut scratch = SampleBatch::default();
+        // A gap (requests lost): descriptive error, nothing applied.
+        let resp = dispatch(&service, &mut session, &mut scratch, None, append_req(5, 1));
+        match resp {
+            Response::Error { message } => assert!(message.contains("seq gap"), "{message}"),
+            other => panic!("expected Error, got {other:?}"),
+        }
+        assert_eq!(service.table("replay").unwrap().len(), 0);
+        // Push the window past the reply cache, then replay seq 1: the
+        // cache no longer holds it — stale error, not a re-execution.
+        for seq in 1..=(REPLY_CACHE_DEPTH as u64 + 2) {
+            let resp = dispatch(&service, &mut session, &mut scratch, None, append_req(seq, 1));
+            assert!(matches!(resp, Response::Appended { .. }));
+        }
+        let before = service.table("replay").unwrap().len();
+        let resp = dispatch(&service, &mut session, &mut scratch, None, append_req(1, 1));
+        match resp {
+            Response::Error { message } => assert!(message.contains("stale"), "{message}"),
+            other => panic!("expected Error, got {other:?}"),
+        }
+        assert_eq!(service.table("replay").unwrap().len(), before);
+    }
+
+    #[test]
+    fn unsequenced_requests_bypass_the_gate() {
+        let service = tiny_service();
+        let mut session = Session::new(0, 1);
+        let mut scratch = SampleBatch::default();
+        for _ in 0..3 {
+            let resp = dispatch(&service, &mut session, &mut scratch, None, append_req(0, 1));
+            assert!(matches!(resp, Response::Appended { consumed: 1, .. }));
+        }
+        assert_eq!(service.table("replay").unwrap().len(), 3);
+        assert_eq!(session.next_seq, 1, "seq 0 must not advance the session");
+        assert!(session.replies.is_empty(), "seq 0 must not populate the reply cache");
+    }
+
+    #[test]
+    fn append_dropped_delta_feeds_table_stats() {
+        let service = tiny_service();
+        let mut session = Session::new(0, 1);
+        let mut scratch = SampleBatch::default();
+        let resp = dispatch(
+            &service,
+            &mut session,
+            &mut scratch,
+            None,
+            Request::Append {
+                actor_id: 0,
+                seq: 1,
+                dropped: 7,
+                steps: vec![step_with_dims(2, 1)],
+            },
+        );
+        assert!(matches!(resp, Response::Appended { consumed: 1, .. }));
+        let stats = service.table("replay").unwrap().stats_snapshot();
+        assert_eq!(stats.steps_dropped, 7);
+        // Replaying the same request must not double-count the delta.
+        let resp = dispatch(
+            &service,
+            &mut session,
+            &mut scratch,
+            None,
+            Request::Append {
+                actor_id: 0,
+                seq: 1,
+                dropped: 7,
+                steps: vec![step_with_dims(2, 1)],
+            },
+        );
+        assert!(matches!(resp, Response::Appended { consumed: 1, .. }));
+        let stats = service.table("replay").unwrap().stats_snapshot();
+        assert_eq!(stats.steps_dropped, 7, "replayed dropped delta must dedupe");
+    }
+
+    #[test]
+    fn session_registry_resumes_and_expires() {
+        let reg = SessionRegistry::new();
+        let (slot, resumed) = reg.hello(0, 11);
+        assert!(!resumed);
+        let id = slot.lock().unwrap().id;
+        assert_ne!(id, 0, "minted ids must be nonzero (0 means fresh on the wire)");
+        slot.lock().unwrap().next_seq = 42;
+        drop(slot); // detach
+        // Resuming the same id reattaches the same state.
+        let (slot, resumed) = reg.hello(id, 999);
+        assert!(resumed);
+        assert_eq!(slot.lock().unwrap().next_seq, 42);
+        drop(slot);
+        // An unknown id (e.g. minted by a previous server boot) binds a
+        // fresh session instead of failing.
+        let (slot, resumed) = reg.hello(id ^ 0xDEAD_BEEF, 5);
+        assert!(!resumed);
+        assert_eq!(slot.lock().unwrap().next_seq, 1);
     }
 }

@@ -7,9 +7,10 @@
 //!
 //! # What is (and is not) in the file
 //!
-//! * **Per table**: name, item-kind tag, the six [`TableStatsSnapshot`]
-//!   counters, and the wrapped buffer's [`BufferState`] (per-shard ring
-//!   rows + leaf priorities + cursors + max priority).
+//! * **Per table**: name, item-kind tag, the seven
+//!   [`TableStatsSnapshot`] counters, and the wrapped buffer's
+//!   [`BufferState`] (per-shard ring rows + leaf priorities + cursors +
+//!   max priority).
 //! * The limiter's *state* is exactly the `inserts` / `sample_batches`
 //!   counters — restoring them transfers the sample-to-insert ratio
 //!   accounting, so a resumed run neither stalls (drift wrongly high)
@@ -46,8 +47,9 @@ use std::path::Path;
 
 /// File-kind magic for replay-service state blobs.
 pub const STATE_MAGIC: &[u8; 8] = b"PALSTAT1";
-/// Payload layout version (first field of the payload).
-pub const STATE_VERSION: u32 = 1;
+/// Payload layout version (first field of the payload). v2 added the
+/// `steps_dropped` counter to each table's stats block.
+pub const STATE_VERSION: u32 = 2;
 /// Conventional file name inside a run/checkpoint directory.
 pub const STATE_FILE: &str = "replay_state.bin";
 
@@ -159,6 +161,7 @@ impl ServiceState {
             w.u64(t.stats.priority_updates as u64);
             w.u64(t.stats.insert_stalls as u64);
             w.u64(t.stats.sample_stalls as u64);
+            w.u64(t.stats.steps_dropped as u64);
             w.str_(&t.buffer.impl_name);
             w.u64(t.buffer.capacity as u64);
             w.u32(t.buffer.obs_dim as u32);
@@ -212,6 +215,7 @@ impl ServiceState {
                 priority_updates: r.u64("priority_updates")? as usize,
                 insert_stalls: r.u64("insert_stalls")? as usize,
                 sample_stalls: r.u64("sample_stalls")? as usize,
+                steps_dropped: r.u64("steps_dropped")? as usize,
             };
             let impl_name = r.str_("buffer impl")?;
             let capacity = r.u64("capacity")? as usize;

@@ -45,6 +45,11 @@ pub struct TableStats {
     pub insert_stalls: AtomicUsize,
     /// Denied sample polls (learner-side stall pressure).
     pub sample_stalls: AtomicUsize,
+    /// Env steps remote writers dropped client-side (spill-queue
+    /// overflow during an outage) — steps that never became inserts.
+    /// Nonzero means the stored data has gaps; see the README's fault
+    /// tolerance notes.
+    pub steps_dropped: AtomicUsize,
 }
 
 impl TableStats {
@@ -58,6 +63,7 @@ impl TableStats {
         self.priority_updates.store(s.priority_updates, Ordering::Relaxed);
         self.insert_stalls.store(s.insert_stalls, Ordering::Relaxed);
         self.sample_stalls.store(s.sample_stalls, Ordering::Relaxed);
+        self.steps_dropped.store(s.steps_dropped, Ordering::Relaxed);
     }
 }
 
@@ -70,6 +76,7 @@ pub struct TableStatsSnapshot {
     pub priority_updates: usize,
     pub insert_stalls: usize,
     pub sample_stalls: usize,
+    pub steps_dropped: usize,
 }
 
 /// One named table of a [`super::ReplayService`].
@@ -180,6 +187,13 @@ impl Table {
         self.stats.priority_updates.fetch_add(indices.len(), Ordering::Relaxed);
     }
 
+    /// Account env steps a remote writer dropped client-side (spill
+    /// overflow during an outage). These steps never reached the table;
+    /// the counter makes the loss visible in `Stats` and checkpoints.
+    pub fn add_steps_dropped(&self, n: usize) {
+        self.stats.steps_dropped.fetch_add(n, Ordering::Relaxed);
+    }
+
     /// Serialize this table: buffer contents + stats counters (which
     /// ARE the limiter's ratio-accounting state). Fails if the wrapped
     /// buffer implementation does not support checkpointing.
@@ -241,6 +255,7 @@ impl Table {
             priority_updates: self.stats.priority_updates.load(Ordering::Relaxed),
             insert_stalls: self.stats.insert_stalls.load(Ordering::Relaxed),
             sample_stalls: self.stats.sample_stalls.load(Ordering::Relaxed),
+            steps_dropped: self.stats.steps_dropped.load(Ordering::Relaxed),
         }
     }
 
@@ -248,14 +263,20 @@ impl Table {
     /// `replay[n=4096 in=5000 out=120 stall i/s=3/40]`.
     pub fn stats_line(&self) -> String {
         let s = self.stats_snapshot();
+        let drop = if s.steps_dropped > 0 {
+            format!(" drop={}", s.steps_dropped)
+        } else {
+            String::new()
+        };
         format!(
-            "{}[n={} in={} out={} stall i/s={}/{}]",
+            "{}[n={} in={} out={} stall i/s={}/{}{}]",
             self.name,
             self.buffer.len(),
             s.inserts,
             s.sample_batches,
             s.insert_stalls,
             s.sample_stalls,
+            drop,
         )
     }
 }

@@ -146,6 +146,12 @@ impl ByteWriter {
         self.buf.extend_from_slice(v);
     }
 
+    /// Append pre-encoded bytes verbatim (no length prefix) — replaying
+    /// an already-encoded payload, e.g. a cached RPC reply.
+    pub fn raw(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+
     /// Length-prefixed u64 slice (u64 length).
     pub fn u64s(&mut self, v: &[u64]) {
         self.u64(v.len() as u64);

@@ -116,6 +116,18 @@ impl Args {
             || (self.has(key) && self.get(key).is_none())
     }
 
+    /// Parse a duration flag given in (possibly fractional) seconds,
+    /// validated positive and finite — timeout/deadline flags such as
+    /// `--rpc-timeout 2.5` or `--reconnect-deadline 30`; `default` when
+    /// absent.
+    pub fn seconds_or(&self, key: &str, default: f64) -> Result<std::time::Duration> {
+        let secs = self.parse_or(key, default)?;
+        if !secs.is_finite() || secs <= 0.0 {
+            bail!("--{key}: expected a positive number of seconds, got `{secs}`");
+        }
+        Ok(std::time::Duration::from_secs_f64(secs))
+    }
+
     /// Error on flags not in `allowed` (catches typos).
     pub fn check_known(&self, allowed: &[&str]) -> Result<()> {
         for k in self.flags.keys() {
@@ -174,6 +186,27 @@ mod tests {
         assert!(a.str_list("missing").is_empty());
         let b = Args::parse(vec!["--tables".to_string(), " a , ,b ".to_string()]).unwrap();
         assert_eq!(b.str_list("tables"), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn seconds_accept_fractions_and_reject_nonpositive() {
+        let a = args("--rpc-timeout 2.5");
+        assert_eq!(
+            a.seconds_or("rpc-timeout", 120.0).unwrap(),
+            std::time::Duration::from_millis(2_500)
+        );
+        // Absent flag → default.
+        assert_eq!(
+            a.seconds_or("reconnect-deadline", 30.0).unwrap(),
+            std::time::Duration::from_secs(30)
+        );
+        for bad in ["0", "-1", "nan", "inf", "soon"] {
+            let b = Args::parse(vec!["--t".to_string(), bad.to_string()]).unwrap();
+            assert!(
+                b.seconds_or("t", 1.0).is_err(),
+                "`--t {bad}` must be rejected"
+            );
+        }
     }
 
     #[test]

@@ -1,9 +1,14 @@
 //! Failure-injection integration tests: the framework must fail loudly
 //! and cleanly — not hang or corrupt — when artifacts are missing,
-//! malformed, or inconsistent with the request.
+//! malformed, or inconsistent with the request — and the same for the
+//! remote replay transport when the server is unreachable or dies
+//! mid-RPC.
 
 use pal_rl::coordinator::{train, TrainConfig};
+use pal_rl::remote::{BackoffPolicy, ConnectionPolicy, RemoteClient, Request};
 use pal_rl::runtime::{Manifest, Runtime};
+use std::os::unix::net::UnixListener;
+use std::time::{Duration, Instant};
 
 fn artifacts_dir() -> &'static str {
     concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")
@@ -103,6 +108,74 @@ fn corrupt_params_blob_rejected() {
     info.params_file = bad;
     let err = info.load_initial_params().unwrap_err().to_string();
     assert!(err.contains("bytes"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A short-fuse policy so the remote failure tests finish in well under
+/// a second instead of the 30 s production reconnect deadline.
+fn short_policy() -> ConnectionPolicy {
+    ConnectionPolicy {
+        rpc_timeout: Duration::from_millis(500),
+        backoff: BackoffPolicy::default().with_deadline(Duration::from_millis(200)),
+    }
+}
+
+#[test]
+fn remote_server_unreachable_is_clean_error() {
+    // A plain connect does not retry: an absent server is an immediate,
+    // descriptive error naming the socket, never a hang.
+    let start = Instant::now();
+    let err = RemoteClient::connect("/nonexistent/pal/replay.sock").unwrap_err().to_string();
+    assert!(err.contains("connecting to replay server"), "{err}");
+    assert!(err.contains("/nonexistent/pal/replay.sock"), "{err}");
+    assert!(start.elapsed() < Duration::from_secs(5), "unreachable server must fail fast");
+}
+
+#[test]
+fn remote_mid_rpc_disconnect_is_descriptive_not_hang() {
+    let dir = std::env::temp_dir().join(format!("pal_midrpc_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let sock = dir.join("replay.sock");
+    let listener = UnixListener::bind(&sock).unwrap();
+    // Accept the dial, then slam the connection shut without answering
+    // a single frame — the worst-case mid-RPC peer death.
+    let acceptor = std::thread::spawn(move || {
+        if let Ok((stream, _)) = listener.accept() {
+            drop(stream);
+        }
+    });
+    let mut client = RemoteClient::connect_with(&sock, short_policy()).unwrap();
+    acceptor.join().unwrap();
+
+    let start = Instant::now();
+    let err = client.stats().unwrap_err().to_string();
+    assert!(err.contains("replay transport"), "{err}");
+    assert!(start.elapsed() < Duration::from_secs(5), "mid-RPC disconnect must not hang: {err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn remote_reconnect_gives_up_at_the_deadline_with_a_descriptive_error() {
+    let dir = std::env::temp_dir().join(format!("pal_giveup_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let sock = dir.join("replay.sock");
+    let listener = UnixListener::bind(&sock).unwrap();
+    let acceptor = std::thread::spawn(move || {
+        if let Ok((stream, _)) = listener.accept() {
+            drop(stream);
+        }
+    });
+    let mut client = RemoteClient::connect_with(&sock, short_policy()).unwrap();
+    acceptor.join().unwrap();
+    // Remove the socket so every redial fails: the resilient path must
+    // give up at the (short) deadline with a descriptive error, not
+    // spin forever.
+    std::fs::remove_file(&sock).unwrap();
+
+    let start = Instant::now();
+    let err = client.call_resilient(&Request::Stats).unwrap_err().to_string();
+    assert!(err.contains("gave up"), "{err}");
+    assert!(start.elapsed() < Duration::from_secs(10), "reconnect must respect the deadline");
     std::fs::remove_dir_all(&dir).ok();
 }
 

@@ -1,0 +1,311 @@
+//! Chaos soaks for the remote replay front-end, driven through the
+//! seeded fault-injecting [`ChaosProxy`]: killed connections, full
+//! outages (blackhole + spill), a server restart from checkpoint, and
+//! probabilistic delay/shred/reset streams. Every test asserts the
+//! fault-tolerance contract end to end — exactly-once appends across
+//! reconnects, bounded spill with accounted drops, and final state
+//! byte-identical to a fault-free in-process twin.
+
+mod common;
+
+use common::{start_server, stop_server};
+use pal_rl::remote::{
+    BackoffPolicy, ChaosConfig, ChaosProxy, ConnectionPolicy, RemoteClient, RemoteSampler,
+    RemoteWriter, ReplayServer,
+};
+use pal_rl::replay::{SampleBatch, UniformReplay};
+use pal_rl::service::{
+    ExperienceSampler, ExperienceWriter, ItemKind, RateLimiter, ReplayService, SampleOutcome,
+    ServiceState, Table, WriterStep,
+};
+use pal_rl::util::rng::Rng;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn step(i: usize) -> WriterStep {
+    WriterStep {
+        obs: vec![i as f32, -(i as f32)],
+        action: vec![0.25],
+        next_obs: vec![i as f32 + 1.0, -(i as f32)],
+        reward: (i % 5) as f32,
+        done: i % 17 == 16,
+        truncated: false,
+    }
+}
+
+/// One unlimited-rate uniform `replay` table (obs dim 2, act dim 1) —
+/// built twice per test so the served service and its in-process twin
+/// start identical.
+fn service_cap(capacity: usize) -> Arc<ReplayService> {
+    Arc::new(
+        ReplayService::new(vec![Table::new(
+            "replay",
+            ItemKind::OneStep,
+            Arc::new(UniformReplay::new(capacity, 2, 1)),
+            RateLimiter::Unlimited { min_size_to_sample: 1 },
+        )])
+        .unwrap(),
+    )
+}
+
+/// Short supervised-reconnect policy: generous per-RPC timeout, but a
+/// 10 s overall deadline so a broken test fails instead of hanging.
+fn policy() -> ConnectionPolicy {
+    ConnectionPolicy {
+        rpc_timeout: Duration::from_secs(5),
+        backoff: BackoffPolicy::default().with_deadline(Duration::from_secs(10)),
+    }
+}
+
+fn test_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("pal_{}_{}", tag, std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Byte-compare the server's checkpoint against an in-process twin fed
+/// the given steps by one local writer (plus bulk drop accounting).
+fn assert_state_matches_twin(
+    server_path: &std::path::Path,
+    actor_id: usize,
+    steps: impl Iterator<Item = usize>,
+    dropped: usize,
+) {
+    let remote_bytes = RemoteClient::connect(server_path).unwrap().checkpoint_bytes().unwrap();
+    let twin = service_cap(256);
+    let mut tw = twin.writer(actor_id);
+    for i in steps {
+        tw.append(step(i));
+    }
+    if dropped > 0 {
+        for t in twin.tables() {
+            t.add_steps_dropped(dropped);
+        }
+    }
+    let twin_bytes = ServiceState::capture(&twin).unwrap().encode();
+    assert_eq!(remote_bytes, twin_bytes, "served state must be byte-identical to the twin");
+}
+
+#[test]
+fn writer_survives_killed_connections_exactly_once_and_byte_identical() {
+    let served = service_cap(256);
+    let (server_path, handle) = start_server(Arc::clone(&served));
+    let dir = test_dir("chaos_kill");
+    let proxy_sock = dir.join("proxy.sock");
+    let mut proxy = ChaosProxy::start(&server_path, &proxy_sock, ChaosConfig::default()).unwrap();
+
+    let mut w = RemoteWriter::connect_with(&proxy_sock, 0, policy()).unwrap().with_batch(4);
+    for i in 0..20 {
+        w.append(step(i)).unwrap();
+    }
+    assert_eq!(w.flush().unwrap(), 0);
+
+    // Hard-drop the live connection mid-stream; the next appends must
+    // heal onto a resumed session with no loss and no duplication.
+    assert!(proxy.kill_connections() >= 1, "the writer connection must have been live");
+    for i in 20..40 {
+        w.append(step(i)).unwrap();
+    }
+    assert_eq!(w.flush().unwrap(), 0);
+    assert!(w.reconnects() >= 1, "the kill must have forced a redial");
+    assert_eq!(w.steps_dropped(), 0);
+
+    let t = served.table("replay").unwrap();
+    assert_eq!(t.len(), 40);
+    assert_eq!(t.stats_snapshot().inserts, 40, "a resumed session must dedupe, not re-insert");
+    assert_state_matches_twin(&server_path, 0, 0..40, 0);
+
+    drop(w);
+    proxy.stop();
+    stop_server(&server_path, handle);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn writer_spill_overflow_drops_oldest_and_accounts_the_drops() {
+    let served = service_cap(256);
+    let (server_path, handle) = start_server(Arc::clone(&served));
+    let dir = test_dir("chaos_spill");
+    let proxy_sock = dir.join("proxy.sock");
+    let mut proxy = ChaosProxy::start(&server_path, &proxy_sock, ChaosConfig::default()).unwrap();
+
+    let w = RemoteWriter::connect_with(&proxy_sock, 1, policy()).unwrap();
+    let mut w = w.with_batch(4).with_spill_cap(8);
+
+    // Full outage: kill the live connection and blackhole redials.
+    proxy.set_blackhole(true);
+    proxy.kill_connections();
+    for i in 0..40 {
+        w.append(step(i)).unwrap();
+    }
+    assert_eq!(w.pending_len(), 8, "spill must stay bounded at the cap");
+    assert_eq!(w.steps_dropped(), 32, "overflow drops are counted, oldest-first");
+
+    // Outage over: the bounded spill window lands, with the drops
+    // reported to the server's accounting.
+    proxy.set_blackhole(false);
+    assert_eq!(w.flush().unwrap(), 0);
+    assert!(w.reconnects() >= 1);
+
+    let t = served.table("replay").unwrap();
+    assert_eq!(t.len(), 8, "only the surviving spill window lands");
+    assert_eq!(t.stats_snapshot().inserts, 8);
+    assert_eq!(t.stats_snapshot().steps_dropped, 32, "the server books the writer's drops");
+    // Survivors are the in-flight chunk (pinned at the outage) plus
+    // the newest steps — byte-identical to a twin fed exactly those.
+    assert_state_matches_twin(&server_path, 1, (0..4usize).chain(36..40), 32);
+
+    drop(w);
+    proxy.stop();
+    stop_server(&server_path, handle);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn sampler_prefetch_rearms_across_killed_connections() {
+    let served = service_cap(256);
+    let (server_path, handle) = start_server(Arc::clone(&served));
+
+    // Fill the table directly over the server socket.
+    let mut w = RemoteWriter::connect(&server_path, 0).unwrap();
+    for i in 0..64 {
+        w.append(step(i)).unwrap();
+    }
+    assert_eq!(w.flush().unwrap(), 0);
+
+    let dir = test_dir("chaos_sampler");
+    let proxy_sock = dir.join("proxy.sock");
+    let mut proxy = ChaosProxy::start(&server_path, &proxy_sock, ChaosConfig::default()).unwrap();
+    let smp = RemoteSampler::connect_default_with(&proxy_sock, 7, policy()).unwrap();
+    let mut smp = smp.with_prefetch(true);
+    let mut rng = Rng::new(0); // ignored by the remote sampler
+    let mut out = SampleBatch::default();
+    for _ in 0..3 {
+        assert_eq!(smp.try_sample(8, &mut rng, &mut out).unwrap(), SampleOutcome::Sampled);
+        assert_eq!(out.len(), 8);
+        assert!(out.priorities.iter().all(|&p| p > 0.0));
+    }
+
+    // Kill the connection with a prefetch in flight: the sampler must
+    // reconnect, re-arm its pipeline, and keep granting valid batches.
+    assert!(proxy.kill_connections() >= 1, "the sampler connection must have been live");
+    for _ in 0..3 {
+        assert_eq!(smp.try_sample(8, &mut rng, &mut out).unwrap(), SampleOutcome::Sampled);
+        assert_eq!(out.len(), 8);
+        assert!(out.priorities.iter().all(|&p| p > 0.0));
+    }
+    assert!(smp.reconnects() >= 1, "the kill must have forced a redial");
+
+    smp.finish().unwrap();
+    drop(smp);
+    drop(w);
+    proxy.stop();
+    stop_server(&server_path, handle);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn server_restart_resumes_writers_from_checkpoint_byte_identical() {
+    let dir = test_dir("chaos_restart");
+    let sock = dir.join("server.sock");
+
+    // First life.
+    let served1 = service_cap(256);
+    let server1 = ReplayServer::bind(Arc::clone(&served1), &sock, 42)
+        .unwrap()
+        .with_drain_deadline(Duration::from_millis(500));
+    let h1 = std::thread::spawn(move || server1.serve());
+
+    let mut w = RemoteWriter::connect_with(&sock, 2, policy()).unwrap().with_batch(8);
+    for i in 0..30 {
+        w.append(step(i)).unwrap();
+    }
+    assert_eq!(w.flush().unwrap(), 0);
+    let ck = RemoteClient::connect(&sock).unwrap().checkpoint_bytes().unwrap();
+
+    // Take the server down; its socket goes away with it.
+    RemoteClient::connect(&sock).unwrap().shutdown().unwrap();
+    h1.join().unwrap().unwrap();
+    assert!(RemoteClient::connect(&sock).is_err(), "nothing must listen between server lives");
+
+    // Outage appends spill client-side (well under the default cap).
+    for i in 30..40 {
+        w.append(step(i)).unwrap();
+    }
+
+    // Second life: fresh process state, tables restored from the
+    // checkpoint, same socket path.
+    let served2 = service_cap(256);
+    served2.restore(&ServiceState::decode(&ck).unwrap()).unwrap();
+    let server2 = ReplayServer::bind(Arc::clone(&served2), &sock, 42)
+        .unwrap()
+        .with_drain_deadline(Duration::from_millis(500));
+    let h2 = std::thread::spawn(move || server2.serve());
+
+    // The restarted server cannot resume the old session (new boot
+    // nonce): the writer must bind a fresh one and re-ship everything
+    // unacked — exactly once on top of the restored state.
+    assert_eq!(w.flush().unwrap(), 0, "flush must heal onto the restarted server");
+    assert!(w.reconnects() >= 1);
+    assert_eq!(w.steps_dropped(), 0);
+
+    let t = served2.table("replay").unwrap();
+    assert_eq!(t.len(), 40);
+    assert_eq!(t.stats_snapshot().inserts, 40);
+    assert_state_matches_twin(&sock, 2, 0..40, 0);
+
+    drop(w);
+    RemoteClient::connect(&sock).unwrap().shutdown().unwrap();
+    h2.join().unwrap().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn seeded_chaos_faults_never_lose_or_duplicate_steps() {
+    let served = service_cap(256);
+    let (server_path, handle) = start_server(Arc::clone(&served));
+    let dir = test_dir("chaos_faulty");
+    let cfg = ChaosConfig {
+        seed: 0x5EED_CA05,
+        delay_chance: 0.05,
+        max_delay: Duration::from_millis(2),
+        shred_chance: 0.20,
+        reset_chance: 0.02,
+        max_resets: 3,
+    };
+    let proxy_sock = dir.join("proxy.sock");
+    let mut proxy = ChaosProxy::start(&server_path, &proxy_sock, cfg).unwrap();
+
+    // Connect under fault injection: the initial hello may eat a reset,
+    // so dial in a short retry loop like any supervised client would.
+    let mut writer = None;
+    for _ in 0..10 {
+        match RemoteWriter::connect_with(&proxy_sock, 3, policy()) {
+            Ok(h) => {
+                writer = Some(h);
+                break;
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+    let mut w = writer.expect("writer connect kept failing under chaos").with_batch(8);
+
+    for i in 0..200 {
+        w.append(step(i)).unwrap();
+    }
+    assert_eq!(w.flush().unwrap(), 0);
+    assert_eq!(w.steps_dropped(), 0);
+
+    let t = served.table("replay").unwrap();
+    assert_eq!(t.stats_snapshot().inserts, 200, "faults must never lose or duplicate a step");
+    assert_eq!(t.len(), 200);
+    // Delays, shreds, and resets left the stream byte-equivalent to a
+    // fault-free run.
+    assert_state_matches_twin(&server_path, 3, 0..200, 0);
+
+    drop(w);
+    proxy.stop();
+    stop_server(&server_path, handle);
+    std::fs::remove_dir_all(&dir).ok();
+}

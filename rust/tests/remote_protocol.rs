@@ -41,7 +41,12 @@ fn tiny_service() -> Arc<ReplayService> {
 
 /// A frame with a representative request inside, as raw bytes.
 fn sample_frame() -> Vec<u8> {
-    let req = Request::Append { actor_id: 3, steps: vec![step(0), step(1), step(2)] };
+    let req = Request::Append {
+        actor_id: 3,
+        seq: 0,
+        dropped: 0,
+        steps: vec![step(0), step(1), step(2)],
+    };
     let mut buf = Vec::new();
     write_frame(&mut buf, &req.encode()).unwrap();
     buf
@@ -137,7 +142,12 @@ fn corrupted_append_is_rejected_with_no_half_applied_insert() {
 
     // The same append with one payload byte flipped: the frame checksum
     // fails, the server answers a descriptive error and applies nothing.
-    let req = Request::Append { actor_id: 0, steps: vec![step(2), step(3), step(4)] };
+    let req = Request::Append {
+        actor_id: 0,
+        seq: 0,
+        dropped: 0,
+        steps: vec![step(2), step(3), step(4)],
+    };
     let mut frame = Vec::new();
     write_frame(&mut frame, &req.encode()).unwrap();
     let payload_start = FRAME_MAGIC.len() + 4;
@@ -202,7 +212,8 @@ fn server_survives_garbage_streams_and_bad_payloads() {
 
     // A checksummed frame with a bogus payload keeps the connection up.
     let mut client = RemoteClient::connect(&path).unwrap();
-    match client.call(&Request::Sample { table: "no-such-table".into(), batch: 4 }).unwrap() {
+    let bogus = Request::Sample { table: "no-such-table".into(), batch: 4, seq: 0 };
+    match client.call(&bogus).unwrap() {
         Response::Error { message } => assert!(message.contains("unknown table"), "{message}"),
         other => panic!("unknown table got {other:?}"),
     }
@@ -214,4 +225,93 @@ fn server_survives_garbage_streams_and_bad_payloads() {
 
     drop(client);
     stop_server(&path, handle);
+}
+
+#[test]
+fn replayed_append_seq_is_deduped_over_the_wire() {
+    let service = tiny_service();
+    let (path, handle) = start_server(Arc::clone(&service));
+
+    let mut client = RemoteClient::connect(&path).unwrap();
+    client.hello(7).unwrap();
+
+    // The same sequenced append sent twice (a reconnect replay): both
+    // get the ack, the table sees the steps exactly once.
+    let req = Request::Append { actor_id: 0, seq: 1, dropped: 0, steps: vec![step(0), step(1)] };
+    for round in 0..2 {
+        match client.call(&req).unwrap() {
+            Response::Appended { consumed, .. } => assert_eq!(consumed, 2, "round {round}"),
+            other => panic!("round {round} got {other:?}"),
+        }
+    }
+    assert_eq!(service.table("replay").unwrap().len(), 2, "replayed seq must not double-insert");
+    assert_eq!(service.table("replay").unwrap().stats_snapshot().inserts, 2);
+
+    // A gap past the expected seq is a descriptive error, not a panic,
+    // and applies nothing.
+    let gap = Request::Append { actor_id: 0, seq: 9, dropped: 0, steps: vec![step(2)] };
+    match client.call(&gap).unwrap() {
+        Response::Error { message } => assert!(message.contains("seq gap"), "{message}"),
+        other => panic!("seq gap got {other:?}"),
+    }
+    assert_eq!(service.table("replay").unwrap().len(), 2);
+
+    drop(client);
+    stop_server(&path, handle);
+}
+
+#[test]
+fn stale_session_id_gets_a_fresh_session_not_a_panic() {
+    let service = tiny_service();
+    let (path, handle) = start_server(Arc::clone(&service));
+
+    // Quoting a session id the server never issued (e.g. from before a
+    // restart) must bind a fresh session, flagged un-resumed so the
+    // client knows to re-ship everything.
+    let mut client = RemoteClient::connect(&path).unwrap();
+    match client.call(&Request::Hello { rng_seed: 3, session: 0xDEAD_BEEF }).unwrap() {
+        Response::Hello { session, resumed, next_seq, .. } => {
+            assert!(!resumed, "unknown session id must not claim resumption");
+            assert_ne!(session, 0xDEAD_BEEF, "server must mint its own id");
+            assert_ne!(session, 0, "fresh session must be registered");
+            assert_eq!(next_seq, 1, "fresh session starts the sequence over");
+        }
+        other => panic!("stale hello got {other:?}"),
+    }
+    // The connection stays fully usable on the fresh session.
+    client.stats().expect("stats after stale hello");
+
+    drop(client);
+    stop_server(&path, handle);
+}
+
+#[test]
+fn prop_truncated_session_requests_error_at_every_cut() {
+    // The session-resumption fields (hello session ids, append
+    // seq/dropped, sample seq) decode strictly: every prefix cut of a
+    // valid encoding is an error, never a panic or a silent
+    // misinterpretation.
+    let reqs = [
+        Request::Hello { rng_seed: 0x5EED, session: 41 },
+        Request::Append { actor_id: 3, seq: 17, dropped: 5, steps: vec![step(0), step(1)] },
+        Request::Sample { table: "replay".into(), batch: 8, seq: 9 },
+    ];
+    for req in &reqs {
+        let bytes = req.encode();
+        // Sanity: the full encoding roundtrips.
+        assert_eq!(&Request::decode(&bytes).unwrap(), req);
+        let gen = UsizeIn { lo: 0, hi: bytes.len() - 1 };
+        check("session-truncation", 0x5E55, 200, &gen, |&cut| {
+            match Request::decode(&bytes[..cut]) {
+                Err(e) => {
+                    if e.to_string().is_empty() {
+                        Err("error with empty message".into())
+                    } else {
+                        Ok(())
+                    }
+                }
+                Ok(got) => Err(format!("cut at {cut} decoded to {got:?}")),
+            }
+        });
+    }
 }

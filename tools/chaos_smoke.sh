@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# CI chaos restart drill: run `pal chaos-smoke`, the deterministic
+# fault-tolerance gate for the remote replay front-end. The drill pipes
+# a 3-writer/2-sampler soak through a seeded chaos proxy (injected
+# delays, shredded writes, connection resets), then hard-kills the
+# server mid-run and restarts it from its checkpoint, then drives a
+# writer through a full outage past its spill cap. It must end with
+# zero lost or duplicated steps (exact client-vs-Stats accounting),
+# every overflow drop accounted, and a final checkpoint byte-identical
+# to an unfaulted in-process twin. Blocking — a broken reconnect,
+# session-resumption, or spill path must never merge.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+dir="${1:-$(mktemp -d)}"
+
+cargo build --release --bin pal
+
+out=$(./target/release/pal chaos-smoke --dir "$dir")
+echo "$out"
+case "$out" in
+  *"chaos-smoke OK"*) ;;
+  *)
+    echo "chaos-smoke did not report success" >&2
+    exit 1
+    ;;
+esac
