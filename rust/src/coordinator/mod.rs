@@ -15,8 +15,9 @@ use crate::learner::run_learner;
 use crate::metrics::{CurvePoint, Metrics};
 use crate::params::{AdamConfig, Checkpoint, ParameterServer, TargetSync};
 use crate::remote::{
-    BackoffPolicy, ConnectionPolicy, RemoteClient, RemoteSampler, RemoteWriter, TableInfo,
-    DEFAULT_REMOTE_BATCH, DEFAULT_RPC_TIMEOUT, DEFAULT_SPILL_CAP,
+    BackoffPolicy, ConnectionPolicy, Endpoint, MeshSampler, MeshWriter, RemoteClient,
+    RemoteSampler, RemoteWriter, TableInfo, DEFAULT_REMOTE_BATCH, DEFAULT_RPC_TIMEOUT,
+    DEFAULT_SPILL_CAP,
 };
 use crate::replay::{
     GlobalLockReplay, NaiveScanReplay, PrioritizedConfig, PrioritizedReplay,
@@ -98,12 +99,15 @@ pub struct TrainConfig {
     /// Explicit table layout (`--tables`); empty = one table named
     /// `replay` whose item kind follows `n_step`.
     pub tables: Vec<TableSpec>,
-    /// Remote replay front-end (`--remote`): the socket path of an
-    /// external `pal serve` process. When set, this run builds NO local
-    /// tables — actors hold [`RemoteWriter`]s, learners
-    /// [`RemoteSampler`]s, and the buffer/table/limiter flags belong to
-    /// the serving process.
-    pub remote: Option<std::path::PathBuf>,
+    /// Remote replay front-end (`--remote`): endpoints of external
+    /// `pal serve` processes (`uds://PATH`, `tcp://HOST:PORT`, or a
+    /// bare socket path). Empty = local tables. One endpoint: actors
+    /// hold [`RemoteWriter`]s, learners [`RemoteSampler`]s. Two or
+    /// more: a replay mesh — actors hold [`MeshWriter`]s routed by
+    /// affinity, learners [`MeshSampler`]s drawing across servers by
+    /// priority mass. Either way this run builds NO local tables; the
+    /// buffer/table/limiter flags belong to the serving processes.
+    pub remote: Vec<Endpoint>,
     /// Client-side append batching on a remote run (`--remote-batch`):
     /// each actor's `RemoteWriter` accumulates this many steps per
     /// `Append` RPC. 1 = one RPC per step (the pre-batching wire
@@ -168,7 +172,7 @@ impl TrainConfig {
             n_step: 1,
             gamma_nstep: 0.99,
             tables: Vec::new(),
-            remote: None,
+            remote: Vec::new(),
             remote_batch: DEFAULT_REMOTE_BATCH,
             rpc_timeout_secs: DEFAULT_RPC_TIMEOUT.as_secs_f64(),
             reconnect_deadline_secs: BackoffPolicy::default().deadline.as_secs_f64(),
@@ -384,13 +388,13 @@ pub fn restore_run_state(
     Ok(())
 }
 
-/// The remote half of a [`ReplayFront`]: the socket path, the run's
-/// client-side append batch size, and one lazily-connected,
-/// auto-reconnecting monitor connection shared by every per-tick
-/// `Stats` poll and state RPC — the monitor loop no longer dials the
-/// server once per tick.
+/// The remote half of a [`ReplayFront`]: the server endpoint (UDS or
+/// TCP), the run's client-side append batch size, and one
+/// lazily-connected, auto-reconnecting monitor connection shared by
+/// every per-tick `Stats` poll and state RPC — the monitor loop no
+/// longer dials the server once per tick.
 pub struct RemoteFront {
-    path: std::path::PathBuf,
+    endpoint: Endpoint,
     batch: usize,
     policy: ConnectionPolicy,
     spill_cap: usize,
@@ -401,14 +405,9 @@ pub struct RemoteFront {
 }
 
 impl RemoteFront {
-    fn new(
-        path: std::path::PathBuf,
-        batch: usize,
-        policy: ConnectionPolicy,
-        spill_cap: usize,
-    ) -> Self {
+    fn new(endpoint: Endpoint, batch: usize, policy: ConnectionPolicy, spill_cap: usize) -> Self {
         Self {
-            path,
+            endpoint,
             batch,
             policy,
             spill_cap,
@@ -425,7 +424,8 @@ impl RemoteFront {
     fn with_monitor<T>(&self, f: impl Fn(&mut RemoteClient) -> Result<T>) -> Result<T> {
         let mut guard = self.monitor.lock().expect("monitor connection poisoned");
         if guard.is_none() {
-            *guard = Some(RemoteClient::connect_with(&self.path, self.policy.clone())?);
+            *guard =
+                Some(RemoteClient::connect_endpoint_with(&self.endpoint, self.policy.clone())?);
         }
         let c = guard.as_mut().expect("connected above");
         let r = match f(c) {
@@ -448,30 +448,98 @@ impl RemoteFront {
     }
 }
 
-/// The replay front-end of one training run: either the in-process
-/// [`ReplayService`] this process built, or the socket of an external
-/// `pal serve` process (`--remote`). Everything the trainer needs —
+/// The mesh half of a [`ReplayFront`]: N server endpoints carrying one
+/// logical table (see [`crate::remote::mesh`]), with one cached monitor
+/// connection per server under the same supervised-reconnect
+/// discipline as [`RemoteFront`].
+pub struct MeshFront {
+    endpoints: Vec<Endpoint>,
+    batch: usize,
+    policy: ConnectionPolicy,
+    spill_cap: usize,
+    monitors: Vec<RemoteFront>,
+}
+
+impl MeshFront {
+    fn new(
+        endpoints: Vec<Endpoint>,
+        batch: usize,
+        policy: ConnectionPolicy,
+        spill_cap: usize,
+    ) -> Self {
+        let monitors = endpoints
+            .iter()
+            .map(|ep| RemoteFront::new(ep.clone(), batch, policy.clone(), spill_cap))
+            .collect();
+        Self { endpoints, batch, policy, spill_cap, monitors }
+    }
+
+    /// Per-server stats, mesh order (one cached connection each).
+    fn stats(&self) -> Result<Vec<Vec<TableInfo>>> {
+        self.monitors
+            .iter()
+            .enumerate()
+            .map(|(s, m)| {
+                m.stats()
+                    .with_context(|| format!("mesh server {s} ({})", self.endpoints[s]))
+            })
+            .collect()
+    }
+
+    /// The run-state file holding mesh server `server`'s replay state:
+    /// a mesh snapshot is one file per server next to `weights.bin`,
+    /// each restored to the same server slot on resume.
+    pub fn state_file(server: usize) -> String {
+        format!("replay_state.s{server}.bin")
+    }
+}
+
+/// One table's counters for a monitor progress line (shared by the
+/// remote and mesh fronts).
+fn table_stats_cell(t: &TableInfo) -> String {
+    let mut s = format!(
+        "{}[n={} in={} out={} stall i/s={}/{}",
+        t.name, t.len, t.stats.inserts, t.stats.sample_batches, t.stats.insert_stalls,
+        t.stats.sample_stalls,
+    );
+    if t.stats.steps_dropped > 0 {
+        s.push_str(&format!(" drop={}", t.stats.steps_dropped));
+    }
+    s.push(']');
+    s
+}
+
+/// The replay front-end of one training run: the in-process
+/// [`ReplayService`] this process built, the endpoint of one external
+/// `pal serve` process (`--remote ENDPOINT`), or a mesh of several
+/// (`--remote EP1,EP2,..`). Everything the trainer needs —
 /// writer/sampler handles, stats, checkpoint/restore — goes through
 /// here, so `train()` is transport-agnostic.
 pub enum ReplayFront {
     Local(Arc<ReplayService>),
     Remote(RemoteFront),
+    Mesh(MeshFront),
 }
 
 impl ReplayFront {
-    /// Build from a run config (local tables, or a remote socket).
+    /// Build from a run config: local tables, one remote endpoint, or
+    /// a mesh of several.
     pub fn from_config(cfg: &TrainConfig, obs_dim: usize, act_dim: usize) -> Result<Self> {
-        match &cfg.remote {
-            Some(path) => {
-                let batch = cfg.remote_batch.max(1);
-                Ok(ReplayFront::Remote(RemoteFront::new(
-                    path.clone(),
-                    batch,
-                    cfg.connection_policy(),
-                    cfg.spill_cap,
-                )))
-            }
-            None => Ok(ReplayFront::Local(Arc::new(build_service(cfg, obs_dim, act_dim)?))),
+        let batch = cfg.remote_batch.max(1);
+        match cfg.remote.len() {
+            0 => Ok(ReplayFront::Local(Arc::new(build_service(cfg, obs_dim, act_dim)?))),
+            1 => Ok(ReplayFront::Remote(RemoteFront::new(
+                cfg.remote[0].clone(),
+                batch,
+                cfg.connection_policy(),
+                cfg.spill_cap,
+            ))),
+            _ => Ok(ReplayFront::Mesh(MeshFront::new(
+                cfg.remote.clone(),
+                batch,
+                cfg.connection_policy(),
+                cfg.spill_cap,
+            ))),
         }
     }
 
@@ -479,7 +547,7 @@ impl ReplayFront {
     pub fn service(&self) -> Option<&Arc<ReplayService>> {
         match self {
             ReplayFront::Local(s) => Some(s),
-            ReplayFront::Remote(_) => None,
+            ReplayFront::Remote(_) | ReplayFront::Mesh(_) => None,
         }
     }
 
@@ -490,9 +558,14 @@ impl ReplayFront {
         Ok(match self {
             ReplayFront::Local(s) => Box::new(s.writer(actor_id)),
             ReplayFront::Remote(r) => Box::new(
-                RemoteWriter::connect_with(&r.path, actor_id as u64, r.policy.clone())?
+                RemoteWriter::connect_endpoint_with(&r.endpoint, actor_id as u64, r.policy.clone())?
                     .with_batch(r.batch)
                     .with_spill_cap(r.spill_cap),
+            ),
+            ReplayFront::Mesh(m) => Box::new(
+                MeshWriter::connect(&m.endpoints, actor_id as u64, m.policy.clone())?
+                    .with_batch(m.batch)
+                    .with_spill_cap(m.spill_cap),
             ),
         })
     }
@@ -505,9 +578,12 @@ impl ReplayFront {
         Ok(match self {
             ReplayFront::Local(s) => Box::new(s.default_sampler()),
             ReplayFront::Remote(r) => Box::new(
-                RemoteSampler::connect_default_with(&r.path, seed, r.policy.clone())?
+                RemoteSampler::connect_default_endpoint_with(&r.endpoint, seed, r.policy.clone())?
                     .with_prefetch(true),
             ),
+            ReplayFront::Mesh(m) => {
+                Box::new(MeshSampler::connect_default(&m.endpoints, seed, m.policy.clone())?)
+            }
         })
     }
 
@@ -520,6 +596,10 @@ impl ReplayFront {
                 .stats()
                 .map(|ts| ts.iter().map(|t| t.len as usize).sum())
                 .unwrap_or(0),
+            ReplayFront::Mesh(m) => m
+                .stats()
+                .map(|per| per.iter().flatten().map(|t| t.len as usize).sum())
+                .unwrap_or(0),
         }
     }
 
@@ -529,33 +609,40 @@ impl ReplayFront {
             ReplayFront::Local(s) => s.stats_line(),
             ReplayFront::Remote(r) => match r.stats() {
                 Ok(tables) => {
-                    let mut line = tables
-                        .iter()
-                        .map(|t| {
-                            let mut s = format!(
-                                "{}[n={} in={} out={} stall i/s={}/{}",
-                                t.name,
-                                t.len,
-                                t.stats.inserts,
-                                t.stats.sample_batches,
-                                t.stats.insert_stalls,
-                                t.stats.sample_stalls,
-                            );
-                            if t.stats.steps_dropped > 0 {
-                                s.push_str(&format!(" drop={}", t.stats.steps_dropped));
-                            }
-                            s.push(']');
-                            s
-                        })
-                        .collect::<Vec<_>>()
-                        .join(" ");
+                    let mut line =
+                        tables.iter().map(table_stats_cell).collect::<Vec<_>>().join(" ");
                     let rc = r.monitor_reconnects.load(Ordering::Relaxed);
                     if rc > 0 {
                         line.push_str(&format!(" rc={rc}"));
                     }
                     line
                 }
-                Err(e) => format!("remote[{}: {e}]", r.path.display()),
+                Err(e) => format!("remote[{}: {e}]", r.endpoint),
+            },
+            ReplayFront::Mesh(m) => match m.stats() {
+                Ok(per) => {
+                    let mut line = per
+                        .iter()
+                        .enumerate()
+                        .map(|(s, tables)| {
+                            format!(
+                                "s{s}:{}",
+                                tables.iter().map(table_stats_cell).collect::<Vec<_>>().join(" ")
+                            )
+                        })
+                        .collect::<Vec<_>>()
+                        .join(" ");
+                    let rc: u64 = m
+                        .monitors
+                        .iter()
+                        .map(|f| f.monitor_reconnects.load(Ordering::Relaxed))
+                        .sum();
+                    if rc > 0 {
+                        line.push_str(&format!(" rc={rc}"));
+                    }
+                    line
+                }
+                Err(e) => format!("mesh[{e:#}]"),
             },
         }
     }
@@ -572,6 +659,22 @@ impl ReplayFront {
                     Vec::new()
                 }
             },
+            // Mesh tables are reported per server (`s0/replay`, ...):
+            // the counters live server-side and are NOT summed here, so
+            // a skewed mesh stays visible in the report.
+            ReplayFront::Mesh(m) => match m.stats() {
+                Ok(per) => per
+                    .into_iter()
+                    .enumerate()
+                    .flat_map(|(s, tables)| {
+                        tables.into_iter().map(move |t| (format!("s{s}/{}", t.name), t.stats))
+                    })
+                    .collect(),
+                Err(e) => {
+                    eprintln!("[pal] WARNING: mesh stats unavailable: {e:#}");
+                    Vec::new()
+                }
+            },
         }
     }
 
@@ -584,32 +687,43 @@ impl ReplayFront {
         match self {
             ReplayFront::Local(s) => ServiceState::capture(s).map(|_| ()),
             ReplayFront::Remote(r) => r.stats().map(|_| ()),
+            ReplayFront::Mesh(m) => m.stats().map(|_| ()),
         }
     }
 
-    /// Serialize every table — locally, or via the `Checkpoint` RPC.
-    /// State RPCs use a throwaway connection, NOT the cached monitor
-    /// one: a checkpoint frame can run to hundreds of MiB and a
-    /// connection's receive buffer never shrinks, so routing it through
-    /// the long-lived monitor client would pin that memory for the
-    /// rest of the run.
+    /// Serialize every table — locally, or via the chunked checkpoint
+    /// stream. State RPCs use a throwaway connection, NOT the cached
+    /// monitor one: a reassembled checkpoint can run to hundreds of
+    /// MiB and a connection's receive buffer never shrinks, so routing
+    /// it through the long-lived monitor client would pin that memory
+    /// for the rest of the run. A mesh has one state *per server* —
+    /// use [`Self::save_run_state`] / [`Self::restore_run_state`].
     pub fn capture_state(&self) -> Result<ServiceState> {
         match self {
             ReplayFront::Local(s) => ServiceState::capture(s),
             ReplayFront::Remote(r) => {
-                RemoteClient::connect_with(&r.path, r.policy.clone())?.checkpoint_state()
+                RemoteClient::connect_endpoint_with(&r.endpoint, r.policy.clone())?
+                    .checkpoint_state()
+            }
+            ReplayFront::Mesh(_) => {
+                bail!("a mesh front has one replay state per server; use save_run_state")
             }
         }
     }
 
     /// Restore a captured state — locally (two-phase validate/apply),
-    /// or via the `Restore` RPC (the server validates before mutating).
-    /// Fresh connection for the same reason as [`Self::capture_state`].
+    /// or via the chunked upload (the server validates every chunk and
+    /// the whole state before mutating). Fresh connection for the same
+    /// reason as [`Self::capture_state`].
     pub fn restore_state_snapshot(&self, state: &ServiceState) -> Result<()> {
         match self {
             ReplayFront::Local(s) => state.restore_into(s),
             ReplayFront::Remote(r) => {
-                RemoteClient::connect_with(&r.path, r.policy.clone())?.restore_state(state)
+                RemoteClient::connect_endpoint_with(&r.endpoint, r.policy.clone())?
+                    .restore_state(state)
+            }
+            ReplayFront::Mesh(_) => {
+                bail!("a mesh front has one replay state per server; use restore_run_state")
             }
         }
     }
@@ -622,7 +736,20 @@ impl ReplayFront {
         std::fs::create_dir_all(dir)
             .with_context(|| format!("creating run-state dir {}", dir.display()))?;
         Checkpoint::from_server(server).save(dir.join(WEIGHTS_FILE))?;
-        self.capture_state()?.save(dir.join(STATE_FILE))?;
+        match self {
+            // A mesh snapshot is one state file per server (each
+            // chunk-streamed off its own connection), restored to the
+            // same server slot on resume.
+            ReplayFront::Mesh(m) => {
+                for (s, ep) in m.endpoints.iter().enumerate() {
+                    RemoteClient::connect_endpoint_with(ep, m.policy.clone())?
+                        .checkpoint_state()
+                        .with_context(|| format!("checkpointing mesh server {s} ({ep})"))?
+                        .save(dir.join(MeshFront::state_file(s)))?;
+                }
+            }
+            _ => self.capture_state()?.save(dir.join(STATE_FILE))?,
+        }
         Ok(())
     }
 
@@ -639,6 +766,32 @@ impl ReplayFront {
                 let state = ServiceState::load(dir.join(STATE_FILE))?;
                 server.restore(&ck)?;
                 self.restore_state_snapshot(&state)?;
+                Ok(())
+            }
+            ReplayFront::Mesh(m) => {
+                let ck = Checkpoint::load(dir.join(WEIGHTS_FILE))?;
+                // Load and validate every per-server file BEFORE
+                // touching the parameter server or any replay server:
+                // a missing file (e.g. the snapshot came from a
+                // different mesh size) must leave everything untouched.
+                let mut states = Vec::with_capacity(m.endpoints.len());
+                for s in 0..m.endpoints.len() {
+                    states.push(ServiceState::load(dir.join(MeshFront::state_file(s))).with_context(
+                        || {
+                            format!(
+                                "loading mesh server {s}'s replay state (a {}-server mesh \
+                                 resumes from one state file per server)",
+                                m.endpoints.len()
+                            )
+                        },
+                    )?);
+                }
+                server.restore(&ck)?;
+                for (s, (ep, state)) in m.endpoints.iter().zip(&states).enumerate() {
+                    RemoteClient::connect_endpoint_with(ep, m.policy.clone())?
+                        .restore_state(state)
+                        .with_context(|| format!("restoring mesh server {s} ({ep})"))?;
+                }
                 Ok(())
             }
         }

@@ -2,7 +2,7 @@
 //!
 //! Subcommands:
 //!   train         run one training session (the paper's Fig 7 pipeline)
-//!   serve         expose a replay service on a Unix socket (`--remote` target)
+//!   serve         expose a replay service on a Unix or TCP socket (`--remote` target)
 //!   dse           design-space exploration: pick actor/learner core split
 //!   buffer-bench  quick replay-buffer micro-benchmark
 //!   envs          list built-in environments
@@ -16,8 +16,8 @@ use pal_rl::dse;
 use pal_rl::env::ENV_NAMES;
 use pal_rl::params::{AdamConfig, ParameterServer, TargetSync};
 use pal_rl::remote::{
-    BackoffPolicy, ChaosConfig, ChaosProxy, ConnectionPolicy, RemoteClient, RemoteSampler,
-    RemoteWriter, ReplayServer,
+    parse_endpoint_list, BackoffPolicy, ChaosConfig, ChaosProxy, ConnectionPolicy, Endpoint,
+    MeshSampler, MeshWriter, RemoteClient, RemoteSampler, RemoteWriter, ReplayServer,
 };
 use pal_rl::replay::SampleBatch;
 use pal_rl::runtime::Manifest;
@@ -45,12 +45,13 @@ fn usage() -> ! {
 
 USAGE:
   pal train --algo <dqn|ddqn|ddpg|td3|sac> --env <ENV> [options]
-  pal serve --socket PATH [--obs-dim N] [--act-dim N] [table/buffer options]
+  pal serve (--socket PATH | --tcp HOST:PORT) [--obs-dim N] [--act-dim N] [table/buffer options]
   pal dse   --algo <A> --env <E> [--cores M] [--update-interval R] [--shards 1,2,4,8,16] [--rate-limit S]
   pal buffer-bench [--capacity N] [--fanout K] [--shards S] [--threads T] [--ops N]
   pal state-smoke --dir DIR --phase <collect|resume> [--items N] [--capacity N] [--shards S]
   pal remote-smoke --socket PATH [--items N] [--capacity N] [--shards S]
-  pal chaos-smoke [--dir DIR] [--seed S] [--steps-per-writer N] [--batches-per-sampler N]
+  pal mesh-smoke --endpoints EP1,EP2[,..] [--items N] [--capacity N] [--shards S]
+  pal chaos-smoke [--dir DIR] [--seed S] [--steps-per-writer N] [--batches-per-sampler N] [--tcp]
   pal envs
   pal info  [--artifacts DIR]
 
@@ -97,10 +98,15 @@ TRAIN OPTIONS:
   --checkpoint-every S
                       also snapshot the run state every S seconds
                       during training (atomic; requires --save-state)
-  --remote PATH       use an external `pal serve` process at this Unix
-                      socket as the replay front-end: actors and
-                      learners connect as clients, and the table /
-                      buffer / rate-limit flags belong to the server
+  --remote LIST       use external `pal serve` processes as the replay
+                      front-end. LIST is comma-separated endpoints —
+                      `uds://PATH` (or a bare socket path) and
+                      `tcp://HOST:PORT`. One endpoint connects actors
+                      and learners as clients of that server; two or
+                      more form a replay mesh (actors spread over
+                      servers by affinity, learners sample across them
+                      by priority mass). The table / buffer /
+                      rate-limit flags belong to the servers
   --remote-batch N    client-side append batching on a remote run:
                       each actor ships N steps per Append RPC
                       (default 16; 1 = one RPC per step). Samplers
@@ -118,7 +124,11 @@ TRAIN OPTIONS:
                       server's steps_dropped stat after the link heals
 
 SERVE OPTIONS (same table/buffer flags as train, plus):
-  --socket PATH       Unix-domain socket to listen on (required)
+  --socket PATH       Unix-domain socket to listen on
+  --tcp HOST:PORT     TCP address to listen on instead (`:0` binds an
+                      ephemeral port; the resolved address is printed
+                      on the `listening on` line). Exactly one of
+                      --socket / --tcp is required
   --obs-dim N --act-dim N
                       transition dims of the served tables (must match
                       the connecting run's model; default 4 / 2)
@@ -140,6 +150,15 @@ SERVE OPTIONS (same table/buffer flags as train, plus):
   checkpoints are byte-identical, then soaks the server with concurrent
   writer/sampler clients and verifies exact sample-to-insert accounting
   over the Stats RPC before asking the server to shut down.
+
+  `mesh-smoke` is the CI gate for the cross-host replay mesh: against
+  N freshly started servers (any mix of transports) it drives a seeded
+  mesh run — affinity-routed appends, mass-proportional two-level
+  sampling, priority feedback — in lockstep with N in-process twin
+  services, and fails unless every sampled batch and every per-server
+  checkpoint (moved over the chunked transfer stream) is byte-identical
+  to its twin and the per-server Stats account for every client
+  operation exactly.
 
   `chaos-smoke` is the CI fault-tolerance gate (restart drill): it
   starts its own replay server behind a seeded fault-injecting proxy
@@ -207,8 +226,12 @@ fn train_config_from(a: &Args) -> Result<TrainConfig> {
     if cfg.spill_cap == 0 {
         bail!("--spill-cap must be >= 1");
     }
-    if let Some(path) = a.get("remote") {
-        cfg.remote = Some(path.into());
+    if let Some(list) = a.get("remote") {
+        // One endpoint = one server; several (comma-separated) = a
+        // replay mesh. Duplicates are rejected here — a double-dialed
+        // server would skew both affinity routing and the
+        // mass-proportional draw.
+        cfg.remote = parse_endpoint_list(list)?;
         // The tables live in the serving process: local table/buffer/
         // limiter flags do nothing on a remote run, and silently
         // ignoring them would let users believe they applied.
@@ -588,7 +611,7 @@ fn cmd_state_smoke(a: &Args) -> Result<()> {
 }
 
 const SERVE_FLAGS: &[&str] = &[
-    "socket", "buffer", "capacity", "shards", "fanout", "alpha", "beta",
+    "socket", "tcp", "buffer", "capacity", "shards", "fanout", "alpha", "beta",
     "warmup", "update-interval", "n-step", "gamma-nstep", "tables",
     "rate-limit", "obs-dim", "act-dim", "seed", "restore-state", "save-state",
     "drain-deadline",
@@ -624,17 +647,20 @@ fn install_stop_signal_handlers() {
 }
 
 /// `pal serve`: build a replay service from the same table/buffer flags
-/// `train` uses and expose it on a Unix-domain socket, so actors and
-/// learners in OTHER processes (`pal train --remote PATH`) share its
+/// `train` uses and expose it on a Unix-domain socket (`--socket`) or a
+/// TCP address (`--tcp`), so actors and learners in OTHER processes —
+/// or on other hosts (`pal train --remote ENDPOINT[,..]`) — share its
 /// tables. Runs until a client sends the Shutdown RPC or the process
 /// receives SIGINT/SIGTERM — both take the same drain path, so a clean
 /// shutdown (including Ctrl-C) optionally saves the replay state.
 fn cmd_serve(a: &Args) -> Result<()> {
     a.check_known(SERVE_FLAGS)?;
-    let socket = a
-        .get("socket")
-        .ok_or_else(|| anyhow!("--socket PATH required"))?
-        .to_string();
+    let endpoint = match (a.get("socket"), a.get("tcp")) {
+        (Some(path), None) => Endpoint::from(std::path::Path::new(path)),
+        (None, Some(addr)) => Endpoint::tcp(addr)?,
+        (Some(_), Some(_)) => bail!("--socket and --tcp are mutually exclusive"),
+        (None, None) => bail!("--socket PATH or --tcp HOST:PORT required"),
+    };
     let mut cfg = TrainConfig::new("serve", "remote");
     apply_service_flags(&mut cfg, a)?;
     let obs_dim: usize = a.parse_or("obs-dim", 4)?;
@@ -650,11 +676,15 @@ fn cmd_serve(a: &Args) -> Result<()> {
             service.total_len()
         );
     }
-    let server = ReplayServer::bind(Arc::clone(&service), &socket, seed)?
+    let server = ReplayServer::bind_endpoint(Arc::clone(&service), &endpoint, seed)?
         .expect_dims(obs_dim, act_dim)
         .with_drain_deadline(drain_deadline);
+    // The RESOLVED endpoint: a `--tcp HOST:0` bind reports the real
+    // port here, which is what scripts parse to build client endpoint
+    // lists.
     eprintln!(
-        "[pal] replay server listening on {socket} — {}",
+        "[pal] replay server listening on {} — {}",
+        server.endpoint(),
         service.stats_line()
     );
     // SIGINT/SIGTERM flip SIGNAL_STOP; a watcher thread relays that to
@@ -1102,7 +1132,281 @@ fn cmd_remote_smoke(a: &Args) -> Result<()> {
     Ok(())
 }
 
-const CHAOS_SMOKE_FLAGS: &[&str] = &["dir", "seed", "steps-per-writer", "batches-per-sampler"];
+const MESH_SMOKE_FLAGS: &[&str] = &["endpoints", "items", "capacity", "shards"];
+
+/// Seed of the mesh smoke: the client-side level-1 (server pick) RNG,
+/// and — via [`pal_rl::remote::mesh::server_seed`] — every server's
+/// session sampling RNG, so the in-process twins can replay the whole
+/// two-level draw.
+const MESH_SMOKE_SEED: u64 = 0x5EED_3E54;
+
+/// Chunk size the mesh smoke forces on its state transfers: small
+/// enough that every checkpoint/restore crosses the wire as MANY
+/// bounded frames (the contract the chunked stream exists for), not
+/// one frame that happens to fit.
+const MESH_SMOKE_CHUNK: usize = 4_096;
+
+/// Twin image of the mesh sampler's level-1 server pick: a prefix scan
+/// over the advertised masses that skips zero-mass servers while
+/// tracking the last positive one. Must match `MeshSampler` exactly —
+/// the smoke replays its draw against in-process twins.
+fn twin_pick(masses: &[(u64, f32)], x: f32) -> Option<usize> {
+    let mut sel = None;
+    let mut acc = 0.0f32;
+    for (k, &(_, m)) in masses.iter().enumerate() {
+        if m > 0.0 {
+            sel = Some(k);
+            if acc + m >= x {
+                break;
+            }
+        }
+        acc += m;
+    }
+    sel
+}
+
+/// Cross-host replay mesh smoke (the CI gate for `--remote EP1,EP2`),
+/// run against N freshly started `pal serve` processes on the same
+/// table layout as `remote-smoke` but with an unlimited rate limiter
+/// (the mesh's mass-proportional server pick is random, so a σ-ratio
+/// limiter on a briefly under-picked server would stall the
+/// deterministic drive):
+///
+/// 1. affinity appends — one batched [`MeshWriter`] per server (actor
+///    `a` → server `a % N`), mirrored into N in-process twin services;
+/// 2. two-level sampling — a seeded [`MeshSampler`] draws
+///    sample+priority-update rounds while the smoke replays the whole
+///    draw (mass probe, server pick, within-server indices) against
+///    the twins; every batch must match index-for-index;
+/// 3. per-server checkpoints — downloaded over the chunked transfer
+///    stream in deliberately tiny frames, each byte-identical to its
+///    twin's state; then a full mesh checkpoint/restore round-trip
+///    (including a tiny-chunk upload) must leave every server
+///    byte-identical again;
+/// 4. exact accounting — each server's Stats must equal the
+///    client-side per-server tallies (inserts, batches, sampled items,
+///    priority updates); then every server is shut down via RPC.
+fn cmd_mesh_smoke(a: &Args) -> Result<()> {
+    a.check_known(MESH_SMOKE_FLAGS)?;
+    let list = a
+        .get("endpoints")
+        .ok_or_else(|| anyhow!("--endpoints EP1,EP2[,..] required"))?;
+    let endpoints = parse_endpoint_list(list)?;
+    let n = endpoints.len();
+    ensure!(n >= 2, "mesh-smoke needs at least 2 endpoints, got {n}");
+    let items: usize = a.parse_or("items", 2_000)?;
+    let per_server = items / n;
+    let mut cfg = smoke_config(a)?;
+    cfg.rate_limit = RateLimitSpec::Unlimited;
+    ensure!(
+        per_server >= cfg.warmup_steps * 2,
+        "--items {items} too small for warmup {} across {n} servers",
+        cfg.warmup_steps
+    );
+    let policy = ConnectionPolicy::default();
+
+    // The servers must be fresh: the lockstep comparison assumes every
+    // table starts empty.
+    for (s, ep) in endpoints.iter().enumerate() {
+        let stats = RemoteClient::connect_endpoint(ep)?.stats()?;
+        ensure!(!stats.is_empty(), "mesh server {s} ({ep}) reports no tables");
+        ensure!(
+            stats.iter().all(|t| t.len == 0 && t.stats.inserts == 0),
+            "mesh-smoke needs freshly started servers (server {s} ({ep}) already holds data)"
+        );
+    }
+    let twins: Vec<ReplayService> = (0..n)
+        .map(|_| build_service(&cfg, SMOKE_OBS, SMOKE_ACT))
+        .collect::<Result<_>>()?;
+
+    // Phase 1: affinity appends — mesh writer per actor, twin writer on
+    // the service that actor's id routes to. Same ids, same steps, so
+    // server-side shard placement (actor_id % shards) mirrors too.
+    for actor in 0..n {
+        let mut w = MeshWriter::connect(&endpoints, actor as u64, policy.clone())?
+            .with_batch(REMOTE_SMOKE_BATCH);
+        ensure!(
+            w.server() == actor % n,
+            "actor {actor} routed to server {} (expected {})",
+            w.server(),
+            actor % n
+        );
+        let mut tw = twins[actor % n].writer(actor);
+        for i in 0..per_server {
+            let step = smoke_step(actor * 1_000_000 + i);
+            ensure!(!w.throttled()?, "mesh writer {actor} throttled under an unlimited limiter");
+            w.append(step.clone())?;
+            tw.append(step);
+        }
+        ensure!(w.flush()? == 0, "mesh writer {actor} could not drain its batch tail");
+    }
+
+    // Phase 2: two-level sampling, replaying the mesh draw on the twins.
+    let mut sampler = MeshSampler::connect_default(&endpoints, MESH_SMOKE_SEED, policy.clone())?;
+    ensure!(sampler.table() == "replay", "unexpected default table `{}`", sampler.table());
+    ensure!(sampler.server_count() == n, "sampler sees {} servers", sampler.server_count());
+    let stride = sampler.stride();
+    ensure!(
+        stride == cfg.buffer_capacity,
+        "mesh stride {stride} != per-server capacity {}",
+        cfg.buffer_capacity
+    );
+    let mut mesh_rng = Rng::new(MESH_SMOKE_SEED); // twin of the level-1 pick RNG
+    let mut twin_rngs: Vec<Rng> = (0..n)
+        .map(|s| Rng::new(pal_rl::remote::mesh::server_seed(MESH_SMOKE_SEED, s)))
+        .collect();
+    let twin_samplers: Vec<_> = twins.iter().map(|t| t.default_sampler()).collect();
+    let mut dummy_rng = Rng::new(1); // mesh sampling draws server-side
+    let mut out = SampleBatch::default();
+    let mut twin_out = SampleBatch::default();
+    let rounds = per_server / 2;
+    let mut batches = vec![0usize; n];
+    for round in 0..rounds {
+        let outcome = sampler.try_sample(16, &mut dummy_rng, &mut out)?;
+        ensure!(outcome == SampleOutcome::Sampled, "mesh round {round} stalled: {outcome:?}");
+        // Twin level-1: same masses (bit-equal trees), same draw.
+        let masses: Vec<(u64, f32)> = twins
+            .iter()
+            .map(|t| {
+                let tab = t.default_table();
+                (tab.len() as u64, tab.total_priority())
+            })
+            .collect();
+        let total_mass: f32 = masses.iter().map(|&(_, m)| m).sum();
+        let x = mesh_rng.f32() * total_mass;
+        let sel = twin_pick(&masses, x)
+            .ok_or_else(|| anyhow!("twin pick found no positive-mass server at round {round}"))?;
+        let t_outcome = twin_samplers[sel].try_sample(16, &mut twin_rngs[sel], &mut twin_out);
+        ensure!(
+            t_outcome == SampleOutcome::Sampled,
+            "twin of server {sel} stalled at round {round}: {t_outcome:?}"
+        );
+        let global: Vec<usize> = twin_out.indices.iter().map(|&i| i + sel * stride).collect();
+        ensure!(
+            out.indices == global,
+            "round {round}: mesh indices diverged from twin of server {sel}"
+        );
+        ensure!(
+            out.priorities == twin_out.priorities,
+            "round {round}: sampled priorities diverged from twin of server {sel}"
+        );
+        batches[sel] += 1;
+        // Priorities are a pure function of (round, slot) so both sides
+        // feed identical values.
+        let tds: Vec<f32> = (0..out.indices.len())
+            .map(|j| ((round * 13 + j) % 91) as f32 * 0.1 + 0.05)
+            .collect();
+        sampler.update_priorities(&out.indices, &tds)?;
+        twin_samplers[sel].update_priorities(&twin_out.indices, &tds);
+    }
+    ensure!(
+        batches.iter().all(|&b| b > 0),
+        "mass-proportional pick never chose some server (batches {batches:?})"
+    );
+
+    // Phase 3a: per-server checkpoints over the chunked stream, in
+    // deliberately tiny frames, byte-identical to the twins.
+    let mut state_bytes = 0usize;
+    for (s, ep) in endpoints.iter().enumerate() {
+        let remote_bytes =
+            RemoteClient::connect_endpoint(ep)?.checkpoint_bytes_chunked(MESH_SMOKE_CHUNK)?;
+        let twin_bytes = ServiceState::capture(&twins[s])?.encode();
+        if remote_bytes != twin_bytes {
+            let first_diff = remote_bytes
+                .iter()
+                .zip(&twin_bytes)
+                .position(|(a, b)| a != b)
+                .unwrap_or_else(|| remote_bytes.len().min(twin_bytes.len()));
+            bail!(
+                "server {s} ({ep}) checkpoint differs from its twin: {} vs {} bytes, \
+                 first difference at offset {first_diff}",
+                remote_bytes.len(),
+                twin_bytes.len()
+            );
+        }
+        ensure!(
+            remote_bytes.len() > MESH_SMOKE_CHUNK,
+            "server {s} state ({} bytes) fits one {MESH_SMOKE_CHUNK}-byte chunk — the smoke \
+             must exercise a multi-frame stream",
+            remote_bytes.len()
+        );
+        state_bytes += remote_bytes.len();
+    }
+
+    // Phase 3b: mesh-wide checkpoint/restore round-trip — including a
+    // tiny-chunk upload — must leave every server byte-identical.
+    let states = sampler.checkpoint_states()?;
+    sampler.restore_states(&states)?;
+    sampler.client_mut(0).restore_state_chunked(&states[0], MESH_SMOKE_CHUNK)?;
+    for (s, ep) in endpoints.iter().enumerate() {
+        let again = RemoteClient::connect_endpoint(ep)?.checkpoint_bytes()?;
+        let twin_bytes = ServiceState::capture(&twins[s])?.encode();
+        ensure!(
+            again == twin_bytes,
+            "server {s} ({ep}) state changed across the chunked restore round-trip"
+        );
+    }
+    eprintln!(
+        "[smoke] mesh OK: {n} servers, {} items, {rounds} batches {batches:?}, \
+         per-server checkpoints byte-identical ({state_bytes} bytes total, \
+         {MESH_SMOKE_CHUNK}-byte chunks)",
+        per_server * n
+    );
+
+    // Phase 4: exact per-server accounting against the Stats RPC.
+    for (s, ep) in endpoints.iter().enumerate() {
+        let stats = RemoteClient::connect_endpoint(ep)?.stats()?;
+        let replay = &stats[0];
+        ensure!(
+            replay.stats.inserts == per_server,
+            "server {s}: {} inserts recorded, its writer appended {per_server}",
+            replay.stats.inserts
+        );
+        ensure!(
+            replay.stats.sample_batches == batches[s],
+            "server {s}: {} batches recorded, the mesh drew {}",
+            replay.stats.sample_batches,
+            batches[s]
+        );
+        ensure!(
+            replay.stats.sampled_items == 16 * batches[s],
+            "server {s}: sampled-items accounting off: {} != 16·{}",
+            replay.stats.sampled_items,
+            batches[s]
+        );
+        ensure!(
+            replay.stats.priority_updates == 16 * batches[s],
+            "server {s}: priority-update accounting off: {} != 16·{}",
+            replay.stats.priority_updates,
+            batches[s]
+        );
+        // The N-step auxiliary table may hold a partial window tail per
+        // writer (flushed only at an episode boundary).
+        for t in stats.iter().skip(1) {
+            ensure!(
+                t.stats.inserts <= per_server && t.stats.inserts + 2 >= per_server,
+                "server {s} table `{}`: {} inserts for {per_server} appended steps",
+                t.name,
+                t.stats.inserts
+            );
+        }
+    }
+
+    drop(sampler);
+    for ep in &endpoints {
+        RemoteClient::connect_endpoint(ep)?.shutdown()?;
+    }
+    println!(
+        "mesh-smoke OK: {n} servers, {} inserts, {} batches, byte-identical per-server \
+         checkpoints (chunked), lockstep two-level sampling, exact per-server accounting",
+        per_server * n,
+        batches.iter().sum::<usize>()
+    );
+    Ok(())
+}
+
+const CHAOS_SMOKE_FLAGS: &[&str] =
+    &["dir", "seed", "steps-per-writer", "batches-per-sampler", "tcp"];
 
 /// Bounded retry for client connects that race a chaos fault (the
 /// proxy may reset the very `Hello` that opens a connection).
@@ -1126,21 +1430,25 @@ struct ChaosServer {
 }
 
 impl ChaosServer {
+    /// Bind `endpoint` and serve in the background; returns the
+    /// RESOLVED endpoint (a TCP `:0` bind lands on a concrete port,
+    /// which the restart drill must rebind exactly).
     fn start(
         cfg: &TrainConfig,
-        socket: &std::path::Path,
+        endpoint: &Endpoint,
         state: Option<&ServiceState>,
-    ) -> Result<Self> {
+    ) -> Result<(Self, Endpoint)> {
         let service = Arc::new(build_service(cfg, SMOKE_OBS, SMOKE_ACT)?);
         if let Some(s) = state {
             service.restore(s)?;
         }
-        let server = ReplayServer::bind(Arc::clone(&service), socket, 0)?
+        let server = ReplayServer::bind_endpoint(Arc::clone(&service), endpoint, 0)?
             .expect_dims(SMOKE_OBS, SMOKE_ACT)
             .with_drain_deadline(std::time::Duration::from_millis(500));
+        let resolved = server.endpoint();
         let stop = server.stop_handle();
         let thread = std::thread::spawn(move || server.serve());
-        Ok(Self { stop, thread })
+        Ok((Self { stop, thread }, resolved))
     }
 
     /// Ask the accept loop to stop and wait for it. Phase B uses this
@@ -1214,8 +1522,15 @@ fn cmd_chaos_smoke(a: &Args) -> Result<()> {
     );
     ensure!(batches_per_sampler >= 1, "--batches-per-sampler must be >= 1");
     std::fs::create_dir_all(&dir)?;
-    let server_sock = dir.join("server.sock");
-    let proxy_sock = dir.join("proxy.sock");
+    // `--tcp` runs the identical drill over loopback TCP (ephemeral
+    // ports, resolved at bind): the chaos determinism contract and
+    // every byte-identity assertion are transport-independent.
+    let tcp = a.flag("tcp");
+    let (server_bind, proxy_bind) = if tcp {
+        (Endpoint::tcp("127.0.0.1:0")?, Endpoint::tcp("127.0.0.1:0")?)
+    } else {
+        (Endpoint::from(dir.join("server.sock")), Endpoint::from(dir.join("proxy.sock")))
+    };
 
     // Unlimited limiter: admission never stalls, so the concurrent
     // phases' stall counters are deterministically zero and the twin
@@ -1236,24 +1551,21 @@ fn cmd_chaos_smoke(a: &Args) -> Result<()> {
         reset_chance: 0.01,
         max_resets: 4,
     };
-    let server = ChaosServer::start(&cfg, &server_sock, None)?;
-    let proxy = ChaosProxy::start(&server_sock, &proxy_sock, chaos)?;
-    eprintln!(
-        "[chaos] server on {} behind seeded proxy on {} (seed {seed:#x})",
-        server_sock.display(),
-        proxy_sock.display()
-    );
+    let (server, server_ep) = ChaosServer::start(&cfg, &server_bind, None)?;
+    let proxy = ChaosProxy::start_endpoints(&server_ep, &proxy_bind, chaos)?;
+    let proxy_ep = proxy.listen_endpoint().clone();
+    eprintln!("[chaos] server on {server_ep} behind seeded proxy on {proxy_ep} (seed {seed:#x})");
 
     // ---- Phase A: concurrent soak through the faulted link ---------
     let soak_batches = AtomicU64::new(0);
     std::thread::scope(|s| -> Result<()> {
         let mut handles = Vec::new();
         for actor in 0..3usize {
-            let proxy_sock = &proxy_sock;
+            let proxy_ep = &proxy_ep;
             let policy = policy.clone();
             handles.push(s.spawn(move || -> Result<()> {
                 let w = retry_connect("soak writer connect", || {
-                    RemoteWriter::connect_with(proxy_sock, actor as u64, policy.clone())
+                    RemoteWriter::connect_endpoint_with(proxy_ep, actor as u64, policy.clone())
                 })?;
                 let mut w = w.with_batch(REMOTE_SMOKE_BATCH);
                 for i in 0..steps_per_writer {
@@ -1279,16 +1591,16 @@ fn cmd_chaos_smoke(a: &Args) -> Result<()> {
             }));
         }
         for sidx in 0..2u64 {
-            let proxy_sock = &proxy_sock;
-            let server_sock = &server_sock;
+            let proxy_ep = &proxy_ep;
+            let server_ep = &server_ep;
             let policy = policy.clone();
             let soak_batches = &soak_batches;
             handles.push(s.spawn(move || -> Result<()> {
-                // Gate on warmup over the DIRECT socket (`Stats` never
-                // touches table counters), so the faulted sampler
+                // Gate on warmup over the DIRECT endpoint (`Stats`
+                // never touches table counters), so the faulted sampler
                 // never sees NotEnoughData — keeping outcomes, and
                 // therefore counters, deterministic.
-                let mut direct = RemoteClient::connect(server_sock)?;
+                let mut direct = RemoteClient::connect_endpoint(server_ep)?;
                 let mut spins = 0u32;
                 while direct.stats()?[0].len < warmup as u64 {
                     spins += 1;
@@ -1296,8 +1608,8 @@ fn cmd_chaos_smoke(a: &Args) -> Result<()> {
                     std::thread::sleep(Duration::from_millis(1));
                 }
                 let mut smp = retry_connect("soak sampler connect", || {
-                    RemoteSampler::connect_default_with(
-                        proxy_sock,
+                    RemoteSampler::connect_default_endpoint_with(
+                        proxy_ep,
                         0xC4A0_0000 + sidx,
                         policy.clone(),
                     )
@@ -1346,7 +1658,7 @@ fn cmd_chaos_smoke(a: &Args) -> Result<()> {
             );
         }
     }
-    let mid_bytes = RemoteClient::connect(&server_sock)?.checkpoint_bytes()?;
+    let mid_bytes = RemoteClient::connect_endpoint(&server_ep)?.checkpoint_bytes()?;
     ensure_checkpoints_match(
         "after the chaos soak",
         &mid_bytes,
@@ -1366,7 +1678,7 @@ fn cmd_chaos_smoke(a: &Args) -> Result<()> {
     let mut writers_b = Vec::new();
     for a_id in 0..3u64 {
         let w = retry_connect("outage writer connect", || {
-            RemoteWriter::connect_with(&proxy_sock, 10 + a_id, policy.clone())
+            RemoteWriter::connect_endpoint_with(&proxy_ep, 10 + a_id, policy.clone())
         })?;
         writers_b.push(w.with_batch(REMOTE_SMOKE_BATCH));
     }
@@ -1374,8 +1686,8 @@ fn cmd_chaos_smoke(a: &Args) -> Result<()> {
     proxy.kill_connections();
     server.stop()?;
     ensure!(
-        RemoteClient::connect(&server_sock).is_err(),
-        "server socket still answers after the kill"
+        RemoteClient::connect_endpoint(&server_ep).is_err(),
+        "server endpoint still answers after the kill"
     );
     for (a_idx, w) in writers_b.iter_mut().enumerate() {
         for i in 0..steps_per_writer {
@@ -1393,7 +1705,7 @@ fn cmd_chaos_smoke(a: &Args) -> Result<()> {
         );
     }
     let restored = ServiceState::decode(&mid_bytes)?;
-    let server = ChaosServer::start(&cfg, &server_sock, Some(&restored))?;
+    let (server, _) = ChaosServer::start(&cfg, &server_ep, Some(&restored))?;
     proxy.set_blackhole(false);
     for w in &mut writers_b {
         let mut spins = 0u32;
@@ -1414,7 +1726,7 @@ fn cmd_chaos_smoke(a: &Args) -> Result<()> {
     }
     ensure_checkpoints_match(
         "after the kill/restart drill",
-        &RemoteClient::connect(&server_sock)?.checkpoint_bytes()?,
+        &RemoteClient::connect_endpoint(&server_ep)?.checkpoint_bytes()?,
         &ServiceState::capture(&twin)?.encode(),
     )?;
     eprintln!(
@@ -1429,7 +1741,7 @@ fn cmd_chaos_smoke(a: &Args) -> Result<()> {
     let mut c_updates = 0u64;
     for s_seed in [seed ^ 0x51, seed ^ 0x52] {
         let smp = retry_connect("prefetch sampler connect", || {
-            RemoteSampler::connect_default_with(&proxy_sock, s_seed, policy.clone())
+            RemoteSampler::connect_default_endpoint_with(&proxy_ep, s_seed, policy.clone())
         })?;
         let mut smp = smp.with_prefetch(true);
         let mut local_rng = Rng::new(s_seed);
@@ -1442,7 +1754,7 @@ fn cmd_chaos_smoke(a: &Args) -> Result<()> {
 
     // ---- Phase D: spill overflow under a full outage ---------------
     let w7 = retry_connect("spill writer connect", || {
-        RemoteWriter::connect_with(&proxy_sock, 7, policy.clone())
+        RemoteWriter::connect_endpoint_with(&proxy_ep, 7, policy.clone())
     })?;
     let mut w7 = w7.with_batch(4).with_spill_cap(8);
     proxy.set_blackhole(true);
@@ -1479,7 +1791,7 @@ fn cmd_chaos_smoke(a: &Args) -> Result<()> {
     for t in twin.tables() {
         t.add_steps_dropped(32);
     }
-    let final_remote = RemoteClient::connect(&server_sock)?.checkpoint_bytes()?;
+    let final_remote = RemoteClient::connect_endpoint(&server_ep)?.checkpoint_bytes()?;
     ensure_checkpoints_match(
         "after the spill-overflow drill",
         &final_remote,
@@ -1487,8 +1799,8 @@ fn cmd_chaos_smoke(a: &Args) -> Result<()> {
     )?;
     drop(w7);
 
-    // ---- Exact end-to-end accounting over the direct socket --------
-    let stats = RemoteClient::connect(&server_sock)?.stats()?;
+    // ---- Exact end-to-end accounting over the direct endpoint ------
+    let stats = RemoteClient::connect_endpoint(&server_ep)?.stats()?;
     ensure!(!stats.is_empty(), "server reports no tables after the drill");
     let total_steps = 6 * steps_per_writer + 8;
     let replay = &stats[0];
@@ -1529,14 +1841,15 @@ fn cmd_chaos_smoke(a: &Args) -> Result<()> {
     let resets = proxy.resets_injected();
     ensure!(resets >= 1, "the chaos proxy never injected a reset");
 
-    RemoteClient::connect(&server_sock)?.shutdown()?;
+    RemoteClient::connect_endpoint(&server_ep)?.shutdown()?;
     server.stop()?;
     drop(proxy);
     let _ = std::fs::remove_dir_all(&dir);
     println!(
-        "chaos-smoke OK: {total_steps} steps exactly once across {resets} proxy resets and \
-         one server restart, 32 overflow drops accounted, final checkpoint byte-identical \
+        "chaos-smoke OK ({}): {total_steps} steps exactly once across {resets} proxy resets \
+         and one server restart, 32 overflow drops accounted, final checkpoint byte-identical \
          ({} bytes)",
+        if tcp { "tcp" } else { "uds" },
         final_remote.len()
     );
     Ok(())
@@ -1595,6 +1908,7 @@ fn main() -> Result<()> {
         Some("buffer-bench") => cmd_buffer_bench(&a),
         Some("state-smoke") => cmd_state_smoke(&a),
         Some("remote-smoke") => cmd_remote_smoke(&a),
+        Some("mesh-smoke") => cmd_mesh_smoke(&a),
         Some("chaos-smoke") => cmd_chaos_smoke(&a),
         Some("dse") => cmd_dse(&a),
         Some(other) => bail!("unknown subcommand `{other}` (try `pal` for usage)"),

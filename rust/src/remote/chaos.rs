@@ -1,8 +1,8 @@
-//! A deterministic chaos proxy for the remote replay protocol: a
-//! Unix-socket-to-Unix-socket forwarder that injects faults — delays,
-//! partial writes, connection resets, hard connection kills, and a
-//! black-hole mode — between clients and a [`super::ReplayServer`],
-//! without either side knowing it is there.
+//! A deterministic chaos proxy for the remote replay protocol: an
+//! endpoint-to-endpoint forwarder — Unix socket or TCP on either side —
+//! that injects faults — delays, partial writes, connection resets,
+//! hard connection kills, and a black-hole mode — between clients and a
+//! [`super::ReplayServer`], without either side knowing it is there.
 //!
 //! This is test infrastructure (the `remote_chaos` soaks and the
 //! `pal chaos-smoke` CI restart drill), shipped in the library so the
@@ -11,7 +11,9 @@
 //! # Determinism contract
 //!
 //! All fault *decisions* are drawn from seeded [`Rng`] streams, never
-//! from ambient entropy:
+//! from ambient entropy, and the streams are transport-independent — a
+//! TCP proxy with the same seed draws the same verdict sequence as a
+//! UDS one:
 //!
 //! * Connection `i` (1-based accept order) gets two decision streams,
 //!   forked from [`ChaosConfig::seed`] as `fork(2·i)` for the
@@ -52,11 +54,12 @@
 //!   server-unreachable outage; clients see connect-then-dead, their
 //!   backoff schedules pace the retries).
 
+use super::transport::{Endpoint, RpcListener, RpcStream};
 use crate::util::rng::Rng;
-use anyhow::{Context, Result};
+use anyhow::Result;
 use std::io::{Read, Write};
-use std::os::unix::net::{UnixListener, UnixStream};
-use std::path::{Path, PathBuf};
+use std::net::Shutdown;
+use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -96,16 +99,16 @@ impl Default for ChaosConfig {
 /// One live proxied connection: both stream halves (kept so a kill can
 /// shut them down from outside the pump threads) plus its kill flag.
 struct Conn {
-    client: UnixStream,
-    server: UnixStream,
+    client: RpcStream,
+    server: RpcStream,
     dead: Arc<AtomicBool>,
 }
 
 impl Conn {
     fn kill(&self) {
         self.dead.store(true, Ordering::Relaxed);
-        let _ = self.client.shutdown(std::net::Shutdown::Both);
-        let _ = self.server.shutdown(std::net::Shutdown::Both);
+        let _ = self.client.shutdown(Shutdown::Both);
+        let _ = self.server.shutdown(Shutdown::Both);
     }
 }
 
@@ -119,35 +122,46 @@ struct Shared {
     conns: Mutex<Vec<Conn>>,
 }
 
-/// A running chaos proxy; construct with [`ChaosProxy::start`], point
-/// clients at [`ChaosProxy::listen_path`]. Dropping the handle stops
-/// the accept loop, kills live connections, and removes the socket.
+/// A running chaos proxy; construct with [`ChaosProxy::start`] (UDS
+/// paths) or [`ChaosProxy::start_endpoints`] (either transport on
+/// either side), point clients at [`ChaosProxy::listen_endpoint`].
+/// Dropping the handle stops the accept loop, kills live connections,
+/// and removes a UDS listen socket.
 pub struct ChaosProxy {
     shared: Arc<Shared>,
-    listen_path: PathBuf,
+    listen: Endpoint,
     accept_thread: Option<std::thread::JoinHandle<()>>,
 }
 
 impl ChaosProxy {
-    /// Bind `listen_path` and forward each accepted connection to the
-    /// replay server at `upstream`, injecting faults per `cfg`.
+    /// Bind the Unix socket `listen_path` and forward each accepted
+    /// connection to the replay server at `upstream`, injecting faults
+    /// per `cfg` (the original all-UDS form; see
+    /// [`Self::start_endpoints`] for TCP).
     pub fn start(
         upstream: impl AsRef<Path>,
         listen_path: impl AsRef<Path>,
         cfg: ChaosConfig,
     ) -> Result<Self> {
-        let upstream = upstream.as_ref().to_path_buf();
-        let listen_path = listen_path.as_ref().to_path_buf();
-        if listen_path.exists() {
-            std::fs::remove_file(&listen_path).with_context(|| {
-                format!("removing stale chaos socket {}", listen_path.display())
-            })?;
-        }
-        let listener = UnixListener::bind(&listen_path)
-            .with_context(|| format!("binding chaos proxy socket {}", listen_path.display()))?;
-        listener
-            .set_nonblocking(true)
-            .context("setting the chaos listener non-blocking")?;
+        Self::start_endpoints(
+            &Endpoint::from(upstream.as_ref()),
+            &Endpoint::from(listen_path.as_ref()),
+            cfg,
+        )
+    }
+
+    /// Bind `listen` and forward each accepted connection to the replay
+    /// server at `upstream`, injecting faults per `cfg`. Either side
+    /// may be UDS or TCP (they need not match — the proxy is also a
+    /// transport bridge); a TCP `:0` listen reports its resolved port
+    /// via [`Self::listen_endpoint`].
+    pub fn start_endpoints(
+        upstream: &Endpoint,
+        listen: &Endpoint,
+        cfg: ChaosConfig,
+    ) -> Result<Self> {
+        let listener = RpcListener::bind(listen)?;
+        let listen = listener.endpoint();
         let shared = Arc::new(Shared {
             cfg,
             stop: AtomicBool::new(false),
@@ -156,15 +170,28 @@ impl ChaosProxy {
             conns: Mutex::new(Vec::new()),
         });
         let accept_shared = Arc::clone(&shared);
+        let upstream = upstream.clone();
         let accept_thread = std::thread::spawn(move || {
             accept_loop(listener, upstream, accept_shared);
         });
-        Ok(Self { shared, listen_path, accept_thread: Some(accept_thread) })
+        Ok(Self { shared, listen, accept_thread: Some(accept_thread) })
     }
 
-    /// The socket clients should dial instead of the real server's.
+    /// The endpoint clients should dial instead of the real server's
+    /// (for a TCP `:0` bind, the resolved address).
+    pub fn listen_endpoint(&self) -> &Endpoint {
+        &self.listen
+    }
+
+    /// The socket path clients should dial, for the UDS form.
+    ///
+    /// # Panics
+    /// On a TCP proxy — use [`Self::listen_endpoint`] there.
     pub fn listen_path(&self) -> &Path {
-        &self.listen_path
+        match &self.listen {
+            Endpoint::Uds(p) => p,
+            Endpoint::Tcp(a) => panic!("chaos proxy listens on tcp://{a}, not a socket path"),
+        }
     }
 
     /// Total connection resets injected so far (seeded resets plus
@@ -197,16 +224,18 @@ impl ChaosProxy {
         killed
     }
 
-    /// Stop the accept loop, kill live connections, remove the socket.
-    /// Also what `Drop` does; explicit form for tests that want to
-    /// simulate the proxy process dying.
+    /// Stop the accept loop, kill live connections, remove a UDS listen
+    /// socket. Also what `Drop` does; explicit form for tests that want
+    /// to simulate the proxy process dying.
     pub fn stop(&mut self) {
         self.shared.stop.store(true, Ordering::Relaxed);
         self.kill_connections();
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
-        let _ = std::fs::remove_file(&self.listen_path);
+        if let Endpoint::Uds(path) = &self.listen {
+            let _ = std::fs::remove_file(path);
+        }
     }
 }
 
@@ -216,22 +245,22 @@ impl Drop for ChaosProxy {
     }
 }
 
-fn accept_loop(listener: UnixListener, upstream: PathBuf, shared: Arc<Shared>) {
+fn accept_loop(listener: RpcListener, upstream: Endpoint, shared: Arc<Shared>) {
     let mut conn_id = 0u64;
     // One root stream per proxy; each connection forks its two
     // direction streams from it by id, so decision streams are fixed
-    // by (seed, accept order) alone.
+    // by (seed, accept order) alone — on either transport.
     let mut root = Rng::new(shared.cfg.seed);
     while !shared.stop.load(Ordering::Relaxed) {
         match listener.accept() {
-            Ok((client, _addr)) => {
+            Ok(client) => {
                 if shared.blackhole.load(Ordering::Relaxed) {
                     drop(client); // accept-then-vanish: the outage mode
                     continue;
                 }
                 conn_id += 1;
                 let _ = client.set_nonblocking(false);
-                let server = match UnixStream::connect(&upstream) {
+                let server = match upstream.dial() {
                     Ok(s) => s,
                     Err(_) => {
                         drop(client); // upstream gone: behave like it
@@ -253,12 +282,13 @@ fn accept_loop(listener: UnixListener, upstream: PathBuf, shared: Arc<Shared>) {
             Err(_) => break,
         }
     }
+    listener.cleanup();
 }
 
 fn spawn_pumps(
     shared: &Arc<Shared>,
-    client: &UnixStream,
-    server: &UnixStream,
+    client: &RpcStream,
+    server: &RpcStream,
     dead: &Arc<AtomicBool>,
     c2s_rng: Rng,
     s2c_rng: Rng,
@@ -284,8 +314,8 @@ fn spawn_pumps(
 /// in a fixed order per chunk: reset? → delay? → shred?.
 fn pump(
     shared: Arc<Shared>,
-    mut from: UnixStream,
-    mut to: UnixStream,
+    mut from: RpcStream,
+    mut to: RpcStream,
     dead: Arc<AtomicBool>,
     mut rng: Rng,
 ) {
@@ -314,8 +344,8 @@ fn pump(
         let shred = rng.chance(shared.cfg.shred_chance);
         if reset && try_claim_reset(&shared) {
             dead.store(true, Ordering::Relaxed);
-            let _ = from.shutdown(std::net::Shutdown::Both);
-            let _ = to.shutdown(std::net::Shutdown::Both);
+            let _ = from.shutdown(Shutdown::Both);
+            let _ = to.shutdown(Shutdown::Both);
             break;
         }
         if delay {
@@ -331,8 +361,8 @@ fn pump(
             break;
         }
     }
-    let _ = from.shutdown(std::net::Shutdown::Both);
-    let _ = to.shutdown(std::net::Shutdown::Both);
+    let _ = from.shutdown(Shutdown::Both);
+    let _ = to.shutdown(Shutdown::Both);
 }
 
 /// Claim one of the bounded reset slots; false once the cap is spent.
@@ -351,7 +381,7 @@ fn try_claim_reset(shared: &Shared) -> bool {
 
 /// Forward a chunk in seeded 1–7-byte slices with microsleeps between
 /// them — the torn-write torture for the framing layer.
-fn write_shredded(to: &mut UnixStream, chunk: &[u8], rng: &mut Rng) -> std::io::Result<()> {
+fn write_shredded(to: &mut RpcStream, chunk: &[u8], rng: &mut Rng) -> std::io::Result<()> {
     let mut off = 0;
     while off < chunk.len() {
         let piece = 1 + rng.below(7) as usize;
@@ -367,20 +397,19 @@ fn write_shredded(to: &mut UnixStream, chunk: &[u8], rng: &mut Rng) -> std::io::
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::io::{Read, Write};
 
-    fn sock(dir: &std::path::Path, name: &str) -> PathBuf {
-        dir.join(name)
-    }
-
-    /// A trivial upstream echo server: reads chunks, writes them back.
-    fn spawn_echo(path: PathBuf, stop: Arc<AtomicBool>) -> std::thread::JoinHandle<()> {
-        let listener = UnixListener::bind(&path).expect("bind echo");
-        listener.set_nonblocking(true).expect("nonblocking echo");
-        std::thread::spawn(move || {
+    /// A trivial upstream echo server on either transport: reads
+    /// chunks, writes them back. Returns the resolved endpoint.
+    fn spawn_echo(
+        endpoint: &Endpoint,
+        stop: Arc<AtomicBool>,
+    ) -> (Endpoint, std::thread::JoinHandle<()>) {
+        let listener = RpcListener::bind(endpoint).expect("bind echo");
+        let resolved = listener.endpoint();
+        let handle = std::thread::spawn(move || {
             while !stop.load(Ordering::Relaxed) {
                 match listener.accept() {
-                    Ok((mut s, _)) => {
+                    Ok(mut s) => {
                         let _ = s.set_nonblocking(false);
                         let _ = s.set_read_timeout(Some(Duration::from_millis(25)));
                         let stop = Arc::clone(&stop);
@@ -414,32 +443,34 @@ mod tests {
                     Err(_) => break,
                 }
             }
-            let _ = std::fs::remove_file(&path);
-        })
+            listener.cleanup();
+        });
+        (resolved, handle)
+    }
+
+    fn echo_roundtrip_through(proxy: &ChaosProxy) {
+        let mut c = proxy.listen_endpoint().dial().expect("connect");
+        let msg = b"the chaos proxy must not corrupt payload bytes";
+        c.write_all(msg).expect("write");
+        let mut got = vec![0u8; msg.len()];
+        c.read_exact(&mut got).expect("read back");
+        assert_eq!(&got, msg);
     }
 
     #[test]
     fn forwards_bytes_transparently_even_when_shredding() {
         let dir = std::env::temp_dir().join(format!("pal_chaos_fwd_{}", std::process::id()));
         std::fs::create_dir_all(&dir).expect("mkdir");
-        let up = sock(&dir, "up.sock");
         let stop = Arc::new(AtomicBool::new(false));
-        let echo = spawn_echo(up.clone(), Arc::clone(&stop));
-        let proxy = ChaosProxy::start(
+        let (up, echo) =
+            spawn_echo(&Endpoint::Uds(dir.join("up.sock")), Arc::clone(&stop));
+        let proxy = ChaosProxy::start_endpoints(
             &up,
-            sock(&dir, "proxy.sock"),
+            &Endpoint::Uds(dir.join("proxy.sock")),
             ChaosConfig { shred_chance: 1.0, ..ChaosConfig::default() },
         )
         .expect("start proxy");
-
-        let mut c = UnixStream::connect(proxy.listen_path()).expect("connect");
-        let msg = b"the chaos proxy must not corrupt payload bytes";
-        c.write_all(msg).expect("write");
-        let mut got = vec![0u8; msg.len()];
-        c.read_exact(&mut got).expect("read back");
-        assert_eq!(&got, msg);
-
-        drop(c);
+        echo_roundtrip_through(&proxy);
         drop(proxy);
         stop.store(true, Ordering::Relaxed);
         echo.join().expect("echo thread");
@@ -447,17 +478,45 @@ mod tests {
     }
 
     #[test]
+    fn tcp_proxy_forwards_and_reports_resolved_port() {
+        // TCP on both sides, both bound to ephemeral ports: the proxy
+        // must report where it actually listens, and the same shredding
+        // contract must hold byte-for-byte.
+        let stop = Arc::new(AtomicBool::new(false));
+        let (up, echo) =
+            spawn_echo(&Endpoint::Tcp("127.0.0.1:0".into()), Arc::clone(&stop));
+        let proxy = ChaosProxy::start_endpoints(
+            &up,
+            &Endpoint::Tcp("127.0.0.1:0".into()),
+            ChaosConfig { shred_chance: 1.0, ..ChaosConfig::default() },
+        )
+        .expect("start proxy");
+        match proxy.listen_endpoint() {
+            Endpoint::Tcp(a) => assert!(!a.ends_with(":0"), "unresolved listen address {a}"),
+            other => panic!("tcp proxy reported {other:?}"),
+        }
+        echo_roundtrip_through(&proxy);
+        drop(proxy);
+        stop.store(true, Ordering::Relaxed);
+        echo.join().expect("echo thread");
+    }
+
+    #[test]
     fn blackhole_and_kill_sever_clients() {
         let dir = std::env::temp_dir().join(format!("pal_chaos_kill_{}", std::process::id()));
         std::fs::create_dir_all(&dir).expect("mkdir");
-        let up = sock(&dir, "up.sock");
         let stop = Arc::new(AtomicBool::new(false));
-        let echo = spawn_echo(up.clone(), Arc::clone(&stop));
-        let proxy = ChaosProxy::start(&up, sock(&dir, "proxy.sock"), ChaosConfig::default())
-            .expect("start proxy");
+        let (up, echo) =
+            spawn_echo(&Endpoint::Uds(dir.join("up.sock")), Arc::clone(&stop));
+        let proxy = ChaosProxy::start_endpoints(
+            &up,
+            &Endpoint::Uds(dir.join("proxy.sock")),
+            ChaosConfig::default(),
+        )
+        .expect("start proxy");
 
         // A live connection echoes...
-        let mut c = UnixStream::connect(proxy.listen_path()).expect("connect");
+        let mut c = proxy.listen_endpoint().dial().expect("connect");
         c.write_all(b"ping").expect("write");
         let mut got = [0u8; 4];
         c.read_exact(&mut got).expect("read");
@@ -472,7 +531,7 @@ mod tests {
 
         // Black hole: connects succeed, then the socket is dead.
         proxy.set_blackhole(true);
-        let mut c2 = UnixStream::connect(proxy.listen_path()).expect("connect during blackhole");
+        let mut c2 = proxy.listen_endpoint().dial().expect("connect during blackhole");
         let _ = c2.set_read_timeout(Some(Duration::from_millis(500)));
         let _ = c2.write_all(b"hello?");
         match c2.read(&mut buf) {
@@ -499,5 +558,29 @@ mod tests {
         };
         assert_eq!(verdicts(7), verdicts(7));
         assert_ne!(verdicts(7), verdicts(8), "different seeds must differ somewhere");
+    }
+
+    #[test]
+    fn uds_listen_path_still_exposed() {
+        let dir = std::env::temp_dir().join(format!("pal_chaos_path_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).expect("mkdir");
+        let up = dir.join("up.sock"); // never dialed: no traffic flows
+        let proxy = ChaosProxy::start(&up, dir.join("proxy.sock"), ChaosConfig::default())
+            .expect("start proxy");
+        assert_eq!(proxy.listen_path(), dir.join("proxy.sock"));
+        drop(proxy);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a socket path")]
+    fn listen_path_panics_on_tcp() {
+        let proxy = ChaosProxy::start_endpoints(
+            &Endpoint::Tcp("127.0.0.1:1".into()),
+            &Endpoint::Tcp("127.0.0.1:0".into()),
+            ChaosConfig::default(),
+        )
+        .expect("start proxy");
+        let _ = proxy.listen_path();
     }
 }

@@ -57,18 +57,19 @@
 use super::backoff::{Backoff, BackoffPolicy};
 use super::frame::{read_frame_into, write_frame};
 use super::proto::{
-    self, Request, Response, SampleOutcomeWire, StallReason, TableInfo, MAX_APPEND_STEPS,
+    self, Request, Response, SampleOutcomeWire, StallReason, TableInfo, DEFAULT_CHUNK_LEN,
+    MAX_APPEND_STEPS,
 };
+use super::transport::{Endpoint, RpcStream};
 use crate::replay::SampleBatch;
 use crate::service::{
     ExperienceSampler, ExperienceWriter, SampleOutcome, ServiceState, WriterStep,
 };
-use crate::util::blob::ByteWriter;
+use crate::util::blob::{crc32, ByteWriter};
 use crate::util::rng::Rng;
 use anyhow::{bail, Context, Result};
 use std::collections::VecDeque;
-use std::os::unix::net::UnixStream;
-use std::path::{Path, PathBuf};
+use std::path::Path;
 use std::time::{Duration, Instant};
 
 /// Default bound on one RPC's silence before the client gives up on
@@ -130,13 +131,14 @@ impl Default for ConnectionPolicy {
 /// wrapper plus typed helpers for every RPC. Requests encode into a
 /// per-connection [`ByteWriter`] and responses decode out of a
 /// per-connection payload buffer, both reused across calls. The client
-/// remembers its dial path, session id, and request sequence counter,
-/// so a supervisor can redial and resume the server-side session.
+/// remembers its dial endpoint (UDS path or TCP address), session id,
+/// and request sequence counter, so a supervisor can redial and resume
+/// the server-side session.
 pub struct RemoteClient {
-    stream: UnixStream,
+    stream: RpcStream,
     enc: ByteWriter,
     rbuf: Vec<u8>,
-    path: PathBuf,
+    endpoint: Endpoint,
     policy: ConnectionPolicy,
     /// Seed re-quoted on every redial's `Hello`, once [`Self::hello`]
     /// has run (a client that never said hello redials sessionless).
@@ -155,15 +157,27 @@ impl RemoteClient {
         Self::connect_with(path, ConnectionPolicy::default())
     }
 
-    /// Connect under an explicit timeout/backoff policy.
+    /// Connect to a Unix-socket path under an explicit timeout/backoff
+    /// policy (the pre-mesh constructor; endpoint-blind callers use
+    /// [`Self::connect_endpoint_with`]).
     pub fn connect_with(path: impl AsRef<Path>, policy: ConnectionPolicy) -> Result<Self> {
-        let path = path.as_ref().to_path_buf();
-        let stream = Self::dial(&path, &policy)?;
+        Self::connect_endpoint_with(&Endpoint::from(path.as_ref()), policy)
+    }
+
+    /// Connect to a UDS or TCP endpoint with the default policy.
+    pub fn connect_endpoint(endpoint: &Endpoint) -> Result<Self> {
+        Self::connect_endpoint_with(endpoint, ConnectionPolicy::default())
+    }
+
+    /// Connect to a UDS or TCP endpoint under an explicit
+    /// timeout/backoff policy.
+    pub fn connect_endpoint_with(endpoint: &Endpoint, policy: ConnectionPolicy) -> Result<Self> {
+        let stream = Self::dial(endpoint, &policy)?;
         Ok(Self {
             stream,
             enc: ByteWriter::new(),
             rbuf: Vec::new(),
-            path,
+            endpoint: endpoint.clone(),
             policy,
             hello_seed: None,
             session: 0,
@@ -173,9 +187,10 @@ impl RemoteClient {
         })
     }
 
-    fn dial(path: &Path, policy: &ConnectionPolicy) -> Result<UnixStream> {
-        let stream = UnixStream::connect(path)
-            .with_context(|| format!("connecting to replay server at {}", path.display()))?;
+    fn dial(endpoint: &Endpoint, policy: &ConnectionPolicy) -> Result<RpcStream> {
+        let stream = endpoint
+            .dial()
+            .with_context(|| format!("connecting to replay server at {endpoint}"))?;
         stream
             .set_read_timeout(Some(policy.rpc_timeout))
             .context("setting the RPC read timeout")?;
@@ -187,6 +202,11 @@ impl RemoteClient {
 
     pub fn policy(&self) -> &ConnectionPolicy {
         &self.policy
+    }
+
+    /// The endpoint this client dials (and redials).
+    pub fn endpoint(&self) -> &Endpoint {
+        &self.endpoint
     }
 
     /// The server-side session id this connection is bound to (0 before
@@ -219,7 +239,7 @@ impl RemoteClient {
     /// connection is usable; check [`Self::last_hello_resumed`] to
     /// learn whether server-side state survived.
     pub fn try_redial(&mut self) -> Result<()> {
-        self.stream = Self::dial(&self.path, &self.policy)?;
+        self.stream = Self::dial(&self.endpoint, &self.policy)?;
         if let Some(seed) = self.hello_seed {
             self.hello(seed)?;
         }
@@ -241,7 +261,7 @@ impl RemoteClient {
                             format!(
                                 "reconnect to replay server at {} gave up: deadline {:?} \
                                  exceeded after {} attempts",
-                                self.path.display(),
+                                self.endpoint,
                                 backoff.deadline(),
                                 backoff.attempts()
                             )
@@ -439,13 +459,79 @@ impl RemoteClient {
         }
     }
 
-    /// The server's whole serialized state, as raw `ServiceState`
-    /// payload bytes (what [`ServiceState::encode`] produced).
-    pub fn checkpoint_bytes(&mut self) -> Result<Vec<u8>> {
-        match self.call_checked(&Request::Checkpoint)? {
-            Response::State { state } => Ok(state),
-            other => bail!("unexpected response to Checkpoint: {other:?}"),
+    /// One table's item count and total priority mass — the lightweight
+    /// probe [`super::MeshSampler`] polls to pick a server before each
+    /// batch (level 1 of the two-level draw).
+    pub fn mass(&mut self, table: &str) -> Result<(u64, f32)> {
+        match self.call_checked(&Request::Mass { table: table.to_string() })? {
+            Response::Mass { len, mass } => Ok((len, mass)),
+            other => bail!("unexpected response to Mass: {other:?}"),
         }
+    }
+
+    /// The server's whole serialized state, as raw `ServiceState`
+    /// payload bytes (what [`ServiceState::encode`] produced). Streams
+    /// over the chunked transfer protocol — `CheckpointChunked`
+    /// answered by a `ChunkBegin`/`Chunk…`/`ChunkEnd` train of bounded
+    /// frames — so a table bigger than one frame's 256 MiB cap still
+    /// moves; every chunk is CRC- and sequence-checked on arrival and
+    /// the reassembled payload is checked against the end-of-stream
+    /// digest.
+    pub fn checkpoint_bytes(&mut self) -> Result<Vec<u8>> {
+        self.checkpoint_bytes_chunked(DEFAULT_CHUNK_LEN)
+    }
+
+    /// As [`Self::checkpoint_bytes`], with an explicit chunk size (the
+    /// tests pin tiny chunks to force many frames).
+    pub fn checkpoint_bytes_chunked(&mut self, max_chunk: usize) -> Result<Vec<u8>> {
+        let max_chunk = max_chunk.clamp(1, proto::MAX_CHUNK_LEN);
+        self.send(&Request::CheckpointChunked { max_chunk: max_chunk as u32 })?;
+        let (total_len, chunk_len, chunk_count) = match self.recv()? {
+            Response::ChunkBegin { total_len, chunk_len, chunk_count } => {
+                (total_len, chunk_len, chunk_count)
+            }
+            Response::Error { message } => bail!("replay server error: {message}"),
+            other => bail!("unexpected response to CheckpointChunked: {other:?}"),
+        };
+        let mut state = Vec::new();
+        for want in 0..chunk_count {
+            match self.recv()? {
+                Response::Chunk { seq, crc, data } => {
+                    if seq != want {
+                        bail!(
+                            "checkpoint stream out of order: got chunk {seq}, expected {want}"
+                        );
+                    }
+                    let expected = if want + 1 == chunk_count {
+                        total_len - u64::from(chunk_count - 1) * u64::from(chunk_len)
+                    } else {
+                        u64::from(chunk_len)
+                    };
+                    if data.len() as u64 != expected {
+                        bail!(
+                            "checkpoint chunk {seq} is {} bytes, stream declared {expected}",
+                            data.len()
+                        );
+                    }
+                    if crc32(&data) != crc {
+                        bail!("checkpoint chunk {seq} CRC mismatch (corrupted in flight)");
+                    }
+                    state.extend_from_slice(&data);
+                }
+                Response::Error { message } => bail!("replay server error: {message}"),
+                other => bail!("unexpected frame in a checkpoint stream: {other:?}"),
+            }
+        }
+        match self.recv()? {
+            Response::ChunkEnd { total_crc } => {
+                if crc32(&state) != total_crc {
+                    bail!("reassembled checkpoint CRC mismatch");
+                }
+            }
+            Response::Error { message } => bail!("replay server error: {message}"),
+            other => bail!("unexpected end of a checkpoint stream: {other:?}"),
+        }
+        Ok(state)
     }
 
     /// The server's whole state, decoded.
@@ -454,11 +540,43 @@ impl RemoteClient {
             .context("decoding the replay server's checkpoint payload")
     }
 
-    /// Restore a previously captured state into the served tables.
+    /// Restore a previously captured state into the served tables,
+    /// streamed as a `ChunkBegin`/`Chunk…`/`ChunkEnd` upload of bounded
+    /// frames. The server stages the chunks connection-locally and
+    /// applies the restore only after the final digest verifies — any
+    /// violation (or a dropped link) leaves the tables untouched.
     pub fn restore_state(&mut self, state: &ServiceState) -> Result<()> {
-        match self.call_checked(&Request::Restore { state: state.encode() })? {
+        self.restore_state_chunked(state, DEFAULT_CHUNK_LEN)
+    }
+
+    /// As [`Self::restore_state`], with an explicit chunk size.
+    pub fn restore_state_chunked(
+        &mut self,
+        state: &ServiceState,
+        max_chunk: usize,
+    ) -> Result<()> {
+        let bytes = state.encode();
+        let chunk_len = max_chunk.clamp(1, proto::MAX_CHUNK_LEN);
+        let chunk_count = bytes.len().div_ceil(chunk_len);
+        match self.call(&Request::ChunkBegin {
+            total_len: bytes.len() as u64,
+            chunk_len: chunk_len as u32,
+            chunk_count: chunk_count as u32,
+        })? {
+            Response::Ok => {}
+            Response::Error { message } => bail!("replay server error: {message}"),
+            other => bail!("unexpected response to ChunkBegin: {other:?}"),
+        }
+        for (seq, piece) in bytes.chunks(chunk_len).enumerate() {
+            self.enc.reset();
+            proto::encode_chunk_request(&mut self.enc, seq as u32, piece);
+            self.send_encoded()?;
+            self.recv_ok("Chunk")?;
+        }
+        match self.call(&Request::ChunkEnd { total_crc: crc32(&bytes) })? {
             Response::Ok => Ok(()),
-            other => bail!("unexpected response to Restore: {other:?}"),
+            Response::Error { message } => bail!("replay server error: {message}"),
+            other => bail!("unexpected response to ChunkEnd: {other:?}"),
         }
     }
 
@@ -533,13 +651,24 @@ impl RemoteWriter {
         Self::connect_with(path, actor_id, ConnectionPolicy::default())
     }
 
-    /// Connect under an explicit timeout/backoff policy.
+    /// Connect to a Unix-socket path under an explicit timeout/backoff
+    /// policy.
     pub fn connect_with(
         path: impl AsRef<Path>,
         actor_id: u64,
         policy: ConnectionPolicy,
     ) -> Result<Self> {
-        let mut client = RemoteClient::connect_with(path, policy)?;
+        Self::connect_endpoint_with(&Endpoint::from(path.as_ref()), actor_id, policy)
+    }
+
+    /// Connect to a UDS or TCP endpoint under an explicit
+    /// timeout/backoff policy.
+    pub fn connect_endpoint_with(
+        endpoint: &Endpoint,
+        actor_id: u64,
+        policy: ConnectionPolicy,
+    ) -> Result<Self> {
+        let mut client = RemoteClient::connect_endpoint_with(endpoint, policy)?;
         // Register a resumable session up front (the seed only matters
         // for sampling, which a writer never does).
         client.hello(actor_id)?;
@@ -915,7 +1044,17 @@ impl RemoteSampler {
         rng_seed: u64,
         policy: ConnectionPolicy,
     ) -> Result<Self> {
-        let mut client = RemoteClient::connect_with(path, policy)?;
+        Self::connect_default_endpoint_with(&Endpoint::from(path.as_ref()), rng_seed, policy)
+    }
+
+    /// As [`Self::connect_default`], to a UDS or TCP endpoint under an
+    /// explicit timeout/backoff policy.
+    pub fn connect_default_endpoint_with(
+        endpoint: &Endpoint,
+        rng_seed: u64,
+        policy: ConnectionPolicy,
+    ) -> Result<Self> {
+        let mut client = RemoteClient::connect_endpoint_with(endpoint, policy)?;
         let table = client.hello(rng_seed)?;
         if table.is_empty() {
             bail!("replay server reports no default table");

@@ -24,13 +24,13 @@ use std::io::{Read, Write};
 /// layouts).
 pub const FRAME_MAGIC: &[u8; 8] = b"PALRPC02";
 
-/// Upper bound on one frame's payload. Large enough for a checkpointed
-/// service of realistic size (`Checkpoint`/`Restore` frames carry whole
-/// table states), small enough that a corrupted or hostile length field
-/// cannot drive an absurd allocation. States past the cap get a clear
-/// error pointing at `pal serve --save-state` (server-side file
-/// checkpointing has no frame bound); chunked state streaming is the
-/// ROADMAP rung that removes the limit.
+/// Upper bound on one frame's payload. Large enough for any single
+/// RPC, small enough that a corrupted or hostile length field cannot
+/// drive an absurd allocation. Whole-state transfers are NOT bounded by
+/// this: `CheckpointChunked` and the `ChunkBegin`/`Chunk`/`ChunkEnd`
+/// restore stream (see [`super::proto`]) move a table state of up to
+/// `MAX_CHUNKED_STATE` bytes as a sequence of frames each no larger
+/// than `MAX_CHUNK_LEN` — far under this cap.
 pub const MAX_FRAME_LEN: usize = 1 << 28; // 256 MiB
 
 /// Write one frame. The payload is the caller's encoded request or

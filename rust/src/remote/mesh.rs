@@ -1,0 +1,515 @@
+//! Client-side replay mesh: ONE logical table spread over N replay
+//! servers, behind the same [`ExperienceWriter`] / [`ExperienceSampler`]
+//! traits the single-server handles implement — the actor and learner
+//! loops cannot tell whether their table lives in-process, behind one
+//! socket, or across a mesh of hosts.
+//!
+//! The routing mirrors [`crate::replay::ShardedPrioritizedReplay`]
+//! exactly, with servers in place of shards:
+//!
+//! * **Insert routing** — actor affinity: actor `a` writes server
+//!   `a % N` ([`MeshWriter`]), the cross-host image of
+//!   `insert_from`'s `actor_id % S` shard routing. One actor keeps one
+//!   connection; concurrent actors fan out over disjoint servers.
+//! * **Two-level sampling** — [`MeshSampler`] polls every server's
+//!   item count and total priority mass (the lightweight `Mass` RPC),
+//!   picks one server per batch proportional to its advertised mass
+//!   (skipping zero-mass servers while tracking the last positive one,
+//!   like the in-process level-1 scan), then samples the whole batch
+//!   within that server: P(server) · P(item | server) keeps the draw
+//!   proportional to priority across the mesh. Importance weights are
+//!   computed server-locally (each server normalizes by its own total
+//!   and length) — a documented v1 approximation that matches the
+//!   sharded buffer up to the cross-shard weight normalization.
+//! * **Priority feedback** — sampled indices are *global*
+//!   (`local + server · stride`); [`MeshSampler::update_priorities`]
+//!   groups them by server and ships one update RPC per server
+//!   touched, the wire image of `update_priorities_batched`.
+//!
+//! Global index `g` maps to server `g / stride`, local slot
+//! `g % stride`, where `stride` is the per-server table capacity —
+//! validated uniform across the mesh at connect time.
+//!
+//! Checkpoint/restore fan out per server ([`MeshSampler::checkpoint_states`]
+//! / [`MeshSampler::restore_states`]): each server's state is its own
+//! artifact, moved over the chunked transfer stream, so a mesh save is
+//! N bounded streams instead of one giant frame.
+
+use super::client::{is_transport_error, ConnectionPolicy, RemoteClient, RemoteWriter};
+use super::transport::Endpoint;
+use crate::replay::SampleBatch;
+use crate::service::{
+    ExperienceSampler, ExperienceWriter, SampleOutcome, ServiceState, WriterStep,
+};
+use crate::util::rng::{Rng, SplitMix64};
+use anyhow::{bail, ensure, Context, Result};
+
+/// Parse a comma-separated endpoint list (`uds://PATH`, `tcp://HOST:PORT`,
+/// or a bare socket path), rejecting empty entries and duplicates — a
+/// duplicated endpoint would silently double-dial one server and skew
+/// both affinity routing and the mass-proportional draw.
+pub fn parse_endpoint_list(s: &str) -> Result<Vec<Endpoint>> {
+    let mut endpoints: Vec<Endpoint> = Vec::new();
+    for (i, part) in s.split(',').enumerate() {
+        let part = part.trim();
+        ensure!(!part.is_empty(), "endpoint list entry {i} is empty (in `{s}`)");
+        let ep = Endpoint::parse(part).with_context(|| format!("endpoint list entry {i}"))?;
+        if let Some(prev) = endpoints.iter().position(|e| *e == ep) {
+            bail!("endpoint `{ep}` appears twice in the list (entries {prev} and {i})");
+        }
+        endpoints.push(ep);
+    }
+    Ok(endpoints)
+}
+
+/// The sampling seed one mesh client hands server `server` in its
+/// `Hello`: derived from the mesh seed so each server draws an
+/// independent stream, and exposed so an in-process twin (tests, the
+/// smoke drill) can mirror every server's RNG exactly.
+pub fn server_seed(seed: u64, server: usize) -> u64 {
+    SplitMix64::new(seed ^ (server as u64).wrapping_mul(0xA076_1D64_78BD_642F)).next_u64()
+}
+
+/// Run one RPC with a single supervised reconnect-and-retry on a
+/// transport failure (the mesh RPCs here are unsequenced and
+/// idempotent-enough: a retried `Mass`/`Stats` re-reads, a retried
+/// `Sample` re-draws, a retried update re-applies the same priorities).
+fn call_retry<T>(
+    client: &mut RemoteClient,
+    mut f: impl FnMut(&mut RemoteClient) -> Result<T>,
+) -> Result<T> {
+    match f(client) {
+        Err(e) if is_transport_error(&e) => {
+            client.reconnect()?;
+            f(client)
+        }
+        other => other,
+    }
+}
+
+/// Actor-side mesh handle: one [`RemoteWriter`] dialed to the server
+/// this actor's id routes to (`actor_id % N`). Everything else —
+/// batching, spill, supervision, exactly-once appends — is the wrapped
+/// writer's, untouched.
+pub struct MeshWriter {
+    inner: RemoteWriter,
+    server: usize,
+}
+
+impl MeshWriter {
+    /// Dial the server `actor_id` routes to.
+    pub fn connect(
+        endpoints: &[Endpoint],
+        actor_id: u64,
+        policy: ConnectionPolicy,
+    ) -> Result<Self> {
+        ensure!(!endpoints.is_empty(), "mesh writer needs at least one endpoint");
+        let server = (actor_id % endpoints.len() as u64) as usize;
+        let inner = RemoteWriter::connect_endpoint_with(&endpoints[server], actor_id, policy)
+            .with_context(|| {
+                format!("mesh writer for actor {actor_id} dialing server {server}")
+            })?;
+        Ok(Self { inner, server })
+    }
+
+    /// Which server (index into the endpoint list) this writer feeds.
+    pub fn server(&self) -> usize {
+        self.server
+    }
+
+    /// See [`RemoteWriter::with_batch`].
+    pub fn with_batch(mut self, batch: usize) -> Self {
+        self.inner = self.inner.with_batch(batch);
+        self
+    }
+
+    /// See [`RemoteWriter::with_spill_cap`].
+    pub fn with_spill_cap(mut self, cap: usize) -> Self {
+        self.inner = self.inner.with_spill_cap(cap);
+        self
+    }
+
+    pub fn items_emitted(&self) -> u64 {
+        self.inner.items_emitted()
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.inner.pending_len()
+    }
+
+    pub fn steps_dropped(&self) -> u64 {
+        self.inner.steps_dropped()
+    }
+
+    pub fn reconnects(&self) -> u64 {
+        self.inner.reconnects()
+    }
+}
+
+impl ExperienceWriter for MeshWriter {
+    fn throttled(&mut self) -> Result<bool> {
+        self.inner.throttled()
+    }
+
+    fn append(&mut self, step: WriterStep) -> Result<usize> {
+        self.inner.append(step)
+    }
+
+    fn flush(&mut self) -> Result<usize> {
+        self.inner.flush()
+    }
+}
+
+/// Learner-side mesh handle: one connection per server, two-level
+/// sampling across them (see the module docs). Sampled indices are
+/// global (`local + server · stride`), so priority feedback needs no
+/// API change — [`Self::update_priorities`] routes each index back to
+/// the server it came from.
+pub struct MeshSampler {
+    clients: Vec<RemoteClient>,
+    table: String,
+    /// Per-server table capacity (uniform across the mesh): the
+    /// local↔global index stride.
+    stride: usize,
+    /// Client-side level-1 RNG (the server pick); within-server draws
+    /// use each server's session RNG, seeded via [`server_seed`].
+    rng: Rng,
+    /// Reused per-sample scratch: each server's advertised (len, mass).
+    masses: Vec<(u64, f32)>,
+    /// Reused update-routing buckets, one per server.
+    buckets: Vec<(Vec<usize>, Vec<f32>)>,
+}
+
+impl MeshSampler {
+    /// Connect to every server in the mesh and bind a named table on
+    /// each; validates the table exists everywhere with one uniform
+    /// capacity (the index stride).
+    pub fn connect(
+        endpoints: &[Endpoint],
+        table: impl Into<String>,
+        rng_seed: u64,
+        policy: ConnectionPolicy,
+    ) -> Result<Self> {
+        Self::connect_inner(endpoints, Some(table.into()), rng_seed, policy)
+    }
+
+    /// Connect binding every server's default (first) table — they must
+    /// all agree on its name.
+    pub fn connect_default(
+        endpoints: &[Endpoint],
+        rng_seed: u64,
+        policy: ConnectionPolicy,
+    ) -> Result<Self> {
+        Self::connect_inner(endpoints, None, rng_seed, policy)
+    }
+
+    fn connect_inner(
+        endpoints: &[Endpoint],
+        table: Option<String>,
+        rng_seed: u64,
+        policy: ConnectionPolicy,
+    ) -> Result<Self> {
+        ensure!(!endpoints.is_empty(), "mesh sampler needs at least one endpoint");
+        let explicit = table.is_some();
+        let mut clients = Vec::with_capacity(endpoints.len());
+        let mut table = table;
+        for (s, ep) in endpoints.iter().enumerate() {
+            let mut client = RemoteClient::connect_endpoint_with(ep, policy.clone())
+                .with_context(|| format!("mesh sampler dialing server {s}"))?;
+            let default_table = client
+                .hello(server_seed(rng_seed, s))
+                .with_context(|| format!("mesh sampler hello to server {s} ({ep})"))?;
+            if !explicit {
+                match &table {
+                    None => {
+                        ensure!(
+                            !default_table.is_empty(),
+                            "mesh server {s} ({ep}) reports no default table"
+                        );
+                        table = Some(default_table);
+                    }
+                    Some(t) => ensure!(
+                        *t == default_table,
+                        "mesh servers disagree on the default table: server 0 serves \
+                         `{t}`, server {s} ({ep}) serves `{default_table}`"
+                    ),
+                }
+            }
+            clients.push(client);
+        }
+        let table = table.expect("table resolved by the first server");
+        // Validate the table everywhere and derive the uniform stride.
+        let mut stride = None;
+        for (s, client) in clients.iter_mut().enumerate() {
+            let tables = client
+                .stats()
+                .with_context(|| format!("mesh sampler reading server {s} stats"))?;
+            let info = tables.iter().find(|t| t.name == table).with_context(|| {
+                format!("mesh server {s} ({}) does not serve table `{table}`", endpoints[s])
+            })?;
+            let cap = info.capacity as usize;
+            ensure!(cap > 0, "mesh server {s} reports zero capacity for table `{table}`");
+            match stride {
+                None => stride = Some(cap),
+                Some(prev) => ensure!(
+                    prev == cap,
+                    "mesh servers disagree on table `{table}` capacity: server 0 has {prev}, \
+                     server {s} has {cap} — the mesh needs a uniform per-server capacity to \
+                     map local indices to global ones"
+                ),
+            }
+        }
+        let n = clients.len();
+        Ok(Self {
+            clients,
+            table,
+            stride: stride.expect("at least one server"),
+            rng: Rng::new(rng_seed),
+            masses: Vec::with_capacity(n),
+            buckets: (0..n).map(|_| (Vec::new(), Vec::new())).collect(),
+        })
+    }
+
+    pub fn table(&self) -> &str {
+        &self.table
+    }
+
+    /// Number of servers in the mesh.
+    pub fn server_count(&self) -> usize {
+        self.clients.len()
+    }
+
+    /// The local↔global index stride (per-server table capacity).
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Total successful redials across all server connections.
+    pub fn reconnects(&self) -> u64 {
+        self.clients.iter().map(RemoteClient::reconnects).sum()
+    }
+
+    /// Direct access to one server's connection (tests, admin tooling).
+    pub fn client_mut(&mut self, server: usize) -> &mut RemoteClient {
+        &mut self.clients[server]
+    }
+
+    /// Every server's per-table stats, mesh order.
+    pub fn stats(&mut self) -> Result<Vec<Vec<super::proto::TableInfo>>> {
+        self.clients
+            .iter_mut()
+            .enumerate()
+            .map(|(s, c)| {
+                call_retry(c, RemoteClient::stats)
+                    .with_context(|| format!("mesh stats from server {s}"))
+            })
+            .collect()
+    }
+
+    /// Fan-out checkpoint: every server's full state (chunk-streamed),
+    /// mesh order. Each entry restores to the *same* server slot.
+    pub fn checkpoint_states(&mut self) -> Result<Vec<ServiceState>> {
+        self.clients
+            .iter_mut()
+            .enumerate()
+            .map(|(s, c)| {
+                call_retry(c, RemoteClient::checkpoint_state)
+                    .with_context(|| format!("mesh checkpoint from server {s}"))
+            })
+            .collect()
+    }
+
+    /// Fan-out restore: one previously captured state per server, mesh
+    /// order (the inverse of [`Self::checkpoint_states`]).
+    pub fn restore_states(&mut self, states: &[ServiceState]) -> Result<()> {
+        ensure!(
+            states.len() == self.clients.len(),
+            "mesh restore got {} state(s) for {} server(s)",
+            states.len(),
+            self.clients.len()
+        );
+        for (s, (client, state)) in self.clients.iter_mut().zip(states).enumerate() {
+            call_retry(client, |c| c.restore_state(state))
+                .with_context(|| format!("mesh restore into server {s}"))?;
+        }
+        Ok(())
+    }
+
+    /// Level 1 of the two-level draw: refresh every server's advertised
+    /// (len, mass) into the reused scratch and return the totals.
+    fn refresh_masses(&mut self) -> Result<(u64, f32)> {
+        self.masses.clear();
+        let table = std::mem::take(&mut self.table);
+        let mut result = Ok(());
+        for (s, client) in self.clients.iter_mut().enumerate() {
+            match call_retry(client, |c| c.mass(&table)) {
+                Ok(lm) => self.masses.push(lm),
+                Err(e) => {
+                    result = Err(e.context(format!("mesh mass probe to server {s}")));
+                    break;
+                }
+            }
+        }
+        self.table = table;
+        result?;
+        let len: u64 = self.masses.iter().map(|&(l, _)| l).sum();
+        let mass: f32 = self.masses.iter().map(|&(_, m)| m).sum();
+        Ok((len, mass))
+    }
+
+    /// Pick the server whose mass interval contains `x`, skipping
+    /// zero-mass servers while tracking the last positive one — the
+    /// mesh image of the sharded buffer's level-1 prefix scan.
+    fn pick_server(&self, x: f32) -> Option<usize> {
+        let mut sel = None;
+        let mut acc = 0.0f32;
+        for (k, &(_, m)) in self.masses.iter().enumerate() {
+            if m > 0.0 {
+                sel = Some(k);
+                if acc + m >= x {
+                    break;
+                }
+            }
+            acc += m;
+        }
+        sel
+    }
+}
+
+impl ExperienceSampler for MeshSampler {
+    /// Two-level mesh sampling: one `Mass` probe per server, one
+    /// mass-proportional server pick, one whole-batch `Sample` within
+    /// the picked server, indices remapped local → global. A throttled
+    /// or data-starved server surfaces as the usual retriable outcome.
+    fn try_sample(
+        &mut self,
+        batch: usize,
+        _rng: &mut Rng,
+        out: &mut SampleBatch,
+    ) -> Result<SampleOutcome> {
+        let (len, mass) = self.refresh_masses()?;
+        if len == 0 || !(mass > 0.0) {
+            return Ok(SampleOutcome::NotEnoughData);
+        }
+        let x = self.rng.f32() * mass;
+        let Some(sel) = self.pick_server(x) else {
+            return Ok(SampleOutcome::NotEnoughData);
+        };
+        let table = std::mem::take(&mut self.table);
+        let outcome =
+            call_retry(&mut self.clients[sel], |c| c.sample(&table, batch, out));
+        self.table = table;
+        let outcome = outcome.with_context(|| format!("mesh sample from server {sel}"))?;
+        if outcome == SampleOutcome::Sampled {
+            let base = sel * self.stride;
+            for idx in &mut out.indices {
+                *idx += base;
+            }
+        }
+        Ok(outcome)
+    }
+
+    /// Route each global index back to its server and ship one update
+    /// RPC per server touched (the wire image of the sharded buffer's
+    /// batched, grouped priority feedback).
+    fn update_priorities(&mut self, indices: &[usize], td_abs: &[f32]) -> Result<()> {
+        ensure!(
+            indices.len() == td_abs.len(),
+            "priority update has {} indices but {} values",
+            indices.len(),
+            td_abs.len()
+        );
+        for (idx_bucket, td_bucket) in &mut self.buckets {
+            idx_bucket.clear();
+            td_bucket.clear();
+        }
+        for (&idx, &td) in indices.iter().zip(td_abs) {
+            let s = idx / self.stride;
+            ensure!(
+                s < self.clients.len(),
+                "priority index {idx} outside the mesh (stride {}, {} servers)",
+                self.stride,
+                self.clients.len()
+            );
+            self.buckets[s].0.push(idx - s * self.stride);
+            self.buckets[s].1.push(td);
+        }
+        let table = std::mem::take(&mut self.table);
+        let mut result = Ok(());
+        for (s, (client, (idx_bucket, td_bucket))) in
+            self.clients.iter_mut().zip(&self.buckets).enumerate()
+        {
+            if idx_bucket.is_empty() {
+                continue;
+            }
+            if let Err(e) =
+                call_retry(client, |c| c.update_priorities(&table, idx_bucket, td_bucket))
+            {
+                result = Err(e.context(format!("mesh priority update to server {s}")));
+                break;
+            }
+        }
+        self.table = table;
+        result
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoint_list_parses_mixed_transports() {
+        let eps =
+            parse_endpoint_list("uds:///tmp/a.sock, tcp://127.0.0.1:7001 ,/tmp/b.sock").unwrap();
+        assert_eq!(eps.len(), 3);
+        assert_eq!(eps[0], Endpoint::from(std::path::Path::new("/tmp/a.sock")));
+        assert_eq!(eps[1], Endpoint::parse("tcp://127.0.0.1:7001").unwrap());
+        assert_eq!(eps[2], Endpoint::from(std::path::Path::new("/tmp/b.sock")));
+    }
+
+    #[test]
+    fn endpoint_list_rejects_duplicates_and_empties() {
+        let e = parse_endpoint_list("/tmp/a.sock,/tmp/a.sock").unwrap_err();
+        assert!(format!("{e:#}").contains("appears twice"), "{e:#}");
+        // A bare path and its uds:// spelling are the same endpoint.
+        let e = parse_endpoint_list("/tmp/a.sock,uds:///tmp/a.sock").unwrap_err();
+        assert!(format!("{e:#}").contains("appears twice"), "{e:#}");
+        let e = parse_endpoint_list("tcp://127.0.0.1:1,,tcp://127.0.0.1:2").unwrap_err();
+        assert!(format!("{e:#}").contains("entry 1 is empty"), "{e:#}");
+    }
+
+    #[test]
+    fn server_seeds_are_distinct_and_stable() {
+        let a = server_seed(42, 0);
+        let b = server_seed(42, 1);
+        let c = server_seed(42, 2);
+        assert_ne!(a, b);
+        assert_ne!(b, c);
+        assert_ne!(a, c);
+        // Stable across calls (twins depend on replaying these).
+        assert_eq!(a, server_seed(42, 0));
+    }
+
+    #[test]
+    fn pick_server_skips_zero_mass_like_the_sharded_scan() {
+        let mesh = MeshSampler {
+            clients: Vec::new(),
+            table: "t".into(),
+            stride: 8,
+            rng: Rng::new(1),
+            masses: vec![(0, 0.0), (4, 2.0), (0, 0.0), (4, 2.0)],
+            buckets: Vec::new(),
+        };
+        // x in the first positive interval → server 1; past it → 3.
+        assert_eq!(mesh.pick_server(0.0), Some(1));
+        assert_eq!(mesh.pick_server(1.9), Some(1));
+        assert_eq!(mesh.pick_server(2.5), Some(3));
+        // Past the total mass clamps to the last positive server.
+        assert_eq!(mesh.pick_server(100.0), Some(3));
+    }
+}

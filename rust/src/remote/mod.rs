@@ -1,18 +1,24 @@
-//! Remote replay front-end: a Unix-domain-socket transport in front of
-//! the in-process [`crate::service::ReplayService`], so parallel
-//! actors and parallel learners can live in **separate processes** from
-//! the experience server — the Reverb server shape (Cassirer et al.,
-//! 2021) the service module was built toward.
+//! Remote replay front-end: a socket transport (Unix-domain or TCP) in
+//! front of the in-process [`crate::service::ReplayService`], so
+//! parallel actors and parallel learners can live in **separate
+//! processes — or on separate hosts** — from the experience server(s):
+//! the Reverb multi-server deployment shape (Cassirer et al., 2021)
+//! the service module was built toward.
 //!
-//! std-only: `std::os::unix::net` streams carrying length-prefixed
-//! frames in the same magic/CRC discipline as the on-disk
-//! [`crate::util::blob`] format.
+//! std-only: `std::os::unix::net` / `std::net` streams carrying
+//! length-prefixed frames in the same magic/CRC discipline as the
+//! on-disk [`crate::util::blob`] format.
 //!
+//! * [`transport`] — [`Endpoint`] / [`RpcListener`] / [`RpcStream`]:
+//!   one listener/dialer pair over UDS and TCP; the protocol above it
+//!   is transport-blind.
 //! * [`frame`] — wire framing (`PALRPC02` magic + length + payload +
 //!   crc32); every malformed input is a descriptive error, never a
 //!   panic.
 //! * [`proto`] — the RPC surface: `Hello`, `Append`, `Sample`,
-//!   `UpdatePriorities`, `Stats`, `Checkpoint`, `Restore`, `Shutdown`.
+//!   `UpdatePriorities`, `Stats`, `Checkpoint`, `Restore`, `Shutdown`,
+//!   `Mass`, plus the chunked state-transfer stream
+//!   (`CheckpointChunked`, `ChunkBegin`/`Chunk`/`ChunkEnd`).
 //! * [`server`] — [`ReplayServer`]: accept loop + resumable sessions
 //!   (server-side writers, sampling RNGs, request-sequence reply
 //!   caches).
@@ -21,10 +27,15 @@
 //!   [`crate::service::ExperienceWriter`] /
 //!   [`crate::service::ExperienceSampler`], so `actor.rs` /
 //!   `learner.rs` switch transports at the trait level only.
+//! * [`mesh`] — [`MeshWriter`] / [`MeshSampler`]: client-side routing
+//!   of ONE logical table over N replay servers (actor → server by
+//!   affinity; two-level sampling that picks a server by advertised
+//!   priority mass, then samples within — the
+//!   [`crate::replay::ShardedPrioritizedReplay`] shape, across hosts).
 //! * [`backoff`] — the shared reconnect schedule (exponential, seeded
 //!   jitter, overall deadline) every supervised handle retries under.
 //! * [`chaos`] — a seeded fault-injecting proxy ([`ChaosProxy`]) for
-//!   the chaos soaks and the CI restart drill.
+//!   the chaos soaks and the CI restart drill, on both transports.
 //!
 //! Rate limiters keep their semantics across the wire: a stalled
 //! sample is a retriable `WouldStall` frame, a stalled insert a short
@@ -49,8 +60,10 @@ pub mod backoff;
 pub mod chaos;
 pub mod client;
 pub mod frame;
+pub mod mesh;
 pub mod proto;
 pub mod server;
+pub mod transport;
 
 pub use backoff::{Backoff, BackoffPolicy};
 pub use chaos::{ChaosConfig, ChaosProxy};
@@ -59,5 +72,7 @@ pub use client::{
     DEFAULT_RPC_TIMEOUT, DEFAULT_SPILL_CAP,
 };
 pub use frame::{read_frame, read_frame_into, write_frame, FRAME_MAGIC, MAX_FRAME_LEN};
+pub use mesh::{parse_endpoint_list, MeshSampler, MeshWriter};
 pub use proto::{Request, Response, StallReason, TableInfo};
 pub use server::ReplayServer;
+pub use transport::{Endpoint, RpcListener, RpcStream};

@@ -53,6 +53,19 @@ pub const MAX_UPDATE_INDICES: usize = 1 << 20;
 /// decoder's bound).
 pub const MAX_TABLES: usize = 4_096;
 
+/// Largest single chunk either side may put in a `Chunk` frame. Well
+/// under [`super::frame::MAX_FRAME_LEN`] so a chunk frame plus its
+/// header always fits, and small enough that a hostile `chunk_len`
+/// cannot force a huge single allocation.
+pub const MAX_CHUNK_LEN: usize = 1 << 26; // 64 MiB
+/// Default chunk size for chunked state transfers: big enough to
+/// amortize per-frame overhead, small enough that progress is steady
+/// and per-chunk buffers stay cheap.
+pub const DEFAULT_CHUNK_LEN: usize = 1 << 22; // 4 MiB
+/// Largest total state a chunked transfer may declare (bounds the
+/// server-side staging buffer a hostile `ChunkBegin` could demand).
+pub const MAX_CHUNKED_STATE: u64 = 1 << 34; // 16 GiB
+
 const OP_HELLO: u8 = 1;
 const OP_APPEND: u8 = 2;
 const OP_SAMPLE: u8 = 3;
@@ -61,6 +74,11 @@ const OP_STATS: u8 = 5;
 const OP_CHECKPOINT: u8 = 6;
 const OP_RESTORE: u8 = 7;
 const OP_SHUTDOWN: u8 = 8;
+const OP_MASS: u8 = 9;
+const OP_CHECKPOINT_CHUNKED: u8 = 10;
+const OP_CHUNK_BEGIN: u8 = 11;
+const OP_CHUNK: u8 = 12;
+const OP_CHUNK_END: u8 = 13;
 
 const RESP_OK: u8 = 1;
 const RESP_APPENDED: u8 = 2;
@@ -70,6 +88,10 @@ const RESP_STATS: u8 = 5;
 const RESP_STATE: u8 = 6;
 const RESP_ERROR: u8 = 7;
 const RESP_HELLO: u8 = 8;
+const RESP_MASS: u8 = 9;
+const RESP_CHUNK_BEGIN: u8 = 10;
+const RESP_CHUNK: u8 = 11;
+const RESP_CHUNK_END: u8 = 12;
 
 /// Why a `Sample` was denied; the client maps these straight onto
 /// [`crate::service::SampleOutcome`] and sleep-polls, exactly like an
@@ -122,6 +144,31 @@ pub enum Request {
     /// Stop the server's accept loop (the serving process then runs its
     /// `--save-state` hook, if any, and exits).
     Shutdown,
+    /// One table's sampleable mass: its length and total priority (for
+    /// prioritized tables, the sum-tree root; uniform tables report
+    /// their length). The mesh sampler's server-selection input — one
+    /// tiny frame, cheap enough to refresh every sampling round.
+    Mass { table: String },
+    /// Ask for the service checkpoint as a chunked stream: the server
+    /// answers with `ChunkBegin`, `chunk_count` × `Chunk`, `ChunkEnd`
+    /// back-to-back (the one RPC that returns more than one frame), so
+    /// arbitrarily large states cross the wire in bounded frames
+    /// instead of hitting the frame cap. `max_chunk` bounds the data
+    /// bytes per chunk.
+    CheckpointChunked { max_chunk: u32 },
+    /// Open a chunked `Restore` upload: declares the exact total size
+    /// and chunking so the server can validate every following frame
+    /// against it. Nothing is applied until `ChunkEnd` verifies and the
+    /// assembled state passes the same validation as `Restore`.
+    ChunkBegin { total_len: u64, chunk_len: u32, chunk_count: u32 },
+    /// One chunk of a chunked upload: strict 0-based sequence and a
+    /// CRC over `data` (the frame CRC guards the wire; the chunk CRC
+    /// guards reassembly).
+    Chunk { seq: u32, crc: u32, data: Vec<u8> },
+    /// Close a chunked upload: `total_crc` is the CRC over the entire
+    /// reassembled payload. On match the state is validated and
+    /// restored atomically; on any mismatch nothing was applied.
+    ChunkEnd { total_crc: u32 },
 }
 
 /// One response frame, server → client.
@@ -147,9 +194,44 @@ pub enum Response {
     Stats { tables: Vec<TableInfo> },
     /// A serialized `ServiceState` payload (from `Checkpoint`).
     State { state: Vec<u8> },
+    /// One table's sampleable mass (answer to [`Request::Mass`]).
+    Mass { len: u64, mass: f32 },
+    /// Opens a chunked checkpoint download (answer to
+    /// [`Request::CheckpointChunked`]); `chunk_count` `Chunk` frames
+    /// and a `ChunkEnd` follow on the same connection.
+    ChunkBegin { total_len: u64, chunk_len: u32, chunk_count: u32 },
+    /// One chunk of a chunked download (same layout and validation
+    /// rules as [`Request::Chunk`]).
+    Chunk { seq: u32, crc: u32, data: Vec<u8> },
+    /// Closes a chunked checkpoint download with the whole-payload CRC.
+    ChunkEnd { total_crc: u32 },
     /// The request was understood but failed; the message is the
     /// server-side error chain.
     Error { message: String },
+}
+
+/// Shared validation of a `ChunkBegin` header (both directions): the
+/// declared chunking must be internally consistent, bounded, and
+/// nonempty, so a corrupt or hostile header can never set up an
+/// unbounded or self-contradictory transfer.
+pub fn validate_chunk_begin(total_len: u64, chunk_len: u32, chunk_count: u32) -> Result<()> {
+    if total_len == 0 {
+        bail!("chunked transfer declares an empty state");
+    }
+    if total_len > MAX_CHUNKED_STATE {
+        bail!("chunked transfer declares {total_len} bytes (cap {MAX_CHUNKED_STATE})");
+    }
+    if chunk_len == 0 || chunk_len as usize > MAX_CHUNK_LEN {
+        bail!("chunk length {chunk_len} out of range [1, {MAX_CHUNK_LEN}]");
+    }
+    let expect = total_len.div_ceil(chunk_len as u64);
+    if chunk_count as u64 != expect {
+        bail!(
+            "chunked transfer declares {chunk_count} chunks but {total_len} bytes / \
+             {chunk_len}-byte chunks needs {expect}"
+        );
+    }
+    Ok(())
 }
 
 /// One table's row in a `Stats` response.
@@ -246,6 +328,26 @@ fn decode_step(r: &mut ByteReader) -> Result<WriterStep> {
 pub fn encode_sampled(w: &mut ByteWriter, b: &SampleBatch) {
     w.u8(RESP_SAMPLED);
     encode_batch(w, b);
+}
+
+/// Encode a `Chunk` *response* straight from a borrowed slice of the
+/// serialized state — the chunked-download hot path: no data clone,
+/// the CRC computed in place.
+pub fn encode_chunk(w: &mut ByteWriter, seq: u32, data: &[u8]) {
+    w.u8(RESP_CHUNK);
+    w.u32(seq);
+    w.u32(crate::util::blob::crc32(data));
+    w.bytes(data);
+}
+
+/// Encode a `Chunk` *request* straight from a borrowed slice of the
+/// serialized state — the chunked-upload hot path: no data clone, the
+/// CRC computed in place.
+pub fn encode_chunk_request(w: &mut ByteWriter, seq: u32, data: &[u8]) {
+    w.u8(OP_CHUNK);
+    w.u32(seq);
+    w.u32(crate::util::blob::crc32(data));
+    w.bytes(data);
 }
 
 fn encode_batch(w: &mut ByteWriter, b: &SampleBatch) {
@@ -384,6 +486,30 @@ impl Request {
                 w.bytes(state);
             }
             Request::Shutdown => w.u8(OP_SHUTDOWN),
+            Request::Mass { table } => {
+                w.u8(OP_MASS);
+                w.str_(table);
+            }
+            Request::CheckpointChunked { max_chunk } => {
+                w.u8(OP_CHECKPOINT_CHUNKED);
+                w.u32(*max_chunk);
+            }
+            Request::ChunkBegin { total_len, chunk_len, chunk_count } => {
+                w.u8(OP_CHUNK_BEGIN);
+                w.u64(*total_len);
+                w.u32(*chunk_len);
+                w.u32(*chunk_count);
+            }
+            Request::Chunk { seq, crc, data } => {
+                w.u8(OP_CHUNK);
+                w.u32(*seq);
+                w.u32(*crc);
+                w.bytes(data);
+            }
+            Request::ChunkEnd { total_crc } => {
+                w.u8(OP_CHUNK_END);
+                w.u32(*total_crc);
+            }
         }
     }
 
@@ -439,6 +565,31 @@ impl Request {
             OP_CHECKPOINT => Request::Checkpoint,
             OP_RESTORE => Request::Restore { state: r.bytes("state payload")? },
             OP_SHUTDOWN => Request::Shutdown,
+            OP_MASS => Request::Mass { table: r.str_("table name")? },
+            OP_CHECKPOINT_CHUNKED => {
+                let max_chunk = r.u32("max chunk length")?;
+                if max_chunk == 0 || max_chunk as usize > MAX_CHUNK_LEN {
+                    bail!("chunk length {max_chunk} out of range [1, {MAX_CHUNK_LEN}]");
+                }
+                Request::CheckpointChunked { max_chunk }
+            }
+            OP_CHUNK_BEGIN => {
+                let total_len = r.u64("chunked total length")?;
+                let chunk_len = r.u32("chunk length")?;
+                let chunk_count = r.u32("chunk count")?;
+                validate_chunk_begin(total_len, chunk_len, chunk_count)?;
+                Request::ChunkBegin { total_len, chunk_len, chunk_count }
+            }
+            OP_CHUNK => {
+                let seq = r.u32("chunk seq")?;
+                let crc = r.u32("chunk crc")?;
+                let data = r.bytes("chunk data")?;
+                if data.is_empty() || data.len() > MAX_CHUNK_LEN {
+                    bail!("chunk of {} bytes out of range [1, {MAX_CHUNK_LEN}]", data.len());
+                }
+                Request::Chunk { seq, crc, data }
+            }
+            OP_CHUNK_END => Request::ChunkEnd { total_crc: r.u32("chunked total crc")? },
             other => bail!("unknown request opcode {other}"),
         };
         r.expect_end()?;
@@ -497,6 +648,27 @@ impl Response {
                 w.u8(RESP_STATE);
                 w.bytes(state);
             }
+            Response::Mass { len, mass } => {
+                w.u8(RESP_MASS);
+                w.u64(*len);
+                w.f32(*mass);
+            }
+            Response::ChunkBegin { total_len, chunk_len, chunk_count } => {
+                w.u8(RESP_CHUNK_BEGIN);
+                w.u64(*total_len);
+                w.u32(*chunk_len);
+                w.u32(*chunk_count);
+            }
+            Response::Chunk { seq, crc, data } => {
+                w.u8(RESP_CHUNK);
+                w.u32(*seq);
+                w.u32(*crc);
+                w.bytes(data);
+            }
+            Response::ChunkEnd { total_crc } => {
+                w.u8(RESP_CHUNK_END);
+                w.u32(*total_crc);
+            }
             Response::Error { message } => {
                 w.u8(RESP_ERROR);
                 w.str_(message);
@@ -553,6 +725,24 @@ impl Response {
                 Response::Stats { tables }
             }
             RESP_STATE => Response::State { state: r.bytes("state payload")? },
+            RESP_MASS => Response::Mass { len: r.u64("table len")?, mass: r.f32("table mass")? },
+            RESP_CHUNK_BEGIN => {
+                let total_len = r.u64("chunked total length")?;
+                let chunk_len = r.u32("chunk length")?;
+                let chunk_count = r.u32("chunk count")?;
+                validate_chunk_begin(total_len, chunk_len, chunk_count)?;
+                Response::ChunkBegin { total_len, chunk_len, chunk_count }
+            }
+            RESP_CHUNK => {
+                let seq = r.u32("chunk seq")?;
+                let crc = r.u32("chunk crc")?;
+                let data = r.bytes("chunk data")?;
+                if data.is_empty() || data.len() > MAX_CHUNK_LEN {
+                    bail!("chunk of {} bytes out of range [1, {MAX_CHUNK_LEN}]", data.len());
+                }
+                Response::Chunk { seq, crc, data }
+            }
+            RESP_CHUNK_END => Response::ChunkEnd { total_crc: r.u32("chunked total crc")? },
             RESP_ERROR => Response::Error { message: r.str_("error message")? },
             other => bail!("unknown response opcode {other}"),
         };
@@ -594,6 +784,11 @@ mod tests {
             Request::Checkpoint,
             Request::Restore { state: vec![1, 2, 3, 4] },
             Request::Shutdown,
+            Request::Mass { table: "replay".into() },
+            Request::CheckpointChunked { max_chunk: 4096 },
+            Request::ChunkBegin { total_len: 10, chunk_len: 4, chunk_count: 3 },
+            Request::Chunk { seq: 2, crc: 0xDEAD_BEEF, data: vec![7; 16] },
+            Request::ChunkEnd { total_crc: 0x1234_5678 },
         ];
         for req in reqs {
             let decoded = Request::decode(&req.encode()).unwrap();
@@ -648,6 +843,10 @@ mod tests {
                 }],
             },
             Response::State { state: vec![9, 9, 9] },
+            Response::Mass { len: 4096, mass: 17.25 },
+            Response::ChunkBegin { total_len: 9, chunk_len: 3, chunk_count: 3 },
+            Response::Chunk { seq: 0, crc: 1, data: vec![0xAB; 3] },
+            Response::ChunkEnd { total_crc: 0xFFFF_0000 },
             Response::Error { message: "unknown table `x`".into() },
         ];
         for resp in resps {
@@ -701,6 +900,38 @@ mod tests {
         // Zero-batch sample.
         let zero = Request::Sample { table: "t".into(), batch: 0, seq: 1 }.encode();
         assert!(Request::decode(&zero).is_err());
+        // Truncated chunked-transfer frames: every cut must error.
+        let chunk = Request::Chunk { seq: 1, crc: 0xABCD, data: vec![3; 9] }.encode();
+        for cut in 1..chunk.len() {
+            assert!(Request::decode(&chunk[..cut]).is_err(), "chunk cut at {cut}");
+        }
+        let begin = Response::ChunkBegin { total_len: 8, chunk_len: 4, chunk_count: 2 }.encode();
+        for cut in 1..begin.len() {
+            assert!(Response::decode(&begin[..cut]).is_err(), "chunk-begin cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn chunk_begin_validation_rejects_inconsistent_headers() {
+        // A consistent header passes both decode directions.
+        assert!(validate_chunk_begin(10, 4, 3).is_ok());
+        assert!(validate_chunk_begin(8, 4, 2).is_ok());
+        // Empty, oversized-total, zero/oversized chunk length,
+        // chunk count inconsistent with total/len — all rejected.
+        assert!(validate_chunk_begin(0, 4, 0).is_err());
+        assert!(validate_chunk_begin(MAX_CHUNKED_STATE + 1, 1 << 20, u32::MAX).is_err());
+        assert!(validate_chunk_begin(10, 0, 1).is_err());
+        assert!(validate_chunk_begin(10, (MAX_CHUNK_LEN + 1) as u32, 1).is_err());
+        assert!(validate_chunk_begin(10, 4, 2).is_err());
+        assert!(validate_chunk_begin(10, 4, 4).is_err());
+        // The wire decoders enforce the same rules.
+        let bad = Request::ChunkBegin { total_len: 10, chunk_len: 4, chunk_count: 9 };
+        assert!(Request::decode(&bad.encode()).is_err());
+        let bad = Response::ChunkBegin { total_len: 10, chunk_len: 4, chunk_count: 9 };
+        assert!(Response::decode(&bad.encode()).is_err());
+        // An oversized or empty single chunk is refused at decode.
+        let empty = Request::Chunk { seq: 0, crc: 0, data: vec![] };
+        assert!(Request::decode(&empty.encode()).is_err());
     }
 
     #[test]

@@ -1,5 +1,7 @@
-//! The remote replay server: a Unix-domain-socket front-end over one
-//! [`ReplayService`] (Reverb's `reverb.Server` shape, std-only).
+//! The remote replay server: a socket front-end over one
+//! [`ReplayService`] (Reverb's `reverb.Server` shape, std-only),
+//! listening on a Unix-domain socket or TCP ([`Endpoint`]) — the exact
+//! same frames, sessions and reply-cache semantics on both transports.
 //!
 //! One accept loop, one detached thread per connection. Each
 //! connection binds a server-side *session*: a sampling RNG (seeded by
@@ -45,15 +47,15 @@
 //!   rate limiter.
 
 use super::frame::{read_frame_into, write_frame};
-use super::proto::{self, Request, Response, StallReason, TableInfo};
+use super::proto::{self, Request, Response, StallReason, TableInfo, MAX_CHUNK_LEN};
+use super::transport::{Endpoint, RpcListener, RpcStream};
 use crate::replay::SampleBatch;
 use crate::service::{ReplayService, SampleOutcome, ServiceState, TrajectoryWriter};
-use crate::util::blob::ByteWriter;
+use crate::util::blob::{crc32, ByteWriter};
 use crate::util::rng::Rng;
 use anyhow::{bail, Context, Result};
 use std::collections::{HashMap, VecDeque};
-use std::os::unix::net::{UnixListener, UnixStream};
-use std::path::{Path, PathBuf};
+use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -188,8 +190,7 @@ impl SessionRegistry {
 /// client sends `Shutdown` (or [`Self::stop_handle`] is flipped).
 pub struct ReplayServer {
     service: Arc<ReplayService>,
-    listener: UnixListener,
-    path: PathBuf,
+    listener: RpcListener,
     stop: Arc<AtomicBool>,
     active: Arc<AtomicUsize>,
     seed: u64,
@@ -207,36 +208,23 @@ impl ReplayServer {
     /// on, or any other kind of file, is refused. `seed` derives the
     /// default per-connection sampling RNGs.
     pub fn bind(service: Arc<ReplayService>, path: impl AsRef<Path>, seed: u64) -> Result<Self> {
-        let path = path.as_ref().to_path_buf();
-        if let Ok(meta) = std::fs::symlink_metadata(&path) {
-            if !std::os::unix::fs::FileTypeExt::is_socket(&meta.file_type()) {
-                bail!(
-                    "{} exists and is not a socket — refusing to replace it",
-                    path.display()
-                );
-            }
-            // Liveness probe: only a DEAD server's socket may be
-            // replaced. Stealing a live server's path would split the
-            // experience stream between two servers with no error.
-            if UnixStream::connect(&path).is_ok() {
-                bail!(
-                    "a replay server is already listening on {} — refusing to replace it",
-                    path.display()
-                );
-            }
-            std::fs::remove_file(&path)
-                .with_context(|| format!("removing stale socket {}", path.display()))?;
-        }
-        let listener = UnixListener::bind(&path)
-            .with_context(|| format!("binding replay server socket {}", path.display()))?;
-        // Non-blocking accept so the loop can notice a stop request.
-        listener
-            .set_nonblocking(true)
-            .context("setting the listener non-blocking")?;
+        Self::bind_endpoint(service, &Endpoint::from(path.as_ref()), seed)
+    }
+
+    /// Bind either transport: a UDS path (with the stale-socket probe —
+    /// a live server's socket is never stolen) or `tcp://HOST:PORT`
+    /// (`:0` binds an ephemeral port; [`Self::endpoint`] reports where
+    /// it landed). The served protocol is identical on both.
+    pub fn bind_endpoint(
+        service: Arc<ReplayService>,
+        endpoint: &Endpoint,
+        seed: u64,
+    ) -> Result<Self> {
+        let listener = RpcListener::bind(endpoint)
+            .with_context(|| format!("binding replay server endpoint {endpoint}"))?;
         Ok(Self {
             service,
             listener,
-            path,
             stop: Arc::new(AtomicBool::new(false)),
             active: Arc::new(AtomicUsize::new(0)),
             seed,
@@ -267,8 +255,23 @@ impl ReplayServer {
         Arc::clone(&self.stop)
     }
 
+    /// The endpoint being served (for TCP, the resolved bound address —
+    /// what clients should dial after an ephemeral `:0` bind).
+    pub fn endpoint(&self) -> Endpoint {
+        self.listener.endpoint()
+    }
+
+    /// The UDS socket path (UDS-bound servers only).
+    ///
+    /// # Panics
+    /// If the server is bound to TCP — use [`Self::endpoint`] there.
     pub fn socket_path(&self) -> &Path {
-        &self.path
+        match &self.listener {
+            RpcListener::Unix { path, .. } => path,
+            RpcListener::Tcp { addr, .. } => {
+                panic!("socket_path() on a TCP-bound server (tcp://{addr})")
+            }
+        }
     }
 
     /// Accept loop. Returns after `Shutdown` (or an external stop);
@@ -281,7 +284,7 @@ impl ReplayServer {
         let mut conn_id = 0u64;
         while !self.stop.load(Ordering::Relaxed) {
             match self.listener.accept() {
-                Ok((stream, _addr)) => {
+                Ok(stream) => {
                     conn_id += 1;
                     let service = Arc::clone(&self.service);
                     let stop = Arc::clone(&self.stop);
@@ -302,7 +305,7 @@ impl ReplayServer {
                 }
                 Err(e) => {
                     return Err(e).with_context(|| {
-                        format!("accepting on replay server socket {}", self.path.display())
+                        format!("accepting on replay server endpoint {}", self.listener.endpoint())
                     });
                 }
             }
@@ -322,7 +325,7 @@ impl ReplayServer {
             }
             std::thread::sleep(Duration::from_millis(1));
         }
-        std::fs::remove_file(&self.path).ok();
+        self.listener.cleanup();
         Ok(())
     }
 }
@@ -334,7 +337,7 @@ impl ReplayServer {
 /// `Append`'s steps become storage rows).
 fn handle_connection(
     service: Arc<ReplayService>,
-    mut stream: UnixStream,
+    mut stream: RpcStream,
     seed: u64,
     stop: Arc<AtomicBool>,
     dims: Option<(usize, usize)>,
@@ -348,6 +351,11 @@ fn handle_connection(
     // with the connection, exactly the pre-session behavior.
     let mut session: Arc<Mutex<Session>> = Arc::new(Mutex::new(Session::new(0, seed)));
     let mut registered = 0u64;
+    // In-progress chunked Restore upload, if any. Connection-local on
+    // purpose: a dropped link aborts the upload (nothing was applied —
+    // the client redials and restarts the stream from ChunkBegin), so
+    // no half-assembled state can ever outlive its connection.
+    let mut upload: Option<ChunkUpload> = None;
     let mut scratch = SampleBatch::default();
     let mut rbuf: Vec<u8> = Vec::new();
     let mut enc = ByteWriter::new();
@@ -391,6 +399,26 @@ fn handle_connection(
                 }
                 .encode_into(&mut enc);
             }
+            // The one RPC answered by MORE than one frame: the chunked
+            // checkpoint download streams ChunkBegin + chunks + ChunkEnd
+            // back-to-back, then the loop resumes normal request/reply.
+            Ok(Request::CheckpointChunked { max_chunk }) => {
+                if stream_checkpoint(&service, &mut stream, &mut enc, max_chunk as usize).is_err()
+                {
+                    break;
+                }
+                continue;
+            }
+            // The chunked Restore upload: connection-local staging, with
+            // strict sequencing and per-chunk CRCs; nothing touches the
+            // tables until ChunkEnd verifies the whole payload.
+            Ok(
+                req @ (Request::ChunkBegin { .. }
+                | Request::Chunk { .. }
+                | Request::ChunkEnd { .. }),
+            ) => {
+                handle_chunk_upload(&service, &mut upload, req).encode_into(&mut enc);
+            }
             Ok(req) => {
                 let mut s = session.lock().expect("session poisoned");
                 dispatch_into(&service, &mut s, &mut scratch, dims, req, &mut enc)
@@ -413,6 +441,145 @@ fn handle_connection(
         // age.
         sessions.touch(registered);
     }
+}
+
+/// Stream the service checkpoint as `ChunkBegin` + N×`Chunk` +
+/// `ChunkEnd` frames (the reply to [`Request::CheckpointChunked`]).
+/// Application-level failures become one `Error` frame; the `Err`
+/// return is transport-only (connection must drop).
+fn stream_checkpoint(
+    service: &Arc<ReplayService>,
+    stream: &mut RpcStream,
+    enc: &mut ByteWriter,
+    max_chunk: usize,
+) -> std::io::Result<()> {
+    let mut error = |enc: &mut ByteWriter, stream: &mut RpcStream, message: String| {
+        enc.reset();
+        Response::Error { message }.encode_into(enc);
+        write_frame(stream, enc.as_slice())
+    };
+    let state = match service.checkpoint() {
+        Ok(s) => s.encode(),
+        Err(e) => return error(enc, stream, format!("checkpoint failed: {e}")),
+    };
+    let chunk_len = max_chunk.clamp(1, MAX_CHUNK_LEN);
+    let total_len = state.len() as u64;
+    if total_len == 0 || total_len > proto::MAX_CHUNKED_STATE {
+        return error(
+            enc,
+            stream,
+            format!("checkpoint is {total_len} bytes — outside the chunked-transfer bounds"),
+        );
+    }
+    let chunk_count = total_len.div_ceil(chunk_len as u64) as u32;
+    enc.reset();
+    Response::ChunkBegin { total_len, chunk_len: chunk_len as u32, chunk_count }.encode_into(enc);
+    write_frame(stream, enc.as_slice())?;
+    for (seq, piece) in state.chunks(chunk_len).enumerate() {
+        enc.reset();
+        proto::encode_chunk(enc, seq as u32, piece);
+        write_frame(stream, enc.as_slice())?;
+    }
+    enc.reset();
+    Response::ChunkEnd { total_crc: crc32(&state) }.encode_into(enc);
+    write_frame(stream, enc.as_slice())
+}
+
+/// Connection-local staging state of one chunked `Restore` upload.
+struct ChunkUpload {
+    total_len: u64,
+    chunk_len: u32,
+    chunk_count: u32,
+    next_seq: u32,
+    data: Vec<u8>,
+}
+
+/// One step of the chunked-upload state machine. Any violation —
+/// out-of-order sequence, wrong chunk size, CRC mismatch, a close
+/// before every chunk arrived, a failed final validation — aborts the
+/// whole upload (staging discarded, tables untouched) with a
+/// descriptive error; the client must restart from `ChunkBegin`.
+fn handle_chunk_upload(
+    service: &Arc<ReplayService>,
+    upload: &mut Option<ChunkUpload>,
+    req: Request,
+) -> Response {
+    let result = match req {
+        Request::ChunkBegin { total_len, chunk_len, chunk_count } => {
+            // Header consistency was enforced at decode. An unfinished
+            // upload is superseded (its staging dropped) — the client
+            // gave up on it and started over.
+            *upload = Some(ChunkUpload {
+                total_len,
+                chunk_len,
+                chunk_count,
+                next_seq: 0,
+                // Grown chunk-by-chunk, NOT reserved up front: a hostile
+                // header may declare up to MAX_CHUNKED_STATE bytes, but
+                // memory is only committed for bytes actually sent.
+                data: Vec::new(),
+            });
+            Ok(())
+        }
+        Request::Chunk { seq, crc, data } => stage_chunk(upload, seq, crc, &data),
+        Request::ChunkEnd { total_crc } => finish_chunked_restore(service, upload, total_crc),
+        _ => unreachable!("non-chunk request routed to the chunk-upload handler"),
+    };
+    match result {
+        Ok(()) => Response::Ok,
+        Err(e) => {
+            *upload = None;
+            Response::Error { message: format!("chunked restore failed: {e:#}") }
+        }
+    }
+}
+
+fn stage_chunk(upload: &mut Option<ChunkUpload>, seq: u32, crc: u32, data: &[u8]) -> Result<()> {
+    let Some(up) = upload.as_mut() else {
+        bail!("chunk {seq} outside a chunked upload (no ChunkBegin)");
+    };
+    if seq != up.next_seq {
+        bail!("chunk seq {seq} out of order: upload expects {}", up.next_seq);
+    }
+    // Every chunk's size is fully determined by the declared header, so
+    // a truncated, padded or oversized chunk is caught the moment it
+    // arrives — including an oversized SINGLE chunk that would have fit
+    // the declared total.
+    let expected = if seq + 1 == up.chunk_count {
+        up.total_len - (up.chunk_count as u64 - 1) * up.chunk_len as u64
+    } else {
+        up.chunk_len as u64
+    };
+    if data.len() as u64 != expected {
+        bail!("chunk {seq} is {} bytes, upload declared {expected}", data.len());
+    }
+    if crc32(data) != crc {
+        bail!("chunk {seq} CRC mismatch (payload corrupted in flight)");
+    }
+    up.data.extend_from_slice(data);
+    up.next_seq += 1;
+    Ok(())
+}
+
+fn finish_chunked_restore(
+    service: &Arc<ReplayService>,
+    upload: &mut Option<ChunkUpload>,
+    total_crc: u32,
+) -> Result<()> {
+    let Some(up) = upload.take() else {
+        bail!("ChunkEnd outside a chunked upload (no ChunkBegin)");
+    };
+    if up.next_seq != up.chunk_count {
+        bail!("upload closed after {} of {} chunks", up.next_seq, up.chunk_count);
+    }
+    if crc32(&up.data) != total_crc {
+        bail!("reassembled state CRC mismatch");
+    }
+    // Same two-phase validate-then-apply as the plain Restore RPC: a
+    // payload that decodes but does not fit the served tables leaves
+    // them untouched.
+    let state = ServiceState::decode(&up.data).context("decoding reassembled state")?;
+    service.restore(&state)
 }
 
 /// Apply one decoded request against the service, encoding the
@@ -644,8 +811,18 @@ fn dispatch_cold(
                 Err(e) => Response::Error { message: format!("restore failed: {e}") },
             }
         }
+        Request::Mass { table } => match service.table(&table) {
+            None => Response::Error { message: format!("unknown table `{table}`") },
+            Some(t) => Response::Mass { len: t.len() as u64, mass: t.total_priority() },
+        },
         // Handled (and answered) by the connection loop before dispatch.
         Request::Shutdown => Response::Ok,
+        Request::CheckpointChunked { .. }
+        | Request::ChunkBegin { .. }
+        | Request::Chunk { .. }
+        | Request::ChunkEnd { .. } => Response::Error {
+            message: "internal: chunked-transfer request reached the dispatch path".to_string(),
+        },
     }
 }
 
@@ -918,6 +1095,190 @@ mod tests {
         assert!(matches!(resp, Response::Appended { consumed: 1, .. }));
         let stats = service.table("replay").unwrap().stats_snapshot();
         assert_eq!(stats.steps_dropped, 7, "replayed dropped delta must dedupe");
+    }
+
+    #[test]
+    fn mass_reports_len_and_total_priority() {
+        let service = tiny_service();
+        let mut session = Session::new(0, 1);
+        let mut scratch = SampleBatch::default();
+        let resp = dispatch(
+            &service,
+            &mut session,
+            &mut scratch,
+            None,
+            Request::Mass { table: "replay".into() },
+        );
+        assert_eq!(resp, Response::Mass { len: 0, mass: 0.0 });
+        let mut w = service.writer(0);
+        for _ in 0..3 {
+            w.append(step_with_dims(2, 1));
+        }
+        let resp = dispatch(
+            &service,
+            &mut session,
+            &mut scratch,
+            None,
+            Request::Mass { table: "replay".into() },
+        );
+        // A uniform buffer's mass is its length (every item weight 1).
+        assert_eq!(resp, Response::Mass { len: 3, mass: 3.0 });
+        let resp = dispatch(
+            &service,
+            &mut session,
+            &mut scratch,
+            None,
+            Request::Mass { table: "nope".into() },
+        );
+        assert!(matches!(resp, Response::Error { .. }));
+    }
+
+    /// A donor service with `n` inserted steps, plus its encoded state.
+    fn donor_state(n: usize) -> Vec<u8> {
+        let donor = tiny_service();
+        let mut w = donor.writer(0);
+        for _ in 0..n {
+            w.append(step_with_dims(2, 1));
+        }
+        donor.checkpoint().expect("capture donor state").encode()
+    }
+
+    /// The full request sequence of one chunked upload of `state`.
+    fn upload_requests(state: &[u8], chunk_len: u32) -> Vec<Request> {
+        let mut reqs = vec![Request::ChunkBegin {
+            total_len: state.len() as u64,
+            chunk_len,
+            chunk_count: (state.len() as u64).div_ceil(chunk_len as u64) as u32,
+        }];
+        for (seq, piece) in state.chunks(chunk_len as usize).enumerate() {
+            reqs.push(Request::Chunk { seq: seq as u32, crc: crc32(piece), data: piece.to_vec() });
+        }
+        reqs.push(Request::ChunkEnd { total_crc: crc32(state) });
+        reqs
+    }
+
+    #[test]
+    fn chunked_upload_restores_state_exactly() {
+        let state = donor_state(9);
+        let service = tiny_service();
+        let mut upload = None;
+        // 7-byte chunks: many chunks plus a short tail.
+        for req in upload_requests(&state, 7) {
+            match handle_chunk_upload(&service, &mut upload, req) {
+                Response::Ok => {}
+                other => panic!("upload step failed: {other:?}"),
+            }
+        }
+        assert!(upload.is_none(), "a finished upload must leave no staging behind");
+        assert_eq!(service.table("replay").unwrap().len(), 9);
+        assert_eq!(
+            service.checkpoint().unwrap().encode(),
+            state,
+            "the restored service must checkpoint byte-identically to the donor"
+        );
+    }
+
+    /// Run `reqs` through the upload state machine until the first
+    /// error; returns its message.
+    fn upload_error(service: &Arc<ReplayService>, reqs: Vec<Request>) -> String {
+        let mut upload = None;
+        for req in reqs {
+            if let Response::Error { message } = handle_chunk_upload(service, &mut upload, req) {
+                assert!(upload.is_none(), "an upload error must discard the staging");
+                return message;
+            }
+        }
+        panic!("upload unexpectedly succeeded");
+    }
+
+    #[test]
+    fn chunked_upload_violations_abort_with_tables_untouched() {
+        let state = donor_state(9);
+        let service = tiny_service();
+        let reqs = upload_requests(&state, 7);
+
+        // A chunk with no ChunkBegin.
+        let msg = upload_error(&service, vec![reqs[1].clone()]);
+        assert!(msg.contains("no ChunkBegin"), "{msg}");
+
+        // Out-of-order sequence: chunk 1 where 0 is expected.
+        let msg = upload_error(&service, vec![reqs[0].clone(), reqs[2].clone()]);
+        assert!(msg.contains("out of order"), "{msg}");
+
+        // A flipped payload bit fails the per-chunk CRC.
+        let mut bad = reqs.clone();
+        if let Request::Chunk { data, .. } = &mut bad[1] {
+            data[0] ^= 0x01;
+        }
+        let msg = upload_error(&service, bad);
+        assert!(msg.contains("CRC mismatch"), "{msg}");
+
+        // An oversized single chunk (more bytes than the header
+        // declared per chunk) is rejected the moment it arrives.
+        let oversized = vec![
+            reqs[0].clone(),
+            Request::Chunk { seq: 0, crc: crc32(&state[..8]), data: state[..8].to_vec() },
+        ];
+        let msg = upload_error(&service, oversized);
+        assert!(msg.contains("upload declared"), "{msg}");
+
+        // ChunkEnd before every chunk arrived.
+        let early = vec![reqs[0].clone(), reqs[1].clone(), reqs.last().unwrap().clone()];
+        let msg = upload_error(&service, early);
+        assert!(msg.contains("closed after"), "{msg}");
+
+        // No violation may leave anything in the tables.
+        assert_eq!(service.table("replay").unwrap().len(), 0);
+    }
+
+    #[test]
+    fn stream_checkpoint_emits_bounded_verifiable_frames() {
+        let service = tiny_service();
+        let mut w = service.writer(0);
+        for _ in 0..12 {
+            w.append(step_with_dims(2, 1));
+        }
+        let (a, b) = std::os::unix::net::UnixStream::pair().expect("socketpair");
+        let mut out = RpcStream::Unix(a);
+        let mut enc = ByteWriter::new();
+        // A 5-byte chunk bound forces a long multi-frame stream.
+        stream_checkpoint(&service, &mut out, &mut enc, 5).expect("stream");
+        drop(out);
+        let mut rd = b;
+        let mut payload = Vec::new();
+        assert!(read_frame_into(&mut rd, &mut payload).unwrap());
+        let (total_len, chunk_count) = match Response::decode(&payload).unwrap() {
+            Response::ChunkBegin { total_len, chunk_len, chunk_count } => {
+                assert_eq!(chunk_len, 5);
+                (total_len, chunk_count)
+            }
+            other => panic!("expected ChunkBegin, got {other:?}"),
+        };
+        assert!(chunk_count > 1, "the state must not fit one 5-byte chunk");
+        let mut got = Vec::new();
+        for want_seq in 0..chunk_count {
+            assert!(read_frame_into(&mut rd, &mut payload).unwrap());
+            match Response::decode(&payload).unwrap() {
+                Response::Chunk { seq, crc, data } => {
+                    assert_eq!(seq, want_seq);
+                    assert_eq!(crc, crc32(&data), "chunk {seq} ships a wrong CRC");
+                    assert!(data.len() <= 5, "chunk {seq} exceeds the declared bound");
+                    got.extend_from_slice(&data);
+                }
+                other => panic!("expected Chunk {want_seq}, got {other:?}"),
+            }
+        }
+        assert_eq!(got.len() as u64, total_len);
+        assert!(read_frame_into(&mut rd, &mut payload).unwrap());
+        match Response::decode(&payload).unwrap() {
+            Response::ChunkEnd { total_crc } => assert_eq!(total_crc, crc32(&got)),
+            other => panic!("expected ChunkEnd, got {other:?}"),
+        }
+        assert_eq!(
+            got,
+            service.checkpoint().unwrap().encode(),
+            "reassembled stream must equal the checkpoint bytes"
+        );
     }
 
     #[test]

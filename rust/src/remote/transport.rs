@@ -1,0 +1,343 @@
+//! Transport abstraction for the remote replay front-end: one
+//! listener/dialer pair over Unix-domain sockets AND TCP, so the exact
+//! same `PALRPC02` frames, sessions and reply-cache semantics run
+//! cross-host with no protocol change (the framing layer is already
+//! generic over `Read`/`Write` — this module only abstracts where the
+//! bytes come from).
+//!
+//! * [`Endpoint`] — a parsed server address: a filesystem socket path
+//!   (`Uds`) or a `host:port` pair (`Tcp`). The CLI grammar is
+//!   `tcp://HOST:PORT` (or `uds://PATH` for symmetry); a bare string is
+//!   a UDS path, which keeps every existing `--remote PATH` invocation
+//!   working unchanged.
+//! * [`RpcStream`] — one connected byte stream behind `Read`/`Write`
+//!   plus the timeout/shutdown surface the client and server supervise
+//!   connections with. TCP streams set `TCP_NODELAY`: frames are small
+//!   and latency-sensitive (a sample round-trip sits on the learner's
+//!   critical path), so Nagle batching would serialize the pipeline.
+//! * [`RpcListener`] — a bound, nonblocking acceptor. The UDS arm owns
+//!   the stale-socket dance (probe a leftover socket file for a live
+//!   server before unlinking it) and removes its socket file on
+//!   cleanup; the TCP arm reports the actual bound address so `:0`
+//!   (ephemeral port) binds are test-friendly.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+/// A replay-server address: Unix-domain socket path or TCP `host:port`.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub enum Endpoint {
+    Uds(PathBuf),
+    Tcp(String),
+}
+
+impl Endpoint {
+    /// Parse an endpoint string: `tcp://HOST:PORT` dials TCP,
+    /// `uds://PATH` (or any bare string) is a Unix socket path.
+    pub fn parse(s: &str) -> Result<Self> {
+        let s = s.trim();
+        if s.is_empty() {
+            bail!("empty endpoint");
+        }
+        if let Some(addr) = s.strip_prefix("tcp://") {
+            return Self::tcp(addr);
+        }
+        if let Some(path) = s.strip_prefix("uds://") {
+            if path.is_empty() {
+                bail!("endpoint `{s}` has an empty socket path");
+            }
+            return Ok(Endpoint::Uds(PathBuf::from(path)));
+        }
+        Ok(Endpoint::Uds(PathBuf::from(s)))
+    }
+
+    /// A TCP endpoint from a `host:port` address (validated to contain
+    /// a port — `TcpStream::connect` errors on a bare host are cryptic).
+    pub fn tcp(addr: &str) -> Result<Self> {
+        let addr = addr.trim();
+        match addr.rsplit_once(':') {
+            Some((host, port)) if !host.is_empty() && port.parse::<u16>().is_ok() => {
+                Ok(Endpoint::Tcp(addr.to_string()))
+            }
+            _ => bail!("TCP endpoint `{addr}` must be HOST:PORT"),
+        }
+    }
+
+    /// Dial the endpoint, returning a connected stream (TCP with
+    /// `TCP_NODELAY` set — see module docs).
+    pub fn dial(&self) -> std::io::Result<RpcStream> {
+        match self {
+            Endpoint::Uds(path) => UnixStream::connect(path).map(RpcStream::Unix),
+            Endpoint::Tcp(addr) => {
+                let s = TcpStream::connect(addr.as_str())?;
+                s.set_nodelay(true)?;
+                Ok(RpcStream::Tcp(s))
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for Endpoint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Endpoint::Uds(p) => write!(f, "{}", p.display()),
+            Endpoint::Tcp(a) => write!(f, "tcp://{a}"),
+        }
+    }
+}
+
+impl From<&Path> for Endpoint {
+    fn from(p: &Path) -> Self {
+        Endpoint::Uds(p.to_path_buf())
+    }
+}
+
+impl From<PathBuf> for Endpoint {
+    fn from(p: PathBuf) -> Self {
+        Endpoint::Uds(p)
+    }
+}
+
+/// One connected RPC byte stream (either transport) behind the exact
+/// surface the client/server code supervises connections with.
+#[derive(Debug)]
+pub enum RpcStream {
+    Unix(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl RpcStream {
+    pub fn set_read_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            RpcStream::Unix(s) => s.set_read_timeout(d),
+            RpcStream::Tcp(s) => s.set_read_timeout(d),
+        }
+    }
+
+    pub fn set_write_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            RpcStream::Unix(s) => s.set_write_timeout(d),
+            RpcStream::Tcp(s) => s.set_write_timeout(d),
+        }
+    }
+
+    pub fn set_nonblocking(&self, on: bool) -> std::io::Result<()> {
+        match self {
+            RpcStream::Unix(s) => s.set_nonblocking(on),
+            RpcStream::Tcp(s) => s.set_nonblocking(on),
+        }
+    }
+
+    pub fn shutdown(&self, how: Shutdown) -> std::io::Result<()> {
+        match self {
+            RpcStream::Unix(s) => s.shutdown(how),
+            RpcStream::Tcp(s) => s.shutdown(how),
+        }
+    }
+
+    pub fn try_clone(&self) -> std::io::Result<Self> {
+        Ok(match self {
+            RpcStream::Unix(s) => RpcStream::Unix(s.try_clone()?),
+            RpcStream::Tcp(s) => RpcStream::Tcp(s.try_clone()?),
+        })
+    }
+}
+
+impl Read for RpcStream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            RpcStream::Unix(s) => s.read(buf),
+            RpcStream::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for RpcStream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            RpcStream::Unix(s) => s.write(buf),
+            RpcStream::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            RpcStream::Unix(s) => s.flush(),
+            RpcStream::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+/// A bound, nonblocking acceptor on either transport.
+pub enum RpcListener {
+    Unix { listener: UnixListener, path: PathBuf },
+    Tcp { listener: TcpListener, addr: String },
+}
+
+impl RpcListener {
+    /// Bind an endpoint for serving. UDS refuses to clobber a live
+    /// server (a leftover socket file is probed with a connect before
+    /// being unlinked) and refuses non-socket files outright; TCP is a
+    /// plain bind, with the ACTUAL bound address recorded so `:0`
+    /// (ephemeral-port) binds report where they landed.
+    pub fn bind(endpoint: &Endpoint) -> Result<Self> {
+        match endpoint {
+            Endpoint::Uds(path) => {
+                match std::fs::symlink_metadata(path) {
+                    Ok(md) if !md.file_type().is_socket() => bail!(
+                        "refusing to serve on {}: exists and is not a socket",
+                        path.display()
+                    ),
+                    Ok(_) => {
+                        // A socket file is either a live server (error:
+                        // never steal its clients) or a stale leftover
+                        // from a crash (unlink and move in).
+                        if UnixStream::connect(path).is_ok() {
+                            bail!(
+                                "a replay server is already listening on {}",
+                                path.display()
+                            );
+                        }
+                        std::fs::remove_file(path).with_context(|| {
+                            format!("removing stale socket {}", path.display())
+                        })?;
+                    }
+                    Err(_) => {}
+                }
+                let listener = UnixListener::bind(path)
+                    .with_context(|| format!("binding {}", path.display()))?;
+                listener.set_nonblocking(true)?;
+                Ok(RpcListener::Unix { listener, path: path.clone() })
+            }
+            Endpoint::Tcp(addr) => {
+                let listener = TcpListener::bind(addr.as_str())
+                    .with_context(|| format!("binding tcp://{addr}"))?;
+                listener.set_nonblocking(true)?;
+                let addr = listener
+                    .local_addr()
+                    .map(|a| a.to_string())
+                    .unwrap_or_else(|_| addr.clone());
+                Ok(RpcListener::Tcp { listener, addr })
+            }
+        }
+    }
+
+    /// Accept one pending connection (nonblocking — `WouldBlock` when
+    /// none is waiting). TCP connections get `TCP_NODELAY`.
+    pub fn accept(&self) -> std::io::Result<RpcStream> {
+        match self {
+            RpcListener::Unix { listener, .. } => {
+                listener.accept().map(|(s, _)| RpcStream::Unix(s))
+            }
+            RpcListener::Tcp { listener, .. } => {
+                let (s, _) = listener.accept()?;
+                s.set_nodelay(true).ok();
+                Ok(RpcStream::Tcp(s))
+            }
+        }
+    }
+
+    /// The endpoint this listener is actually serving on (for TCP, the
+    /// resolved bound address — meaningful after an ephemeral bind).
+    pub fn endpoint(&self) -> Endpoint {
+        match self {
+            RpcListener::Unix { path, .. } => Endpoint::Uds(path.clone()),
+            RpcListener::Tcp { addr, .. } => Endpoint::Tcp(addr.clone()),
+        }
+    }
+
+    /// Release transport resources a closed listener leaves behind: the
+    /// UDS socket file (best-effort — the bind-time stale probe handles
+    /// a missed unlink). TCP has nothing to clean.
+    pub fn cleanup(&self) {
+        if let RpcListener::Unix { path, .. } = self {
+            std::fs::remove_file(path).ok();
+        }
+    }
+}
+
+// `is_socket` on symlink_metadata needs the unix FileTypeExt.
+use std::os::unix::fs::FileTypeExt as _;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoint_grammar() {
+        assert_eq!(
+            Endpoint::parse("/tmp/replay.sock").unwrap(),
+            Endpoint::Uds(PathBuf::from("/tmp/replay.sock"))
+        );
+        assert_eq!(
+            Endpoint::parse("uds:///run/pal.sock").unwrap(),
+            Endpoint::Uds(PathBuf::from("/run/pal.sock"))
+        );
+        assert_eq!(
+            Endpoint::parse("tcp://127.0.0.1:7777").unwrap(),
+            Endpoint::Tcp("127.0.0.1:7777".to_string())
+        );
+        assert!(Endpoint::parse("").is_err());
+        assert!(Endpoint::parse("tcp://").is_err());
+        assert!(Endpoint::parse("tcp://nohost").is_err());
+        assert!(Endpoint::parse("tcp://:99999").is_err());
+        assert!(Endpoint::parse("uds://").is_err());
+        // Display round-trips through parse for both transports.
+        for s in ["/tmp/a.sock", "tcp://127.0.0.1:8080"] {
+            let e = Endpoint::parse(s).unwrap();
+            assert_eq!(Endpoint::parse(&e.to_string()).unwrap(), e);
+        }
+    }
+
+    #[test]
+    fn tcp_listener_accepts_and_streams_bytes() {
+        let l = RpcListener::bind(&Endpoint::Tcp("127.0.0.1:0".into())).unwrap();
+        let ep = l.endpoint();
+        // The ephemeral bind must report a concrete port.
+        match &ep {
+            Endpoint::Tcp(a) => assert!(!a.ends_with(":0"), "{a}"),
+            other => panic!("tcp bind reported {other:?}"),
+        }
+        let mut client = ep.dial().unwrap();
+        let mut server = loop {
+            match l.accept() {
+                Ok(s) => break s,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(1))
+                }
+                Err(e) => panic!("accept: {e}"),
+            }
+        };
+        client.write_all(b"ping").unwrap();
+        let mut buf = [0u8; 4];
+        server.read_exact(&mut buf).unwrap();
+        assert_eq!(&buf, b"ping");
+        server.write_all(b"pong").unwrap();
+        client.read_exact(&mut buf).unwrap();
+        assert_eq!(&buf, b"pong");
+    }
+
+    #[test]
+    fn uds_listener_keeps_stale_socket_semantics() {
+        let dir = std::env::temp_dir().join(format!("pal_transport_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.sock");
+        // A non-socket file at the path is refused.
+        std::fs::write(&path, b"junk").unwrap();
+        assert!(RpcListener::bind(&Endpoint::Uds(path.clone())).is_err());
+        std::fs::remove_file(&path).unwrap();
+        // A live listener blocks a second bind; a stale file does not.
+        let l = RpcListener::bind(&Endpoint::Uds(path.clone())).unwrap();
+        assert!(RpcListener::bind(&Endpoint::Uds(path.clone())).is_err());
+        drop(l); // the socket FILE stays (stale) — next bind reclaims it
+        let l2 = RpcListener::bind(&Endpoint::Uds(path.clone())).unwrap();
+        l2.cleanup();
+        drop(l2);
+        assert!(!path.exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -174,6 +174,10 @@ impl ReplayBuffer for GlobalLockReplay {
         true
     }
 
+    fn total_priority(&self) -> f32 {
+        self.inner.lock().unwrap().tree.total()
+    }
+
     fn update_priorities(&self, indices: &[usize], td_abs: &[f32]) {
         let mut g = self.inner.lock().unwrap();
         for (&idx, &td) in indices.iter().zip(td_abs) {

@@ -94,6 +94,15 @@ pub trait ReplayBuffer: Send + Sync {
     /// Feed back new |TD| errors for sampled indices (paper §IV-A4).
     fn update_priorities(&self, indices: &[usize], td_abs: &[f32]);
 
+    /// Total sampleable priority mass — the quantity two-level sampling
+    /// routes on (shard roots in-process, the `Mass` RPC across the
+    /// replay mesh). Prioritized impls report their sum-tree root;
+    /// the default equates mass with item count, which is exactly a
+    /// uniform buffer's unnormalized probability mass.
+    fn total_priority(&self) -> f32 {
+        self.len() as f32
+    }
+
     /// Capture a consistent, serializable [`BufferState`] (ring
     /// contents, leaf priorities, cursors, max priority). `None` when
     /// the implementation does not support checkpointing (the emulated

@@ -530,6 +530,10 @@ impl ReplayBuffer for PrioritizedReplay {
         self.update_transformed_batch(&pairs);
     }
 
+    fn total_priority(&self) -> f32 {
+        PrioritizedReplay::total_priority(self)
+    }
+
     fn snapshot_state(&self) -> Option<BufferState> {
         Some(BufferState {
             impl_name: self.name().to_string(),

@@ -204,6 +204,10 @@ impl ReplayBuffer for ShardedPrioritizedReplay {
         self.shards[actor_id % self.shards.len()].insert(t);
     }
 
+    fn total_priority(&self) -> f32 {
+        ShardedPrioritizedReplay::total_priority(self)
+    }
+
     /// Two-level stratified sampling (see module docs). Returns `true`
     /// only with a full batch; all row copies run outside every lock.
     fn sample(&self, batch: usize, rng: &mut Rng, out: &mut SampleBatch) -> bool {

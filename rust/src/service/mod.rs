@@ -185,7 +185,21 @@ impl TableSpec {
                 (false, _) => entries.push(seg.to_string()),
             }
         }
-        entries.iter().map(|e| Self::parse(e, gamma)).collect()
+        let specs: Vec<TableSpec> =
+            entries.iter().map(|e| Self::parse(e, gamma)).collect::<Result<_>>()?;
+        // Duplicate names are rejected HERE, with both entries named,
+        // instead of surfacing later from service construction (or,
+        // worse, silently resolving last-wins in a config merge).
+        for (i, spec) in specs.iter().enumerate() {
+            if let Some(prev) = specs[..i].iter().position(|p| p.name == spec.name) {
+                bail!(
+                    "table `{}` is declared twice in `--tables` (entries {prev} and {i}); \
+                     table names must be unique",
+                    spec.name
+                );
+            }
+        }
+        Ok(specs)
     }
 }
 
@@ -457,6 +471,13 @@ mod tests {
         assert!(TableSpec::parse_list("beta=0.5,replay=1step", 0.9).is_err());
         assert!(TableSpec::parse_list("limit=2,replay=1step", 0.9).is_err());
         assert!(TableSpec::parse_list("replay=1step,128", 0.9).is_err());
+        // Duplicate names are a parse-time error naming both entries,
+        // not a later service-construction failure or a silent
+        // last-wins merge.
+        let e = TableSpec::parse_list("replay=1step,aux=nstep:3,replay=1step@512", 0.9)
+            .unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("declared twice") && msg.contains("entries 0 and 2"), "{msg}");
     }
 
     #[test]

@@ -135,6 +135,12 @@ impl Table {
         self.buffer.capacity()
     }
 
+    /// Total sampleable priority mass of the wrapped buffer (what the
+    /// `Mass` RPC advertises for mesh-level two-level sampling).
+    pub fn total_priority(&self) -> f32 {
+        self.buffer.total_priority()
+    }
+
     /// Writer-side admission poll. Denials count as insert stalls (each
     /// denied poll is one observed stall interval of the polling loop).
     pub fn can_insert(&self) -> bool {

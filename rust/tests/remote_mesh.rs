@@ -1,0 +1,382 @@
+//! Cross-host replay mesh integration: a seeded 2-server mesh run
+//! (append + sample + priority-update + checkpoint) must be
+//! indistinguishable from the in-process sharded replay it mirrors —
+//! per-server checkpoints byte-identical to service twins fed the same
+//! lockstep schedule, priority masses identical to a
+//! `ShardedPrioritizedReplay` twin with the same shard topology, and
+//! exact client-vs-`Stats` accounting. A large table state must also
+//! round-trip through chunked Checkpoint/Restore over TCP in bounded
+//! frames.
+
+use pal_rl::remote::{
+    read_frame, write_frame, ConnectionPolicy, Endpoint, MeshSampler, MeshWriter, RemoteClient,
+    ReplayServer, Request, Response,
+};
+use pal_rl::replay::{
+    PrioritizedConfig, ReplayBuffer, SampleBatch, ShardedPrioritizedReplay, UniformReplay,
+};
+use pal_rl::service::{
+    ExperienceSampler, ExperienceWriter, ItemKind, RateLimiter, ReplayService, SampleOutcome,
+    ServiceState, Table, WriterStep,
+};
+use pal_rl::util::blob::crc32;
+use pal_rl::util::rng::Rng;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+const SEED: u64 = 0x4D45_5348; // "MESH"
+const CAP: usize = 64; // per-server table capacity == mesh stride
+const ACTORS: usize = 4;
+const STEPS: usize = 24; // per actor; 2 actors/server -> 48 < CAP, no eviction
+const BATCH: usize = 8;
+const ROUNDS: usize = 12;
+
+fn step(i: usize) -> WriterStep {
+    WriterStep {
+        obs: vec![i as f32, -(i as f32)],
+        action: vec![0.25],
+        next_obs: vec![i as f32 + 1.0, -(i as f32) - 1.0],
+        reward: (i % 7) as f32,
+        done: false,
+        truncated: false,
+    }
+}
+
+/// One mesh member's service: a single-shard prioritized table, so the
+/// 2-server mesh has exactly the shard topology of an in-process
+/// `ShardedPrioritizedReplay` with `shards: 2`.
+fn member_service() -> Arc<ReplayService> {
+    let cfg = PrioritizedConfig {
+        capacity: CAP,
+        obs_dim: 2,
+        act_dim: 1,
+        shards: 1,
+        ..PrioritizedConfig::default()
+    };
+    Arc::new(
+        ReplayService::new(vec![Table::new(
+            "replay",
+            ItemKind::OneStep,
+            Arc::new(ShardedPrioritizedReplay::new(cfg)),
+            RateLimiter::Unlimited { min_size_to_sample: 1 },
+        )])
+        .unwrap(),
+    )
+}
+
+/// Bind a server on `bind`, serve it on a background thread, and wait
+/// until the resolved endpoint accepts connections.
+fn start_on(
+    service: Arc<ReplayService>,
+    bind: &Endpoint,
+) -> (Endpoint, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let server = ReplayServer::bind_endpoint(service, bind, 0).expect("bind mesh server");
+    let ep = server.endpoint();
+    let handle = std::thread::spawn(move || server.serve());
+    for _ in 0..500 {
+        if ep.dial().is_ok() {
+            return (ep, handle);
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    panic!("server at {ep} never came up");
+}
+
+fn fresh_uds() -> Endpoint {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    Endpoint::from(std::env::temp_dir().join(format!(
+        "pal_mesh_test_{}_{}.sock",
+        std::process::id(),
+        NEXT.fetch_add(1, Ordering::Relaxed)
+    )))
+}
+
+/// Replica of the mesh sampler's level-1 prefix scan (pick the server
+/// whose mass interval contains `x`, skipping zero-mass servers).
+fn twin_pick(masses: &[(u64, f32)], x: f32) -> Option<usize> {
+    let mut sel = None;
+    let mut acc = 0.0f32;
+    for (k, &(_, m)) in masses.iter().enumerate() {
+        if m > 0.0 {
+            sel = Some(k);
+            if acc + m >= x {
+                break;
+            }
+        }
+        acc += m;
+    }
+    sel
+}
+
+/// The full seeded drill over two already-bound servers: lockstep
+/// append/sample/update against per-server twins and a sharded-topology
+/// twin, then byte-identical per-server checkpoints and exact
+/// accounting.
+fn mesh_drill(binds: [Endpoint; 2]) {
+    let services: Vec<Arc<ReplayService>> = (0..2).map(|_| member_service()).collect();
+    let twins: Vec<Arc<ReplayService>> = (0..2).map(|_| member_service()).collect();
+
+    // The in-process image of the whole mesh: same per-shard capacity,
+    // same actor-affinity routing, same global index space (global
+    // index = shard * CAP + local == server * stride + local).
+    let cfg = PrioritizedConfig {
+        capacity: 2 * CAP,
+        obs_dim: 2,
+        act_dim: 1,
+        shards: 2,
+        ..PrioritizedConfig::default()
+    };
+    let sharded = Arc::new(ShardedPrioritizedReplay::new(cfg));
+    let sharded_service = Arc::new(
+        ReplayService::new(vec![Table::new(
+            "replay",
+            ItemKind::OneStep,
+            Arc::clone(&sharded) as Arc<dyn ReplayBuffer>,
+            RateLimiter::Unlimited { min_size_to_sample: 1 },
+        )])
+        .unwrap(),
+    );
+    let sharded_table = sharded_service.table("replay").unwrap();
+
+    let mut eps = Vec::new();
+    let mut handles = Vec::new();
+    for (service, bind) in services.iter().zip(&binds) {
+        let (ep, handle) = start_on(Arc::clone(service), bind);
+        eps.push(ep);
+        handles.push(handle);
+    }
+    let policy = ConnectionPolicy::default();
+
+    // Phase 1: appends route by actor affinity; twins and the sharded
+    // image are fed the identical streams in the identical order.
+    for actor in 0..ACTORS {
+        let mut w = MeshWriter::connect(&eps, actor as u64, policy.clone())
+            .expect("mesh writer")
+            .with_batch(BATCH);
+        assert_eq!(w.server(), actor % 2, "actor {actor} affinity");
+        let mut tw = twins[actor % 2].writer(actor);
+        let mut sw = sharded_service.writer(actor);
+        for i in 0..STEPS {
+            let st = step(actor * 10_000 + i);
+            assert!(!w.throttled().unwrap(), "unlimited table must never throttle");
+            w.append(st.clone()).unwrap();
+            tw.append(st.clone());
+            sw.append(st);
+        }
+        w.flush().unwrap();
+    }
+
+    // Phase 2: two-level sampling in lockstep. The mesh's level-1 pick
+    // is replicated from the twins' advertised masses; the picked
+    // twin's sampler shares its server's session RNG stream.
+    let mut sampler =
+        MeshSampler::connect_default(&eps, SEED, policy.clone()).expect("mesh sampler");
+    assert_eq!(sampler.table(), "replay");
+    assert_eq!(sampler.server_count(), 2);
+    assert_eq!(sampler.stride(), CAP);
+    let mut mesh_rng = Rng::new(SEED);
+    let mut twin_rngs: Vec<Rng> = (0..2)
+        .map(|s| Rng::new(pal_rl::remote::mesh::server_seed(SEED, s)))
+        .collect();
+    let twin_samplers: Vec<_> = twins.iter().map(|t| t.default_sampler()).collect();
+    let mut dummy_rng = Rng::new(1); // the mesh sampler draws its own
+    let mut out = SampleBatch::default();
+    let mut twin_out = SampleBatch::default();
+    let mut picked = [0usize; 2];
+    for round in 0..ROUNDS {
+        match sampler.try_sample(BATCH, &mut dummy_rng, &mut out).unwrap() {
+            SampleOutcome::Sampled => {}
+            other => panic!("mesh round {round} got {other:?}"),
+        }
+        let masses: Vec<(u64, f32)> = twins
+            .iter()
+            .map(|t| {
+                let tab = t.table("replay").unwrap();
+                (tab.len() as u64, tab.total_priority())
+            })
+            .collect();
+        let total: f32 = masses.iter().map(|&(_, m)| m).sum();
+        let x = mesh_rng.f32() * total;
+        let sel = twin_pick(&masses, x).expect("positive mass");
+        match twin_samplers[sel].try_sample(BATCH, &mut twin_rngs[sel], &mut twin_out) {
+            SampleOutcome::Sampled => {}
+            other => panic!("twin round {round} got {other:?}"),
+        }
+        let global: Vec<usize> = twin_out.indices.iter().map(|&i| i + sel * CAP).collect();
+        assert_eq!(out.indices, global, "round {round} indices");
+        assert_eq!(out.priorities, twin_out.priorities, "round {round} priorities");
+        // Identical |TD| feedback three ways: the mesh (global
+        // indices), the picked twin (local), the sharded image
+        // (global — its index space IS the mesh's).
+        let tds: Vec<f32> =
+            (0..BATCH).map(|j| ((round * 13 + j) % 91) as f32 * 0.1 + 0.05).collect();
+        sampler.update_priorities(&out.indices, &tds).unwrap();
+        twin_samplers[sel].update_priorities(&twin_out.indices, &tds);
+        sharded_table.update_priorities(&out.indices, &tds);
+        picked[sel] += 1;
+    }
+    assert_eq!(picked[0] + picked[1], ROUNDS);
+
+    // Phase 3: per-server state and accounting. Checkpoints must be
+    // byte-identical to the twins; Stats must agree exactly with what
+    // the client did; masses must match the sharded image shard for
+    // shard.
+    for (s, ep) in eps.iter().enumerate() {
+        let mut client = RemoteClient::connect_endpoint(ep).unwrap();
+        let twin_table = twins[s].table("replay").unwrap();
+        let tables = client.stats().unwrap();
+        let info = tables.iter().find(|t| t.name == "replay").unwrap();
+        assert_eq!(info.len as usize, twin_table.len(), "server {s} len");
+        assert_eq!(info.capacity as usize, CAP, "server {s} capacity");
+        assert_eq!(info.stats, twin_table.stats_snapshot(), "server {s} accounting");
+        assert_eq!(info.stats.inserts, 2 * STEPS, "server {s} inserts");
+        assert_eq!(info.stats.sample_batches, picked[s], "server {s} batches");
+        assert_eq!(info.stats.sampled_items, BATCH * picked[s], "server {s} items");
+        assert_eq!(info.stats.priority_updates, BATCH * picked[s], "server {s} updates");
+
+        let (mlen, mmass) = client.mass("replay").unwrap();
+        assert_eq!(mlen as usize, twin_table.len(), "server {s} mass len");
+        assert_eq!(mmass, twin_table.total_priority(), "server {s} mass");
+        assert_eq!(mlen as usize, sharded.shard(s).len(), "shard {s} len");
+        assert_eq!(mmass, sharded.shard(s).total_priority(), "shard {s} mass");
+
+        let bytes = client.checkpoint_bytes_chunked(512).unwrap();
+        assert!(bytes.len() > 512, "checkpoint must need more than one 512-byte chunk");
+        assert_eq!(bytes, twins[s].checkpoint().unwrap().encode(), "server {s} checkpoint");
+    }
+    assert_eq!(sharded_table.len(), ACTORS * STEPS, "sharded image len");
+    let mass_sum: f32 = twins.iter().map(|t| t.table("replay").unwrap().total_priority()).sum();
+    assert_eq!(sharded.total_priority(), mass_sum, "sharded image total mass");
+
+    // Phase 4: mesh-wide save/restore fans out per server and is a
+    // byte-level no-op on an unchanged mesh.
+    let states = sampler.checkpoint_states().unwrap();
+    assert_eq!(states.len(), 2);
+    sampler.restore_states(&states).unwrap();
+    for (s, ep) in eps.iter().enumerate() {
+        let bytes = RemoteClient::connect_endpoint(ep).unwrap().checkpoint_bytes().unwrap();
+        assert_eq!(bytes, twins[s].checkpoint().unwrap().encode(), "server {s} after restore");
+    }
+
+    drop(sampler);
+    for ep in &eps {
+        RemoteClient::connect_endpoint(ep).unwrap().shutdown().unwrap();
+    }
+    for handle in handles {
+        handle.join().expect("server thread").expect("serve result");
+    }
+}
+
+#[test]
+fn mesh_over_uds_matches_in_process_twins() {
+    mesh_drill([fresh_uds(), fresh_uds()]);
+}
+
+#[test]
+fn mesh_over_tcp_matches_in_process_twins() {
+    mesh_drill([Endpoint::tcp("127.0.0.1:0").unwrap(), Endpoint::tcp("127.0.0.1:0").unwrap()]);
+}
+
+// ---------------------------------------------------------------------------
+// Chunked streaming at scale, over TCP.
+// ---------------------------------------------------------------------------
+
+fn big_service() -> Arc<ReplayService> {
+    Arc::new(
+        ReplayService::new(vec![Table::new(
+            "replay",
+            ItemKind::OneStep,
+            Arc::new(UniformReplay::new(2048, 8, 2)),
+            RateLimiter::Unlimited { min_size_to_sample: 1 },
+        )])
+        .unwrap(),
+    )
+}
+
+fn big_step(i: usize) -> WriterStep {
+    let b = i as f32;
+    WriterStep {
+        obs: (0..8).map(|k| b + k as f32).collect(),
+        action: vec![b * 0.5, -b],
+        next_obs: (0..8).map(|k| b - k as f32).collect(),
+        reward: b * 0.125,
+        done: false,
+        truncated: false,
+    }
+}
+
+/// A table state hundreds of chunks long must round-trip through
+/// chunked Checkpoint/Restore over TCP with every frame bounded by the
+/// requested chunk size. The 1 KiB chunk is to this ~160 KiB state what
+/// `MAX_CHUNK_LEN` is to a state past the 256 MiB frame cap: the stream
+/// shape (header + N bounded chunks + trailer) is identical, only the
+/// scale differs.
+#[test]
+fn big_state_round_trips_in_bounded_frames_over_tcp() {
+    const CHUNK: usize = 1 << 10;
+    let service = big_service();
+    let mut w = service.writer(0);
+    for i in 0..2048 {
+        w.append(big_step(i));
+    }
+    let expect = service.checkpoint().unwrap().encode();
+    assert!(expect.len() > 64 * CHUNK, "state must dwarf the chunk size");
+    let (ep, handle) = start_on(Arc::clone(&service), &Endpoint::tcp("127.0.0.1:0").unwrap());
+
+    // Raw dial: observe the actual frame stream, not just the
+    // client-side reassembly.
+    let mut raw = ep.dial().unwrap();
+    let req = Request::CheckpointChunked { max_chunk: CHUNK as u32 };
+    write_frame(&mut raw, &req.encode()).unwrap();
+    let frame = read_frame(&mut raw).unwrap().expect("ChunkBegin frame");
+    let chunk_count = match Response::decode(&frame).unwrap() {
+        Response::ChunkBegin { total_len, chunk_len, chunk_count } => {
+            assert_eq!(total_len as usize, expect.len());
+            assert_eq!(chunk_len as usize, CHUNK);
+            chunk_count
+        }
+        other => panic!("expected ChunkBegin, got {other:?}"),
+    };
+    assert!(chunk_count > 64, "a large state must stream as many chunks");
+    let mut got = Vec::new();
+    for seq in 0..chunk_count {
+        let frame = read_frame(&mut raw).unwrap().expect("chunk frame");
+        match Response::decode(&frame).unwrap() {
+            Response::Chunk { seq: s, crc, data } => {
+                assert_eq!(s, seq, "chunks must stream in strict sequence");
+                assert!(data.len() <= CHUNK, "chunk {seq} exceeds the declared bound");
+                assert_eq!(crc, crc32(&data), "chunk {seq} CRC");
+                got.extend_from_slice(&data);
+            }
+            other => panic!("chunk {seq} got {other:?}"),
+        }
+    }
+    match Response::decode(&read_frame(&mut raw).unwrap().expect("ChunkEnd frame")).unwrap() {
+        Response::ChunkEnd { total_crc } => assert_eq!(total_crc, crc32(&got)),
+        other => panic!("expected ChunkEnd, got {other:?}"),
+    }
+    assert_eq!(got, expect, "reassembled state differs from the served checkpoint");
+    drop(raw);
+
+    // The client-side reassembly agrees byte for byte.
+    let mut client = RemoteClient::connect_endpoint(&ep).unwrap();
+    assert_eq!(client.checkpoint_bytes_chunked(CHUNK).unwrap(), expect);
+
+    // And the same state uploads through the chunked restore into a
+    // fresh server, coming back byte-identical.
+    let fresh = big_service();
+    let (ep2, handle2) = start_on(Arc::clone(&fresh), &Endpoint::tcp("127.0.0.1:0").unwrap());
+    let state = ServiceState::decode(&expect).unwrap();
+    let mut client2 = RemoteClient::connect_endpoint(&ep2).unwrap();
+    client2.restore_state_chunked(&state, CHUNK).unwrap();
+    assert_eq!(fresh.table("replay").unwrap().len(), 2048);
+    assert_eq!(client2.checkpoint_bytes_chunked(CHUNK).unwrap(), expect);
+
+    drop(client);
+    drop(client2);
+    RemoteClient::connect_endpoint(&ep).unwrap().shutdown().unwrap();
+    RemoteClient::connect_endpoint(&ep2).unwrap().shutdown().unwrap();
+    handle.join().expect("server thread").expect("serve result");
+    handle2.join().expect("server thread").expect("serve result");
+}

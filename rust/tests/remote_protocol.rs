@@ -10,6 +10,7 @@ use common::{start_server, stop_server};
 use pal_rl::remote::{read_frame, write_frame, RemoteClient, Request, Response, FRAME_MAGIC};
 use pal_rl::replay::UniformReplay;
 use pal_rl::service::{ItemKind, RateLimiter, ReplayService, Table, WriterStep};
+use pal_rl::util::blob::crc32;
 use pal_rl::util::prop::{check, Pair, UsizeIn};
 use pal_rl::util::rng::Rng;
 use std::io::{Cursor, Read, Write};
@@ -282,6 +283,194 @@ fn stale_session_id_gets_a_fresh_session_not_a_panic() {
     client.stats().expect("stats after stale hello");
 
     drop(client);
+    stop_server(&path, handle);
+}
+
+// ---------------------------------------------------------------------------
+// Chunked state streaming over the live wire. The server-side staging
+// state machine is unit-tested next to its implementation; these tests
+// prove the connection loop end of it: every malformed upload —
+// truncated mid-chunk, out-of-order sequence, flipped payload bytes,
+// oversized chunk, hostile header — is a descriptive error over the
+// socket and never leaves a half-restored table.
+// ---------------------------------------------------------------------------
+
+/// Encoded `ServiceState` of a tiny service holding `n` steps — the
+/// payload the chunked-upload tests push over the wire.
+fn donor_state(n: usize) -> Vec<u8> {
+    let donor = tiny_service();
+    let mut w = donor.writer(0);
+    for i in 0..n {
+        w.append(step(i));
+    }
+    donor.checkpoint().expect("donor checkpoint").encode()
+}
+
+/// The well-formed chunk-upload request sequence for `state`:
+/// `ChunkBegin`, one `Chunk` per `chunk_len`-byte piece, `ChunkEnd`.
+fn chunk_requests(state: &[u8], chunk_len: u32) -> Vec<Request> {
+    let total_len = state.len() as u64;
+    let chunk_count = total_len.div_ceil(chunk_len as u64) as u32;
+    let mut reqs = vec![Request::ChunkBegin { total_len, chunk_len, chunk_count }];
+    for (seq, piece) in state.chunks(chunk_len as usize).enumerate() {
+        reqs.push(Request::Chunk { seq: seq as u32, crc: crc32(piece), data: piece.to_vec() });
+    }
+    reqs.push(Request::ChunkEnd { total_crc: crc32(state) });
+    reqs
+}
+
+/// One request/response exchange over a raw socket (no `RemoteClient`,
+/// so the tests control every frame byte).
+fn rpc(sock: &mut UnixStream, req: &Request) -> Response {
+    let mut buf = Vec::new();
+    write_frame(&mut buf, &req.encode()).unwrap();
+    sock.write_all(&buf).unwrap();
+    let frame = read_frame(sock).expect("server must answer").expect("with a frame");
+    Response::decode(&frame).unwrap()
+}
+
+fn expect_error(resp: Response, needle: &str) {
+    match resp {
+        Response::Error { message } => {
+            assert!(message.contains(needle), "`{needle}` not in `{message}`");
+        }
+        other => panic!("expected an Error mentioning `{needle}`, got {other:?}"),
+    }
+}
+
+#[test]
+fn chunked_upload_over_the_wire_restores_byte_exactly() {
+    let service = tiny_service();
+    let (path, handle) = start_server(Arc::clone(&service));
+    let state = donor_state(9);
+
+    let mut sock = UnixStream::connect(&path).unwrap();
+    for req in chunk_requests(&state, 7) {
+        match rpc(&mut sock, &req) {
+            Response::Ok => {}
+            other => panic!("{req:?} got {other:?}"),
+        }
+    }
+    assert_eq!(service.table("replay").unwrap().len(), 9);
+    assert_eq!(service.checkpoint().unwrap().encode(), state, "restore must be byte-exact");
+
+    drop(sock);
+    stop_server(&path, handle);
+}
+
+#[test]
+fn truncation_mid_chunk_applies_nothing_and_keeps_the_server_up() {
+    let service = tiny_service();
+    let (path, handle) = start_server(Arc::clone(&service));
+    let state = donor_state(9);
+    let reqs = chunk_requests(&state, 7);
+
+    let mut sock = UnixStream::connect(&path).unwrap();
+    assert!(matches!(rpc(&mut sock, &reqs[0]), Response::Ok));
+    assert!(matches!(rpc(&mut sock, &reqs[1]), Response::Ok));
+    // Cut the connection in the middle of the next chunk's frame: the
+    // server answers a best-effort protocol error and drops the
+    // connection — and with it the staged upload.
+    let mut frame = Vec::new();
+    write_frame(&mut frame, &reqs[2].encode()).unwrap();
+    sock.write_all(&frame[..frame.len() / 2]).unwrap();
+    sock.shutdown(std::net::Shutdown::Write).unwrap();
+    let mut tail = Vec::new();
+    let _ = sock.read_to_end(&mut tail);
+    drop(sock);
+
+    assert_eq!(service.table("replay").unwrap().len(), 0, "no half-restored table");
+    // A fresh connection starts from scratch (staging is
+    // connection-local, so the dead upload did not leak into it) and a
+    // complete upload still lands.
+    let mut fresh = UnixStream::connect(&path).unwrap();
+    expect_error(rpc(&mut fresh, &reqs[2]), "no ChunkBegin");
+    for req in chunk_requests(&state, 7) {
+        assert!(matches!(rpc(&mut fresh, &req), Response::Ok), "{req:?}");
+    }
+    assert_eq!(service.table("replay").unwrap().len(), 9);
+
+    drop(fresh);
+    stop_server(&path, handle);
+}
+
+#[test]
+fn out_of_order_chunk_seq_aborts_the_upload() {
+    let service = tiny_service();
+    let (path, handle) = start_server(Arc::clone(&service));
+    let state = donor_state(9);
+    let reqs = chunk_requests(&state, 7);
+
+    let mut sock = UnixStream::connect(&path).unwrap();
+    assert!(matches!(rpc(&mut sock, &reqs[0]), Response::Ok));
+    // reqs[2] is chunk seq 1; the upload expects seq 0 first.
+    expect_error(rpc(&mut sock, &reqs[2]), "out of order");
+    // The abort discarded the staging: the now-in-order first chunk is
+    // outside any upload, and the tables were never touched.
+    expect_error(rpc(&mut sock, &reqs[1]), "no ChunkBegin");
+    assert_eq!(service.table("replay").unwrap().len(), 0);
+    // The connection itself stays up for well-formed requests.
+    match rpc(&mut sock, &Request::Stats) {
+        Response::Stats { tables } => assert_eq!(tables[0].len, 0),
+        other => panic!("stats after abort got {other:?}"),
+    }
+
+    drop(sock);
+    stop_server(&path, handle);
+}
+
+#[test]
+fn crc_flip_inside_a_chunk_aborts_the_upload() {
+    let service = tiny_service();
+    let (path, handle) = start_server(Arc::clone(&service));
+    let state = donor_state(9);
+    let reqs = chunk_requests(&state, 7);
+
+    let mut sock = UnixStream::connect(&path).unwrap();
+    assert!(matches!(rpc(&mut sock, &reqs[0]), Response::Ok));
+    // Flip one payload byte but keep the declared per-chunk CRC. The
+    // frame checksum is recomputed over the corrupted bytes (so the
+    // framing layer passes) and the per-chunk CRC must catch it.
+    let corrupted = match &reqs[1] {
+        Request::Chunk { seq, crc, data } => {
+            let mut data = data.clone();
+            data[3] ^= 0x10;
+            Request::Chunk { seq: *seq, crc: *crc, data }
+        }
+        other => panic!("expected a chunk, got {other:?}"),
+    };
+    expect_error(rpc(&mut sock, &corrupted), "CRC mismatch");
+    assert_eq!(service.table("replay").unwrap().len(), 0, "no half-restored table");
+
+    drop(sock);
+    stop_server(&path, handle);
+}
+
+#[test]
+fn oversized_chunk_and_hostile_begin_are_rejected() {
+    let service = tiny_service();
+    let (path, handle) = start_server(Arc::clone(&service));
+    let state = donor_state(9);
+    let reqs = chunk_requests(&state, 7);
+
+    let mut sock = UnixStream::connect(&path).unwrap();
+    // A chunk larger than the upload declared it would be.
+    assert!(matches!(rpc(&mut sock, &reqs[0]), Response::Ok));
+    let oversized = Request::Chunk { seq: 0, crc: crc32(&state), data: state.clone() };
+    expect_error(rpc(&mut sock, &oversized), "upload declared");
+
+    // A ChunkBegin whose declared geometry breaks the protocol bounds
+    // is rejected at decode, before any staging allocation.
+    let cap = pal_rl::remote::proto::MAX_CHUNK_LEN;
+    let hostile =
+        Request::ChunkBegin { total_len: 1 << 30, chunk_len: (cap + 1) as u32, chunk_count: 16 };
+    expect_error(rpc(&mut sock, &hostile), "out of range");
+    let total_len = state.len() as u64;
+    let lying = Request::ChunkBegin { total_len, chunk_len: 7, chunk_count: 1 };
+    expect_error(rpc(&mut sock, &lying), "needs");
+
+    assert_eq!(service.table("replay").unwrap().len(), 0);
+    drop(sock);
     stop_server(&path, handle);
 }
 

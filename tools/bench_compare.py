@@ -1,0 +1,81 @@
+#!/usr/bin/env python3
+"""Compare a fresh BENCH_remote.json against the committed baseline.
+
+Wall-clock absolutes are meaningless across runners, so the gate is on
+RATIOS — the append batch-16 speedup over batch-1, and the fraction of
+the per-batch sample wait hidden by prefetch — with a wide tolerance:
+a fresh ratio may dip to half the baseline's before the step fails.
+Hard floors only assert the optimizations never make things WORSE
+(speedup >= 1.0, hidden fraction >= 0.0), so a shared-runner hiccup
+cannot fail CI but a real regression (batching or prefetch effectively
+disabled) still does.
+
+Usage: tools/bench_compare.py FRESH BASELINE [--tolerance 0.5]
+"""
+
+import argparse
+import json
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        data = json.load(f)
+    if data.get("bench") != "fig_remote":
+        sys.exit(f"{path}: not a fig_remote result (bench = {data.get('bench')!r})")
+    return data
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("fresh", help="just-produced BENCH_remote.json")
+    ap.add_argument("baseline", help="committed baseline to diff against")
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=0.5,
+        help="fresh ratio must reach this fraction of the baseline's (default 0.5)",
+    )
+    args = ap.parse_args()
+    fresh, base = load(args.fresh), load(args.baseline)
+
+    failures = []
+
+    def gate(name, f, b, floor):
+        if f is None or b is None:
+            # A custom sweep may omit batch 16; the ratio is then null.
+            print(f"{name}: missing (fresh {f}, baseline {b}) -- skipped")
+            return
+        need = max(floor, args.tolerance * b)
+        verdict = "OK" if f >= need else "REGRESSION"
+        print(f"{name}: fresh {f:.3f} vs baseline {b:.3f} (need >= {need:.3f}) [{verdict}]")
+        if f < need:
+            failures.append(name)
+
+    fv, bv = fresh.get("verdicts", {}), base.get("verdicts", {})
+    gate(
+        "append_speedup_batch16_worst",
+        fv.get("append_speedup_batch16_worst"),
+        bv.get("append_speedup_batch16_worst"),
+        1.0,
+    )
+    gate(
+        "sample_wait_hidden_frac",
+        fv.get("sample_wait_hidden_frac"),
+        bv.get("sample_wait_hidden_frac"),
+        0.0,
+    )
+
+    if fresh.get("config") != base.get("config"):
+        print(
+            f"note: sweep configs differ (fresh {fresh.get('config')} vs "
+            f"baseline {base.get('config')}) -- ratio gates still apply"
+        )
+
+    if failures:
+        sys.exit("bench compare FAILED: " + ", ".join(failures))
+    print("bench compare OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,7 +3,9 @@
 # appends x writers, sample prefetch on/off over a real Unix socket)
 # and write machine-readable BENCH_remote.json at the repo root, so
 # every future PR that touches the remote path has a number to diff
-# against.
+# against. A snapshot is committed at the repo root; CI re-runs the
+# smoke sweep and gates the ratio metrics against the committed copy
+# via tools/bench_compare.py (wide tolerance — see that script).
 #
 # Usage: tools/bench_remote.sh [--smoke] [extra fig_remote flags...]
 #   --smoke   small CI-sized sweep (still writes the JSON)

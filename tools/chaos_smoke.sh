@@ -25,3 +25,15 @@ case "$out" in
     exit 1
     ;;
 esac
+
+# Same drill over loopback TCP (ephemeral ports): the transport swap
+# must change nothing about the fault-tolerance contract.
+out_tcp=$(./target/release/pal chaos-smoke --dir "$dir/tcp" --tcp)
+echo "$out_tcp"
+case "$out_tcp" in
+  *"chaos-smoke OK"*) ;;
+  *)
+    echo "chaos-smoke --tcp did not report success" >&2
+    exit 1
+    ;;
+esac

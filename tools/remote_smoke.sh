@@ -5,6 +5,12 @@
 # concurrent multi-client soak with exact sample-to-insert accounting
 # over the Stats RPC, and a clean Shutdown RPC. The script then asserts
 # the serving process exited 0 and wrote its --save-state replay state.
+#
+# A second phase starts TWO `pal serve --tcp` servers on ephemeral
+# loopback ports and runs `pal mesh-smoke` across them: affinity
+# appends, lockstep two-level sampling, chunked per-server checkpoints
+# byte-identical to in-process twins, and exact per-server Stats
+# accounting, ending in a Shutdown RPC to each server.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -49,4 +55,49 @@ trap - EXIT
   exit 1
 }
 
-echo "remote replay smoke OK ($dir)"
+# --- Cross-host mesh phase: two TCP servers, one logical table. ---
+# Flags must mirror mesh-smoke's in-process twin layout (capacity /
+# shards / warmup 64 / unlimited limiter / 1step+nstep:3 tables).
+serve_mesh_member() {
+  ./target/release/pal serve \
+    --tcp 127.0.0.1:0 \
+    --capacity 4096 --shards 4 --warmup 64 --rate-limit unlimited \
+    --tables "replay=1step,aux=nstep:3" \
+    --obs-dim 4 --act-dim 2 \
+    2>"$1" &
+}
+
+# Each server binds an ephemeral port and prints the RESOLVED endpoint
+# on its `listening on` stderr line; parse those to build the mesh.
+endpoint_of() {
+  local log="$1" ep=""
+  for _ in $(seq 1 100); do
+    ep=$(sed -n 's#.*listening on \(tcp://[0-9.]*:[0-9]*\).*#\1#p' "$log" | head -n 1)
+    [ -n "$ep" ] && break
+    sleep 0.1
+  done
+  [ -n "$ep" ] || { echo "mesh server ($log) never reported its endpoint" >&2; return 1; }
+  echo "$ep"
+}
+
+serve_mesh_member "$dir/mesh1.log"
+mesh_pid1=$!
+serve_mesh_member "$dir/mesh2.log"
+mesh_pid2=$!
+
+cleanup_mesh() {
+  kill "$mesh_pid1" "$mesh_pid2" 2>/dev/null || true
+}
+trap cleanup_mesh EXIT
+
+ep1=$(endpoint_of "$dir/mesh1.log")
+ep2=$(endpoint_of "$dir/mesh2.log")
+
+./target/release/pal mesh-smoke --endpoints "$ep1,$ep2" --capacity 4096 --shards 4
+
+# mesh-smoke ends with a Shutdown RPC to every server.
+wait "$mesh_pid1"
+wait "$mesh_pid2"
+trap - EXIT
+
+echo "remote replay smoke OK ($dir): UDS phase + 2-server TCP mesh ($ep1 $ep2)"
