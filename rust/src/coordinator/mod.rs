@@ -21,7 +21,7 @@ use crate::remote::{
 };
 use crate::replay::{
     GlobalLockReplay, NaiveScanReplay, PrioritizedConfig, PrioritizedReplay,
-    PyBindBinaryReplay, ReplayBuffer, ShardedPrioritizedReplay, UniformReplay,
+    PyBindBinaryReplay, RemoverSpec, ReplayBuffer, ShardedPrioritizedReplay, UniformReplay,
 };
 use crate::runtime::{Manifest, Runtime};
 use crate::service::{
@@ -99,6 +99,10 @@ pub struct TrainConfig {
     /// Explicit table layout (`--tables`); empty = one table named
     /// `replay` whose item kind follows `n_step`.
     pub tables: Vec<TableSpec>,
+    /// Run-default eviction policy (`--remove`): which item a full
+    /// table evicts to admit an insert. Per-table `remove=` entries in
+    /// `--tables` override this for their table only.
+    pub remove: RemoverSpec,
     /// Remote replay front-end (`--remote`): endpoints of external
     /// `pal serve` processes (`uds://PATH`, `tcp://HOST:PORT`, or a
     /// bare socket path). Empty = local tables. One endpoint: actors
@@ -172,6 +176,7 @@ impl TrainConfig {
             n_step: 1,
             gamma_nstep: 0.99,
             tables: Vec::new(),
+            remove: RemoverSpec::Fifo,
             remote: Vec::new(),
             remote_batch: DEFAULT_REMOTE_BATCH,
             rpc_timeout_secs: DEFAULT_RPC_TIMEOUT.as_secs_f64(),
@@ -211,6 +216,7 @@ impl TrainConfig {
             alpha: None,
             beta: None,
             limit: None,
+            remove: None,
         }]
     }
 
@@ -246,8 +252,8 @@ pub struct TrainReport {
     pub table_stats: Vec<(String, TableStatsSnapshot)>,
 }
 
-/// Build one replay buffer with explicit capacity and PER exponents
-/// (tables may override the run defaults).
+/// Build one replay buffer with explicit capacity, PER exponents and
+/// eviction policy (tables may override the run defaults).
 fn make_buffer_with(
     cfg: &TrainConfig,
     capacity: usize,
@@ -255,6 +261,7 @@ fn make_buffer_with(
     act_dim: usize,
     alpha: f32,
     beta: f32,
+    remove: RemoverSpec,
 ) -> Arc<dyn ReplayBuffer> {
     let prio_cfg = PrioritizedConfig {
         capacity,
@@ -269,37 +276,50 @@ fn make_buffer_with(
     match cfg.buffer {
         // S=1 keeps the single-tree fast path (no wrapper indirection).
         BufferKind::PalKary if prio_cfg.shards > 1 => {
-            Arc::new(ShardedPrioritizedReplay::new(prio_cfg))
+            Arc::new(ShardedPrioritizedReplay::with_remover(prio_cfg, remove))
         }
-        BufferKind::PalKary => Arc::new(PrioritizedReplay::new(prio_cfg)),
-        BufferKind::GlobalLock => Arc::new(GlobalLockReplay::new(
+        BufferKind::PalKary => Arc::new(PrioritizedReplay::with_remover(prio_cfg, remove)),
+        BufferKind::GlobalLock => Arc::new(GlobalLockReplay::with_remover(
             capacity,
             obs_dim,
             act_dim,
             alpha,
             beta,
+            remove,
         )),
-        BufferKind::Uniform => Arc::new(UniformReplay::new(capacity, obs_dim, act_dim)),
-        BufferKind::EmulatedPython => Arc::new(NaiveScanReplay::new(
+        BufferKind::Uniform => {
+            Arc::new(UniformReplay::with_remover(capacity, obs_dim, act_dim, remove))
+        }
+        BufferKind::EmulatedPython => Arc::new(NaiveScanReplay::with_remover(
             capacity,
             obs_dim,
             act_dim,
             alpha,
             beta,
+            remove,
         )),
-        BufferKind::EmulatedBinding => Arc::new(PyBindBinaryReplay::new(
+        BufferKind::EmulatedBinding => Arc::new(PyBindBinaryReplay::with_remover(
             capacity,
             obs_dim,
             act_dim,
             alpha,
             beta,
+            remove,
         )),
     }
 }
 
 /// Build the configured replay buffer with the run-default capacity.
 pub fn make_buffer(cfg: &TrainConfig, obs_dim: usize, act_dim: usize) -> Arc<dyn ReplayBuffer> {
-    make_buffer_with(cfg, cfg.buffer_capacity, obs_dim, act_dim, cfg.alpha, cfg.beta)
+    make_buffer_with(
+        cfg,
+        cfg.buffer_capacity,
+        obs_dim,
+        act_dim,
+        cfg.alpha,
+        cfg.beta,
+        cfg.remove,
+    )
 }
 
 /// Build the run's replay service: one table per spec, each wrapping a
@@ -323,7 +343,17 @@ pub fn build_service(cfg: &TrainConfig, obs_dim: usize, act_dim: usize) -> Resul
         // overrides the run's globals for that table only.
         let alpha = spec.alpha.unwrap_or(cfg.alpha);
         let beta = spec.beta.unwrap_or(cfg.beta);
-        let buffer = make_buffer_with(cfg, capacity, obs_dim * mult, act_dim * mult, alpha, beta);
+        // Eviction policy: a spec's `remove=` wins over `--remove`.
+        let remove = spec.remove.unwrap_or(cfg.remove);
+        let buffer = make_buffer_with(
+            cfg,
+            capacity,
+            obs_dim * mult,
+            act_dim * mult,
+            alpha,
+            beta,
+            remove,
+        );
         // A spec's `limit=..` overrides the run default. Without one,
         // only the learner-sampled (first) table gets the ratio limiter:
         // the ratio couples inserts to THIS run's sampling, and writers
@@ -1050,6 +1080,7 @@ mod tests {
                 alpha: None,
                 beta: None,
                 limit: None,
+                remove: None,
             },
             TableSpec {
                 name: "traj".into(),
@@ -1058,6 +1089,7 @@ mod tests {
                 alpha: None,
                 beta: None,
                 limit: None,
+                remove: None,
             },
         ];
         let svc = build_service(&cfg, 4, 2).unwrap();
@@ -1128,6 +1160,25 @@ mod tests {
             hot_hits > flat_hits + 50,
             "α=1 table must concentrate on the boosted item: hot {hot_hits} vs flat {flat_hits}"
         );
+    }
+
+    #[test]
+    fn remove_spec_overrides_run_default_eviction() {
+        // `remove=` on an entry wins over `--remove`; entries without
+        // one inherit the run default.
+        let mut cfg = TrainConfig::new("dqn", "CartPole-v1");
+        cfg.buffer = BufferKind::Uniform;
+        cfg.buffer_capacity = 64;
+        cfg.remove = RemoverSpec::Lifo;
+        cfg.tables =
+            TableSpec::parse_list("hot=1step@remove=max_sampled:2,cold=1step", cfg.gamma_nstep)
+                .unwrap();
+        let svc = build_service(&cfg, 2, 1).unwrap();
+        assert_eq!(
+            svc.table("hot").unwrap().buffer().remover(),
+            RemoverSpec::MaxTimesSampled(2)
+        );
+        assert_eq!(svc.table("cold").unwrap().buffer().remover(), RemoverSpec::Lifo);
     }
 
     #[test]

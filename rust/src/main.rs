@@ -19,7 +19,8 @@ use pal_rl::remote::{
     parse_endpoint_list, BackoffPolicy, ChaosConfig, ChaosProxy, ConnectionPolicy, Endpoint,
     MeshSampler, MeshWriter, RemoteClient, RemoteSampler, RemoteWriter, ReplayServer,
 };
-use pal_rl::replay::SampleBatch;
+use pal_rl::remote::TableInfo;
+use pal_rl::replay::{RemoverSpec, SampleBatch};
 use pal_rl::runtime::Manifest;
 use pal_rl::service::{
     ExperienceSampler, ExperienceWriter, ItemKind, RateLimitSpec, ReplayService, SampleOutcome,
@@ -34,7 +35,7 @@ const TRAIN_FLAGS: &[&str] = &[
     "update-interval", "buffer", "capacity", "shards", "fanout", "alpha",
     "beta", "lr", "grad-clip", "aggregation", "seed", "stop-at-reward",
     "log-every", "curve-out", "eps-decay", "action-noise", "save-checkpoint",
-    "n-step", "gamma-nstep", "tables", "rate-limit", "save-state",
+    "n-step", "gamma-nstep", "tables", "rate-limit", "remove", "save-state",
     "restore-state", "checkpoint-every", "remote", "remote-batch",
     "rpc-timeout", "reconnect-deadline", "spill-cap",
 ];
@@ -50,6 +51,7 @@ USAGE:
   pal buffer-bench [--capacity N] [--fanout K] [--shards S] [--threads T] [--ops N]
   pal state-smoke --dir DIR --phase <collect|resume> [--items N] [--capacity N] [--shards S]
   pal remote-smoke --socket PATH [--items N] [--capacity N] [--shards S]
+  pal tenant-smoke --socket PATH
   pal mesh-smoke --endpoints EP1,EP2[,..] [--items N] [--capacity N] [--shards S]
   pal chaos-smoke [--dir DIR] [--seed S] [--steps-per-writer N] [--batches-per-sampler N] [--tcp]
   pal envs
@@ -73,12 +75,17 @@ TRAIN OPTIONS:
   --n-step N          N-step returns in the default table (default 1)
   --gamma-nstep G     discount for N-step reward folding (default 0.99)
   --tables SPEC       replay-service table layout, comma-separated
-                      name=kind[@cap,alpha=A,beta=B,limit=L] entries
-                      with kind one of 1step | nstep:N | seq:L
+                      name=kind[@cap,alpha=A,beta=B,limit=L,remove=P]
+                      entries with kind one of 1step | nstep:N | seq:L
                       (default: one `replay` table following --n-step);
                       limit= attaches a per-table rate limiter in the
-                      --rate-limit grammar; learners sample the first
-                      table
+                      --rate-limit grammar; remove= overrides --remove
+                      for that table; learners sample the first table
+  --remove POLICY     run-default eviction policy when a full table
+                      admits an insert: fifo (default) | lifo |
+                      lowest (least-priority item) | max_sampled:N
+                      (oldest item sampled at least N times; falls
+                      back to FIFO while none qualifies)
   --rate-limit R      sample-to-insert limiter default: `legacy`
                       (the --update-interval + actor-lead pacing),
                       `unlimited`, or a samples-per-insert float;
@@ -138,6 +145,15 @@ SERVE OPTIONS (same table/buffer flags as train, plus):
   --drain-deadline SECS
                       max wait for in-flight connections to finish
                       after a shutdown request (default 5)
+  --writer-budget N   per-connection insert budget: each writer
+                      session may append at most N steps for the life
+                      of the server (0 = unlimited, the default).
+                      Exhausted writers get retriable would-stall
+                      replies, not errors
+  --max-writers-per-table N
+                      cap concurrent writer sessions per table
+                      (0 = unlimited, the default); a writer claims
+                      every table its hello ACL names, all or nothing
 
   `state-smoke` is the CI durability gate: `--phase collect` drives a
   short synthetic writer/sampler run and saves its state; `--phase
@@ -150,6 +166,15 @@ SERVE OPTIONS (same table/buffer flags as train, plus):
   checkpoints are byte-identical, then soaks the server with concurrent
   writer/sampler clients and verifies exact sample-to-insert accounting
   over the Stats RPC before asking the server to shut down.
+
+  `tenant-smoke` is the CI gate for multi-tenant serving: against a
+  `pal serve` started with per-writer budgets, a writers-per-table cap
+  and a legacy (PALSTAT1) checkpoint restored, it connects tenants
+  with disjoint table ACLs and fails unless the restored rows are
+  visible, quota rejections surface as retriable would-stall replies
+  with exact partial-consume accounting, ACL violations are rejected
+  without killing the connection, and the final Stats show exact
+  per-tenant insert and eviction counts.
 
   `mesh-smoke` is the CI gate for the cross-host replay mesh: against
   N freshly started servers (any mix of transports) it drives a seeded
@@ -198,6 +223,9 @@ fn apply_service_flags(cfg: &mut TrainConfig, a: &Args) -> Result<()> {
     if let Some(r) = a.get("rate-limit") {
         cfg.rate_limit = RateLimitSpec::parse(r)?;
     }
+    if let Some(r) = a.get("remove") {
+        cfg.remove = RemoverSpec::parse(r)?;
+    }
     Ok(())
 }
 
@@ -237,7 +265,7 @@ fn train_config_from(a: &Args) -> Result<TrainConfig> {
         // ignoring them would let users believe they applied.
         let server_side: &[&str] = &[
             "tables", "capacity", "shards", "fanout", "alpha", "beta", "warmup",
-            "rate-limit", "buffer", "n-step", "gamma-nstep",
+            "rate-limit", "remove", "buffer", "n-step", "gamma-nstep",
         ];
         let ignored: Vec<&str> = server_side.iter().copied().filter(|f| a.has(f)).collect();
         if !ignored.is_empty() {
@@ -453,6 +481,7 @@ fn smoke_config(a: &Args) -> Result<TrainConfig> {
             alpha: None,
             beta: None,
             limit: None,
+            remove: None,
         },
         TableSpec {
             name: "aux".into(),
@@ -461,6 +490,7 @@ fn smoke_config(a: &Args) -> Result<TrainConfig> {
             alpha: None,
             beta: None,
             limit: None,
+            remove: None,
         },
     ];
     Ok(cfg)
@@ -613,8 +643,8 @@ fn cmd_state_smoke(a: &Args) -> Result<()> {
 const SERVE_FLAGS: &[&str] = &[
     "socket", "tcp", "buffer", "capacity", "shards", "fanout", "alpha", "beta",
     "warmup", "update-interval", "n-step", "gamma-nstep", "tables",
-    "rate-limit", "obs-dim", "act-dim", "seed", "restore-state", "save-state",
-    "drain-deadline",
+    "rate-limit", "remove", "obs-dim", "act-dim", "seed", "restore-state",
+    "save-state", "drain-deadline", "writer-budget", "max-writers-per-table",
 ];
 
 /// Set by [`on_stop_signal`] when the serving process receives SIGINT
@@ -667,6 +697,8 @@ fn cmd_serve(a: &Args) -> Result<()> {
     let act_dim: usize = a.parse_or("act-dim", 2)?;
     let seed: u64 = a.parse_or("seed", 0)?;
     let drain_deadline = a.seconds_or("drain-deadline", 5.0)?;
+    let writer_budget: u64 = a.parse_or("writer-budget", 0)?;
+    let max_writers: usize = a.parse_or("max-writers-per-table", 0)?;
     let service = Arc::new(build_service(&cfg, obs_dim, act_dim)?);
     if let Some(dir) = a.get("restore-state") {
         let state = ServiceState::load(std::path::Path::new(dir).join(STATE_FILE))?;
@@ -678,7 +710,8 @@ fn cmd_serve(a: &Args) -> Result<()> {
     }
     let server = ReplayServer::bind_endpoint(Arc::clone(&service), &endpoint, seed)?
         .expect_dims(obs_dim, act_dim)
-        .with_drain_deadline(drain_deadline);
+        .with_drain_deadline(drain_deadline)
+        .with_quotas(writer_budget, max_writers);
     // The RESOLVED endpoint: a `--tcp HOST:0` bind reports the real
     // port here, which is what scripts parse to build client endpoint
     // lists.
@@ -1128,6 +1161,229 @@ fn cmd_remote_smoke(a: &Args) -> Result<()> {
     println!(
         "remote-smoke OK: {total_inserts} inserts, {total_batches} batches, \
          byte-identical checkpoint, exact accounting over the wire"
+    );
+    Ok(())
+}
+
+const TENANT_SMOKE_FLAGS: &[&str] = &["socket"];
+
+/// Transition dims of the tenant smoke's tables — deliberately NOT the
+/// other smokes' 4/2, so a script wiring the wrong server into this
+/// gate fails fast on the dim handshake instead of deep in accounting.
+const TENANT_OBS: usize = 2;
+const TENANT_ACT: usize = 1;
+
+/// One synthetic env step of the tenant smoke's traffic.
+fn tenant_step(i: usize) -> WriterStep {
+    WriterStep {
+        obs: vec![i as f32; TENANT_OBS],
+        action: vec![0.5; TENANT_ACT],
+        next_obs: vec![i as f32 + 1.0; TENANT_OBS],
+        reward: 1.0,
+        done: false,
+        truncated: false,
+    }
+}
+
+fn tenant_table<'a>(stats: &'a [TableInfo], name: &str) -> Result<&'a TableInfo> {
+    stats
+        .iter()
+        .find(|t| t.name == name)
+        .ok_or_else(|| anyhow!("table `{name}` missing from Stats"))
+}
+
+/// Multi-tenant serving smoke (the CI gate for writer budgets, table
+/// ACLs and pluggable eviction over the wire), run by
+/// tools/remote_smoke.sh against a `pal serve` started with:
+///
+/// ```text
+/// --tables "hot=1step@16,remove=lifo,cold=1step@16"
+/// --obs-dim 2 --act-dim 1 --warmup 1 --rate-limit unlimited
+/// --writer-budget 48 --max-writers-per-table 1
+/// --restore-state DIR   # a committed legacy PALSTAT1 checkpoint:
+///                       # hot = 5 rows, cold = 3 rows
+/// ```
+///
+/// and asserts, in order: the legacy checkpoint restored (5 + 3 rows
+/// visible over Stats — v1 files must keep reading under PALSTAT2
+/// code); an unknown table in a hello ACL is rejected at the
+/// handshake; tenant A (ACL `hot`) gets exactly its 48-step budget —
+/// a 60-step append partially consumes 48, the retry consumes 0 —
+/// with the 37 overflow evictions charged to LIFO; A touching `cold`
+/// is an ACL error that does NOT kill the connection; tenant B (ACL
+/// `cold`) appends 20 (7 FIFO evictions) and samples freely; tenant C
+/// cannot write `hot` while A holds its writer slot (cap 1); and the
+/// final Stats show exact per-tenant insert, eviction and
+/// sample-count accounting.
+fn cmd_tenant_smoke(a: &Args) -> Result<()> {
+    a.check_known(TENANT_SMOKE_FLAGS)?;
+    let socket = a
+        .get("socket")
+        .ok_or_else(|| anyhow!("--socket PATH required"))?
+        .to_string();
+
+    // Gate 1: the legacy (PALSTAT1) checkpoint restored. A miss here
+    // means forward-compat broke: v1 files must restore under v2 code
+    // with FIFO state and zeroed sample counts defaulted in.
+    let mut monitor = RemoteClient::connect(&socket)?;
+    let before = monitor.stats()?;
+    let hot0 = tenant_table(&before, "hot")?.clone();
+    let cold0 = tenant_table(&before, "cold")?.clone();
+    ensure!(
+        hot0.len == 5 && hot0.capacity == 16 && hot0.stats.inserts == 5,
+        "hot table did not restore from the legacy checkpoint: {hot0:?}"
+    );
+    ensure!(
+        cold0.len == 3 && cold0.capacity == 16 && cold0.stats.inserts == 3,
+        "cold table did not restore from the legacy checkpoint: {cold0:?}"
+    );
+    ensure!(
+        hot0.stats.max_times_sampled == 0 && cold0.stats.max_times_sampled == 0,
+        "legacy restore must default sample counts to zero"
+    );
+    eprintln!("[tenant] legacy PALSTAT1 checkpoint restored: hot=5 cold=3 rows");
+
+    // Gate 2: a hello ACL naming an unknown table is a handshake
+    // error, not a silent no-op.
+    let mut bad = RemoteClient::connect(&socket)?;
+    bad.set_acl(vec!["nope".into()]);
+    let err = match bad.hello(7) {
+        Err(e) => format!("{e:#}"),
+        Ok(t) => bail!("hello with a bogus ACL succeeded (default table `{t}`)"),
+    };
+    ensure!(
+        err.contains("unknown table"),
+        "bogus-ACL hello failed with the wrong error: {err}"
+    );
+    drop(bad);
+
+    // Tenant A: ACL {hot}, budget 48. A 60-step append must partially
+    // consume exactly the budget; the overflow past hot's 11 free
+    // slots (16 − 5 restored) evicts 37 items by the table's LIFO
+    // policy.
+    let mut a_cli = RemoteClient::connect(&socket)?;
+    a_cli.set_acl(vec!["hot".into()]);
+    a_cli.hello(11)?;
+    let steps_a: Vec<WriterStep> = (0..60usize).map(tenant_step).collect();
+    let (consumed, emitted) = a_cli.append(1, &steps_a)?;
+    ensure!(
+        (consumed, emitted) == (48, 48),
+        "tenant A: expected the 60-step append to consume its 48-step \
+         budget exactly, got consumed {consumed} emitted {emitted}"
+    );
+    let (consumed, _) = a_cli.append(1, &steps_a[..1])?;
+    ensure!(
+        consumed == 0,
+        "tenant A: append past an exhausted budget consumed {consumed} steps"
+    );
+    // An ACL violation is an application error on a healthy
+    // connection: the Error frame comes back, the session lives on.
+    let err = match a_cli.update_priorities("cold", &[0], &[1.0]) {
+        Err(e) => format!("{e:#}"),
+        Ok(()) => bail!("tenant A updated priorities on a table outside its ACL"),
+    };
+    ensure!(err.contains("ACL"), "ACL violation surfaced the wrong error: {err}");
+    a_cli
+        .stats()
+        .map_err(|e| anyhow!("tenant A's connection died after an ACL error: {e:#}"))?;
+
+    // Tenant B: ACL {cold}. 20 appends overflow cold's 13 free slots
+    // by 7 — evicted FIFO (the run default) — then sampling is free
+    // (warmup 1, unlimited limiter) and drives the per-item sample
+    // counts the Stats must report.
+    let mut b_cli = RemoteClient::connect(&socket)?;
+    b_cli.set_acl(vec!["cold".into()]);
+    b_cli.hello(22)?;
+    let steps_b: Vec<WriterStep> = (100..120usize).map(tenant_step).collect();
+    let (consumed, emitted) = b_cli.append(2, &steps_b)?;
+    ensure!(
+        (consumed, emitted) == (20, 20),
+        "tenant B: expected all 20 steps consumed, got {consumed}/{emitted}"
+    );
+    let mut out = SampleBatch::default();
+    for round in 0..3 {
+        let outcome = b_cli.sample("cold", 8, &mut out)?;
+        ensure!(
+            outcome == SampleOutcome::Sampled,
+            "tenant B: sample round {round} stalled: {outcome:?}"
+        );
+    }
+
+    // Tenant C: ACL {hot}, but --max-writers-per-table 1 and tenant A
+    // still holds hot's writer slot — the claim must fail as a
+    // RETRIABLE would-stall (consumed 0), not a connection error.
+    let mut c_cli = RemoteClient::connect(&socket)?;
+    c_cli.set_acl(vec!["hot".into()]);
+    c_cli.hello(33)?;
+    let (consumed, _) = c_cli.append(3, &steps_a[..1])?;
+    ensure!(
+        consumed == 0,
+        "tenant C: wrote {consumed} steps to `hot` past the writers-per-table cap"
+    );
+
+    // Exact per-tenant accounting over the final Stats.
+    let after = monitor.stats()?;
+    let hot = tenant_table(&after, "hot")?.clone();
+    let cold = tenant_table(&after, "cold")?.clone();
+    ensure!(
+        hot.stats.inserts == hot0.stats.inserts + 48,
+        "hot inserts: {} recorded, tenant A consumed 48 over {}",
+        hot.stats.inserts,
+        hot0.stats.inserts
+    );
+    ensure!(hot.len == 16, "hot should sit at capacity, len {}", hot.len);
+    ensure!(
+        hot.stats.evict_lifo == 37 && hot.stats.evict_fifo == 0,
+        "hot evictions must all be LIFO: lifo {} fifo {}",
+        hot.stats.evict_lifo,
+        hot.stats.evict_fifo
+    );
+    ensure!(
+        hot.stats.sample_batches == hot0.stats.sample_batches
+            && hot.stats.max_times_sampled == 0,
+        "nobody sampled hot: batches {} (was {}), max_times_sampled {}",
+        hot.stats.sample_batches,
+        hot0.stats.sample_batches,
+        hot.stats.max_times_sampled
+    );
+    ensure!(
+        cold.stats.inserts == cold0.stats.inserts + 20,
+        "cold inserts: {} recorded, tenant B consumed 20 over {}",
+        cold.stats.inserts,
+        cold0.stats.inserts
+    );
+    ensure!(cold.len == 16, "cold should sit at capacity, len {}", cold.len);
+    ensure!(
+        cold.stats.evict_fifo == 7 && cold.stats.evict_lifo == 0,
+        "cold evictions must all be FIFO: fifo {} lifo {}",
+        cold.stats.evict_fifo,
+        cold.stats.evict_lifo
+    );
+    ensure!(
+        cold.stats.sample_batches == cold0.stats.sample_batches + 3
+            && cold.stats.sampled_items == cold0.stats.sampled_items + 24,
+        "cold sampling accounting off: batches {} items {}",
+        cold.stats.sample_batches,
+        cold.stats.sampled_items
+    );
+    // 24 draws over at most 16 occupied slots: some slot was sampled
+    // at least twice (pigeonhole), and the count must survive into the
+    // snapshot the Stats RPC reports.
+    ensure!(
+        cold.stats.max_times_sampled >= 2,
+        "cold max_times_sampled {} after 24 draws over 16 slots",
+        cold.stats.max_times_sampled
+    );
+
+    drop(a_cli);
+    drop(b_cli);
+    drop(c_cli);
+    monitor.shutdown()?;
+    println!(
+        "tenant-smoke OK: legacy checkpoint restored, budgets and ACLs enforced, \
+         hot +48 inserts (37 LIFO evictions), cold +20 inserts (7 FIFO evictions, \
+         max sample count {})",
+        cold.stats.max_times_sampled
     );
     Ok(())
 }
@@ -1908,6 +2164,7 @@ fn main() -> Result<()> {
         Some("buffer-bench") => cmd_buffer_bench(&a),
         Some("state-smoke") => cmd_state_smoke(&a),
         Some("remote-smoke") => cmd_remote_smoke(&a),
+        Some("tenant-smoke") => cmd_tenant_smoke(&a),
         Some("mesh-smoke") => cmd_mesh_smoke(&a),
         Some("chaos-smoke") => cmd_chaos_smoke(&a),
         Some("dse") => cmd_dse(&a),

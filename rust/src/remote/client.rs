@@ -143,6 +143,9 @@ pub struct RemoteClient {
     /// Seed re-quoted on every redial's `Hello`, once [`Self::hello`]
     /// has run (a client that never said hello redials sessionless).
     hello_seed: Option<u64>,
+    /// Table ACL quoted on every `Hello` (empty = all tables); redials
+    /// re-send it so the server rebinds the same scope.
+    acl: Vec<String>,
     /// Server-side session id (0 until the first `Hello` reply).
     session: u64,
     /// Next sequence number [`Self::alloc_seq`] hands out.
@@ -180,6 +183,7 @@ impl RemoteClient {
             endpoint: endpoint.clone(),
             policy,
             hello_seed: None,
+            acl: Vec::new(),
             session: 0,
             next_seq: 1,
             reconnects: 0,
@@ -345,13 +349,23 @@ impl RemoteClient {
         }
     }
 
+    /// Scope the connection to a set of table names (the tenant ACL the
+    /// next `Hello` binds; empty = all tables). Call before
+    /// [`Self::hello`] — redials re-send the list automatically, so the
+    /// scope survives reconnects.
+    pub fn set_acl(&mut self, tables: Vec<String>) {
+        self.acl = tables;
+    }
+
     /// Bind (or, after a redial, resume) a server-side session and seed
     /// its sampling RNG; returns the server's default (first) table
     /// name, so a sampler binds without a separate `Stats` round-trip.
     pub fn hello(&mut self, rng_seed: u64) -> Result<String> {
         self.hello_seed = Some(rng_seed);
         let quoted = self.session;
-        match self.call_checked(&Request::Hello { rng_seed, session: quoted })? {
+        let req =
+            Request::Hello { rng_seed, session: quoted, tables: self.acl.clone() };
+        match self.call_checked(&req)? {
             Response::Hello { default_table, session, resumed, next_seq } => {
                 self.session = session;
                 self.last_hello_resumed = resumed;
@@ -401,6 +415,13 @@ impl RemoteClient {
         self.send_encoded()?;
         match self.recv()? {
             Response::Appended { consumed, emitted } => Ok((consumed, emitted)),
+            // A tenant-quota rejection is retriable, exactly like a
+            // limiter stall: nothing was consumed, the tail stays
+            // queued, the caller's throttle poll retries it.
+            Response::WouldStall { reason: StallReason::QuotaExhausted } => Ok((0, 0)),
+            Response::WouldStall { reason } => {
+                bail!("unexpected stall reason {reason:?} to Append")
+            }
             Response::Error { message } => bail!("replay server error: {message}"),
             other => bail!("unexpected response to Append: {other:?}"),
         }
@@ -423,6 +444,11 @@ impl RemoteClient {
             SampleOutcomeWire::WouldStall(StallReason::Throttled) => SampleOutcome::Throttled,
             SampleOutcomeWire::WouldStall(StallReason::NotEnoughData) => {
                 SampleOutcome::NotEnoughData
+            }
+            // Quota rejections are retriable by design; to a sampling
+            // loop they look like a throttle (sleep-poll and retry).
+            SampleOutcomeWire::WouldStall(StallReason::QuotaExhausted) => {
+                SampleOutcome::Throttled
             }
         })
     }

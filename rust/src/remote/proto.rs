@@ -93,15 +93,20 @@ const RESP_CHUNK_BEGIN: u8 = 10;
 const RESP_CHUNK: u8 = 11;
 const RESP_CHUNK_END: u8 = 12;
 
-/// Why a `Sample` was denied; the client maps these straight onto
-/// [`crate::service::SampleOutcome`] and sleep-polls, exactly like an
-/// in-process learner.
+/// Why a `Sample` (or a whole `Append` batch) was denied; the client
+/// maps these straight onto [`crate::service::SampleOutcome`] and
+/// sleep-polls, exactly like an in-process learner.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum StallReason {
     /// The table's rate limiter denied the batch.
     Throttled,
     /// The table is below `min_size_to_sample`.
     NotEnoughData,
+    /// A tenant quota denied the request: the connection's insert
+    /// budget is spent, or the table's writer cap is full. Retriable
+    /// by design (another tenant releasing capacity unblocks it) —
+    /// quota rejections are never connection errors.
+    QuotaExhausted,
 }
 
 /// One request frame, client → server.
@@ -119,7 +124,13 @@ pub enum Request {
     /// bit-reproducible against an in-process
     /// [`crate::service::SamplerHandle`] loop using `Rng::new(seed)` on
     /// the same table contents.
-    Hello { rng_seed: u64, session: u64 },
+    ///
+    /// `tables` is the connection's table ACL: the set of table names
+    /// this client wants to touch (empty = all tables). The server
+    /// binds it at `Hello` time — a later `Append`/`Sample` against a
+    /// table outside the list is a hard [`Response::Error`], and a
+    /// re-sent `Hello` (redial, resume) rebinds the list.
+    Hello { rng_seed: u64, session: u64, tables: Vec<String> },
     /// Append raw env steps for one actor; the server-side
     /// [`crate::service::TrajectoryWriter`] owns item assembly (N-step
     /// folding, sequence windows, boundary rules) so remote actors get
@@ -440,6 +451,7 @@ pub fn decode_sample_response(payload: &[u8], out: &mut SampleBatch) -> Result<S
             let reason = match r.u8("stall reason")? {
                 0 => StallReason::Throttled,
                 1 => StallReason::NotEnoughData,
+                2 => StallReason::QuotaExhausted,
                 other => bail!("unknown stall reason {other}"),
             };
             r.expect_end()?;
@@ -467,10 +479,14 @@ impl Request {
     /// Encode into a caller-owned (typically reused) [`ByteWriter`].
     pub fn encode_into(&self, w: &mut ByteWriter) {
         match self {
-            Request::Hello { rng_seed, session } => {
+            Request::Hello { rng_seed, session, tables } => {
                 w.u8(OP_HELLO);
                 w.u64(*rng_seed);
                 w.u64(*session);
+                w.u32(tables.len() as u32);
+                for t in tables {
+                    w.str_(t);
+                }
             }
             Request::Append { actor_id, seq, dropped, steps } => {
                 encode_append(w, *actor_id, *seq, *dropped, steps.iter())
@@ -518,7 +534,17 @@ impl Request {
         let op = r.u8("request opcode")?;
         let req = match op {
             OP_HELLO => {
-                Request::Hello { rng_seed: r.u64("rng seed")?, session: r.u64("session id")? }
+                let rng_seed = r.u64("rng seed")?;
+                let session = r.u64("session id")?;
+                let count = r.u32("acl table count")? as usize;
+                if count > MAX_TABLES {
+                    bail!("hello claims {count} ACL tables (protocol cap {MAX_TABLES})");
+                }
+                let mut tables = Vec::with_capacity(count);
+                for _ in 0..count {
+                    tables.push(r.str_("acl table name")?);
+                }
+                Request::Hello { rng_seed, session, tables }
             }
             OP_APPEND => {
                 let actor_id = r.u64("actor id")?;
@@ -626,6 +652,7 @@ impl Response {
                 w.u8(match reason {
                     StallReason::Throttled => 0,
                     StallReason::NotEnoughData => 1,
+                    StallReason::QuotaExhausted => 2,
                 });
             }
             Response::Stats { tables } => {
@@ -642,6 +669,11 @@ impl Response {
                     w.u64(t.stats.insert_stalls as u64);
                     w.u64(t.stats.sample_stalls as u64);
                     w.u64(t.stats.steps_dropped as u64);
+                    w.u64(t.stats.evict_fifo as u64);
+                    w.u64(t.stats.evict_lifo as u64);
+                    w.u64(t.stats.evict_lowest as u64);
+                    w.u64(t.stats.evict_sampled as u64);
+                    w.u64(t.stats.max_times_sampled as u64);
                 }
             }
             Response::State { state } => {
@@ -696,6 +728,7 @@ impl Response {
                 let reason = match r.u8("stall reason")? {
                     0 => StallReason::Throttled,
                     1 => StallReason::NotEnoughData,
+                    2 => StallReason::QuotaExhausted,
                     other => bail!("unknown stall reason {other}"),
                 };
                 Response::WouldStall { reason }
@@ -719,6 +752,11 @@ impl Response {
                             insert_stalls: r.u64("insert_stalls")? as usize,
                             sample_stalls: r.u64("sample_stalls")? as usize,
                             steps_dropped: r.u64("steps_dropped")? as usize,
+                            evict_fifo: r.u64("evict_fifo")? as usize,
+                            evict_lifo: r.u64("evict_lifo")? as usize,
+                            evict_lowest: r.u64("evict_lowest")? as usize,
+                            evict_sampled: r.u64("evict_sampled")? as usize,
+                            max_times_sampled: r.u64("max_times_sampled")? as usize,
                         },
                     });
                 }
@@ -769,8 +807,12 @@ mod tests {
     #[test]
     fn every_request_roundtrips() {
         let reqs = vec![
-            Request::Hello { rng_seed: 0xDEAD_BEEF, session: 0 },
-            Request::Hello { rng_seed: 1, session: 0xFEED_F00D },
+            Request::Hello { rng_seed: 0xDEAD_BEEF, session: 0, tables: vec![] },
+            Request::Hello {
+                rng_seed: 1,
+                session: 0xFEED_F00D,
+                tables: vec!["hot".into(), "cold".into()],
+            },
             Request::Append { actor_id: 3, seq: 7, dropped: 0, steps: vec![step(0), step(1)] },
             Request::Append { actor_id: 0, seq: 0, dropped: 12, steps: vec![] },
             Request::Sample { table: "replay".into(), batch: 32, seq: 9 },
@@ -826,6 +868,7 @@ mod tests {
             Response::Sampled(batch),
             Response::WouldStall { reason: StallReason::Throttled },
             Response::WouldStall { reason: StallReason::NotEnoughData },
+            Response::WouldStall { reason: StallReason::QuotaExhausted },
             Response::Stats {
                 tables: vec![TableInfo {
                     name: "replay".into(),
@@ -839,6 +882,11 @@ mod tests {
                         insert_stalls: 3,
                         sample_stalls: 9,
                         steps_dropped: 4,
+                        evict_fifo: 72,
+                        evict_lifo: 0,
+                        evict_lowest: 5,
+                        evict_sampled: 11,
+                        max_times_sampled: 6,
                     },
                 }],
             },
@@ -869,8 +917,11 @@ mod tests {
         for cut in 1..full.len() {
             assert!(Request::decode(&full[..cut]).is_err(), "cut at {cut}");
         }
-        // Truncated session-resume Hello: every cut must error.
-        let hello = Request::Hello { rng_seed: 0x1234, session: 0x5678 }.encode();
+        // Truncated session-resume Hello (ACL list included so the
+        // string path is cut too): every cut must error.
+        let hello =
+            Request::Hello { rng_seed: 0x1234, session: 0x5678, tables: vec!["hot".into()] }
+                .encode();
         for cut in 1..hello.len() {
             assert!(Request::decode(&hello[..cut]).is_err(), "hello cut at {cut}");
         }

@@ -45,6 +45,20 @@
 //!   partially admitted insert batch is a short
 //!   [`Response::Appended`]. The server never blocks a connection on a
 //!   rate limiter.
+//!
+//! # Tenant quotas and table ACLs
+//!
+//! [`ReplayServer::with_quotas`] turns on multi-tenant policing: every
+//! session gets an insert budget (total steps it may append, spent
+//! across reconnects — resuming a session resumes its remaining
+//! budget) and each table caps how many sessions may hold writers on
+//! it at once. Both rejections cross the wire as retriable
+//! [`StallReason::QuotaExhausted`] stalls, never connection errors —
+//! a tenant releasing capacity unblocks the retry. A `Hello`'s table
+//! list is the connection's ACL (empty = all tables): the session's
+//! writers fan out only to ACL tables, and a `Sample` or
+//! `UpdatePriorities` against a table outside the list is a hard
+//! [`Response::Error`] (a config bug, not a capacity condition).
 
 use super::frame::{read_frame_into, write_frame};
 use super::proto::{self, Request, Response, StallReason, TableInfo, MAX_CHUNK_LEN};
@@ -93,6 +107,57 @@ pub const REPLY_CACHE_DEPTH: usize = 8;
 /// [`ReplayServer::with_drain_deadline`] / `pal serve --drain-deadline`).
 pub const DEFAULT_DRAIN_DEADLINE: Duration = Duration::from_secs(5);
 
+/// Server-wide count of sessions holding writer slots, per table.
+/// Claims are all-or-nothing across a session's table set and are
+/// released when the session is dropped (TTL eviction, connection end
+/// for implicit sessions) or rebinds to a different ACL.
+struct WriterLedger {
+    max_per_table: usize,
+    counts: Mutex<HashMap<String, usize>>,
+}
+
+impl WriterLedger {
+    fn new(max_per_table: usize) -> Self {
+        Self { max_per_table, counts: Mutex::new(HashMap::new()) }
+    }
+
+    /// Claim one writer slot on every named table, atomically: either
+    /// every table has room and every count is bumped, or nothing is.
+    fn claim(&self, tables: &[String]) -> bool {
+        let mut counts = self.counts.lock().expect("writer ledger poisoned");
+        if tables.iter().any(|t| counts.get(t).copied().unwrap_or(0) >= self.max_per_table) {
+            return false;
+        }
+        for t in tables {
+            *counts.entry(t.clone()).or_insert(0) += 1;
+        }
+        true
+    }
+
+    fn release(&self, tables: &[String]) {
+        let mut counts = self.counts.lock().expect("writer ledger poisoned");
+        for t in tables {
+            match counts.get_mut(t) {
+                Some(c) if *c > 1 => *c -= 1,
+                Some(_) => {
+                    counts.remove(t);
+                }
+                None => {}
+            }
+        }
+    }
+}
+
+/// The server's tenant policy, shared by every connection. The
+/// default (`writer_budget == 0`, no ledger) polices nothing.
+#[derive(Clone, Default)]
+struct Quotas {
+    /// Total steps each session may insert (0 = unlimited).
+    writer_budget: u64,
+    /// Writers-per-table cap, when one is configured.
+    ledger: Option<Arc<WriterLedger>>,
+}
+
 /// One session's server-side state. Owned by the registry (detached
 /// sessions keep it alive for [`SESSION_TTL`]); a connection locks it
 /// per request.
@@ -106,6 +171,16 @@ struct Session {
     /// Encoded replies of the most recent sequenced requests, for
     /// replay dedupe.
     replies: VecDeque<(u64, Vec<u8>)>,
+    /// Remaining insert budget in steps (`None` = unlimited). Lives in
+    /// the session, not the connection, so a resumed session resumes
+    /// its spend instead of minting a fresh allowance.
+    budget: Option<u64>,
+    /// Table ACL bound by the latest `Hello` (`None` = all tables).
+    acl: Option<Vec<String>>,
+    /// Table names this session holds writer-ledger claims on.
+    claims: Vec<String>,
+    /// The server's writer cap, when one is configured.
+    ledger: Option<Arc<WriterLedger>>,
 }
 
 impl Session {
@@ -116,6 +191,47 @@ impl Session {
             writers: HashMap::new(),
             next_seq: 1,
             replies: VecDeque::new(),
+            budget: None,
+            acl: None,
+            claims: Vec::new(),
+            ledger: None,
+        }
+    }
+
+    /// Arm a fresh session with the server's tenant policy (resumed
+    /// sessions keep their partially spent state instead).
+    fn set_quotas(&mut self, quotas: &Quotas) {
+        self.budget = (quotas.writer_budget > 0).then_some(quotas.writer_budget);
+        self.ledger = quotas.ledger.clone();
+    }
+
+    /// Bind (or rebind) the table ACL from a `Hello` (empty = all
+    /// tables; the latest `Hello` wins). A *changed* list drops the
+    /// session's writers and ledger claims — their fan-out no longer
+    /// matches what the client may touch — while an identical rebind
+    /// (the redial path) keeps assembly windows intact.
+    fn set_acl(&mut self, tables: &[String]) {
+        let acl = if tables.is_empty() { None } else { Some(tables.to_vec()) };
+        if acl != self.acl {
+            self.writers.clear();
+            if let Some(ledger) = &self.ledger {
+                ledger.release(&self.claims);
+            }
+            self.claims.clear();
+            self.acl = acl;
+        }
+    }
+
+    /// Whether the session's ACL admits `table`.
+    fn allows(&self, table: &str) -> bool {
+        self.acl.as_ref().map_or(true, |acl| acl.iter().any(|t| t == table))
+    }
+}
+
+impl Drop for Session {
+    fn drop(&mut self) {
+        if let Some(ledger) = &self.ledger {
+            ledger.release(&self.claims);
         }
     }
 }
@@ -200,6 +316,7 @@ pub struct ReplayServer {
     dims: Option<(usize, usize)>,
     sessions: Arc<SessionRegistry>,
     drain_deadline: Duration,
+    quotas: Quotas,
 }
 
 impl ReplayServer {
@@ -231,7 +348,23 @@ impl ReplayServer {
             dims: None,
             sessions: Arc::new(SessionRegistry::new()),
             drain_deadline: DEFAULT_DRAIN_DEADLINE,
+            quotas: Quotas::default(),
         })
+    }
+
+    /// Turn on tenant quotas (`pal serve --writer-budget` /
+    /// `--max-writers-per-table`; 0 = unlimited for either): every
+    /// session may insert at most `writer_budget` steps total, and at
+    /// most `max_writers_per_table` sessions may hold writers on any
+    /// one table at once. Exhaustion is answered with a retriable
+    /// [`StallReason::QuotaExhausted`], never a dropped connection.
+    pub fn with_quotas(mut self, writer_budget: u64, max_writers_per_table: usize) -> Self {
+        self.quotas = Quotas {
+            writer_budget,
+            ledger: (max_writers_per_table > 0)
+                .then(|| Arc::new(WriterLedger::new(max_writers_per_table))),
+        };
+        self
     }
 
     /// Bound the post-stop wait for open connections to drain (`pal
@@ -292,12 +425,13 @@ impl ReplayServer {
                     self.active.fetch_add(1, Ordering::Acquire);
                     let dims = self.dims;
                     let sessions = Arc::clone(&self.sessions);
+                    let quotas = self.quotas.clone();
                     let seed = self
                         .seed
                         .wrapping_add(conn_id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
                     std::thread::spawn(move || {
                         let _guard = guard;
-                        handle_connection(service, stream, seed, stop, dims, sessions);
+                        handle_connection(service, stream, seed, stop, dims, sessions, quotas);
                     });
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -342,14 +476,20 @@ fn handle_connection(
     stop: Arc<AtomicBool>,
     dims: Option<(usize, usize)>,
     sessions: Arc<SessionRegistry>,
+    quotas: Quotas,
 ) {
     // Accepted sockets may inherit the listener's non-blocking mode;
     // connection I/O is plain blocking reads.
     let _ = stream.set_nonblocking(false);
     // Until (unless) the client says Hello, the connection runs on an
-    // implicit session: same state shape, but unregistered — it dies
-    // with the connection, exactly the pre-session behavior.
-    let mut session: Arc<Mutex<Session>> = Arc::new(Mutex::new(Session::new(0, seed)));
+    // implicit session: same state shape (including quotas), but
+    // unregistered — it dies with the connection, exactly the
+    // pre-session behavior.
+    let mut session: Arc<Mutex<Session>> = {
+        let mut s = Session::new(0, seed);
+        s.set_quotas(&quotas);
+        Arc::new(Mutex::new(s))
+    };
     let mut registered = 0u64;
     // In-progress chunked Restore upload, if any. Connection-local on
     // purpose: a dropped link aborts the upload (nothing was applied —
@@ -383,21 +523,35 @@ fn handle_connection(
                 Response::Ok.encode_into(&mut enc);
                 shutdown = true;
             }
-            Ok(Request::Hello { rng_seed, session: requested }) => {
-                let (slot, resumed) = sessions.hello(requested, rng_seed);
-                let (id, next_seq) = {
-                    let s = slot.lock().expect("session poisoned");
-                    (s.id, s.next_seq)
-                };
-                session = slot;
-                registered = id;
-                Response::Hello {
-                    default_table: service.default_table().name().to_string(),
-                    session: id,
-                    resumed,
-                    next_seq,
+            Ok(Request::Hello { rng_seed, session: requested, tables }) => {
+                // Validate the ACL against the served tables BEFORE
+                // binding anything: an unknown name is a config error
+                // answered on the current session, not a quota.
+                if let Some(bad) = tables.iter().find(|t| service.table(t).is_none()) {
+                    Response::Error { message: format!("unknown table `{bad}` in hello ACL") }
+                        .encode_into(&mut enc);
+                } else {
+                    let (slot, resumed) = sessions.hello(requested, rng_seed);
+                    let (id, next_seq) = {
+                        let mut s = slot.lock().expect("session poisoned");
+                        if !resumed {
+                            s.set_quotas(&quotas);
+                        }
+                        // The latest Hello wins (a redial re-sends the
+                        // same list and reattaches cleanly).
+                        s.set_acl(&tables);
+                        (s.id, s.next_seq)
+                    };
+                    session = slot;
+                    registered = id;
+                    Response::Hello {
+                        default_table: service.default_table().name().to_string(),
+                        session: id,
+                        resumed,
+                        next_seq,
+                    }
+                    .encode_into(&mut enc);
                 }
-                .encode_into(&mut enc);
             }
             // The one RPC answered by MORE than one frame: the chunked
             // checkpoint download streams ChunkBegin + chunks + ChunkEnd
@@ -640,19 +794,27 @@ fn dispatch_into(
         }
     }
     if let Request::Sample { table, batch, .. } = &req {
-        match service.sampler(table) {
-            None => {
-                Response::Error { message: format!("unknown table `{table}`") }.encode_into(enc)
+        if !session.allows(table) {
+            Response::Error {
+                message: format!("table `{table}` is outside this connection's ACL"),
             }
-            Some(sampler) => {
-                match sampler.try_sample(*batch as usize, &mut session.rng, scratch) {
-                    SampleOutcome::Sampled => proto::encode_sampled(enc, scratch),
-                    SampleOutcome::Throttled => {
-                        Response::WouldStall { reason: StallReason::Throttled }.encode_into(enc)
-                    }
-                    SampleOutcome::NotEnoughData => {
-                        Response::WouldStall { reason: StallReason::NotEnoughData }
-                            .encode_into(enc)
+            .encode_into(enc);
+            // Still a sequenced, cacheable reply (falls through below).
+        } else {
+            match service.sampler(table) {
+                None => Response::Error { message: format!("unknown table `{table}`") }
+                    .encode_into(enc),
+                Some(sampler) => {
+                    match sampler.try_sample(*batch as usize, &mut session.rng, scratch) {
+                        SampleOutcome::Sampled => proto::encode_sampled(enc, scratch),
+                        SampleOutcome::Throttled => {
+                            Response::WouldStall { reason: StallReason::Throttled }
+                                .encode_into(enc)
+                        }
+                        SampleOutcome::NotEnoughData => {
+                            Response::WouldStall { reason: StallReason::NotEnoughData }
+                                .encode_into(enc)
+                        }
                     }
                 }
             }
@@ -720,31 +882,60 @@ fn dispatch_cold(
                     };
                 }
             }
-            if !session.writers.contains_key(&actor_id)
-                && session.writers.len() >= MAX_WRITERS_PER_CONN
-            {
-                return Response::Error {
-                    message: format!(
-                        "session already writes for {MAX_WRITERS_PER_CONN} distinct \
-                         actor ids — actor id {actor_id} rejected (buggy id generation?)"
-                    ),
-                };
+            // A spent insert budget is a retriable quota stall, not an
+            // error: the reply is cached under this seq, so a replay
+            // after reconnect sees the same verdict.
+            let budget_left = session.budget.unwrap_or(u64::MAX);
+            if budget_left == 0 && !steps.is_empty() {
+                return Response::WouldStall { reason: StallReason::QuotaExhausted };
             }
-            let writer = session
-                .writers
-                .entry(actor_id)
-                .or_insert_with(|| service.writer(actor_id as usize));
+            if !session.writers.contains_key(&actor_id) {
+                if session.writers.len() >= MAX_WRITERS_PER_CONN {
+                    return Response::Error {
+                        message: format!(
+                            "session already writes for {MAX_WRITERS_PER_CONN} distinct \
+                             actor ids — actor id {actor_id} rejected (buggy id generation?)"
+                        ),
+                    };
+                }
+                // First writer of the session: claim one writer slot on
+                // each table the session may write to (all-or-nothing).
+                // A full table is a retriable stall — another tenant
+                // detaching frees the slot.
+                if session.claims.is_empty() {
+                    if let Some(ledger) = session.ledger.clone() {
+                        let targets: Vec<String> = match &session.acl {
+                            Some(acl) => acl.clone(),
+                            None => {
+                                service.tables().iter().map(|t| t.name().to_string()).collect()
+                            }
+                        };
+                        if !ledger.claim(&targets) {
+                            return Response::WouldStall {
+                                reason: StallReason::QuotaExhausted,
+                            };
+                        }
+                        session.claims = targets;
+                    }
+                }
+                let writer = service.writer_for(actor_id as usize, session.acl.as_deref());
+                session.writers.insert(actor_id, writer);
+            }
+            let writer = session.writers.get_mut(&actor_id).expect("writer just ensured");
             let mut consumed = 0u32;
             let mut emitted = 0u32;
             for step in steps {
-                // Stop at the first limiter stall; the client retries
-                // the tail. An admitted step is fully fanned out, so an
-                // insert is never half-applied.
-                if writer.throttled() {
+                // Stop at the first limiter stall or the last budgeted
+                // step; the client retries the tail. An admitted step is
+                // fully fanned out, so an insert is never half-applied.
+                if consumed as u64 >= budget_left || writer.throttled() {
                     break;
                 }
                 emitted += writer.append(step) as u32;
                 consumed += 1;
+            }
+            if let Some(budget) = session.budget.as_mut() {
+                *budget -= consumed as u64;
             }
             Response::Appended { consumed, emitted }
         }
@@ -752,6 +943,9 @@ fn dispatch_cold(
         Request::Sample { .. } => unreachable!("Sample is dispatched before the cold path"),
         Request::UpdatePriorities { table, indices, td_abs, seq: _ } => match service.table(&table)
         {
+            _ if !session.allows(&table) => Response::Error {
+                message: format!("table `{table}` is outside this connection's ACL"),
+            },
             None => Response::Error { message: format!("unknown table `{table}`") },
             Some(t) => {
                 let cap = t.capacity() as u64;
@@ -1279,6 +1473,113 @@ mod tests {
             service.checkpoint().unwrap().encode(),
             "reassembled stream must equal the checkpoint bytes"
         );
+    }
+
+    fn two_table_service() -> Arc<ReplayService> {
+        let table = |name: &str| {
+            Table::new(
+                name,
+                ItemKind::OneStep,
+                Arc::new(UniformReplay::new(32, 2, 1)),
+                RateLimiter::Unlimited { min_size_to_sample: 1 },
+            )
+        };
+        Arc::new(ReplayService::new(vec![table("hot"), table("cold")]).unwrap())
+    }
+
+    #[test]
+    fn insert_budget_caps_appends_then_would_stall() {
+        let service = tiny_service();
+        let mut session = Session::new(0, 1);
+        session.budget = Some(5);
+        let mut scratch = SampleBatch::default();
+        // 8 steps against a budget of 5: partial consume, like a
+        // limiter stall — the client retries the tail.
+        let resp = dispatch(&service, &mut session, &mut scratch, None, append_req(0, 8));
+        assert!(matches!(resp, Response::Appended { consumed: 5, .. }), "{resp:?}");
+        assert_eq!(service.table("replay").unwrap().len(), 5);
+        assert_eq!(session.budget, Some(0));
+        // Budget spent and nothing consumable: a retriable quota
+        // stall, never an error or a dropped connection.
+        let resp = dispatch(&service, &mut session, &mut scratch, None, append_req(0, 2));
+        assert_eq!(resp, Response::WouldStall { reason: StallReason::QuotaExhausted });
+        assert_eq!(service.table("replay").unwrap().len(), 5);
+    }
+
+    #[test]
+    fn acl_scopes_writer_fan_out_and_rejects_foreign_samples() {
+        let service = two_table_service();
+        let mut session = Session::new(0, 1);
+        session.set_acl(&["hot".to_string()]);
+        let mut scratch = SampleBatch::default();
+        // Appends fan out only to the ACL tables.
+        let resp = dispatch(&service, &mut session, &mut scratch, None, append_req(0, 3));
+        assert!(matches!(resp, Response::Appended { consumed: 3, .. }), "{resp:?}");
+        assert_eq!(service.table("hot").unwrap().len(), 3);
+        assert_eq!(service.table("cold").unwrap().len(), 0);
+        // Sampling inside the ACL works; outside it is a hard error
+        // (a config bug, not a capacity condition).
+        let resp = dispatch(
+            &service,
+            &mut session,
+            &mut scratch,
+            None,
+            Request::Sample { table: "hot".into(), batch: 2, seq: 0 },
+        );
+        assert!(matches!(resp, Response::Sampled(_)), "{resp:?}");
+        let resp = dispatch(
+            &service,
+            &mut session,
+            &mut scratch,
+            None,
+            Request::Sample { table: "cold".into(), batch: 2, seq: 0 },
+        );
+        match resp {
+            Response::Error { message } => assert!(message.contains("ACL"), "{message}"),
+            other => panic!("expected Error, got {other:?}"),
+        }
+        let resp = dispatch(
+            &service,
+            &mut session,
+            &mut scratch,
+            None,
+            Request::UpdatePriorities {
+                table: "cold".into(),
+                indices: vec![0],
+                td_abs: vec![1.0],
+                seq: 0,
+            },
+        );
+        assert!(matches!(resp, Response::Error { .. }), "{resp:?}");
+    }
+
+    #[test]
+    fn writer_ledger_caps_writers_per_table() {
+        let service = two_table_service();
+        let ledger = Arc::new(WriterLedger::new(1));
+        let mut scratch = SampleBatch::default();
+        let mut a = Session::new(0, 1);
+        a.ledger = Some(Arc::clone(&ledger));
+        a.set_acl(&["hot".to_string()]);
+        let resp = dispatch(&service, &mut a, &mut scratch, None, append_req(0, 1));
+        assert!(matches!(resp, Response::Appended { consumed: 1, .. }), "{resp:?}");
+        // A second session wanting "hot" hits the cap — retriable.
+        let mut b = Session::new(1, 2);
+        b.ledger = Some(Arc::clone(&ledger));
+        b.set_acl(&["hot".to_string()]);
+        let resp = dispatch(&service, &mut b, &mut scratch, None, append_req(0, 1));
+        assert_eq!(resp, Response::WouldStall { reason: StallReason::QuotaExhausted });
+        assert_eq!(service.table("hot").unwrap().len(), 1);
+        // A session scoped to the other table is unaffected.
+        let mut c = Session::new(2, 3);
+        c.ledger = Some(Arc::clone(&ledger));
+        c.set_acl(&["cold".to_string()]);
+        let resp = dispatch(&service, &mut c, &mut scratch, None, append_req(0, 1));
+        assert!(matches!(resp, Response::Appended { consumed: 1, .. }), "{resp:?}");
+        // Dropping the holder releases its claim; the retry succeeds.
+        drop(a);
+        let resp = dispatch(&service, &mut b, &mut scratch, None, append_req(0, 1));
+        assert!(matches!(resp, Response::Appended { consumed: 1, .. }), "{resp:?}");
     }
 
     #[test]

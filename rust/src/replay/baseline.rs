@@ -7,6 +7,7 @@
 //! the critical section includes the O(row) memory copy that the paper's
 //! lazy writing moves outside.
 
+use super::remover::{EvictReason, Remover, RemoverSpec};
 use super::snapshot::{BufferState, ShardState};
 use super::storage::{SampleBatch, Transition, TransitionStore};
 use super::ReplayBuffer;
@@ -92,10 +93,26 @@ pub struct GlobalLockReplay {
     capacity: usize,
     alpha: f32,
     beta: f32,
+    /// Eviction policy + per-slot sample counts. Victim selection runs
+    /// under the same global lock as everything else, so even the O(N)
+    /// `LowestPriority` scan needs no extra coordination.
+    remover: Remover,
 }
 
 impl GlobalLockReplay {
     pub fn new(capacity: usize, obs_dim: usize, act_dim: usize, alpha: f32, beta: f32) -> Self {
+        Self::with_remover(capacity, obs_dim, act_dim, alpha, beta, RemoverSpec::Fifo)
+    }
+
+    /// Build with an explicit eviction policy.
+    pub fn with_remover(
+        capacity: usize,
+        obs_dim: usize,
+        act_dim: usize,
+        alpha: f32,
+        beta: f32,
+        remove: RemoverSpec,
+    ) -> Self {
         Self {
             inner: Mutex::new(Inner {
                 tree: BinarySumTree::new(capacity),
@@ -106,11 +123,41 @@ impl GlobalLockReplay {
             capacity,
             alpha,
             beta,
+            remover: Remover::new(remove, capacity),
         }
     }
 
     fn transform(&self, td: f32) -> f32 {
         (td.max(0.0) + super::prioritized::PRIORITY_EPS).powf(self.alpha)
+    }
+
+    /// Pick the slot an insert lands in, given the pre-increment cursor.
+    /// Caller holds the global lock, so the tree scan is consistent.
+    fn pick_slot(&self, g: &Inner, cur: usize) -> (usize, Option<EvictReason>) {
+        if cur < self.capacity {
+            return (cur, None);
+        }
+        match self.remover.spec() {
+            RemoverSpec::Fifo => (cur % self.capacity, Some(EvictReason::Fifo)),
+            RemoverSpec::Lifo => (self.capacity - 1, Some(EvictReason::Lifo)),
+            RemoverSpec::LowestPriority => {
+                // O(N) argmin over the leaves; ties -> first (oldest slot).
+                let mut best = 0usize;
+                let mut best_p = f32::INFINITY;
+                for i in 0..self.capacity {
+                    let p = g.tree.get(i);
+                    if p < best_p {
+                        best_p = p;
+                        best = i;
+                    }
+                }
+                (best, Some(EvictReason::LowestPriority))
+            }
+            RemoverSpec::MaxTimesSampled(_) => match self.remover.pick_ripe() {
+                Some(slot) => (slot, Some(EvictReason::MaxSampled)),
+                None => (cur % self.capacity, Some(EvictReason::Fifo)),
+            },
+        }
     }
 }
 
@@ -128,14 +175,17 @@ impl ReplayBuffer for GlobalLockReplay {
         g.cursor.min(self.capacity)
     }
 
-    fn insert(&self, t: &Transition) {
+    fn insert_from(&self, _actor_id: usize, t: &Transition) -> Option<EvictReason> {
         // Entire insertion — including the data copy — under the lock.
         let mut g = self.inner.lock().unwrap();
-        let slot = g.cursor % self.capacity;
+        let cur = g.cursor;
         g.cursor += 1;
+        let (slot, reason) = self.pick_slot(&g, cur);
         self.store.write(slot, t);
+        self.remover.on_insert(slot);
         let mp = g.max_priority;
         g.tree.update(slot, mp);
+        reason
     }
 
     fn sample(&self, batch: usize, rng: &mut Rng, out: &mut SampleBatch) -> bool {
@@ -209,9 +259,22 @@ impl ReplayBuffer for GlobalLockReplay {
                 cursor: g.cursor as u64,
                 max_priority: g.max_priority,
                 priorities,
+                sample_counts: self.remover.counts_snapshot(len),
                 rows,
             }],
         })
+    }
+
+    fn remover(&self) -> RemoverSpec {
+        self.remover.spec()
+    }
+
+    fn note_sampled(&self, indices: &[usize]) {
+        self.remover.note_sampled(indices);
+    }
+
+    fn max_sample_count(&self) -> u32 {
+        self.remover.max_count(self.len())
     }
 
     fn validate_state(&self, state: &BufferState) -> Result<()> {
@@ -240,6 +303,7 @@ impl ReplayBuffer for GlobalLockReplay {
         g.tree.assign(&s.priorities);
         g.cursor = s.cursor as usize;
         g.max_priority = s.max_priority.max(f32::MIN_POSITIVE);
+        self.remover.restore_counts(&s.sample_counts);
         Ok(())
     }
 }
@@ -295,5 +359,32 @@ mod tests {
         assert!(b.sample(8, &mut rng, &mut out));
         assert_eq!(out.len(), 8);
         b.update_priorities(&out.indices.clone(), &vec![0.5; 8]);
+    }
+
+    #[test]
+    fn lowest_priority_scan_picks_argmin_leaf() {
+        let tr = |v: f32| Transition {
+            obs: vec![v, 0.0],
+            action: vec![0.0],
+            next_obs: vec![0.0, 0.0],
+            reward: v,
+            done: false,
+        };
+        let b = GlobalLockReplay::with_remover(4, 2, 1, 0.6, 0.4, RemoverSpec::LowestPriority);
+        assert_eq!(b.remover(), RemoverSpec::LowestPriority);
+        for i in 0..4 {
+            assert_eq!(b.insert(&tr(i as f32)), None);
+        }
+        // Give slot 2 the smallest priority, then slot 0 the next-smallest.
+        b.update_priorities(&[0, 1, 2, 3], &[1.0, 5.0, 0.1, 3.0]);
+        assert_eq!(
+            b.insert(&tr(10.0)),
+            Some(EvictReason::LowestPriority),
+            "full buffer must evict"
+        );
+        assert_eq!(b.store.read(2).reward, 10.0);
+        // The fresh row re-entered at max priority, so slot 0 is now the min.
+        assert_eq!(b.insert(&tr(11.0)), Some(EvictReason::LowestPriority));
+        assert_eq!(b.store.read(0).reward, 11.0);
     }
 }

@@ -20,10 +20,46 @@
 //! bench reports its speedups relative to these emulations.
 
 use super::baseline::BinarySumTree;
+use super::remover::{EvictReason, Remover, RemoverSpec};
 use super::storage::{SampleBatch, Transition, TransitionStore};
 use super::ReplayBuffer;
 use crate::util::rng::Rng;
 use std::sync::Mutex;
+
+/// Shared victim selection for the emulated buffers. `cur` is the
+/// pre-increment monotone cursor; `prio` reads a slot's current priority
+/// (caller holds the buffer's mutex, so the read is consistent).
+fn pick_victim(
+    remover: &Remover,
+    capacity: usize,
+    cur: usize,
+    prio: impl Fn(usize) -> f64,
+) -> (usize, Option<EvictReason>) {
+    if cur < capacity {
+        return (cur, None);
+    }
+    match remover.spec() {
+        RemoverSpec::Fifo => (cur % capacity, Some(EvictReason::Fifo)),
+        RemoverSpec::Lifo => (capacity - 1, Some(EvictReason::Lifo)),
+        RemoverSpec::LowestPriority => {
+            // O(N) argmin; ties -> first (oldest slot).
+            let mut best = 0usize;
+            let mut best_p = f64::INFINITY;
+            for i in 0..capacity {
+                let p = prio(i);
+                if p < best_p {
+                    best_p = p;
+                    best = i;
+                }
+            }
+            (best, Some(EvictReason::LowestPriority))
+        }
+        RemoverSpec::MaxTimesSampled(_) => match remover.pick_ripe() {
+            Some(slot) => (slot, Some(EvictReason::MaxSampled)),
+            None => (cur % capacity, Some(EvictReason::Fifo)),
+        },
+    }
+}
 
 /// Number of dependent pointer hops emulating one Python→C crossing
 /// (attribute lookups, arg tuple unpack, refcount traffic). ~6 random-ish
@@ -72,10 +108,23 @@ pub struct NaiveScanReplay {
     capacity: usize,
     alpha: f32,
     beta: f32,
+    remover: Remover,
 }
 
 impl NaiveScanReplay {
     pub fn new(capacity: usize, obs_dim: usize, act_dim: usize, alpha: f32, beta: f32) -> Self {
+        Self::with_remover(capacity, obs_dim, act_dim, alpha, beta, RemoverSpec::Fifo)
+    }
+
+    /// Build with an explicit eviction policy.
+    pub fn with_remover(
+        capacity: usize,
+        obs_dim: usize,
+        act_dim: usize,
+        alpha: f32,
+        beta: f32,
+        remove: RemoverSpec,
+    ) -> Self {
         Self {
             inner: Mutex::new(NaiveInner {
                 priorities: (0..capacity).map(|_| Box::new(0.0)).collect(),
@@ -86,6 +135,7 @@ impl NaiveScanReplay {
             capacity,
             alpha,
             beta,
+            remover: Remover::new(remove, capacity),
         }
     }
 }
@@ -103,13 +153,17 @@ impl ReplayBuffer for NaiveScanReplay {
         self.inner.lock().unwrap().cursor.min(self.capacity)
     }
 
-    fn insert(&self, t: &Transition) {
+    fn insert_from(&self, _actor_id: usize, t: &Transition) -> Option<EvictReason> {
         let mut g = self.inner.lock().unwrap();
-        let slot = g.cursor % self.capacity;
+        let cur = g.cursor;
         g.cursor += 1;
+        let (slot, reason) =
+            pick_victim(&self.remover, self.capacity, cur, |i| *g.priorities[i]);
         self.store.write(slot, t);
+        self.remover.on_insert(slot);
         let mp = g.max_priority;
         *g.priorities[slot] = mp;
+        reason
     }
 
     fn sample(&self, batch: usize, rng: &mut Rng, out: &mut SampleBatch) -> bool {
@@ -166,6 +220,18 @@ impl ReplayBuffer for NaiveScanReplay {
             *g.priorities[idx] = p;
         }
     }
+
+    fn remover(&self) -> RemoverSpec {
+        self.remover.spec()
+    }
+
+    fn note_sampled(&self, indices: &[usize]) {
+        self.remover.note_sampled(indices);
+    }
+
+    fn max_sample_count(&self) -> u32 {
+        self.remover.max_count(self.len())
+    }
 }
 
 struct BindInner {
@@ -183,10 +249,23 @@ pub struct PyBindBinaryReplay {
     capacity: usize,
     alpha: f32,
     beta: f32,
+    remover: Remover,
 }
 
 impl PyBindBinaryReplay {
     pub fn new(capacity: usize, obs_dim: usize, act_dim: usize, alpha: f32, beta: f32) -> Self {
+        Self::with_remover(capacity, obs_dim, act_dim, alpha, beta, RemoverSpec::Fifo)
+    }
+
+    /// Build with an explicit eviction policy.
+    pub fn with_remover(
+        capacity: usize,
+        obs_dim: usize,
+        act_dim: usize,
+        alpha: f32,
+        beta: f32,
+        remove: RemoverSpec,
+    ) -> Self {
         Self {
             inner: Mutex::new(BindInner {
                 tree: BinarySumTree::new(capacity),
@@ -198,6 +277,7 @@ impl PyBindBinaryReplay {
             capacity,
             alpha,
             beta,
+            remover: Remover::new(remove, capacity),
         }
     }
 }
@@ -215,14 +295,18 @@ impl ReplayBuffer for PyBindBinaryReplay {
         self.inner.lock().unwrap().cursor.min(self.capacity)
     }
 
-    fn insert(&self, t: &Transition) {
+    fn insert_from(&self, _actor_id: usize, t: &Transition) -> Option<EvictReason> {
         let mut g = self.inner.lock().unwrap();
         self.arena.chase(BINDING_HOPS);
-        let slot = g.cursor % self.capacity;
+        let cur = g.cursor;
         g.cursor += 1;
+        let (slot, reason) =
+            pick_victim(&self.remover, self.capacity, cur, |i| g.tree.get(i) as f64);
         self.store.write(slot, t);
+        self.remover.on_insert(slot);
         let mp = g.max_priority;
         g.tree.update(slot, mp);
+        reason
     }
 
     fn sample(&self, batch: usize, rng: &mut Rng, out: &mut SampleBatch) -> bool {
@@ -273,6 +357,18 @@ impl ReplayBuffer for PyBindBinaryReplay {
             g.tree.update(idx, p);
         }
     }
+
+    fn remover(&self) -> RemoverSpec {
+        self.remover.spec()
+    }
+
+    fn note_sampled(&self, indices: &[usize]) {
+        self.remover.note_sampled(indices);
+    }
+
+    fn max_sample_count(&self) -> u32 {
+        self.remover.max_count(self.len())
+    }
 }
 
 struct PyTreeInner {
@@ -292,6 +388,7 @@ pub struct PySumTreeReplay {
     capacity: usize,
     alpha: f32,
     beta: f32,
+    remover: Remover,
 }
 
 /// Pointer hops per simulated interpreter bytecode region. One visited
@@ -302,6 +399,18 @@ const PY_NODE_HOPS: usize = 30;
 
 impl PySumTreeReplay {
     pub fn new(capacity: usize, obs_dim: usize, act_dim: usize, alpha: f32, beta: f32) -> Self {
+        Self::with_remover(capacity, obs_dim, act_dim, alpha, beta, RemoverSpec::Fifo)
+    }
+
+    /// Build with an explicit eviction policy.
+    pub fn with_remover(
+        capacity: usize,
+        obs_dim: usize,
+        act_dim: usize,
+        alpha: f32,
+        beta: f32,
+        remove: RemoverSpec,
+    ) -> Self {
         Self {
             inner: Mutex::new(PyTreeInner {
                 tree: BinarySumTree::new(capacity),
@@ -313,6 +422,7 @@ impl PySumTreeReplay {
             capacity,
             alpha,
             beta,
+            remover: Remover::new(remove, capacity),
         }
     }
 
@@ -334,15 +444,19 @@ impl ReplayBuffer for PySumTreeReplay {
         self.inner.lock().unwrap().cursor.min(self.capacity)
     }
 
-    fn insert(&self, t: &Transition) {
+    fn insert_from(&self, _actor_id: usize, t: &Transition) -> Option<EvictReason> {
         let mut g = self.inner.lock().unwrap();
         // Update path: depth node visits, each interpreter-priced.
         self.arena.chase(PY_NODE_HOPS * self.tree_depth());
-        let slot = g.cursor % self.capacity;
+        let cur = g.cursor;
         g.cursor += 1;
+        let (slot, reason) =
+            pick_victim(&self.remover, self.capacity, cur, |i| g.tree.get(i) as f64);
         self.store.write(slot, t);
+        self.remover.on_insert(slot);
         let mp = g.max_priority;
         g.tree.update(slot, mp);
+        reason
     }
 
     fn sample(&self, batch: usize, rng: &mut Rng, out: &mut SampleBatch) -> bool {
@@ -392,6 +506,18 @@ impl ReplayBuffer for PySumTreeReplay {
             g.tree.update(idx, p);
         }
     }
+
+    fn remover(&self) -> RemoverSpec {
+        self.remover.spec()
+    }
+
+    fn note_sampled(&self, indices: &[usize]) {
+        self.remover.note_sampled(indices);
+    }
+
+    fn max_sample_count(&self) -> u32 {
+        self.remover.max_count(self.len())
+    }
 }
 
 #[cfg(test)]
@@ -426,6 +552,19 @@ mod tests {
             hits += out.indices.iter().filter(|&&i| i == 9).count();
         }
         assert!(hits > 250, "{hits}");
+    }
+
+    #[test]
+    fn naive_scan_lowest_priority_evicts_boxed_argmin() {
+        let b = NaiveScanReplay::with_remover(4, 2, 1, 1.0, 0.4, RemoverSpec::LowestPriority);
+        assert_eq!(b.remover(), RemoverSpec::LowestPriority);
+        for i in 0..4 {
+            assert_eq!(b.insert(&tr(i as f32)), None);
+        }
+        b.update_priorities(&[0, 1, 2, 3], &[2.0, 0.5, 4.0, 3.0]);
+        // Slot 1 holds the smallest boxed priority, so it's the victim.
+        assert_eq!(b.insert(&tr(9.0)), Some(EvictReason::LowestPriority));
+        assert_eq!(b.store.read(1).reward, 9.0);
     }
 
     #[test]

@@ -17,6 +17,7 @@
 pub mod baseline;
 pub mod emulated;
 pub mod prioritized;
+pub mod remover;
 pub mod sharded;
 pub mod snapshot;
 pub mod storage;
@@ -26,6 +27,7 @@ pub mod uniform;
 pub use baseline::{BinarySumTree, GlobalLockReplay};
 pub use emulated::{NaiveScanReplay, PyBindBinaryReplay, PySumTreeReplay};
 pub use prioritized::{LockStatsSnapshot, PrioritizedConfig, PrioritizedReplay};
+pub use remover::{EvictReason, Remover, RemoverSpec};
 pub use sharded::ShardedPrioritizedReplay;
 pub use snapshot::{BufferState, ShardState};
 pub use storage::{SampleBatch, Transition, TransitionStore};
@@ -75,15 +77,40 @@ pub trait ReplayBuffer: Send + Sync {
         self.len() == 0
     }
 
-    /// Insert one transition, evicting FIFO when full (paper §IV-A1).
-    fn insert(&self, t: &Transition);
+    /// Insert attributed to a producer (actor) id — the REQUIRED insert
+    /// entry point. Sharded buffers route on the id so concurrent
+    /// actors hit disjoint shard locks; everything else ignores it.
+    ///
+    /// When the buffer is full the configured [`Remover`] picks the
+    /// victim (FIFO by default, paper §IV-A1) and the reason is
+    /// returned so tables can count evictions; `None` means no item was
+    /// displaced.
+    fn insert_from(&self, actor_id: usize, t: &Transition) -> Option<EvictReason>;
 
-    /// Insert attributed to a producer (actor) id. Sharded buffers route
-    /// on it so concurrent actors hit disjoint shard locks; everything
-    /// else ignores the id and falls through to [`Self::insert`].
-    fn insert_from(&self, actor_id: usize, t: &Transition) {
-        let _ = actor_id;
-        self.insert(t);
+    /// Unattributed insert: delegates to [`Self::insert_from`] with
+    /// actor 0 (round-robin impls may override).
+    fn insert(&self, t: &Transition) -> Option<EvictReason> {
+        self.insert_from(0, t)
+    }
+
+    /// The eviction policy this buffer runs when full.
+    fn remover(&self) -> RemoverSpec {
+        RemoverSpec::Fifo
+    }
+
+    /// Record that `indices` were handed to a learner — feeds the
+    /// per-item sample counts behind `MaxTimesSampled` and the stats
+    /// histogram max. Called by `Table::try_sample`; a no-op for
+    /// buffers without sample-count tracking.
+    fn note_sampled(&self, indices: &[usize]) {
+        let _ = indices;
+    }
+
+    /// Largest per-item sample count currently held (0 when the buffer
+    /// does not track counts) — the capacity-pressure signal surfaced
+    /// in table stats.
+    fn max_sample_count(&self) -> u32 {
+        0
     }
 
     /// Draw `batch` transitions into `out` (cleared first). Returns false
@@ -137,33 +164,51 @@ mod trait_tests {
     use crate::util::rng::Rng;
     use std::sync::Arc;
 
+    /// Every remover policy the contract suite must hold under.
+    const ALL_REMOVERS: [RemoverSpec; 4] = [
+        RemoverSpec::Fifo,
+        RemoverSpec::Lifo,
+        RemoverSpec::LowestPriority,
+        RemoverSpec::MaxTimesSampled(3),
+    ];
+
     fn impls(capacity: usize) -> Vec<Arc<dyn ReplayBuffer>> {
+        impls_with(capacity, RemoverSpec::Fifo)
+    }
+
+    fn impls_with(capacity: usize, remove: RemoverSpec) -> Vec<Arc<dyn ReplayBuffer>> {
         vec![
-            Arc::new(PrioritizedReplay::new(PrioritizedConfig {
-                capacity,
-                obs_dim: 2,
-                act_dim: 1,
-                fanout: 16,
-                alpha: 0.6,
-                beta: 0.4,
-                lazy_writing: true,
-                shards: 1,
-            })),
-            Arc::new(ShardedPrioritizedReplay::new(PrioritizedConfig {
-                capacity,
-                obs_dim: 2,
-                act_dim: 1,
-                fanout: 16,
-                alpha: 0.6,
-                beta: 0.4,
-                lazy_writing: true,
-                shards: 4,
-            })),
-            Arc::new(GlobalLockReplay::new(capacity, 2, 1, 0.6, 0.4)),
-            Arc::new(UniformReplay::new(capacity, 2, 1)),
-            Arc::new(NaiveScanReplay::new(capacity, 2, 1, 0.6, 0.4)),
-            Arc::new(PyBindBinaryReplay::new(capacity, 2, 1, 0.6, 0.4)),
-            Arc::new(PySumTreeReplay::new(capacity, 2, 1, 0.6, 0.4)),
+            Arc::new(PrioritizedReplay::with_remover(
+                PrioritizedConfig {
+                    capacity,
+                    obs_dim: 2,
+                    act_dim: 1,
+                    fanout: 16,
+                    alpha: 0.6,
+                    beta: 0.4,
+                    lazy_writing: true,
+                    shards: 1,
+                },
+                remove,
+            )),
+            Arc::new(ShardedPrioritizedReplay::with_remover(
+                PrioritizedConfig {
+                    capacity,
+                    obs_dim: 2,
+                    act_dim: 1,
+                    fanout: 16,
+                    alpha: 0.6,
+                    beta: 0.4,
+                    lazy_writing: true,
+                    shards: 4,
+                },
+                remove,
+            )),
+            Arc::new(GlobalLockReplay::with_remover(capacity, 2, 1, 0.6, 0.4, remove)),
+            Arc::new(UniformReplay::with_remover(capacity, 2, 1, remove)),
+            Arc::new(NaiveScanReplay::with_remover(capacity, 2, 1, 0.6, 0.4, remove)),
+            Arc::new(PyBindBinaryReplay::with_remover(capacity, 2, 1, 0.6, 0.4, remove)),
+            Arc::new(PySumTreeReplay::with_remover(capacity, 2, 1, 0.6, 0.4, remove)),
         ]
     }
 
@@ -179,34 +224,51 @@ mod trait_tests {
 
     #[test]
     fn all_impls_basic_contract() {
-        for b in impls(32) {
-            assert!(b.is_empty(), "{}", b.name());
+        for spec in ALL_REMOVERS {
+            basic_contract(spec);
+        }
+    }
+
+    fn basic_contract(spec: RemoverSpec) {
+        for b in impls_with(32, spec) {
+            let who = format!("{} under {:?}", b.name(), spec);
+            assert_eq!(b.remover(), spec, "{who}");
+            assert!(b.is_empty(), "{who}");
             let mut rng = Rng::new(1);
             let mut out = SampleBatch::default();
-            assert!(!b.sample(4, &mut rng, &mut out), "{}", b.name());
+            assert!(!b.sample(4, &mut rng, &mut out), "{who}");
             for i in 0..48 {
                 b.insert(&tr(i as f32));
             }
-            assert_eq!(b.len(), 32, "{}", b.name());
-            assert!(b.sample(16, &mut rng, &mut out), "{}", b.name());
-            assert_eq!(out.len(), 16, "{}", b.name());
-            assert_eq!(out.obs.len(), 32, "{}", b.name());
-            assert_eq!(out.is_weights.len(), 16, "{}", b.name());
+            assert_eq!(b.len(), 32, "{who}");
+            assert!(b.sample(16, &mut rng, &mut out), "{who}");
+            assert_eq!(out.len(), 16, "{who}");
+            assert_eq!(out.obs.len(), 32, "{who}");
+            assert_eq!(out.is_weights.len(), 16, "{who}");
             // Sampled rows are self-consistent (obs[0] == reward by
             // construction) — catches torn batch assembly.
             for j in 0..16 {
-                assert_eq!(out.obs[j * 2], out.reward[j], "{}", b.name());
+                assert_eq!(out.obs[j * 2], out.reward[j], "{who}");
             }
+            // Per-item sample counts tick for every impl and policy.
+            b.note_sampled(&out.indices);
+            assert!(b.max_sample_count() >= 1, "{who}");
             // Priority feedback must not panic and must keep sampling OK.
             let idx = out.indices.clone();
             b.update_priorities(&idx, &vec![0.7; idx.len()]);
-            assert!(b.sample(8, &mut rng, &mut out), "{}", b.name());
+            assert!(b.sample(8, &mut rng, &mut out), "{who}");
         }
     }
 
     #[test]
     fn all_impls_survive_concurrent_use() {
-        for b in impls(256) {
+        for spec in ALL_REMOVERS {
+            concurrent_use(spec);
+        }
+    }
+
+    fn concurrent_use(spec: RemoverSpec) {
+        for b in impls_with(256, spec) {
             for i in 0..64 {
                 b.insert(&tr(i as f32));
             }
@@ -230,6 +292,9 @@ mod trait_tests {
                     let mut out = SampleBatch::default();
                     for _ in 0..200 {
                         if b2.sample(8, &mut rng, &mut out) {
+                            // Sample-count feedback races the inserts
+                            // too, like `Table::try_sample` would.
+                            b2.note_sampled(&out.indices);
                             let idx = out.indices.clone();
                             b2.update_priorities(&idx, &vec![0.3; idx.len()]);
                         }
@@ -239,21 +304,29 @@ mod trait_tests {
             // 64 round-robin prefills + 500 affinity inserts per actor
             // overfill every shard, so every impl must sit exactly at
             // capacity.
-            assert_eq!(b.len(), 256, "{}", b.name());
+            assert_eq!(b.len(), 256, "{} under {:?}", b.name(), spec);
         }
     }
 
     #[test]
     fn checkpointable_impls_roundtrip_exactly() {
+        for spec in ALL_REMOVERS {
+            checkpoint_roundtrip(spec);
+        }
+    }
+
+    fn checkpoint_roundtrip(spec: RemoverSpec) {
         // Every impl that supports snapshotting must reproduce its
         // EXACT state when the snapshot is restored — even into a
         // buffer that has drifted since (restore must clear the drift).
         let mut supported = 0;
-        for b in impls(32) {
+        for b in impls_with(32, spec) {
             for i in 0..20 {
                 b.insert(&tr(i as f32));
             }
             b.update_priorities(&[2, 5, 9], &[3.0, 0.2, 7.5]);
+            // Sample counts are part of the snapshot too.
+            b.note_sampled(&[1, 3, 3]);
             let Some(s1) = b.snapshot_state() else {
                 // Unsupported impls must fail restore cleanly too.
                 let dummy = BufferState {
@@ -274,6 +347,7 @@ mod trait_tests {
                 b.insert(&tr((100 + i) as f32));
             }
             b.update_priorities(&[0, 1], &[9.0, 9.0]);
+            b.note_sampled(&[0, 2, 4]);
             // ...then restore and re-capture: states must be identical.
             b.restore_state(&s1).unwrap_or_else(|e| panic!("{}: {e}", b.name()));
             assert_eq!(b.len(), 20, "{}", b.name());

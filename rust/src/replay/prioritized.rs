@@ -18,6 +18,7 @@
 //! zero-priority leaf is never returned by the descent, so sampling can
 //! proceed concurrently with the bulk data copy.
 
+use super::remover::{EvictReason, Remover, RemoverSpec};
 use super::snapshot::{BufferState, ShardState};
 use super::storage::{SampleBatch, Transition, TransitionStore};
 use super::sumtree::KArySumTree;
@@ -143,8 +144,13 @@ pub struct PrioritizedReplay {
     store: TransitionStore,
     global_tree_lock: Mutex<()>,
     last_level_lock: Mutex<()>,
-    /// Monotone insertion counter; slot = cursor % capacity (FIFO evict).
+    /// Monotone insertion counter. While `cursor < capacity` the slot is
+    /// the cursor itself; past that the [`Remover`] picks the victim
+    /// (FIFO — slot = cursor % capacity — by default). Occupancy is
+    /// always the prefix `[0, min(cursor, capacity))`.
     write_cursor: AtomicUsize,
+    /// Eviction policy + per-slot sample counts.
+    remover: Remover,
     /// Running max of *transformed* priorities, as f32 bits.
     max_priority: AtomicU32,
     alpha: f32,
@@ -170,20 +176,62 @@ fn f32_bits_max(cell: &AtomicU32, v: f32) {
 
 impl PrioritizedReplay {
     pub fn new(cfg: PrioritizedConfig) -> Self {
+        Self::with_remover(cfg, RemoverSpec::Fifo)
+    }
+
+    /// Build with an explicit eviction policy. A `LowestPriority`
+    /// remover allocates the sum tree's parallel min tree so victim
+    /// lookup is a Θ((log_K N)·K) descent instead of a leaf scan.
+    pub fn with_remover(cfg: PrioritizedConfig, remove: RemoverSpec) -> Self {
         assert!(cfg.capacity > 1);
         assert!(cfg.alpha >= 0.0 && cfg.beta >= 0.0);
+        let tree = if remove == RemoverSpec::LowestPriority {
+            KArySumTree::new_with_min(cfg.capacity, cfg.fanout)
+        } else {
+            KArySumTree::new(cfg.capacity, cfg.fanout)
+        };
         Self {
-            tree: KArySumTree::new(cfg.capacity, cfg.fanout),
+            tree,
             store: TransitionStore::new(cfg.capacity, cfg.obs_dim, cfg.act_dim),
             global_tree_lock: Mutex::new(()),
             last_level_lock: Mutex::new(()),
             write_cursor: AtomicUsize::new(0),
+            remover: Remover::new(remove, cfg.capacity),
             max_priority: AtomicU32::new(1.0f32.to_bits()),
             alpha: cfg.alpha,
             beta: cfg.beta,
             capacity: cfg.capacity,
             lazy_writing: cfg.lazy_writing,
             stats: LockStats::default(),
+        }
+    }
+
+    /// Allocate the insert slot: the next free slot while filling, the
+    /// remover's victim once full. Callers hold `global_tree_lock` so
+    /// victim selection (min-tree descent / ripe-queue pop) is
+    /// consistent with concurrent priority updates and two inserts can
+    /// never pick the same lowest-priority victim (the chosen leaf is
+    /// zeroed before the lock is released).
+    fn pick_slot_locked(&self) -> (usize, Option<EvictReason>) {
+        let cur = self.write_cursor.fetch_add(1, Ordering::Relaxed);
+        if cur < self.capacity {
+            return (cur, None);
+        }
+        match self.remover.spec() {
+            RemoverSpec::Fifo => (cur % self.capacity, Some(EvictReason::Fifo)),
+            RemoverSpec::Lifo => (self.capacity - 1, Some(EvictReason::Lifo)),
+            RemoverSpec::LowestPriority => match self.tree.min_leaf() {
+                Some((idx, _)) if idx < self.capacity => {
+                    (idx, Some(EvictReason::LowestPriority))
+                }
+                // No sampleable leaf (e.g. every slot mid-lazy-write):
+                // fall back to the ring slot.
+                _ => (cur % self.capacity, Some(EvictReason::Fifo)),
+            },
+            RemoverSpec::MaxTimesSampled(_) => match self.remover.pick_ripe() {
+                Some(slot) => (slot, Some(EvictReason::MaxSampled)),
+                None => (cur % self.capacity, Some(EvictReason::Fifo)),
+            },
         }
     }
 
@@ -301,6 +349,7 @@ impl PrioritizedReplay {
             cursor: cursor as u64,
             max_priority: self.max_priority(),
             priorities,
+            sample_counts: self.remover.counts_snapshot(len),
             rows,
         }
     }
@@ -330,6 +379,7 @@ impl PrioritizedReplay {
         }
         self.tree.rebuild();
         self.write_cursor.store(s.cursor as usize, Ordering::Relaxed);
+        self.remover.restore_counts(&s.sample_counts);
         self.max_priority
             .store(s.max_priority.max(f32::MIN_POSITIVE).to_bits(), Ordering::Relaxed);
     }
@@ -467,12 +517,18 @@ impl ReplayBuffer for PrioritizedReplay {
     /// Lazy-writing insertion (§IV-D2 / Algorithm 3 INSERT); with
     /// `lazy_writing = false`, the ablation path holds the global tree
     /// lock across the whole insertion including the storage copy.
-    fn insert(&self, t: &Transition) {
+    ///
+    /// Victim selection is folded into the FIRST global acquisition
+    /// (slot pick + leaf zero under one lock), so an insert still costs
+    /// exactly two global acquisitions regardless of remover.
+    fn insert_from(&self, _actor_id: usize, t: &Transition) -> Option<EvictReason> {
         self.stats.inserts.fetch_add(1, Ordering::Relaxed);
-        let slot = self.write_cursor.fetch_add(1, Ordering::Relaxed) % self.capacity;
+        let timing = self.timing();
         if !self.lazy_writing {
+            let t0 = timing.then(Instant::now);
             let _global = self.global_tree_lock.lock().unwrap();
             self.stats.global_acquisitions.fetch_add(1, Ordering::Relaxed);
+            let (slot, reason) = self.pick_slot_locked();
             let delta;
             {
                 let _leaf = self.last_level_lock.lock().unwrap();
@@ -481,12 +537,44 @@ impl ReplayBuffer for PrioritizedReplay {
                 delta = self.tree.set_leaf(slot, self.max_priority());
             }
             self.tree.propagate(slot, delta);
-            return;
+            self.remover.on_insert(slot);
+            if let Some(t0) = t0 {
+                self.stats
+                    .global_held_ns
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            }
+            return reason;
         }
-        // (i) zero the priority so the slot cannot be sampled...
-        self.locked_priority_update(slot, 0.0);
+        // (i) pick the slot and zero its priority under ONE global
+        // acquisition so the slot cannot be sampled — or re-picked as a
+        // lowest-priority victim — while the copy is in flight...
+        let (slot, reason) = {
+            let t0 = timing.then(Instant::now);
+            let _global = self.global_tree_lock.lock().unwrap();
+            self.stats.global_acquisitions.fetch_add(1, Ordering::Relaxed);
+            let (slot, reason) = self.pick_slot_locked();
+            let delta;
+            {
+                let t1 = timing.then(Instant::now);
+                let _leaf = self.last_level_lock.lock().unwrap();
+                self.stats.leaf_acquisitions.fetch_add(1, Ordering::Relaxed);
+                delta = self.tree.set_leaf(slot, 0.0);
+                if let Some(t1) = t1 {
+                    self.stats
+                        .leaf_held_ns
+                        .fetch_add(t1.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                }
+            } // leaf lock released before interior propagation (Alg 3 line 5)
+            self.tree.propagate(slot, delta);
+            if let Some(t0) = t0 {
+                self.stats
+                    .global_held_ns
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            }
+            (slot, reason)
+        };
+        self.remover.on_insert(slot);
         // (ii) ...bulk-copy the transition with NO lock held...
-        let timing = self.timing();
         let t0 = timing.then(Instant::now);
         self.store.write(slot, t);
         if let Some(t0) = t0 {
@@ -496,6 +584,7 @@ impl ReplayBuffer for PrioritizedReplay {
         }
         // (iii) ...then make it sampleable at max priority.
         self.locked_priority_update(slot, self.max_priority());
+        reason
     }
 
     fn sample(&self, batch: usize, rng: &mut Rng, out: &mut SampleBatch) -> bool {
@@ -532,6 +621,18 @@ impl ReplayBuffer for PrioritizedReplay {
 
     fn total_priority(&self) -> f32 {
         PrioritizedReplay::total_priority(self)
+    }
+
+    fn remover(&self) -> RemoverSpec {
+        self.remover.spec()
+    }
+
+    fn note_sampled(&self, indices: &[usize]) {
+        self.remover.note_sampled(indices);
+    }
+
+    fn max_sample_count(&self) -> u32 {
+        self.remover.max_count(self.len())
     }
 
     fn snapshot_state(&self) -> Option<BufferState> {
@@ -837,6 +938,92 @@ mod tests {
         let before = fresh.snapshot_shard();
         assert!(fresh.restore_shard(&bad).is_err());
         assert_eq!(fresh.snapshot_shard(), before);
+    }
+
+    fn mk_with(capacity: usize, fanout: usize, remove: RemoverSpec) -> PrioritizedReplay {
+        PrioritizedReplay::with_remover(
+            PrioritizedConfig {
+                capacity,
+                obs_dim: 3,
+                act_dim: 2,
+                fanout,
+                alpha: 0.6,
+                beta: 0.4,
+                lazy_writing: true,
+                shards: 1,
+            },
+            remove,
+        )
+    }
+
+    #[test]
+    fn lifo_remover_overwrites_newest_slot() {
+        let b = mk_with(4, 16, RemoverSpec::Lifo);
+        let mut evicted = Vec::new();
+        for i in 0..7 {
+            if let Some(r) = b.insert(&tr(i as f32)) {
+                evicted.push(r);
+            }
+        }
+        assert_eq!(b.len(), 4);
+        assert_eq!(evicted, vec![EvictReason::Lifo; 3]);
+        // The newest slot (capacity-1) absorbed items 4, 5, 6 in turn.
+        let s = b.snapshot_shard();
+        let rewards: Vec<f32> = s.rows.iter().map(|r| r.reward).collect();
+        assert_eq!(rewards, vec![0.0, 1.0, 2.0, 6.0]);
+    }
+
+    #[test]
+    fn lowest_priority_remover_picks_min_leaf() {
+        let b = mk_with(4, 16, RemoverSpec::LowestPriority);
+        for i in 0..4 {
+            b.insert(&tr(i as f32));
+        }
+        // Distinct priorities: slot 1 is the cheapest, slot 2 next.
+        b.update_priorities(&[0, 1, 2, 3], &[5.0, 0.5, 3.0, 4.0]);
+        assert_eq!(b.insert(&tr(9.0)), Some(EvictReason::LowestPriority));
+        let s = b.snapshot_shard();
+        assert_eq!(s.rows[1].reward, 9.0);
+        assert_eq!(s.rows[0].reward, 0.0);
+        // The replacement arrives at max priority, so the NEXT victim is
+        // the second-lowest original (slot 2).
+        assert_eq!(b.insert(&tr(11.0)), Some(EvictReason::LowestPriority));
+        assert_eq!(b.snapshot_shard().rows[2].reward, 11.0);
+        assert_eq!(b.len(), 4);
+    }
+
+    #[test]
+    fn max_sampled_remover_evicts_ripe_slots() {
+        let b = mk_with(4, 16, RemoverSpec::MaxTimesSampled(2));
+        for i in 0..4 {
+            b.insert(&tr(i as f32));
+        }
+        // No slot ripe yet: eviction falls back to the FIFO ring slot.
+        assert_eq!(b.insert(&tr(4.0)), Some(EvictReason::Fifo));
+        // Slot 2 crosses its sample budget -> next victim.
+        b.note_sampled(&[2, 2]);
+        assert_eq!(b.max_sample_count(), 2);
+        assert_eq!(b.insert(&tr(5.0)), Some(EvictReason::MaxSampled));
+        let s = b.snapshot_shard();
+        assert_eq!(s.rows[2].reward, 5.0);
+        assert_eq!(s.rows[0].reward, 4.0);
+        // Overwriting a slot resets its count.
+        assert_eq!(s.sample_counts, vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn sample_counts_roundtrip_through_snapshot() {
+        let b = mk_with(8, 16, RemoverSpec::MaxTimesSampled(5));
+        for i in 0..6 {
+            b.insert(&tr(i as f32));
+        }
+        b.note_sampled(&[1, 3, 3]);
+        let s = b.snapshot_shard();
+        assert_eq!(s.sample_counts, vec![0, 1, 0, 2, 0, 0]);
+        let fresh = mk_with(8, 16, RemoverSpec::MaxTimesSampled(5));
+        fresh.restore_shard(&s).unwrap();
+        assert_eq!(fresh.max_sample_count(), 2);
+        assert_eq!(fresh.snapshot_shard(), s);
     }
 
     #[test]

@@ -1,0 +1,277 @@
+//! Pluggable eviction ("remover") strategies for full replay buffers.
+//!
+//! Reverb ships selector-driven removers (FIFO, LIFO, lowest-priority,
+//! max-times-sampled); this module is our equivalent. A [`RemoverSpec`]
+//! names the policy, and a [`Remover`] carries the per-slot bookkeeping
+//! every buffer implementation shares: per-item sample counts (fed by
+//! `Table::try_sample` via `ReplayBuffer::note_sampled`) and, for
+//! `MaxTimesSampled`, the queue of slots that have crossed their sample
+//! budget and are "ripe" for eviction.
+//!
+//! Victim *selection* stays in each buffer implementation because it
+//! needs access to the priority structure (e.g. the K-ary sum tree's
+//! min tracking); the shared state here is only the policy + counts.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+/// Which eviction policy a table runs when an insert finds it full.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RemoverSpec {
+    /// Evict the oldest item (the ring's implicit policy; the default).
+    Fifo,
+    /// Evict the newest item.
+    Lifo,
+    /// Evict the item with the lowest priority (FIFO tie-break where
+    /// priorities are uniform).
+    LowestPriority,
+    /// Evict an item once it has been sampled at least `n` times,
+    /// falling back to FIFO while no item is ripe.
+    MaxTimesSampled(u32),
+}
+
+impl RemoverSpec {
+    /// Parse a `remove=` option value: `fifo` | `lifo` | `lowest` |
+    /// `max_sampled:N`.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "fifo" => Ok(RemoverSpec::Fifo),
+            "lifo" => Ok(RemoverSpec::Lifo),
+            "lowest" | "lowest_priority" => Ok(RemoverSpec::LowestPriority),
+            _ => {
+                if let Some(n) = s.strip_prefix("max_sampled:") {
+                    let n: u32 = n.parse().map_err(|_| {
+                        anyhow::anyhow!("invalid max_sampled count `{n}` (expected a positive integer)")
+                    })?;
+                    if n == 0 {
+                        bail!("max_sampled count must be >= 1");
+                    }
+                    Ok(RemoverSpec::MaxTimesSampled(n))
+                } else {
+                    bail!("unknown remover `{s}` (expected fifo | lifo | lowest | max_sampled:N)")
+                }
+            }
+        }
+    }
+
+    /// The canonical spec string, i.e. the inverse of [`parse`](Self::parse).
+    pub fn spec_str(&self) -> String {
+        match self {
+            RemoverSpec::Fifo => "fifo".to_string(),
+            RemoverSpec::Lifo => "lifo".to_string(),
+            RemoverSpec::LowestPriority => "lowest".to_string(),
+            RemoverSpec::MaxTimesSampled(n) => format!("max_sampled:{n}"),
+        }
+    }
+
+    /// Checkpoint encoding: a policy tag plus one u32 parameter.
+    pub fn tag(&self) -> (u8, u32) {
+        match self {
+            RemoverSpec::Fifo => (0, 0),
+            RemoverSpec::Lifo => (1, 0),
+            RemoverSpec::LowestPriority => (2, 0),
+            RemoverSpec::MaxTimesSampled(n) => (3, *n),
+        }
+    }
+
+    /// Inverse of [`tag`](Self::tag), for checkpoint decode.
+    pub fn from_tag(tag: u8, param: u32) -> Result<Self> {
+        match tag {
+            0 => Ok(RemoverSpec::Fifo),
+            1 => Ok(RemoverSpec::Lifo),
+            2 => Ok(RemoverSpec::LowestPriority),
+            3 => {
+                if param == 0 {
+                    bail!("max_sampled remover tag carries count 0");
+                }
+                Ok(RemoverSpec::MaxTimesSampled(param))
+            }
+            _ => bail!("unknown remover tag {tag}"),
+        }
+    }
+}
+
+impl Default for RemoverSpec {
+    fn default() -> Self {
+        RemoverSpec::Fifo
+    }
+}
+
+/// Why a particular victim was chosen, reported by
+/// `ReplayBuffer::insert_from` so the table layer can count evictions
+/// by reason. `None` from an insert means the buffer was not yet full.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvictReason {
+    Fifo,
+    Lifo,
+    LowestPriority,
+    MaxSampled,
+}
+
+/// Shared per-buffer remover state: the policy plus per-slot sample
+/// counts. Counts are plain relaxed atomics so the sample hot path
+/// never takes a lock; only the `MaxTimesSampled` ripe queue is
+/// mutex-protected (touched once per budget crossing and per eviction).
+pub struct Remover {
+    spec: RemoverSpec,
+    counts: Box<[AtomicU32]>,
+    ripe: Mutex<VecDeque<usize>>,
+}
+
+impl Remover {
+    pub fn new(spec: RemoverSpec, capacity: usize) -> Self {
+        let counts = (0..capacity).map(|_| AtomicU32::new(0)).collect();
+        Remover { spec, counts, ripe: Mutex::new(VecDeque::new()) }
+    }
+
+    pub fn spec(&self) -> RemoverSpec {
+        self.spec
+    }
+
+    /// Record one sampled batch. Under `MaxTimesSampled(n)`, a slot
+    /// whose count crosses `n` is enqueued as ripe exactly once per
+    /// crossing; stale entries (the slot was since overwritten and its
+    /// count reset) are filtered at [`pick_ripe`](Self::pick_ripe).
+    pub fn note_sampled(&self, indices: &[usize]) {
+        match self.spec {
+            RemoverSpec::MaxTimesSampled(n) => {
+                for &i in indices {
+                    let prev = self.counts[i].fetch_add(1, Ordering::Relaxed);
+                    if prev + 1 == n {
+                        self.ripe.lock().unwrap().push_back(i);
+                    }
+                }
+            }
+            _ => {
+                for &i in indices {
+                    self.counts[i].fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+
+    /// A slot was (re)written: its sample count starts over.
+    pub fn on_insert(&self, slot: usize) {
+        self.counts[slot].store(0, Ordering::Relaxed);
+    }
+
+    pub fn count(&self, slot: usize) -> u32 {
+        self.counts[slot].load(Ordering::Relaxed)
+    }
+
+    /// Max sample count over the first `len` (occupied) slots.
+    pub fn max_count(&self, len: usize) -> u32 {
+        self.counts[..len.min(self.counts.len())]
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Per-slot counts for the first `len` slots, in slot order (the
+    /// checkpoint representation).
+    pub fn counts_snapshot(&self, len: usize) -> Vec<u32> {
+        self.counts[..len.min(self.counts.len())]
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Restore counts from a checkpoint (slots beyond `counts.len()`
+    /// reset to 0) and rebuild the ripe queue in slot order.
+    pub fn restore_counts(&self, counts: &[u32]) {
+        for (i, c) in self.counts.iter().enumerate() {
+            c.store(counts.get(i).copied().unwrap_or(0), Ordering::Relaxed);
+        }
+        let mut q = self.ripe.lock().unwrap();
+        q.clear();
+        if let RemoverSpec::MaxTimesSampled(n) = self.spec {
+            for (i, &c) in counts.iter().enumerate() {
+                if c >= n && i < self.counts.len() {
+                    q.push_back(i);
+                }
+            }
+        }
+    }
+
+    /// Pop the next ripe slot (sampled >= n times), skipping entries
+    /// whose slot was overwritten since it was enqueued. `None` when no
+    /// slot is ripe (callers fall back to FIFO) or the policy is not
+    /// `MaxTimesSampled`.
+    pub fn pick_ripe(&self) -> Option<usize> {
+        let RemoverSpec::MaxTimesSampled(n) = self.spec else {
+            return None;
+        };
+        let mut q = self.ripe.lock().unwrap();
+        while let Some(i) = q.pop_front() {
+            if self.counts[i].load(Ordering::Relaxed) >= n {
+                return Some(i);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parse_roundtrips_and_rejects() {
+        for s in ["fifo", "lifo", "lowest", "max_sampled:4"] {
+            let spec = RemoverSpec::parse(s).unwrap();
+            assert_eq!(spec.spec_str(), s);
+            let (tag, param) = spec.tag();
+            assert_eq!(RemoverSpec::from_tag(tag, param).unwrap(), spec);
+        }
+        assert_eq!(RemoverSpec::parse("lowest_priority").unwrap(), RemoverSpec::LowestPriority);
+        assert!(RemoverSpec::parse("max_sampled:0").is_err());
+        assert!(RemoverSpec::parse("max_sampled:x").is_err());
+        let err = RemoverSpec::parse("rand").unwrap_err().to_string();
+        assert!(err.contains("unknown remover"), "got: {err}");
+        assert!(RemoverSpec::from_tag(9, 0).is_err());
+        assert!(RemoverSpec::from_tag(3, 0).is_err());
+    }
+
+    #[test]
+    fn ripe_queue_crossing_and_stale_filtering() {
+        let r = Remover::new(RemoverSpec::MaxTimesSampled(2), 4);
+        r.note_sampled(&[1, 1]); // slot 1 crosses n=2
+        r.note_sampled(&[3]);
+        assert_eq!(r.count(1), 2);
+        assert_eq!(r.max_count(4), 2);
+        // Slot 1 is ripe; overwrite it first so the entry goes stale.
+        r.on_insert(1);
+        assert_eq!(r.pick_ripe(), None);
+        // Cross again: enqueued once, popped once.
+        r.note_sampled(&[3, 3]); // slot 3 reaches 3 >= 2 (crossed at 2)
+        assert_eq!(r.pick_ripe(), Some(3));
+        assert_eq!(r.pick_ripe(), None);
+    }
+
+    #[test]
+    fn restore_rebuilds_counts_and_ripe_queue() {
+        let r = Remover::new(RemoverSpec::MaxTimesSampled(3), 4);
+        r.note_sampled(&[0]);
+        r.restore_counts(&[0, 3, 1]);
+        assert_eq!(r.count(0), 0);
+        assert_eq!(r.count(1), 3);
+        assert_eq!(r.count(2), 1);
+        assert_eq!(r.count(3), 0); // beyond the snapshot: reset
+        assert_eq!(r.counts_snapshot(3), vec![0, 3, 1]);
+        assert_eq!(r.pick_ripe(), Some(1));
+        assert_eq!(r.pick_ripe(), None);
+    }
+
+    #[test]
+    fn non_max_sampled_policies_still_count() {
+        let r = Remover::new(RemoverSpec::Fifo, 2);
+        r.note_sampled(&[0, 0, 1]);
+        assert_eq!(r.count(0), 2);
+        assert_eq!(r.count(1), 1);
+        assert_eq!(r.pick_ripe(), None);
+    }
+}

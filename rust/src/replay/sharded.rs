@@ -31,6 +31,7 @@
 //! TD errors back with no API change.
 
 use super::prioritized::{LockStatsSnapshot, PrioritizedConfig, PrioritizedReplay};
+use super::remover::{EvictReason, RemoverSpec};
 use super::snapshot::BufferState;
 use super::storage::{SampleBatch, Transition};
 use super::ReplayBuffer;
@@ -56,6 +57,12 @@ impl ShardedPrioritizedReplay {
     /// `cfg.capacity` evenly (rounded up, so the effective capacity is
     /// `ceil(capacity / S) * S`).
     pub fn new(cfg: PrioritizedConfig) -> Self {
+        Self::with_remover(cfg, RemoverSpec::Fifo)
+    }
+
+    /// Build with an explicit eviction policy, applied per shard (each
+    /// shard primitive evicts within its own slot range).
+    pub fn with_remover(cfg: PrioritizedConfig, remove: RemoverSpec) -> Self {
         let s = cfg.shards.max(1);
         assert!(
             cfg.capacity > s,
@@ -65,11 +72,14 @@ impl ShardedPrioritizedReplay {
         let shard_capacity = cfg.capacity.div_ceil(s);
         let shards = (0..s)
             .map(|_| {
-                PrioritizedReplay::new(PrioritizedConfig {
-                    capacity: shard_capacity,
-                    shards: 1,
-                    ..cfg.clone()
-                })
+                PrioritizedReplay::with_remover(
+                    PrioritizedConfig {
+                        capacity: shard_capacity,
+                        shards: 1,
+                        ..cfg.clone()
+                    },
+                    remove,
+                )
             })
             .collect();
         Self {
@@ -192,20 +202,39 @@ impl ReplayBuffer for ShardedPrioritizedReplay {
     }
 
     /// Anonymous insert: round-robin over shards (keeps single-producer
-    /// callers load-balanced). Actor loops use [`Self::insert_from`].
-    fn insert(&self, t: &Transition) {
+    /// callers load-balanced) — overriding the trait's actor-0 default,
+    /// which would pile every unattributed insert onto shard 0. Actor
+    /// loops use [`Self::insert_from`].
+    fn insert(&self, t: &Transition) -> Option<EvictReason> {
         let s = self.round_robin.fetch_add(1, Ordering::Relaxed) % self.shards.len();
-        self.shards[s].insert(t);
+        self.shards[s].insert(t)
     }
 
     /// Actor-affinity routing: actor `a` always writes shard `a % S`, so
     /// concurrent actors take disjoint lock pairs.
-    fn insert_from(&self, actor_id: usize, t: &Transition) {
-        self.shards[actor_id % self.shards.len()].insert(t);
+    fn insert_from(&self, actor_id: usize, t: &Transition) -> Option<EvictReason> {
+        let s = actor_id % self.shards.len();
+        self.shards[s].insert_from(actor_id, t)
     }
 
     fn total_priority(&self) -> f32 {
         ShardedPrioritizedReplay::total_priority(self)
+    }
+
+    fn remover(&self) -> RemoverSpec {
+        self.shards[0].remover()
+    }
+
+    /// Route global sampled indices back to their shard's counts.
+    fn note_sampled(&self, indices: &[usize]) {
+        for &g in indices {
+            let (s, local) = self.shard_of(g);
+            self.shards[s].note_sampled(&[local]);
+        }
+    }
+
+    fn max_sample_count(&self) -> u32 {
+        self.shards.iter().map(|s| s.max_sample_count()).max().unwrap_or(0)
     }
 
     /// Two-level stratified sampling (see module docs). Returns `true`

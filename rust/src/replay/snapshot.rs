@@ -25,6 +25,11 @@ pub struct ShardState {
     pub max_priority: f32,
     /// Leaf priorities of the occupied slots, in slot order.
     pub priorities: Vec<f32>,
+    /// Times each occupied slot has been handed out by `try_sample`,
+    /// in slot order (all zero for buffers without a
+    /// `MaxTimesSampled` remover; legacy v1 checkpoints restore as
+    /// zeros).
+    pub sample_counts: Vec<u32>,
     /// Stored transitions of the occupied slots, in slot order.
     pub rows: Vec<Transition>,
 }
@@ -58,6 +63,13 @@ impl ShardState {
             bail!(
                 "{kind}: shard state has {} priorities for {} rows",
                 self.priorities.len(),
+                self.rows.len()
+            );
+        }
+        if self.sample_counts.len() != self.rows.len() {
+            bail!(
+                "{kind}: shard state has {} sample counts for {} rows",
+                self.sample_counts.len(),
                 self.rows.len()
             );
         }
@@ -188,6 +200,7 @@ mod tests {
             cursor: n as u64,
             max_priority: 1.0,
             priorities: vec![0.5; n],
+            sample_counts: vec![0; n],
             rows: (0..n).map(|i| row(i as f32)).collect(),
         }
     }
@@ -205,6 +218,10 @@ mod tests {
     fn validate_rejects_each_inconsistency() {
         let mut s = shard(4);
         s.priorities.pop();
+        assert!(s.validate("test", 8, 2, 1).is_err());
+
+        let mut s = shard(4);
+        s.sample_counts.pop();
         assert!(s.validate("test", 8, 2, 1).is_err());
 
         let s = shard(9);

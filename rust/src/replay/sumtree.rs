@@ -49,6 +49,22 @@ pub struct KArySumTree {
     height: usize,
     /// The node array. Level ℓ lives at `level_off[ℓ] ..`.
     nodes: AlignedBox<AtomicU32>,
+    /// Optional parallel min tree (same implicit layout as `nodes`),
+    /// allocated only via [`Self::new_with_min`] for buffers running a
+    /// `LowestPriority` remover. Leaf encoding maps unsampleable
+    /// (zero-priority) leaves — and the padding beyond the logical
+    /// capacity — to `+inf` so they are never selected as victims.
+    min_nodes: Option<AlignedBox<AtomicU32>>,
+}
+
+/// Min-tree leaf encoding: zero (unsampleable) leaves read as `+inf`.
+#[inline(always)]
+fn min_enc(v: f32) -> f32 {
+    if v > 0.0 {
+        v
+    } else {
+        f32::INFINITY
+    }
 }
 
 impl KArySumTree {
@@ -87,7 +103,27 @@ impl KArySumTree {
             level_off,
             height,
             nodes,
+            min_nodes: None,
         }
+    }
+
+    /// Build a tree that additionally tracks the minimum positive leaf
+    /// per sibling group, so a `LowestPriority` remover can find its
+    /// victim in Θ((log_K N)·K) instead of a full leaf scan. Every node
+    /// starts at `+inf` (= empty).
+    pub fn new_with_min(capacity: usize, fanout: usize) -> Self {
+        let mut t = Self::new(capacity, fanout);
+        let min = AlignedBox::zeroed(t.nodes.len());
+        for slot in min.iter() {
+            store(slot, f32::INFINITY);
+        }
+        t.min_nodes = Some(min);
+        t
+    }
+
+    /// Whether this tree maintains the parallel min tree.
+    pub fn tracks_min(&self) -> bool {
+        self.min_nodes.is_some()
     }
 
     /// Fan-out K.
@@ -142,12 +178,21 @@ impl KArySumTree {
         let slot = self.leaf_slot(idx);
         let old = load(slot);
         store(slot, value);
+        if let Some(min) = &self.min_nodes {
+            store(&min[self.level_off[self.height - 1] + idx], min_enc(value));
+        }
         value - old
     }
 
     /// Propagate `delta` from leaf `idx`'s parent chain to the root.
     /// Second half of Algorithm 3's split update: the caller holds only
     /// `global_tree_lock` around this (leaf lock already released).
+    ///
+    /// With min tracking enabled, the interior min nodes along the same
+    /// path are recomputed from their K children (mins cannot be
+    /// updated incrementally). The `delta == 0` early return is safe
+    /// for the min tree too: zero delta means the leaf value — and
+    /// hence its min encoding — did not change.
     pub fn propagate(&self, idx: usize, delta: f32) {
         if delta == 0.0 {
             return;
@@ -155,10 +200,46 @@ impl KArySumTree {
         let mut i = idx;
         // Walk levels H-2 .. 0 (all interior levels including the root).
         for lvl in (0..self.height - 1).rev() {
-            i /= self.fanout;
+            let parent = i / self.fanout;
+            if let Some(min) = &self.min_nodes {
+                let base = self.level_off[lvl + 1] + parent * self.fanout;
+                let mut m = f32::INFINITY;
+                for c in 0..self.fanout {
+                    m = m.min(load(&min[base + c]));
+                }
+                store(&min[self.level_off[lvl] + parent], m);
+            }
+            i = parent;
             let slot = &self.nodes[self.level_off[lvl] + i];
             store(slot, load(slot) + delta);
         }
+    }
+
+    /// Lowest-priority sampleable leaf, via min-tree descent: the leaf
+    /// with the smallest strictly-positive priority (ties break to the
+    /// lowest index). `None` when min tracking is disabled or no leaf
+    /// holds positive priority. Callers hold `global_tree_lock` so the
+    /// descent is consistent with concurrent updates.
+    pub fn min_leaf(&self) -> Option<(usize, f32)> {
+        let min = self.min_nodes.as_ref()?;
+        if !load(&min[0]).is_finite() {
+            return None;
+        }
+        let mut i = 0usize;
+        for lvl in 1..self.height {
+            let base = self.level_off[lvl] + i * self.fanout;
+            let mut best = 0usize;
+            let mut best_v = f32::INFINITY;
+            for c in 0..self.fanout {
+                let v = load(&min[base + c]);
+                if v < best_v {
+                    best_v = v;
+                    best = c;
+                }
+            }
+            i = i * self.fanout + best;
+        }
+        Some((i, load(&min[self.level_off[self.height - 1] + i])))
     }
 
     /// Convenience: UPDATEVALUE of Algorithm 2 (set + propagate).
@@ -235,6 +316,13 @@ impl KArySumTree {
                     s += load(&self.nodes[base + c]);
                 }
                 store(&self.nodes[self.level_off[lvl] + i], s);
+                if let Some(min) = &self.min_nodes {
+                    let mut m = f32::INFINITY;
+                    for c in 0..self.fanout {
+                        m = m.min(load(&min[base + c]));
+                    }
+                    store(&min[self.level_off[lvl] + i], m);
+                }
             }
         }
     }
@@ -441,6 +529,47 @@ mod tests {
         }
         t.rebuild();
         assert!(t.invariant_error() < 1e-6);
+    }
+
+    #[test]
+    fn min_tracking_follows_updates() {
+        let t = KArySumTree::new_with_min(100, 16);
+        assert!(t.tracks_min());
+        assert_eq!(t.min_leaf(), None); // empty tree: all +inf
+        t.update(7, 3.0);
+        t.update(42, 0.5);
+        t.update(99, 2.0);
+        assert_eq!(t.min_leaf(), Some((42, 0.5)));
+        t.update(42, 9.0);
+        assert_eq!(t.min_leaf(), Some((99, 2.0)));
+        // Zeroed (unsampleable) leaves leave the min tree entirely.
+        t.update(99, 0.0);
+        assert_eq!(t.min_leaf(), Some((7, 3.0)));
+        t.update(7, 0.0);
+        t.update(42, 0.0);
+        assert_eq!(t.min_leaf(), None);
+        // Sums were maintained alongside.
+        assert!(t.total().abs() < 1e-6);
+    }
+
+    #[test]
+    fn min_tracking_ties_rebuild_and_default_off() {
+        let t = KArySumTree::new_with_min(64, 4);
+        for i in 0..64 {
+            t.update(i, 1.0);
+        }
+        // Uniform priorities: the tie breaks to the lowest index.
+        assert_eq!(t.min_leaf(), Some((0, 1.0)));
+        t.update(0, 2.0);
+        t.update(17, 0.25);
+        t.rebuild();
+        assert_eq!(t.min_leaf(), Some((17, 0.25)));
+        assert!(t.invariant_error() < 1e-5);
+        // Plain trees never pay for min tracking.
+        let plain = KArySumTree::new(8, 4);
+        plain.update(3, 1.0);
+        assert!(!plain.tracks_min());
+        assert_eq!(plain.min_leaf(), None);
     }
 
     #[test]

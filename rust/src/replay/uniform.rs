@@ -6,6 +6,7 @@
 //! atomic, the copy is lock-free, and a per-slot "ready" epoch keeps
 //! half-written rows out of samples.
 
+use super::remover::{EvictReason, Remover, RemoverSpec};
 use super::snapshot::{BufferState, ShardState};
 use super::storage::{SampleBatch, Transition, TransitionStore};
 use super::ReplayBuffer;
@@ -20,15 +21,31 @@ pub struct UniformReplay {
     /// Count of fully-written rows (monotone, saturates at capacity).
     ready: AtomicUsize,
     capacity: usize,
+    /// Eviction policy + per-slot sample counts. All priorities are
+    /// uniform here, so `LowestPriority` degenerates to the FIFO ring
+    /// slot (the oldest item IS a lowest-priority item) while keeping
+    /// its configured eviction reason.
+    remover: Remover,
 }
 
 impl UniformReplay {
     pub fn new(capacity: usize, obs_dim: usize, act_dim: usize) -> Self {
+        Self::with_remover(capacity, obs_dim, act_dim, RemoverSpec::Fifo)
+    }
+
+    /// Build with an explicit eviction policy.
+    pub fn with_remover(
+        capacity: usize,
+        obs_dim: usize,
+        act_dim: usize,
+        remove: RemoverSpec,
+    ) -> Self {
         Self {
             store: TransitionStore::new(capacity, obs_dim, act_dim),
             cursor: AtomicUsize::new(0),
             ready: AtomicUsize::new(0),
             capacity,
+            remover: Remover::new(remove, capacity),
         }
     }
 }
@@ -46,10 +63,29 @@ impl ReplayBuffer for UniformReplay {
         self.ready.load(Ordering::Acquire).min(self.capacity)
     }
 
-    fn insert(&self, t: &Transition) {
-        let slot = self.cursor.fetch_add(1, Ordering::Relaxed) % self.capacity;
+    fn insert_from(&self, _actor_id: usize, t: &Transition) -> Option<EvictReason> {
+        let cur = self.cursor.fetch_add(1, Ordering::Relaxed);
+        let (slot, reason) = if cur < self.capacity {
+            (cur, None)
+        } else {
+            match self.remover.spec() {
+                RemoverSpec::Fifo => (cur % self.capacity, Some(EvictReason::Fifo)),
+                RemoverSpec::Lifo => (self.capacity - 1, Some(EvictReason::Lifo)),
+                // Uniform priorities: the ring slot is the oldest of the
+                // all-tied lowest-priority items.
+                RemoverSpec::LowestPriority => {
+                    (cur % self.capacity, Some(EvictReason::LowestPriority))
+                }
+                RemoverSpec::MaxTimesSampled(_) => match self.remover.pick_ripe() {
+                    Some(slot) => (slot, Some(EvictReason::MaxSampled)),
+                    None => (cur % self.capacity, Some(EvictReason::Fifo)),
+                },
+            }
+        };
         self.store.write(slot, t);
+        self.remover.on_insert(slot);
         self.ready.fetch_add(1, Ordering::Release);
+        reason
     }
 
     fn sample(&self, batch: usize, rng: &mut Rng, out: &mut SampleBatch) -> bool {
@@ -96,9 +132,22 @@ impl ReplayBuffer for UniformReplay {
                 cursor: cursor as u64,
                 max_priority: 1.0,
                 priorities: vec![1.0; len],
+                sample_counts: self.remover.counts_snapshot(len),
                 rows,
             }],
         })
+    }
+
+    fn remover(&self) -> RemoverSpec {
+        self.remover.spec()
+    }
+
+    fn note_sampled(&self, indices: &[usize]) {
+        self.remover.note_sampled(indices);
+    }
+
+    fn max_sample_count(&self) -> u32 {
+        self.remover.max_count(self.len())
     }
 
     fn validate_state(&self, state: &BufferState) -> Result<()> {
@@ -124,6 +173,7 @@ impl ReplayBuffer for UniformReplay {
             self.store.write(i, row);
         }
         self.cursor.store(shard.cursor as usize, Ordering::Release);
+        self.remover.restore_counts(&shard.sample_counts);
         // All restored rows are fully written; `ready` mirrors the
         // cursor so `len()` reports them (it saturates at capacity).
         self.ready.store(shard.cursor as usize, Ordering::Release);
@@ -197,5 +247,38 @@ mod tests {
         // Mismatched geometry is rejected.
         let wrong = UniformReplay::new(8, 1, 1);
         assert!(wrong.restore_state(&s).is_err());
+    }
+
+    #[test]
+    fn lifo_and_max_sampled_removers_on_the_ring() {
+        let tr = |v: f32| Transition {
+            obs: vec![v],
+            action: vec![0.0],
+            next_obs: vec![0.0],
+            reward: v,
+            done: false,
+        };
+        let b = UniformReplay::with_remover(4, 1, 1, RemoverSpec::Lifo);
+        assert_eq!(b.remover(), RemoverSpec::Lifo);
+        for i in 0..6 {
+            b.insert(&tr(i as f32));
+        }
+        assert_eq!(b.len(), 4);
+        // Items 4 and 5 both displaced the newest slot (3).
+        let rewards: Vec<f32> = (0..4).map(|i| b.store.read(i).reward).collect();
+        assert_eq!(rewards, vec![0.0, 1.0, 2.0, 5.0]);
+
+        let m = UniformReplay::with_remover(4, 1, 1, RemoverSpec::MaxTimesSampled(2));
+        for i in 0..4 {
+            m.insert(&tr(i as f32));
+        }
+        m.note_sampled(&[1, 1]);
+        assert_eq!(m.max_sample_count(), 2);
+        assert_eq!(m.insert(&tr(7.0)), Some(EvictReason::MaxSampled));
+        assert_eq!(m.store.read(1).reward, 7.0);
+        // Ripe queue drained: the next eviction falls back to the ring
+        // (cursor 5 -> slot 1).
+        assert_eq!(m.insert(&tr(8.0)), Some(EvictReason::Fifo));
+        assert_eq!(m.store.read(1).reward, 8.0);
     }
 }

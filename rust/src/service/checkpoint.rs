@@ -7,10 +7,12 @@
 //!
 //! # What is (and is not) in the file
 //!
-//! * **Per table**: name, item-kind tag, the seven
-//!   [`TableStatsSnapshot`] counters, and the wrapped buffer's
-//!   [`BufferState`] (per-shard ring rows + leaf priorities + cursors +
-//!   max priority).
+//! * **Per table**: name, item-kind tag, the [`TableStatsSnapshot`]
+//!   counters (including the eviction-by-reason counters and the
+//!   derived `max_times_sampled`), the table's [`RemoverSpec`] tag,
+//!   and the wrapped buffer's [`BufferState`] (per-shard ring rows +
+//!   leaf priorities + per-item sample counts + cursors + max
+//!   priority).
 //! * The limiter's *state* is exactly the `inserts` / `sample_batches`
 //!   counters — restoring them transfers the sample-to-insert ratio
 //!   accounting, so a resumed run neither stalls (drift wrongly high)
@@ -23,11 +25,18 @@
 //!
 //! # File format
 //!
-//! `magic "PALSTAT1" + payload + crc32(payload)` via the shared
+//! `magic "PALSTAT2" + payload + crc32(payload)` via the shared
 //! [`crate::util::blob`] helpers (same writer/validator as the weights
 //! [`crate::params::Checkpoint`]); writes are atomic (temp file +
 //! rename). The payload starts with a `u32` format version so a future
 //! layout change is reported as a version mismatch, not as garbage.
+//!
+//! **Forward compatibility**: v1 files (`PALSTAT1` magic, payload
+//! version 2 — written before removers existed) still load. Their
+//! tables decode with a FIFO remover tag, zeroed eviction counters and
+//! zeroed per-item sample counts, which is exactly the state such a
+//! run was in. Saves always emit the current (`PALSTAT2`, payload v3)
+//! layout.
 //!
 //! # Failure semantics
 //!
@@ -40,16 +49,24 @@
 
 use super::table::{Table, TableStatsSnapshot};
 use super::ReplayService;
-use crate::replay::{BufferState, ShardState, Transition};
-use crate::util::blob::{read_blob, write_blob, ByteReader, ByteWriter};
+use crate::replay::{BufferState, RemoverSpec, ShardState, Transition};
+use crate::util::blob::{read_blob_any, write_blob, ByteReader, ByteWriter};
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::Path;
 
-/// File-kind magic for replay-service state blobs.
-pub const STATE_MAGIC: &[u8; 8] = b"PALSTAT1";
+/// File-kind magic for replay-service state blobs (current revision).
+pub const STATE_MAGIC: &[u8; 8] = b"PALSTAT2";
+/// Previous file-kind magic; v1 files carrying it still load (their
+/// payload version is 2).
+pub const LEGACY_STATE_MAGIC: &[u8; 8] = b"PALSTAT1";
 /// Payload layout version (first field of the payload). v2 added the
-/// `steps_dropped` counter to each table's stats block.
-pub const STATE_VERSION: u32 = 2;
+/// `steps_dropped` counter to each table's stats block; v3 (with the
+/// `PALSTAT2` magic) added eviction-by-reason counters +
+/// `max_times_sampled` to the stats block, a per-table remover tag,
+/// and per-shard per-item sample counts.
+pub const STATE_VERSION: u32 = 3;
+/// Last legacy payload version this build still decodes.
+pub const LEGACY_STATE_VERSION: u32 = 2;
 /// Conventional file name inside a run/checkpoint directory.
 pub const STATE_FILE: &str = "replay_state.bin";
 
@@ -62,6 +79,12 @@ pub struct TableState {
     /// Counter snapshot; `inserts` and `sample_batches` double as the
     /// rate limiter's state.
     pub stats: TableStatsSnapshot,
+    /// Eviction policy the table ran with at capture time. Advisory:
+    /// restore does NOT require the target table to match (so a v1
+    /// file — which decodes as FIFO — restores into any remover
+    /// config, and operators may deliberately change policy across a
+    /// restart; the data itself is policy-independent).
+    pub remover: RemoverSpec,
     pub buffer: BufferState,
 }
 
@@ -162,6 +185,14 @@ impl ServiceState {
             w.u64(t.stats.insert_stalls as u64);
             w.u64(t.stats.sample_stalls as u64);
             w.u64(t.stats.steps_dropped as u64);
+            w.u64(t.stats.evict_fifo as u64);
+            w.u64(t.stats.evict_lifo as u64);
+            w.u64(t.stats.evict_lowest as u64);
+            w.u64(t.stats.evict_sampled as u64);
+            w.u64(t.stats.max_times_sampled as u64);
+            let (tag, param) = t.remover.tag();
+            w.u8(tag);
+            w.u32(param);
             w.str_(&t.buffer.impl_name);
             w.u64(t.buffer.capacity as u64);
             w.u32(t.buffer.obs_dim as u32);
@@ -171,6 +202,7 @@ impl ServiceState {
                 w.u64(s.cursor);
                 w.f32(s.max_priority);
                 w.f32s(&s.priorities);
+                w.u32s(&s.sample_counts);
                 w.u64(s.rows.len() as u64);
                 for row in &s.rows {
                     for &v in row.obs.iter().chain(&row.action).chain(&row.next_obs) {
@@ -184,16 +216,21 @@ impl ServiceState {
         w.finish()
     }
 
-    /// Decode a payload produced by [`Self::encode`].
+    /// Decode a payload produced by [`Self::encode`] (payload v3), or
+    /// a legacy v2 payload from a `PALSTAT1` file — its tables get a
+    /// FIFO remover, zeroed eviction counters and zeroed sample
+    /// counts.
     pub fn decode(payload: &[u8]) -> Result<Self> {
         let mut r = ByteReader::new(payload);
         let version = r.u32("format version")?;
-        if version != STATE_VERSION {
+        if version != STATE_VERSION && version != LEGACY_STATE_VERSION {
             bail!(
                 "replay state format version mismatch: file is v{version}, \
-                 this build reads v{STATE_VERSION}"
+                 this build reads v{LEGACY_STATE_VERSION} (PALSTAT1) and \
+                 v{STATE_VERSION} (PALSTAT2)"
             );
         }
+        let legacy = version == LEGACY_STATE_VERSION;
         // Sanity bounds on every count used for allocation, so a
         // corrupted length field fails cleanly instead of attempting an
         // absurd allocation.
@@ -208,7 +245,7 @@ impl ServiceState {
         for _ in 0..n_tables {
             let name = r.str_("table name")?;
             let kind_tag = r.str_("table kind")?;
-            let stats = TableStatsSnapshot {
+            let mut stats = TableStatsSnapshot {
                 inserts: r.u64("inserts")? as usize,
                 sample_batches: r.u64("sample_batches")? as usize,
                 sampled_items: r.u64("sampled_items")? as usize,
@@ -216,6 +253,19 @@ impl ServiceState {
                 insert_stalls: r.u64("insert_stalls")? as usize,
                 sample_stalls: r.u64("sample_stalls")? as usize,
                 steps_dropped: r.u64("steps_dropped")? as usize,
+                ..TableStatsSnapshot::default()
+            };
+            let remover = if legacy {
+                RemoverSpec::Fifo
+            } else {
+                stats.evict_fifo = r.u64("evict_fifo")? as usize;
+                stats.evict_lifo = r.u64("evict_lifo")? as usize;
+                stats.evict_lowest = r.u64("evict_lowest")? as usize;
+                stats.evict_sampled = r.u64("evict_sampled")? as usize;
+                stats.max_times_sampled = r.u64("max_times_sampled")? as usize;
+                let tag = r.u8("remover tag")?;
+                let param = r.u32("remover param")?;
+                RemoverSpec::from_tag(tag, param)?
             };
             let impl_name = r.str_("buffer impl")?;
             let capacity = r.u64("capacity")? as usize;
@@ -233,6 +283,11 @@ impl ServiceState {
                 let cursor = r.u64("shard cursor")?;
                 let max_priority = r.f32("max priority")?;
                 let priorities = r.f32s("priorities")?;
+                let sample_counts = if legacy {
+                    Vec::new() // resized to n_rows zeros below
+                } else {
+                    r.u32s("sample counts")?
+                };
                 let n_rows = r.u64("row count")? as usize;
                 if n_rows != priorities.len() {
                     bail!(
@@ -240,6 +295,16 @@ impl ServiceState {
                         priorities.len()
                     );
                 }
+                let sample_counts = if legacy {
+                    vec![0u32; n_rows]
+                } else if sample_counts.len() == n_rows {
+                    sample_counts
+                } else {
+                    bail!(
+                        "shard claims {n_rows} rows for {} sample counts",
+                        sample_counts.len()
+                    );
+                };
                 let mut rows = Vec::with_capacity(n_rows);
                 for _ in 0..n_rows {
                     let mut obs = Vec::with_capacity(obs_dim);
@@ -258,12 +323,13 @@ impl ServiceState {
                     let done = r.u8("row done")? != 0;
                     rows.push(Transition { obs, action, next_obs, reward, done });
                 }
-                shards.push(ShardState { cursor, max_priority, priorities, rows });
+                shards.push(ShardState { cursor, max_priority, priorities, sample_counts, rows });
             }
             tables.push(TableState {
                 name,
                 kind_tag,
                 stats,
+                remover,
                 buffer: BufferState { impl_name, capacity, obs_dim, act_dim, shards },
             });
         }
@@ -278,10 +344,11 @@ impl ServiceState {
     }
 
     /// Load and fully validate a state file (magic, crc, version,
-    /// internal consistency of the encoding).
+    /// internal consistency of the encoding). Accepts both the current
+    /// `PALSTAT2` magic and legacy `PALSTAT1` files.
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
         let path = path.as_ref();
-        let payload = read_blob(path, STATE_MAGIC)
+        let (payload, _which) = read_blob_any(path, &[STATE_MAGIC, LEGACY_STATE_MAGIC])
             .with_context(|| format!("not a PAL replay state file: {}", path.display()))?;
         Self::decode(&payload)
             .with_context(|| format!("decoding replay state {}", path.display()))
@@ -441,6 +508,66 @@ mod tests {
         let err = state.restore_into(&fresh).unwrap_err();
         assert!(format!("{err:#}").contains("twice"), "{err:#}");
         assert_eq!(fresh.total_len(), 0);
+    }
+
+    #[test]
+    fn legacy_v2_payload_decodes_with_fifo_defaults_and_restores() {
+        // Hand-encode a PALSTAT1-era v2 payload: one uniform table,
+        // two rows, the seven-counter stats block, no remover tag, no
+        // sample counts.
+        let mut w = ByteWriter::new();
+        w.u32(LEGACY_STATE_VERSION);
+        w.u32(1); // table count
+        w.str_("replay");
+        w.str_("1step");
+        for v in [2u64, 1, 2, 0, 0, 1, 0] {
+            w.u64(v);
+        }
+        w.str_("uniform-ring");
+        w.u64(4); // capacity
+        w.u32(2); // obs_dim
+        w.u32(1); // act_dim
+        w.u32(1); // shard count
+        w.u64(2); // cursor
+        w.f32(1.0); // max_priority
+        w.f32s(&[1.0, 1.0]);
+        w.u64(2); // row count
+        for i in 0..2 {
+            let v = i as f32;
+            for x in [v, -v, v, v + 1.0, -v] {
+                w.f32(x); // obs(2) + action(1) + next_obs(2)
+            }
+            w.f32(v); // reward
+            w.u8(0); // done
+        }
+        let state = ServiceState::decode(&w.finish()).unwrap();
+        let t = state.table("replay").unwrap();
+        assert_eq!(t.remover, RemoverSpec::Fifo);
+        assert_eq!(t.stats.inserts, 2);
+        assert_eq!(t.stats.sample_stalls, 1);
+        let zeroed = t.stats.evict_fifo
+            + t.stats.evict_lifo
+            + t.stats.evict_lowest
+            + t.stats.evict_sampled
+            + t.stats.max_times_sampled;
+        assert_eq!(zeroed, 0);
+        assert_eq!(t.buffer.shards[0].sample_counts, vec![0, 0]);
+        // The decoded legacy state restores into a live service — even
+        // one running a different remover (the spec is advisory).
+        let svc = ReplayService::new(vec![Table::new(
+            "replay",
+            ItemKind::OneStep,
+            Arc::new(UniformReplay::with_remover(4, 2, 1, crate::replay::RemoverSpec::Lifo)),
+            RateLimiter::Unlimited { min_size_to_sample: 1 },
+        )])
+        .unwrap();
+        state.restore_into(&svc).unwrap();
+        assert_eq!(svc.default_table().len(), 2);
+        // Re-capturing writes the v3 layout and stays equal modulo the
+        // remover spec the live table actually runs.
+        let recaptured = ServiceState::capture(&svc).unwrap();
+        assert_eq!(recaptured.tables[0].remover, RemoverSpec::Lifo);
+        assert_eq!(recaptured.tables[0].buffer, state.tables[0].buffer);
     }
 
     #[test]

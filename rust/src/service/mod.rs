@@ -10,12 +10,14 @@
 //! |------|--------|-------|
 //! | [`ReplayService`] | `reverb.Server` | in-process; [`crate::remote`] puts a socket front-end on it |
 //! | [`Table`] | `reverb.Table` | named; wraps any [`crate::replay::ReplayBuffer`] impl |
-//! | wrapped buffer impl | sampler + remover | prioritized = proportional sampler, uniform = FIFO ring; both evict FIFO |
+//! | wrapped buffer impl | sampler | prioritized = proportional sampler, uniform = FIFO ring |
+//! | [`crate::replay::RemoverSpec`] | `reverb.selectors` (remover) | per-table `remove=` option: `fifo` (default) / `lifo` / `lowest` / `max_sampled:N` |
 //! | [`RateLimiter::SampleToInsertRatio`] | `reverb.rate_limiters.SampleToInsertRatio` | σ, `min_size_to_sample`, error bounds |
 //! | [`RateLimiter::Unlimited`] | `reverb.rate_limiters.MinSize` | free-run; min-size gate only |
 //! | [`TrajectoryWriter`] | `reverb.TrajectoryWriter` | actor-side; 1-step / N-step / sequence items |
 //! | [`SamplerHandle`] | `reverb.TFClient.sample` | learner-side; batch draw + priority feedback |
 //! | [`ServiceState`] | `reverb.checkpointers` | versioned + checksummed table snapshots, atomic writes |
+//! | table ACLs + insert budgets | `reverb.Client` per-table usage | tenant quotas, enforced at the [`crate::remote`] front-end (`Hello` binds the ACL) |
 //!
 //! # Shape of a training run
 //!
@@ -47,20 +49,23 @@ pub use limiter::{RateLimitSpec, RateLimiter, SampleToInsertRatio};
 pub use table::{SampleOutcome, Table, TableStats, TableStatsSnapshot};
 pub use writer::{ItemKind, TrajectoryWriter, WriterStep};
 
-use crate::replay::SampleBatch;
+use crate::replay::{RemoverSpec, SampleBatch};
 use crate::util::rng::Rng;
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 use std::sync::Arc;
 
 /// Parsed `--tables` entry: `name=kind[@option,option,...]`, e.g.
 /// `replay=1step`, `multi=nstep:3@50000`, `traj=seq:8`,
-/// `hot=1step@50000,alpha=0.9,beta=0.6,limit=1.5`. Options after `@`
-/// are a bare integer (capacity), per-table PER exponent overrides
-/// `alpha=..` / `beta=..` (the run's `--alpha`/`--beta` when absent),
-/// and a per-table rate limiter `limit=..` taking the `--rate-limit`
-/// grammar (`legacy`, `unlimited`, or a samples-per-insert float) —
-/// so one stream can feed a ratio-limited learner table next to a
-/// free-running auxiliary one, each with its own policy.
+/// `hot=1step@50000,alpha=0.9,beta=0.6,limit=1.5,remove=max_sampled:4`.
+/// Options after `@` are a bare integer (capacity), per-table PER
+/// exponent overrides `alpha=..` / `beta=..` (the run's
+/// `--alpha`/`--beta` when absent), a per-table rate limiter
+/// `limit=..` taking the `--rate-limit` grammar (`legacy`,
+/// `unlimited`, or a samples-per-insert float), and a per-table
+/// eviction policy `remove=..` taking the `--remove` grammar (`fifo`,
+/// `lifo`, `lowest`, `max_sampled:N`) — so one stream can feed a
+/// ratio-limited learner table next to a free-running auxiliary one,
+/// each with its own policy.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TableSpec {
     pub name: String,
@@ -77,6 +82,29 @@ pub struct TableSpec {
     /// limiter only belongs on a table something actually samples —
     /// writers block while ANY table denies inserts.
     pub limit: Option<RateLimitSpec>,
+    /// Per-table eviction policy (`remove=..`); the run's `--remove`
+    /// (FIFO unless overridden) when `None`.
+    pub remove: Option<RemoverSpec>,
+}
+
+/// Uniform duplicate-key rejection for the `@`-option tokenizer: every
+/// key (and the bare capacity) may appear at most once per entry.
+fn set_option<T>(slot: &mut Option<T>, key: &str, value: T, spec: &str) -> Result<()> {
+    if slot.replace(value).is_some() {
+        bail!("duplicate {key} in table spec `{spec}`");
+    }
+    Ok(())
+}
+
+/// Parse an `alpha=` / `beta=` exponent value with a per-key error.
+fn parse_exponent(key: &str, value: &str, spec: &str) -> Result<f32> {
+    let v: f32 = value.parse().map_err(|_| {
+        anyhow!("bad {key} value `{value}` in table spec `{spec}` (expected a float in [0, 1])")
+    })?;
+    if !v.is_finite() || !(0.0..=1.0).contains(&v) {
+        bail!("{key} must be within [0, 1] in table spec `{spec}`, got `{value}`");
+    }
+    Ok(v)
 }
 
 impl TableSpec {
@@ -98,48 +126,51 @@ impl TableSpec {
         let mut alpha = None;
         let mut beta = None;
         let mut limit = None;
+        let mut remove = None;
+        // One tokenizer for every `@` option: split on commas, then
+        // dispatch on the key before `=` (a key-less token is the bare
+        // capacity). Each key parses with its own error text; duplicate
+        // rejection is uniform via `set_option`.
         for opt in opts.into_iter().flat_map(|o| o.split(',')) {
             let opt = opt.trim();
             if opt.is_empty() {
                 bail!("empty option in table spec `{s}`");
             }
-            if let Some((key, value)) = opt.split_once('=') {
-                let (key, value) = (key.trim(), value.trim());
-                if key == "limit" {
-                    let spec = RateLimitSpec::parse(value).map_err(|e| {
-                        anyhow::anyhow!("bad limit value `{value}` in table spec `{s}`: {e}")
-                    })?;
-                    if limit.replace(spec).is_some() {
-                        bail!("duplicate limit in table spec `{s}`");
+            match opt.split_once('=') {
+                Some((key, value)) => {
+                    let (key, value) = (key.trim(), value.trim());
+                    match key {
+                        "alpha" => set_option(&mut alpha, key, parse_exponent(key, value, s)?, s)?,
+                        "beta" => set_option(&mut beta, key, parse_exponent(key, value, s)?, s)?,
+                        "limit" => {
+                            let v = RateLimitSpec::parse(value).map_err(|e| {
+                                anyhow!("bad limit value `{value}` in table spec `{s}`: {e}")
+                            })?;
+                            set_option(&mut limit, key, v, s)?;
+                        }
+                        "remove" => {
+                            let v = RemoverSpec::parse(value).map_err(|e| {
+                                anyhow!("bad remove value `{value}` in table spec `{s}`: {e}")
+                            })?;
+                            set_option(&mut remove, key, v, s)?;
+                        }
+                        other => bail!(
+                            "unknown option `{other}` in table spec `{s}` \
+                             (expected a capacity, alpha=.., beta=.., limit=.., remove=..)"
+                        ),
                     }
-                    continue;
                 }
-                let slot = match key {
-                    "alpha" => &mut alpha,
-                    "beta" => &mut beta,
-                    other => bail!(
-                        "unknown option `{other}` in table spec `{s}` \
-                         (expected a capacity, alpha=.., beta=.., limit=..)"
-                    ),
-                };
-                let v: f32 = value
-                    .parse()
-                    .map_err(|_| anyhow::anyhow!("bad {key} value `{value}` in table spec `{s}`"))?;
-                if !v.is_finite() || !(0.0..=1.0).contains(&v) {
-                    bail!("{key} must be within [0, 1] in table spec `{s}`, got `{value}`");
-                }
-                if slot.replace(v).is_some() {
-                    bail!("duplicate {key} in table spec `{s}`");
-                }
-            } else {
-                let cap: usize = opt
-                    .parse()
-                    .map_err(|_| anyhow::anyhow!("bad capacity `{opt}` in table spec `{s}`"))?;
-                if cap == 0 {
-                    bail!("capacity must be > 0 in table spec `{s}`");
-                }
-                if capacity.replace(cap).is_some() {
-                    bail!("duplicate capacity in table spec `{s}`");
+                None => {
+                    let cap: usize = opt.parse().map_err(|_| {
+                        anyhow!(
+                            "bad capacity `{opt}` in table spec `{s}` \
+                             (a key-less option must be an integer capacity)"
+                        )
+                    })?;
+                    if cap == 0 {
+                        bail!("capacity must be > 0 in table spec `{s}`");
+                    }
+                    set_option(&mut capacity, "capacity", cap, s)?;
                 }
             }
         }
@@ -150,26 +181,29 @@ impl TableSpec {
             alpha,
             beta,
             limit,
+            remove,
         })
     }
 
     /// Parse a whole `--tables` value. Entries split on commas, but a
     /// comma also separates the options *inside* one entry
-    /// (`hot=1step@alpha=0.9,beta=0.6,limit=2`): a segment whose key
-    /// before the first `=` is `alpha`/`beta`/`limit` continues the
-    /// previous entry instead of starting a new one. Consequence:
-    /// `alpha`, `beta` and `limit` are reserved by the grammar and
-    /// cannot be used as table names.
+    /// (`hot=1step@alpha=0.9,beta=0.6,limit=2,remove=lifo`): a segment
+    /// whose key before the first `=` is
+    /// `alpha`/`beta`/`limit`/`remove` continues the previous entry
+    /// instead of starting a new one. Consequence: `alpha`, `beta`,
+    /// `limit` and `remove` are reserved by the grammar and cannot be
+    /// used as table names.
     pub fn parse_list(s: &str, gamma: f32) -> Result<Vec<TableSpec>> {
         let mut entries: Vec<String> = Vec::new();
         for seg in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
             // A segment continues the previous entry when it is an
-            // option (exponent or limiter), or a bare capacity following
-            // an entry that already opened its option list (a capacity
-            // can never START an entry — entries need `name=kind`).
+            // option (exponent, limiter or remover), or a bare capacity
+            // following an entry that already opened its option list (a
+            // capacity can never START an entry — entries need
+            // `name=kind`).
             let continues = matches!(
                 seg.split_once('=').map(|(k, _)| k.trim()),
-                Some("alpha") | Some("beta") | Some("limit")
+                Some("alpha") | Some("beta") | Some("limit") | Some("remove")
             ) || (seg.bytes().all(|b| b.is_ascii_digit())
                 && entries.last().is_some_and(|p| p.contains('@')));
             match (continues, entries.last_mut()) {
@@ -179,8 +213,8 @@ impl TableSpec {
                 }
                 (true, None) => bail!(
                     "`{seg}` looks like a per-table option but no table entry \
-                     precedes it (`alpha`, `beta` and `limit` are reserved option \
-                     keys, not usable as table names)"
+                     precedes it (`alpha`, `beta`, `limit` and `remove` are \
+                     reserved option keys, not usable as table names)"
                 ),
                 (false, _) => entries.push(seg.to_string()),
             }
@@ -338,7 +372,26 @@ impl ReplayService {
 
     /// A writer handle for one actor, fanning out to every table.
     pub fn writer(&self, actor_id: usize) -> TrajectoryWriter {
-        TrajectoryWriter::new(actor_id, self.tables.to_vec())
+        self.writer_for(actor_id, None)
+    }
+
+    /// A writer handle restricted to the named tables (`None` = all
+    /// tables, same as [`Self::writer`]) — the building block for
+    /// per-connection table ACLs at the remote front-end. Names are
+    /// expected to be pre-validated against [`Self::table`] (the
+    /// server rejects unknown names at `Hello`); a name with no match
+    /// here is simply skipped, so the call is infallible.
+    pub fn writer_for(&self, actor_id: usize, allowed: Option<&[String]>) -> TrajectoryWriter {
+        let tables = match allowed {
+            None => self.tables.to_vec(),
+            Some(names) => self
+                .tables
+                .iter()
+                .filter(|t| names.iter().any(|n| n == t.name()))
+                .cloned()
+                .collect(),
+        };
+        TrajectoryWriter::new(actor_id, tables)
     }
 
     /// A sampler handle on a named table.
@@ -436,6 +489,33 @@ mod tests {
     }
 
     #[test]
+    fn table_spec_remove_option() {
+        use crate::replay::RemoverSpec;
+        let s = TableSpec::parse("hot=1step@100000,remove=max_sampled:4", 0.99).unwrap();
+        assert_eq!(s.capacity, Some(100_000));
+        assert_eq!(s.remove, Some(RemoverSpec::MaxTimesSampled(4)));
+        let s = TableSpec::parse("hot=1step@remove=lifo,alpha=0.9", 0.99).unwrap();
+        assert_eq!(s.remove, Some(RemoverSpec::Lifo));
+        assert_eq!(s.alpha, Some(0.9));
+        let s = TableSpec::parse("hot=1step", 0.99).unwrap();
+        assert_eq!(s.remove, None);
+        // Per-key errors: value, duplicates, unknown remover.
+        let e = TableSpec::parse("t=1step@remove=oldest", 0.99).unwrap_err();
+        assert!(format!("{e:#}").contains("bad remove value"), "{e:#}");
+        assert!(TableSpec::parse("t=1step@remove=fifo,remove=lifo", 0.99).is_err());
+        assert!(TableSpec::parse("t=1step@remove=max_sampled:0", 0.99).is_err());
+        // `remove` continues an entry across the list split and is a
+        // reserved key.
+        let specs =
+            TableSpec::parse_list("hot=1step@16,remove=lowest, cold=1step@remove=fifo", 0.9)
+                .unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].remove, Some(RemoverSpec::LowestPriority));
+        assert_eq!(specs[1].remove, Some(RemoverSpec::Fifo));
+        assert!(TableSpec::parse_list("remove=fifo,replay=1step", 0.9).is_err());
+    }
+
+    #[test]
     fn table_spec_list_keeps_exponent_options_attached() {
         let specs = TableSpec::parse_list(
             "replay=1step@alpha=0.7,beta=0.5, aux=nstep:3@1024, flat=1step@alpha=0.0",
@@ -493,6 +573,26 @@ mod tests {
         assert!(ReplayService::new(vec![mk("a"), mk("a")]).is_err());
         assert!(ReplayService::new(vec![]).is_err());
         assert!(ReplayService::new(vec![mk("a"), mk("b")]).is_ok());
+    }
+
+    #[test]
+    fn writer_for_scopes_the_fan_out() {
+        let svc = svc();
+        let allowed = vec!["nstep".to_string()];
+        let mut w = svc.writer_for(3, Some(&allowed));
+        for i in 0..4 {
+            w.append(WriterStep {
+                obs: vec![i as f32, 0.0],
+                action: vec![1.0],
+                next_obs: vec![i as f32 + 1.0, 0.0],
+                reward: 1.0,
+                done: i == 3,
+                truncated: false,
+            });
+        }
+        // Only the allowed table received the items.
+        assert_eq!(svc.table("replay").unwrap().len(), 0);
+        assert_eq!(svc.table("nstep").unwrap().len(), 4);
     }
 
     #[test]

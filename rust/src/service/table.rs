@@ -4,14 +4,18 @@
 //! stall/throughput stats for the monitor loop and the benches.
 //!
 //! A table is to the service what a Reverb `Table` is to a Reverb
-//! server: storage + sampler + remover come from the wrapped buffer
+//! server: storage + sampler come from the wrapped buffer
 //! implementation (prioritized = proportional sampler, uniform = FIFO
-//! ring, both evict FIFO), the limiter is attached here.
+//! ring), the remover is whatever [`crate::replay::RemoverSpec`] the
+//! buffer was built with (FIFO by default), and the limiter is
+//! attached here. Capacity-pressure stats — evictions by reason, the
+//! max per-item sample count — are tracked at this layer so the
+//! monitor and the `Stats` RPC see them uniformly across buffer kinds.
 
 use super::checkpoint::TableState;
 use super::limiter::RateLimiter;
 use super::writer::ItemKind;
-use crate::replay::{ReplayBuffer, SampleBatch, Transition};
+use crate::replay::{EvictReason, ReplayBuffer, SampleBatch, Transition};
 use crate::util::rng::Rng;
 use anyhow::{anyhow, bail, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -50,6 +54,15 @@ pub struct TableStats {
     /// Nonzero means the stored data has gaps; see the README's fault
     /// tolerance notes.
     pub steps_dropped: AtomicUsize,
+    /// Evictions by the FIFO remover (or a FIFO fallback of another
+    /// remover — e.g. `max_sampled` before any item ripens).
+    pub evict_fifo: AtomicUsize,
+    /// Evictions by the LIFO remover.
+    pub evict_lifo: AtomicUsize,
+    /// Evictions by the lowest-priority remover.
+    pub evict_lowest: AtomicUsize,
+    /// Evictions of items that reached their sample-count ceiling.
+    pub evict_sampled: AtomicUsize,
 }
 
 impl TableStats {
@@ -64,10 +77,18 @@ impl TableStats {
         self.insert_stalls.store(s.insert_stalls, Ordering::Relaxed);
         self.sample_stalls.store(s.sample_stalls, Ordering::Relaxed);
         self.steps_dropped.store(s.steps_dropped, Ordering::Relaxed);
+        self.evict_fifo.store(s.evict_fifo, Ordering::Relaxed);
+        self.evict_lifo.store(s.evict_lifo, Ordering::Relaxed);
+        self.evict_lowest.store(s.evict_lowest, Ordering::Relaxed);
+        self.evict_sampled.store(s.evict_sampled, Ordering::Relaxed);
     }
 }
 
-/// Point-in-time copy of [`TableStats`].
+/// Point-in-time copy of [`TableStats`], plus `max_times_sampled`,
+/// which is derived from the buffer's per-item counts at snapshot time
+/// (it is not an atomic of its own and is NOT restored by
+/// [`TableStats::restore`] — the buffer's restored sample counts
+/// reproduce it).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct TableStatsSnapshot {
     pub inserts: usize,
@@ -77,6 +98,12 @@ pub struct TableStatsSnapshot {
     pub insert_stalls: usize,
     pub sample_stalls: usize,
     pub steps_dropped: usize,
+    pub evict_fifo: usize,
+    pub evict_lifo: usize,
+    pub evict_lowest: usize,
+    pub evict_sampled: usize,
+    /// Highest times-sampled count over the currently occupied slots.
+    pub max_times_sampled: usize,
 }
 
 /// One named table of a [`super::ReplayService`].
@@ -157,8 +184,23 @@ impl Table {
     /// sharded buffers to disjoint locks). Writers are expected to poll
     /// [`Self::can_insert`] first; the insert itself never blocks.
     pub fn insert_from(&self, actor_id: usize, t: &Transition) {
-        self.buffer.insert_from(actor_id, t);
+        let evicted = self.buffer.insert_from(actor_id, t);
         self.stats.inserts.fetch_add(1, Ordering::Relaxed);
+        match evicted {
+            None => {}
+            Some(EvictReason::Fifo) => {
+                self.stats.evict_fifo.fetch_add(1, Ordering::Relaxed);
+            }
+            Some(EvictReason::Lifo) => {
+                self.stats.evict_lifo.fetch_add(1, Ordering::Relaxed);
+            }
+            Some(EvictReason::LowestPriority) => {
+                self.stats.evict_lowest.fetch_add(1, Ordering::Relaxed);
+            }
+            Some(EvictReason::MaxSampled) => {
+                self.stats.evict_sampled.fetch_add(1, Ordering::Relaxed);
+            }
+        }
     }
 
     /// Learner-side sample poll: reserve a batch against the limiter,
@@ -184,6 +226,9 @@ impl Table {
             return SampleOutcome::NotEnoughData;
         }
         self.stats.sampled_items.fetch_add(out.len(), Ordering::Relaxed);
+        // Feed per-item sample counts to the buffer's remover (a no-op
+        // unless it is `MaxTimesSampled`, which evicts on them).
+        self.buffer.note_sampled(&out.indices);
         SampleOutcome::Sampled
     }
 
@@ -215,6 +260,7 @@ impl Table {
             name: self.name.clone(),
             kind_tag: self.kind.tag(),
             stats: self.stats_snapshot(),
+            remover: self.buffer.remover(),
             buffer,
         })
     }
@@ -262,11 +308,20 @@ impl Table {
             insert_stalls: self.stats.insert_stalls.load(Ordering::Relaxed),
             sample_stalls: self.stats.sample_stalls.load(Ordering::Relaxed),
             steps_dropped: self.stats.steps_dropped.load(Ordering::Relaxed),
+            evict_fifo: self.stats.evict_fifo.load(Ordering::Relaxed),
+            evict_lifo: self.stats.evict_lifo.load(Ordering::Relaxed),
+            evict_lowest: self.stats.evict_lowest.load(Ordering::Relaxed),
+            evict_sampled: self.stats.evict_sampled.load(Ordering::Relaxed),
+            max_times_sampled: self.buffer.max_sample_count() as usize,
         }
     }
 
     /// One-line stats for the monitor's progress output, e.g.
-    /// `replay[n=4096 in=5000 out=120 stall i/s=3/40]`.
+    /// `replay[n=4096 in=5000 out=120 stall i/s=3/40]`. Capacity
+    /// pressure shows up only once it exists: an ` evict=f/l/p/s` cell
+    /// (FIFO/LIFO/lowest-priority/max-sampled counts) once anything
+    /// has been evicted, and an ` smax=` cell once some occupied item
+    /// has been sampled — quiet tables print exactly as before.
     pub fn stats_line(&self) -> String {
         let s = self.stats_snapshot();
         let drop = if s.steps_dropped > 0 {
@@ -274,8 +329,22 @@ impl Table {
         } else {
             String::new()
         };
+        let evicted = s.evict_fifo + s.evict_lifo + s.evict_lowest + s.evict_sampled;
+        let evict = if evicted > 0 {
+            format!(
+                " evict={}/{}/{}/{}",
+                s.evict_fifo, s.evict_lifo, s.evict_lowest, s.evict_sampled
+            )
+        } else {
+            String::new()
+        };
+        let smax = if s.max_times_sampled > 0 {
+            format!(" smax={}", s.max_times_sampled)
+        } else {
+            String::new()
+        };
         format!(
-            "{}[n={} in={} out={} stall i/s={}/{}{}]",
+            "{}[n={} in={} out={} stall i/s={}/{}{}{}{}]",
             self.name,
             self.buffer.len(),
             s.inserts,
@@ -283,6 +352,8 @@ impl Table {
             s.insert_stalls,
             s.sample_stalls,
             drop,
+            evict,
+            smax,
         )
     }
 }
@@ -382,6 +453,37 @@ mod tests {
         assert_eq!(t.stats_snapshot().insert_stalls, stalled);
         // Inserted no further than the window allows past min_size.
         assert!(t.stats_snapshot().inserts <= 5);
+    }
+
+    #[test]
+    fn eviction_counters_and_pressure_cells() {
+        use crate::replay::RemoverSpec;
+        let t = Table::new(
+            "hot",
+            ItemKind::OneStep,
+            Arc::new(UniformReplay::with_remover(4, 2, 1, RemoverSpec::Lifo)),
+            RateLimiter::Unlimited { min_size_to_sample: 1 },
+        );
+        for i in 0..4 {
+            t.insert_from(0, &tr(i as f32));
+        }
+        // Nothing evicted, nothing sampled: the line has no pressure cells.
+        let line = t.stats_line();
+        assert_eq!(line, "hot[n=4 in=4 out=0 stall i/s=0/0]");
+        for i in 4..7 {
+            t.insert_from(0, &tr(i as f32));
+        }
+        let s = t.stats_snapshot();
+        assert_eq!(s.evict_lifo, 3);
+        assert_eq!(s.evict_fifo + s.evict_lowest + s.evict_sampled, 0);
+        assert!(t.stats_line().contains(" evict=0/3/0/0"), "{}", t.stats_line());
+        // Sampling feeds the per-item counts, surfacing smax.
+        let mut rng = Rng::new(7);
+        let mut out = SampleBatch::default();
+        assert_eq!(t.try_sample(2, &mut rng, &mut out), SampleOutcome::Sampled);
+        let s = t.stats_snapshot();
+        assert!(s.max_times_sampled >= 1);
+        assert!(t.stats_line().contains(" smax="), "{}", t.stats_line());
     }
 
     #[test]

@@ -77,6 +77,40 @@ pub fn read_blob(path: impl AsRef<Path>, magic: &[u8; 8]) -> Result<Vec<u8>> {
     Ok(payload.to_vec())
 }
 
+/// As [`read_blob`], but accepting any of several file-kind magics —
+/// for formats whose magic carries a major revision (e.g. `PALSTAT1` /
+/// `PALSTAT2`), where old files must keep loading. Returns the payload
+/// and the index of the magic that matched.
+pub fn read_blob_any(path: impl AsRef<Path>, magics: &[&[u8; 8]]) -> Result<(Vec<u8>, usize)> {
+    let path = path.as_ref();
+    let bytes = std::fs::read(path).with_context(|| format!("opening {}", path.display()))?;
+    if bytes.len() < 8 + 4 {
+        bail!(
+            "{}: {} bytes is too short to be a PAL blob",
+            path.display(),
+            bytes.len()
+        );
+    }
+    let which = match magics.iter().position(|m| &bytes[..8] == m.as_slice()) {
+        Some(i) => i,
+        None => bail!(
+            "{}: bad magic (want one of {})",
+            path.display(),
+            magics
+                .iter()
+                .map(|m| format!("`{}`", String::from_utf8_lossy(*m)))
+                .collect::<Vec<_>>()
+                .join(" | ")
+        ),
+    };
+    let payload = &bytes[8..bytes.len() - 4];
+    let stored = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
+    if crc32(payload) != stored {
+        bail!("{}: corrupted (crc mismatch)", path.display());
+    }
+    Ok((payload.to_vec(), which))
+}
+
 /// Little-endian payload encoder.
 #[derive(Default)]
 pub struct ByteWriter {
@@ -154,6 +188,14 @@ impl ByteWriter {
 
     /// Length-prefixed u64 slice (u64 length).
     pub fn u64s(&mut self, v: &[u64]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    /// Length-prefixed u32 slice (u64 length).
+    pub fn u32s(&mut self, v: &[u32]) {
         self.u64(v.len() as u64);
         for &x in v {
             self.buf.extend_from_slice(&x.to_le_bytes());
@@ -274,6 +316,26 @@ impl<'a> ByteReader<'a> {
         Ok(out)
     }
 
+    /// Length-prefixed u32 slice written by [`ByteWriter::u32s`].
+    pub fn u32s(&mut self, what: &str) -> Result<Vec<u32>> {
+        let n = self.u64(what)? as usize;
+        let fits = match n.checked_mul(4).and_then(|b| self.pos.checked_add(b)) {
+            Some(end) => end <= self.buf.len(),
+            None => false,
+        };
+        if !fits {
+            bail!(
+                "truncated payload: `{what}` claims {n} u32s but only {} bytes remain",
+                self.buf.len() - self.pos
+            );
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()));
+        }
+        Ok(out)
+    }
+
     /// Error if any bytes remain unread (catches layout drift).
     pub fn expect_end(&self) -> Result<()> {
         if self.pos != self.buf.len() {
@@ -315,10 +377,12 @@ mod tests {
         let mut w = ByteWriter::new();
         w.bytes(b"nested payload");
         w.u64s(&[3, 1 << 40, 0]);
+        w.u32s(&[7, 0, 42]);
         let buf = w.finish();
         let mut r = ByteReader::new(&buf);
         assert_eq!(r.bytes("blob").unwrap(), b"nested payload");
         assert_eq!(r.u64s("indices").unwrap(), vec![3, 1 << 40, 0]);
+        assert_eq!(r.u32s("counts").unwrap(), vec![7, 0, 42]);
         assert!(r.expect_end().is_ok());
 
         let mut w = ByteWriter::new();
@@ -326,6 +390,23 @@ mod tests {
         let buf = w.finish();
         assert!(ByteReader::new(&buf).bytes("blob").is_err());
         assert!(ByteReader::new(&buf).u64s("indices").is_err());
+        assert!(ByteReader::new(&buf).u32s("counts").is_err());
+    }
+
+    #[test]
+    fn read_blob_any_matches_either_magic() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("pal_blob_any_test.bin");
+        write_blob(&path, b"PALTEST1", b"old payload").unwrap();
+        let (payload, which) = read_blob_any(&path, &[b"PALTEST2", b"PALTEST1"]).unwrap();
+        assert_eq!(payload, b"old payload");
+        assert_eq!(which, 1);
+        write_blob(&path, b"PALTEST2", b"new payload").unwrap();
+        let (payload, which) = read_blob_any(&path, &[b"PALTEST2", b"PALTEST1"]).unwrap();
+        assert_eq!(payload, b"new payload");
+        assert_eq!(which, 0);
+        assert!(read_blob_any(&path, &[b"PALOTHER"]).is_err());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -49,6 +49,7 @@ fn cfg() -> TrainConfig {
             alpha: None,
             beta: None,
             limit: None,
+            remove: None,
         },
         TableSpec {
             name: "aux".into(),
@@ -57,6 +58,7 @@ fn cfg() -> TrainConfig {
             alpha: None,
             beta: None,
             limit: None,
+            remove: None,
         },
     ];
     cfg
@@ -355,4 +357,80 @@ fn train_save_restore_roundtrip_with_artifacts() {
     let (_, stats2) = &r2.table_stats[0];
     assert!(stats2.inserts > stats.inserts, "resumed run must keep the old items");
     std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The committed legacy fixture (a hand-written PALSTAT1/v2 file: two
+/// uniform `1step` tables, `hot` = 5 rows and `cold` = 3 rows, capacity
+/// 16, obs 2 / act 1) must keep restoring under PALSTAT2 code — with a
+/// FIFO remover, zeroed eviction counters and zeroed sample counts
+/// defaulted in — and the restored service must keep evicting by each
+/// table's CONFIGURED policy, not the advisory one in the file.
+/// tools/remote_smoke.sh restores the same file into its multi-tenant
+/// server, so breaking v1 forward-compat fails CI twice.
+#[test]
+fn committed_palstat1_fixture_keeps_restoring() {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/palstat1/replay_state.bin");
+    let state =
+        ServiceState::load(&path).expect("the committed PALSTAT1 fixture must keep loading");
+    assert_eq!(state.tables.len(), 2);
+    for t in &state.tables {
+        assert_eq!(
+            t.remover,
+            pal_rl::replay::RemoverSpec::Fifo,
+            "legacy tables must decode with the FIFO default"
+        );
+        assert_eq!(t.stats.evict_fifo + t.stats.evict_lifo, 0);
+        assert_eq!(t.stats.max_times_sampled, 0);
+        for s in &t.buffer.shards {
+            assert!(s.sample_counts.iter().all(|&c| c == 0), "legacy sample counts must zero");
+        }
+    }
+
+    // The exact service shape the multi-tenant smoke serves this file to.
+    let mut cfg = TrainConfig::new("dqn", "CartPole-v1");
+    cfg.buffer = BufferKind::Uniform;
+    cfg.warmup_steps = 1;
+    cfg.rate_limit = RateLimitSpec::Unlimited;
+    cfg.tables =
+        TableSpec::parse_list("hot=1step@16,remove=lifo,cold=1step@16", cfg.gamma_nstep).unwrap();
+    let svc = build_service(&cfg, 2, 1).unwrap();
+    state.restore_into(&svc).expect("v1 file must restore into v2 tables");
+    let hot = svc.table("hot").unwrap();
+    let cold = svc.table("cold").unwrap();
+    assert_eq!((hot.len(), cold.len()), (5, 3));
+    assert_eq!(hot.stats_snapshot().inserts, 5);
+    assert_eq!(cold.stats_snapshot().inserts, 3);
+
+    // Overflow the restored tables: `hot` must evict by its configured
+    // LIFO policy, `cold` by the FIFO default.
+    let mut writer = svc.writer(0);
+    for i in 0..20usize {
+        writer.append(WriterStep {
+            obs: vec![i as f32; 2],
+            action: vec![0.5; 1],
+            next_obs: vec![i as f32 + 1.0; 2],
+            reward: 1.0,
+            done: false,
+            truncated: false,
+        });
+    }
+    let (hot_s, cold_s) = (hot.stats_snapshot(), cold.stats_snapshot());
+    assert_eq!(
+        (hot.len(), hot_s.inserts, hot_s.evict_lifo, hot_s.evict_fifo),
+        (16, 25, 9, 0),
+        "hot: 11 fills + 9 LIFO evictions over the 5 restored rows"
+    );
+    assert_eq!(
+        (cold.len(), cold_s.inserts, cold_s.evict_fifo, cold_s.evict_lifo),
+        (16, 23, 7, 0),
+        "cold: 13 fills + 7 FIFO evictions over the 3 restored rows"
+    );
+
+    // Sampling works and feeds the restored (zeroed) per-item counts.
+    let sampler = svc.default_sampler();
+    let mut rng = Rng::new(9);
+    let mut out = SampleBatch::default();
+    assert_eq!(sampler.try_sample(8, &mut rng, &mut out), SampleOutcome::Sampled);
+    assert!(hot.stats_snapshot().max_times_sampled >= 1);
 }

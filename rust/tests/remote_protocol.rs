@@ -270,7 +270,10 @@ fn stale_session_id_gets_a_fresh_session_not_a_panic() {
     // restart) must bind a fresh session, flagged un-resumed so the
     // client knows to re-ship everything.
     let mut client = RemoteClient::connect(&path).unwrap();
-    match client.call(&Request::Hello { rng_seed: 3, session: 0xDEAD_BEEF }).unwrap() {
+    match client
+        .call(&Request::Hello { rng_seed: 3, session: 0xDEAD_BEEF, tables: vec![] })
+        .unwrap()
+    {
         Response::Hello { session, resumed, next_seq, .. } => {
             assert!(!resumed, "unknown session id must not claim resumption");
             assert_ne!(session, 0xDEAD_BEEF, "server must mint its own id");
@@ -481,7 +484,7 @@ fn prop_truncated_session_requests_error_at_every_cut() {
     // valid encoding is an error, never a panic or a silent
     // misinterpretation.
     let reqs = [
-        Request::Hello { rng_seed: 0x5EED, session: 41 },
+        Request::Hello { rng_seed: 0x5EED, session: 41, tables: vec!["replay".into()] },
         Request::Append { actor_id: 3, seq: 17, dropped: 5, steps: vec![step(0), step(1)] },
         Request::Sample { table: "replay".into(), batch: 8, seq: 9 },
     ];

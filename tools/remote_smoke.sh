@@ -11,6 +11,14 @@
 # appends, lockstep two-level sampling, chunked per-server checkpoints
 # byte-identical to in-process twins, and exact per-server Stats
 # accounting, ending in a Shutdown RPC to each server.
+#
+# A third phase starts one multi-tenant server — per-writer budgets, a
+# writers-per-table cap, LIFO eviction on its hot table, and the
+# COMMITTED legacy PALSTAT1 checkpoint restored at boot (the blocking
+# v1 forward-compat gate: serve exits nonzero if the old file stops
+# loading) — and runs `pal tenant-smoke` against it: two writers with
+# disjoint table ACLs plus a third bouncing off the writer cap, with
+# exact per-tenant insert/eviction/sample-count accounting over Stats.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -100,4 +108,36 @@ wait "$mesh_pid1"
 wait "$mesh_pid2"
 trap - EXIT
 
-echo "remote replay smoke OK ($dir): UDS phase + 2-server TCP mesh ($ep1 $ep2)"
+# --- Multi-tenant phase: budgets, ACLs, pluggable eviction, v1 restore. ---
+# Flags must mirror tenant-smoke's hard-coded arithmetic (budget 48,
+# writer cap 1, hot=LIFO@16, cold=FIFO@16, dims 2/1, free sampling),
+# and --restore-state points at the COMMITTED legacy PALSTAT1 fixture:
+# a server that can no longer read v1 files dies right here.
+tenant_socket="$dir/tenant.sock"
+./target/release/pal serve \
+  --socket "$tenant_socket" \
+  --buffer uniform --warmup 1 --rate-limit unlimited \
+  --tables "hot=1step@16,remove=lifo,cold=1step@16" \
+  --obs-dim 2 --act-dim 1 \
+  --writer-budget 48 --max-writers-per-table 1 \
+  --restore-state rust/tests/fixtures/palstat1 &
+tenant_pid=$!
+
+cleanup_tenant() {
+  kill "$tenant_pid" 2>/dev/null || true
+}
+trap cleanup_tenant EXIT
+
+for _ in $(seq 1 100); do
+  [ -S "$tenant_socket" ] && break
+  sleep 0.1
+done
+[ -S "$tenant_socket" ] || { echo "tenant server socket never appeared" >&2; exit 1; }
+
+./target/release/pal tenant-smoke --socket "$tenant_socket"
+
+# tenant-smoke ends with a Shutdown RPC.
+wait "$tenant_pid"
+trap - EXIT
+
+echo "remote replay smoke OK ($dir): UDS phase + 2-server TCP mesh ($ep1 $ep2) + multi-tenant phase"
