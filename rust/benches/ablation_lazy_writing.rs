@@ -1,40 +1,74 @@
 //! Ablation — lazy writing ON vs OFF (DESIGN.md §6 design choice).
 //!
+//!     cargo bench --bench ablation_lazy_writing -- [--test]
+//!
 //! Same K-ary two-lock buffer; the only difference is whether the
 //! storage copy happens outside the locks (paper §IV-D2) or inside the
 //! global tree lock. Workload: 2 inserter threads + 2 sampler/updater
 //! threads sharing one buffer — the regime lazy writing was designed
 //! for. Wide rows make the copy matter.
+//!
+//! Two paths are swept at every row width:
+//!   * direct — threads call the bare `PrioritizedReplay`;
+//!   * service — the same workload through `TrajectoryWriter` →
+//!     `Table` → `SamplerHandle`, so the ablation also covers the
+//!     admission-control surface production code actually uses.
+//!
+//! `--test` runs a small smoke configuration (CI).
 
 use pal_rl::replay::{PrioritizedConfig, PrioritizedReplay, ReplayBuffer, SampleBatch, Transition};
-use pal_rl::util::bench::Table;
+use pal_rl::service::{ItemKind, RateLimiter, ReplayService, SampleOutcome, Table, WriterStep};
+use pal_rl::util::bench::Table as Report;
+use pal_rl::util::cli::Args;
 use pal_rl::util::rng::Rng;
 use std::sync::Arc;
 use std::time::Instant;
 
-fn run(lazy: bool, obs_dim: usize) -> (f64, f64) {
-    let buf = Arc::new(PrioritizedReplay::new(PrioritizedConfig {
-        capacity: 50_000,
+const ACT_DIM: usize = 4;
+const CAPACITY: usize = 50_000;
+
+fn mk_buffer(lazy: bool, obs_dim: usize) -> Arc<dyn ReplayBuffer> {
+    Arc::new(PrioritizedReplay::new(PrioritizedConfig {
+        capacity: CAPACITY,
         obs_dim,
-        act_dim: 4,
+        act_dim: ACT_DIM,
         fanout: 64,
         alpha: 0.6,
         beta: 0.4,
         lazy_writing: lazy,
         shards: 1,
-    }));
-    let t = Transition {
+    }))
+}
+
+fn mk_transition(obs_dim: usize) -> Transition {
+    Transition {
         obs: vec![0.5; obs_dim],
-        action: vec![0.1; 4],
+        action: vec![0.1; ACT_DIM],
         next_obs: vec![0.6; obs_dim],
         reward: 1.0,
         done: false,
-    };
-    for _ in 0..20_000 {
+    }
+}
+
+fn mk_step(obs_dim: usize) -> WriterStep {
+    let t = mk_transition(obs_dim);
+    WriterStep {
+        obs: t.obs,
+        action: t.action,
+        next_obs: t.next_obs,
+        reward: t.reward,
+        done: false,
+        truncated: false,
+    }
+}
+
+/// Direct path: 2 inserters + 2 sampler/updaters on the bare buffer.
+fn run_direct(lazy: bool, obs_dim: usize, inserts: usize, rounds: usize) -> (f64, f64) {
+    let buf = mk_buffer(lazy, obs_dim);
+    let t = mk_transition(obs_dim);
+    for _ in 0..inserts {
         buf.insert(&t);
     }
-    let inserts = 20_000usize;
-    let rounds = 1_500usize;
     let t0 = Instant::now();
     std::thread::scope(|s| {
         for _ in 0..2 {
@@ -63,32 +97,99 @@ fn run(lazy: bool, obs_dim: usize) -> (f64, f64) {
     ((2 * inserts) as f64 / secs, (2 * rounds) as f64 / secs)
 }
 
-fn main() {
-    println!("Ablation — lazy writing (copies outside locks) vs copy-under-lock\n");
-    let mut t = Table::new(&[
-        "row width (f32)",
-        "lazy ins/s",
-        "locked ins/s",
-        "lazy rounds/s",
-        "locked rounds/s",
-        "insert speedup",
-    ]);
-    for &obs_dim in &[8usize, 64, 256, 1024] {
-        let (li, lr) = run(true, obs_dim);
-        let (ni, nr) = run(false, obs_dim);
-        t.row(vec![
-            (2 * obs_dim + 4 + 2).to_string(),
-            format!("{li:.0}"),
-            format!("{ni:.0}"),
-            format!("{lr:.0}"),
-            format!("{nr:.0}"),
-            format!("{:.2}x", li / ni),
-        ]);
-    }
-    t.print();
-    println!(
-        "\nexpected: the wider the transition row, the more the copy-under-\n\
-         lock variant serializes samplers behind inserters; lazy writing\n\
-         keeps sampling throughput flat as rows grow (paper §IV-D2)."
+/// Service path: the same 2+2 workload through `TrajectoryWriter` →
+/// `Table` → `SamplerHandle`, so lazy-on/off is also measured with the
+/// admission poll and table accounting in the loop.
+fn run_service(lazy: bool, obs_dim: usize, inserts: usize, rounds: usize) -> (f64, f64) {
+    let table = Table::new(
+        "replay",
+        ItemKind::OneStep,
+        mk_buffer(lazy, obs_dim),
+        RateLimiter::Unlimited { min_size_to_sample: 64 },
     );
+    let svc = Arc::new(ReplayService::new(vec![table]).expect("valid service"));
+    {
+        let mut w = svc.writer(99);
+        for _ in 0..inserts {
+            w.append(mk_step(obs_dim));
+        }
+    }
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for tid in 0..2 {
+            let svc = Arc::clone(&svc);
+            s.spawn(move || {
+                let mut w = svc.writer(tid);
+                for _ in 0..inserts {
+                    w.append(mk_step(obs_dim));
+                }
+            });
+        }
+        for tid in 0..2 {
+            let svc = Arc::clone(&svc);
+            s.spawn(move || {
+                let sampler = svc.default_sampler();
+                let mut rng = Rng::new(tid);
+                let mut out = SampleBatch::default();
+                for _ in 0..rounds {
+                    if let SampleOutcome::Sampled = sampler.try_sample(64, &mut rng, &mut out) {
+                        let tds: Vec<f32> = out.indices.iter().map(|_| rng.f32()).collect();
+                        sampler.update_priorities(&out.indices.clone(), &tds);
+                    }
+                }
+            });
+        }
+    });
+    let secs = t0.elapsed().as_secs_f64();
+    ((2 * inserts) as f64 / secs, (2 * rounds) as f64 / secs)
+}
+
+fn main() -> anyhow::Result<()> {
+    let a = Args::from_env()?;
+    let smoke = a.flag("test");
+    let obs_dims: &[usize] = if smoke { &[8, 256] } else { &[8, 64, 256, 1024] };
+    let inserts: usize = if smoke { 2_000 } else { 20_000 };
+    let rounds: usize = if smoke { 150 } else { 1_500 };
+
+    println!("Ablation — lazy writing (copies outside locks) vs copy-under-lock\n");
+    for (path, run) in [
+        ("direct", run_direct as fn(bool, usize, usize, usize) -> (f64, f64)),
+        ("service", run_service),
+    ] {
+        println!("{path} path:");
+        let mut t = Report::new(&[
+            "row width (f32)",
+            "lazy ins/s",
+            "locked ins/s",
+            "lazy rounds/s",
+            "locked rounds/s",
+            "insert speedup",
+        ]);
+        for &obs_dim in obs_dims {
+            let (li, lr) = run(true, obs_dim, inserts, rounds);
+            let (ni, nr) = run(false, obs_dim, inserts, rounds);
+            if smoke {
+                // Smoke mode gates only the deterministic part: both
+                // variants moved data on both paths.
+                assert!(li > 0.0 && ni > 0.0, "{path}: no inserts at width {obs_dim}");
+            }
+            t.row(vec![
+                (2 * obs_dim + ACT_DIM + 2).to_string(),
+                format!("{li:.0}"),
+                format!("{ni:.0}"),
+                format!("{lr:.0}"),
+                format!("{nr:.0}"),
+                format!("{:.2}x", li / ni.max(1e-9)),
+            ]);
+        }
+        t.print();
+        println!();
+    }
+    println!(
+        "expected: the wider the transition row, the more the copy-under-\n\
+         lock variant serializes samplers behind inserters; lazy writing\n\
+         keeps sampling throughput flat as rows grow (paper §IV-D2) — on\n\
+         both the direct and the service path."
+    );
+    Ok(())
 }

@@ -357,9 +357,13 @@ fn main() -> anyhow::Result<()> {
         j.push_str(&format!(
             "  ],\n  \"verdicts\": {{\"append_speedup_batch16_worst\": {}, \
              \"append_target\": 5.0, \"sample_wait_hidden_frac\": {hidden:.3}, \
-             \"sample_target\": 0.5}}\n}}\n",
+             \"sample_target\": 0.5}},\n",
             if speedup16.is_finite() { format!("{speedup16:.3}") } else { "null".into() },
         ));
+        j.push_str(
+            "  \"gate\": {\"append_speedup_batch16_worst\": {\"floor\": 1.0, \"tolerance\": 0.5}, \
+             \"sample_wait_hidden_frac\": {\"floor\": 0.0, \"tolerance\": 0.5}}\n}\n",
+        );
         std::fs::write(path, j)?;
         eprintln!("[fig_remote] results written to {path}");
     }

@@ -2,7 +2,8 @@
 //! limiters, against the direct-buffer path the service replaced.
 //!
 //!     cargo bench --bench fig_service -- \
-//!         [--writers 1,2,4] [--samplers N] [--steps N] [--capacity N] [--test]
+//!         [--writers 1,2,4] [--samplers N] [--steps N] [--capacity N] \
+//!         [--json PATH] [--test]
 //!
 //! Protocol: W writer threads each push `steps` synthetic env steps
 //! (64-step episodes) while S sampler threads draw batches and feed
@@ -17,7 +18,13 @@
 //! limited rows are *expected* to stall a side; their stall counters
 //! are part of the printed output, not a regression.
 //!
-//! `--test` runs a small smoke configuration (CI).
+//! `--test` runs a small smoke configuration (CI). `--json PATH` writes
+//! the machine-readable sweep (`BENCH_service.json` via
+//! tools/bench_smoke.sh); its gated verdict is the service/direct parity
+//! ratio (worst over writer counts) with a deliberately loose floor —
+//! shared 1-core runners are too noisy for the 0.9x in-program target,
+//! but a parity collapse (service path serializing on a new lock, say)
+//! still trips the gate.
 
 use pal_rl::replay::{
     PrioritizedConfig, PrioritizedReplay, ReplayBuffer, SampleBatch, Transition,
@@ -301,6 +308,8 @@ fn main() -> anyhow::Result<()> {
     // (writers, direct steps/s) baselines for the parity column.
     let mut direct_base: Vec<(usize, f64)> = Vec::new();
     let mut parity: Vec<(usize, f64)> = Vec::new();
+    // (config, writers, result, vs-direct) for the JSON artifact.
+    let mut jrows: Vec<(&'static str, usize, RunResult, f64)> = Vec::new();
     for &w in &writer_list {
         for cfg in &configs {
             let r = if cfg.tables.is_empty() {
@@ -349,6 +358,7 @@ fn main() -> anyhow::Result<()> {
                 r.sample_stalls.to_string(),
                 format!("{vs:.2}x"),
             ]);
+            jrows.push((cfg.name, w, r, vs));
         }
     }
     report.print();
@@ -366,5 +376,42 @@ fn main() -> anyhow::Result<()> {
         "(rate-limited rows stall by design; their stall columns are the limiter \
          doing its job, not a regression)"
     );
+
+    // --- Machine-readable output ---------------------------------------
+    if let Some(path) = a.get("json") {
+        let parity_worst = worst.is_finite().then_some(worst);
+        let fmt_opt = |v: Option<f64>| match v {
+            Some(v) => format!("{v:.3}"),
+            None => "null".into(),
+        };
+        let mut j = String::from("{\n  \"bench\": \"fig_service\",\n");
+        j.push_str(&format!(
+            "  \"config\": {{\"writers\": {writer_list:?}, \"samplers\": {samplers}, \
+             \"steps\": {steps}, \"capacity\": {capacity}, \"batch\": {BATCH}, \
+             \"smoke\": {smoke}}},\n"
+        ));
+        j.push_str("  \"rows\": [\n");
+        for (i, (name, w, r, vs)) in jrows.iter().enumerate() {
+            j.push_str(&format!(
+                "    {{\"config\": \"{name}\", \"writers\": {w}, \
+                 \"writer_steps_per_sec\": {:.1}, \"batches_per_sec\": {:.1}, \
+                 \"insert_stalls\": {}, \"sample_stalls\": {}, \"vs_direct\": {vs:.3}}}{}\n",
+                r.writer_steps_per_sec,
+                r.batches_per_sec,
+                r.insert_stalls,
+                r.sample_stalls,
+                if i + 1 < jrows.len() { "," } else { "" }
+            ));
+        }
+        j.push_str(&format!(
+            "  ],\n  \"verdicts\": {{\"service_parity_worst\": {}}},\n",
+            fmt_opt(parity_worst),
+        ));
+        j.push_str(
+            "  \"gate\": {\"service_parity_worst\": {\"floor\": 0.25, \"tolerance\": 0.5}}\n}\n",
+        );
+        std::fs::write(path, j)?;
+        eprintln!("[fig_service] results written to {path}");
+    }
     Ok(())
 }

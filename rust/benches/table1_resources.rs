@@ -110,6 +110,12 @@ fn main() {
         s.leaf_acquisitions,
     );
     println!(
+        "lock wait times: global {} avg; leaf {} avg (time spent blocked \
+         before each acquisition, separate from hold)",
+        fmt_ns((s.global_wait_ns / s.global_acquisitions.max(1)) as f64),
+        fmt_ns((s.leaf_wait_ns / s.leaf_acquisitions.max(1)) as f64),
+    );
+    println!(
         "storage copy time (outside locks, lazy writing): {} total",
         fmt_ns(s.storage_copy_ns as f64)
     );

@@ -585,6 +585,13 @@ impl Request {
                         td_abs.len()
                     );
                 }
+                // Reject poisonous priorities at the wire: a NaN stored
+                // into the sum tree corrupts every interior sum up to the
+                // root permanently, and ±inf/negative values corrupt the
+                // sampling distribution. Decode failure → error frame.
+                if let Some(bad) = td_abs.iter().find(|v| !v.is_finite() || **v < 0.0) {
+                    bail!("priority update carries invalid |TD| value {bad} (must be finite and non-negative)");
+                }
                 Request::UpdatePriorities { table, indices, td_abs, seq: r.u64("request seq")? }
             }
             OP_STATS => Request::Stats,

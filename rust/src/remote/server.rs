@@ -957,9 +957,11 @@ fn dispatch_cold(
                         ),
                     };
                 }
-                if let Some(bad) = td_abs.iter().find(|v| !v.is_finite()) {
+                // Defense in depth: decode already rejects these, but an
+                // in-process caller could hand-build the request.
+                if let Some(bad) = td_abs.iter().find(|v| !v.is_finite() || **v < 0.0) {
                     return Response::Error {
-                        message: format!("non-finite priority value {bad} rejected"),
+                        message: format!("invalid priority value {bad} rejected"),
                     };
                 }
                 let idx: Vec<usize> = indices.iter().map(|&i| i as usize).collect();

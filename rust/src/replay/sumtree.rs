@@ -34,6 +34,20 @@ fn store(a: &AtomicU32, v: f32) {
     a.store(v.to_bits(), Ordering::Relaxed)
 }
 
+/// Hint the hardware prefetcher at a node about to be scanned. A pure
+/// hint: any address is safe to prefetch, and the fallback on
+/// non-x86-64 targets is a no-op.
+#[inline(always)]
+#[allow(unused_variables)]
+fn prefetch(slot: &AtomicU32) {
+    #[cfg(target_arch = "x86_64")]
+    // Safety: prefetch never faults; it is advisory for any address.
+    unsafe {
+        use std::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+        _mm_prefetch::<_MM_HINT_T0>(slot as *const AtomicU32 as *const i8);
+    }
+}
+
 /// K-ary sum tree with the paper's implicit cache-aligned layout.
 pub struct KArySumTree {
     /// Fan-out K. Power of two, `K % NODES_PER_LINE == 0` unless K == 2
@@ -64,6 +78,105 @@ fn min_enc(v: f32) -> f32 {
         v
     } else {
         f32::INFINITY
+    }
+}
+
+/// Scan one sibling group for the first strictly-positive child whose
+/// running sum crosses `prefix`, returning `(child, sum before child)`.
+///
+/// The scan is chunked by cache line (paper §IV-C5b): each 16-node line
+/// is summed as a block — with the *next* line prefetched while this one
+/// is summed — and only the line containing the crossing is examined
+/// child-by-child. Groups smaller than a line degrade to one block of
+/// group size, i.e. the plain scalar scan.
+///
+/// Clamp semantics match the scalar scan: with `prefix` beyond the group
+/// total the last strictly-positive child wins, and an all-zero group
+/// (benign race with a lazy insert) falls back to the rightmost child.
+fn pick_child(group: &[AtomicU32], prefix: f32) -> (usize, f32) {
+    let k = group.len();
+    let mut partial = 0.0f32;
+    // Last line that held a strictly-positive child, and the running sum
+    // at its start — revisited only on the beyond-total clamp path.
+    let mut pos_line = usize::MAX;
+    let mut pos_line_partial = 0.0f32;
+    let mut c = 0usize;
+    while c < k {
+        let end = (c + NODES_PER_LINE).min(k);
+        if end < k {
+            prefetch(&group[end]); // next sibling line, overlapped with this sum
+        }
+        let mut line_sum = 0.0f32;
+        let mut any_pos = false;
+        for slot in &group[c..end] {
+            let v = load(slot);
+            line_sum += v;
+            any_pos |= v > 0.0;
+        }
+        if any_pos {
+            if partial + line_sum >= prefix {
+                // With non-negative children the crossing child is in this
+                // line (the last positive child's running sum reaches the
+                // line total, which crossed).
+                return scan_line(group, c, end, partial, prefix);
+            }
+            pos_line = c;
+            pos_line_partial = partial;
+        }
+        partial += line_sum;
+        c = end;
+    }
+    if pos_line != usize::MAX {
+        // `prefix` beyond the subtree total (top-level clamp, fp drift or
+        // a poisoned block sum): take the LAST strictly-positive child.
+        let end = (pos_line + NODES_PER_LINE).min(k);
+        let mut p = pos_line_partial;
+        let mut child = k - 1;
+        let mut before = p;
+        for (j, slot) in group[pos_line..end].iter().enumerate() {
+            let v = load(slot);
+            if v > 0.0 {
+                child = pos_line + j;
+                before = p;
+            }
+            p += v;
+        }
+        (child, before)
+    } else {
+        // Subtree transiently all-zero (benign race with a lazy insert);
+        // descend rightmost like the historical behavior.
+        (k - 1, partial)
+    }
+}
+
+/// Child-by-child scan of `group[c..end]`, the line holding the crossing.
+#[inline]
+fn scan_line(
+    group: &[AtomicU32],
+    c: usize,
+    end: usize,
+    mut partial: f32,
+    prefix: f32,
+) -> (usize, f32) {
+    let mut last_pos = usize::MAX;
+    let mut last_pos_before = 0.0f32;
+    for (j, slot) in group[c..end].iter().enumerate() {
+        let v = load(slot);
+        if v > 0.0 {
+            last_pos = c + j;
+            last_pos_before = partial;
+            if partial + v >= prefix {
+                return (c + j, partial);
+            }
+        }
+        partial += v;
+    }
+    if last_pos != usize::MAX {
+        // Reachable only when fp drift or a concurrent update defeats the
+        // block-level test; clamp to the line's last positive child.
+        (last_pos, last_pos_before)
+    } else {
+        (end - 1, partial)
     }
 }
 
@@ -174,7 +287,19 @@ impl KArySumTree {
     /// holds `last_level_lock` (and `global_tree_lock`) around this.
     #[inline]
     pub fn set_leaf(&self, idx: usize, value: f32) -> f32 {
-        debug_assert!(value >= 0.0, "priorities are non-negative");
+        debug_assert!(
+            value.is_finite() && value >= 0.0,
+            "priorities are finite and non-negative"
+        );
+        // Release-build last line of defense: a NaN stored here would
+        // poison every interior sum up to the root permanently, and
+        // ±inf/negative values corrupt the sampling distribution for the
+        // whole table. Map them to 0 (unsampleable) instead.
+        let value = if value.is_finite() && value >= 0.0 {
+            value
+        } else {
+            0.0
+        };
         let slot = self.leaf_slot(idx);
         let old = load(slot);
         store(slot, value);
@@ -192,22 +317,35 @@ impl KArySumTree {
     /// path are recomputed from their K children (mins cannot be
     /// updated incrementally). The `delta == 0` early return is safe
     /// for the min tree too: zero delta means the leaf value — and
-    /// hence its min encoding — did not change.
+    /// hence its min encoding — did not change. The min recompute stops
+    /// at the first level whose group minimum comes out unchanged: if a
+    /// group's min did not move, no ancestor's min can have moved either,
+    /// so only the sums still need the delta above that point.
     pub fn propagate(&self, idx: usize, delta: f32) {
         if delta == 0.0 {
             return;
         }
+        let fanout = self.fanout;
         let mut i = idx;
+        let mut min_live = self.min_nodes.is_some();
         // Walk levels H-2 .. 0 (all interior levels including the root).
         for lvl in (0..self.height - 1).rev() {
-            let parent = i / self.fanout;
-            if let Some(min) = &self.min_nodes {
-                let base = self.level_off[lvl + 1] + parent * self.fanout;
+            let parent = i / fanout;
+            if min_live {
+                let min = self.min_nodes.as_ref().unwrap();
+                let base = self.level_off[lvl + 1] + parent * fanout;
                 let mut m = f32::INFINITY;
-                for c in 0..self.fanout {
+                for c in 0..fanout {
                     m = m.min(load(&min[base + c]));
                 }
-                store(&min[self.level_off[lvl] + parent], m);
+                let slot = &min[self.level_off[lvl] + parent];
+                // Bitwise compare is exact here: min encodings are +inf or
+                // strictly-positive finite values, never -0.0.
+                if load(slot).to_bits() == m.to_bits() {
+                    min_live = false;
+                } else {
+                    store(slot, m);
+                }
             }
             i = parent;
             let slot = &self.nodes[self.level_off[lvl] + i];
@@ -255,49 +393,29 @@ impl KArySumTree {
     /// leaf. Returns `(leaf_index, leaf_priority)`.
     ///
     /// Θ((log_K N)·K) node visits, with K/C cache misses per level thanks
-    /// to the aligned group layout (paper §IV-C5b).
+    /// to the aligned group layout (paper §IV-C5b). The K-child scan runs
+    /// cache-line by cache-line: each 16-node line is summed as a block
+    /// (prefetching the next sibling line while it is summed) and only
+    /// the line containing the crossing is examined child-by-child.
     pub fn prefix_sum_index(&self, mut prefix: f32) -> (usize, f32) {
+        let fanout = self.fanout;
         let mut i = 0usize; // node index within its level
         for lvl in 1..self.height {
-            let base = self.level_off[lvl] + i * self.fanout;
-            // Single forward scan of the K children (contiguous,
-            // cache-aligned): pick the first strictly-positive child whose
-            // running sum crosses `prefix`. The last strictly-positive
-            // child seen so far doubles as the fallback for fp drift /
-            // beyond-total clamping, so zero-priority children are never
-            // descended into while the subtree holds positive mass — with
-            // no rescans of the sibling group.
-            let mut partial = 0.0f32;
-            let mut chosen = usize::MAX;
-            let mut chosen_before = 0.0f32;
-            let mut last_pos = usize::MAX;
-            let mut last_pos_before = 0.0f32;
-            for child in 0..self.fanout {
-                let v = load(&self.nodes[base + child]);
-                if v > 0.0 {
-                    last_pos = child;
-                    last_pos_before = partial;
-                    if partial + v >= prefix {
-                        chosen = child;
-                        chosen_before = partial;
-                        break;
-                    }
-                }
-                partial += v;
+            let row = i * fanout; // index of node i's first child
+            let base = self.level_off[lvl] + row;
+            let (child, before) = pick_child(&self.nodes[base..base + fanout], prefix);
+            // Start pulling the chosen child's own sibling group while the
+            // bookkeeping below retires, so the next level's scan begins
+            // with its first line already in flight.
+            if lvl + 1 < self.height {
+                prefetch(&self.nodes[self.level_off[lvl + 1] + (row + child) * fanout]);
             }
-            let (child, before) = if chosen != usize::MAX {
-                (chosen, chosen_before)
-            } else if last_pos != usize::MAX {
-                // No crossing (prefix beyond the subtree total): clamp to
-                // the last strictly-positive child.
-                (last_pos, last_pos_before)
-            } else {
-                // Subtree transiently all-zero (benign race with a lazy
-                // insert); descend rightmost like the historical behavior.
-                (self.fanout - 1, partial)
-            };
-            prefix -= before;
-            i = i * self.fanout + child;
+            // Clamp: the all-zero fallback (or fp drift / a poisoned node)
+            // can make `before` exceed `prefix`; a negative — or NaN —
+            // prefix would deterministically bias every deeper level
+            // toward its first positive child.
+            prefix = (prefix - before).max(0.0);
+            i = row + child;
         }
         (i, self.get(i))
     }
@@ -570,6 +688,91 @@ mod tests {
         plain.update(3, 1.0);
         assert!(!plain.tracks_min());
         assert_eq!(plain.min_leaf(), None);
+    }
+
+    #[test]
+    fn poisoned_interior_node_does_not_derail_descent() {
+        // A NaN interior node (e.g. written by a buggy caller before the
+        // decode/table-surface validation existed) makes `before` NaN for
+        // the level that scans it. Without the `(prefix - before).max(0.0)`
+        // clamp the NaN propagates into `prefix` and every deeper level
+        // degrades to its *last* positive child; with the clamp the
+        // descent recovers deterministically at the next level.
+        let t = KArySumTree::new(64, 4); // height 4: root, 4, 16, 64
+        t.update(1, 0.5); // under L2 node 0
+        t.update(8, 0.3); // under L2 node 2
+        t.update(9, 1.0); // under L2 node 2
+        // Poison L2 node 1 (its subtree holds zero mass).
+        store(&t.nodes[t.level_off[2] + 1], f32::NAN);
+        let (idx, p) = t.prefix_sum_index(1.7);
+        assert_eq!(idx, 8, "clamped descent picks the first positive leaf");
+        assert_eq!(p, 0.3);
+    }
+
+    #[test]
+    fn all_zero_fallback_stays_in_range() {
+        let t = KArySumTree::new(16, 4);
+        t.update(15, 5.0);
+        // Tear the leaf like a lazy insert: zero it WITHOUT propagating,
+        // so interior levels still claim the mass.
+        let delta = t.set_leaf(15, 0.0);
+        let (idx, p) = t.prefix_sum_index(3.0);
+        // The descent lands in the now all-zero subtree and must fall
+        // back in-range (rightmost leaf of the claimed subtree).
+        assert_eq!(idx, 15);
+        assert_eq!(p, 0.0);
+        // Completing the split update restores the invariant.
+        t.propagate(15, delta);
+        assert_eq!(t.total(), 0.0);
+        assert!(t.invariant_error() < 1e-6);
+    }
+
+    #[test]
+    fn set_leaf_sanitizes_in_release_builds() {
+        // The debug_assert fires in debug builds, so exercise the
+        // release-path sanitization only when it is compiled out.
+        if cfg!(debug_assertions) {
+            return;
+        }
+        let t = KArySumTree::new(8, 4);
+        t.update(0, 1.0);
+        t.update(1, f32::NAN);
+        t.update(2, f32::INFINITY);
+        t.update(3, -4.0);
+        assert_eq!(t.get(1), 0.0);
+        assert_eq!(t.get(2), 0.0);
+        assert_eq!(t.get(3), 0.0);
+        assert!((t.total() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn min_plane_skip_matches_bruteforce_under_churn() {
+        // The propagate() min recompute stops at the first level whose
+        // group minimum is unchanged; a mirrored brute-force min after
+        // every update proves the skip never goes stale.
+        let t = KArySumTree::new_with_min(256, 16);
+        let mut rng = Rng::new(41);
+        let mut mirror = vec![0.0f32; 256];
+        for step in 0..400 {
+            let i = rng.below_usize(256);
+            // Mix removals with small and large priorities so group
+            // minima frequently stay unchanged and the skip is exercised.
+            let v = match step % 4 {
+                0 => 0.0,
+                1 => 0.5 + rng.f32(),
+                _ => 10.0 + rng.f32(),
+            };
+            t.update(i, v);
+            mirror[i] = v;
+            let mut best: Option<(usize, f32)> = None;
+            for (j, &p) in mirror.iter().enumerate() {
+                if p > 0.0 && best.is_none_or(|(_, bv)| p < bv) {
+                    best = Some((j, p));
+                }
+            }
+            assert_eq!(t.min_leaf(), best, "step {step}");
+        }
+        assert!(t.invariant_error() < 1e-4);
     }
 
     #[test]

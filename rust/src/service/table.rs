@@ -233,8 +233,22 @@ impl Table {
     }
 
     /// Feed |TD| errors back for sampled indices.
+    ///
+    /// This is the table's public update surface, so invalid |TD| values
+    /// are sanitized here: a NaN or +inf flowing into the sum tree would
+    /// poison interior sums up to the root (breaking sampling for the
+    /// whole table), so non-finite and negative values clamp to 0 — the
+    /// minimum-priority encoding — instead.
     pub fn update_priorities(&self, indices: &[usize], td_abs: &[f32]) {
-        self.buffer.update_priorities(indices, td_abs);
+        if td_abs.iter().any(|v| !v.is_finite() || *v < 0.0) {
+            let cleaned: Vec<f32> = td_abs
+                .iter()
+                .map(|&v| if v.is_finite() && v >= 0.0 { v } else { 0.0 })
+                .collect();
+            self.buffer.update_priorities(indices, &cleaned);
+        } else {
+            self.buffer.update_priorities(indices, td_abs);
+        }
         self.stats.priority_updates.fetch_add(indices.len(), Ordering::Relaxed);
     }
 
@@ -430,6 +444,39 @@ mod tests {
         // One more insert unblocks one more batch.
         t.insert_from(0, &tr(9.0));
         assert_eq!(t.try_sample(2, &mut rng, &mut out), SampleOutcome::Sampled);
+    }
+
+    #[test]
+    fn invalid_priorities_sanitized_at_table_surface() {
+        use crate::replay::{PrioritizedConfig, PrioritizedReplay};
+        let t = Table::new(
+            "p",
+            ItemKind::OneStep,
+            Arc::new(PrioritizedReplay::new(PrioritizedConfig {
+                capacity: 16,
+                obs_dim: 2,
+                act_dim: 1,
+                ..Default::default()
+            })),
+            RateLimiter::Unlimited { min_size_to_sample: 1 },
+        );
+        for i in 0..8 {
+            t.insert_from(0, &tr(i as f32));
+        }
+        // Regression: +inf used to flow through (|TD| + ε)^α = inf into
+        // the tree and poison the root, breaking sampling for the whole
+        // table; NaN and negatives are equally invalid. All must clamp
+        // to the minimum (ε-derived) priority at this public surface.
+        t.update_priorities(&[0, 1, 2], &[f32::INFINITY, f32::NAN, -3.0]);
+        assert!(t.total_priority().is_finite());
+        let mut rng = Rng::new(7);
+        let mut out = SampleBatch::default();
+        assert_eq!(t.try_sample(4, &mut rng, &mut out), SampleOutcome::Sampled);
+        assert!(out.priorities.iter().all(|p| p.is_finite() && *p > 0.0));
+        // Valid updates in the same batch as invalid ones still apply.
+        t.update_priorities(&[3, 4], &[2.0, f32::INFINITY]);
+        assert!(t.total_priority().is_finite());
+        assert_eq!(t.stats_snapshot().priority_updates, 5);
     }
 
     #[test]

@@ -229,6 +229,73 @@ fn server_survives_garbage_streams_and_bad_payloads() {
 }
 
 #[test]
+fn invalid_priority_values_rejected_at_decode() {
+    // Regression: NaN/negative/±inf |TD| values used to decode cleanly
+    // and flow into `set_leaf`, where a NaN permanently poisons every
+    // interior sum up to the root.
+    for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -1.0] {
+        let req = Request::UpdatePriorities {
+            table: "replay".into(),
+            indices: vec![0],
+            td_abs: vec![bad],
+            seq: 0,
+        };
+        match Request::decode(&req.encode()) {
+            Err(e) => {
+                let msg = e.to_string();
+                assert!(msg.contains("invalid |TD|"), "{msg}");
+            }
+            Ok(got) => panic!("invalid |TD| {bad} decoded to {got:?}"),
+        }
+    }
+    // Valid values still decode and roundtrip.
+    let ok = Request::UpdatePriorities {
+        table: "replay".into(),
+        indices: vec![0, 1],
+        td_abs: vec![0.0, 2.5],
+        seq: 1,
+    };
+    assert_eq!(Request::decode(&ok.encode()).unwrap(), ok);
+}
+
+#[test]
+fn nan_priority_update_answered_with_error_frame() {
+    let service = tiny_service();
+    let (path, handle) = start_server(Arc::clone(&service));
+    let mut s = UnixStream::connect(&path).unwrap();
+    // The encoder does not validate (the decoder is the gate), so a
+    // hostile/buggy client CAN put a NaN on the wire.
+    let req = Request::UpdatePriorities {
+        table: "replay".into(),
+        indices: vec![0],
+        td_abs: vec![f32::NAN],
+        seq: 0,
+    };
+    let mut buf = Vec::new();
+    write_frame(&mut buf, &req.encode()).unwrap();
+    s.write_all(&buf).unwrap();
+    let frame = read_frame(&mut s).unwrap().expect("error frame expected");
+    match Response::decode(&frame).unwrap() {
+        Response::Error { message } => {
+            assert!(message.contains("bad request"), "{message}");
+            assert!(message.contains("invalid |TD|"), "{message}");
+        }
+        other => panic!("NaN priority update got {other:?}"),
+    }
+    // The frame was well-formed, so the connection survives...
+    let probe = Request::Stats;
+    let mut buf = Vec::new();
+    write_frame(&mut buf, &probe.encode()).unwrap();
+    s.write_all(&buf).unwrap();
+    let frame = read_frame(&mut s).unwrap().expect("stats after rejected update");
+    assert!(matches!(Response::decode(&frame).unwrap(), Response::Stats { .. }));
+    // ...and the table was never touched.
+    assert_eq!(service.table("replay").unwrap().stats_snapshot().priority_updates, 0);
+    drop(s);
+    stop_server(&path, handle);
+}
+
+#[test]
 fn replayed_append_seq_is_deduped_over_the_wire() {
     let service = tiny_service();
     let (path, handle) = start_server(Arc::clone(&service));

@@ -1,14 +1,24 @@
 #!/usr/bin/env python3
-"""Compare a fresh BENCH_remote.json against the committed baseline.
+"""Compare a fresh BENCH_*.json artifact against its committed baseline.
 
-Wall-clock absolutes are meaningless across runners, so the gate is on
-RATIOS — the append batch-16 speedup over batch-1, and the fraction of
-the per-batch sample wait hidden by prefetch — with a wide tolerance:
-a fresh ratio may dip to half the baseline's before the step fails.
-Hard floors only assert the optimizations never make things WORSE
-(speedup >= 1.0, hidden fraction >= 0.0), so a shared-runner hiccup
-cannot fail CI but a real regression (batching or prefetch effectively
-disabled) still does.
+Wall-clock absolutes are meaningless across runners, so every gate is on
+RATIOS: each bench artifact carries a `verdicts` map (name -> ratio) and
+a `gate` map (name -> {"floor": f, "tolerance": t}) describing how far a
+fresh ratio may dip below the committed baseline's before the step
+fails. `floor` is the hard minimum asserting the optimization never
+makes things WORSE regardless of baseline drift; `tolerance` (falling
+back to --tolerance when a gate omits it) scales the baseline into the
+required value:
+
+    need = max(floor, tolerance * baseline_ratio)
+
+A shared-runner hiccup cannot fail CI under a 0.5 tolerance, but a real
+regression (batching disabled, sharding broken, descent pessimized)
+still does. Verdict keys present in only one of the two files are
+reported and skipped, so sweeps can grow new verdicts without breaking
+the compare against an older baseline. One script gates every artifact:
+BENCH_remote.json, BENCH_sumtree.json, BENCH_service.json,
+BENCH_sharding.json.
 
 Usage: tools/bench_compare.py FRESH BASELINE [--tolerance 0.5]
 """
@@ -17,54 +27,67 @@ import argparse
 import json
 import sys
 
+# Gates for artifacts predating the embedded `gate` map (the PR-7-era
+# BENCH_remote.json layout, where floors lived in this script).
+LEGACY_GATES = {
+    "fig_remote": {
+        "append_speedup_batch16_worst": {"floor": 1.0},
+        "sample_wait_hidden_frac": {"floor": 0.0},
+    },
+}
+
 
 def load(path):
     with open(path) as f:
         data = json.load(f)
-    if data.get("bench") != "fig_remote":
-        sys.exit(f"{path}: not a fig_remote result (bench = {data.get('bench')!r})")
+    if not isinstance(data.get("bench"), str):
+        sys.exit(f"{path}: missing `bench` name")
+    if not isinstance(data.get("verdicts"), dict):
+        sys.exit(f"{path}: missing `verdicts` map")
     return data
 
 
 def main():
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("fresh", help="just-produced BENCH_remote.json")
+    ap = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter
+    )
+    ap.add_argument("fresh", help="just-produced BENCH_*.json")
     ap.add_argument("baseline", help="committed baseline to diff against")
     ap.add_argument(
         "--tolerance",
         type=float,
         default=0.5,
-        help="fresh ratio must reach this fraction of the baseline's (default 0.5)",
+        help="default fraction of the baseline a fresh ratio must reach "
+        "when a gate entry has no tolerance of its own (default 0.5)",
     )
     args = ap.parse_args()
     fresh, base = load(args.fresh), load(args.baseline)
 
-    failures = []
+    if fresh["bench"] != base["bench"]:
+        sys.exit(
+            f"bench mismatch: fresh is {fresh['bench']!r}, "
+            f"baseline is {base['bench']!r}"
+        )
 
-    def gate(name, f, b, floor):
+    gates = fresh.get("gate") or base.get("gate") or LEGACY_GATES.get(fresh["bench"])
+    if not gates:
+        sys.exit(f"{args.fresh}: no `gate` map and no legacy gate for {fresh['bench']!r}")
+
+    failures = []
+    fv, bv = fresh["verdicts"], base["verdicts"]
+    for name, spec in sorted(gates.items()):
+        f, b = fv.get(name), bv.get(name)
         if f is None or b is None:
-            # A custom sweep may omit batch 16; the ratio is then null.
+            # A custom/smoke sweep may omit a verdict; skip, don't fail.
             print(f"{name}: missing (fresh {f}, baseline {b}) -- skipped")
-            return
-        need = max(floor, args.tolerance * b)
+            continue
+        floor = float(spec.get("floor", 0.0))
+        tol = float(spec.get("tolerance", args.tolerance))
+        need = max(floor, tol * b)
         verdict = "OK" if f >= need else "REGRESSION"
         print(f"{name}: fresh {f:.3f} vs baseline {b:.3f} (need >= {need:.3f}) [{verdict}]")
         if f < need:
             failures.append(name)
-
-    fv, bv = fresh.get("verdicts", {}), base.get("verdicts", {})
-    gate(
-        "append_speedup_batch16_worst",
-        fv.get("append_speedup_batch16_worst"),
-        bv.get("append_speedup_batch16_worst"),
-        1.0,
-    )
-    gate(
-        "sample_wait_hidden_frac",
-        fv.get("sample_wait_hidden_frac"),
-        bv.get("sample_wait_hidden_frac"),
-        0.0,
-    )
 
     if fresh.get("config") != base.get("config"):
         print(
@@ -74,7 +97,7 @@ def main():
 
     if failures:
         sys.exit("bench compare FAILED: " + ", ".join(failures))
-    print("bench compare OK")
+    print(f"bench compare OK ({fresh['bench']}: {len(gates)} gate(s))")
 
 
 if __name__ == "__main__":

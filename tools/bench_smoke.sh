@@ -1,22 +1,45 @@
 #!/usr/bin/env bash
-# CI bench smoke: run EVERY fig* bench in its `--test` configuration so
-# a bench that stops compiling or starts crashing fails the build
-# instead of silently rotting. The list is discovered from the tree, so
-# new fig* benches are swept automatically. fig_remote is skipped here:
+# CI bench smoke: run EVERY fig* bench (plus the ablation bench, which
+# the glob misses) in its `--test` configuration so a bench that stops
+# compiling or starts crashing fails the build instead of silently
+# rotting. The list is discovered from the tree, so new fig* benches
+# are swept automatically. fig_remote is skipped here:
 # tools/bench_remote.sh runs the same --test sweep (and writes
 # BENCH_remote.json) as its own CI step — running the real-socket sweep
 # twice per push buys nothing.
+#
+# Benches with a --json mode also write their smoke-sized BENCH_*.json
+# artifact at the repo root, so the compare step and the artifact trail
+# cover every fig bench, not just fig_remote.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+# bench name -> committed artifact it refreshes (empty = no JSON mode).
+json_out() {
+    case "$1" in
+        fig9_sumtree)  echo "BENCH_sumtree.json" ;;
+        fig_service)   echo "BENCH_service.json" ;;
+        fig13_sharding) echo "BENCH_sharding.json" ;;
+        *) echo "" ;;
+    esac
+}
+
 status=0
-for src in rust/benches/fig*.rs; do
+for src in rust/benches/fig*.rs rust/benches/ablation_lazy_writing.rs; do
     bench="$(basename "$src" .rs)"
     if [ "$bench" = "fig_remote" ]; then
         continue
     fi
-    echo "::group::bench $bench --test"
-    if ! cargo bench --bench "$bench" -- --test; then
+    out="$(json_out "$bench")"
+    args=(--test)
+    if [ -n "$out" ]; then
+        # Absolute path: cargo runs bench binaries with cwd set to the
+        # package root (rust/), not the workspace root this script
+        # cd'd to.
+        args+=(--json "$PWD/$out")
+    fi
+    echo "::group::bench $bench -- ${args[*]}"
+    if ! cargo bench --bench "$bench" -- "${args[@]}"; then
         echo "FAILED: $bench"
         status=1
     fi
