@@ -20,6 +20,13 @@
 //! already-travelling response). The visible sample wait is timed
 //! per-iteration.
 //!
+//! Protocol, mesh side: one mesh learner over two replay servers runs
+//! the same draw-and-update loop with the level-1 mass adverts either
+//! re-polled every draw (`--mass-ttl` 0, the lockstep-deterministic
+//! mode) or cached for a few milliseconds, and reports the sampler's
+//! RPC counters (mass probes, sample calls) alongside throughput — the
+//! fan-out the TTL cache exists to shrink.
+//!
 //! Verdicts (advisory in --test mode — CI runners are too noisy to
 //! gate on wall-clock): batch 16 must lift append steps/s ≥ 5× over
 //! batch 1, and prefetch must hide ≥ 50% of the per-batch sample wait.
@@ -28,7 +35,10 @@
 //! (`BENCH_remote.json` via tools/bench_remote.sh) so later PRs have a
 //! perf baseline to diff against.
 
-use pal_rl::remote::{RemoteClient, RemoteSampler, RemoteWriter, ReplayServer, Request};
+use pal_rl::remote::{
+    ConnectionPolicy, Endpoint, MeshSampler, RemoteClient, RemoteSampler, RemoteWriter,
+    ReplayServer, Request,
+};
 use pal_rl::replay::{PrioritizedConfig, PrioritizedReplay, SampleBatch};
 use pal_rl::service::{
     ExperienceSampler, ExperienceWriter, ItemKind, RateLimiter, ReplayService, SampleOutcome,
@@ -40,7 +50,7 @@ use pal_rl::util::rng::Rng;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 const OBS_DIM: usize = 8;
 const ACT_DIM: usize = 2;
@@ -134,6 +144,8 @@ fn run_remote_append(writers: usize, batch: usize, steps: usize, capacity: usize
     // of magic/len/crc around the payload).
     let payload = Request::Append {
         actor_id: 0,
+        seq: 0,
+        dropped: 0,
         steps: (0..batch).map(mk_step).collect(),
     }
     .encode()
@@ -202,6 +214,55 @@ fn run_remote_sample(prefetch: bool, rounds: usize, batch: usize, capacity: usiz
         batches_per_sec: rounds as f64 / total.as_secs_f64(),
         mean_wait_us: wait.as_secs_f64() * 1e6 / rounds as f64,
         mean_iter_us: total.as_secs_f64() * 1e6 / rounds as f64,
+    }
+}
+
+struct MeshResult {
+    batches_per_sec: f64,
+    mass_rpcs: u64,
+    sample_rpcs: u64,
+}
+
+/// One mesh learner over two replay servers: `rounds` two-level draws
+/// (+ priority feedback) with the level-1 mass adverts either re-polled
+/// every draw (`mass_ttl_ms` = 0) or cached for the given TTL. Returns
+/// throughput plus the RPC counters the TTL cache exists to shrink.
+fn run_mesh_sample(mass_ttl_ms: u64, rounds: usize, batch: usize, capacity: usize) -> MeshResult {
+    let mut servers = Vec::new();
+    let mut eps = Vec::new();
+    for s in 0..2usize {
+        let service = mk_service(capacity);
+        let mut feeder = service.writer(s);
+        for i in 0..(batch * 4).max(1_024) {
+            feeder.append(mk_step(i));
+        }
+        drop(feeder);
+        let (path, handle) = start_server(Arc::clone(&service));
+        eps.push(Endpoint::Uds(path.clone()));
+        servers.push((path, handle));
+    }
+    let mut sampler = MeshSampler::connect_default(&eps, 13, ConnectionPolicy::default())
+        .expect("mesh sampler")
+        .with_mass_ttl(Duration::from_millis(mass_ttl_ms));
+    let mut rng = Rng::new(13);
+    let mut out = SampleBatch::default();
+    let tds: Vec<f32> = (0..batch).map(|j| (j % 7) as f32 * 0.3 + 0.1).collect();
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        let outcome = sampler.try_sample(batch, &mut rng, &mut out).expect("mesh sample");
+        assert_eq!(outcome, SampleOutcome::Sampled, "unlimited mesh stalled");
+        sampler.update_priorities(&out.indices, &tds).expect("mesh update");
+    }
+    let total = t0.elapsed();
+    let counters = sampler.counters();
+    drop(sampler);
+    for (path, handle) in servers {
+        stop_server(&path, handle);
+    }
+    MeshResult {
+        batches_per_sec: rounds as f64 / total.as_secs_f64(),
+        mass_rpcs: counters.mass_rpcs,
+        sample_rpcs: counters.sample_rpcs,
     }
 }
 
@@ -286,6 +347,23 @@ fn main() -> anyhow::Result<()> {
     }
     sreport.print();
 
+    // --- Mesh sample side ----------------------------------------------
+    let mesh_off = run_mesh_sample(0, rounds, learner_batch, capacity);
+    let mesh_on = run_mesh_sample(5, rounds, learner_batch, capacity);
+    println!("\nmesh sample path (2 servers, batch {learner_batch}, {rounds} rounds):");
+    let mut mreport =
+        Report::new(&["mass ttl", "batches/s", "mass RPCs", "sample RPCs", "RPCs/batch"]);
+    for (name, r) in [("0 (every draw)", &mesh_off), ("5 ms", &mesh_on)] {
+        mreport.row(vec![
+            name.into(),
+            format!("{:.0}", r.batches_per_sec),
+            r.mass_rpcs.to_string(),
+            r.sample_rpcs.to_string(),
+            format!("{:.2}", (r.mass_rpcs + r.sample_rpcs) as f64 / rounds as f64),
+        ]);
+    }
+    mreport.print();
+
     // --- Verdicts ------------------------------------------------------
     // Smallest batch-16 speedup across writer counts (5x target); the
     // batch list may omit 16 in a custom sweep, then it's skipped.
@@ -351,6 +429,18 @@ fn main() -> anyhow::Result<()> {
                 r.batches_per_sec,
                 r.mean_wait_us,
                 r.mean_iter_us,
+                if i == 0 { "," } else { "" }
+            ));
+        }
+        j.push_str("  ],\n  \"mesh\": [\n");
+        for (i, (ttl, r)) in [(0u64, &mesh_off), (5u64, &mesh_on)].iter().enumerate() {
+            j.push_str(&format!(
+                "    {{\"mass_ttl_ms\": {ttl}, \"batches_per_sec\": {:.1}, \
+                 \"mass_rpcs\": {}, \"sample_rpcs\": {}, \"rpcs_per_batch\": {:.3}}}{}\n",
+                r.batches_per_sec,
+                r.mass_rpcs,
+                r.sample_rpcs,
+                (r.mass_rpcs + r.sample_rpcs) as f64 / rounds as f64,
                 if i == 0 { "," } else { "" }
             ));
         }

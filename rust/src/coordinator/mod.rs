@@ -130,6 +130,13 @@ pub struct TrainConfig {
     /// unreachable drop oldest-first, counted in the server's
     /// `steps_dropped` stat once the link heals.
     pub spill_cap: usize,
+    /// Mesh mass-cache TTL in milliseconds (`--mass-ttl`): how long a
+    /// [`MeshSampler`] may reuse the per-server mass adverts before
+    /// re-polling (also bounded to a fixed number of draws). 0 probes
+    /// every draw — the exact-lockstep mode the determinism tests pin;
+    /// the default trades a few ms of staleness for N fewer RPCs per
+    /// batch. Ignored on local and single-server runs.
+    pub mass_ttl_ms: f64,
     /// Rate-limiter selection for every table (`--rate-limit`).
     pub rate_limit: RateLimitSpec,
     /// Run-state directory (`--save-state`): weights + replay-service
@@ -182,6 +189,7 @@ impl TrainConfig {
             rpc_timeout_secs: DEFAULT_RPC_TIMEOUT.as_secs_f64(),
             reconnect_deadline_secs: BackoffPolicy::default().deadline.as_secs_f64(),
             spill_cap: DEFAULT_SPILL_CAP,
+            mass_ttl_ms: 5.0,
             rate_limit: RateLimitSpec::Legacy,
             save_state: None,
             restore_state: None,
@@ -487,6 +495,8 @@ pub struct MeshFront {
     batch: usize,
     policy: ConnectionPolicy,
     spill_cap: usize,
+    /// Mass-advert cache TTL handed to every [`MeshSampler`].
+    mass_ttl: Duration,
     monitors: Vec<RemoteFront>,
 }
 
@@ -496,12 +506,13 @@ impl MeshFront {
         batch: usize,
         policy: ConnectionPolicy,
         spill_cap: usize,
+        mass_ttl: Duration,
     ) -> Self {
         let monitors = endpoints
             .iter()
             .map(|ep| RemoteFront::new(ep.clone(), batch, policy.clone(), spill_cap))
             .collect();
-        Self { endpoints, batch, policy, spill_cap, monitors }
+        Self { endpoints, batch, policy, spill_cap, mass_ttl, monitors }
     }
 
     /// Per-server stats, mesh order (one cached connection each).
@@ -569,6 +580,7 @@ impl ReplayFront {
                 batch,
                 cfg.connection_policy(),
                 cfg.spill_cap,
+                Duration::from_secs_f64((cfg.mass_ttl_ms / 1000.0).max(0.0)),
             ))),
         }
     }
@@ -611,9 +623,10 @@ impl ReplayFront {
                 RemoteSampler::connect_default_endpoint_with(&r.endpoint, seed, r.policy.clone())?
                     .with_prefetch(true),
             ),
-            ReplayFront::Mesh(m) => {
-                Box::new(MeshSampler::connect_default(&m.endpoints, seed, m.policy.clone())?)
-            }
+            ReplayFront::Mesh(m) => Box::new(
+                MeshSampler::connect_default(&m.endpoints, seed, m.policy.clone())?
+                    .with_mass_ttl(m.mass_ttl),
+            ),
         })
     }
 

@@ -17,7 +17,7 @@ use pal_rl::env::ENV_NAMES;
 use pal_rl::params::{AdamConfig, ParameterServer, TargetSync};
 use pal_rl::remote::{
     parse_endpoint_list, BackoffPolicy, ChaosConfig, ChaosProxy, ConnectionPolicy, Endpoint,
-    MeshSampler, MeshWriter, RemoteClient, RemoteSampler, RemoteWriter, ReplayServer,
+    HealthState, MeshSampler, MeshWriter, RemoteClient, RemoteSampler, RemoteWriter, ReplayServer,
 };
 use pal_rl::remote::TableInfo;
 use pal_rl::replay::{RemoverSpec, SampleBatch};
@@ -37,7 +37,7 @@ const TRAIN_FLAGS: &[&str] = &[
     "log-every", "curve-out", "eps-decay", "action-noise", "save-checkpoint",
     "n-step", "gamma-nstep", "tables", "rate-limit", "remove", "save-state",
     "restore-state", "checkpoint-every", "remote", "remote-batch",
-    "rpc-timeout", "reconnect-deadline", "spill-cap",
+    "rpc-timeout", "reconnect-deadline", "spill-cap", "mass-ttl",
 ];
 
 fn usage() -> ! {
@@ -54,6 +54,8 @@ USAGE:
   pal tenant-smoke --socket PATH
   pal mesh-smoke --endpoints EP1,EP2[,..] [--items N] [--capacity N] [--shards S]
   pal chaos-smoke [--dir DIR] [--seed S] [--steps-per-writer N] [--batches-per-sampler N] [--tcp]
+  pal mesh-chaos-smoke [--dir DIR] [--items N] [--capacity N] [--shards S]
+  pal drain --endpoint EP [--to EP1[,EP2..]] [--chunk BYTES]
   pal envs
   pal info  [--artifacts DIR]
 
@@ -129,6 +131,12 @@ TRAIN OPTIONS:
                       the server is unreachable (default 65536); past
                       the cap the oldest steps drop, counted in the
                       server's steps_dropped stat after the link heals
+  --mass-ttl MS       mesh only: how long learners may reuse a cached
+                      set of per-server mass adverts before re-probing
+                      (default 5 ms, also bounded to 64 draws; 0 =
+                      probe before every draw, the exact-lockstep
+                      mode mesh-smoke verifies). The probe doubles as
+                      the health check that drives failover
 
 SERVE OPTIONS (same table/buffer flags as train, plus):
   --socket PATH       Unix-domain socket to listen on
@@ -154,6 +162,19 @@ SERVE OPTIONS (same table/buffer flags as train, plus):
                       cap concurrent writer sessions per table
                       (0 = unlimited, the default); a writer claims
                       every table its hello ACL names, all or nothing
+  --drain-to LIST     default handoff peers for a `Drain` RPC that
+                      names none: when this server is told to leave
+                      the mesh (`pal drain`), it refuses new sessions,
+                      streams its tables to the first reachable peer
+                      in LIST over the chunked transfer stream, and
+                      exits cleanly
+
+  `drain` tells a running `pal serve` to leave the mesh: the server
+  stops admitting appends and new sessions, hands every table (rows,
+  priorities, drop counters) to the first reachable peer — `--to`
+  overrides the server's `--drain-to` list — and shuts down. Mesh
+  writers fail over to surviving servers; mesh samplers renormalize
+  their mass draw away from it.
 
   `state-smoke` is the CI durability gate: `--phase collect` drives a
   short synthetic writer/sampler run and saves its state; `--phase
@@ -193,6 +214,17 @@ SERVE OPTIONS (same table/buffer flags as train, plus):
   accounted for exactly once and the final checkpoint is byte-identical
   to an unfaulted in-process twin — including a writer pushed past its
   --spill-cap, whose dropped steps must land in steps_dropped.
+
+  `mesh-chaos-smoke` is the CI elasticity gate (kill-and-rejoin
+  drill): it starts a 3-server replay mesh in-process, soaks it with
+  affinity writers and a mass-proportional sampler, hard-kills one
+  server mid-run (survivors must keep sampling, the stranded writer
+  must fail over carrying its spilled steps), restarts the victim from
+  its checkpoint (the sampler must mark it Up again and resume drawing
+  from it, the writer must fail back home), then live-drains another
+  server into a peer — and fails unless the per-server Stats deltas
+  account for every append, sampled batch and priority update
+  mesh-wide, exactly.
 "
     );
     std::process::exit(2)
@@ -254,6 +286,10 @@ fn train_config_from(a: &Args) -> Result<TrainConfig> {
     if cfg.spill_cap == 0 {
         bail!("--spill-cap must be >= 1");
     }
+    cfg.mass_ttl_ms = a.parse_or("mass-ttl", cfg.mass_ttl_ms)?;
+    if !cfg.mass_ttl_ms.is_finite() || cfg.mass_ttl_ms < 0.0 {
+        bail!("--mass-ttl must be a finite number of milliseconds >= 0");
+    }
     if let Some(list) = a.get("remote") {
         // One endpoint = one server; several (comma-separated) = a
         // replay mesh. Duplicates are rejected here — a double-dialed
@@ -275,7 +311,7 @@ fn train_config_from(a: &Args) -> Result<TrainConfig> {
             );
         }
     } else {
-        for f in ["remote-batch", "rpc-timeout", "reconnect-deadline", "spill-cap"] {
+        for f in ["remote-batch", "rpc-timeout", "reconnect-deadline", "spill-cap", "mass-ttl"] {
             if a.has(f) {
                 eprintln!("[pal] WARNING: --{f} only applies to --remote runs; ignored");
             }
@@ -645,6 +681,7 @@ const SERVE_FLAGS: &[&str] = &[
     "warmup", "update-interval", "n-step", "gamma-nstep", "tables",
     "rate-limit", "remove", "obs-dim", "act-dim", "seed", "restore-state",
     "save-state", "drain-deadline", "writer-budget", "max-writers-per-table",
+    "drain-to",
 ];
 
 /// Set by [`on_stop_signal`] when the serving process receives SIGINT
@@ -708,10 +745,15 @@ fn cmd_serve(a: &Args) -> Result<()> {
             service.total_len()
         );
     }
+    let drain_peers = match a.get("drain-to") {
+        Some(list) => parse_endpoint_list(list)?,
+        None => Vec::new(),
+    };
     let server = ReplayServer::bind_endpoint(Arc::clone(&service), &endpoint, seed)?
         .expect_dims(obs_dim, act_dim)
         .with_drain_deadline(drain_deadline)
-        .with_quotas(writer_budget, max_writers);
+        .with_quotas(writer_budget, max_writers)
+        .with_drain_peers(drain_peers);
     // The RESOLVED endpoint: a `--tcp HOST:0` bind reports the real
     // port here, which is what scripts parse to build client endpoint
     // lists.
@@ -756,6 +798,32 @@ fn cmd_serve(a: &Args) -> Result<()> {
         );
     }
     eprintln!("[pal] replay server stopped — {}", service.stats_line());
+    Ok(())
+}
+
+const DRAIN_FLAGS: &[&str] = &["endpoint", "to", "chunk"];
+
+/// `pal drain`: tell a running `pal serve` to leave the mesh. The
+/// server stops admitting appends and new sessions, hands its tables
+/// to the first reachable peer over the chunked transfer stream —
+/// `--to` names the candidates, falling back to the server's own
+/// `--drain-to` list — and shuts down once the handoff lands. A failed
+/// handoff (no peers, all unreachable) leaves the server serving.
+fn cmd_drain(a: &Args) -> Result<()> {
+    a.check_known(DRAIN_FLAGS)?;
+    let ep =
+        Endpoint::parse(a.get("endpoint").ok_or_else(|| anyhow!("--endpoint EP required"))?)?;
+    // Parsed locally too, so a typo is an immediate CLI error instead
+    // of a refused drain reported by the server.
+    let peers: Vec<String> = match a.get("to") {
+        Some(list) => parse_endpoint_list(list)?.iter().map(|p| p.to_string()).collect(),
+        None => Vec::new(),
+    };
+    let chunk: u32 = a.parse_or("chunk", 0)?;
+    let mut client = RemoteClient::connect_endpoint(&ep)?;
+    let held: u64 = client.stats()?.iter().map(|t| t.len).sum();
+    client.drain(&peers, chunk)?;
+    println!("drain OK: {ep} handed its {held} items to a peer and is shutting down");
     Ok(())
 }
 
@@ -1402,14 +1470,15 @@ const MESH_SMOKE_SEED: u64 = 0x5EED_3E54;
 /// one frame that happens to fit.
 const MESH_SMOKE_CHUNK: usize = 4_096;
 
-/// Twin image of the mesh sampler's level-1 server pick: a prefix scan
-/// over the advertised masses that skips zero-mass servers while
+/// Twin image of the mesh sampler's level-1 server pick: an f64 prefix
+/// scan over the advertised masses that skips zero-mass servers while
 /// tracking the last positive one. Must match `MeshSampler` exactly —
 /// the smoke replays its draw against in-process twins.
-fn twin_pick(masses: &[(u64, f32)], x: f32) -> Option<usize> {
+fn twin_pick(masses: &[(u64, f32)], x: f64) -> Option<usize> {
     let mut sel = None;
-    let mut acc = 0.0f32;
+    let mut acc = 0.0f64;
     for (k, &(_, m)) in masses.iter().enumerate() {
+        let m = f64::from(m);
         if m > 0.0 {
             sel = Some(k);
             if acc + m >= x {
@@ -1528,8 +1597,8 @@ fn cmd_mesh_smoke(a: &Args) -> Result<()> {
                 (tab.len() as u64, tab.total_priority())
             })
             .collect();
-        let total_mass: f32 = masses.iter().map(|&(_, m)| m).sum();
-        let x = mesh_rng.f32() * total_mass;
+        let total_mass: f64 = masses.iter().map(|&(_, m)| f64::from(m)).sum();
+        let x = mesh_rng.f64() * total_mass;
         let sel = twin_pick(&masses, x)
             .ok_or_else(|| anyhow!("twin pick found no positive-mass server at round {round}"))?;
         let t_outcome = twin_samplers[sel].try_sample(16, &mut twin_rngs[sel], &mut twin_out);
@@ -2111,6 +2180,392 @@ fn cmd_chaos_smoke(a: &Args) -> Result<()> {
     Ok(())
 }
 
+const MESH_CHAOS_FLAGS: &[&str] = &["dir", "items", "capacity", "shards"];
+
+/// The drill's direct (proxy-bypassing) read of one server's
+/// learner-table Stats; connect, read, drop — so the probe never
+/// leaves a connection for a later kill to strand.
+fn mesh_replay_stats(ep: &Endpoint) -> Result<TableInfo> {
+    let stats = RemoteClient::connect_endpoint(ep)?.stats()?;
+    ensure!(!stats.is_empty(), "server {ep} reports no tables");
+    Ok(stats[0].clone())
+}
+
+/// Drive `rounds` sample + priority-update rounds against the mesh,
+/// tallying which server each batch came from (global index ÷ stride —
+/// a whole batch always comes from one server).
+fn mesh_drive(
+    sampler: &mut MeshSampler,
+    stride: usize,
+    rounds: usize,
+    batches: &mut [u64],
+    updates: &mut [u64],
+) -> Result<()> {
+    let mut unused = Rng::new(1); // mesh sampling draws server-side
+    let mut out = SampleBatch::default();
+    for round in 0..rounds {
+        match sampler.try_sample(16, &mut unused, &mut out)? {
+            SampleOutcome::Sampled => {}
+            other => bail!("mesh sampler stalled at round {round}: {other:?}"),
+        }
+        ensure!(!out.indices.is_empty(), "a granted batch came back empty");
+        let sel = out.indices[0] / stride;
+        ensure!(
+            out.indices.iter().all(|&i| i / stride == sel),
+            "batch at round {round} mixed servers"
+        );
+        // Priorities are a pure function of (round, slot): the tallies,
+        // not the values, are what the drill accounts.
+        let tds: Vec<f32> = (0..out.indices.len())
+            .map(|j| ((round * 13 + j) % 91) as f32 * 0.1 + 0.05)
+            .collect();
+        sampler.update_priorities(&out.indices, &tds)?;
+        batches[sel] += 1;
+        updates[sel] += 1;
+    }
+    Ok(())
+}
+
+/// `pal mesh-chaos-smoke`: the elastic-mesh kill-and-rejoin drill (the
+/// CI gate wired up by tools/chaos_smoke.sh). A 3-server replay mesh
+/// runs in this process, each server behind a pass-through proxy whose
+/// only job is the kill switch (severing the proxied connections makes
+/// a server stop look like `kill -9` to every attached client):
+///
+/// * phase A — affinity writers and a mass-proportional sampler soak
+///   the healthy mesh; per-server Stats must account for every append,
+///   batch and priority update exactly;
+/// * phase B — server 1 is hard-killed mid-run. The sampler must keep
+///   granting batches from the survivors, walk the victim's health to
+///   Down, and count its degraded draws; the stranded writer must ride
+///   its spill queue to saturation, fail over to a survivor carrying
+///   every unacked step, and drop nothing;
+/// * phase C — server 1 restarts from its pre-kill checkpoint. The
+///   sampler's seeded probe schedule must mark it Up and resume
+///   drawing from it (a counted rejoin); the displaced writer must
+///   fail back home once its queue idles;
+/// * phase D — server 2 live-drains into server 0 over the chunked
+///   state stream and exits clean; the migrated rows must show up in
+///   the receiver's tables.
+///
+/// The final mesh-wide Stats deltas must account for every client-side
+/// operation exactly — inserts conserved across failover, restart AND
+/// the drain handoff, with zero dropped steps anywhere.
+fn cmd_mesh_chaos_smoke(a: &Args) -> Result<()> {
+    use std::time::Duration;
+
+    a.check_known(MESH_CHAOS_FLAGS)?;
+    let dir: std::path::PathBuf = match a.get("dir") {
+        Some(d) => d.into(),
+        None => std::env::temp_dir().join(format!("pal_mesh_chaos_{}", std::process::id())),
+    };
+    std::fs::create_dir_all(&dir)?;
+    let items: usize = a.parse_or("items", 960)?;
+    let n = 3usize;
+    let per = items / n;
+    let mut cfg = smoke_config(a)?;
+    cfg.rate_limit = RateLimitSpec::Unlimited;
+    ensure!(
+        per >= cfg.warmup_steps * 2,
+        "--items {items} too small for warmup {} across {n} servers",
+        cfg.warmup_steps
+    );
+    ensure!(
+        cfg.buffer_capacity >= 2 * items,
+        "--capacity {} too small to absorb the drain handoff without evictions (need >= {})",
+        cfg.buffer_capacity,
+        2 * items
+    );
+
+    let mut servers: Vec<Option<ChaosServer>> = Vec::new();
+    let mut server_eps: Vec<Endpoint> = Vec::new();
+    let mut proxies = Vec::new();
+    let mut mesh_eps: Vec<Endpoint> = Vec::new();
+    for s in 0..n {
+        let bind = Endpoint::from(dir.join(format!("server{s}.sock")));
+        let (srv, ep) = ChaosServer::start(&cfg, &bind, None)?;
+        let proxy_bind = Endpoint::from(dir.join(format!("proxy{s}.sock")));
+        let proxy = ChaosProxy::start_endpoints(&ep, &proxy_bind, ChaosConfig::default())?;
+        mesh_eps.push(proxy.listen_endpoint().clone());
+        servers.push(Some(srv));
+        server_eps.push(ep);
+        proxies.push(proxy);
+    }
+    let policy = ConnectionPolicy {
+        rpc_timeout: Duration::from_secs(10),
+        backoff: BackoffPolicy::default().with_deadline(Duration::from_secs(5)),
+    };
+
+    // ---- Phase A: soak the healthy mesh ----------------------------
+    let mut writers = Vec::new();
+    for actor in 0..n {
+        let mut w = MeshWriter::connect(&mesh_eps, actor as u64, policy.clone())?
+            .with_batch(REMOTE_SMOKE_BATCH)
+            .with_spill_cap(2 * REMOTE_SMOKE_BATCH);
+        ensure!(w.server() == actor, "actor {actor} routed to server {}", w.server());
+        for i in 0..per {
+            w.append(smoke_step(actor * 1_000_000 + i))?;
+        }
+        ensure!(w.flush()? == 0, "mesh writer {actor} could not drain its batch tail");
+        writers.push(w);
+    }
+    let mut sampler = MeshSampler::connect_default(&mesh_eps, 0x4D43_5EED, policy.clone())?
+        .with_mass_ttl(Duration::from_millis(5));
+    let stride = sampler.stride();
+    let mut batches = vec![0u64; n];
+    let mut updates = vec![0u64; n];
+    let rounds_a = 48usize;
+    mesh_drive(&mut sampler, stride, rounds_a, &mut batches, &mut updates)?;
+    ensure!(
+        batches.iter().all(|&b| b > 0),
+        "the mass-proportional pick never chose some server (batches {batches:?})"
+    );
+    for (s, ep) in server_eps.iter().enumerate() {
+        let t = mesh_replay_stats(ep)?;
+        ensure!(
+            t.stats.inserts == per,
+            "server {s}: {} inserts after the soak, its writer appended {per}",
+            t.stats.inserts
+        );
+        ensure!(
+            t.stats.sample_batches as u64 == batches[s]
+                && t.stats.sampled_items as u64 == 16 * batches[s]
+                && t.stats.priority_updates as u64 == 16 * updates[s],
+            "server {s}: soak accounting off (batches {}, items {}, updates {})",
+            t.stats.sample_batches,
+            t.stats.sampled_items,
+            t.stats.priority_updates
+        );
+    }
+    eprintln!(
+        "[mesh-chaos] phase A OK: {} appends, {rounds_a} batches {batches:?} across {n} servers",
+        n * per
+    );
+
+    // ---- Phase B: hard-kill server 1 mid-run -----------------------
+    let victim = 1usize;
+    let ckpt = RemoteClient::connect_endpoint(&server_eps[victim])?.checkpoint_bytes()?;
+    proxies[victim].set_blackhole(true);
+    proxies[victim].kill_connections();
+    servers[victim].take().expect("victim still running").stop()?;
+    ensure!(
+        RemoteClient::connect_endpoint(&server_eps[victim]).is_err(),
+        "victim endpoint still answers after the kill"
+    );
+
+    // The stranded writer (actor 1, homed on the victim) keeps
+    // appending: the first batches spill locally, and once the queue
+    // saturates its cap the writer must fail over to a survivor
+    // carrying every unacked step — no drops, nothing blocked.
+    let spill_steps = 3 * REMOTE_SMOKE_BATCH;
+    for i in 0..spill_steps {
+        writers[victim].append(smoke_step(victim * 1_000_000 + per + i))?;
+    }
+    ensure!(
+        writers[victim].failovers() >= 1 && writers[victim].server() != victim,
+        "stranded writer never failed over (still on server {})",
+        writers[victim].server()
+    );
+    ensure!(writers[victim].flush()? == 0, "failed-over writer could not drain");
+    ensure!(
+        writers[victim].steps_dropped() == 0,
+        "failover dropped {} steps below the spill cap",
+        writers[victim].steps_dropped()
+    );
+
+    // Survivor sampling: every draw must still grant, renormalized
+    // away from the victim, and the membership ladder must walk it to
+    // Down on the sampler's (TTL-paced) failed probes.
+    let batches_a = batches.clone();
+    mesh_drive(&mut sampler, stride, 32, &mut batches, &mut updates)?;
+    ensure!(batches[victim] == batches_a[victim], "a batch was drawn from the dead server");
+    let mut spins = 0u32;
+    while sampler.health(victim) != HealthState::Down {
+        spins += 1;
+        ensure!(
+            spins < 2_000,
+            "victim never reached Down (health {:?})",
+            sampler.health(victim)
+        );
+        std::thread::sleep(Duration::from_millis(2));
+        mesh_drive(&mut sampler, stride, 1, &mut batches, &mut updates)?;
+    }
+    let c = sampler.counters();
+    ensure!(
+        c.downs >= 1 && c.degraded_draws >= 1,
+        "degraded-mode counters never moved: {c:?}"
+    );
+    let survivor_inserts: usize = (0..n)
+        .filter(|&s| s != victim)
+        .map(|s| mesh_replay_stats(&server_eps[s]).map(|t| t.stats.inserts))
+        .sum::<Result<usize>>()?;
+    ensure!(
+        survivor_inserts == 2 * per + spill_steps,
+        "phase B conservation off: survivors hold {survivor_inserts} inserts, expected {} \
+         ({} soaked + {spill_steps} failed over)",
+        2 * per + spill_steps,
+        2 * per
+    );
+    eprintln!(
+        "[mesh-chaos] phase B OK: server {victim} killed — sampler renormalized ({} degraded \
+         draws so far), writer failed over to server {} with its whole spill queue",
+        c.degraded_draws,
+        writers[victim].server()
+    );
+
+    // ---- Phase C: restart the victim from its checkpoint -----------
+    let restored = ServiceState::decode(&ckpt)?;
+    let (reborn, _) = ChaosServer::start(&cfg, &server_eps[victim], Some(&restored))?;
+    servers[victim] = Some(reborn);
+    proxies[victim].set_blackhole(false);
+    // Rejoin: the next due probe redials, the health ladder climbs
+    // back to Up, and the mass draw starts landing on the reborn
+    // server again.
+    let mut spins = 0u32;
+    while sampler.health(victim) != HealthState::Up || batches[victim] == batches_a[victim] {
+        spins += 1;
+        ensure!(
+            spins < 5_000,
+            "server {victim} never rejoined (health {:?})",
+            sampler.health(victim)
+        );
+        std::thread::sleep(Duration::from_millis(2));
+        mesh_drive(&mut sampler, stride, 1, &mut batches, &mut updates)?;
+    }
+    ensure!(sampler.counters().rejoins >= 1, "rejoin not counted: {:?}", sampler.counters());
+
+    // Writer fail-back: with its home server back and its queue idle,
+    // the displaced writer's paced route probe must carry it home
+    // (within ~2 probe windows of ops, far under this bound).
+    let mut extra = 0usize;
+    while writers[victim].server() != victim {
+        ensure!(extra < 512, "displaced writer never failed back home");
+        writers[victim].append(smoke_step(victim * 1_000_000 + per + spill_steps + extra))?;
+        extra += 1;
+    }
+    ensure!(writers[victim].flush()? == 0, "displaced writer could not drain");
+    // And appends stay home from here on: land one more batch on the
+    // reborn server so its post-restore insert delta is visible.
+    for j in 0..REMOTE_SMOKE_BATCH {
+        writers[victim]
+            .append(smoke_step(victim * 1_000_000 + per + spill_steps + extra + j))?;
+    }
+    ensure!(writers[victim].flush()? == 0, "failed-back writer could not drain");
+    ensure!(writers[victim].server() == victim, "writer bounced off its home again");
+    let t1 = mesh_replay_stats(&server_eps[victim])?;
+    ensure!(
+        t1.stats.inserts == per + REMOTE_SMOKE_BATCH,
+        "reborn server {victim}: {} inserts (checkpoint held {per}, {REMOTE_SMOKE_BATCH} new)",
+        t1.stats.inserts
+    );
+    ensure!(
+        t1.stats.sample_batches as u64 == batches[victim]
+            && t1.stats.priority_updates as u64 == 16 * updates[victim],
+        "reborn server {victim}: sampling deltas off (batches {}, updates {})",
+        t1.stats.sample_batches,
+        t1.stats.priority_updates
+    );
+    eprintln!(
+        "[mesh-chaos] phase C OK: server {victim} restarted from its checkpoint, rejoined the \
+         draw, writer failed back home after {extra} displaced append(s)"
+    );
+
+    // ---- Phase D: live drain — server 2 leaves the mesh ------------
+    let donor = 2usize;
+    let receiver = 0usize;
+    for (actor, w) in writers.iter_mut().enumerate() {
+        ensure!(w.flush()? == 0, "writer {actor} could not quiesce before the drain");
+    }
+    drop(writers);
+    let before_r = mesh_replay_stats(&server_eps[receiver])?;
+    let before_d = mesh_replay_stats(&server_eps[donor])?;
+    RemoteClient::connect_endpoint(&server_eps[donor])?
+        .drain(&[server_eps[receiver].to_string()], MESH_SMOKE_CHUNK as u32)?;
+    // The Drain reply means the handoff landed; the donor's serve loop
+    // is already stopping (its stop flag is set like a Shutdown's).
+    servers[donor].take().expect("donor still running").stop()?;
+    ensure!(
+        RemoteClient::connect_endpoint(&server_eps[donor]).is_err(),
+        "donor endpoint still answers after the drain"
+    );
+    let after_r = mesh_replay_stats(&server_eps[receiver])?;
+    ensure!(
+        after_r.len == before_r.len + before_d.len,
+        "drain lost rows: receiver holds {} (had {}, donor sent {})",
+        after_r.len,
+        before_r.len,
+        before_d.len
+    );
+    // Post-drain draws must renormalize away from the drained slot
+    // (its zero mass advert while draining, then its dead socket).
+    let batches_d = batches.clone();
+    mesh_drive(&mut sampler, stride, 24, &mut batches, &mut updates)?;
+    ensure!(batches[donor] == batches_d[donor], "a batch was drawn from the drained server");
+    eprintln!(
+        "[mesh-chaos] phase D OK: server {donor} drained {} rows into server {receiver} and \
+         left the mesh",
+        before_d.len
+    );
+
+    // ---- Final mesh-wide accounting --------------------------------
+    // Every append the drill made sits on some live server exactly
+    // once — conserved across failover, restart and the drain handoff
+    // — and every sampled batch and priority update is on the books of
+    // the server that granted it.
+    let total_appends = n * per + spill_steps + extra + REMOTE_SMOKE_BATCH;
+    let live = [receiver, victim];
+    let mut total_inserts = 0usize;
+    let mut total_batches = 0u64;
+    let mut total_items = 0u64;
+    let mut total_updates = 0u64;
+    for &s in &live {
+        let t = mesh_replay_stats(&server_eps[s])?;
+        total_inserts += t.stats.inserts;
+        total_batches += t.stats.sample_batches as u64;
+        total_items += t.stats.sampled_items as u64;
+        total_updates += t.stats.priority_updates as u64;
+        ensure!(
+            t.stats.steps_dropped == 0,
+            "server {s} reports {} dropped steps; the drill drops nothing",
+            t.stats.steps_dropped
+        );
+    }
+    ensure!(
+        total_inserts == total_appends,
+        "mesh-wide insert conservation failed: {total_inserts} held on the live servers, \
+         clients appended {total_appends}"
+    );
+    let live_batches = batches[receiver] + batches[victim];
+    let live_updates = updates[receiver] + updates[victim];
+    ensure!(
+        total_batches == live_batches && total_items == 16 * live_batches,
+        "mesh-wide sampling accounting off: {total_batches} batches / {total_items} items \
+         recorded vs {live_batches} client draws"
+    );
+    ensure!(
+        total_updates == 16 * live_updates,
+        "mesh-wide priority-update accounting off: {total_updates} != 16·{live_updates}"
+    );
+
+    let counters = sampler.counters();
+    drop(sampler);
+    for &s in &live {
+        RemoteClient::connect_endpoint(&server_eps[s])?.shutdown()?;
+    }
+    for srv in servers.into_iter().flatten() {
+        srv.stop()?;
+    }
+    drop(proxies);
+    let _ = std::fs::remove_dir_all(&dir);
+    println!(
+        "mesh-chaos-smoke OK: kill, failover, rejoin and live drain on a {n}-server mesh — \
+         {total_appends} appends and {live_batches} batches accounted exactly \
+         ({} degraded draws, {} down transition(s), {} rejoin(s), {} mass probes)",
+        counters.degraded_draws, counters.downs, counters.rejoins, counters.mass_rpcs
+    );
+    Ok(())
+}
+
 fn cmd_dse(a: &Args) -> Result<()> {
     let cores: usize = a.parse_or("cores", 8)?;
     let ratio: f64 = a.parse_or("update-interval", 1.0)?;
@@ -2167,6 +2622,8 @@ fn main() -> Result<()> {
         Some("tenant-smoke") => cmd_tenant_smoke(&a),
         Some("mesh-smoke") => cmd_mesh_smoke(&a),
         Some("chaos-smoke") => cmd_chaos_smoke(&a),
+        Some("mesh-chaos-smoke") => cmd_mesh_chaos_smoke(&a),
+        Some("drain") => cmd_drain(&a),
         Some("dse") => cmd_dse(&a),
         Some(other) => bail!("unknown subcommand `{other}` (try `pal` for usage)"),
         None => usage(),

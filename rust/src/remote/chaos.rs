@@ -53,6 +53,12 @@
 //!   accept-and-immediately-close new connections (the
 //!   server-unreachable outage; clients see connect-then-dead, their
 //!   backoff schedules pace the retries).
+//! * **Stall (silent partition)** — [`ChaosProxy::set_stall`] makes
+//!   every pump read-and-discard instead of forwarding: connections
+//!   stay open and writes succeed, but nothing ever arrives. This is
+//!   the nastiest failure for a client — no error, no EOF — and what
+//!   forces it to rely on its RPC read timeout (exactly what the mesh
+//!   health ladder's Suspect/Down marking is tested against).
 
 use super::transport::{Endpoint, RpcListener, RpcStream};
 use crate::util::rng::Rng;
@@ -118,6 +124,7 @@ struct Shared {
     cfg: ChaosConfig,
     stop: AtomicBool,
     blackhole: AtomicBool,
+    stall: AtomicBool,
     resets: AtomicU64,
     conns: Mutex<Vec<Conn>>,
 }
@@ -166,6 +173,7 @@ impl ChaosProxy {
             cfg,
             stop: AtomicBool::new(false),
             blackhole: AtomicBool::new(false),
+            stall: AtomicBool::new(false),
             resets: AtomicU64::new(0),
             conns: Mutex::new(Vec::new()),
         });
@@ -206,6 +214,17 @@ impl ChaosProxy {
     /// outage.
     pub fn set_blackhole(&self, on: bool) {
         self.shared.blackhole.store(on, Ordering::Relaxed);
+    }
+
+    /// Switch the silent-partition mode: while on, every pump reads and
+    /// discards instead of forwarding, in both directions. Connections
+    /// stay open and writes succeed, but no byte ever crosses — the
+    /// failure only an RPC read timeout can detect. Existing and new
+    /// connections are both affected; switching it off resumes
+    /// forwarding (bytes swallowed while stalled are gone, like any
+    /// partition).
+    pub fn set_stall(&self, on: bool) {
+        self.shared.stall.store(on, Ordering::Relaxed);
     }
 
     /// Hard-drop every live proxied connection right now; returns how
@@ -338,6 +357,12 @@ fn pump(
             }
             Err(_) => break,
         };
+        // Silent partition: swallow the chunk before any seeded
+        // verdict, so toggling stall never shifts the decision
+        // streams of chunks that do get forwarded later.
+        if shared.stall.load(Ordering::Relaxed) {
+            continue;
+        }
         // Decision order per chunk is part of the determinism contract.
         let reset = rng.chance(shared.cfg.reset_chance);
         let delay = rng.chance(shared.cfg.delay_chance);
@@ -538,6 +563,49 @@ mod tests {
             Ok(0) | Err(_) => {}
             Ok(n) => panic!("blackholed connection delivered {n} byte(s)"),
         }
+
+        drop(proxy);
+        stop.store(true, Ordering::Relaxed);
+        echo.join().expect("echo thread");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stall_swallows_traffic_until_cleared() {
+        let dir = std::env::temp_dir().join(format!("pal_chaos_stall_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).expect("mkdir");
+        let stop = Arc::new(AtomicBool::new(false));
+        let (up, echo) =
+            spawn_echo(&Endpoint::Uds(dir.join("up.sock")), Arc::clone(&stop));
+        let proxy = ChaosProxy::start_endpoints(
+            &up,
+            &Endpoint::Uds(dir.join("proxy.sock")),
+            ChaosConfig::default(),
+        )
+        .expect("start proxy");
+
+        // Silent partition: the write succeeds, nothing ever comes back
+        // — only the read timeout notices.
+        proxy.set_stall(true);
+        let mut c = proxy.listen_endpoint().dial().expect("connect");
+        let _ = c.set_read_timeout(Some(Duration::from_millis(200)));
+        c.write_all(b"lost").expect("write into the partition succeeds");
+        let mut buf = [0u8; 4];
+        match c.read(&mut buf) {
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            other => panic!("stalled read should time out, got {other:?}"),
+        }
+
+        // Clearing the stall resumes forwarding on the SAME connection;
+        // the swallowed bytes are gone for good.
+        proxy.set_stall(false);
+        let _ = c.set_read_timeout(Some(Duration::from_secs(5)));
+        c.write_all(b"ping").expect("write");
+        let mut got = [0u8; 4];
+        c.read_exact(&mut got).expect("read after clearing the stall");
+        assert_eq!(&got, b"ping");
 
         drop(proxy);
         stop.store(true, Ordering::Relaxed);

@@ -495,6 +495,34 @@ impl RemoteClient {
         }
     }
 
+    /// Table-agnostic liveness probe: the server echoes `nonce` without
+    /// touching any table or session state. The membership layer's
+    /// health check — answered even by a draining server.
+    pub fn ping(&mut self, nonce: u64) -> Result<()> {
+        match self.call_checked(&Request::Ping { nonce })? {
+            Response::Pong { nonce: echoed } => {
+                if echoed != nonce {
+                    bail!("ping answered with nonce {echoed}, expected {nonce}");
+                }
+                Ok(())
+            }
+            other => bail!("unexpected response to Ping: {other:?}"),
+        }
+    }
+
+    /// Operator command: put the server into drain mode. The server
+    /// refuses new sessions and appends, hands its tables to the first
+    /// reachable of `peers` through the chunked handoff stream, then
+    /// stops its accept loop — the `Ok` here means the handoff landed
+    /// and the server is exiting. `max_chunk` of 0 uses the server's
+    /// default chunk size.
+    pub fn drain(&mut self, peers: &[String], max_chunk: u32) -> Result<()> {
+        match self.call_checked(&Request::Drain { max_chunk, peers: peers.to_vec() })? {
+            Response::Ok => Ok(()),
+            other => bail!("unexpected response to Drain: {other:?}"),
+        }
+    }
+
     /// The server's whole serialized state, as raw `ServiceState`
     /// payload bytes (what [`ServiceState::encode`] produced). Streams
     /// over the chunked transfer protocol — `CheckpointChunked`
@@ -582,6 +610,32 @@ impl RemoteClient {
         max_chunk: usize,
     ) -> Result<()> {
         let bytes = state.encode();
+        self.upload_chunks(&bytes, max_chunk)?;
+        match self.call(&Request::ChunkEnd { total_crc: crc32(&bytes) })? {
+            Response::Ok => Ok(()),
+            Response::Error { message } => bail!("replay server error: {message}"),
+            other => bail!("unexpected response to ChunkEnd: {other:?}"),
+        }
+    }
+
+    /// Hand a serialized `ServiceState` off for a **merge**: the same
+    /// chunked upload as [`Self::restore_state_chunked`], but closed by
+    /// `HandoffEnd`, so the receiver inserts the rows (with their exact
+    /// checkpointed priorities) into its live tables instead of
+    /// replacing them. The drain path of a leaving mesh member.
+    pub fn handoff_state_bytes(&mut self, bytes: &[u8], max_chunk: usize) -> Result<()> {
+        self.upload_chunks(bytes, max_chunk)?;
+        match self.call(&Request::HandoffEnd { total_crc: crc32(bytes) })? {
+            Response::Ok => Ok(()),
+            Response::Error { message } => bail!("replay server error: {message}"),
+            other => bail!("unexpected response to HandoffEnd: {other:?}"),
+        }
+    }
+
+    /// The shared upload half of a chunked restore or handoff: open
+    /// with `ChunkBegin`, stream every bounded `Chunk`, leave the
+    /// closing frame (which decides replace vs merge) to the caller.
+    fn upload_chunks(&mut self, bytes: &[u8], max_chunk: usize) -> Result<()> {
         let chunk_len = max_chunk.clamp(1, proto::MAX_CHUNK_LEN);
         let chunk_count = bytes.len().div_ceil(chunk_len);
         match self.call(&Request::ChunkBegin {
@@ -599,11 +653,7 @@ impl RemoteClient {
             self.send_encoded()?;
             self.recv_ok("Chunk")?;
         }
-        match self.call(&Request::ChunkEnd { total_crc: crc32(&bytes) })? {
-            Response::Ok => Ok(()),
-            Response::Error { message } => bail!("replay server error: {message}"),
-            other => bail!("unexpected response to ChunkEnd: {other:?}"),
-        }
+        Ok(())
     }
 
     /// Ask the server to stop accepting connections and exit.
@@ -756,6 +806,43 @@ impl RemoteWriter {
     /// batch), never O(steps²).
     pub fn wire_steps_sent(&self) -> u64 {
         self.wire_steps_sent
+    }
+
+    /// Tear every unacked step out of this writer so a mesh failover
+    /// can hand it to a replacement writer on another server: the whole
+    /// pending queue (the in-flight chunk included — its ack never
+    /// arrived, so it is unacked by definition) plus the unreported
+    /// spill-drop count. The writer is left empty; the caller owns
+    /// delivery from here.
+    pub(crate) fn take_unacked(&mut self) -> (VecDeque<WriterStep>, u64) {
+        self.inflight = None;
+        let dropped = self.dropped_unacked;
+        self.dropped_unacked = 0;
+        self.stalled = false;
+        (std::mem::take(&mut self.pending), dropped)
+    }
+
+    /// Adopt unacked work from a failed-over predecessor: its steps
+    /// (original order preserved) become this writer's queue, and its
+    /// unreported drop count is claimed on this writer's next acked
+    /// append — so the drops land in exactly one server's
+    /// `steps_dropped` stat. Cross-server failover is at-least-once:
+    /// the old server may have applied an append whose ack was lost,
+    /// and this writer will deliver those steps again (documented in
+    /// [`super::MeshWriter`]).
+    pub(crate) fn adopt_pending(&mut self, mut steps: VecDeque<WriterStep>, dropped: u64) {
+        steps.extend(self.pending.drain(..));
+        self.pending = steps;
+        self.dropped_unacked += dropped;
+        self.enforce_spill_cap();
+    }
+
+    /// Mesh-failover probe: the connection is down AND the spill queue
+    /// has hit its cap, i.e. every further step queued evicts one.
+    /// Waiting any longer only loses more data, so a writer with
+    /// somewhere else to go should go there now.
+    pub(crate) fn in_saturated_outage(&self) -> bool {
+        !self.connected && self.pending.len() >= self.spill_cap.max(self.batch)
     }
 
     /// Keep `pending` within the spill cap by dropping the oldest

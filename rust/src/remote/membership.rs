@@ -1,0 +1,301 @@
+//! Mesh membership: a per-server health state machine the mesh clients
+//! drive from their own RPC outcomes, so a dead or partitioned replay
+//! server degrades the mesh instead of stalling it.
+//!
+//! The ladder is `Up → Suspect → Down → Rejoining → Up`:
+//!
+//! * **Up** — healthy; receives affinity appends and mass-proportional
+//!   sample draws.
+//! * **Suspect** — one or more recent transport failures, below the
+//!   `down_after` threshold. Still counted live (a blip should not
+//!   reshuffle traffic), but the next failure brings it closer to Down.
+//! * **Down** — `down_after` consecutive transport failures. Excluded
+//!   from the level-1 mass draw (its mass reads as zero and the
+//!   survivors renormalize) and skipped by writer failover. A Down
+//!   server is re-probed on a seeded-jitter schedule rather than on
+//!   every call, so a dead member costs one cheap probe per interval,
+//!   not one timeout per batch.
+//! * **Rejoining** — a probe is in flight against a Down server. One
+//!   success promotes it straight to Up (it resumes affinity traffic
+//!   and mass draws); a failure sends it back to Down and reschedules.
+//!
+//! # Determinism
+//!
+//! There are no background threads and no ambient clocks in here: the
+//! mesh calls [`Membership::record_success`] / `record_failure` with
+//! its own RPC outcomes and passes `Instant`s in, and probe-schedule
+//! jitter is drawn from a seeded [`Rng`] stream. Two meshes with the
+//! same seed and the same failure history schedule identical probes —
+//! the same property the chaos proxy's decision streams have, and what
+//! makes the failover tests replayable.
+
+use crate::util::rng::Rng;
+use std::time::{Duration, Instant};
+
+/// One server's position on the health ladder.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HealthState {
+    /// Healthy: full traffic.
+    Up,
+    /// Recent failures below the Down threshold: full traffic, on
+    /// notice.
+    Suspect,
+    /// Unreachable: excluded from draws and failover targets, probed on
+    /// the seeded schedule.
+    Down,
+    /// A recovery probe is in flight; one success promotes to Up.
+    Rejoining,
+}
+
+/// Thresholds and probe pacing for a [`Membership`].
+#[derive(Clone, Debug)]
+pub struct HealthPolicy {
+    /// Consecutive transport failures before a server is Suspect.
+    pub suspect_after: u32,
+    /// Consecutive transport failures before a server is Down.
+    pub down_after: u32,
+    /// Base interval between recovery probes of a Down server; the
+    /// actual gap is jittered to `[0.5, 1.5] ×` this, seeded.
+    pub probe_interval: Duration,
+    /// Seed of the jitter stream (see the module docs).
+    pub jitter_seed: u64,
+}
+
+impl Default for HealthPolicy {
+    fn default() -> Self {
+        Self {
+            suspect_after: 1,
+            down_after: 3,
+            probe_interval: Duration::from_millis(250),
+            jitter_seed: 0x4845_414C, // "HEAL"
+        }
+    }
+}
+
+struct Member {
+    state: HealthState,
+    fails: u32,
+    next_probe_at: Option<Instant>,
+}
+
+/// Health bookkeeping for a fixed-size mesh member list (servers are
+/// identified by their index in the mesh's endpoint list).
+pub struct Membership {
+    policy: HealthPolicy,
+    members: Vec<Member>,
+    rng: Rng,
+    downs: u64,
+    rejoins: u64,
+}
+
+impl Membership {
+    /// All `n` servers start Up.
+    pub fn new(n: usize, policy: HealthPolicy) -> Self {
+        let rng = Rng::new(policy.jitter_seed);
+        let members = (0..n)
+            .map(|_| Member { state: HealthState::Up, fails: 0, next_probe_at: None })
+            .collect();
+        Self { policy, members, rng, downs: 0, rejoins: 0 }
+    }
+
+    pub fn server_count(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn state(&self, server: usize) -> HealthState {
+        self.members[server].state
+    }
+
+    /// Live = participates in draws and is a failover target (Up,
+    /// Suspect, or mid-rejoin — everything but Down).
+    pub fn is_live(&self, server: usize) -> bool {
+        self.members[server].state != HealthState::Down
+    }
+
+    /// How many servers are currently live.
+    pub fn live_count(&self) -> usize {
+        self.members.iter().filter(|m| m.state != HealthState::Down).count()
+    }
+
+    /// Total Up/Suspect→Down transitions so far.
+    pub fn downs(&self) -> u64 {
+        self.downs
+    }
+
+    /// Total Down/Rejoining→Up recoveries so far.
+    pub fn rejoins(&self) -> u64 {
+        self.rejoins
+    }
+
+    /// An RPC against `server` succeeded: clear its failure streak and
+    /// promote it to Up (counting a rejoin if it was Down/Rejoining).
+    pub fn record_success(&mut self, server: usize) {
+        let m = &mut self.members[server];
+        if matches!(m.state, HealthState::Down | HealthState::Rejoining) {
+            self.rejoins += 1;
+        }
+        m.state = HealthState::Up;
+        m.fails = 0;
+        m.next_probe_at = None;
+    }
+
+    /// An RPC against `server` failed at the transport: advance it down
+    /// the ladder and, on reaching Down, schedule its next recovery
+    /// probe relative to `now`.
+    pub fn record_failure(&mut self, server: usize, now: Instant) {
+        let fails = {
+            let m = &mut self.members[server];
+            m.fails = m.fails.saturating_add(1);
+            m.fails
+        };
+        if fails >= self.policy.down_after {
+            if self.members[server].state != HealthState::Down {
+                self.downs += 1;
+            }
+            let gap = self.policy.probe_interval.mul_f64(0.5 + self.rng.f64());
+            let m = &mut self.members[server];
+            m.state = HealthState::Down;
+            m.next_probe_at = Some(now + gap);
+        } else if fails >= self.policy.suspect_after {
+            self.members[server].state = HealthState::Suspect;
+        }
+    }
+
+    /// Is a recovery probe of this Down server due at `now`?
+    pub fn probe_due(&self, server: usize, now: Instant) -> bool {
+        let m = &self.members[server];
+        m.state == HealthState::Down && m.next_probe_at.is_some_and(|at| at <= now)
+    }
+
+    /// Mark a recovery probe as in flight (Down → Rejoining) and push
+    /// the next probe slot out, so a failed probe does not retry until
+    /// the schedule says so.
+    pub fn begin_rejoin(&mut self, server: usize, now: Instant) {
+        let gap = self.policy.probe_interval.mul_f64(0.5 + self.rng.f64());
+        let m = &mut self.members[server];
+        m.state = HealthState::Rejoining;
+        m.next_probe_at = Some(now + gap);
+    }
+
+    /// A probe against a Rejoining server failed: straight back to Down
+    /// (the streak never cleared), keeping the already-pushed-out probe
+    /// slot.
+    pub fn probe_failed(&mut self, server: usize) {
+        let m = &mut self.members[server];
+        if m.state == HealthState::Rejoining {
+            m.state = HealthState::Down;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> HealthPolicy {
+        HealthPolicy {
+            suspect_after: 1,
+            down_after: 3,
+            probe_interval: Duration::from_millis(100),
+            jitter_seed: 7,
+        }
+    }
+
+    #[test]
+    fn ladder_up_suspect_down_and_back() {
+        let mut m = Membership::new(2, policy());
+        let t0 = Instant::now();
+        assert_eq!(m.state(0), HealthState::Up);
+        assert!(m.is_live(0));
+
+        m.record_failure(0, t0);
+        assert_eq!(m.state(0), HealthState::Suspect);
+        assert!(m.is_live(0), "a Suspect server still takes traffic");
+        m.record_failure(0, t0);
+        assert_eq!(m.state(0), HealthState::Suspect);
+        m.record_failure(0, t0);
+        assert_eq!(m.state(0), HealthState::Down);
+        assert!(!m.is_live(0));
+        assert_eq!(m.downs(), 1);
+        assert_eq!(m.live_count(), 1);
+        // The untouched peer is unaffected.
+        assert_eq!(m.state(1), HealthState::Up);
+
+        // Recovery: probe → success → Up, rejoin counted.
+        m.begin_rejoin(0, t0);
+        assert_eq!(m.state(0), HealthState::Rejoining);
+        assert!(m.is_live(0));
+        m.record_success(0);
+        assert_eq!(m.state(0), HealthState::Up);
+        assert_eq!(m.rejoins(), 1);
+
+        // The streak reset: it takes three fresh failures to go Down
+        // again.
+        m.record_failure(0, t0);
+        assert_eq!(m.state(0), HealthState::Suspect);
+        assert_eq!(m.downs(), 1);
+    }
+
+    #[test]
+    fn down_servers_probe_on_the_jittered_schedule() {
+        let mut m = Membership::new(1, policy());
+        let t0 = Instant::now();
+        for _ in 0..3 {
+            m.record_failure(0, t0);
+        }
+        assert_eq!(m.state(0), HealthState::Down);
+        // Jitter is bounded to [0.5, 1.5] × interval: not due
+        // immediately, always due after 2×.
+        assert!(!m.probe_due(0, t0));
+        assert!(!m.probe_due(0, t0 + Duration::from_millis(49)));
+        assert!(m.probe_due(0, t0 + Duration::from_millis(200)));
+
+        // Beginning a rejoin pushes the slot out; a failed probe goes
+        // back to Down without making the next probe due early.
+        m.begin_rejoin(0, t0 + Duration::from_millis(200));
+        assert_eq!(m.state(0), HealthState::Rejoining);
+        assert!(!m.probe_due(0, t0 + Duration::from_millis(200)), "Rejoining is not re-probed");
+        m.probe_failed(0);
+        assert_eq!(m.state(0), HealthState::Down);
+        assert!(!m.probe_due(0, t0 + Duration::from_millis(249)));
+        assert!(m.probe_due(0, t0 + Duration::from_millis(400)));
+    }
+
+    #[test]
+    fn same_seed_same_probe_schedule() {
+        let t0 = Instant::now();
+        let schedule = |seed: u64| -> Vec<Instant> {
+            let mut m = Membership::new(4, HealthPolicy { jitter_seed: seed, ..policy() });
+            let mut out = Vec::new();
+            for s in 0..4 {
+                for _ in 0..3 {
+                    m.record_failure(s, t0);
+                }
+                // Recover the probe deadline by bisection against
+                // probe_due — the public surface is enough to pin the
+                // schedule.
+                let mut lo = 0u64; // µs offsets; jitter caps at 150ms
+                let mut hi = 200_000u64;
+                while lo < hi {
+                    let mid = (lo + hi) / 2;
+                    if m.probe_due(s, t0 + Duration::from_micros(mid)) {
+                        hi = mid;
+                    } else {
+                        lo = mid + 1;
+                    }
+                }
+                out.push(t0 + Duration::from_micros(lo));
+            }
+            out
+        };
+        assert_eq!(schedule(7), schedule(7));
+        assert_ne!(schedule(7), schedule(8), "different seeds must differ somewhere");
+    }
+
+    #[test]
+    fn probe_failed_outside_rejoin_is_a_no_op() {
+        let mut m = Membership::new(1, policy());
+        m.probe_failed(0);
+        assert_eq!(m.state(0), HealthState::Up);
+    }
+}

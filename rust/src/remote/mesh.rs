@@ -24,11 +24,42 @@
 //! * **Priority feedback** — sampled indices are *global*
 //!   (`local + server · stride`); [`MeshSampler::update_priorities`]
 //!   groups them by server and ships one update RPC per server
-//!   touched, the wire image of `update_priorities_batched`.
+//!   touched, best-effort: one failed server does not void the other
+//!   servers' feedback.
 //!
 //! Global index `g` maps to server `g / stride`, local slot
 //! `g % stride`, where `stride` is the per-server table capacity —
 //! validated uniform across the mesh at connect time.
+//!
+//! # Health, degraded mode, and failover
+//!
+//! Both handles drive a shared-nothing [`Membership`] ladder
+//! (`Up → Suspect → Down → Rejoining`) from their own RPC outcomes —
+//! there is no gossip and no background prober:
+//!
+//! * The sampler's per-draw RPCs use one non-blocking redial-and-retry
+//!   instead of the blocking backoff loop, so a dead server costs a
+//!   draw one timeout, never a stalled learner. A server that keeps
+//!   failing goes Down: its advertised mass reads as zero, the
+//!   survivors renormalize (degraded mode), and it is re-probed on the
+//!   membership's seeded-jitter schedule — one cheap probe per
+//!   interval, not one timeout per batch. One probe success rejoins it
+//!   into the draw.
+//! * The writer fails over: when its server's outage has saturated the
+//!   spill queue (or a blocking `flush` exhausts its reconnect
+//!   deadline), every unacked step and the unreported drop count move
+//!   to the next dialable server in affinity order
+//!   ([`RemoteWriter::take_unacked`] → `adopt_pending`). Cross-server
+//!   failover is at-least-once — the in-flight chunk's ack never
+//!   arrived, so it re-ships and may duplicate items the dying server
+//!   already absorbed — while spill drops still land in exactly one
+//!   server's accounting. A displaced writer periodically probes its
+//!   home server and fails back once its queue is idle (no unacked
+//!   chunk → no duplicate risk on the way back).
+//!
+//! Level-1 mass adverts can be cached ([`MeshSampler::with_mass_ttl`])
+//! to amortize the per-draw probe fan-out; the default TTL is zero
+//! (probe every draw), which the lockstep determinism tests rely on.
 //!
 //! Checkpoint/restore fan out per server ([`MeshSampler::checkpoint_states`]
 //! / [`MeshSampler::restore_states`]): each server's state is its own
@@ -36,13 +67,25 @@
 //! N bounded streams instead of one giant frame.
 
 use super::client::{is_transport_error, ConnectionPolicy, RemoteClient, RemoteWriter};
+use super::membership::{HealthPolicy, HealthState, Membership};
 use super::transport::Endpoint;
 use crate::replay::SampleBatch;
 use crate::service::{
     ExperienceSampler, ExperienceWriter, SampleOutcome, ServiceState, WriterStep,
 };
 use crate::util::rng::{Rng, SplitMix64};
-use anyhow::{bail, ensure, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::time::{Duration, Instant};
+
+/// Mass-cache draw budget: even within the TTL, a cached advert is
+/// dropped after this many draws so a hot learner cannot sample against
+/// arbitrarily stale masses.
+pub const MASS_TTL_DRAWS: u32 = 64;
+
+/// How many delegated writer ops between route probes (failover
+/// retries while every candidate is down, fail-back attempts while
+/// displaced) — bounds the dial rate an outage can induce.
+const ROUTE_PROBE_EVERY: u64 = 64;
 
 /// Parse a comma-separated endpoint list (`uds://PATH`, `tcp://HOST:PORT`,
 /// or a bare socket path), rejecting empty entries and duplicates — a
@@ -72,8 +115,10 @@ pub fn server_seed(seed: u64, server: usize) -> u64 {
 
 /// Run one RPC with a single supervised reconnect-and-retry on a
 /// transport failure (the mesh RPCs here are unsequenced and
-/// idempotent-enough: a retried `Mass`/`Stats` re-reads, a retried
-/// `Sample` re-draws, a retried update re-applies the same priorities).
+/// idempotent-enough: a retried `Stats` re-reads, a retried checkpoint
+/// restreams). Used by the admin paths, where blocking under the
+/// backoff schedule is acceptable; the sampling hot path uses a
+/// non-blocking single redial instead.
 fn call_retry<T>(
     client: &mut RemoteClient,
     mut f: impl FnMut(&mut RemoteClient) -> Result<T>,
@@ -88,49 +133,118 @@ fn call_retry<T>(
 }
 
 /// Actor-side mesh handle: one [`RemoteWriter`] dialed to the server
-/// this actor's id routes to (`actor_id % N`). Everything else —
-/// batching, spill, supervision, exactly-once appends — is the wrapped
-/// writer's, untouched.
+/// this actor's id routes to (`actor_id % N`), with failover — when
+/// that server stays unreachable, the unacked queue moves to the next
+/// dialable server in affinity order, and fails back home once it
+/// recovers. Everything else — batching, spill, supervision,
+/// exactly-once appends within one server — is the wrapped writer's,
+/// untouched.
 pub struct MeshWriter {
     inner: RemoteWriter,
-    server: usize,
+    endpoints: Vec<Endpoint>,
+    policy: ConnectionPolicy,
+    actor_id: u64,
+    /// Builder settings replayed onto every replacement writer.
+    batch: Option<usize>,
+    spill_cap: Option<usize>,
+    /// The affinity route (`actor_id % N`) …
+    home: usize,
+    /// … and the server the writer currently feeds.
+    current: usize,
+    failovers: u64,
+    /// Delegated ops since connect; schedules route probes.
+    ops: u64,
+    next_probe_ops: u64,
+    /// Counter snapshots of connections already torn down, so the
+    /// mesh-level totals survive a failover.
+    base_emitted: u64,
+    base_dropped: u64,
+    base_reconnects: u64,
 }
 
 impl MeshWriter {
-    /// Dial the server `actor_id` routes to.
+    /// Dial the server `actor_id` routes to; if it refuses, start on
+    /// the next dialable server in affinity order (the same failover
+    /// path a live writer takes, minus the carried queue).
     pub fn connect(
         endpoints: &[Endpoint],
         actor_id: u64,
         policy: ConnectionPolicy,
     ) -> Result<Self> {
         ensure!(!endpoints.is_empty(), "mesh writer needs at least one endpoint");
-        let server = (actor_id % endpoints.len() as u64) as usize;
-        let inner = RemoteWriter::connect_endpoint_with(&endpoints[server], actor_id, policy)
-            .with_context(|| {
-                format!("mesh writer for actor {actor_id} dialing server {server}")
-            })?;
-        Ok(Self { inner, server })
+        let n = endpoints.len();
+        let home = (actor_id % n as u64) as usize;
+        let mut last: Option<anyhow::Error> = None;
+        for k in 0..n {
+            let server = (home + k) % n;
+            match RemoteWriter::connect_endpoint_with(&endpoints[server], actor_id, policy.clone())
+            {
+                Ok(inner) => {
+                    if server != home {
+                        eprintln!(
+                            "[pal] mesh writer for actor {actor_id}: home server {home} \
+                             unreachable, starting on server {server}"
+                        );
+                    }
+                    return Ok(Self {
+                        inner,
+                        endpoints: endpoints.to_vec(),
+                        policy,
+                        actor_id,
+                        batch: None,
+                        spill_cap: None,
+                        home,
+                        current: server,
+                        failovers: u64::from(server != home),
+                        ops: 0,
+                        next_probe_ops: 0,
+                        base_emitted: 0,
+                        base_dropped: 0,
+                        base_reconnects: 0,
+                    });
+                }
+                Err(e) => {
+                    last = Some(e.context(format!(
+                        "mesh writer for actor {actor_id} dialing server {server}"
+                    )));
+                }
+            }
+        }
+        Err(last.expect("at least one endpoint was tried"))
     }
 
-    /// Which server (index into the endpoint list) this writer feeds.
+    /// Which server (index into the endpoint list) this writer
+    /// currently feeds — its home route unless failed over.
     pub fn server(&self) -> usize {
-        self.server
+        self.current
+    }
+
+    /// The affinity route `actor_id % N` this writer fails back to.
+    pub fn home_server(&self) -> usize {
+        self.home
+    }
+
+    /// Route changes so far (failovers plus fail-backs).
+    pub fn failovers(&self) -> u64 {
+        self.failovers
     }
 
     /// See [`RemoteWriter::with_batch`].
     pub fn with_batch(mut self, batch: usize) -> Self {
+        self.batch = Some(batch);
         self.inner = self.inner.with_batch(batch);
         self
     }
 
     /// See [`RemoteWriter::with_spill_cap`].
     pub fn with_spill_cap(mut self, cap: usize) -> Self {
+        self.spill_cap = Some(cap);
         self.inner = self.inner.with_spill_cap(cap);
         self
     }
 
     pub fn items_emitted(&self) -> u64 {
-        self.inner.items_emitted()
+        self.base_emitted + self.inner.items_emitted()
     }
 
     pub fn pending_len(&self) -> usize {
@@ -138,26 +252,168 @@ impl MeshWriter {
     }
 
     pub fn steps_dropped(&self) -> u64 {
-        self.inner.steps_dropped()
+        self.base_dropped + self.inner.steps_dropped()
     }
 
     pub fn reconnects(&self) -> u64 {
-        self.inner.reconnects()
+        self.base_reconnects + self.inner.reconnects()
+    }
+
+    /// Dial one server with this writer's settings replayed.
+    fn dial(&self, server: usize) -> Result<RemoteWriter> {
+        let mut w = RemoteWriter::connect_endpoint_with(
+            &self.endpoints[server],
+            self.actor_id,
+            self.policy.clone(),
+        )?;
+        if let Some(b) = self.batch {
+            w = w.with_batch(b);
+        }
+        if let Some(c) = self.spill_cap {
+            w = w.with_spill_cap(c);
+        }
+        Ok(w)
+    }
+
+    /// Swap `next` in for the current writer, carrying every unacked
+    /// step and the unreported drop count across (and rolling the dying
+    /// connection's counters into the bases, so the mesh-level totals
+    /// survive the swap).
+    fn migrate_to(&mut self, mut next: RemoteWriter, server: usize) -> usize {
+        self.base_emitted += self.inner.items_emitted();
+        self.base_dropped += self.inner.steps_dropped();
+        self.base_reconnects += self.inner.reconnects();
+        let (pending, dropped) = self.inner.take_unacked();
+        let moved = pending.len();
+        next.adopt_pending(pending, dropped);
+        self.inner = next;
+        self.current = server;
+        self.failovers += 1;
+        moved
+    }
+
+    /// Move the unacked queue to the next dialable server in affinity
+    /// order. At-least-once across the switch: the in-flight chunk's
+    /// ack never arrived, so it re-ships to the new server and may
+    /// duplicate items the dying server already absorbed — the
+    /// documented failover trade, versus losing the chunk. If no
+    /// candidate answers, the current writer is left untouched (still
+    /// spilling) and the original cause is returned.
+    fn fail_over(&mut self, cause: anyhow::Error) -> Result<()> {
+        let n = self.endpoints.len();
+        if n < 2 {
+            return Err(cause);
+        }
+        let mut last = cause;
+        for k in 1..n {
+            let cand = (self.current + k) % n;
+            match self.dial(cand) {
+                Ok(next) => {
+                    let from = self.current;
+                    let moved = self.migrate_to(next, cand);
+                    eprintln!(
+                        "[pal] mesh writer for actor {}: failed over from server {from} to \
+                         {cand} carrying {moved} unacked step(s)",
+                        self.actor_id
+                    );
+                    return Ok(());
+                }
+                Err(e) => last = e.context(format!("failover dial to mesh server {cand}")),
+            }
+        }
+        Err(last)
+    }
+
+    /// One cheap dial home; on success the displaced writer migrates
+    /// back to its affinity server. Only called with an idle queue —
+    /// no unacked chunk means no duplicate risk on the way back.
+    fn try_fail_back(&mut self) {
+        if let Ok(next) = self.dial(self.home) {
+            let from = self.current;
+            self.migrate_to(next, self.home);
+            eprintln!(
+                "[pal] mesh writer for actor {}: home server {} is back, failing back from \
+                 server {from}",
+                self.actor_id, self.home
+            );
+        }
+    }
+
+    /// Opportunistic route maintenance after a delegated op: fail over
+    /// when the current server's outage has saturated the spill queue
+    /// (waiting longer only drops more steps), fail back home once the
+    /// displaced writer's queue is idle. Probes are paced by op count
+    /// so an all-dead mesh induces a bounded dial rate, and a failed
+    /// probe is swallowed — the inner writer keeps spilling, exactly
+    /// as it would with no mesh at all.
+    fn tend_route(&mut self) {
+        if self.endpoints.len() < 2 {
+            return;
+        }
+        self.ops += 1;
+        if self.ops < self.next_probe_ops {
+            return;
+        }
+        if self.inner.in_saturated_outage() {
+            self.next_probe_ops = self.ops + ROUTE_PROBE_EVERY;
+            if let Err(e) =
+                self.fail_over(anyhow!("spill queue saturated while disconnected"))
+            {
+                eprintln!(
+                    "[pal] mesh writer for actor {}: failover found no live server ({e:#}); \
+                     continuing to spill",
+                    self.actor_id
+                );
+            }
+        } else if self.current != self.home && self.inner.pending_len() == 0 {
+            self.next_probe_ops = self.ops + ROUTE_PROBE_EVERY;
+            self.try_fail_back();
+        }
     }
 }
 
 impl ExperienceWriter for MeshWriter {
     fn throttled(&mut self) -> Result<bool> {
-        self.inner.throttled()
+        let throttled = self.inner.throttled()?;
+        self.tend_route();
+        Ok(throttled)
     }
 
     fn append(&mut self, step: WriterStep) -> Result<usize> {
-        self.inner.append(step)
+        let emitted = self.inner.append(step)?;
+        self.tend_route();
+        Ok(emitted)
     }
 
+    /// A blocking flush that exhausts its reconnect deadline is the
+    /// hard failover trigger: the barrier must deliver somewhere, so
+    /// the queue moves to the next live server and flushes there.
     fn flush(&mut self) -> Result<usize> {
-        self.inner.flush()
+        match self.inner.flush() {
+            Err(e) if is_transport_error(&e) && self.endpoints.len() > 1 => {
+                self.fail_over(e)?;
+                self.inner.flush()
+            }
+            other => other,
+        }
     }
+}
+
+/// Point-in-time RPC and health counters of a [`MeshSampler`] — the
+/// observability surface the benches and the chaos drills read.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MeshSamplerCounters {
+    /// `Mass` probes actually sent (mass-cache hits send none).
+    pub mass_rpcs: u64,
+    /// Whole-batch `Sample` RPCs sent (retries included).
+    pub sample_rpcs: u64,
+    /// Draws taken while at least one server was Down (renormalized
+    /// over the survivors).
+    pub degraded_draws: u64,
+    /// Up/Suspect → Down transitions observed.
+    pub downs: u64,
+    /// Down/Rejoining → Up recoveries observed.
+    pub rejoins: u64,
 }
 
 /// Learner-side mesh handle: one connection per server, two-level
@@ -178,6 +434,18 @@ pub struct MeshSampler {
     masses: Vec<(u64, f32)>,
     /// Reused update-routing buckets, one per server.
     buckets: Vec<(Vec<usize>, Vec<f32>)>,
+    /// Per-server health ladder, driven by this sampler's RPC outcomes.
+    membership: Membership,
+    /// How long a refreshed `masses` scratch stays valid (zero = probe
+    /// every draw).
+    mass_ttl: Duration,
+    /// When `masses` was last refreshed (`None` = invalidated).
+    last_refresh: Option<Instant>,
+    /// Draws taken against the current refresh (see [`MASS_TTL_DRAWS`]).
+    draws_since_refresh: u32,
+    mass_rpcs: u64,
+    sample_rpcs: u64,
+    degraded_draws: u64,
 }
 
 impl MeshSampler {
@@ -267,7 +535,32 @@ impl MeshSampler {
             rng: Rng::new(rng_seed),
             masses: Vec::with_capacity(n),
             buckets: (0..n).map(|_| (Vec::new(), Vec::new())).collect(),
+            membership: Membership::new(n, HealthPolicy::default()),
+            mass_ttl: Duration::ZERO,
+            last_refresh: None,
+            draws_since_refresh: 0,
+            mass_rpcs: 0,
+            sample_rpcs: 0,
+            degraded_draws: 0,
         })
+    }
+
+    /// Cache the level-1 mass adverts for `ttl` (and at most
+    /// [`MASS_TTL_DRAWS`] draws), trading per-draw probe fan-out for a
+    /// slightly stale server pick. `Duration::ZERO` (the default)
+    /// disables the cache: every draw re-polls, which the lockstep
+    /// determinism tests rely on. Any failover or data-starved outcome
+    /// invalidates the cache immediately.
+    pub fn with_mass_ttl(mut self, ttl: Duration) -> Self {
+        self.mass_ttl = ttl;
+        self
+    }
+
+    /// Replace the health thresholds/probe pacing (connect-time
+    /// builder: resets every server to Up).
+    pub fn with_health_policy(mut self, policy: HealthPolicy) -> Self {
+        self.membership = Membership::new(self.clients.len(), policy);
+        self
     }
 
     pub fn table(&self) -> &str {
@@ -287,6 +580,27 @@ impl MeshSampler {
     /// Total successful redials across all server connections.
     pub fn reconnects(&self) -> u64 {
         self.clients.iter().map(RemoteClient::reconnects).sum()
+    }
+
+    /// One server's position on the health ladder.
+    pub fn health(&self, server: usize) -> HealthState {
+        self.membership.state(server)
+    }
+
+    /// The mesh's health bookkeeping (read-only).
+    pub fn membership(&self) -> &Membership {
+        &self.membership
+    }
+
+    /// RPC and health counters (see [`MeshSamplerCounters`]).
+    pub fn counters(&self) -> MeshSamplerCounters {
+        MeshSamplerCounters {
+            mass_rpcs: self.mass_rpcs,
+            sample_rpcs: self.sample_rpcs,
+            degraded_draws: self.degraded_draws,
+            downs: self.membership.downs(),
+            rejoins: self.membership.rejoins(),
+        }
     }
 
     /// Direct access to one server's connection (tests, admin tooling).
@@ -335,35 +649,94 @@ impl MeshSampler {
         Ok(())
     }
 
+    /// Is the cached `masses` scratch still usable at `now`?
+    fn masses_fresh(&self, now: Instant) -> bool {
+        self.masses.len() == self.clients.len()
+            && self.draws_since_refresh < MASS_TTL_DRAWS
+            && self
+                .last_refresh
+                .is_some_and(|at| now.duration_since(at) < self.mass_ttl)
+    }
+
+    /// Drop the cached mass adverts: the next draw re-polls.
+    fn invalidate_masses(&mut self) {
+        self.last_refresh = None;
+    }
+
     /// Level 1 of the two-level draw: refresh every server's advertised
-    /// (len, mass) into the reused scratch and return the totals.
-    fn refresh_masses(&mut self) -> Result<(u64, f32)> {
+    /// (len, mass) into the reused scratch, best-effort. An unreachable
+    /// server contributes zero mass (recorded against its health) and a
+    /// Down server is skipped entirely until its seeded probe comes
+    /// due; only non-transport errors (a server-side refusal) abort.
+    fn refresh_masses(&mut self, now: Instant) -> Result<()> {
         self.masses.clear();
         let table = std::mem::take(&mut self.table);
-        let mut result = Ok(());
-        for (s, client) in self.clients.iter_mut().enumerate() {
-            match call_retry(client, |c| c.mass(&table)) {
-                Ok(lm) => self.masses.push(lm),
+        let mut fatal: Option<anyhow::Error> = None;
+        for s in 0..self.clients.len() {
+            let was_down = self.membership.state(s) == HealthState::Down;
+            if was_down {
+                if !self.membership.probe_due(s, now) {
+                    self.masses.push((0, 0.0));
+                    continue;
+                }
+                // Probe due: one cheap redial decides rejoin vs re-arm.
+                self.membership.begin_rejoin(s, now);
+                if self.clients[s].try_redial().is_err() {
+                    self.membership.probe_failed(s);
+                    self.masses.push((0, 0.0));
+                    continue;
+                }
+            }
+            self.mass_rpcs += 1;
+            let mut res = self.clients[s].mass(&table);
+            if !was_down {
+                // One non-blocking redial-and-retry — never the
+                // blocking backoff loop, so a dead server cannot
+                // stall the whole level-1 scan.
+                let transport = matches!(&res, Err(e) if is_transport_error(e));
+                if transport && self.clients[s].try_redial().is_ok() {
+                    self.mass_rpcs += 1;
+                    res = self.clients[s].mass(&table);
+                }
+            }
+            match res {
+                Ok(lm) => {
+                    self.membership.record_success(s);
+                    self.masses.push(lm);
+                }
+                Err(e) if is_transport_error(&e) => {
+                    if was_down {
+                        self.membership.probe_failed(s);
+                    } else {
+                        self.membership.record_failure(s, now);
+                    }
+                    self.masses.push((0, 0.0));
+                }
                 Err(e) => {
-                    result = Err(e.context(format!("mesh mass probe to server {s}")));
+                    fatal = Some(e.context(format!("mesh mass probe to server {s}")));
                     break;
                 }
             }
         }
         self.table = table;
-        result?;
-        let len: u64 = self.masses.iter().map(|&(l, _)| l).sum();
-        let mass: f32 = self.masses.iter().map(|&(_, m)| m).sum();
-        Ok((len, mass))
+        if let Some(e) = fatal {
+            return Err(e);
+        }
+        self.last_refresh = Some(now);
+        self.draws_since_refresh = 0;
+        Ok(())
     }
 
     /// Pick the server whose mass interval contains `x`, skipping
     /// zero-mass servers while tracking the last positive one — the
-    /// mesh image of the sharded buffer's level-1 prefix scan.
-    fn pick_server(&self, x: f32) -> Option<usize> {
+    /// mesh image of the sharded buffer's level-1 prefix scan. The
+    /// accumulator runs in f64 (as does the draw), so a wide mesh of
+    /// f32 adverts cannot lose low-mass servers to rounding.
+    fn pick_server(&self, x: f64) -> Option<usize> {
         let mut sel = None;
-        let mut acc = 0.0f32;
+        let mut acc = 0.0f64;
         for (k, &(_, m)) in self.masses.iter().enumerate() {
+            let m = f64::from(m);
             if m > 0.0 {
                 sel = Some(k);
                 if acc + m >= x {
@@ -374,44 +747,100 @@ impl MeshSampler {
         }
         sel
     }
+
+    /// One whole-batch `Sample` against server `sel`, with a single
+    /// non-blocking redial-and-retry on a transport failure.
+    fn sample_from(
+        &mut self,
+        sel: usize,
+        batch: usize,
+        out: &mut SampleBatch,
+    ) -> Result<SampleOutcome> {
+        let table = std::mem::take(&mut self.table);
+        self.sample_rpcs += 1;
+        let mut res = self.clients[sel].sample(&table, batch, out);
+        let transport = matches!(&res, Err(e) if is_transport_error(e));
+        if transport && self.clients[sel].try_redial().is_ok() {
+            self.sample_rpcs += 1;
+            res = self.clients[sel].sample(&table, batch, out);
+        }
+        self.table = table;
+        res
+    }
 }
 
 impl ExperienceSampler for MeshSampler {
-    /// Two-level mesh sampling: one `Mass` probe per server, one
-    /// mass-proportional server pick, one whole-batch `Sample` within
-    /// the picked server, indices remapped local → global. A throttled
-    /// or data-starved server surfaces as the usual retriable outcome.
+    /// Two-level mesh sampling: a (possibly cached) `Mass` scan, one
+    /// mass-proportional server pick in f64, one whole-batch `Sample`
+    /// within the picked server, indices remapped local → global. A
+    /// picked server that fails at the transport is recorded against
+    /// its health, zeroed out of the scan, and the draw repicks from
+    /// the renormalized survivors — a dead server degrades the mesh
+    /// instead of stalling the learner.
     fn try_sample(
         &mut self,
         batch: usize,
         _rng: &mut Rng,
         out: &mut SampleBatch,
     ) -> Result<SampleOutcome> {
-        let (len, mass) = self.refresh_masses()?;
-        if len == 0 || !(mass > 0.0) {
-            return Ok(SampleOutcome::NotEnoughData);
+        let now = Instant::now();
+        if !self.masses_fresh(now) {
+            self.refresh_masses(now)?;
         }
-        let x = self.rng.f32() * mass;
-        let Some(sel) = self.pick_server(x) else {
-            return Ok(SampleOutcome::NotEnoughData);
-        };
-        let table = std::mem::take(&mut self.table);
-        let outcome =
-            call_retry(&mut self.clients[sel], |c| c.sample(&table, batch, out));
-        self.table = table;
-        let outcome = outcome.with_context(|| format!("mesh sample from server {sel}"))?;
-        if outcome == SampleOutcome::Sampled {
-            let base = sel * self.stride;
-            for idx in &mut out.indices {
-                *idx += base;
+        for attempt in 0..=self.clients.len() {
+            let len: u64 = self.masses.iter().map(|&(l, _)| l).sum();
+            let total: f64 = self.masses.iter().map(|&(_, m)| f64::from(m)).sum();
+            if len == 0 || total <= 0.0 || total.is_nan() {
+                self.invalidate_masses();
+                return Ok(SampleOutcome::NotEnoughData);
+            }
+            if attempt == 0 && self.membership.live_count() < self.server_count() {
+                self.degraded_draws += 1;
+            }
+            let x = self.rng.f64() * total;
+            let Some(sel) = self.pick_server(x) else {
+                self.invalidate_masses();
+                return Ok(SampleOutcome::NotEnoughData);
+            };
+            match self.sample_from(sel, batch, out) {
+                Ok(outcome) => {
+                    self.membership.record_success(sel);
+                    self.draws_since_refresh += 1;
+                    if outcome == SampleOutcome::Sampled {
+                        let base = sel * self.stride;
+                        for idx in &mut out.indices {
+                            *idx += base;
+                        }
+                    } else {
+                        // The advert was stale (throttle, drain, or a
+                        // raced eviction): drop the cache so the next
+                        // call re-polls instead of re-picking the same
+                        // server from stale masses.
+                        self.invalidate_masses();
+                    }
+                    return Ok(outcome);
+                }
+                Err(e) if is_transport_error(&e) => {
+                    self.membership.record_failure(sel, now);
+                    self.masses[sel] = (0, 0.0);
+                    self.invalidate_masses();
+                    eprintln!(
+                        "[pal] mesh sample from server {sel} failed at the transport; \
+                         renormalizing this draw over the survivors"
+                    );
+                }
+                Err(e) => return Err(e.context(format!("mesh sample from server {sel}"))),
             }
         }
-        Ok(outcome)
+        // Every positive-mass server failed this draw; surface the
+        // retriable outcome (their health is already marked).
+        Ok(SampleOutcome::NotEnoughData)
     }
 
     /// Route each global index back to its server and ship one update
-    /// RPC per server touched (the wire image of the sharded buffer's
-    /// batched, grouped priority feedback).
+    /// RPC per server touched — best-effort: every live server gets its
+    /// bucket even when another fails, and the aggregate error names
+    /// the servers whose feedback was lost.
     fn update_priorities(&mut self, indices: &[usize], td_abs: &[f32]) -> Result<()> {
         ensure!(
             indices.len() == td_abs.len(),
@@ -434,23 +863,44 @@ impl ExperienceSampler for MeshSampler {
             self.buckets[s].0.push(idx - s * self.stride);
             self.buckets[s].1.push(td);
         }
+        let now = Instant::now();
         let table = std::mem::take(&mut self.table);
-        let mut result = Ok(());
-        for (s, (client, (idx_bucket, td_bucket))) in
-            self.clients.iter_mut().zip(&self.buckets).enumerate()
-        {
-            if idx_bucket.is_empty() {
+        let mut failed: Vec<String> = Vec::new();
+        for s in 0..self.clients.len() {
+            if self.buckets[s].0.is_empty() {
                 continue;
             }
-            if let Err(e) =
-                call_retry(client, |c| c.update_priorities(&table, idx_bucket, td_bucket))
-            {
-                result = Err(e.context(format!("mesh priority update to server {s}")));
-                break;
+            if !self.membership.is_live(s) {
+                failed.push(format!("server {s}: down"));
+                continue;
+            }
+            let (idx_bucket, td_bucket) = (&self.buckets[s].0, &self.buckets[s].1);
+            let mut res = self.clients[s].update_priorities(&table, idx_bucket, td_bucket);
+            let transport = matches!(&res, Err(e) if is_transport_error(e));
+            if transport && self.clients[s].try_redial().is_ok() {
+                res = self.clients[s].update_priorities(&table, idx_bucket, td_bucket);
+            }
+            match res {
+                Ok(()) => self.membership.record_success(s),
+                Err(e) => {
+                    if is_transport_error(&e) {
+                        self.membership.record_failure(s, now);
+                        self.invalidate_masses();
+                    }
+                    failed.push(format!("server {s}: {e:#}"));
+                }
             }
         }
         self.table = table;
-        result
+        if !failed.is_empty() {
+            bail!(
+                "mesh priority update failed on {} of {} server(s), the rest were shipped: {}",
+                failed.len(),
+                self.clients.len(),
+                failed.join("; ")
+            );
+        }
+        Ok(())
     }
 
     fn finish(&mut self) -> Result<()> {
@@ -495,21 +945,66 @@ mod tests {
         assert_eq!(a, server_seed(42, 0));
     }
 
-    #[test]
-    fn pick_server_skips_zero_mass_like_the_sharded_scan() {
-        let mesh = MeshSampler {
+    /// A connection-less sampler for the pure-logic tests.
+    fn bare(masses: Vec<(u64, f32)>, mass_ttl: Duration) -> MeshSampler {
+        MeshSampler {
             clients: Vec::new(),
             table: "t".into(),
             stride: 8,
             rng: Rng::new(1),
-            masses: vec![(0, 0.0), (4, 2.0), (0, 0.0), (4, 2.0)],
+            masses,
             buckets: Vec::new(),
-        };
+            membership: Membership::new(0, HealthPolicy::default()),
+            mass_ttl,
+            last_refresh: None,
+            draws_since_refresh: 0,
+            mass_rpcs: 0,
+            sample_rpcs: 0,
+            degraded_draws: 0,
+        }
+    }
+
+    #[test]
+    fn pick_server_skips_zero_mass_like_the_sharded_scan() {
+        let mesh = bare(vec![(0, 0.0), (4, 2.0), (0, 0.0), (4, 2.0)], Duration::ZERO);
         // x in the first positive interval → server 1; past it → 3.
         assert_eq!(mesh.pick_server(0.0), Some(1));
         assert_eq!(mesh.pick_server(1.9), Some(1));
         assert_eq!(mesh.pick_server(2.5), Some(3));
         // Past the total mass clamps to the last positive server.
         assert_eq!(mesh.pick_server(100.0), Some(3));
+    }
+
+    #[test]
+    fn pick_server_accumulates_in_f64() {
+        // 2^24 of f32 mass followed by a 1.0 server: an f32 prefix
+        // accumulator saturates (2^24 + 1 == 2^24 in f32) and could
+        // never land in the tail server's interval below the total.
+        let mesh = bare(vec![(1, 16_777_216.0), (1, 1.0)], Duration::ZERO);
+        assert_eq!(mesh.pick_server(16_777_216.5), Some(1));
+        assert_eq!(mesh.pick_server(16_777_216.0), Some(0));
+    }
+
+    #[test]
+    fn mass_cache_ttl_and_draw_budget() {
+        let now = Instant::now();
+        let mut mesh = bare(Vec::new(), Duration::from_secs(5));
+        assert!(!mesh.masses_fresh(now), "nothing cached before the first refresh");
+        mesh.last_refresh = Some(now);
+        assert!(mesh.masses_fresh(now + Duration::from_millis(1)));
+        assert!(!mesh.masses_fresh(now + Duration::from_secs(6)), "TTL expired");
+        mesh.draws_since_refresh = MASS_TTL_DRAWS;
+        assert!(
+            !mesh.masses_fresh(now + Duration::from_millis(1)),
+            "the draw budget caps a hot learner inside the TTL"
+        );
+        mesh.draws_since_refresh = 0;
+        mesh.invalidate_masses();
+        assert!(!mesh.masses_fresh(now + Duration::from_millis(1)));
+
+        // Zero TTL (the default) disables the cache entirely.
+        let mut zero = bare(Vec::new(), Duration::ZERO);
+        zero.last_refresh = Some(now);
+        assert!(!zero.masses_fresh(now));
     }
 }

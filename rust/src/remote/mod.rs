@@ -32,6 +32,10 @@
 //!   affinity; two-level sampling that picks a server by advertised
 //!   priority mass, then samples within — the
 //!   [`crate::replay::ShardedPrioritizedReplay`] shape, across hosts).
+//! * [`membership`] — [`Membership`]: the per-server health ladder
+//!   (Up → Suspect → Down → Rejoining) both mesh handles drive from
+//!   their RPC outcomes, with seeded-jitter recovery probes; what makes
+//!   the mesh degrade (and heal) instead of stalling on a dead member.
 //! * [`backoff`] — the shared reconnect schedule (exponential, seeded
 //!   jitter, overall deadline) every supervised handle retries under.
 //! * [`chaos`] — a seeded fault-injecting proxy ([`ChaosProxy`]) for
@@ -60,6 +64,7 @@ pub mod backoff;
 pub mod chaos;
 pub mod client;
 pub mod frame;
+pub mod membership;
 pub mod mesh;
 pub mod proto;
 pub mod server;
@@ -72,7 +77,8 @@ pub use client::{
     DEFAULT_RPC_TIMEOUT, DEFAULT_SPILL_CAP,
 };
 pub use frame::{read_frame, read_frame_into, write_frame, FRAME_MAGIC, MAX_FRAME_LEN};
-pub use mesh::{parse_endpoint_list, MeshSampler, MeshWriter};
+pub use membership::{HealthPolicy, HealthState, Membership};
+pub use mesh::{parse_endpoint_list, MeshSampler, MeshSamplerCounters, MeshWriter};
 pub use proto::{Request, Response, StallReason, TableInfo};
 pub use server::ReplayServer;
 pub use transport::{Endpoint, RpcListener, RpcStream};

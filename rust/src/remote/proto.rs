@@ -79,6 +79,9 @@ const OP_CHECKPOINT_CHUNKED: u8 = 10;
 const OP_CHUNK_BEGIN: u8 = 11;
 const OP_CHUNK: u8 = 12;
 const OP_CHUNK_END: u8 = 13;
+const OP_PING: u8 = 14;
+const OP_DRAIN: u8 = 15;
+const OP_HANDOFF_END: u8 = 16;
 
 const RESP_OK: u8 = 1;
 const RESP_APPENDED: u8 = 2;
@@ -92,6 +95,7 @@ const RESP_MASS: u8 = 9;
 const RESP_CHUNK_BEGIN: u8 = 10;
 const RESP_CHUNK: u8 = 11;
 const RESP_CHUNK_END: u8 = 12;
+const RESP_PONG: u8 = 13;
 
 /// Why a `Sample` (or a whole `Append` batch) was denied; the client
 /// maps these straight onto [`crate::service::SampleOutcome`] and
@@ -180,6 +184,25 @@ pub enum Request {
     /// reassembled payload. On match the state is validated and
     /// restored atomically; on any mismatch nothing was applied.
     ChunkEnd { total_crc: u32 },
+    /// Table-agnostic liveness probe: the server echoes `nonce` in a
+    /// [`Response::Pong`] without touching any table, session, or
+    /// writer state. The mesh membership layer's health check — cheap
+    /// enough to ride every probe interval, and answered even by a
+    /// draining server (drain refuses *work*, not liveness).
+    Ping { nonce: u64 },
+    /// Operator command: put the server into drain mode and hand its
+    /// tables to `peers`. A draining server refuses new sessions and
+    /// appends, advertises zero mass (so mesh samplers stop drawing
+    /// from it), streams its full service state to the first reachable
+    /// peer as a chunked *merge* upload (closed by
+    /// [`Request::HandoffEnd`]), then stops its accept loop. `max_chunk`
+    /// bounds the handoff chunk size (0 = default).
+    Drain { max_chunk: u32, peers: Vec<String> },
+    /// Close a chunked *handoff* upload (same staging and CRC rules as
+    /// [`Request::ChunkEnd`]), but the assembled `ServiceState` is
+    /// **merged** into the receiver's live tables — rows inserted with
+    /// their exact checkpointed priorities — instead of replacing them.
+    HandoffEnd { total_crc: u32 },
 }
 
 /// One response frame, server → client.
@@ -216,6 +239,9 @@ pub enum Response {
     Chunk { seq: u32, crc: u32, data: Vec<u8> },
     /// Closes a chunked checkpoint download with the whole-payload CRC.
     ChunkEnd { total_crc: u32 },
+    /// Liveness echo (answer to [`Request::Ping`]): carries the probe's
+    /// `nonce` back verbatim so a client can match probe to answer.
+    Pong { nonce: u64 },
     /// The request was understood but failed; the message is the
     /// server-side error chain.
     Error { message: String },
@@ -526,6 +552,22 @@ impl Request {
                 w.u8(OP_CHUNK_END);
                 w.u32(*total_crc);
             }
+            Request::Ping { nonce } => {
+                w.u8(OP_PING);
+                w.u64(*nonce);
+            }
+            Request::Drain { max_chunk, peers } => {
+                w.u8(OP_DRAIN);
+                w.u32(*max_chunk);
+                w.u32(peers.len() as u32);
+                for p in peers {
+                    w.str_(p);
+                }
+            }
+            Request::HandoffEnd { total_crc } => {
+                w.u8(OP_HANDOFF_END);
+                w.u32(*total_crc);
+            }
         }
     }
 
@@ -623,6 +665,23 @@ impl Request {
                 Request::Chunk { seq, crc, data }
             }
             OP_CHUNK_END => Request::ChunkEnd { total_crc: r.u32("chunked total crc")? },
+            OP_PING => Request::Ping { nonce: r.u64("ping nonce")? },
+            OP_DRAIN => {
+                let max_chunk = r.u32("drain max chunk")?;
+                if max_chunk as usize > MAX_CHUNK_LEN {
+                    bail!("chunk length {max_chunk} out of range [0, {MAX_CHUNK_LEN}]");
+                }
+                let count = r.u32("drain peer count")? as usize;
+                if count > MAX_TABLES {
+                    bail!("drain claims {count} peers (protocol cap {MAX_TABLES})");
+                }
+                let mut peers = Vec::with_capacity(count);
+                for _ in 0..count {
+                    peers.push(r.str_("drain peer endpoint")?);
+                }
+                Request::Drain { max_chunk, peers }
+            }
+            OP_HANDOFF_END => Request::HandoffEnd { total_crc: r.u32("handoff total crc")? },
             other => bail!("unknown request opcode {other}"),
         };
         r.expect_end()?;
@@ -708,6 +767,10 @@ impl Response {
                 w.u8(RESP_CHUNK_END);
                 w.u32(*total_crc);
             }
+            Response::Pong { nonce } => {
+                w.u8(RESP_PONG);
+                w.u64(*nonce);
+            }
             Response::Error { message } => {
                 w.u8(RESP_ERROR);
                 w.str_(message);
@@ -788,6 +851,7 @@ impl Response {
                 Response::Chunk { seq, crc, data }
             }
             RESP_CHUNK_END => Response::ChunkEnd { total_crc: r.u32("chunked total crc")? },
+            RESP_PONG => Response::Pong { nonce: r.u64("pong nonce")? },
             RESP_ERROR => Response::Error { message: r.str_("error message")? },
             other => bail!("unknown response opcode {other}"),
         };
@@ -838,6 +902,13 @@ mod tests {
             Request::ChunkBegin { total_len: 10, chunk_len: 4, chunk_count: 3 },
             Request::Chunk { seq: 2, crc: 0xDEAD_BEEF, data: vec![7; 16] },
             Request::ChunkEnd { total_crc: 0x1234_5678 },
+            Request::Ping { nonce: 0xFACE_CAFE },
+            Request::Drain { max_chunk: 0, peers: vec![] },
+            Request::Drain {
+                max_chunk: 4096,
+                peers: vec!["tcp://10.0.0.1:9000".into(), "/tmp/peer.sock".into()],
+            },
+            Request::HandoffEnd { total_crc: 0x8765_4321 },
         ];
         for req in reqs {
             let decoded = Request::decode(&req.encode()).unwrap();
@@ -902,6 +973,7 @@ mod tests {
             Response::ChunkBegin { total_len: 9, chunk_len: 3, chunk_count: 3 },
             Response::Chunk { seq: 0, crc: 1, data: vec![0xAB; 3] },
             Response::ChunkEnd { total_crc: 0xFFFF_0000 },
+            Response::Pong { nonce: 0xBEEF_0042 },
             Response::Error { message: "unknown table `x`".into() },
         ];
         for resp in resps {
@@ -967,6 +1039,24 @@ mod tests {
         for cut in 1..begin.len() {
             assert!(Response::decode(&begin[..cut]).is_err(), "chunk-begin cut at {cut}");
         }
+        // Truncated membership/drain frames: every cut must error.
+        let ping = Request::Ping { nonce: 0x1122_3344_5566_7788 }.encode();
+        for cut in 1..ping.len() {
+            assert!(Request::decode(&ping[..cut]).is_err(), "ping cut at {cut}");
+        }
+        let drain =
+            Request::Drain { max_chunk: 512, peers: vec!["tcp://h:1".into(), "b".into()] }.encode();
+        for cut in 1..drain.len() {
+            assert!(Request::decode(&drain[..cut]).is_err(), "drain cut at {cut}");
+        }
+        let pong = Response::Pong { nonce: 0x99AA_BBCC_DDEE_FF00 }.encode();
+        for cut in 1..pong.len() {
+            assert!(Response::decode(&pong[..cut]).is_err(), "pong cut at {cut}");
+        }
+        // A drain chunk bound past the protocol cap is refused.
+        let huge =
+            Request::Drain { max_chunk: (MAX_CHUNK_LEN + 1) as u32, peers: vec![] }.encode();
+        assert!(Request::decode(&huge).is_err());
     }
 
     #[test]

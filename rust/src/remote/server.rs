@@ -107,6 +107,11 @@ pub const REPLY_CACHE_DEPTH: usize = 8;
 /// [`ReplayServer::with_drain_deadline`] / `pal serve --drain-deadline`).
 pub const DEFAULT_DRAIN_DEADLINE: Duration = Duration::from_secs(5);
 
+/// Settle time between flipping the drain flag and capturing the
+/// handoff state: appends admitted before the flip get this long to
+/// land, so the capture includes them instead of losing acked rows.
+pub const DRAIN_GRACE: Duration = Duration::from_millis(50);
+
 /// Server-wide count of sessions holding writer slots, per table.
 /// Claims are all-or-nothing across a session's table set and are
 /// released when the session is dropped (TTL eviction, connection end
@@ -317,6 +322,12 @@ pub struct ReplayServer {
     sessions: Arc<SessionRegistry>,
     drain_deadline: Duration,
     quotas: Quotas,
+    /// Set by a `Drain` RPC: new sessions refused, appends stalled,
+    /// `Mass` advertises zero so mesh samplers renormalize away.
+    draining: Arc<AtomicBool>,
+    /// Default handoff targets for a `Drain` that names none (`pal
+    /// serve --drain-to`).
+    drain_peers: Vec<Endpoint>,
 }
 
 impl ReplayServer {
@@ -349,6 +360,8 @@ impl ReplayServer {
             sessions: Arc::new(SessionRegistry::new()),
             drain_deadline: DEFAULT_DRAIN_DEADLINE,
             quotas: Quotas::default(),
+            draining: Arc::new(AtomicBool::new(false)),
+            drain_peers: Vec::new(),
         })
     }
 
@@ -372,6 +385,20 @@ impl ReplayServer {
     pub fn with_drain_deadline(mut self, deadline: Duration) -> Self {
         self.drain_deadline = deadline;
         self
+    }
+
+    /// Default handoff targets for a `Drain` RPC that names no peers
+    /// (`pal serve --drain-to`): the first reachable one receives this
+    /// server's tables when it is told to leave the mesh.
+    pub fn with_drain_peers(mut self, peers: Vec<Endpoint>) -> Self {
+        self.drain_peers = peers;
+        self
+    }
+
+    /// The drain-mode flag (tests and the serve CLI observe it; a
+    /// `Drain` RPC sets it).
+    pub fn draining_handle(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.draining)
     }
 
     /// Enforce base step dims on every `Append` (what `pal serve`'s
@@ -414,24 +441,31 @@ impl ReplayServer {
     /// request the server already acknowledged, then removes the
     /// socket file.
     pub fn serve(&self) -> Result<()> {
+        let shared = Arc::new(ConnShared {
+            service: Arc::clone(&self.service),
+            stop: Arc::clone(&self.stop),
+            dims: self.dims,
+            sessions: Arc::clone(&self.sessions),
+            quotas: self.quotas.clone(),
+            drain: DrainCtl {
+                flag: Arc::clone(&self.draining),
+                peers: self.drain_peers.clone(),
+            },
+        });
         let mut conn_id = 0u64;
         while !self.stop.load(Ordering::Relaxed) {
             match self.listener.accept() {
                 Ok(stream) => {
                     conn_id += 1;
-                    let service = Arc::clone(&self.service);
-                    let stop = Arc::clone(&self.stop);
+                    let shared = Arc::clone(&shared);
                     let guard = ConnGuard(Arc::clone(&self.active));
                     self.active.fetch_add(1, Ordering::Acquire);
-                    let dims = self.dims;
-                    let sessions = Arc::clone(&self.sessions);
-                    let quotas = self.quotas.clone();
                     let seed = self
                         .seed
                         .wrapping_add(conn_id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
                     std::thread::spawn(move || {
                         let _guard = guard;
-                        handle_connection(service, stream, seed, stop, dims, sessions, quotas);
+                        handle_connection(shared, stream, seed);
                     });
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -464,30 +498,44 @@ impl ReplayServer {
     }
 }
 
+/// Everything a connection thread shares with its server: the service,
+/// the stop flag, the dim contract, the session registry, the tenant
+/// policy and the live drain-mode control. One `Arc` per server,
+/// cloned per connection.
+struct ConnShared {
+    service: Arc<ReplayService>,
+    stop: Arc<AtomicBool>,
+    dims: Option<(usize, usize)>,
+    sessions: Arc<SessionRegistry>,
+    quotas: Quotas,
+    drain: DrainCtl,
+}
+
+/// Live drain-mode control: the flag flips the serving policy (new
+/// sessions refused, appends stalled, zero advertised mass), `peers`
+/// are the handoff targets configured at startup.
+struct DrainCtl {
+    flag: Arc<AtomicBool>,
+    peers: Vec<Endpoint>,
+}
+
 /// Per-connection loop: read frame → decode → dispatch → respond. One
 /// read buffer and one response encoder per connection, reused for
 /// every frame, so framing and response encoding allocate nothing per
 /// RPC (request *decoding* still materializes owned payloads — an
 /// `Append`'s steps become storage rows).
-fn handle_connection(
-    service: Arc<ReplayService>,
-    mut stream: RpcStream,
-    seed: u64,
-    stop: Arc<AtomicBool>,
-    dims: Option<(usize, usize)>,
-    sessions: Arc<SessionRegistry>,
-    quotas: Quotas,
-) {
+fn handle_connection(shared: Arc<ConnShared>, mut stream: RpcStream, seed: u64) {
     // Accepted sockets may inherit the listener's non-blocking mode;
     // connection I/O is plain blocking reads.
     let _ = stream.set_nonblocking(false);
+    let service = &shared.service;
     // Until (unless) the client says Hello, the connection runs on an
     // implicit session: same state shape (including quotas), but
     // unregistered — it dies with the connection, exactly the
     // pre-session behavior.
     let mut session: Arc<Mutex<Session>> = {
         let mut s = Session::new(0, seed);
-        s.set_quotas(&quotas);
+        s.set_quotas(&shared.quotas);
         Arc::new(Mutex::new(s))
     };
     let mut registered = 0u64;
@@ -523,19 +571,43 @@ fn handle_connection(
                 Response::Ok.encode_into(&mut enc);
                 shutdown = true;
             }
+            // Stateless liveness probe: no session, no table reads, and
+            // answered even while draining — it is how the membership
+            // layer tells a draining or restarting server from a dead
+            // one.
+            Ok(Request::Ping { nonce }) => Response::Pong { nonce }.encode_into(&mut enc),
+            Ok(Request::Drain { max_chunk, peers }) => {
+                match handle_drain(service, &shared.drain, max_chunk, &peers) {
+                    Ok(moved) => {
+                        eprintln!("[pal] drain: handed {moved} items to a peer; stopping");
+                        Response::Ok.encode_into(&mut enc);
+                        // The handoff landed: stop serving, like a
+                        // Shutdown (the tables now live on the peer).
+                        shutdown = true;
+                    }
+                    Err(e) => Response::Error { message: format!("drain failed: {e:#}") }
+                        .encode_into(&mut enc),
+                }
+            }
             Ok(Request::Hello { rng_seed, session: requested, tables }) => {
-                // Validate the ACL against the served tables BEFORE
-                // binding anything: an unknown name is a config error
-                // answered on the current session, not a quota.
-                if let Some(bad) = tables.iter().find(|t| service.table(t).is_none()) {
+                if shared.drain.flag.load(Ordering::SeqCst) {
+                    // A draining server binds no new sessions — the
+                    // redialing client moves on to a live peer.
+                    Response::Error { message: "server is draining".to_string() }
+                        .encode_into(&mut enc);
+                } else if let Some(bad) = tables.iter().find(|t| service.table(t).is_none()) {
+                    // Validate the ACL against the served tables BEFORE
+                    // binding anything: an unknown name is a config
+                    // error answered on the current session, not a
+                    // quota.
                     Response::Error { message: format!("unknown table `{bad}` in hello ACL") }
                         .encode_into(&mut enc);
                 } else {
-                    let (slot, resumed) = sessions.hello(requested, rng_seed);
+                    let (slot, resumed) = shared.sessions.hello(requested, rng_seed);
                     let (id, next_seq) = {
                         let mut s = slot.lock().expect("session poisoned");
                         if !resumed {
-                            s.set_quotas(&quotas);
+                            s.set_quotas(&shared.quotas);
                         }
                         // The latest Hello wins (a redial re-sends the
                         // same list and reattaches cleanly).
@@ -557,32 +629,42 @@ fn handle_connection(
             // checkpoint download streams ChunkBegin + chunks + ChunkEnd
             // back-to-back, then the loop resumes normal request/reply.
             Ok(Request::CheckpointChunked { max_chunk }) => {
-                if stream_checkpoint(&service, &mut stream, &mut enc, max_chunk as usize).is_err()
+                if stream_checkpoint(service, &mut stream, &mut enc, max_chunk as usize).is_err()
                 {
                     break;
                 }
                 continue;
             }
-            // The chunked Restore upload: connection-local staging, with
-            // strict sequencing and per-chunk CRCs; nothing touches the
-            // tables until ChunkEnd verifies the whole payload.
+            // The chunked upload: connection-local staging with strict
+            // sequencing and per-chunk CRCs; nothing touches the tables
+            // until the closing frame (`ChunkEnd` = replace, a peer's
+            // `HandoffEnd` = merge) verifies the whole payload.
             Ok(
                 req @ (Request::ChunkBegin { .. }
                 | Request::Chunk { .. }
-                | Request::ChunkEnd { .. }),
+                | Request::ChunkEnd { .. }
+                | Request::HandoffEnd { .. }),
             ) => {
-                handle_chunk_upload(&service, &mut upload, req).encode_into(&mut enc);
+                if shared.drain.flag.load(Ordering::SeqCst) {
+                    // A draining server must not absorb state it is
+                    // about to hand off itself.
+                    Response::Error { message: "server is draining".to_string() }
+                        .encode_into(&mut enc);
+                } else {
+                    handle_chunk_upload(service, &mut upload, req).encode_into(&mut enc);
+                }
             }
             Ok(req) => {
+                let draining = shared.drain.flag.load(Ordering::SeqCst);
                 let mut s = session.lock().expect("session poisoned");
-                dispatch_into(&service, &mut s, &mut scratch, dims, req, &mut enc)
+                dispatch_into(service, &mut s, &mut scratch, shared.dims, draining, req, &mut enc)
             }
         }
         if shutdown {
             // Set the stop flag BEFORE attempting the Ok response: a
             // client that hangs up right after sending Shutdown must
             // still stop the server (the reply is best-effort).
-            stop.store(true, Ordering::Relaxed);
+            shared.stop.store(true, Ordering::Relaxed);
             let _ = write_frame(&mut stream, enc.as_slice());
             break;
         }
@@ -593,8 +675,72 @@ fn handle_connection(
     if registered != 0 {
         // Stamp detach time so the session TTL measures idleness, not
         // age.
-        sessions.touch(registered);
+        shared.sessions.touch(registered);
     }
+}
+
+/// Execute a `Drain` RPC: flip the server into drain mode, hand the
+/// tables to the first reachable peer, and report how many items
+/// moved. A failed handoff (no peers, every peer unreachable or
+/// refusing) clears the flag again — the server resumes normal service
+/// and the operator retries with better targets.
+fn handle_drain(
+    service: &Arc<ReplayService>,
+    drain: &DrainCtl,
+    max_chunk: u32,
+    requested: &[String],
+) -> Result<usize> {
+    if drain.flag.swap(true, Ordering::SeqCst) {
+        bail!("server is already draining");
+    }
+    let result = run_drain(service, &drain.peers, max_chunk, requested);
+    if result.is_err() {
+        drain.flag.store(false, Ordering::SeqCst);
+    }
+    result
+}
+
+fn run_drain(
+    service: &Arc<ReplayService>,
+    configured: &[Endpoint],
+    max_chunk: u32,
+    requested: &[String],
+) -> Result<usize> {
+    // Peers named in the request win over the configured defaults.
+    let peers: Vec<Endpoint> = if requested.is_empty() {
+        configured.to_vec()
+    } else {
+        requested
+            .iter()
+            .map(|s| Endpoint::parse(s))
+            .collect::<Result<_>>()
+            .context("parsing drain peers")?
+    };
+    if peers.is_empty() {
+        bail!("no drain peers (configure `pal serve --drain-to` or name them in the request)");
+    }
+    // Appends are already stalling on the drain flag; the grace period
+    // lets in-flight ones that were admitted before the flip land so
+    // the capture includes them.
+    std::thread::sleep(DRAIN_GRACE);
+    let state = service.checkpoint().context("capturing state for the drain handoff")?;
+    let moved = state.total_len();
+    let bytes = state.encode();
+    let chunk = if max_chunk == 0 {
+        proto::DEFAULT_CHUNK_LEN
+    } else {
+        (max_chunk as usize).min(MAX_CHUNK_LEN)
+    };
+    let mut failures = Vec::new();
+    for peer in &peers {
+        let attempt = super::client::RemoteClient::connect_endpoint(peer)
+            .and_then(|mut c| c.handoff_state_bytes(&bytes, chunk));
+        match attempt {
+            Ok(()) => return Ok(moved),
+            Err(e) => failures.push(format!("{peer}: {e:#}")),
+        }
+    }
+    bail!("every drain peer refused the handoff: [{}]", failures.join("; "));
 }
 
 /// Stream the service checkpoint as `ChunkBegin` + N×`Chunk` +
@@ -658,6 +804,7 @@ fn handle_chunk_upload(
     upload: &mut Option<ChunkUpload>,
     req: Request,
 ) -> Response {
+    let what = if matches!(req, Request::HandoffEnd { .. }) { "handoff" } else { "restore" };
     let result = match req {
         Request::ChunkBegin { total_len, chunk_len, chunk_count } => {
             // Header consistency was enforced at decode. An unfinished
@@ -677,13 +824,14 @@ fn handle_chunk_upload(
         }
         Request::Chunk { seq, crc, data } => stage_chunk(upload, seq, crc, &data),
         Request::ChunkEnd { total_crc } => finish_chunked_restore(service, upload, total_crc),
+        Request::HandoffEnd { total_crc } => finish_chunked_merge(service, upload, total_crc),
         _ => unreachable!("non-chunk request routed to the chunk-upload handler"),
     };
     match result {
         Ok(()) => Response::Ok,
         Err(e) => {
             *upload = None;
-            Response::Error { message: format!("chunked restore failed: {e:#}") }
+            Response::Error { message: format!("chunked {what} failed: {e:#}") }
         }
     }
 }
@@ -715,13 +863,16 @@ fn stage_chunk(upload: &mut Option<ChunkUpload>, seq: u32, crc: u32, data: &[u8]
     Ok(())
 }
 
-fn finish_chunked_restore(
-    service: &Arc<ReplayService>,
+/// Close out a staged upload: every chunk arrived, whole-payload CRC
+/// verified. Shared by both closing frames (`ChunkEnd` and
+/// `HandoffEnd`).
+fn take_finished_upload(
     upload: &mut Option<ChunkUpload>,
     total_crc: u32,
-) -> Result<()> {
+    closer: &str,
+) -> Result<Vec<u8>> {
     let Some(up) = upload.take() else {
-        bail!("ChunkEnd outside a chunked upload (no ChunkBegin)");
+        bail!("{closer} outside a chunked upload (no ChunkBegin)");
     };
     if up.next_seq != up.chunk_count {
         bail!("upload closed after {} of {} chunks", up.next_seq, up.chunk_count);
@@ -729,11 +880,36 @@ fn finish_chunked_restore(
     if crc32(&up.data) != total_crc {
         bail!("reassembled state CRC mismatch");
     }
+    Ok(up.data)
+}
+
+fn finish_chunked_restore(
+    service: &Arc<ReplayService>,
+    upload: &mut Option<ChunkUpload>,
+    total_crc: u32,
+) -> Result<()> {
+    let data = take_finished_upload(upload, total_crc, "ChunkEnd")?;
     // Same two-phase validate-then-apply as the plain Restore RPC: a
     // payload that decodes but does not fit the served tables leaves
     // them untouched.
-    let state = ServiceState::decode(&up.data).context("decoding reassembled state")?;
+    let state = ServiceState::decode(&data).context("decoding reassembled state")?;
     service.restore(&state)
+}
+
+/// `HandoffEnd` closes the same upload stream as `ChunkEnd`, but the
+/// payload is MERGED into the live tables — every donor row inserted
+/// at its checkpointed priority on top of what is already here —
+/// instead of replacing them: the receiving half of a peer's drain.
+fn finish_chunked_merge(
+    service: &Arc<ReplayService>,
+    upload: &mut Option<ChunkUpload>,
+    total_crc: u32,
+) -> Result<()> {
+    let data = take_finished_upload(upload, total_crc, "HandoffEnd")?;
+    let state = ServiceState::decode(&data).context("decoding handoff state")?;
+    let absorbed = service.merge_state(&state)?;
+    eprintln!("[pal] handoff: absorbed {absorbed} items from a draining peer");
+    Ok(())
 }
 
 /// Apply one decoded request against the service, encoding the
@@ -752,6 +928,7 @@ fn dispatch_into(
     session: &mut Session,
     scratch: &mut SampleBatch,
     dims: Option<(usize, usize)>,
+    draining: bool,
     req: Request,
     enc: &mut ByteWriter,
 ) {
@@ -820,7 +997,7 @@ fn dispatch_into(
             }
         }
     } else {
-        dispatch_cold(service, session, dims, req).encode_into(enc);
+        dispatch_cold(service, session, dims, draining, req).encode_into(enc);
     }
     if let Some(seq) = seq {
         session.next_seq = seq + 1;
@@ -838,6 +1015,7 @@ fn dispatch_cold(
     service: &Arc<ReplayService>,
     session: &mut Session,
     dims: Option<(usize, usize)>,
+    draining: bool,
     req: Request,
 ) -> Response {
     match req {
@@ -881,6 +1059,14 @@ fn dispatch_cold(
                         ),
                     };
                 }
+            }
+            // A draining server admits no new experience: a retriable
+            // stall (the reply still acks the dropped delta exactly
+            // once), so a writer that has not failed over yet is
+            // stalled, not errored — its next transport failure or
+            // probe re-routes it to a live peer.
+            if draining && !steps.is_empty() {
+                return Response::WouldStall { reason: StallReason::QuotaExhausted };
             }
             // A spent insert budget is a retriable quota stall, not an
             // error: the reply is cached under this seq, so a replay
@@ -1009,14 +1195,23 @@ fn dispatch_cold(
         }
         Request::Mass { table } => match service.table(&table) {
             None => Response::Error { message: format!("unknown table `{table}`") },
+            // A draining server advertises zero mass so mesh samplers
+            // renormalize their level-1 draw over the remaining peers.
+            Some(_) if draining => Response::Mass { len: 0, mass: 0.0 },
             Some(t) => Response::Mass { len: t.len() as u64, mass: t.total_priority() },
         },
-        // Handled (and answered) by the connection loop before dispatch.
+        // Handled (and answered) by the connection loop before dispatch;
+        // mirrored here so an in-process caller sees the same behavior.
         Request::Shutdown => Response::Ok,
+        Request::Ping { nonce } => Response::Pong { nonce },
+        Request::Drain { .. } => Response::Error {
+            message: "internal: Drain reached the dispatch path".to_string(),
+        },
         Request::CheckpointChunked { .. }
         | Request::ChunkBegin { .. }
         | Request::Chunk { .. }
-        | Request::ChunkEnd { .. } => Response::Error {
+        | Request::ChunkEnd { .. }
+        | Request::HandoffEnd { .. } => Response::Error {
             message: "internal: chunked-transfer request reached the dispatch path".to_string(),
         },
     }
@@ -1038,7 +1233,19 @@ mod tests {
         req: Request,
     ) -> Response {
         let mut enc = ByteWriter::new();
-        dispatch_into(service, session, scratch, dims, req, &mut enc);
+        dispatch_into(service, session, scratch, dims, false, req, &mut enc);
+        Response::decode(enc.as_slice()).expect("dispatch must encode a decodable response")
+    }
+
+    /// Like `dispatch`, with the server in drain mode.
+    fn dispatch_draining(
+        service: &Arc<ReplayService>,
+        session: &mut Session,
+        scratch: &mut SampleBatch,
+        req: Request,
+    ) -> Response {
+        let mut enc = ByteWriter::new();
+        dispatch_into(service, session, scratch, None, true, req, &mut enc);
         Response::decode(enc.as_slice()).expect("dispatch must encode a decodable response")
     }
 
@@ -1582,6 +1789,132 @@ mod tests {
         drop(a);
         let resp = dispatch(&service, &mut b, &mut scratch, None, append_req(0, 1));
         assert!(matches!(resp, Response::Appended { consumed: 1, .. }), "{resp:?}");
+    }
+
+    #[test]
+    fn ping_echoes_the_nonce() {
+        let service = tiny_service();
+        let mut session = Session::new(0, 1);
+        let mut scratch = SampleBatch::default();
+        let resp = dispatch(
+            &service,
+            &mut session,
+            &mut scratch,
+            None,
+            Request::Ping { nonce: 0xDECA_FBAD },
+        );
+        assert_eq!(resp, Response::Pong { nonce: 0xDECA_FBAD });
+        // A draining server still answers: the probe distinguishes
+        // draining/restarting from dead.
+        let resp = dispatch_draining(
+            &service,
+            &mut session,
+            &mut scratch,
+            Request::Ping { nonce: 7 },
+        );
+        assert_eq!(resp, Response::Pong { nonce: 7 });
+    }
+
+    #[test]
+    fn draining_stalls_appends_and_advertises_zero_mass() {
+        let service = tiny_service();
+        let mut session = Session::new(0, 1);
+        let mut scratch = SampleBatch::default();
+        let mut w = service.writer(7);
+        for _ in 0..3 {
+            w.append(step_with_dims(2, 1));
+        }
+        // Appends stall retriably; the dropped delta is still folded in
+        // (the reply is the ack), so drops land exactly once.
+        let resp = dispatch_draining(
+            &service,
+            &mut session,
+            &mut scratch,
+            Request::Append {
+                actor_id: 0,
+                seq: 1,
+                dropped: 3,
+                steps: vec![step_with_dims(2, 1)],
+            },
+        );
+        assert_eq!(resp, Response::WouldStall { reason: StallReason::QuotaExhausted });
+        let stats = service.table("replay").unwrap().stats_snapshot();
+        assert_eq!(stats.steps_dropped, 3);
+        assert_eq!(service.table("replay").unwrap().len(), 3, "no step may be admitted");
+        // Mass advertises zero so mesh samplers renormalize away...
+        let resp = dispatch_draining(
+            &service,
+            &mut session,
+            &mut scratch,
+            Request::Mass { table: "replay".into() },
+        );
+        assert_eq!(resp, Response::Mass { len: 0, mass: 0.0 });
+        // ...but sampling still works — the rows stay here until the
+        // handoff lands on a peer.
+        let resp = dispatch_draining(
+            &service,
+            &mut session,
+            &mut scratch,
+            Request::Sample { table: "replay".into(), batch: 2, seq: 0 },
+        );
+        assert!(matches!(resp, Response::Sampled(_)), "{resp:?}");
+    }
+
+    #[test]
+    fn chunked_handoff_merges_instead_of_replacing() {
+        let state = donor_state(5);
+        let service = tiny_service();
+        // The receiver already holds rows of its own.
+        let mut w = service.writer(1);
+        for _ in 0..4 {
+            w.append(step_with_dims(2, 1));
+        }
+        let mut upload = None;
+        let mut reqs = upload_requests(&state, 64);
+        let Some(Request::ChunkEnd { total_crc }) = reqs.pop() else {
+            panic!("upload must close with ChunkEnd");
+        };
+        reqs.push(Request::HandoffEnd { total_crc });
+        for req in reqs {
+            match handle_chunk_upload(&service, &mut upload, req) {
+                Response::Ok => {}
+                other => panic!("handoff step failed: {other:?}"),
+            }
+        }
+        assert!(upload.is_none(), "a finished handoff must leave no staging behind");
+        assert_eq!(
+            service.table("replay").unwrap().len(),
+            9,
+            "the merge must add the donor's 5 rows on top of the receiver's 4"
+        );
+    }
+
+    #[test]
+    fn drain_without_reachable_peers_fails_and_resumes_service() {
+        let service = tiny_service();
+        let drain = DrainCtl { flag: Arc::new(AtomicBool::new(false)), peers: Vec::new() };
+        // No peers anywhere: refused up front.
+        let err = handle_drain(&service, &drain, 0, &[]).unwrap_err();
+        assert!(format!("{err:#}").contains("no drain peers"), "{err:#}");
+        assert!(!drain.flag.load(Ordering::SeqCst), "a failed drain must clear the flag");
+        // An unreachable peer: the handoff fails naming it, and the
+        // flag clears so the server resumes normal service.
+        let missing = std::env::temp_dir().join("pal_drain_no_such_server.sock");
+        let err = handle_drain(
+            &service,
+            &drain,
+            0,
+            &[missing.display().to_string()],
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("refused the handoff"), "{err:#}");
+        assert!(!drain.flag.load(Ordering::SeqCst));
+        // A drain racing an in-progress one is refused without
+        // clearing the winner's flag.
+        drain.flag.store(true, Ordering::SeqCst);
+        let err = handle_drain(&service, &drain, 0, &[]).unwrap_err();
+        assert!(format!("{err:#}").contains("already draining"), "{err:#}");
+        assert!(drain.flag.load(Ordering::SeqCst));
     }
 
     #[test]

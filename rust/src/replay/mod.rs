@@ -93,6 +93,21 @@ pub trait ReplayBuffer: Send + Sync {
         self.insert_from(0, t)
     }
 
+    /// Insert carrying an explicit initial priority — the state-merge
+    /// path (a draining mesh server handing its items to a peer), where
+    /// the item's learned priority must survive the move instead of
+    /// resetting to the insert-time maximum. Implementations without a
+    /// priority plane ignore the value and take the plain insert.
+    fn insert_with_priority(
+        &self,
+        actor_id: usize,
+        t: &Transition,
+        priority: f32,
+    ) -> Option<EvictReason> {
+        let _ = priority;
+        self.insert_from(actor_id, t)
+    }
+
     /// The eviction policy this buffer runs when full.
     fn remover(&self) -> RemoverSpec {
         RemoverSpec::Fifo
@@ -257,6 +272,40 @@ mod trait_tests {
             let idx = out.indices.clone();
             b.update_priorities(&idx, &vec![0.7; idx.len()]);
             assert!(b.sample(8, &mut rng, &mut out), "{who}");
+        }
+    }
+
+    #[test]
+    fn insert_with_priority_carries_the_priority_where_supported() {
+        for b in impls(32) {
+            for i in 0..4 {
+                b.insert(&tr(i as f32));
+            }
+            // A migrated item arrives with its learned (tiny) priority.
+            b.insert_with_priority(1, &tr(99.0), 0.125);
+            assert_eq!(b.len(), 5, "{}", b.name());
+            let Some(state) = b.snapshot_state() else {
+                continue; // emulated impls: plain-insert fallback is enough
+            };
+            // Find the migrated row (reward 99) and check its stored
+            // priority: the prioritized impls must keep 0.125 instead of
+            // resetting to the insert-time max; the uniform ring has no
+            // priority plane, any positive weight is fine.
+            let mut found = None;
+            for shard in &state.shards {
+                for (slot, row) in shard.rows.iter().enumerate() {
+                    if (row.reward - 99.0).abs() < 1e-6 {
+                        found = Some(shard.priorities[slot]);
+                    }
+                }
+            }
+            let found = found.unwrap_or_else(|| panic!("{}: migrated row not found", b.name()));
+            match b.name() {
+                "pal-kary" | "pal-sharded" => {
+                    assert!((found - 0.125).abs() < 1e-6, "{}: got {found}", b.name())
+                }
+                _ => assert!(found > 0.0, "{}: got {found}", b.name()),
+            }
         }
     }
 

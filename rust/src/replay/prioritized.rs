@@ -533,29 +533,12 @@ impl PrioritizedReplay {
         }
         true
     }
-}
 
-impl ReplayBuffer for PrioritizedReplay {
-    fn name(&self) -> &'static str {
-        "pal-kary"
-    }
-
-    fn capacity(&self) -> usize {
-        self.capacity
-    }
-
-    fn len(&self) -> usize {
-        self.write_cursor.load(Ordering::Relaxed).min(self.capacity)
-    }
-
-    /// Lazy-writing insertion (§IV-D2 / Algorithm 3 INSERT); with
-    /// `lazy_writing = false`, the ablation path holds the global tree
-    /// lock across the whole insertion including the storage copy.
-    ///
-    /// Victim selection is folded into the FIRST global acquisition
-    /// (slot pick + leaf zero under one lock), so an insert still costs
-    /// exactly two global acquisitions regardless of remover.
-    fn insert_from(&self, _actor_id: usize, t: &Transition) -> Option<EvictReason> {
+    /// The shared insert body behind both trait entry points: `pri`
+    /// carries a migrated item's already-transformed priority; `None` is
+    /// the live-training path, where the row arrives at the running
+    /// maximum (read at make-sampleable time, as always).
+    fn insert_impl(&self, t: &Transition, pri: Option<f32>) -> Option<EvictReason> {
         self.stats.inserts.fetch_add(1, Ordering::Relaxed);
         let timing = self.timing();
         if !self.lazy_writing {
@@ -571,7 +554,9 @@ impl ReplayBuffer for PrioritizedReplay {
                 let t1 = note_acquired(&self.stats.leaf_wait_ns, w1);
                 self.stats.leaf_acquisitions.fetch_add(1, Ordering::Relaxed);
                 self.store.write(slot, t); // copy INSIDE the locks
-                delta = self.tree.set_leaf(slot, self.max_priority());
+                delta = self
+                    .tree
+                    .set_leaf(slot, pri.unwrap_or_else(|| self.max_priority()));
                 if let Some(t1) = t1 {
                     self.stats
                         .leaf_held_ns
@@ -626,9 +611,49 @@ impl ReplayBuffer for PrioritizedReplay {
                 .storage_copy_ns
                 .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         }
-        // (iii) ...then make it sampleable at max priority.
-        self.locked_priority_update(slot, self.max_priority());
+        // (iii) ...then make it sampleable, at the carried priority for a
+        // migrated row, at the running max for a live one.
+        self.locked_priority_update(slot, pri.unwrap_or_else(|| self.max_priority()));
         reason
+    }
+}
+
+impl ReplayBuffer for PrioritizedReplay {
+    fn name(&self) -> &'static str {
+        "pal-kary"
+    }
+
+    fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn len(&self) -> usize {
+        self.write_cursor.load(Ordering::Relaxed).min(self.capacity)
+    }
+
+    /// Lazy-writing insertion (§IV-D2 / Algorithm 3 INSERT); with
+    /// `lazy_writing = false`, the ablation path holds the global tree
+    /// lock across the whole insertion including the storage copy.
+    ///
+    /// Victim selection is folded into the FIRST global acquisition
+    /// (slot pick + leaf zero under one lock), so an insert still costs
+    /// exactly two global acquisitions regardless of remover.
+    fn insert_from(&self, _actor_id: usize, t: &Transition) -> Option<EvictReason> {
+        self.insert_impl(t, None)
+    }
+
+    /// State-merge insert: the row becomes sampleable at the carried
+    /// (already-transformed) priority instead of the running maximum.
+    fn insert_with_priority(
+        &self,
+        _actor_id: usize,
+        t: &Transition,
+        priority: f32,
+    ) -> Option<EvictReason> {
+        // Same guard as the table surface: a NaN/inf/negative leaf would
+        // poison interior sums up to the root.
+        let p = if priority.is_finite() && priority >= 0.0 { priority } else { 0.0 };
+        self.insert_impl(t, Some(p))
     }
 
     fn sample(&self, batch: usize, rng: &mut Rng, out: &mut SampleBatch) -> bool {

@@ -217,6 +217,18 @@ impl ReplayBuffer for ShardedPrioritizedReplay {
         self.shards[s].insert_from(actor_id, t)
     }
 
+    /// State-merge insert: same affinity routing, with the carried
+    /// priority forwarded to the shard primitive.
+    fn insert_with_priority(
+        &self,
+        actor_id: usize,
+        t: &Transition,
+        priority: f32,
+    ) -> Option<EvictReason> {
+        let s = actor_id % self.shards.len();
+        self.shards[s].insert_with_priority(actor_id, t, priority)
+    }
+
     fn total_priority(&self) -> f32 {
         ShardedPrioritizedReplay::total_priority(self)
     }

@@ -430,6 +430,37 @@ impl ReplayService {
         state.restore_into(self)
     }
 
+    /// Absorb another service's captured tables into this LIVE service
+    /// — the receiving half of a drain handoff. Unlike
+    /// [`Self::restore`], nothing here is overwritten: every donor row
+    /// is replayed as an ordinary insert carrying its learned priority
+    /// ([`Table::insert_with_priority`]), so existing items keep their
+    /// slots and overflow evicts under the receiver's normal policy.
+    /// The donor's `steps_dropped` counters ride along so mesh-wide
+    /// drop accounting stays exact across the migration. Returns the
+    /// number of items absorbed.
+    ///
+    /// Two-phase like restore: EVERY donor table is validated against
+    /// its receiver (name, kind, buffer impl, geometry — the mesh
+    /// already requires uniform topology at connect time) before the
+    /// first insert, so a mismatched donor cannot half-merge.
+    pub fn merge_state(&self, state: &ServiceState) -> Result<u64> {
+        let targets = state.validate_against(self)?;
+        let mut absorbed = 0u64;
+        for (table, ts) in targets.iter().zip(&state.tables) {
+            for (s, shard) in ts.buffer.shards.iter().enumerate() {
+                // Donor shard index doubles as the actor id so sharded
+                // receivers keep the donor's affinity locality.
+                for (row, &pri) in shard.rows.iter().zip(&shard.priorities) {
+                    table.insert_with_priority(s, row, pri);
+                    absorbed += 1;
+                }
+            }
+            table.add_steps_dropped(ts.stats.steps_dropped);
+        }
+        Ok(absorbed)
+    }
+
     /// Snapshot every table's counters (reported in `TrainReport`).
     pub fn stats_snapshots(&self) -> Vec<(String, TableStatsSnapshot)> {
         self.tables
@@ -593,6 +624,48 @@ mod tests {
         // Only the allowed table received the items.
         assert_eq!(svc.table("replay").unwrap().len(), 0);
         assert_eq!(svc.table("nstep").unwrap().len(), 4);
+    }
+
+    #[test]
+    fn merge_state_absorbs_donor_rows_and_dropped_steps() {
+        let fill = |svc: &ReplayService, actor: usize, n: usize| {
+            let mut w = svc.writer(actor);
+            for i in 0..n {
+                w.append(WriterStep {
+                    obs: vec![i as f32, 0.0],
+                    action: vec![1.0],
+                    next_obs: vec![i as f32 + 1.0, 0.0],
+                    reward: 1.0,
+                    done: i + 1 == n,
+                    truncated: false,
+                });
+            }
+        };
+        let donor = svc();
+        let receiver = svc();
+        fill(&donor, 0, 5);
+        fill(&receiver, 1, 3);
+        donor.table("replay").unwrap().add_steps_dropped(4);
+        let state = donor.checkpoint().unwrap();
+
+        // A mismatched donor is rejected before any mutation.
+        let mut bad = state.clone();
+        bad.tables[0].name = "other".into();
+        assert!(receiver.merge_state(&bad).is_err());
+        assert_eq!(receiver.total_len(), 6);
+
+        // The real merge adds the donor's rows on top of the
+        // receiver's own and carries the drop counter.
+        let absorbed = receiver.merge_state(&state).unwrap();
+        assert_eq!(absorbed, 10);
+        assert_eq!(receiver.table("replay").unwrap().len(), 8);
+        assert_eq!(receiver.table("nstep").unwrap().len(), 8);
+        let dropped: usize = receiver
+            .stats_snapshots()
+            .iter()
+            .map(|(_, s)| s.steps_dropped)
+            .sum();
+        assert_eq!(dropped, 4);
     }
 
     #[test]

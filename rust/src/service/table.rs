@@ -185,6 +185,22 @@ impl Table {
     /// [`Self::can_insert`] first; the insert itself never blocks.
     pub fn insert_from(&self, actor_id: usize, t: &Transition) {
         let evicted = self.buffer.insert_from(actor_id, t);
+        self.note_insert(evicted);
+    }
+
+    /// Insert one migrated item carrying its learned priority (the
+    /// drain-handoff merge path). Non-finite or negative priorities are
+    /// clamped to 0 here, like [`Self::update_priorities`] does, so a
+    /// corrupt donor value cannot poison the receiver's sum tree.
+    pub fn insert_with_priority(&self, actor_id: usize, t: &Transition, priority: f32) {
+        let p = if priority.is_finite() && priority >= 0.0 { priority } else { 0.0 };
+        let evicted = self.buffer.insert_with_priority(actor_id, t, p);
+        self.note_insert(evicted);
+    }
+
+    /// Shared insert accounting: bump the insert counter and the
+    /// eviction counter matching the displaced item's reason, if any.
+    fn note_insert(&self, evicted: Option<EvictReason>) {
         self.stats.inserts.fetch_add(1, Ordering::Relaxed);
         match evicted {
             None => {}

@@ -1,17 +1,19 @@
 //! Chaos soaks for the remote replay front-end, driven through the
 //! seeded fault-injecting [`ChaosProxy`]: killed connections, full
-//! outages (blackhole + spill), a server restart from checkpoint, and
-//! probabilistic delay/shred/reset streams. Every test asserts the
-//! fault-tolerance contract end to end — exactly-once appends across
-//! reconnects, bounded spill with accounted drops, and final state
-//! byte-identical to a fault-free in-process twin.
+//! outages (blackhole + spill), a silent partition against the mesh
+//! health ladder, a server restart from checkpoint, and probabilistic
+//! delay/shred/reset streams. Every test asserts the fault-tolerance
+//! contract end to end — exactly-once appends across reconnects,
+//! bounded spill with accounted drops, bounded per-batch latency under
+//! partition, and final state byte-identical to a fault-free
+//! in-process twin.
 
 mod common;
 
 use common::{start_server, stop_server};
 use pal_rl::remote::{
-    BackoffPolicy, ChaosConfig, ChaosProxy, ConnectionPolicy, Endpoint, RemoteClient,
-    RemoteSampler, RemoteWriter, ReplayServer,
+    BackoffPolicy, ChaosConfig, ChaosProxy, ConnectionPolicy, Endpoint, HealthState, MeshSampler,
+    RemoteClient, RemoteSampler, RemoteWriter, ReplayServer,
 };
 use pal_rl::replay::{SampleBatch, UniformReplay};
 use pal_rl::service::{
@@ -21,7 +23,7 @@ use pal_rl::service::{
 use pal_rl::util::rng::Rng;
 use std::path::PathBuf;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 fn step(i: usize) -> WriterStep {
     WriterStep {
@@ -202,6 +204,106 @@ fn sampler_prefetch_rearms_across_killed_connections() {
     drop(w);
     proxy.stop();
     stop_server(&server_path, handle);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn mesh_sampler_survives_silent_partition_with_bounded_latency() {
+    // Two single-table servers; the mesh reaches server 1 (the victim)
+    // through a chaos proxy that can flip into a silent partition:
+    // connections stay open, writes succeed, nothing ever arrives —
+    // the failure only the RPC read timeout can detect.
+    let served0 = service_cap(256);
+    let served1 = service_cap(256);
+    let (path0, h0) = start_server(Arc::clone(&served0));
+    let (path1, h1) = start_server(Arc::clone(&served1));
+    let dir = test_dir("chaos_partition");
+    let proxy_sock = dir.join("proxy.sock");
+    let mut proxy = ChaosProxy::start(&path1, &proxy_sock, ChaosConfig::default()).unwrap();
+
+    // Fill both servers directly (the proxy only fronts the sampler).
+    for (actor, path) in [(0u64, &path0), (1u64, &path1)] {
+        let mut w = RemoteWriter::connect(path, actor).unwrap();
+        for i in 0..64 {
+            w.append(step(i)).unwrap();
+        }
+        assert_eq!(w.flush().unwrap(), 0);
+    }
+
+    // Short per-RPC timeout: under a silent partition it is the ONLY
+    // failure signal, and the latency bound every draw must honour.
+    let rpc_timeout = Duration::from_millis(300);
+    let mesh_policy = ConnectionPolicy {
+        rpc_timeout,
+        backoff: BackoffPolicy::default().with_deadline(Duration::from_secs(2)),
+    };
+    let eps = [Endpoint::Uds(path0.clone()), Endpoint::Uds(proxy_sock.clone())];
+    let mut smp = MeshSampler::connect_default(&eps, 0xC4A0_11, mesh_policy).unwrap();
+    let stride = smp.stride();
+    let mut rng = Rng::new(0); // ignored by the mesh sampler
+    let mut out = SampleBatch::default();
+
+    // Healthy warm-up: both servers advertise mass and answer draws.
+    for _ in 0..4 {
+        assert_eq!(smp.try_sample(8, &mut rng, &mut out).unwrap(), SampleOutcome::Sampled);
+    }
+    assert_eq!(smp.health(1), HealthState::Up);
+
+    // Silent partition against the victim. Every draw must still grant
+    // a full batch (from the survivor) within a small multiple of the
+    // RPC timeout — one timed-out mass probe plus one timed-out redial
+    // hello, never the blocking backoff loop — while the victim walks
+    // the health ladder instead of stalling the learner.
+    proxy.set_stall(true);
+    let latency_bound = 8 * rpc_timeout;
+    for _ in 0..6 {
+        let t = Instant::now();
+        assert_eq!(smp.try_sample(8, &mut rng, &mut out).unwrap(), SampleOutcome::Sampled);
+        let dt = t.elapsed();
+        assert!(
+            dt < latency_bound,
+            "a partitioned server must not stall the learner: draw took {dt:?} \
+             (bound {latency_bound:?})"
+        );
+        assert_eq!(out.len(), 8);
+        assert!(
+            out.indices.iter().all(|&i| i / stride == 0),
+            "every partition-phase batch must come from the survivor"
+        );
+    }
+    assert_eq!(smp.health(1), HealthState::Down, "the victim must reach Down, not stall");
+    let mid = smp.counters();
+    assert!(mid.downs >= 1, "the Up→Down transition must be counted");
+    assert!(mid.degraded_draws >= 1, "draws with a dead member are degraded draws");
+
+    // Partition heals: the seeded recovery probe redials, the victim
+    // climbs back to Up, and its mass re-enters the level-1 draw.
+    proxy.set_stall(false);
+    let mut healed = false;
+    for _ in 0..800 {
+        assert_eq!(smp.try_sample(8, &mut rng, &mut out).unwrap(), SampleOutcome::Sampled);
+        if smp.health(1) == HealthState::Up {
+            healed = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(healed, "the victim must rejoin once the partition clears");
+    assert!(smp.counters().rejoins >= 1, "the rejoin must be counted");
+    let mut victim_sampled = false;
+    for _ in 0..200 {
+        assert_eq!(smp.try_sample(8, &mut rng, &mut out).unwrap(), SampleOutcome::Sampled);
+        if out.indices.iter().any(|&i| i / stride == 1) {
+            victim_sampled = true;
+            break;
+        }
+    }
+    assert!(victim_sampled, "a rejoined server must serve draws again");
+
+    drop(smp);
+    proxy.stop();
+    stop_server(&path0, h0);
+    stop_server(&path1, h1);
     std::fs::remove_dir_all(&dir).ok();
 }
 

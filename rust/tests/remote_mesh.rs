@@ -93,11 +93,13 @@ fn fresh_uds() -> Endpoint {
 }
 
 /// Replica of the mesh sampler's level-1 prefix scan (pick the server
-/// whose mass interval contains `x`, skipping zero-mass servers).
-fn twin_pick(masses: &[(u64, f32)], x: f32) -> Option<usize> {
+/// whose mass interval contains `x`, skipping zero-mass servers). Runs
+/// in f64 like the mesh's, so the lockstep replay stays exact.
+fn twin_pick(masses: &[(u64, f32)], x: f64) -> Option<usize> {
     let mut sel = None;
-    let mut acc = 0.0f32;
+    let mut acc = 0.0f64;
     for (k, &(_, m)) in masses.iter().enumerate() {
+        let m = f64::from(m);
         if m > 0.0 {
             sel = Some(k);
             if acc + m >= x {
@@ -196,8 +198,8 @@ fn mesh_drill(binds: [Endpoint; 2]) {
                 (tab.len() as u64, tab.total_priority())
             })
             .collect();
-        let total: f32 = masses.iter().map(|&(_, m)| m).sum();
-        let x = mesh_rng.f32() * total;
+        let total: f64 = masses.iter().map(|&(_, m)| f64::from(m)).sum();
+        let x = mesh_rng.f64() * total;
         let sel = twin_pick(&masses, x).expect("positive mass");
         match twin_samplers[sel].try_sample(BATCH, &mut twin_rngs[sel], &mut twin_out) {
             SampleOutcome::Sampled => {}

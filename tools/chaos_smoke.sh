@@ -37,3 +37,21 @@ case "$out_tcp" in
     exit 1
     ;;
 esac
+
+# Mesh kill-and-rejoin drill: a 3-server mesh loses one member
+# mid-run (hard kill through a blackholed proxy), must keep sampling
+# from the survivors with the victim marked Down, fail a stranded
+# writer over to a live server with zero drops, restart the victim
+# from its checkpoint and watch it rejoin (health Up, affinity
+# fail-back), then live-drain a second server into a peer. Exact
+# mesh-wide accounting — every append lands exactly once across
+# failover, rejoin, and drain — is asserted inside the drill.
+out_mesh=$(./target/release/pal mesh-chaos-smoke --dir "$dir/mesh")
+echo "$out_mesh"
+case "$out_mesh" in
+  *"mesh-chaos-smoke OK"*) ;;
+  *)
+    echo "mesh-chaos-smoke did not report success" >&2
+    exit 1
+    ;;
+esac
